@@ -1,0 +1,72 @@
+//! Extensibility demo (Fig. 1: "users can add new graph problem
+//! environments"): the MaxCut environment plugged into the same policy
+//! model and distributed evaluation machinery, compared against the
+//! classical 1-flip local-search baseline.
+//!
+//! The policy-guided rollout scores candidates with the distributed
+//! structure2vec + Q evaluation (same AOT stages as MVC — the environment
+//! only changes the reward/termination semantics and the state tensors'
+//! interpretation).
+//!
+//!   cargo run --release --example maxcut -- --n 100
+
+use oggm::coordinator::engine::EngineCfg;
+use oggm::coordinator::fwd::forward;
+use oggm::coordinator::shard::shards_for_graph;
+use oggm::env::{GraphEnv, MaxCutEnv};
+use oggm::graph::{generators, Partition};
+use oggm::model::Params;
+use oggm::runtime::{manifest, Runtime};
+use oggm::util::cli::Args;
+use oggm::util::rng::Pcg32;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let n = args.get_usize("n", 240);
+    let p = args.get_usize("p", 2);
+    let rt = Runtime::new(manifest::default_dir())?;
+    let mut rng = Pcg32::new(args.get_u64("seed", 8), 1);
+    let g = generators::erdos_renyi(n, 0.1, &mut rng);
+    println!("== MaxCut extensibility demo: ER({n}, 0.1), |E|={} ==", g.m);
+
+    let bucket = rt.manifest.bucket_for(g.n, p, 1)?;
+    let part = Partition::new(bucket, p);
+    let cfg = EngineCfg::new(p, 2);
+    let params = Params::init(32, &mut Pcg32::new(9, 1));
+
+    // Policy-guided greedy rollout: distributed score evaluation, take the
+    // best positive-gain candidate among the top-scored nodes.
+    let mut env = MaxCutEnv::new(g.clone());
+    let mut evals = 0usize;
+    while !env.done() {
+        let cand: Vec<bool> = (0..g.n).map(|v| env.is_candidate(v)).collect();
+        let shards =
+            shards_for_graph(part, &g, env.removed_mask(), env.solution_mask(), &cand);
+        let out = forward(&rt, &cfg, &params, &shards, false, true)?;
+        evals += 1;
+        // Among the 8 best-scored candidates, take the best positive gain.
+        let picked = oggm::coordinator::selection::top_d(
+            &out.scores[..g.n],
+            |v| env.is_candidate(v),
+            8,
+        );
+        let best = picked
+            .into_iter()
+            .filter(|&v| env.gain(v) > 0)
+            .max_by_key(|&v| env.gain(v));
+        match best {
+            Some(v) => {
+                env.step(v);
+            }
+            None => break, // no improving move among top-scored: stop
+        }
+    }
+    println!("policy-guided rollout: cut {} after {evals} distributed evals",
+             env.cut_value());
+
+    // Classical baseline: randomized greedy + 1-flip local search.
+    let (_side, cut) = oggm::solvers::localsearch::local_search_maxcut(&g, &mut rng, 200);
+    println!("local-search baseline: cut {cut}");
+    println!("edges total: {} (any cut <= |E|)", g.m);
+    Ok(())
+}

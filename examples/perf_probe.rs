@@ -1,0 +1,33 @@
+//! Perf probe: h2d / exec / d2h breakdown of one large policy evaluation.
+//! Used for the EXPERIMENTS.md §Perf iteration log.
+use oggm::coordinator::{engine::EngineCfg, fwd::forward, shard::shards_for_graph};
+use oggm::env::{GraphEnv, MvcEnv};
+use oggm::graph::{generators, Partition};
+use oggm::model::Params;
+use oggm::runtime::Runtime;
+use oggm::util::rng::Pcg32;
+fn main() {
+    let rt = Runtime::new("artifacts").unwrap();
+    let mut rng = Pcg32::seeded(1);
+    let params = Params::init(32, &mut rng);
+    let n = 2496;
+    let g = generators::erdos_renyi(n, 0.15, &mut rng);
+    let env = MvcEnv::new(g.clone());
+    let cand: Vec<bool> = (0..g.n).map(|v| env.is_candidate(v)).collect();
+    let part = Partition::new(n, 1);
+    let shards = shards_for_graph(part, &g, env.removed_mask(), env.solution_mask(), &cand);
+    let cfg = EngineCfg::new(1, 2);
+    forward(&rt, &cfg, &params, &shards, false, true).unwrap();
+    rt.reset_stats();
+    let reps = 5;
+    let t0 = std::time::Instant::now();
+    for _ in 0..reps {
+        forward(&rt, &cfg, &params, &shards, false, true).unwrap();
+    }
+    let wall = t0.elapsed().as_secs_f64() / reps as f64;
+    let s = rt.stats();
+    println!("N={n} P=1 fwd: wall {:.4}s/eval, breakdown over {} execs:", wall, s.executions);
+    println!("  h2d  {:.4}s/eval", s.h2d_time.as_secs_f64() / reps as f64);
+    println!("  exec {:.4}s/eval", s.exec_time.as_secs_f64() / reps as f64);
+    println!("  d2h  {:.4}s/eval", s.d2h_time.as_secs_f64() / reps as f64);
+}

@@ -1,0 +1,110 @@
+//! End-to-end training driver (the repo's E2E validation run, recorded in
+//! EXPERIMENTS.md): trains the DQN + structure2vec agent on ER(20, 0.15)
+//! graphs for a few hundred steps across P simulated devices, periodically
+//! evaluates the mean approximation ratio on 10 held-out test graphs, and
+//! writes the loss/ratio learning curve to CSV.
+//!
+//!   cargo run --release --example train_mvc -- --steps 400 --p 2 --tau 4 \
+//!       --out curve.csv --params trained.oggm
+
+use oggm::coordinator::infer::{solve_mvc, InferCfg};
+use oggm::coordinator::metrics::{approx_ratio, write_curve_csv, CurvePoint};
+use oggm::coordinator::train::{TrainCfg, Trainer};
+use oggm::graph::{generators, Graph};
+use oggm::model::Params;
+use oggm::runtime::{manifest, Runtime};
+use oggm::util::cli::Args;
+use oggm::util::rng::Pcg32;
+use std::time::Duration;
+
+fn eval_ratio(
+    rt: &Runtime,
+    params: &Params,
+    tests: &[(Graph, usize)],
+    p: usize,
+) -> anyhow::Result<f64> {
+    let cfg = InferCfg::new(p, 2);
+    let mut total = 0.0;
+    for (g, opt) in tests {
+        let res = solve_mvc(rt, &cfg, params, g, 24)?;
+        total += approx_ratio(res.solution_size, *opt);
+    }
+    Ok(total / tests.len() as f64)
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let steps_target = args.get_usize("steps", 400);
+    let p = args.get_usize("p", 2);
+    let tau = args.get_usize("tau", 4);
+    let eval_every = args.get_usize("eval-every", 25);
+    let seed = args.get_u64("seed", 2021);
+
+    let rt = Runtime::new(manifest::default_dir())?;
+    println!("== train_mvc: E2E driver (P={p}, tau={tau}, {steps_target} steps) ==");
+
+    // Datasets: train on 16 ER(20) graphs; test on 10 held-out ER(20).
+    let mut rng = Pcg32::new(seed, 1);
+    let train_graphs: Vec<_> =
+        (0..16).map(|_| generators::erdos_renyi(20, 0.15, &mut rng)).collect();
+    let tests: Vec<(Graph, usize)> = (0..10)
+        .map(|_| {
+            let g = generators::erdos_renyi(20, 0.15, &mut rng);
+            let opt = oggm::solvers::exact_mvc(&g, Duration::from_secs(10)).size;
+            (g, opt)
+        })
+        .collect();
+
+    let mut cfg = TrainCfg::new(p, 24);
+    cfg.seed = seed;
+    cfg.hyper.lr = args.get_f64("lr", 1e-3) as f32;
+    cfg.hyper.grad_iters = tau;
+    cfg.hyper.eps_decay_steps = steps_target / 2;
+    let params0 = Params::init(32, &mut Pcg32::new(seed, 2));
+    let mut trainer = Trainer::new(&rt, cfg, train_graphs, params0)?;
+
+    let ratio0 = eval_ratio(&rt, &trainer.params, &tests, p)?;
+    println!("step {:>5}  ratio {:.4}  (untrained)", 0, ratio0);
+    let mut curve = vec![CurvePoint { step: 0, ratio: ratio0, loss: None }];
+
+    let mut recent_loss: Option<f32> = None;
+    let mut recent_sim = 0.0f64;
+    while trainer.global_step < steps_target {
+        // Pull step records out of the episode; evaluation happens on the
+        // eval_every grid (the paper measures every 10 training steps).
+        let mut pending_evals: Vec<(usize, Option<f32>)> = Vec::new();
+        trainer.run_episodes(1, |rec| {
+            if rec.loss.is_some() {
+                recent_loss = rec.loss;
+            }
+            recent_sim += rec.sim_step_time;
+            if rec.global_step % eval_every == 0 {
+                pending_evals.push((rec.global_step, rec.loss));
+            }
+        })?;
+        for (step, loss) in pending_evals {
+            let ratio = eval_ratio(&rt, &trainer.params, &tests, p)?;
+            println!(
+                "step {step:>5}  ratio {ratio:.4}  loss {}  mean-sim-step {:.4}s",
+                loss.map(|l| format!("{l:.4}")).unwrap_or_else(|| "-".into()),
+                recent_sim / step.max(1) as f64,
+            );
+            curve.push(CurvePoint { step, ratio, loss: loss.map(|l| l as f64) });
+        }
+    }
+
+    let final_ratio = eval_ratio(&rt, &trainer.params, &tests, p)?;
+    println!("\nfinal mean approx ratio over 10 test graphs: {final_ratio:.4}");
+    println!("replay buffer: {} tuples, {} KiB (compressed)",
+             trainer.replay_len(), trainer.replay_bytes() / 1024);
+
+    if let Some(out) = args.get("out") {
+        write_curve_csv(out, &curve)?;
+        println!("learning curve written to {out}");
+    }
+    if let Some(ppath) = args.get("params") {
+        trainer.params.save(ppath)?;
+        println!("trained parameters written to {ppath}");
+    }
+    Ok(())
+}

@@ -1,0 +1,149 @@
+"""AOT build step: lower every (stage x shape bucket) to HLO text, write the
+artifact manifest, golden test vectors, and initial parameters.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the rust `xla` crate) rejects; the text parser reassigns
+ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Run via `make artifacts`:  cd python && python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import binio, configs, model, stages
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_stage(stage: str, shape: configs.StageShape) -> str:
+    fn = stages.stage_fn(stage, use_pallas=configs.use_pallas(shape))
+    args = stages.example_args(stage, shape.b, shape.n, shape.ni, configs.K)
+    lowered = jax.jit(fn, keep_unused=True).lower(*args)
+    return to_hlo_text(lowered)
+
+
+def emit_artifacts(outdir: str, only: str | None = None) -> int:
+    arts = configs.all_artifacts()
+    if only:
+        arts = [(n, st, s) for (n, st, s) in arts if only in n]
+    manifest_rows = []
+    emitted = 0
+    for i, (name, stage, shape) in enumerate(arts):
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(outdir, fname)
+        manifest_rows.append(
+            (name, stage, shape.b, shape.n, shape.ni, configs.K,
+             stages.STAGE_NUM_OUTPUTS[stage], fname)
+        )
+        if os.path.exists(path):
+            continue
+        text = lower_stage(stage, shape)
+        with open(path + ".tmp", "w") as f:
+            f.write(text)
+        os.replace(path + ".tmp", path)
+        emitted += 1
+        if (i + 1) % 25 == 0 or i + 1 == len(arts):
+            print(f"  [{i+1}/{len(arts)}] {name}", flush=True)
+    # Manifest written last: its presence marks a complete artifact set.
+    with open(os.path.join(outdir, "manifest.tsv"), "w") as f:
+        f.write(f"# oggm artifact manifest\tk={configs.K}\tl={configs.L}\n")
+        f.write("# name\tstage\tb\tn\tni\tk\tnum_outputs\tfile\n")
+        for row in manifest_rows:
+            f.write("\t".join(str(x) for x in row) + "\n")
+    return emitted
+
+
+# ------------------------------------------------------------------ goldens
+
+def _random_instance(key, b, n, rho=0.15):
+    """Random padded MVC state: adjacency (symmetric, zero diag), S, C."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    upper = (jax.random.uniform(k1, (b, n, n)) < rho).astype(jnp.float32)
+    upper = jnp.triu(upper, k=1)
+    a = upper + jnp.transpose(upper, (0, 2, 1))
+    s = (jax.random.uniform(k2, (b, n)) < 0.2).astype(jnp.float32)
+    # Candidates: not in partial solution.
+    c = 1.0 - s
+    del k3
+    return a, s, c
+
+
+def emit_goldens(outdir: str) -> None:
+    """Golden vectors for the Rust distributed fwd/bwd parity tests."""
+    key = jax.random.PRNGKey(20210661)
+    pkey, gkey, akey, tkey, fkey = jax.random.split(key, 5)
+    params = model.init_params(pkey)
+    flat = np.asarray(model.params_to_flat(params), dtype=np.float32)
+
+    # --- training golden: B=8, N=24 (matches train artifacts, P in {1,2,3})
+    b, n = 8, 24
+    a, s, c = _random_instance(gkey, b, n)
+    onehot_idx = jax.random.randint(akey, (b,), 0, n)
+    onehot = jax.nn.one_hot(onehot_idx, n, dtype=jnp.float32)
+    # Actions must be valid candidates for realism (not required by math).
+    c = jnp.maximum(c, onehot)
+    targets = jax.random.normal(tkey, (b,))
+    scores = model.full_forward(params, a, s, c)
+    loss = model.full_loss(params, a, s, c, onehot, targets)
+    grads = model.full_loss_grad(params, a, s, c, onehot, targets)
+    gflat = np.asarray(model.params_to_flat(grads), dtype=np.float32)
+    binio.save(
+        os.path.join(outdir, "golden_train.oggm"),
+        [
+            ("params", flat),
+            ("a", np.asarray(a)),
+            ("s", np.asarray(s)),
+            ("c", np.asarray(c)),
+            ("onehot", np.asarray(onehot)),
+            ("targets", np.asarray(targets)),
+            ("scores", np.asarray(scores)),
+            ("loss", np.asarray([loss])),
+            ("grads", gflat),
+        ],
+    )
+
+    # --- inference golden: B=1, N=24 (matches fwd artifacts, P in P_SET)
+    a1, s1, c1 = _random_instance(fkey, 1, 24)
+    scores1 = model.full_forward(params, a1, s1, c1)
+    binio.save(
+        os.path.join(outdir, "golden_infer.oggm"),
+        [
+            ("params", flat),
+            ("a", np.asarray(a1)),
+            ("s", np.asarray(s1)),
+            ("c", np.asarray(c1)),
+            ("scores", np.asarray(scores1)),
+        ],
+    )
+
+    # Initial parameters for reproducible Rust training runs.
+    binio.save(os.path.join(outdir, "params_init.oggm"), [("params", flat)])
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None, help="substring filter on artifact names")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    n = emit_artifacts(args.out, args.only)
+    emit_goldens(args.out)
+    print(f"aot: emitted {n} new HLO artifacts + goldens to {args.out}", flush=True)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

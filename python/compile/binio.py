@@ -1,0 +1,51 @@
+"""Python writer/reader for the "OGGM" binary tensor container.
+
+Mirrors rust/src/util/binio.rs exactly (little-endian, f32 payloads). Used
+to ship golden test vectors and initial parameters from the build step to
+the Rust integration tests.
+"""
+
+import struct
+
+MAGIC = b"OGGM"
+VERSION = 1
+
+
+def save(path, tensors):
+    """tensors: list of (name, numpy f32 array)."""
+    import numpy as np
+
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<II", VERSION, len(tensors)))
+        for name, arr in tensors:
+            arr = np.ascontiguousarray(arr, dtype=np.float32)
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<I", arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.tobytes())
+
+
+def load(path):
+    """Returns dict name -> numpy f32 array."""
+    import numpy as np
+
+    out = {}
+    with open(path, "rb") as f:
+        assert f.read(4) == MAGIC, "bad magic"
+        version, count = struct.unpack("<II", f.read(8))
+        assert version == VERSION
+        for _ in range(count):
+            (nlen,) = struct.unpack("<I", f.read(4))
+            name = f.read(nlen).decode("utf-8")
+            (ndim,) = struct.unpack("<I", f.read(4))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim)) if ndim else ()
+            n = 1
+            for d in dims:
+                n *= d
+            arr = np.frombuffer(f.read(4 * n), dtype=np.float32).reshape(dims)
+            out[name] = arr
+    return out

@@ -1,0 +1,104 @@
+"""Shape-bucket registry: the single source of truth for which (stage, B, N,
+NI) combinations are AOT-lowered to HLO artifacts.
+
+Graphs are padded with isolated nodes to the next bucket size divisible by
+lcm{1,2,3,4,6} = 12 so every device count P in {1,2,3,4,6} yields an integer
+shard height NI = N / P. The Rust coordinator reads artifacts/manifest.tsv
+(written by aot.py) and refuses shapes that were not compiled.
+
+K (embedding dim) is fixed at 32 per the paper's hyper-parameters; L (number
+of embedding layers, 2 in the paper) is a *runtime* loop in the coordinator
+and never enters artifact shapes because stages are per-layer.
+"""
+
+from dataclasses import dataclass
+
+K = 32          # graph-embedding dimension (paper Sec. 6.1)
+L = 2           # embedding layers (runtime loop, recorded for reference)
+P_SET = (1, 2, 3, 4, 6)   # device counts exercised (one Summit node = 6 GPUs)
+
+FWD_STAGES = ("embed_pre", "embed_msg", "embed_combine", "q_sum", "q_scores")
+BWD_STAGES = ("embed_pre_bwd", "embed_msg_bwd", "embed_combine_bwd", "q_scores_bwd")
+
+
+@dataclass(frozen=True, order=True)
+class StageShape:
+    """One artifact shape: minibatch B, padded node count N, shard height NI."""
+
+    b: int
+    n: int
+    ni: int
+
+    def __post_init__(self):
+        assert self.n % 12 == 0, f"bucket N={self.n} must be divisible by 12"
+        assert self.n % self.ni == 0, f"NI={self.ni} must divide N={self.n}"
+
+    @property
+    def p(self) -> int:
+        return self.n // self.ni
+
+
+def _shards(n: int, ps) -> list:
+    return [StageShape(1, n, n // p) for p in ps]
+
+
+def fwd_shapes() -> list:
+    """Inference / policy-evaluation shapes (B = 1)."""
+    shapes = []
+    # Learning-curve graphs (Fig. 6/8): train |V|=20 -> 24, test |V|=250 -> 252.
+    shapes += _shards(24, P_SET)
+    shapes += _shards(252, (1, 2, 3))
+    # Multi-node-selection study (Fig. 7): 750/1500/3000-node graphs, P = 1.
+    shapes += _shards(756, (1,))
+    shapes += _shards(1500, (1,))
+    shapes += _shards(3000, (1,))
+    # ER scaling study (Fig. 9/11): paper used 15000/21000; quarter-scaled
+    # per DESIGN.md Sec. 3 while keeping rho = 0.15.
+    shapes += _shards(1488, P_SET)
+    shapes += _shards(2496, P_SET)
+    # Social-graph scaling study (Fig. 10 / Table 1): Holme-Kim stand-ins.
+    shapes += _shards(2028, P_SET)
+    shapes += _shards(2352, P_SET)
+    shapes += _shards(2628, P_SET)
+    return shapes
+
+
+def train_shapes() -> list:
+    """Training minibatch shapes (fwd AND bwd stages are emitted)."""
+    shapes = []
+    # Learning curves train on 20-node graphs with minibatch 8; the small
+    # P>1 variants exist for the Rust distributed-gradient parity tests.
+    shapes += [StageShape(8, 24, ni) for ni in (24, 12, 8)]
+    shapes += [StageShape(8, 252, 252)]
+    # Fig. 11 training-scaling study (B = 4 keeps the dense minibatch
+    # within memory at these sizes; see DESIGN.md Sec. 2).
+    shapes += [StageShape(4, 1488, 1488 // p) for p in P_SET]
+    shapes += [StageShape(4, 2496, 2496 // p) for p in P_SET]
+    return shapes
+
+
+def artifact_name(stage: str, s: StageShape) -> str:
+    return f"{stage}_b{s.b}_n{s.n}_ni{s.ni}_k{K}"
+
+
+def all_artifacts() -> list:
+    """[(name, stage, shape)] for every artifact to emit (deduplicated)."""
+    out = {}
+    for s in fwd_shapes():
+        for st in FWD_STAGES:
+            out[artifact_name(st, s)] = (st, s)
+    for s in train_shapes():
+        for st in FWD_STAGES + BWD_STAGES:
+            out[artifact_name(st, s)] = (st, s)
+    return [(name, st, s) for name, (st, s) in sorted(out.items())]
+
+
+# Buckets for which the pallas kernels are used in the emitted artifact.
+# Very large buckets fall back to the mathematically-identical jnp path to
+# keep interpret-mode grid loops off the measured hot path (DESIGN.md §2);
+# kernel correctness at all sizes is covered by pytest instead.
+PALLAS_MAX_N = 1600
+
+
+def use_pallas(s: StageShape) -> bool:
+    return s.n <= PALLAS_MAX_N

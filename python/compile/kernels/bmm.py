@@ -1,0 +1,69 @@
+"""L1 Pallas kernel: blocked batched matmul for the message-passing hot spot.
+
+Computes partial[b] = embed[b] @ A[b]  (K x NI) @ (NI x N), i.e. Alg. 2
+line 11. The paper's CUDA implementation expressed the HBM<->SM schedule
+with threadblocks over cuSPARSE SpMM tiles; on TPU the same insight becomes
+a BlockSpec HBM->VMEM pipeline (DESIGN.md Sec. 6):
+
+  * grid = (B, N / bn): one program instance per (graph, output column
+    block). The full (K x NI) LHS block stays VMEM-resident across the
+    grid's inner dimension (K = 32 keeps it small), while (NI x bn) RHS
+    blocks stream through VMEM.
+  * the inner contraction is a single MXU-shaped dot per instance; f32 is
+    kept for CPU-interpret numerics (bf16 would be the on-TPU layout).
+
+interpret=True is mandatory here: real TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Preferred output-column block width. The grid dimension requires bn | N;
+# `_pick_bn` degrades gracefully for the bucket sizes (all divisible by 12).
+BN_DEFAULT = 128
+
+
+def _pick_bn(n: int, bn: int) -> int:
+    """Largest block width <= bn that divides n."""
+    if n <= bn:
+        return n
+    for cand in range(min(bn, n), 0, -1):
+        if n % cand == 0:
+            return cand
+    return n
+
+
+def _bmm_kernel(x_ref, y_ref, o_ref):
+    # x_ref: (1, K, M) LHS block; y_ref: (1, M, bn) RHS block; o: (1, K, bn).
+    x = x_ref[0]
+    y = y_ref[0]
+    o_ref[0] = jnp.dot(x, y, preferred_element_type=o_ref.dtype)
+
+
+@functools.partial(jax.named_call, name="pallas_bmm")
+def bmm(x, y, *, bn: int = BN_DEFAULT):
+    """Batched matmul x [B,K,M] @ y [B,M,N] -> [B,K,N] via Pallas.
+
+    Matches kernels.ref.bmm_ref exactly (the pytest + hypothesis suite
+    asserts allclose over shape/dtype sweeps).
+    """
+    b, k, m = x.shape
+    b2, m2, n = y.shape
+    assert b == b2 and m == m2, f"bmm shape mismatch {x.shape} @ {y.shape}"
+    bn = _pick_bn(n, bn)
+    grid = (b, n // bn)
+    return pl.pallas_call(
+        _bmm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, k, m), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, m, bn), lambda i, j: (i, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, k, bn), lambda i, j: (i, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((b, k, n), x.dtype),
+        interpret=True,
+    )(x, y)

@@ -1,0 +1,44 @@
+"""L1 Pallas kernel: fused embedding-layer combine.
+
+Computes embed = relu(pre + theta4 @ nbr)  (Alg. 2 lines 13-14) in one VMEM
+round trip instead of three HLO ops: the (K x K) weight is broadcast to every
+grid instance, each instance owns one graph's (K x NI_block) activation tile.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .bmm import _pick_bn
+
+BJ_DEFAULT = 256  # NI-column block
+
+
+def _combine_kernel(t4_ref, pre_ref, nbr_ref, o_ref):
+    t4 = t4_ref[...]
+    pre = pre_ref[0]
+    nbr = nbr_ref[0]
+    o_ref[0] = jax.nn.relu(pre + jnp.dot(t4, nbr, preferred_element_type=o_ref.dtype))
+
+
+@functools.partial(jax.named_call, name="pallas_combine")
+def combine(theta4, pre, nbr, *, bj: int = BJ_DEFAULT):
+    """relu(pre + theta4 @ nbr): theta4 [K,K]; pre, nbr [B,K,NI]."""
+    b, k, ni = pre.shape
+    assert theta4.shape == (k, k) and nbr.shape == (b, k, ni)
+    bj = _pick_bn(ni, bj)
+    grid = (b, ni // bj)
+    return pl.pallas_call(
+        _combine_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((k, k), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, k, bj), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((1, k, bj), lambda i, j: (i, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, k, bj), lambda i, j: (i, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((b, k, ni), pre.dtype),
+        interpret=True,
+    )(theta4, pre, nbr)

@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for the Pallas kernels and the stage math.
+
+These are the correctness reference for:
+  * pytest kernel-vs-ref checks (hypothesis sweeps shapes/dtypes), and
+  * the backward stages (VJPs are taken against this math; it is
+    element-for-element identical to the kernels' outputs, see DESIGN.md).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def bmm_ref(x, y):
+    """Batched matmul: x [B,K,M] @ y [B,M,N] -> [B,K,N].
+
+    This is Alg. 2 line 11 (`nbr_embed^i = SpMatMul(embed^i, A^i)`), the
+    message-passing hot spot, densified (see DESIGN.md Sec. 3).
+    """
+    return jnp.einsum("bkm,bmn->bkn", x, y)
+
+
+def combine_ref(theta4, pre, nbr):
+    """Layer combine: relu(pre + theta4 @ nbr)  (Alg. 2 lines 13-14).
+
+    theta4 [K,K]; pre, nbr [B,K,NI].
+    """
+    return jax.nn.relu(pre + jnp.einsum("km,bmj->bkj", theta4, nbr))
+
+
+# --- full stage math (used by stages.py's ref path and by the VJPs) ---
+
+
+def embed_pre_ref(theta1, theta2, theta3, s, a):
+    """Alg. 2 lines 5-8: the layer-independent part of the embedding.
+
+    theta1, theta2 [K]; theta3 [K,K]; s [B,NI]; a [B,NI,N] -> pre [B,K,NI].
+    e1 = theta1 (x) S^T; w = relu(theta2 (x) deg); e2 = theta3 @ w.
+    """
+    e1 = theta1[None, :, None] * s[:, None, :]
+    deg = jnp.sum(a, axis=2)
+    w = jax.nn.relu(theta2[None, :, None] * deg[:, None, :])
+    e2 = jnp.einsum("km,bmj->bkj", theta3, w)
+    return e1 + e2
+
+
+def q_scores_ref(theta5, theta6, theta7, embed, c, sum_all):
+    """Alg. 3 lines 6-11: candidate scores for the local shard.
+
+    theta5, theta6 [K,K]; theta7 [2K]; embed [B,K,NI]; c [B,NI] (0/1 mask);
+    sum_all [B,K] (the all-reduced global embedding sum) -> scores [B,NI].
+    The paper's SPARSE_DIAG(C) extraction is the mask multiply `embed * c`.
+    """
+    w1 = jnp.einsum("km,bm->bk", theta5, sum_all)
+    ce = embed * c[:, None, :]
+    w2 = jnp.einsum("km,bmj->bkj", theta6, ce)
+    b, k, ni = w2.shape
+    h = jax.nn.relu(
+        jnp.concatenate([jnp.broadcast_to(w1[:, :, None], (b, k, ni)), w2], axis=1)
+    )
+    return jnp.einsum("t,btj->bj", theta7, h)

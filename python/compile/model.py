@@ -1,0 +1,78 @@
+"""Monolithic single-device reference policy model (the parity oracle).
+
+This is Alg. 2 + Alg. 3 with P = 1 written straight down, plus the DQN loss.
+The distributed stage composition (python simulation in tests, and the Rust
+coordinator against golden vectors) must match `full_forward` and
+`jax.grad(full_loss)` to fp tolerance; that is the core correctness signal
+for the hand-rolled distributed backprop.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+
+K = 32
+L = 2
+
+
+def init_params(key, k: int = K):
+    """Parameter pytree theta1..theta7 (Eq. 1 and Eq. 2)."""
+    ks = jax.random.split(key, 7)
+    scale = 0.1
+    return {
+        "theta1": scale * jax.random.normal(ks[0], (k,)),
+        "theta2": scale * jax.random.normal(ks[1], (k,)),
+        "theta3": scale * jax.random.normal(ks[2], (k, k)),
+        "theta4": scale * jax.random.normal(ks[3], (k, k)),
+        "theta5": scale * jax.random.normal(ks[4], (k, k)),
+        "theta6": scale * jax.random.normal(ks[5], (k, k)),
+        "theta7": scale * jax.random.normal(ks[6], (2 * k,)),
+    }
+
+
+PARAM_ORDER = ("theta1", "theta2", "theta3", "theta4", "theta5", "theta6", "theta7")
+
+
+def params_to_flat(params):
+    """Flatten in the layout rust/src/model/params.rs expects."""
+    return jnp.concatenate([params[name].reshape(-1) for name in PARAM_ORDER])
+
+
+def flat_to_params(flat, k: int = K):
+    shapes = {
+        "theta1": (k,), "theta2": (k,), "theta3": (k, k), "theta4": (k, k),
+        "theta5": (k, k), "theta6": (k, k), "theta7": (2 * k,),
+    }
+    out, off = {}, 0
+    for name in PARAM_ORDER:
+        sz = 1
+        for d in shapes[name]:
+            sz *= d
+        out[name] = flat[off:off + sz].reshape(shapes[name])
+        off += sz
+    assert off == flat.shape[0]
+    return out
+
+
+def full_forward(params, a, s, c, layers: int = L):
+    """Scores for every node: a [B,N,N], s [B,N], c [B,N] -> [B,N]."""
+    pre = ref.embed_pre_ref(params["theta1"], params["theta2"], params["theta3"], s, a)
+    embed = jnp.zeros_like(pre)  # Alg. 2 line 3
+    for _ in range(layers):
+        nbr = ref.bmm_ref(embed, a)  # single shard: partial == total
+        embed = ref.combine_ref(params["theta4"], pre, nbr)
+    sum_all = jnp.sum(embed, axis=2)
+    return ref.q_scores_ref(
+        params["theta5"], params["theta6"], params["theta7"], embed, c, sum_all
+    )
+
+
+def full_loss(params, a, s, c, action_onehot, targets, layers: int = L):
+    """DQN regression loss: mean_b (Q(s_b, a_b) - y_b)^2."""
+    scores = full_forward(params, a, s, c, layers)
+    q_sa = jnp.sum(scores * action_onehot, axis=1)
+    return jnp.mean((q_sa - targets) ** 2)
+
+
+full_loss_grad = jax.grad(full_loss)

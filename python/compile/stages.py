@@ -1,0 +1,149 @@
+"""L2 stage functions: the paper's policy model split at its communication
+points (DESIGN.md Sec. 2 stage catalog).
+
+Each forward stage is one per-shard HLO program; collectives between stages
+(Alg. 2 line 12 all-reduce, Alg. 3 line 5 all-reduce, Alg. 4 line 6
+all-gather) belong to the Rust coordinator. Backward stages are jax.vjp of
+the ref math (identical element-for-element to the kernel outputs).
+
+Argument orders here define the PJRT parameter orders the Rust runtime uses;
+change them only together with rust/src/runtime/exec.rs.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import bmm as bmm_mod
+from .kernels import fused as fused_mod
+from .kernels import ref
+
+
+# ---------------------------------------------------------------- forward
+
+def embed_pre(theta1, theta2, theta3, s, a):
+    """Stage 1 (Alg. 2 lines 5-8): layer-independent embedding terms."""
+    return ref.embed_pre_ref(theta1, theta2, theta3, s, a)
+
+
+def embed_msg(embed, a, *, use_pallas=True):
+    """Stage 2 (Alg. 2 line 11): local message-passing partial sums.
+
+    embed [B,K,NI] @ a [B,NI,N] -> partial [B,K,N]; the coordinator
+    all-reduces the result across shards (Alg. 2 line 12).
+    """
+    if use_pallas:
+        return bmm_mod.bmm(embed, a)
+    return ref.bmm_ref(embed, a)
+
+
+def embed_combine(theta4, pre, nbr, *, use_pallas=True):
+    """Stage 3 (Alg. 2 lines 13-14): embed = relu(pre + theta4 @ nbr).
+
+    `nbr` is this shard's column slice of the all-reduced message tensor
+    (the coordinator slices before invoking).
+    """
+    if use_pallas:
+        return fused_mod.combine(theta4, pre, nbr)
+    return ref.combine_ref(theta4, pre, nbr)
+
+
+def q_sum(embed):
+    """Stage 4 (Alg. 3 line 4): local embedding sum, shape [B,K]."""
+    return jnp.sum(embed, axis=2)
+
+
+def q_scores(theta5, theta6, theta7, embed, c, sum_all):
+    """Stage 5 (Alg. 3 lines 6-11): local candidate scores [B,NI]."""
+    return ref.q_scores_ref(theta5, theta6, theta7, embed, c, sum_all)
+
+
+# ---------------------------------------------------------------- backward
+# VJP stages. Data inputs (s, a, c) never need cotangents; the collective
+# adjoints (all-gather of d_nbr, all-reduce of d_sum_all / d_theta) and the
+# trivial q_sum broadcast adjoint live in the Rust coordinator.
+
+def embed_pre_bwd(theta1, theta2, theta3, s, a, d_pre):
+    """d(theta1, theta2, theta3) for stage 1."""
+    _, vjp = jax.vjp(lambda t1, t2, t3: ref.embed_pre_ref(t1, t2, t3, s, a),
+                     theta1, theta2, theta3)
+    return vjp(d_pre)
+
+
+def embed_msg_bwd(a, d_partial):
+    """d_embed for stage 2: d_partial [B,K,N] x a [B,NI,N] -> [B,K,NI].
+
+    The cotangent of x @ A w.r.t. x is d @ A^T; `a` itself is data.
+    """
+    return jnp.einsum("bkn,bjn->bkj", d_partial, a)
+
+
+def embed_combine_bwd(theta4, pre, nbr, d_out):
+    """(d_theta4, d_pre, d_nbr) for stage 3."""
+    _, vjp = jax.vjp(lambda t4, p, nb: ref.combine_ref(t4, p, nb), theta4, pre, nbr)
+    return vjp(d_out)
+
+
+def q_scores_bwd(theta5, theta6, theta7, embed, c, sum_all, d_scores):
+    """(d_theta5, d_theta6, d_theta7, d_embed, d_sum_all) for stage 5."""
+    _, vjp = jax.vjp(
+        lambda t5, t6, t7, e, sa: ref.q_scores_ref(t5, t6, t7, e, c, sa),
+        theta5, theta6, theta7, embed, sum_all,
+    )
+    return vjp(d_scores)
+
+
+# ------------------------------------------------- stage registry for AOT
+
+def example_args(stage: str, b: int, n: int, ni: int, k: int):
+    """jax.ShapeDtypeStruct argument list for lowering `stage`."""
+    f32 = jnp.float32
+    t_k = jax.ShapeDtypeStruct((k,), f32)
+    t_kk = jax.ShapeDtypeStruct((k, k), f32)
+    t_2k = jax.ShapeDtypeStruct((2 * k,), f32)
+    s_bni = jax.ShapeDtypeStruct((b, ni), f32)
+    a_bnin = jax.ShapeDtypeStruct((b, ni, n), f32)
+    e_bkni = jax.ShapeDtypeStruct((b, k, ni), f32)
+    m_bkn = jax.ShapeDtypeStruct((b, k, n), f32)
+    v_bk = jax.ShapeDtypeStruct((b, k), f32)
+    sc_bni = jax.ShapeDtypeStruct((b, ni), f32)
+    table = {
+        "embed_pre": [t_k, t_k, t_kk, s_bni, a_bnin],
+        "embed_msg": [e_bkni, a_bnin],
+        "embed_combine": [t_kk, e_bkni, e_bkni],
+        "q_sum": [e_bkni],
+        "q_scores": [t_kk, t_kk, t_2k, e_bkni, s_bni, v_bk],
+        "embed_pre_bwd": [t_k, t_k, t_kk, s_bni, a_bnin, e_bkni],
+        "embed_msg_bwd": [a_bnin, m_bkn],
+        "embed_combine_bwd": [t_kk, e_bkni, e_bkni, e_bkni],
+        "q_scores_bwd": [t_kk, t_kk, t_2k, e_bkni, sc_bni, v_bk, sc_bni],
+    }
+    return table[stage]
+
+
+def stage_fn(stage: str, *, use_pallas: bool):
+    """The callable to lower for `stage` (tuple-returning for PJRT)."""
+    fns = {
+        "embed_pre": lambda *xs: (embed_pre(*xs),),
+        "embed_msg": lambda *xs: (embed_msg(*xs, use_pallas=use_pallas),),
+        "embed_combine": lambda *xs: (embed_combine(*xs, use_pallas=use_pallas),),
+        "q_sum": lambda *xs: (q_sum(*xs),),
+        "q_scores": lambda *xs: (q_scores(*xs),),
+        "embed_pre_bwd": lambda *xs: tuple(embed_pre_bwd(*xs)),
+        "embed_msg_bwd": lambda *xs: (embed_msg_bwd(*xs),),
+        "embed_combine_bwd": lambda *xs: tuple(embed_combine_bwd(*xs)),
+        "q_scores_bwd": lambda *xs: tuple(q_scores_bwd(*xs)),
+    }
+    return fns[stage]
+
+
+STAGE_NUM_OUTPUTS = {
+    "embed_pre": 1,
+    "embed_msg": 1,
+    "embed_combine": 1,
+    "q_sum": 1,
+    "q_scores": 1,
+    "embed_pre_bwd": 3,
+    "embed_msg_bwd": 1,
+    "embed_combine_bwd": 3,
+    "q_scores_bwd": 5,
+}

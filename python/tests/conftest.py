@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Make `compile` and sibling test helpers importable when pytest runs from python/.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

@@ -1,0 +1,121 @@
+"""Python simulation of the Rust coordinator's distributed orchestration.
+
+This composes the per-shard stage functions with explicit collectives
+(all-reduce / all-gather / slice) exactly as rust/src/coordinator/{fwd,bwd}.rs
+does. The tests assert it matches the monolithic model + jax.grad — the core
+design validation for the hand-rolled distributed backprop. It is also the
+executable specification the Rust implementation mirrors.
+"""
+
+import jax.numpy as jnp
+
+from compile import model, stages
+
+
+def shard(x, p, axis):
+    """Split along `axis` into p equal parts (row partitioning, Fig. 2)."""
+    return jnp.split(x, p, axis=axis)
+
+
+def dist_forward(params, a, s, c, p, layers=model.L, save=False):
+    """Distributed Alg. 2 + Alg. 3 over p simulated shards.
+
+    a [B,N,N], s,c [B,N]. Returns scores [B,N] (and saved activations for
+    the backward pass when save=True).
+    """
+    a_i = shard(a, p, axis=1)      # each [B,NI,N]
+    s_i = shard(s, p, axis=1)
+    c_i = shard(c, p, axis=1)
+
+    pre = [stages.embed_pre(params["theta1"], params["theta2"], params["theta3"],
+                            s_i[i], a_i[i]) for i in range(p)]
+    embed = [jnp.zeros_like(pre[i]) for i in range(p)]          # Alg. 2 line 3
+    acts = {"pre": pre, "embed_in": [], "nbr_slice": []}
+    for _ in range(layers):
+        if save:
+            acts["embed_in"].append(list(embed))
+        partial = [stages.embed_msg(embed[i], a_i[i], use_pallas=False)
+                   for i in range(p)]
+        nbr = sum(partial)                                      # ALL-REDUCE (line 12)
+        nbr_i = shard(nbr, p, axis=2)                           # local column slice
+        if save:
+            acts["nbr_slice"].append(list(nbr_i))
+        embed = [stages.embed_combine(params["theta4"], pre[i], nbr_i[i],
+                                      use_pallas=False) for i in range(p)]
+    sums = [stages.q_sum(embed[i]) for i in range(p)]
+    sum_all = sum(sums)                                         # ALL-REDUCE (Alg.3 line 5)
+    scores = [stages.q_scores(params["theta5"], params["theta6"], params["theta7"],
+                              embed[i], c_i[i], sum_all) for i in range(p)]
+    out = jnp.concatenate(scores, axis=1)                       # ALL-GATHER (Alg.4 line 6)
+    if save:
+        acts["embed_final"] = embed
+        acts["sum_all"] = sum_all
+        acts["a_i"], acts["s_i"], acts["c_i"] = a_i, s_i, c_i
+        return out, acts
+    return out
+
+
+def dist_backward(params, acts, scores, onehot, targets, p, layers=model.L):
+    """Distributed backward pass mirroring rust/src/coordinator/bwd.rs.
+
+    Returns the all-reduced parameter-gradient pytree.
+    """
+    b = scores.shape[0]
+    onehot_i = shard(onehot, p, axis=1)
+    scores_i = shard(scores, p, axis=1)
+
+    # Loss adjoint: q_sa needs an ALL-REDUCE of per-shard partial sums.
+    q_sa = sum(jnp.sum(scores_i[i] * onehot_i[i], axis=1) for i in range(p))
+    d_qsa = 2.0 / b * (q_sa - targets)                          # [B]
+    d_scores = [d_qsa[:, None] * onehot_i[i] for i in range(p)]
+
+    zeros_like = lambda name: jnp.zeros_like(params[name])
+    g = {name: zeros_like(name) for name in model.PARAM_ORDER}
+
+    # Stage 5 adjoint.
+    d_embed, d_sum_parts = [], []
+    for i in range(p):
+        d5, d6, d7, d_e, d_sa = stages.q_scores_bwd(
+            params["theta5"], params["theta6"], params["theta7"],
+            acts["embed_final"][i], acts["c_i"][i], acts["sum_all"], d_scores[i])
+        g["theta5"] += d5
+        g["theta6"] += d6
+        g["theta7"] += d7
+        d_embed.append(d_e)
+        d_sum_parts.append(d_sa)
+    # sum_all was an all-reduce; adjoint: ALL-REDUCE the cotangents, then the
+    # q_sum broadcast adjoint adds d_sum_all to every column.
+    d_sum_all = sum(d_sum_parts)
+    d_embed = [d_embed[i] + d_sum_all[:, :, None] for i in range(p)]
+
+    d_pre_acc = [jnp.zeros_like(acts["pre"][i]) for i in range(p)]
+    for l in reversed(range(layers)):
+        d_nbr = []
+        for i in range(p):
+            d4, d_pre, d_nb = stages.embed_combine_bwd(
+                params["theta4"], acts["pre"][i], acts["nbr_slice"][l][i], d_embed[i])
+            g["theta4"] += d4
+            d_pre_acc[i] += d_pre
+            d_nbr.append(d_nb)
+        # nbr slice consumed the all-reduced tensor; adjoint: ALL-GATHER the
+        # slices into [B,K,N], identical on every shard (all-reduce adjoint).
+        d_partial = jnp.concatenate(d_nbr, axis=2)
+        d_embed = [stages.embed_msg_bwd(acts["a_i"][i], d_partial) for i in range(p)]
+        # layer 0's input embedding is the zeros constant; cotangent discarded.
+
+    for i in range(p):
+        d1, d2, d3 = stages.embed_pre_bwd(
+            params["theta1"], params["theta2"], params["theta3"],
+            acts["s_i"][i], acts["a_i"][i], d_pre_acc[i])
+        g["theta1"] += d1
+        g["theta2"] += d2
+        g["theta3"] += d3
+    return g  # conceptually followed by the gradient ALL-REDUCE (already summed)
+
+
+def dist_loss_and_grad(params, a, s, c, onehot, targets, p, layers=model.L):
+    scores, acts = dist_forward(params, a, s, c, p, layers, save=True)
+    q_sa = jnp.sum(scores * onehot, axis=1)
+    loss = jnp.mean((q_sa - targets) ** 2)
+    g = dist_backward(params, acts, scores, onehot, targets, p, layers)
+    return loss, g

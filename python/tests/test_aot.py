@@ -1,0 +1,94 @@
+"""AOT build-step correctness: manifests, shapes, binio interchange."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import aot, binio, configs, model, stages
+
+
+def test_bucket_invariants():
+    for s in configs.fwd_shapes() + configs.train_shapes():
+        assert s.n % 12 == 0
+        assert s.n % s.ni == 0
+        assert s.p in configs.P_SET
+
+
+def test_artifact_names_unique_and_parse():
+    arts = configs.all_artifacts()
+    names = [n for n, _, _ in arts]
+    assert len(names) == len(set(names))
+    for name, stage, s in arts:
+        assert name == configs.artifact_name(stage, s)
+        assert stage in configs.FWD_STAGES + configs.BWD_STAGES
+
+
+def test_train_shapes_have_bwd_artifacts():
+    arts = {n for n, _, _ in configs.all_artifacts()}
+    for s in configs.train_shapes():
+        for st in configs.BWD_STAGES:
+            assert configs.artifact_name(st, s) in arts
+
+
+def test_binio_roundtrip(tmp_path):
+    p = tmp_path / "x.oggm"
+    a = np.arange(12, dtype=np.float32).reshape(3, 4)
+    b = np.asarray([1.5], dtype=np.float32)
+    binio.save(p, [("a", a), ("b", b)])
+    back = binio.load(p)
+    assert_allclose(back["a"], a)
+    assert_allclose(back["b"], b)
+    assert back["a"].shape == (3, 4)
+
+
+def test_example_args_match_stage_fns():
+    # Every stage must lower against its declared example args.
+    s = configs.StageShape(2, 24, 12)
+    for stage in configs.FWD_STAGES + configs.BWD_STAGES:
+        args = stages.example_args(stage, s.b, s.n, s.ni, configs.K)
+        fn = stages.stage_fn(stage, use_pallas=False)
+        lowered = jax.jit(fn).lower(*args)
+        assert lowered is not None
+
+
+def test_hlo_text_has_no_custom_calls():
+    # interpret=True Pallas must lower to plain HLO (CPU-PJRT runnable).
+    for stage in ("embed_msg", "embed_combine"):
+        txt = aot.lower_stage(stage, configs.StageShape(1, 24, 12))
+        assert "custom-call" not in txt.lower(), f"{stage} left a custom call"
+        assert "ENTRY" in txt
+
+
+def test_goldens_selfconsistent(tmp_path):
+    aot.emit_goldens(str(tmp_path))
+    g = binio.load(tmp_path / "golden_train.oggm")
+    params = model.flat_to_params(jnp.asarray(g["params"]))
+    scores = model.full_forward(params, g["a"], g["s"], g["c"])
+    assert_allclose(np.asarray(scores), g["scores"], rtol=1e-5, atol=1e-5)
+    loss = model.full_loss(params, g["a"], g["s"], g["c"], g["onehot"], g["targets"])
+    assert abs(float(loss) - float(g["loss"][0])) < 1e-5
+    gi = binio.load(tmp_path / "golden_infer.oggm")
+    s1 = model.full_forward(params, gi["a"], gi["s"], gi["c"])
+    assert_allclose(np.asarray(s1), gi["scores"], rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(os.path.dirname(__file__),
+                    "..", "..", "artifacts", "manifest.tsv")),
+                    reason="artifacts not built")
+def test_manifest_covers_all_artifacts():
+    root = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    rows = []
+    with open(os.path.join(root, "manifest.tsv")) as f:
+        for line in f:
+            if line.startswith("#"):
+                continue
+            rows.append(line.rstrip("\n").split("\t"))
+    assert len(rows) == len(configs.all_artifacts())
+    for name, stage, b, n, ni, k, nout, fname in rows:
+        assert os.path.exists(os.path.join(root, fname)), fname
+        assert int(nout) == stages.STAGE_NUM_OUTPUTS[stage]
+        assert int(n) % int(ni) == 0

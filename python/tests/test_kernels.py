@@ -1,0 +1,94 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and dtypes; assert_allclose against ref.py is the
+core kernel-correctness signal (the guides' contract for interpret-mode
+Pallas on CPU).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import bmm as bmm_mod
+from compile.kernels import fused as fused_mod
+from compile.kernels import ref
+
+DIMS = st.sampled_from([1, 2, 3, 4, 6, 8, 12, 16, 24, 32, 48])
+SMALL = st.sampled_from([1, 2, 3])
+DTYPES = st.sampled_from([jnp.float32, jnp.bfloat16])
+
+
+def _rand(rng, shape, dtype):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32), dtype=dtype)
+
+
+@settings(max_examples=40, deadline=None)
+@given(b=SMALL, k=DIMS, m=DIMS, n=DIMS, dtype=DTYPES, seed=st.integers(0, 2**16))
+def test_bmm_matches_ref(b, k, m, n, dtype, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, (b, k, m), dtype)
+    y = _rand(rng, (b, m, n), dtype)
+    got = bmm_mod.bmm(x, y)
+    want = ref.bmm_ref(x, y)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    assert got.dtype == want.dtype
+    assert_allclose(np.asarray(got, np.float32), np.asarray(want, np.float32),
+                    rtol=tol, atol=tol)
+
+
+@settings(max_examples=25, deadline=None)
+@given(b=SMALL, k=DIMS, ni=DIMS, dtype=DTYPES, seed=st.integers(0, 2**16))
+def test_combine_matches_ref(b, k, ni, dtype, seed):
+    rng = np.random.default_rng(seed)
+    t4 = _rand(rng, (k, k), dtype)
+    pre = _rand(rng, (b, k, ni), dtype)
+    nbr = _rand(rng, (b, k, ni), dtype)
+    got = fused_mod.combine(t4, pre, nbr)
+    want = ref.combine_ref(t4, pre, nbr)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    assert_allclose(np.asarray(got, np.float32), np.asarray(want, np.float32),
+                    rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("n,bn", [(24, 128), (128, 128), (252, 128), (96, 7)])
+def test_bmm_block_picker(n, bn):
+    picked = bmm_mod._pick_bn(n, bn)
+    assert n % picked == 0 and 0 < picked <= max(bn, 1) or picked == n
+
+
+def test_bmm_rejects_mismatch():
+    x = jnp.zeros((1, 4, 5))
+    y = jnp.zeros((1, 6, 7))
+    with pytest.raises(AssertionError):
+        bmm_mod.bmm(x, y)
+
+
+@pytest.mark.parametrize("bn", [1, 2, 8, 64, 999])
+def test_bmm_block_sweep_same_result(bn):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(2, 8, 24)).astype(np.float32))
+    y = jnp.asarray(rng.normal(size=(2, 24, 48)).astype(np.float32))
+    got = bmm_mod.bmm(x, y, bn=bn)
+    assert_allclose(np.asarray(got), np.asarray(ref.bmm_ref(x, y)), rtol=1e-5, atol=1e-5)
+
+
+def test_bmm_zero_and_identity():
+    # x @ I == x ; x @ 0 == 0 — degenerate structure the masking path relies on.
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(1, 32, 12)).astype(np.float32))
+    eye = jnp.broadcast_to(jnp.eye(12, dtype=jnp.float32), (1, 12, 12))
+    assert_allclose(np.asarray(bmm_mod.bmm(x, eye)), np.asarray(x), rtol=1e-6, atol=1e-6)
+    zero = jnp.zeros((1, 12, 20), jnp.float32)
+    assert np.abs(np.asarray(bmm_mod.bmm(x, zero))).max() == 0.0
+
+
+def test_combine_relu_clamps():
+    # With pre = -inf-ish negative and nbr = 0, output must be exactly 0.
+    t4 = jnp.zeros((4, 4), jnp.float32)
+    pre = -jnp.ones((1, 4, 8), jnp.float32)
+    nbr = jnp.zeros((1, 4, 8), jnp.float32)
+    out = fused_mod.combine(t4, pre, nbr)
+    assert np.asarray(out).max() == 0.0

@@ -1,0 +1,172 @@
+//! Ablations of the design choices DESIGN.md calls out:
+//!   1. skip-zero-layer forward optimization (exactness + speed),
+//!   2. replay-buffer compression (paper §4.4) vs dense tuples,
+//!   3. collective microbenchmarks (real threaded Communicator),
+//!   4. solver baselines quality/runtime on ER graphs,
+//!   5. fixed-d selection sweep (context for the adaptive schedule).
+
+#[path = "common.rs"]
+mod common;
+
+use oggm::collective::Communicator;
+use oggm::coordinator::engine::EngineCfg;
+use oggm::coordinator::fwd::forward;
+use oggm::coordinator::infer::{solve_mvc, InferCfg};
+use oggm::coordinator::metrics::Table;
+use oggm::coordinator::selection::SelectionPolicy;
+use oggm::coordinator::shard::shards_for_graph;
+use oggm::env::{GraphEnv, MvcEnv};
+use oggm::graph::{generators, Partition};
+use oggm::util::rng::Pcg32;
+use oggm::util::timer;
+use std::time::Duration;
+
+fn ablate_skip_zero_layer(rt: &oggm::runtime::Runtime) {
+    let mut rng = Pcg32::seeded(1);
+    let params = common::init_params(&mut rng);
+    let n = if common::fast_mode() { 252 } else { 756 };
+    let g = generators::erdos_renyi(n, 0.15, &mut rng);
+    let env = MvcEnv::new(g.clone());
+    let cand: Vec<bool> = (0..g.n).map(|v| env.is_candidate(v)).collect();
+    let part = Partition::new(n, 1);
+    let shards = shards_for_graph(part, &g, env.removed_mask(), env.solution_mask(), &cand);
+    let cfg = EngineCfg::new(1, 2);
+
+    forward(rt, &cfg, &params, &shards, false, false).unwrap(); // warm
+    let a = forward(rt, &cfg, &params, &shards, false, false).unwrap();
+    let b = forward(rt, &cfg, &params, &shards, false, true).unwrap();
+    let diff = oggm::util::max_abs_diff(&a.scores, &b.scores);
+    let mut t = Table::new("ablation: skip-zero-layer fwd", &["sim_s", "max_abs_diff"]);
+    t.row("full", vec![a.timing.simulated(), 0.0]);
+    t.row("skip-layer0-msg", vec![b.timing.simulated(), diff as f64]);
+    common::emit(&t);
+    assert!(diff < 1e-4);
+}
+
+fn ablate_replay_memory() {
+    use oggm::coordinator::replay::{BitSet, ReplayBuffer, Tuple};
+    let mut t = Table::new(
+        "ablation: replay compression (bytes per 10k tuples)",
+        &["compressed_MiB", "dense_MiB", "factor"],
+    );
+    for n in [252usize, 1488, 2496] {
+        let mut rb = ReplayBuffer::new(10_000);
+        for i in 0..10_000u32 {
+            rb.push(Tuple {
+                graph_id: i % 16,
+                solution: BitSet::from_bools(&vec![false; n]),
+                action: 0,
+                target: 0.0,
+            });
+        }
+        let c = rb.bytes() as f64 / (1024.0 * 1024.0);
+        let d = rb.bytes_uncompressed(n) as f64 / (1024.0 * 1024.0);
+        t.row(format!("N={n}"), vec![c, d, d / c]);
+    }
+    common::emit(&t);
+}
+
+fn bench_collectives() {
+    let mut t = Table::new(
+        "microbench: threaded Communicator (ms per op, 1 MiB payload)",
+        &["all_reduce", "all_gather", "barrier"],
+    );
+    for p in [2usize, 4, 6] {
+        let elems = 256 * 1024; // 1 MiB of f32
+        let run = |op: &'static str| -> f64 {
+            let comms = Communicator::create(p);
+            let iters = common::scaled(20, 5);
+            let handles: Vec<_> = comms
+                .into_iter()
+                .map(|c| {
+                    std::thread::spawn(move || {
+                        let mut buf = vec![1.0f32; elems];
+                        let st = timer::Stopwatch::start();
+                        for _ in 0..iters {
+                            match op {
+                                "all_reduce" => c.all_reduce_sum(&mut buf),
+                                "all_gather" => {
+                                    let _ = c.all_gather(&buf[..elems / c.p()]);
+                                }
+                                _ => c.barrier(),
+                            }
+                        }
+                        st.elapsed_s() / iters as f64
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).fold(0.0, f64::max)
+        };
+        t.row(
+            format!("P={p}"),
+            vec![run("all_reduce") * 1e3, run("all_gather") * 1e3, run("barrier") * 1e3],
+        );
+    }
+    common::emit(&t);
+}
+
+fn bench_solvers() {
+    let mut rng = Pcg32::seeded(3);
+    let mut t = Table::new(
+        "baseline solvers on ER(n, 0.15): cover sizes + exact runtime",
+        &["exact", "greedy", "approx2", "exact_s", "optimal"],
+    );
+    for n in [20usize, 60, 120] {
+        let g = generators::erdos_renyi(n, 0.15, &mut rng);
+        let st = timer::Stopwatch::start();
+        let ex = oggm::solvers::exact_mvc(&g, Duration::from_secs(20));
+        let exact_s = st.elapsed_s();
+        let gr = oggm::solvers::greedy_mvc(&g).iter().filter(|&&b| b).count();
+        let ap = oggm::solvers::two_approx_mvc(&g).iter().filter(|&&b| b).count();
+        t.row(
+            format!("n={n}"),
+            vec![ex.size as f64, gr as f64, ap as f64, exact_s, ex.optimal as u8 as f64],
+        );
+    }
+    common::emit(&t);
+}
+
+fn ablate_fixed_d(rt: &oggm::runtime::Runtime) {
+    let mut rng = Pcg32::seeded(4);
+    let params = common::quick_trained_params(rt, common::scaled(10, 3), 4);
+    let n = 252;
+    let g = generators::erdos_renyi(n, 0.15, &mut rng);
+    let exact = oggm::solvers::exact_mvc(&g, Duration::from_secs(5)).size;
+    let mut t = Table::new(
+        "ablation: fixed-d selection sweep (ER 252)",
+        &["cover", "ratio_vs_exact", "evals", "total_sim_s"],
+    );
+    let policies: Vec<(String, SelectionPolicy)> = vec![
+        ("d=1".into(), SelectionPolicy::Single),
+        ("d=2".into(), SelectionPolicy::FixedMulti(2)),
+        ("d=4".into(), SelectionPolicy::FixedMulti(4)),
+        ("d=8".into(), SelectionPolicy::FixedMulti(8)),
+        ("d=16".into(), SelectionPolicy::FixedMulti(16)),
+        ("adaptive".into(), SelectionPolicy::AdaptiveMulti),
+    ];
+    for (label, policy) in policies {
+        let mut cfg = InferCfg::new(1, 2);
+        cfg.policy = policy;
+        let res = solve_mvc(rt, &cfg, &params, &g, n).unwrap();
+        t.row(
+            label,
+            vec![
+                res.solution_size as f64,
+                res.solution_size as f64 / exact as f64,
+                res.evaluations as f64,
+                res.sim_time_per_eval * res.evaluations as f64,
+            ],
+        );
+    }
+    common::emit(&t);
+}
+
+fn main() {
+    let rt = common::runtime();
+    ablate_skip_zero_layer(&rt);
+    ablate_replay_memory();
+    bench_collectives();
+    bench_solvers();
+    ablate_fixed_d(&rt);
+    println!("ablation: OK");
+}

@@ -1,0 +1,111 @@
+//! §5 analysis: the Eq. 3–7 parallel-efficiency model and §5.2 memory model,
+//! compared against the measured scaling of the distributed forward pass.
+//! The model's sec_per_flop is calibrated from the measured P=1 point; the
+//! check is whether the *shape* of time-vs-P matches.
+
+#[path = "common.rs"]
+mod common;
+
+use oggm::analysis::{MemoryModel, ModelConfig};
+use oggm::collective::CostModel;
+use oggm::coordinator::engine::EngineCfg;
+use oggm::coordinator::fwd::forward;
+use oggm::coordinator::metrics::Table;
+use oggm::coordinator::shard::shards_for_graph;
+use oggm::env::{GraphEnv, MvcEnv};
+use oggm::graph::{generators, Partition};
+use oggm::util::rng::Pcg32;
+
+fn main() {
+    let rt = common::runtime();
+    let mut rng = Pcg32::seeded(0xBB);
+    let params = common::init_params(&mut rng);
+    // Fast mode uses the 252 bucket, whose artifacts cover P ∈ {1,2,3}.
+    let (n, p_list): (usize, Vec<usize>) = if common::fast_mode() {
+        (252, vec![1, 2, 3])
+    } else {
+        (1488, vec![1, 2, 3, 4, 6])
+    };
+    let rho = 0.15;
+    let g = generators::erdos_renyi(n, rho, &mut rng);
+    let env = MvcEnv::new(g.clone());
+    let cand: Vec<bool> = (0..g.n).map(|v| env.is_candidate(v)).collect();
+
+    // Measure simulated step time per P.
+    let mut measured = Vec::new();
+    for &p in &p_list {
+        let part = Partition::new(n, p);
+        let shards = shards_for_graph(part, &g, env.removed_mask(), env.solution_mask(), &cand);
+        let cfg = EngineCfg::new(p, 2);
+        forward(&rt, &cfg, &params, &shards, false, true).unwrap();
+        let out = forward(&rt, &cfg, &params, &shards, false, true).unwrap();
+        measured.push(out.timing.simulated());
+    }
+
+    // Calibrate the model at P=1.
+    let mut model = ModelConfig {
+        b: 1,
+        n,
+        rho,
+        k: 32,
+        l: 2,
+        sec_per_flop: 1e-10,
+        net: CostModel::default(),
+    };
+    let base = model.t_policy_eval(1);
+    model.sec_per_flop *= measured[0] / base;
+
+    let mut t = Table::new(
+        "Sec. 5.1 model vs measured (policy evaluation, seconds)",
+        &["measured", "model", "model_eff_embed", "model_eff_action"],
+    );
+    for (i, &p) in p_list.iter().enumerate() {
+        t.row(
+            format!("P={p}"),
+            vec![
+                measured[i],
+                model.t_policy_eval(p),
+                model.efficiency_embed(p),
+                model.efficiency_action(p),
+            ],
+        );
+    }
+    common::emit(&t);
+
+    // Shape check: model and measurement agree on speedup@6 within 2.5x.
+    let sp_meas = measured[0] / *measured.last().unwrap();
+    let sp_model = model.t_policy_eval(1) / model.t_policy_eval(*p_list.last().unwrap());
+    println!("speedup@max-P: measured {sp_meas:.2}x, model {sp_model:.2}x");
+    assert!(sp_meas / sp_model < 2.5 && sp_model / sp_meas < 2.5,
+            "model and measurement diverge on scaling shape");
+
+    // §5.2 memory model at the paper's full scale.
+    let mem = MemoryModel { b: 1, n: 21000, rho: 0.15, replay_tuples: 50_000 };
+    let mut mt = Table::new(
+        "Sec. 5.2 memory model at paper scale (MiB per device, N=21000)",
+        &["P=1", "P=2", "P=6"],
+    );
+    let mib = 1024.0 * 1024.0;
+    mt.row("A (sparse COO, paper)", vec![
+        mem.adjacency_coo_bytes(1) / mib,
+        mem.adjacency_coo_bytes(2) / mib,
+        mem.adjacency_coo_bytes(6) / mib,
+    ]);
+    mt.row("A (dense f32, this repo)", vec![
+        mem.adjacency_dense_bytes(1) / mib,
+        mem.adjacency_dense_bytes(2) / mib,
+        mem.adjacency_dense_bytes(6) / mib,
+    ]);
+    mt.row("replay (compressed)", vec![
+        mem.replay_bytes(1) / mib,
+        mem.replay_bytes(2) / mib,
+        mem.replay_bytes(6) / mib,
+    ]);
+    mt.row("replay (dense ablation)", vec![
+        mem.replay_bytes_uncompressed(1) / mib,
+        mem.replay_bytes_uncompressed(2) / mib,
+        mem.replay_bytes_uncompressed(6) / mib,
+    ]);
+    common::emit(&mt);
+    println!("analysis: OK");
+}

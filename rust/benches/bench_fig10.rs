@@ -1,0 +1,56 @@
+//! Fig. 10: time per parallel RL inference step on real-world (social)
+//! graphs, P ∈ {1,2,3,4,6}. Paper shape: ~4.1x speedup at 6 GPUs — lower
+//! than the ER graphs of Fig. 9 because social graphs have far fewer edges.
+//! Stand-ins are quarter-scale Holme–Kim graphs (Table 1 / DESIGN.md §3).
+
+#[path = "common.rs"]
+mod common;
+
+use oggm::coordinator::engine::EngineCfg;
+use oggm::coordinator::fwd::forward;
+use oggm::coordinator::metrics::Table;
+use oggm::coordinator::shard::shards_for_graph;
+use oggm::env::{GraphEnv, MvcEnv};
+use oggm::graph::{generators, Partition};
+use oggm::util::rng::Pcg32;
+
+fn main() {
+    let rt = common::runtime();
+    let mut rng = Pcg32::seeded(20210661);
+    let params = common::init_params(&mut rng);
+    let datasets = generators::social_standins(&mut rng);
+    let datasets = if common::fast_mode() { &datasets[..1] } else { &datasets[..] };
+    let p_list = [1usize, 2, 3, 4, 6];
+    let reps = common::scaled(3, 1);
+
+    let mut t = Table::new(
+        "Fig. 10: time per RL inference step, social graphs (simulated-parallel seconds)",
+        &["P=1", "P=2", "P=3", "P=4", "P=6", "speedup@6"],
+    );
+    for (name, g) in datasets {
+        let env = MvcEnv::new(g.clone());
+        let cand: Vec<bool> = (0..g.n).map(|v| env.is_candidate(v)).collect();
+        let mut row = Vec::new();
+        for &p in &p_list {
+            let part = Partition::new(g.n, p);
+            let shards =
+                shards_for_graph(part, g, env.removed_mask(), env.solution_mask(), &cand);
+            let cfg = EngineCfg::new(p, 2);
+            forward(&rt, &cfg, &params, &shards, false, true).unwrap();
+            let mut sim = 0.0;
+            for _ in 0..reps {
+                let out = forward(&rt, &cfg, &params, &shards, false, true).unwrap();
+                sim += out.timing.simulated();
+            }
+            let sim = sim / reps as f64;
+            println!("  {name} (|V|={}, |E|={}) P={p}: {sim:.4}s/step", g.n, g.m);
+            row.push(sim);
+        }
+        let speedup = row[0] / row[4];
+        row.push(speedup);
+        println!("  {name}: speedup at P=6: {speedup:.2}x");
+        t.row(name.to_string(), row);
+    }
+    common::emit(&t);
+    println!("fig10: OK");
+}

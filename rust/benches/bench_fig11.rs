@@ -1,0 +1,69 @@
+//! Fig. 11: execution time of a single parallel RL *training* step over
+//! large ER graphs, P ∈ {1,2,3,4,6}. Paper shape: 15000-node 161.4s → 29.1s
+//! (5.5x) and 21000-node 316.4s → 54.4s (5.8x) at 6 GPUs. Quarter-scaled
+//! sizes (1488/2496) with training minibatch B=4 (DESIGN.md §2).
+//!
+//! A training step = policy evaluation (B=1) + state update + τ·(fwd+bwd of
+//! the reconstructed minibatch) + optimizer, exactly Alg. 5's loop body.
+
+#[path = "common.rs"]
+mod common;
+
+use oggm::coordinator::metrics::Table;
+use oggm::coordinator::train::{TrainCfg, Trainer};
+use oggm::graph::generators;
+use oggm::util::rng::Pcg32;
+
+fn main() {
+    let rt = common::runtime();
+    let sizes: Vec<usize> = if common::fast_mode() { vec![1488] } else { vec![1488, 2496] };
+    let p_list = [1usize, 2, 3, 4, 6];
+    let measure_steps = common::scaled(3, 1);
+
+    let mut t = Table::new(
+        "Fig. 11: time per RL training step, large ER graphs (simulated-parallel seconds)",
+        &["P=1", "P=2", "P=3", "P=4", "P=6", "speedup@6"],
+    );
+    for &n in &sizes {
+        let mut row = Vec::new();
+        for &p in &p_list {
+            // Fresh trainer per P: same seed => same episode/action sequence.
+            let mut rng = Pcg32::seeded(0xAA);
+            let graphs =
+                vec![generators::erdos_renyi(n, 0.15, &mut rng)];
+            let mut cfg = TrainCfg::new(p, n);
+            cfg.seed = 5;
+            cfg.hyper.batch_size = 4; // matches the AOT training shapes
+            cfg.hyper.lr = 1e-4;
+            let params0 = common::init_params(&mut rng);
+            let mut tr = Trainer::new(&rt, cfg, graphs, params0).unwrap();
+
+            // One bounded run (run_steps stops mid-episode — a big-graph
+            // episode is thousands of steps): `batch_size` replay-prefill
+            // steps, one compile-warmup training step, then the measured
+            // training steps.
+            let total = 4 + 1 + measure_steps;
+            let mut sims: Vec<f64> = Vec::new();
+            let mut full_steps = 0usize;
+            tr.run_steps(total, |rec| {
+                if rec.loss.is_some() {
+                    full_steps += 1;
+                    if full_steps > 1 {
+                        sims.push(rec.sim_step_time); // skip compile warmup
+                    }
+                }
+            })
+            .unwrap();
+            assert!(!sims.is_empty(), "no full training steps measured");
+            let sim = sims.iter().sum::<f64>() / sims.len() as f64;
+            println!("  N={n} P={p}: {sim:.4}s/training-step (sim)");
+            row.push(sim);
+        }
+        let speedup = row[0] / row[4];
+        row.push(speedup);
+        println!("  N={n}: speedup at P=6: {speedup:.2}x");
+        t.row(format!("N={n}"), row);
+    }
+    common::emit(&t);
+    println!("fig11: OK");
+}

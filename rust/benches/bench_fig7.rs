@@ -1,0 +1,62 @@
+//! Fig. 7: original (d=1) inference vs adaptive multiple-node selection
+//! (§4.5.1) on unseen ER graphs. Paper shape: 2.5–3.7x faster with MVC
+//! ratio |MVC_new| / |MVC_orig| within ~1.008.
+//!
+//! Paper sizes were 750/1500/3000; defaults here are 756/1500 with 3000
+//! included when OGGM_FIG7_FULL=1 (CPU-time guard, DESIGN.md §3).
+
+#[path = "common.rs"]
+mod common;
+
+use oggm::coordinator::infer::{solve_mvc, InferCfg};
+use oggm::coordinator::metrics::Table;
+use oggm::coordinator::selection::SelectionPolicy;
+use oggm::graph::generators;
+use oggm::util::rng::Pcg32;
+
+fn main() {
+    let rt = common::runtime();
+    let mut rng = Pcg32::seeded(0x77);
+    let params = common::quick_trained_params(&rt, common::scaled(12, 3), 0x77);
+
+    let mut sizes: Vec<usize> = if common::fast_mode() { vec![252] } else { vec![756, 1500] };
+    if std::env::var("OGGM_FIG7_FULL").map(|v| v == "1").unwrap_or(false) {
+        sizes.push(3000);
+    }
+
+    let mut t = Table::new(
+        "Fig. 7: d=1 vs adaptive multi-node selection",
+        &["orig_s", "multi_s", "speedup", "evals_orig", "evals_multi", "mvc_ratio"],
+    );
+    for &n in &sizes {
+        let g = generators::erdos_renyi(n, 0.15, &mut rng);
+        let mut orig = InferCfg::new(1, 2);
+        orig.policy = SelectionPolicy::Single;
+        let mut multi = InferCfg::new(1, 2);
+        multi.policy = SelectionPolicy::AdaptiveMulti;
+
+        let ro = solve_mvc(&rt, &orig, &params, &g, n).unwrap();
+        let rm = solve_mvc(&rt, &multi, &params, &g, n).unwrap();
+        let t_o = ro.sim_time_per_eval * ro.evaluations as f64;
+        let t_m = rm.sim_time_per_eval * rm.evaluations as f64;
+        let ratio = rm.solution_size as f64 / ro.solution_size as f64;
+        t.row(
+            format!("N={n}"),
+            vec![
+                t_o,
+                t_m,
+                t_o / t_m,
+                ro.evaluations as f64,
+                rm.evaluations as f64,
+                ratio,
+            ],
+        );
+        println!(
+            "N={n}: orig {:.2}s ({} evals) vs multi {:.2}s ({} evals) — {:.2}x, ratio {:.4}",
+            t_o, ro.evaluations, t_m, rm.evaluations, t_o / t_m, ratio
+        );
+        assert!(ratio < 1.15, "multi-select degraded quality too much: {ratio}");
+    }
+    common::emit(&t);
+    println!("fig7: OK");
+}

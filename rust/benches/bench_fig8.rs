@@ -1,0 +1,96 @@
+//! Fig. 8: effect of the number of gradient-descent iterations τ (§4.5.2).
+//! Trains with τ ∈ {1,2,4,8,16} and reports the steps needed to first reach
+//! a target mean approximation ratio, plus curve oscillation (std of the
+//! ratio over the last third). Paper shape: τ=2..8 converge in fewer steps
+//! than τ=1; τ=16 oscillates.
+//!
+//! Paper used 250-node graphs; default here is 20-node training with
+//! 20-node tests (OGGM_FIG8_N=250 for the paper's size).
+
+#[path = "common.rs"]
+mod common;
+
+use oggm::coordinator::infer::{solve_mvc, InferCfg};
+use oggm::coordinator::metrics::{approx_ratio, Table};
+use oggm::coordinator::train::{TrainCfg, Trainer};
+use oggm::graph::{generators, Graph, Partition};
+use oggm::util::rng::Pcg32;
+use std::time::Duration;
+
+fn main() {
+    let rt = common::runtime();
+    let n: usize = std::env::var("OGGM_FIG8_N").ok().and_then(|v| v.parse().ok()).unwrap_or(20);
+    let bucket = Partition::pad_to_bucket(n, 12);
+    let steps: usize = std::env::var("OGGM_FIG8_STEPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or_else(|| common::scaled(240, 40));
+    let eval_every = common::scaled(20, 20);
+    let taus: Vec<usize> =
+        if common::fast_mode() { vec![1, 8] } else { vec![1, 2, 4, 8, 16] };
+
+    // Shared test set.
+    let mut rng = Pcg32::seeded(0x88);
+    let tests: Vec<(Graph, usize)> = (0..common::scaled(8, 3))
+        .map(|_| {
+            let g = generators::erdos_renyi(n, 0.15, &mut rng);
+            let opt = oggm::solvers::exact_mvc(&g, Duration::from_secs(5)).size;
+            (g, opt)
+        })
+        .collect();
+    let eval = |params: &oggm::model::Params| -> f64 {
+        let cfg = InferCfg::new(1, 2);
+        tests
+            .iter()
+            .map(|(g, opt)| {
+                approx_ratio(solve_mvc(&rt, &cfg, params, g, bucket).unwrap().solution_size, *opt)
+            })
+            .sum::<f64>()
+            / tests.len() as f64
+    };
+
+    let mut t = Table::new(
+        "Fig. 8: gradient-descent iterations tau",
+        &["steps_to_best", "best_ratio", "final_ratio", "osc_std"],
+    );
+    for &tau in &taus {
+        let mut rng = Pcg32::seeded(0x89);
+        let train_graphs: Vec<Graph> =
+            (0..12).map(|_| generators::erdos_renyi(n, 0.15, &mut rng)).collect();
+        let mut cfg = TrainCfg::new(1, bucket);
+        cfg.seed = 33;
+        cfg.hyper.lr = 1e-3;
+        cfg.hyper.grad_iters = tau;
+        cfg.hyper.eps_decay_steps = steps / 2;
+        let params0 = common::init_params(&mut rng);
+        let mut trainer = Trainer::new(&rt, cfg, train_graphs, params0).unwrap();
+
+        let mut curve: Vec<(usize, f64)> = vec![(0, eval(&trainer.params))];
+        while trainer.global_step < steps {
+            let mut marks = Vec::new();
+            trainer
+                .run_episodes(1, |rec| {
+                    if rec.global_step % eval_every == 0 {
+                        marks.push(rec.global_step);
+                    }
+                })
+                .unwrap();
+            for step in marks {
+                curve.push((step, eval(&trainer.params)));
+            }
+        }
+        let best = curve.iter().map(|&(_, r)| r).fold(f64::INFINITY, f64::min);
+        let steps_to_best =
+            curve.iter().find(|&&(_, r)| r <= best + 1e-9).map(|&(s, _)| s).unwrap_or(0);
+        let final_r = curve.last().unwrap().1;
+        let tail = &curve[curve.len() - curve.len() / 3..];
+        let mean = tail.iter().map(|&(_, r)| r).sum::<f64>() / tail.len() as f64;
+        let osc = (tail.iter().map(|&(_, r)| (r - mean) * (r - mean)).sum::<f64>()
+            / tail.len() as f64)
+            .sqrt();
+        println!("tau={tau}: best {best:.4} at step {steps_to_best}, final {final_r:.4}, osc {osc:.4}");
+        t.row(format!("tau={tau}"), vec![steps_to_best as f64, best, final_r, osc]);
+    }
+    common::emit(&t);
+    println!("fig8: OK");
+}

@@ -1,0 +1,60 @@
+//! Fig. 9: execution time of a single parallel RL inference step over large
+//! ER graphs, P ∈ {1,2,3,4,6}. Paper shape: near-linear drop (21000-node:
+//! 23.8s → 3.4s ≈ 7x at 6 GPUs). This repo quarter-scales the graphs
+//! (1488/2496, ρ=0.15; DESIGN.md §3) and reports *simulated-parallel* step
+//! time = max-shard compute + α–β comm (what a multi-GPU node would see).
+
+#[path = "common.rs"]
+mod common;
+
+use oggm::coordinator::engine::EngineCfg;
+use oggm::coordinator::fwd::forward;
+use oggm::coordinator::metrics::Table;
+use oggm::coordinator::shard::shards_for_graph;
+use oggm::env::{GraphEnv, MvcEnv};
+use oggm::graph::{generators, Partition};
+use oggm::util::rng::Pcg32;
+
+fn main() {
+    let rt = common::runtime();
+    let mut rng = Pcg32::seeded(0x99);
+    let params = common::init_params(&mut rng);
+    let sizes: Vec<usize> = if common::fast_mode() { vec![1488] } else { vec![1488, 2496] };
+    let p_list = [1usize, 2, 3, 4, 6];
+    let reps = common::scaled(3, 1);
+
+    let mut t = Table::new(
+        "Fig. 9: time per RL inference step, large ER graphs (simulated-parallel seconds)",
+        &["P=1", "P=2", "P=3", "P=4", "P=6", "speedup@6"],
+    );
+    for &n in &sizes {
+        println!("generating ER({n}, 0.15)...");
+        let g = generators::erdos_renyi(n, 0.15, &mut rng);
+        println!("|V|={} |E|={}", g.n, g.m);
+        let env = MvcEnv::new(g.clone());
+        let cand: Vec<bool> = (0..g.n).map(|v| env.is_candidate(v)).collect();
+        let mut row = Vec::new();
+        for &p in &p_list {
+            let part = Partition::new(n, p);
+            let shards =
+                shards_for_graph(part, &g, env.removed_mask(), env.solution_mask(), &cand);
+            let cfg = EngineCfg::new(p, 2);
+            // Warm the executable cache, then measure.
+            forward(&rt, &cfg, &params, &shards, false, true).unwrap();
+            let mut sim = 0.0;
+            for _ in 0..reps {
+                let out = forward(&rt, &cfg, &params, &shards, false, true).unwrap();
+                sim += out.timing.simulated();
+            }
+            let sim = sim / reps as f64;
+            println!("  N={n} P={p}: {sim:.4}s/step (sim)");
+            row.push(sim);
+        }
+        let speedup = row[0] / row[4];
+        row.push(speedup);
+        println!("  N={n}: speedup at P=6: {speedup:.2}x");
+        t.row(format!("N={n}"), row);
+    }
+    common::emit(&t);
+    println!("fig9: OK");
+}

@@ -1,0 +1,59 @@
+//! Shared helpers for the bench harness binaries (criterion is unavailable
+//! offline; every bench is a plain binary printing the paper's table/figure
+//! rows and appending JSON to bench_results.jsonl).
+
+#![allow(dead_code)]
+
+use oggm::model::Params;
+use oggm::runtime::{manifest, Runtime};
+use oggm::util::rng::Pcg32;
+
+/// Fast mode trims iteration counts/sizes (set OGGM_FAST=1).
+pub fn fast_mode() -> bool {
+    std::env::var("OGGM_FAST").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Scale an iteration count down in fast mode.
+pub fn scaled(full: usize, fast: usize) -> usize {
+    if fast_mode() { fast } else { full }
+}
+
+pub fn runtime() -> Runtime {
+    Runtime::new(manifest::default_dir()).expect("run `make artifacts` first")
+}
+
+/// Reproducible parameters: the python-initialized set when present.
+pub fn init_params(rng: &mut Pcg32) -> Params {
+    let init = manifest::default_dir().join("params_init.oggm");
+    if init.exists() {
+        Params::load(init, 32).unwrap()
+    } else {
+        Params::init(32, rng)
+    }
+}
+
+/// Append a table to the results log and print it.
+pub fn emit(table: &oggm::coordinator::metrics::Table) {
+    println!("{}", table.render());
+    if let Err(e) = table.append_jsonl("bench_results.jsonl") {
+        eprintln!("warn: could not append bench_results.jsonl: {e}");
+    }
+}
+
+/// Pre-trained parameters for inference benches: run a short training burst
+/// so scores are meaningful (heavier training is train_mvc's job).
+pub fn quick_trained_params(rt: &Runtime, episodes: usize, seed: u64) -> Params {
+    use oggm::coordinator::train::{TrainCfg, Trainer};
+    use oggm::graph::generators;
+    let mut rng = Pcg32::new(seed, 3);
+    let graphs: Vec<_> =
+        (0..8).map(|_| generators::erdos_renyi(20, 0.15, &mut rng)).collect();
+    let mut cfg = TrainCfg::new(1, 24);
+    cfg.seed = seed;
+    cfg.hyper.lr = 1e-3;
+    cfg.hyper.grad_iters = 4;
+    let params0 = init_params(&mut rng);
+    let mut tr = Trainer::new(rt, cfg, graphs, params0).unwrap();
+    tr.run_episodes(episodes, |_| {}).unwrap();
+    tr.params
+}

@@ -1,0 +1,287 @@
+//! Generation-barrier shared-memory collectives.
+//!
+//! All P participants call the same collective in the same order (the SPMD
+//! discipline of Alg. 2-5). Each collective is two phases: contribute
+//! (under the mutex) then, once all P arrived, consume. A generation
+//! counter prevents a fast rank from racing into the next collective.
+
+use std::sync::{Arc, Condvar, Mutex};
+
+struct State {
+    p: usize,
+    arrived: usize,
+    generation: u64,
+    /// Accumulation buffer for all-reduce (len set by first arriver).
+    acc: Vec<f32>,
+    /// Gather buffer: per-rank parts.
+    parts: Vec<Vec<f32>>,
+    /// Bytes moved per rank (for metrics / the α–β model).
+    bytes_total: u64,
+    ops_total: u64,
+}
+
+/// A P-way collective communicator. Clone one handle per participant.
+#[derive(Clone)]
+pub struct Communicator {
+    inner: Arc<(Mutex<State>, Condvar)>,
+    pub rank: usize,
+}
+
+impl Communicator {
+    /// Create handles for all P ranks.
+    pub fn create(p: usize) -> Vec<Communicator> {
+        assert!(p >= 1);
+        let inner = Arc::new((
+            Mutex::new(State {
+                p,
+                arrived: 0,
+                generation: 0,
+                acc: Vec::new(),
+                parts: vec![Vec::new(); p],
+                bytes_total: 0,
+                ops_total: 0,
+            }),
+            Condvar::new(),
+        ));
+        (0..p).map(|rank| Communicator { inner: inner.clone(), rank }).collect()
+    }
+
+    pub fn p(&self) -> usize {
+        self.inner.0.lock().unwrap().p
+    }
+
+    /// (total bytes sent+received across ranks, number of collectives).
+    pub fn traffic(&self) -> (u64, u64) {
+        let s = self.inner.0.lock().unwrap();
+        (s.bytes_total, s.ops_total)
+    }
+
+    /// Barrier: returns once all P ranks have arrived.
+    pub fn barrier(&self) {
+        let (lock, cv) = &*self.inner;
+        let mut s = lock.lock().unwrap();
+        let gen = s.generation;
+        s.arrived += 1;
+        if s.arrived == s.p {
+            s.arrived = 0;
+            s.generation += 1;
+            cv.notify_all();
+        } else {
+            while s.generation == gen {
+                s = cv.wait(s).unwrap();
+            }
+        }
+    }
+
+    /// All-reduce (sum) in place: after return, `buf` on every rank holds
+    /// the element-wise sum over ranks (Alg. 2 line 12 / Alg. 3 line 5).
+    pub fn all_reduce_sum(&self, buf: &mut [f32]) {
+        let (lock, cv) = &*self.inner;
+        let mut s = lock.lock().unwrap();
+        let gen = s.generation;
+        if s.acc.is_empty() {
+            s.acc = vec![0.0; buf.len()];
+        }
+        assert_eq!(s.acc.len(), buf.len(), "all_reduce length mismatch across ranks");
+        for (a, &x) in s.acc.iter_mut().zip(buf.iter()) {
+            *a += x;
+        }
+        s.bytes_total += 4 * buf.len() as u64;
+        s.arrived += 1;
+        if s.arrived == s.p {
+            s.arrived = 0;
+            s.generation += 1;
+            s.ops_total += 1;
+            cv.notify_all();
+        } else {
+            while s.generation == gen {
+                s = cv.wait(s).unwrap();
+            }
+        }
+        // Consume phase: every rank copies the sum out; the trailing
+        // barrier (`finish_reduce`) clears `acc` only after all have read.
+        buf.copy_from_slice(&s.acc);
+        drop(s);
+        self.finish_reduce();
+    }
+
+    /// Second barrier ensuring every rank copied out before acc is reused.
+    fn finish_reduce(&self) {
+        let (lock, cv) = &*self.inner;
+        let mut s = lock.lock().unwrap();
+        let gen = s.generation;
+        s.arrived += 1;
+        if s.arrived == s.p {
+            s.arrived = 0;
+            s.generation += 1;
+            s.acc.clear();
+            cv.notify_all();
+        } else {
+            while s.generation == gen {
+                s = cv.wait(s).unwrap();
+            }
+        }
+    }
+
+    /// All-gather: each rank contributes `part`; returns the concatenation
+    /// ordered by rank (Alg. 4 line 6).
+    pub fn all_gather(&self, part: &[f32]) -> Vec<f32> {
+        let (lock, cv) = &*self.inner;
+        let mut s = lock.lock().unwrap();
+        let gen = s.generation;
+        let rank = self.rank;
+        s.parts[rank] = part.to_vec();
+        s.bytes_total += 4 * part.len() as u64;
+        s.arrived += 1;
+        if s.arrived == s.p {
+            s.arrived = 0;
+            s.generation += 1;
+            s.ops_total += 1;
+            cv.notify_all();
+        } else {
+            while s.generation == gen {
+                s = cv.wait(s).unwrap();
+            }
+        }
+        let out: Vec<f32> = s.parts.iter().flat_map(|p| p.iter().copied()).collect();
+        drop(s);
+        // Ensure all ranks consumed before parts are overwritten.
+        self.barrier();
+        out
+    }
+
+    /// Broadcast from rank 0.
+    pub fn broadcast(&self, buf: &mut Vec<f32>) {
+        let (lock, cv) = &*self.inner;
+        let mut s = lock.lock().unwrap();
+        let gen = s.generation;
+        if self.rank == 0 {
+            s.acc = buf.clone();
+            s.bytes_total += 4 * buf.len() as u64;
+        }
+        s.arrived += 1;
+        if s.arrived == s.p {
+            s.arrived = 0;
+            s.generation += 1;
+            s.ops_total += 1;
+            cv.notify_all();
+        } else {
+            while s.generation == gen {
+                s = cv.wait(s).unwrap();
+            }
+        }
+        if self.rank != 0 {
+            *buf = s.acc.clone();
+        }
+        drop(s);
+        self.finish_reduce();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run_ranks<F: Fn(Communicator) + Send + Sync + Clone + 'static>(p: usize, f: F) {
+        let comms = Communicator::create(p);
+        let handles: Vec<_> = comms
+            .into_iter()
+            .map(|c| {
+                let f = f.clone();
+                std::thread::spawn(move || f(c))
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn all_reduce_sums() {
+        run_ranks(4, |c| {
+            let mut buf = vec![c.rank as f32, 1.0, -(c.rank as f32)];
+            c.all_reduce_sum(&mut buf);
+            assert_eq!(buf, vec![6.0, 4.0, -6.0]);
+        });
+    }
+
+    #[test]
+    fn repeated_all_reduce_no_bleed() {
+        run_ranks(3, |c| {
+            for round in 0..20 {
+                let mut buf = vec![(c.rank + round) as f32];
+                c.all_reduce_sum(&mut buf);
+                assert_eq!(buf[0], (3 * round + 3) as f32, "round {round}");
+            }
+        });
+    }
+
+    #[test]
+    fn all_gather_orders_by_rank() {
+        run_ranks(3, |c| {
+            let part = vec![c.rank as f32 * 10.0, c.rank as f32 * 10.0 + 1.0];
+            let out = c.all_gather(&part);
+            assert_eq!(out, vec![0.0, 1.0, 10.0, 11.0, 20.0, 21.0]);
+        });
+    }
+
+    #[test]
+    fn broadcast_from_root() {
+        run_ranks(4, |c| {
+            let mut buf = if c.rank == 0 { vec![3.5, -1.0] } else { vec![0.0; 2] };
+            c.broadcast(&mut buf);
+            assert_eq!(buf, vec![3.5, -1.0]);
+        });
+    }
+
+    #[test]
+    fn single_rank_degenerates() {
+        let comms = Communicator::create(1);
+        let c = &comms[0];
+        let mut buf = vec![2.0];
+        c.all_reduce_sum(&mut buf);
+        assert_eq!(buf, vec![2.0]);
+        assert_eq!(c.all_gather(&[1.0, 2.0]), vec![1.0, 2.0]);
+        c.barrier();
+    }
+
+    #[test]
+    fn traffic_accounting() {
+        run_ranks(2, |c| {
+            let mut buf = vec![0.0; 8];
+            c.all_reduce_sum(&mut buf);
+            let _ = c.all_gather(&buf[..4]);
+        });
+        // Recreate to read counters deterministically on one handle.
+        let comms = Communicator::create(2);
+        let c0 = comms[0].clone();
+        let c1 = comms[1].clone();
+        let t = std::thread::spawn(move || {
+            let mut b = vec![1.0f32; 8];
+            c1.all_reduce_sum(&mut b);
+        });
+        let mut b = vec![1.0f32; 8];
+        c0.all_reduce_sum(&mut b);
+        t.join().unwrap();
+        let (bytes, ops) = c0.traffic();
+        assert_eq!(ops, 1);
+        assert_eq!(bytes, 2 * 8 * 4);
+    }
+
+    #[test]
+    fn interleaved_mixed_collectives() {
+        run_ranks(4, |c| {
+            for round in 0..10 {
+                c.barrier();
+                let mut buf = vec![1.0f32; 5];
+                c.all_reduce_sum(&mut buf);
+                assert!(buf.iter().all(|&x| x == 4.0));
+                let g = c.all_gather(&[c.rank as f32]);
+                assert_eq!(g, vec![0.0, 1.0, 2.0, 3.0], "round {round}");
+                let mut b = vec![round as f32];
+                c.broadcast(&mut b);
+                assert_eq!(b[0], round as f32);
+            }
+        });
+    }
+}

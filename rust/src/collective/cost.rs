@@ -1,0 +1,79 @@
+//! α–β communication cost model (the paper's Eq. 3/5 communication terms).
+//!
+//! The lockstep engine attributes `alpha·log2(P) + beta·bytes` of simulated
+//! time to each collective, mirroring how §5.1 models MPI_All_reduce /
+//! MPI_All_gather over NCCL on a Summit node. Defaults are NVLink-class
+//! numbers (α = 5 µs, 50 GB/s effective per-GPU bandwidth).
+
+/// Latency/bandwidth model for simulated collectives.
+#[derive(Debug, Clone, Copy)]
+pub struct CostModel {
+    /// Per-collective latency in seconds (α).
+    pub alpha: f64,
+    /// Seconds per byte (β = 1 / bandwidth).
+    pub beta: f64,
+}
+
+impl Default for CostModel {
+    fn default() -> CostModel {
+        CostModel { alpha: 5e-6, beta: 1.0 / 50e9 }
+    }
+}
+
+impl CostModel {
+    /// Zero-cost model (for pure-compute measurements).
+    pub fn free() -> CostModel {
+        CostModel { alpha: 0.0, beta: 0.0 }
+    }
+
+    /// Ring all-reduce of `bytes` per rank over p ranks.
+    pub fn all_reduce(&self, p: usize, bytes: usize) -> f64 {
+        if p <= 1 {
+            return 0.0;
+        }
+        self.alpha * (p as f64).log2() + self.beta * bytes as f64
+    }
+
+    /// All-gather where each rank contributes `bytes_per_rank`.
+    pub fn all_gather(&self, p: usize, bytes_per_rank: usize) -> f64 {
+        if p <= 1 {
+            return 0.0;
+        }
+        self.alpha * (p as f64).log2() + self.beta * (bytes_per_rank * (p - 1)) as f64
+    }
+
+    /// Broadcast of `bytes` from the root.
+    pub fn broadcast(&self, p: usize, bytes: usize) -> f64 {
+        if p <= 1 {
+            return 0.0;
+        }
+        self.alpha * (p as f64).log2() + self.beta * bytes as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_rank_is_free() {
+        let m = CostModel::default();
+        assert_eq!(m.all_reduce(1, 1 << 20), 0.0);
+        assert_eq!(m.all_gather(1, 1 << 20), 0.0);
+    }
+
+    #[test]
+    fn monotone_in_p_and_bytes() {
+        let m = CostModel::default();
+        assert!(m.all_reduce(4, 1000) > m.all_reduce(2, 1000));
+        assert!(m.all_reduce(2, 2000) > m.all_reduce(2, 1000));
+        assert!(m.all_gather(4, 1000) > m.all_gather(2, 1000));
+    }
+
+    #[test]
+    fn free_model_is_zero() {
+        let m = CostModel::free();
+        assert_eq!(m.all_reduce(6, 123456), 0.0);
+        assert_eq!(m.broadcast(6, 123456), 0.0);
+    }
+}

@@ -1,0 +1,14 @@
+//! Collective communication substrate (the NCCL / torch.distributed
+//! substitute, DESIGN.md §3).
+//!
+//! `Communicator` implements barrier / all-reduce / all-gather / broadcast
+//! over P participants with generation-based synchronization; it is used by
+//! the threaded worker engine and validated standalone under real threads.
+//! `cost` implements the paper's α–β communication model (Eq. 3/5) used by
+//! the lockstep engine to attribute simulated communication time.
+
+pub mod comm;
+pub mod cost;
+
+pub use comm::Communicator;
+pub use cost::CostModel;

@@ -1,0 +1,408 @@
+//! Distributed backward pass: hand-rolled VJP-stage orchestration with
+//! collective adjoints, mirroring python/tests/dist_sim.py `dist_backward`.
+//!
+//! Collective adjoints (DESIGN.md §2): the layer message all-reduce-sum +
+//! local slice reverses to an all-gather of cotangent slices followed by a
+//! broadcast into every shard's msg_bwd; the q_sum all-reduce reverses to an
+//! all-reduce of d_sum_all plus a column broadcast. θ-gradients are summed
+//! across shards (≡ the paper's gradient all-reduce of 4K²+4K floats).
+
+use super::engine::{EngineCfg, StepTiming};
+use super::fwd::Activations;
+use super::shard::ShardState;
+use crate::model::Params;
+use crate::runtime::{artifact_name, HostTensor, Input, Runtime};
+use anyhow::Result;
+use std::time::Instant;
+
+/// Backward output: scalar loss, flat parameter gradient, timing.
+#[derive(Debug)]
+pub struct GradOutput {
+    pub loss: f32,
+    /// Flat gradient in Params layout (already summed over shards).
+    pub grads: Vec<f32>,
+    pub timing: StepTiming,
+}
+
+/// DQN regression loss over the distributed scores + full backward pass.
+///
+/// `onehot` is B*N (one action per batch element), `targets` is B.
+pub fn backward(
+    rt: &Runtime,
+    cfg: &EngineCfg,
+    params: &Params,
+    shards: &[ShardState],
+    acts: &Activations,
+    onehot: &[f32],
+    targets: &[f32],
+) -> Result<GradOutput> {
+    let wall = Instant::now();
+    let p = shards.len();
+    let (b, n, ni, k) = (shards[0].b, shards[0].n(), shards[0].ni(), params.k);
+    assert_eq!(onehot.len(), b * n);
+    assert_eq!(targets.len(), b);
+    let mut timing = StepTiming::new(p);
+    let mut grads = vec![0.0f32; params.flat.len()];
+
+    let d_s = [b, ni];
+    let d_a = [b, ni, n];
+    let d_e = [b, k, ni];
+    let d_m = [b, k, n];
+    let d_sum = [b, k];
+    let d_k = [k];
+    let d_kk = [k, k];
+    let d_2k = [2 * k];
+
+    let exec = |shard: usize, name: &str, inputs: &[Input], timing: &mut StepTiming| {
+        let t0 = Instant::now();
+        let out = rt.execute_in(name, inputs);
+        timing.compute[shard] += t0.elapsed().as_secs_f64();
+        out
+    };
+
+    // §Perf: upload each shard's A once; pre_bwd and msg_bwd share it.
+    let mut a_bufs = Vec::with_capacity(p);
+    for (i, sh) in shards.iter().enumerate() {
+        let t0 = Instant::now();
+        a_bufs.push(rt.upload(&d_a, &sh.a)?);
+        timing.compute[i] += t0.elapsed().as_secs_f64();
+    }
+
+    // ---- loss adjoint (host): q_sa = Σ_shards Σ_j scores_i·onehot_i  ----
+    let t_host = Instant::now();
+    let mut onehot_i: Vec<Vec<f32>> = Vec::with_capacity(p);
+    for sh in shards.iter() {
+        let row0 = sh.part.row0(sh.shard);
+        let mut local = vec![0.0f32; b * ni];
+        for g in 0..b {
+            local[g * ni..(g + 1) * ni]
+                .copy_from_slice(&onehot[g * n + row0..g * n + row0 + ni]);
+        }
+        onehot_i.push(local);
+    }
+    let mut q_sa = vec![0.0f32; b];
+    for i in 0..p {
+        for g in 0..b {
+            for r in 0..ni {
+                q_sa[g] += acts.scores_i[i][g * ni + r] * onehot_i[i][g * ni + r];
+            }
+        }
+    }
+    // (partial q_sa all-reduce — B floats)
+    timing.add_comm(cfg.cost.all_reduce(p, 4 * b), 4 * b);
+    let mut loss = 0.0f32;
+    let mut d_qsa = vec![0.0f32; b];
+    for g in 0..b {
+        let diff = q_sa[g] - targets[g];
+        loss += diff * diff / b as f32;
+        d_qsa[g] = 2.0 * diff / b as f32;
+    }
+    let d_scores: Vec<Vec<f32>> = (0..p)
+        .map(|i| {
+            (0..b * ni)
+                .map(|idx| d_qsa[idx / ni] * onehot_i[i][idx])
+                .collect()
+        })
+        .collect();
+    timing.host += t_host.elapsed().as_secs_f64();
+
+    // ---- stage 5 adjoint ----
+    let name_qbwd = artifact_name("q_scores_bwd", b, n, ni, k);
+    let mut d_embed: Vec<Vec<f32>> = Vec::with_capacity(p);
+    let mut d_sum_all = vec![0.0f32; b * k];
+    let th5 = HostTensor::new(&d_kk, params.theta(4));
+    let th6 = HostTensor::new(&d_kk, params.theta(5));
+    let th7 = HostTensor::new(&d_2k, params.theta(6));
+    for (i, sh) in shards.iter().enumerate() {
+        let out = exec(
+            i,
+            &name_qbwd,
+            &[
+                Input::Host(th5),
+                Input::Host(th6),
+                Input::Host(th7),
+                Input::Host(HostTensor::new(&d_e, &acts.embed_final[i])),
+                Input::Host(HostTensor::new(&d_s, &sh.c)),
+                Input::Host(HostTensor::new(&d_sum, &acts.sum_all)),
+                Input::Host(HostTensor::new(&d_s, &d_scores[i])),
+            ],
+            &mut timing,
+        )?;
+        let mut it = out.into_iter();
+        let (d5, d6, d7, d_e_i, d_sa) = (
+            it.next().unwrap(),
+            it.next().unwrap(),
+            it.next().unwrap(),
+            it.next().unwrap(),
+            it.next().unwrap(),
+        );
+        let t_host = Instant::now();
+        accumulate(&mut grads, params.offset(4), &d5);
+        accumulate(&mut grads, params.offset(5), &d6);
+        accumulate(&mut grads, params.offset(6), &d7);
+        for (acc, x) in d_sum_all.iter_mut().zip(d_sa.iter()) {
+            *acc += x;
+        }
+        d_embed.push(d_e_i);
+        timing.host += t_host.elapsed().as_secs_f64();
+    }
+    // q_sum collective adjoint: all-reduce d_sum_all, broadcast into columns.
+    timing.add_comm(cfg.cost.all_reduce(p, 4 * b * k), 4 * b * k);
+    let t_host = Instant::now();
+    for d_e_i in d_embed.iter_mut() {
+        for g in 0..b {
+            for kk in 0..k {
+                let base = g * k * ni + kk * ni;
+                let add = d_sum_all[g * k + kk];
+                for r in 0..ni {
+                    d_e_i[base + r] += add;
+                }
+            }
+        }
+    }
+    timing.host += t_host.elapsed().as_secs_f64();
+
+    // ---- layer loop, reversed ----
+    let name_cbwd = artifact_name("embed_combine_bwd", b, n, ni, k);
+    let name_mbwd = artifact_name("embed_msg_bwd", b, n, ni, k);
+    let th4 = HostTensor::new(&d_kk, params.theta(3));
+    let mut d_pre_acc: Vec<Vec<f32>> = (0..p).map(|_| vec![0.0f32; b * k * ni]).collect();
+    for layer in (0..cfg.l).rev() {
+        let mut d_nbr: Vec<Vec<f32>> = Vec::with_capacity(p);
+        for i in 0..p {
+            let out = exec(
+                i,
+                &name_cbwd,
+                &[
+                    Input::Host(th4),
+                    Input::Host(HostTensor::new(&d_e, &acts.pre[i])),
+                    Input::Host(HostTensor::new(&d_e, &acts.nbr_slice[layer][i])),
+                    Input::Host(HostTensor::new(&d_e, &d_embed[i])),
+                ],
+                &mut timing,
+            )?;
+            let mut it = out.into_iter();
+            let (d4, d_pre, d_nb) =
+                (it.next().unwrap(), it.next().unwrap(), it.next().unwrap());
+            let t_host = Instant::now();
+            accumulate(&mut grads, params.offset(3), &d4);
+            for (acc, x) in d_pre_acc[i].iter_mut().zip(d_pre.iter()) {
+                *acc += x;
+            }
+            d_nbr.push(d_nb);
+            timing.host += t_host.elapsed().as_secs_f64();
+        }
+        if layer == 0 {
+            // Layer 0's message input is the zeros constant: its cotangent
+            // is discarded, so the all-gather + msg_bwd are elided.
+            break;
+        }
+        // Collective adjoint: ALL-GATHER cotangent slices into B*K*N.
+        let t_host = Instant::now();
+        let mut d_partial = vec![0.0f32; b * k * n];
+        for (i, sh) in shards.iter().enumerate() {
+            let row0 = sh.part.row0(sh.shard);
+            for g in 0..b {
+                for kk in 0..k {
+                    let dst = g * k * n + kk * n + row0;
+                    let src = g * k * ni + kk * ni;
+                    d_partial[dst..dst + ni].copy_from_slice(&d_nbr[i][src..src + ni]);
+                }
+            }
+        }
+        timing.host += t_host.elapsed().as_secs_f64();
+        timing.add_comm(cfg.cost.all_gather(p, 4 * b * k * ni), 4 * b * k * ni * p);
+        for i in 0..p {
+            let out = exec(
+                i,
+                &name_mbwd,
+                &[Input::Dev(&a_bufs[i]), Input::Host(HostTensor::new(&d_m, &d_partial))],
+                &mut timing,
+            )?;
+            d_embed[i] = out.into_iter().next().unwrap();
+        }
+    }
+
+    // ---- stage 1 adjoint ----
+    let name_pbwd = artifact_name("embed_pre_bwd", b, n, ni, k);
+    let th1 = HostTensor::new(&d_k, params.theta(0));
+    let th2 = HostTensor::new(&d_k, params.theta(1));
+    let th3 = HostTensor::new(&d_kk, params.theta(2));
+    for (i, sh) in shards.iter().enumerate() {
+        let out = exec(
+            i,
+            &name_pbwd,
+            &[
+                Input::Host(th1),
+                Input::Host(th2),
+                Input::Host(th3),
+                Input::Host(HostTensor::new(&d_s, &sh.s)),
+                Input::Dev(&a_bufs[i]),
+                Input::Host(HostTensor::new(&d_e, &d_pre_acc[i])),
+            ],
+            &mut timing,
+        )?;
+        let mut it = out.into_iter();
+        let (d1, d2, d3) = (it.next().unwrap(), it.next().unwrap(), it.next().unwrap());
+        let t_host = Instant::now();
+        accumulate(&mut grads, params.offset(0), &d1);
+        accumulate(&mut grads, params.offset(1), &d2);
+        accumulate(&mut grads, params.offset(2), &d3);
+        timing.host += t_host.elapsed().as_secs_f64();
+    }
+
+    // Gradient all-reduce (θ1-θ7 = 4K²+4K floats, §5.1(3)).
+    timing.add_comm(cfg.cost.all_reduce(p, 4 * grads.len()), 4 * grads.len());
+
+    timing.wall = wall.elapsed().as_secs_f64();
+    Ok(GradOutput { loss, grads, timing })
+}
+
+fn accumulate(grads: &mut [f32], offset: usize, part: &[f32]) {
+    for (g, x) in grads[offset..offset + part.len()].iter_mut().zip(part.iter()) {
+        *g += x;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::fwd::forward;
+    use crate::coordinator::shard::ShardState;
+    use crate::graph::{generators, Partition};
+    use crate::util::rng::Pcg32;
+
+    fn runtime() -> Option<Runtime> {
+        if !std::path::Path::new("artifacts/manifest.tsv").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        Some(Runtime::new("artifacts").unwrap())
+    }
+
+    /// Build a B=8 training batch of random 20-node states.
+    fn batch_shards(part: Partition, b: usize, seed: u64) -> Vec<ShardState> {
+        let mut rng = Pcg32::seeded(seed);
+        let graphs: Vec<_> =
+            (0..b).map(|_| generators::erdos_renyi(20, 0.25, &mut rng)).collect();
+        let grefs: Vec<&crate::graph::Graph> = graphs.iter().collect();
+        let removed: Vec<Vec<bool>> = graphs.iter().map(|g| vec![false; g.n]).collect();
+        let sol = removed.clone();
+        let cand: Vec<Vec<bool>> = graphs
+            .iter()
+            .map(|g| (0..g.n).map(|v| g.degree(v) > 0).collect())
+            .collect();
+        (0..part.p)
+            .map(|i| {
+                ShardState::from_graphs(
+                    part,
+                    i,
+                    &grefs,
+                    &removed.iter().map(|r| r.as_slice()).collect::<Vec<_>>(),
+                    &sol.iter().map(|r| r.as_slice()).collect::<Vec<_>>(),
+                    &cand.iter().map(|r| r.as_slice()).collect::<Vec<_>>(),
+                )
+            })
+            .collect()
+    }
+
+    fn make_targets(b: usize, n: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Pcg32::seeded(seed);
+        let mut onehot = vec![0.0f32; b * n];
+        for g in 0..b {
+            onehot[g * n + rng.gen_range(20)] = 1.0; // actions among real nodes
+        }
+        let targets: Vec<f32> = (0..b).map(|_| rng.next_normal()).collect();
+        (onehot, targets)
+    }
+
+    #[test]
+    fn grad_p_parity() {
+        // Gradients must agree across P — the distributed-backprop invariant.
+        let Some(rt) = runtime() else { return };
+        let params = Params::init(32, &mut Pcg32::seeded(21));
+        let (onehot, targets) = make_targets(8, 24, 22);
+        let mut reference: Option<(f32, Vec<f32>)> = None;
+        for p in [1usize, 2, 3] {
+            let part = Partition::new(24, p);
+            let shards = batch_shards(part, 8, 20);
+            let cfg = EngineCfg::new(p, 2);
+            let fwd = forward(&rt, &cfg, &params, &shards, true, false).unwrap();
+            let out = backward(&rt, &cfg, &params, &shards, fwd.acts.as_ref().unwrap(),
+                               &onehot, &targets).unwrap();
+            match &reference {
+                None => reference = Some((out.loss, out.grads)),
+                Some((l0, g0)) => {
+                    assert!((out.loss - l0).abs() < 1e-4, "loss P={p}: {} vs {l0}", out.loss);
+                    let d = crate::util::max_abs_diff(&out.grads, g0);
+                    assert!(d < 1e-3, "grads P={p} diverge by {d}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn finite_difference_check() {
+        // Directional finite-difference on a few random coordinates.
+        let Some(rt) = runtime() else { return };
+        let mut params = Params::init(32, &mut Pcg32::seeded(31));
+        let part = Partition::new(24, 2);
+        let shards = batch_shards(part, 8, 30);
+        let cfg = EngineCfg::new(2, 2);
+        let (onehot, targets) = make_targets(8, 24, 32);
+
+        let loss_of = |params: &Params| -> f32 {
+            let fwd = forward(&rt, &cfg, params, &shards, true, false).unwrap();
+            let out = backward(&rt, &cfg, params, &shards, fwd.acts.as_ref().unwrap(),
+                               &onehot, &targets).unwrap();
+            out.loss
+        };
+        let fwd = forward(&rt, &cfg, &params, &shards, true, false).unwrap();
+        let out = backward(&rt, &cfg, &params, &shards, fwd.acts.as_ref().unwrap(),
+                           &onehot, &targets).unwrap();
+
+        let mut rng = Pcg32::seeded(33);
+        let eps = 1e-3f32;
+        for _ in 0..6 {
+            let idx = rng.gen_range(params.flat.len());
+            let orig = params.flat[idx];
+            params.flat[idx] = orig + eps;
+            let lp = loss_of(&params);
+            params.flat[idx] = orig - eps;
+            let lm = loss_of(&params);
+            params.flat[idx] = orig;
+            let fd = (lp - lm) / (2.0 * eps);
+            let an = out.grads[idx];
+            let denom = fd.abs().max(an.abs()).max(1e-3);
+            assert!(
+                (fd - an).abs() / denom < 0.08,
+                "idx {idx}: fd {fd} vs analytic {an}"
+            );
+        }
+    }
+
+    #[test]
+    fn training_step_reduces_loss() {
+        let Some(rt) = runtime() else { return };
+        let mut params = Params::init(32, &mut Pcg32::seeded(41));
+        let part = Partition::new(24, 1);
+        let shards = batch_shards(part, 8, 40);
+        let cfg = EngineCfg::new(1, 2);
+        let (onehot, targets) = make_targets(8, 24, 42);
+        let mut adam = crate::model::Adam::new(1e-2, params.flat.len());
+        let mut losses = Vec::new();
+        for _ in 0..20 {
+            let fwd = forward(&rt, &cfg, &params, &shards, true, false).unwrap();
+            let out = backward(&rt, &cfg, &params, &shards, fwd.acts.as_ref().unwrap(),
+                               &onehot, &targets).unwrap();
+            losses.push(out.loss);
+            adam.step(&mut params.flat, &out.grads);
+        }
+        assert!(
+            losses[19] < losses[0] * 0.5,
+            "loss did not halve: {:?} -> {:?}",
+            losses[0],
+            losses[19]
+        );
+    }
+}

@@ -1,0 +1,150 @@
+//! CLI subcommand implementations for the `oggm` binary.
+
+use super::infer::{solve_mvc, InferCfg};
+use super::selection::SelectionPolicy;
+use super::train::{TrainCfg, Trainer};
+use crate::graph::{generators, io as gio, stats, Graph, Partition};
+use crate::model::Params;
+use crate::runtime::{manifest, Runtime};
+use crate::util::cli::Args;
+use crate::util::rng::Pcg32;
+use anyhow::{bail, Context, Result};
+
+fn load_runtime() -> Result<Runtime> {
+    Runtime::new(manifest::default_dir())
+}
+
+/// Resolve a graph from CLI options: `--graph <file>` (edge list) or a
+/// generator spec `--gen er|ba|hk --n <nodes>`.
+fn resolve_graph(args: &Args, rng: &mut Pcg32) -> Result<Graph> {
+    if let Some(path) = args.get("graph") {
+        return gio::read_edge_list(path);
+    }
+    let n = args.get_usize("n", 250);
+    match args.get_or("gen", "er").as_str() {
+        "er" => Ok(generators::erdos_renyi(n, args.get_f64("rho", generators::ER_RHO), rng)),
+        "ba" => Ok(generators::barabasi_albert(n, args.get_usize("d", generators::BA_D), rng)),
+        "hk" => Ok(generators::holme_kim(n, args.get_usize("d", generators::BA_D),
+                                         args.get_f64("triad", 0.25), rng)),
+        other => bail!("unknown generator '{other}' (er|ba|hk)"),
+    }
+}
+
+fn load_or_init_params(args: &Args, rng: &mut Pcg32) -> Result<Params> {
+    match args.get("params") {
+        Some(path) => Params::load(path, 32).context("loading --params"),
+        None => {
+            let init = manifest::default_dir().join("params_init.oggm");
+            if init.exists() {
+                Params::load(init, 32)
+            } else {
+                Ok(Params::init(32, rng))
+            }
+        }
+    }
+}
+
+/// `oggm info`: manifest + platform summary.
+pub fn cmd_info(_args: &Args) -> Result<()> {
+    let rt = load_runtime()?;
+    println!("platform: {}", rt.platform());
+    println!("artifacts: {} entries (K={}, L={})", rt.manifest.entries.len(),
+             rt.manifest.k, rt.manifest.l);
+    let mut shapes = rt.manifest.available_fwd_shapes(1);
+    shapes.dedup();
+    println!("inference buckets (N, NI):");
+    for (n, ni) in shapes {
+        println!("  N={n:>6}  NI={ni:>6}  (P={})", n / ni);
+    }
+    Ok(())
+}
+
+/// `oggm train --n 20 --graphs 8 --episodes 20 --p 2 --tau 4 --out params.oggm`.
+pub fn cmd_train(args: &Args) -> Result<()> {
+    let rt = load_runtime()?;
+    let seed = args.get_u64("seed", 1);
+    let mut rng = Pcg32::new(seed, 77);
+    let n = args.get_usize("n", 20);
+    let count = args.get_usize("graphs", 8);
+    let graphs: Vec<Graph> = (0..count)
+        .map(|_| generators::erdos_renyi(n, args.get_f64("rho", 0.15), &mut rng))
+        .collect();
+    let bucket = Partition::pad_to_bucket(n, 12);
+    let mut cfg = TrainCfg::new(args.get_usize("p", 1), bucket);
+    cfg.seed = seed;
+    cfg.hyper.lr = args.get_f64("lr", 1e-3) as f32;
+    cfg.hyper.grad_iters = args.get_usize("tau", 1);
+    cfg.hyper.batch_size = args.get_usize("batch", 8);
+    let params = load_or_init_params(args, &mut rng)?;
+    let mut trainer = Trainer::new(&rt, cfg, graphs, params)?;
+    let episodes = args.get_usize("episodes", 20);
+    let mut last_loss = None;
+    trainer.run_episodes(episodes, |rec| {
+        if rec.loss.is_some() {
+            last_loss = rec.loss;
+        }
+        if rec.global_step % 10 == 0 {
+            println!(
+                "step {:>5}  episode {:>4}  loss {:>10}  sim {:.4}s",
+                rec.global_step,
+                rec.episode,
+                rec.loss.map(|l| format!("{l:.5}")).unwrap_or_else(|| "-".into()),
+                rec.sim_step_time
+            );
+        }
+    })?;
+    println!("trained {} steps; final loss {:?}", trainer.global_step, last_loss);
+    if let Some(out) = args.get("out") {
+        trainer.params.save(out)?;
+        println!("saved params to {out}");
+    }
+    Ok(())
+}
+
+/// `oggm infer --n 250 --p 2 --multi --params trained.oggm`.
+pub fn cmd_infer(args: &Args) -> Result<()> {
+    let rt = load_runtime()?;
+    let mut rng = Pcg32::new(args.get_u64("seed", 2), 78);
+    let g = resolve_graph(args, &mut rng)?;
+    let params = load_or_init_params(args, &mut rng)?;
+    let p = args.get_usize("p", 1);
+    let bucket = rt.manifest.bucket_for(g.n, p, 1)?;
+    let mut cfg = InferCfg::new(p, 2);
+    if args.has_flag("multi") {
+        cfg.policy = SelectionPolicy::AdaptiveMulti;
+    }
+    let res = solve_mvc(&rt, &cfg, &params, &g, bucket)?;
+    println!(
+        "graph |V|={} |E|={}: cover size {} in {} evaluations ({} selections)",
+        g.n, g.m, res.solution_size, res.evaluations, res.selections
+    );
+    println!(
+        "sim time/eval {:.4}s   wall total {:.2}s   comm {:.1} KiB over {} collectives",
+        res.sim_time_per_eval,
+        res.wall_total,
+        res.timing.comm_bytes as f64 / 1024.0,
+        res.timing.collectives
+    );
+    Ok(())
+}
+
+/// `oggm solve --n 100` — classical baselines on one graph.
+pub fn cmd_solve(args: &Args) -> Result<()> {
+    let mut rng = Pcg32::new(args.get_u64("seed", 3), 79);
+    let g = resolve_graph(args, &mut rng)?;
+    let s = stats::dataset_stats("input", &g);
+    println!("graph |V|={} |E|={} rho={:.4}", s.nodes, s.edges, s.rho);
+    let greedy = crate::solvers::greedy_mvc(&g);
+    println!("greedy cover:   {}", greedy.iter().filter(|&&b| b).count());
+    let approx = crate::solvers::two_approx_mvc(&g);
+    println!("2-approx cover: {}", approx.iter().filter(|&&b| b).count());
+    let budget = std::time::Duration::from_secs_f64(args.get_f64("budget", 10.0));
+    let exact = crate::solvers::exact_mvc(&g, budget);
+    println!(
+        "exact cover:    {} ({}, {} B&B nodes)",
+        exact.size,
+        if exact.optimal { "optimal" } else { "cutoff hit" },
+        exact.nodes_explored
+    );
+    Ok(())
+}

@@ -1,0 +1,112 @@
+//! Lockstep simulation engine primitives.
+//!
+//! The P "GPUs" are P shard contexts driven from one thread in lockstep
+//! (DESIGN.md §3): each stage executes per shard with its compute time
+//! measured individually, and each collective contributes α–β-modeled
+//! communication time. The *simulated parallel* step time is
+//!   max_i(compute_i per stage, summed over stages) + Σ comm costs
+//! which is exactly what the paper's per-step measurements report.
+
+use crate::collective::CostModel;
+
+/// Timing of one distributed operation (a policy evaluation, a training
+/// step, ...), accumulated across stages and collectives.
+#[derive(Debug, Clone, Default)]
+pub struct StepTiming {
+    /// Per-shard accumulated compute seconds (index = shard).
+    pub compute: Vec<f64>,
+    /// Modeled communication seconds (α–β).
+    pub comm: f64,
+    /// Host-side coordinator seconds (state updates, reductions in Rust).
+    pub host: f64,
+    /// Measured wall-clock of the whole lockstep pass.
+    pub wall: f64,
+    /// Bytes moved through collectives.
+    pub comm_bytes: u64,
+    /// Number of collectives.
+    pub collectives: u64,
+}
+
+impl StepTiming {
+    pub fn new(p: usize) -> StepTiming {
+        StepTiming { compute: vec![0.0; p], ..Default::default() }
+    }
+
+    /// Simulated parallel time: slowest shard's compute + modeled comm +
+    /// host time (the coordinator's serial work).
+    pub fn simulated(&self) -> f64 {
+        self.compute.iter().copied().fold(0.0, f64::max) + self.comm + self.host
+    }
+
+    /// Total compute across shards (what a single device would do).
+    pub fn compute_total(&self) -> f64 {
+        self.compute.iter().sum()
+    }
+
+    pub fn add_comm(&mut self, cost: f64, bytes: usize) {
+        self.comm += cost;
+        self.comm_bytes += bytes as u64;
+        self.collectives += 1;
+    }
+
+    pub fn merge(&mut self, other: &StepTiming) {
+        if self.compute.len() < other.compute.len() {
+            self.compute.resize(other.compute.len(), 0.0);
+        }
+        for (a, b) in self.compute.iter_mut().zip(&other.compute) {
+            *a += b;
+        }
+        self.comm += other.comm;
+        self.host += other.host;
+        self.wall += other.wall;
+        self.comm_bytes += other.comm_bytes;
+        self.collectives += other.collectives;
+    }
+}
+
+/// Engine configuration shared by forward/backward orchestrators.
+#[derive(Debug, Clone, Copy)]
+pub struct EngineCfg {
+    /// Number of simulated devices P.
+    pub p: usize,
+    /// Embedding layers L (runtime loop).
+    pub l: usize,
+    /// Communication cost model.
+    pub cost: CostModel,
+}
+
+impl EngineCfg {
+    pub fn new(p: usize, l: usize) -> EngineCfg {
+        EngineCfg { p, l, cost: CostModel::default() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn simulated_takes_max_shard() {
+        let mut t = StepTiming::new(3);
+        t.compute = vec![1.0, 3.0, 2.0];
+        t.comm = 0.5;
+        t.host = 0.25;
+        assert_eq!(t.simulated(), 3.75);
+        assert_eq!(t.compute_total(), 6.0);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = StepTiming::new(2);
+        a.compute = vec![1.0, 2.0];
+        a.add_comm(0.1, 100);
+        let mut b = StepTiming::new(2);
+        b.compute = vec![0.5, 0.5];
+        b.add_comm(0.2, 200);
+        a.merge(&b);
+        assert_eq!(a.compute, vec![1.5, 2.5]);
+        assert_eq!(a.comm_bytes, 300);
+        assert_eq!(a.collectives, 2);
+        assert!((a.comm - 0.3).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,327 @@
+//! Distributed forward pass: Alg. 2 (embedding) + Alg. 3 (action scores)
+//! orchestrated over P shards, with Rust-side collectives between the AOT
+//! stage programs. Mirrors python/tests/dist_sim.py `dist_forward` exactly.
+
+use super::engine::{EngineCfg, StepTiming};
+use super::shard::ShardState;
+use crate::model::Params;
+use crate::runtime::{artifact_name, HostTensor, Input, Runtime};
+use anyhow::Result;
+use std::time::Instant;
+
+/// Saved activations for the backward pass (per shard / per layer).
+#[derive(Debug, Clone)]
+pub struct Activations {
+    /// Stage-1 output pre^i, per shard, each B*K*NI.
+    pub pre: Vec<Vec<f32>>,
+    /// Embedding input per layer per shard (embed_{l-1}), B*K*NI.
+    pub embed_in: Vec<Vec<Vec<f32>>>,
+    /// Local slice of the all-reduced message per layer per shard, B*K*NI.
+    pub nbr_slice: Vec<Vec<Vec<f32>>>,
+    /// Final embedding per shard, B*K*NI.
+    pub embed_final: Vec<Vec<f32>>,
+    /// All-reduced embedding sum, B*K.
+    pub sum_all: Vec<f32>,
+    /// Per-shard local scores, B*NI.
+    pub scores_i: Vec<Vec<f32>>,
+}
+
+/// Forward output: gathered scores plus timing (and activations if saved).
+#[derive(Debug)]
+pub struct FwdOutput {
+    /// Gathered scores, B*N (node-major within each graph).
+    pub scores: Vec<f32>,
+    pub acts: Option<Activations>,
+    pub timing: StepTiming,
+}
+
+struct ThetaViews<'p> {
+    params: &'p Params,
+    dims: Vec<Vec<usize>>,
+}
+
+impl<'p> ThetaViews<'p> {
+    fn new(params: &'p Params) -> ThetaViews<'p> {
+        ThetaViews { params, dims: (0..7).map(|i| params.theta_dims(i)).collect() }
+    }
+    fn t(&self, idx: usize) -> Input<'_> {
+        Input::Host(HostTensor::new(&self.dims[idx], self.params.theta(idx)))
+    }
+}
+
+/// Run the distributed policy evaluation. `save` keeps activations for the
+/// backward pass. When `skip_zero_layer` is set, layer 0's message stage is
+/// elided (its input embedding is the zeros constant of Alg. 2 line 3), a
+/// perf optimization logged in EXPERIMENTS.md §Perf.
+pub fn forward(
+    rt: &Runtime,
+    cfg: &EngineCfg,
+    params: &Params,
+    shards: &[ShardState],
+    save: bool,
+    skip_zero_layer: bool,
+) -> Result<FwdOutput> {
+    let wall = Instant::now();
+    let p = shards.len();
+    assert_eq!(p, cfg.p, "shard count != cfg.p");
+    let (b, n, ni, k) = (shards[0].b, shards[0].n(), shards[0].ni(), params.k);
+    let mut timing = StepTiming::new(p);
+    let th = ThetaViews::new(params);
+
+    let d_s = [b, ni];
+    let d_a = [b, ni, n];
+    let d_e = [b, k, ni];
+    let d_sum = [b, k];
+
+    let exec = |shard: usize, name: &str, inputs: &[Input], timing: &mut StepTiming| {
+        let t0 = Instant::now();
+        let out = rt.execute_in(name, inputs);
+        timing.compute[shard] += t0.elapsed().as_secs_f64();
+        out
+    };
+
+    // §Perf: upload each shard's A once per evaluation; every stage that
+    // reads the adjacency shares the device buffer (h2d dominated the step
+    // before this — see EXPERIMENTS.md §Perf).
+    let mut a_bufs = Vec::with_capacity(p);
+    for (i, sh) in shards.iter().enumerate() {
+        let t0 = Instant::now();
+        a_bufs.push(rt.upload(&d_a, &sh.a)?);
+        timing.compute[i] += t0.elapsed().as_secs_f64();
+    }
+
+    // Stage 1: pre^i (layer-independent terms).
+    let name_pre = artifact_name("embed_pre", b, n, ni, k);
+    let mut pre: Vec<Vec<f32>> = Vec::with_capacity(p);
+    for (i, sh) in shards.iter().enumerate() {
+        let out = exec(
+            i,
+            &name_pre,
+            &[th.t(0), th.t(1), th.t(2),
+              Input::Host(HostTensor::new(&d_s, &sh.s)), Input::Dev(&a_bufs[i])],
+            &mut timing,
+        )?;
+        pre.push(out.into_iter().next().unwrap());
+    }
+
+    // Embedding layers (Alg. 2 lines 9-15).
+    let mut embed: Vec<Vec<f32>> = (0..p).map(|_| vec![0.0f32; b * k * ni]).collect();
+    let mut acts = Activations {
+        pre: if save { pre.clone() } else { Vec::new() },
+        embed_in: Vec::new(),
+        nbr_slice: Vec::new(),
+        embed_final: Vec::new(),
+        sum_all: Vec::new(),
+        scores_i: Vec::new(),
+    };
+    let name_msg = artifact_name("embed_msg", b, n, ni, k);
+    let name_cmb = artifact_name("embed_combine", b, n, ni, k);
+    for layer in 0..cfg.l {
+        if save {
+            acts.embed_in.push(embed.clone());
+        }
+        let zero_input = layer == 0; // embed is the zeros constant
+        let mut nbr_full = vec![0.0f32; b * k * n];
+        if !(zero_input && skip_zero_layer) {
+            // Stage 2 per shard + ALL-REDUCE (line 12).
+            for i in 0..p {
+                let out = exec(
+                    i,
+                    &name_msg,
+                    &[Input::Host(HostTensor::new(&d_e, &embed[i])), Input::Dev(&a_bufs[i])],
+                    &mut timing,
+                )?;
+                let t_host = Instant::now();
+                for (acc, x) in nbr_full.iter_mut().zip(out[0].iter()) {
+                    *acc += x;
+                }
+                timing.host += t_host.elapsed().as_secs_f64();
+            }
+            timing.add_comm(cfg.cost.all_reduce(p, 4 * b * k * n), 4 * b * k * n);
+        }
+        // Local column slice + Stage 3 per shard.
+        let t_host = Instant::now();
+        let mut nbr_slices: Vec<Vec<f32>> = Vec::with_capacity(p);
+        for sh in shards.iter() {
+            let row0 = sh.part.row0(sh.shard);
+            let mut sl = vec![0.0f32; b * k * ni];
+            for g in 0..b {
+                for kk in 0..k {
+                    let src = g * k * n + kk * n + row0;
+                    let dst = g * k * ni + kk * ni;
+                    sl[dst..dst + ni].copy_from_slice(&nbr_full[src..src + ni]);
+                }
+            }
+            nbr_slices.push(sl);
+        }
+        timing.host += t_host.elapsed().as_secs_f64();
+        for i in 0..p {
+            let out = exec(
+                i,
+                &name_cmb,
+                &[
+                    th.t(3),
+                    Input::Host(HostTensor::new(&d_e, &pre[i])),
+                    Input::Host(HostTensor::new(&d_e, &nbr_slices[i])),
+                ],
+                &mut timing,
+            )?;
+            embed[i] = out.into_iter().next().unwrap();
+        }
+        if save {
+            acts.nbr_slice.push(nbr_slices);
+        }
+    }
+
+    // Stage 4 + ALL-REDUCE (Alg. 3 lines 4-5).
+    let name_qsum = artifact_name("q_sum", b, n, ni, k);
+    let mut sum_all = vec![0.0f32; b * k];
+    for i in 0..p {
+        let out =
+            exec(i, &name_qsum, &[Input::Host(HostTensor::new(&d_e, &embed[i]))], &mut timing)?;
+        let t_host = Instant::now();
+        for (acc, x) in sum_all.iter_mut().zip(out[0].iter()) {
+            *acc += x;
+        }
+        timing.host += t_host.elapsed().as_secs_f64();
+    }
+    timing.add_comm(cfg.cost.all_reduce(p, 4 * b * k), 4 * b * k);
+
+    // Stage 5 + ALL-GATHER of scores (Alg. 4 line 6).
+    let name_q = artifact_name("q_scores", b, n, ni, k);
+    let mut scores = vec![0.0f32; b * n];
+    let mut scores_i: Vec<Vec<f32>> = Vec::with_capacity(p);
+    for (i, sh) in shards.iter().enumerate() {
+        let out = exec(
+            i,
+            &name_q,
+            &[
+                th.t(4),
+                th.t(5),
+                th.t(6),
+                Input::Host(HostTensor::new(&d_e, &embed[i])),
+                Input::Host(HostTensor::new(&d_s, &sh.c)),
+                Input::Host(HostTensor::new(&d_sum, &sum_all)),
+            ],
+            &mut timing,
+        )?;
+        let local = out.into_iter().next().unwrap();
+        let t_host = Instant::now();
+        let row0 = sh.part.row0(sh.shard);
+        for g in 0..b {
+            scores[g * n + row0..g * n + row0 + ni].copy_from_slice(&local[g * ni..(g + 1) * ni]);
+        }
+        timing.host += t_host.elapsed().as_secs_f64();
+        scores_i.push(local);
+    }
+    timing.add_comm(cfg.cost.all_gather(p, 4 * b * ni), 4 * b * ni * p);
+
+    timing.wall = wall.elapsed().as_secs_f64();
+    let acts = if save {
+        acts.embed_final = embed;
+        acts.sum_all = sum_all;
+        acts.scores_i = scores_i;
+        Some(acts)
+    } else {
+        None
+    };
+    Ok(FwdOutput { scores, acts, timing })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::shard::shards_for_graph;
+    use crate::graph::{generators, Partition};
+    use crate::util::rng::Pcg32;
+
+    fn runtime() -> Option<Runtime> {
+        if !std::path::Path::new("artifacts/manifest.tsv").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        Some(Runtime::new("artifacts").unwrap())
+    }
+
+    fn fresh_shards(part: Partition, g: &crate::graph::Graph) -> Vec<ShardState> {
+        let removed = vec![false; g.n];
+        let sol = vec![false; g.n];
+        let cand: Vec<bool> = (0..g.n).map(|v| g.degree(v) > 0).collect();
+        shards_for_graph(part, g, &removed, &sol, &cand)
+    }
+
+    #[test]
+    fn forward_p_parity() {
+        // Scores must be identical (within fp) for every device count — the
+        // core spatial-parallelism invariant.
+        let Some(rt) = runtime() else { return };
+        let g = generators::erdos_renyi(20, 0.25, &mut Pcg32::seeded(3));
+        let mut params = Params::zeros(32);
+        let mut rng = Pcg32::seeded(11);
+        params = Params::init(params.k, &mut rng);
+
+        let mut reference: Option<Vec<f32>> = None;
+        for p in [1usize, 2, 3, 4, 6] {
+            let part = Partition::new(24, p);
+            let shards = fresh_shards(part, &g);
+            let cfg = EngineCfg::new(p, 2);
+            let out = forward(&rt, &cfg, &params, &shards, false, false).unwrap();
+            assert_eq!(out.scores.len(), 24);
+            match &reference {
+                None => reference = Some(out.scores),
+                Some(want) => {
+                    let d = crate::util::max_abs_diff(&out.scores, want);
+                    assert!(d < 1e-3, "P={p} diverges by {d}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn skip_zero_layer_is_exact() {
+        let Some(rt) = runtime() else { return };
+        let g = generators::erdos_renyi(20, 0.25, &mut Pcg32::seeded(4));
+        let params = Params::init(32, &mut Pcg32::seeded(12));
+        let part = Partition::new(24, 2);
+        let shards = fresh_shards(part, &g);
+        let cfg = EngineCfg::new(2, 2);
+        let a = forward(&rt, &cfg, &params, &shards, false, false).unwrap();
+        let b = forward(&rt, &cfg, &params, &shards, false, true).unwrap();
+        let d = crate::util::max_abs_diff(&a.scores, &b.scores);
+        assert!(d < 1e-4, "skip-zero-layer changed scores by {d}");
+    }
+
+    #[test]
+    fn timing_is_populated() {
+        let Some(rt) = runtime() else { return };
+        let g = generators::erdos_renyi(20, 0.25, &mut Pcg32::seeded(5));
+        let params = Params::init(32, &mut Pcg32::seeded(13));
+        let part = Partition::new(24, 3);
+        let shards = fresh_shards(part, &g);
+        let cfg = EngineCfg::new(3, 2);
+        let out = forward(&rt, &cfg, &params, &shards, false, false).unwrap();
+        assert!(out.timing.compute.iter().all(|&t| t > 0.0));
+        // L all-reduces + q_sum all-reduce + score all-gather.
+        assert_eq!(out.timing.collectives, 2 + 2);
+        assert!(out.timing.comm > 0.0);
+        assert!(out.timing.wall >= out.timing.compute.iter().sum::<f64>() * 0.5);
+    }
+
+    #[test]
+    fn activations_saved_when_requested() {
+        let Some(rt) = runtime() else { return };
+        let g = generators::erdos_renyi(20, 0.25, &mut Pcg32::seeded(6));
+        let params = Params::init(32, &mut Pcg32::seeded(14));
+        let part = Partition::new(24, 2);
+        let shards = fresh_shards(part, &g);
+        let cfg = EngineCfg::new(2, 2);
+        let out = forward(&rt, &cfg, &params, &shards, true, false).unwrap();
+        let acts = out.acts.unwrap();
+        assert_eq!(acts.pre.len(), 2);
+        assert_eq!(acts.embed_in.len(), 2); // L layers
+        assert_eq!(acts.nbr_slice.len(), 2);
+        assert_eq!(acts.embed_final.len(), 2);
+        assert_eq!(acts.sum_all.len(), 32);
+        assert_eq!(acts.scores_i[0].len(), 12);
+    }
+}

@@ -1,0 +1,188 @@
+//! Parallel RL inference (Alg. 4): distributed policy evaluation per step,
+//! score all-gather, (multi-)node selection, distributed state update —
+//! until the environment reports a complete solution.
+
+use super::engine::{EngineCfg, StepTiming};
+use super::fwd::forward;
+use super::selection::{select_count, top_d, SelectionPolicy};
+use super::shard::{shards_for_graph, ShardState};
+use crate::env::{GraphEnv, MvcEnv};
+use crate::graph::{Graph, Partition};
+use crate::model::Params;
+use crate::runtime::Runtime;
+use anyhow::Result;
+use std::time::Instant;
+
+/// Inference configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct InferCfg {
+    pub engine: EngineCfg,
+    pub policy: SelectionPolicy,
+    /// Elide layer-0 message stage (exact; see fwd.rs).
+    pub skip_zero_layer: bool,
+}
+
+impl InferCfg {
+    pub fn new(p: usize, l: usize) -> InferCfg {
+        InferCfg {
+            engine: EngineCfg::new(p, l),
+            policy: SelectionPolicy::Single,
+            skip_zero_layer: true,
+        }
+    }
+}
+
+/// Result of solving one graph by RL inference.
+#[derive(Debug)]
+pub struct InferResult {
+    /// Solution mask over the (unpadded) nodes.
+    pub solution: Vec<bool>,
+    pub solution_size: usize,
+    /// Policy-model evaluations performed (= steps of Alg. 4).
+    pub evaluations: usize,
+    /// Nodes selected in total (>= evaluations under multi-select).
+    pub selections: usize,
+    /// Per-evaluation timing, accumulated.
+    pub timing: StepTiming,
+    /// Simulated-parallel seconds per evaluation (mean).
+    pub sim_time_per_eval: f64,
+    /// Wall-clock total.
+    pub wall_total: f64,
+}
+
+/// Solve the MVC instance `g` with the pretrained `params` on `p` shards.
+pub fn solve_mvc(
+    rt: &Runtime,
+    cfg: &InferCfg,
+    params: &Params,
+    g: &Graph,
+    bucket_n: usize,
+) -> Result<InferResult> {
+    let wall = Instant::now();
+    let part = Partition::new(bucket_n, cfg.engine.p);
+    let mut env = MvcEnv::new(g.clone());
+    let candidates: Vec<bool> = (0..g.n).map(|v| env.is_candidate(v)).collect();
+    let mut shards: Vec<ShardState> =
+        shards_for_graph(part, g, env.removed_mask(), env.solution_mask(), &candidates);
+
+    let mut timing = StepTiming::new(cfg.engine.p);
+    let mut evaluations = 0usize;
+    let mut selections = 0usize;
+    let mut sim_total = 0.0f64;
+
+    while !env.done() {
+        // Distributed policy evaluation (Alg. 4 lines 4-6).
+        let out = forward(rt, &cfg.engine, params, &shards, false, cfg.skip_zero_layer)?;
+        evaluations += 1;
+        sim_total += out.timing.simulated();
+        timing.merge(&out.timing);
+
+        // Selection (line 7 / §4.5.1).
+        let t_host = Instant::now();
+        let num_cand = (0..g.n).filter(|&v| env.is_candidate(v)).count();
+        let d = select_count(cfg.policy, num_cand, g.n);
+        let picked = top_d(&out.scores[..g.n], |v| env.is_candidate(v), d);
+        assert!(!picked.is_empty(), "no candidates but env not done");
+        // Apply selections (lines 8-10) — candidates can be invalidated by
+        // earlier picks in the same batch, so re-check before stepping.
+        let mut host_t = t_host.elapsed().as_secs_f64();
+        for v in picked {
+            if !env.is_candidate(v) {
+                continue;
+            }
+            let (_r, done) = env.step(v);
+            selections += 1;
+            let t_upd = Instant::now();
+            for sh in shards.iter_mut() {
+                sh.apply_select(0, v);
+            }
+            host_t += t_upd.elapsed().as_secs_f64();
+            if done {
+                break;
+            }
+        }
+        // Refresh candidate masks from the environment (covered-out nodes).
+        let t_upd = Instant::now();
+        for sh in shards.iter_mut() {
+            sh.refresh_candidates(0, |v| env.is_candidate(v));
+        }
+        host_t += t_upd.elapsed().as_secs_f64();
+        timing.host += host_t;
+        sim_total += host_t;
+    }
+
+    assert!(MvcEnv::is_vertex_cover(g, env.solution_mask()), "inference produced a non-cover");
+    Ok(InferResult {
+        solution: env.solution_mask().to_vec(),
+        solution_size: env.solution_size(),
+        evaluations,
+        selections,
+        sim_time_per_eval: if evaluations > 0 { sim_total / evaluations as f64 } else { 0.0 },
+        timing,
+        wall_total: wall.elapsed().as_secs_f64(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::util::rng::Pcg32;
+
+    fn runtime() -> Option<Runtime> {
+        if !std::path::Path::new("artifacts/manifest.tsv").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        Some(Runtime::new("artifacts").unwrap())
+    }
+
+    #[test]
+    fn solves_to_valid_cover_all_p() {
+        let Some(rt) = runtime() else { return };
+        let g = generators::erdos_renyi(20, 0.2, &mut Pcg32::seeded(1));
+        let params = Params::init(32, &mut Pcg32::seeded(2));
+        for p in [1usize, 2, 6] {
+            let cfg = InferCfg::new(p, 2);
+            let res = solve_mvc(&rt, &cfg, &params, &g, 24).unwrap();
+            assert!(res.solution_size > 0);
+            assert_eq!(res.selections, res.solution_size);
+            assert!(res.evaluations <= g.n);
+        }
+    }
+
+    #[test]
+    fn multi_select_uses_fewer_evaluations() {
+        let Some(rt) = runtime() else { return };
+        let g = generators::erdos_renyi(250, 0.15, &mut Pcg32::seeded(3));
+        let params = Params::init(32, &mut Pcg32::seeded(4));
+        let mut single = InferCfg::new(1, 2);
+        single.policy = SelectionPolicy::Single;
+        let mut multi = InferCfg::new(1, 2);
+        multi.policy = SelectionPolicy::AdaptiveMulti;
+        let rs = solve_mvc(&rt, &single, &params, &g, 252).unwrap();
+        let rm = solve_mvc(&rt, &multi, &params, &g, 252).unwrap();
+        assert!(
+            rm.evaluations * 2 <= rs.evaluations,
+            "multi-select did not reduce evals: {} vs {}",
+            rm.evaluations,
+            rs.evaluations
+        );
+        // Quality should be close (paper: ratio ≈ 1.00x at these scales).
+        let ratio = rm.solution_size as f64 / rs.solution_size as f64;
+        assert!(ratio < 1.25, "multi-select ratio degraded: {ratio}");
+    }
+
+    #[test]
+    fn p_parity_of_solutions() {
+        // Same params + graph must give the same cover for any P.
+        let Some(rt) = runtime() else { return };
+        let g = generators::erdos_renyi(20, 0.25, &mut Pcg32::seeded(5));
+        let params = Params::init(32, &mut Pcg32::seeded(6));
+        let base = solve_mvc(&rt, &InferCfg::new(1, 2), &params, &g, 24).unwrap();
+        for p in [2usize, 3, 4] {
+            let r = solve_mvc(&rt, &InferCfg::new(p, 2), &params, &g, 24).unwrap();
+            assert_eq!(r.solution, base.solution, "P={p} picked a different cover");
+        }
+    }
+}

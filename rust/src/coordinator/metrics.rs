@@ -1,0 +1,162 @@
+//! Metrics output: learning-curve records, bench rows, JSON/CSV writers.
+
+use crate::util::json::Json;
+use anyhow::Result;
+use std::io::Write;
+use std::path::Path;
+
+/// Approximation ratio |sol| / |opt| (the paper's quality metric, Fig. 6/8).
+pub fn approx_ratio(solution_size: usize, optimal_size: usize) -> f64 {
+    if optimal_size == 0 {
+        return if solution_size == 0 { 1.0 } else { f64::INFINITY };
+    }
+    solution_size as f64 / optimal_size as f64
+}
+
+/// A learning-curve point (training step → mean test approx ratio).
+#[derive(Debug, Clone)]
+pub struct CurvePoint {
+    pub step: usize,
+    pub ratio: f64,
+    pub loss: Option<f64>,
+}
+
+/// Write curve points as CSV (step,ratio,loss).
+pub fn write_curve_csv(path: impl AsRef<Path>, points: &[CurvePoint]) -> Result<()> {
+    let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(w, "step,ratio,loss")?;
+    for p in points {
+        writeln!(
+            w,
+            "{},{:.6},{}",
+            p.step,
+            p.ratio,
+            p.loss.map(|l| format!("{l:.6}")).unwrap_or_default()
+        )?;
+    }
+    Ok(())
+}
+
+/// A generic bench row: label → named values; renders aligned tables and JSON.
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<(String, Vec<f64>)>,
+}
+
+impl Table {
+    pub fn new(title: &str, columns: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, label: impl Into<String>, values: Vec<f64>) {
+        let label = label.into();
+        assert_eq!(values.len(), self.columns.len(), "row width mismatch in {}", self.title);
+        self.rows.push((label, values));
+    }
+
+    /// Render as an aligned text table (what the bench binaries print).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let label_w = self
+            .rows
+            .iter()
+            .map(|(l, _)| l.len())
+            .chain(std::iter::once(8))
+            .max()
+            .unwrap();
+        out.push_str(&format!("{:label_w$}", ""));
+        for c in &self.columns {
+            out.push_str(&format!(" {c:>14}"));
+        }
+        out.push('\n');
+        for (label, vals) in &self.rows {
+            out.push_str(&format!("{label:label_w$}"));
+            for v in vals {
+                if v.abs() >= 1000.0 || (*v != 0.0 && v.abs() < 0.001) {
+                    out.push_str(&format!(" {v:>14.4e}"));
+                } else {
+                    out.push_str(&format!(" {v:>14.4}"));
+                }
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        let rows: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|(label, vals)| {
+                let mut o = Json::obj().set("label", label.as_str());
+                for (c, v) in self.columns.iter().zip(vals) {
+                    o = o.set(c, *v);
+                }
+                o
+            })
+            .collect();
+        Json::obj().set("title", self.title.as_str()).set("rows", Json::Arr(rows))
+    }
+
+    /// Append the JSON form to a results file (one JSON object per line).
+    pub fn append_jsonl(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+        writeln!(f, "{}", self.to_json().render())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ratio_edge_cases() {
+        assert_eq!(approx_ratio(10, 8), 1.25);
+        assert_eq!(approx_ratio(0, 0), 1.0);
+        assert!(approx_ratio(1, 0).is_infinite());
+    }
+
+    #[test]
+    fn table_renders_and_jsons() {
+        let mut t = Table::new("fig9", &["p1", "p6"]);
+        t.row("n=1488", vec![1.5, 0.3]);
+        let s = t.render();
+        assert!(s.contains("fig9") && s.contains("n=1488") && s.contains("0.3"));
+        let j = t.to_json().render();
+        assert!(j.contains("\"p6\":0.3"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn table_checks_width() {
+        let mut t = Table::new("x", &["a"]);
+        t.row("r", vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn curve_csv_writes() {
+        let dir = std::env::temp_dir().join(format!("oggm_metrics_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("curve.csv");
+        write_curve_csv(
+            &p,
+            &[
+                CurvePoint { step: 0, ratio: 1.5, loss: None },
+                CurvePoint { step: 10, ratio: 1.2, loss: Some(0.5) },
+            ],
+        )
+        .unwrap();
+        let s = std::fs::read_to_string(&p).unwrap();
+        assert!(s.starts_with("step,ratio,loss"));
+        assert!(s.contains("10,1.200000,0.500000"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

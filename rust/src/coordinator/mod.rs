@@ -1,0 +1,19 @@
+//! L3 coordinator: the paper's system contribution.
+//!
+//! Spatial-parallel shard management (§4.1), distributed policy evaluation
+//! orchestration (§4.2), parallel RL inference (Alg. 4) and training
+//! (Alg. 5), the replay-buffer memory optimization, and the adaptive
+//! multiple-node selection + repeated-gradient-iteration optimizations
+//! (§4.5).
+
+pub mod cmd;
+pub mod shard;
+pub mod engine;
+pub mod fwd;
+pub mod bwd;
+pub mod selection;
+pub mod infer;
+pub mod replay;
+pub mod train;
+pub mod metrics;
+pub mod threaded;

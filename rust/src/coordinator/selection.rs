@@ -1,0 +1,124 @@
+//! Node selection policies over gathered scores.
+//!
+//! Implements the paper's argmax selection (Alg. 4 line 7) and the §4.5.1
+//! adaptive multiple-node selection: take the top-d candidates per policy
+//! evaluation with d scheduled 8 → 4 → 2 → 1 as the candidate set shrinks.
+
+/// Selection policy for the inference loop.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SelectionPolicy {
+    /// One node per evaluation (the original Alg. 4).
+    Single,
+    /// Adaptive top-d schedule (§4.5.1).
+    AdaptiveMulti,
+    /// Fixed d per evaluation (ablation).
+    FixedMulti(usize),
+}
+
+/// The §4.5.1 schedule: d as a function of |C| and N.
+pub fn adaptive_d(num_candidates: usize, n: usize) -> usize {
+    if num_candidates > n / 2 {
+        8
+    } else if num_candidates > n / 4 {
+        4
+    } else if num_candidates > n / 8 {
+        2
+    } else {
+        1
+    }
+}
+
+/// Number of nodes to select this evaluation under `policy`.
+pub fn select_count(policy: SelectionPolicy, num_candidates: usize, n: usize) -> usize {
+    let d = match policy {
+        SelectionPolicy::Single => 1,
+        SelectionPolicy::AdaptiveMulti => adaptive_d(num_candidates, n),
+        SelectionPolicy::FixedMulti(d) => d.max(1),
+    };
+    d.min(num_candidates.max(1))
+}
+
+/// Top-d candidate nodes by score. `candidate(v)` gates eligibility;
+/// returns global node indices, highest score first.
+pub fn top_d(scores: &[f32], candidate: impl Fn(usize) -> bool, d: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..scores.len()).filter(|&v| candidate(v)).collect();
+    idx.sort_by(|&a, &b| {
+        scores[b].partial_cmp(&scores[a]).unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b)) // deterministic tie-break
+    });
+    idx.truncate(d);
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn schedule_matches_paper() {
+        let n = 1000;
+        assert_eq!(adaptive_d(501, n), 8);
+        assert_eq!(adaptive_d(500, n), 4);
+        assert_eq!(adaptive_d(251, n), 4);
+        assert_eq!(adaptive_d(250, n), 2);
+        assert_eq!(adaptive_d(126, n), 2);
+        assert_eq!(adaptive_d(125, n), 1);
+        assert_eq!(adaptive_d(1, n), 1);
+    }
+
+    #[test]
+    fn schedule_is_monotone_in_candidates() {
+        let n = 1024;
+        let mut last = usize::MAX;
+        for c in (1..=n).rev() {
+            let d = adaptive_d(c, n);
+            assert!(d <= last, "d grew as |C| shrank");
+            last = d;
+        }
+    }
+
+    #[test]
+    fn select_count_caps_at_candidates() {
+        assert_eq!(select_count(SelectionPolicy::AdaptiveMulti, 3, 4), 3);
+        assert_eq!(select_count(SelectionPolicy::Single, 100, 100), 1);
+        assert_eq!(select_count(SelectionPolicy::FixedMulti(5), 100, 100), 5);
+        assert_eq!(select_count(SelectionPolicy::FixedMulti(0), 100, 100), 1);
+    }
+
+    #[test]
+    fn top_d_orders_and_filters() {
+        let scores = [0.1, 5.0, 3.0, 4.0, -1.0];
+        let picked = top_d(&scores, |v| v != 1, 2);
+        assert_eq!(picked, vec![3, 2]);
+        let all = top_d(&scores, |_| true, 10);
+        assert_eq!(all, vec![1, 3, 2, 0, 4]);
+    }
+
+    #[test]
+    fn top_d_tie_break_is_deterministic() {
+        let scores = [1.0, 1.0, 1.0];
+        assert_eq!(top_d(&scores, |_| true, 2), vec![0, 1]);
+    }
+
+    #[test]
+    fn prop_top_d_returns_candidates_sorted() {
+        prop::check(
+            "top-d-sorted",
+            40,
+            |r| {
+                let n = 5 + r.gen_range(50);
+                let scores: Vec<f32> = (0..n).map(|_| r.next_normal()).collect();
+                let mask: Vec<bool> = (0..n).map(|_| r.next_f32() < 0.6).collect();
+                let d = 1 + r.gen_range(8);
+                (scores, mask, d)
+            },
+            |(scores, mask, d)| {
+                let picked = top_d(scores, |v| mask[v], *d);
+                picked.len() <= *d
+                    && picked.iter().all(|&v| mask[v])
+                    && picked.windows(2).all(|w| scores[w[0]] >= scores[w[1]])
+            },
+        );
+    }
+}

@@ -1,0 +1,256 @@
+//! Per-shard distributed state: the dense compute-path mirror of the
+//! paper's three distributed data structures (§4.1, Fig. 2): sub-adjacency
+//! A^i (B×NI×N), candidate set C^i (B×NI) and partial solution S^i (B×NI).
+//!
+//! The coordinator keeps these in lockstep with the host-side environment:
+//! node selection zeroes the node's local row and its column on every shard
+//! (Fig. 4), sets S, and clears C.
+
+use crate::graph::{Graph, Partition};
+
+/// One shard's tensor state for a batch of B graph instances.
+#[derive(Debug, Clone)]
+pub struct ShardState {
+    pub part: Partition,
+    /// This shard's index (0..P).
+    pub shard: usize,
+    /// Batch size B.
+    pub b: usize,
+    /// Dense sub-adjacency, B × NI × N row-major.
+    pub a: Vec<f32>,
+    /// Partial solution, B × NI.
+    pub s: Vec<f32>,
+    /// Candidate set, B × NI.
+    pub c: Vec<f32>,
+}
+
+impl ShardState {
+    /// Build shard `shard` of the partition for a batch of graphs, given
+    /// per-graph removed masks (residual graph) and solution masks. The
+    /// candidate mask is provided per graph as well (environment-defined).
+    pub fn from_graphs(
+        part: Partition,
+        shard: usize,
+        graphs: &[&Graph],
+        removed: &[&[bool]],
+        solution: &[&[bool]],
+        candidates: &[&[bool]],
+    ) -> ShardState {
+        let b = graphs.len();
+        assert!(b > 0 && removed.len() == b && solution.len() == b && candidates.len() == b);
+        let (n, ni) = (part.n, part.ni());
+        let row0 = part.row0(shard);
+        let mut a = vec![0.0f32; b * ni * n];
+        let mut s = vec![0.0f32; b * ni];
+        let mut c = vec![0.0f32; b * ni];
+        for (g_idx, g) in graphs.iter().enumerate() {
+            assert!(g.n <= n, "graph larger than bucket");
+            g.densify_rows(row0, ni, n, removed[g_idx], &mut a[g_idx * ni * n..(g_idx + 1) * ni * n]);
+            for r in 0..ni {
+                let v = row0 + r;
+                if v < g.n {
+                    s[g_idx * ni + r] = solution[g_idx][v] as u32 as f32;
+                    c[g_idx * ni + r] = candidates[g_idx][v] as u32 as f32;
+                }
+            }
+        }
+        ShardState { part, shard, b, a, s, c }
+    }
+
+    /// Build a shard directly from dense full-graph tensors (B×N×N
+    /// adjacency, B×N solution/candidate vectors). Used by the golden-vector
+    /// integration tests where the state comes from the python build step.
+    pub fn from_dense(
+        part: Partition,
+        shard: usize,
+        b: usize,
+        a_full: &[f32],
+        s_full: &[f32],
+        c_full: &[f32],
+    ) -> ShardState {
+        let (n, ni) = (part.n, part.ni());
+        assert_eq!(a_full.len(), b * n * n);
+        assert_eq!(s_full.len(), b * n);
+        assert_eq!(c_full.len(), b * n);
+        let row0 = part.row0(shard);
+        let mut a = vec![0.0f32; b * ni * n];
+        let mut s = vec![0.0f32; b * ni];
+        let mut c = vec![0.0f32; b * ni];
+        for g in 0..b {
+            for r in 0..ni {
+                let v = row0 + r;
+                a[g * ni * n + r * n..g * ni * n + (r + 1) * n]
+                    .copy_from_slice(&a_full[g * n * n + v * n..g * n * n + (v + 1) * n]);
+                s[g * ni + r] = s_full[g * n + v];
+                c[g * ni + r] = c_full[g * n + v];
+            }
+        }
+        ShardState { part, shard, b, a, s, c }
+    }
+
+    pub fn ni(&self) -> usize {
+        self.part.ni()
+    }
+
+    pub fn n(&self) -> usize {
+        self.part.n
+    }
+
+    /// Whether global node v lives on this shard.
+    pub fn owns(&self, v: usize) -> bool {
+        self.part.owner(v) == self.shard
+    }
+
+    /// Apply "select node v into the solution" for batch element g_idx
+    /// (Fig. 4): zero v's row (if local) and v's column (always), set S,
+    /// clear C for v.
+    pub fn apply_select(&mut self, g_idx: usize, v: usize) {
+        let (n, ni) = (self.n(), self.ni());
+        assert!(g_idx < self.b && v < n);
+        let base_a = g_idx * ni * n;
+        if self.owns(v) {
+            let r = self.part.local(v);
+            self.a[base_a + r * n..base_a + (r + 1) * n].fill(0.0);
+            self.s[g_idx * ni + r] = 1.0;
+            self.c[g_idx * ni + r] = 0.0;
+        }
+        // Zero column v across all local rows.
+        for r in 0..ni {
+            self.a[base_a + r * n + v] = 0.0;
+        }
+    }
+
+    /// Refresh the candidate mask for batch element g_idx from the
+    /// environment's candidate predicate (the host owns candidate logic).
+    pub fn refresh_candidates(&mut self, g_idx: usize, is_candidate: impl Fn(usize) -> bool) {
+        let ni = self.ni();
+        let row0 = self.part.row0(self.shard);
+        for r in 0..ni {
+            let v = row0 + r;
+            self.c[g_idx * ni + r] = if v < self.n() && is_candidate(v) { 1.0 } else { 0.0 };
+        }
+    }
+
+    /// Bytes held by this shard's tensors (memory accounting, §5.2).
+    pub fn bytes(&self) -> usize {
+        4 * (self.a.len() + self.s.len() + self.c.len())
+    }
+}
+
+/// Build all P shards for a single graph instance (inference entry).
+pub fn shards_for_graph(
+    part: Partition,
+    g: &Graph,
+    removed: &[bool],
+    solution: &[bool],
+    candidates: &[bool],
+) -> Vec<ShardState> {
+    (0..part.p)
+        .map(|i| {
+            ShardState::from_graphs(part, i, &[g], &[removed], &[solution], &[candidates])
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Graph;
+
+    fn square() -> Graph {
+        // 0-1-2-3-0 cycle
+        Graph::from_edges(4, &[(0, 1), (1, 2), (2, 3), (0, 3)]).unwrap()
+    }
+
+    fn fresh(part: Partition, g: &Graph) -> Vec<ShardState> {
+        let removed = vec![false; g.n];
+        let sol = vec![false; g.n];
+        let cand: Vec<bool> = (0..g.n).map(|v| g.degree(v) > 0).collect();
+        shards_for_graph(part, g, &removed, &sol, &cand)
+    }
+
+    #[test]
+    fn densified_rows_match_graph() {
+        let g = square();
+        let part = Partition::new(4, 2);
+        let shards = fresh(part, &g);
+        // shard 0 holds rows 0,1: row0 = [0,1,0,1]; row1 = [1,0,1,0]
+        assert_eq!(&shards[0].a[..4], &[0.0, 1.0, 0.0, 1.0]);
+        assert_eq!(&shards[0].a[4..8], &[1.0, 0.0, 1.0, 0.0]);
+        assert_eq!(shards[0].c, vec![1.0, 1.0]);
+        assert_eq!(shards[1].s, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn apply_select_zeroes_row_and_col() {
+        let g = square();
+        let part = Partition::new(4, 2);
+        let mut shards = fresh(part, &g);
+        for sh in shards.iter_mut() {
+            sh.apply_select(0, 1);
+        }
+        // Node 1 lives on shard 0 row 1: row zeroed, S set, C cleared.
+        assert_eq!(&shards[0].a[4..8], &[0.0; 4]);
+        assert_eq!(shards[0].s, vec![0.0, 1.0]);
+        assert_eq!(shards[0].c, vec![1.0, 0.0]);
+        // Column 1 zeroed everywhere.
+        assert_eq!(shards[0].a[1], 0.0);
+        assert_eq!(shards[1].a[1], 0.0);
+        assert_eq!(shards[1].a[4 + 1], 0.0);
+        // Untouched edge (2,3) survives on shard 1.
+        assert_eq!(shards[1].a[3], 1.0); // row for node 2, col 3
+    }
+
+    #[test]
+    fn padding_rows_stay_zero() {
+        let g = Graph::from_edges(2, &[(0, 1)]).unwrap();
+        let part = Partition::new(12, 3); // padded bucket
+        let shards = fresh(part, &g);
+        // shard 0 rows 0..4: nodes 0,1 real; 2,3 padding.
+        assert_eq!(shards[0].c, vec![1.0, 1.0, 0.0, 0.0]);
+        assert!(shards[1].a.iter().all(|&x| x == 0.0));
+        assert!(shards[2].c.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn batch_layout_is_per_graph() {
+        let g1 = square();
+        let g2 = Graph::from_edges(4, &[(0, 2)]).unwrap();
+        let part = Partition::new(4, 1);
+        let removed = vec![false; 4];
+        let sol = vec![false; 4];
+        let cand = vec![true; 4];
+        let sh = ShardState::from_graphs(
+            part,
+            0,
+            &[&g1, &g2],
+            &[&removed, &removed],
+            &[&sol, &sol],
+            &[&cand, &cand],
+        );
+        assert_eq!(sh.b, 2);
+        assert_eq!(sh.a.len(), 2 * 4 * 4);
+        // Graph 2's block has only edge (0,2).
+        let block2 = &sh.a[16..32];
+        assert_eq!(block2.iter().filter(|&&x| x == 1.0).count(), 2);
+        assert_eq!(block2[2], 1.0);
+        assert_eq!(block2[8], 1.0);
+    }
+
+    #[test]
+    fn refresh_candidates_applies_predicate() {
+        let g = square();
+        let part = Partition::new(4, 2);
+        let mut shards = fresh(part, &g);
+        shards[1].refresh_candidates(0, |v| v == 3);
+        assert_eq!(shards[1].c, vec![0.0, 1.0]);
+    }
+
+    #[test]
+    fn bytes_accounting() {
+        let g = square();
+        let part = Partition::new(4, 2);
+        let shards = fresh(part, &g);
+        assert_eq!(shards[0].bytes(), 4 * (8 + 2 + 2));
+    }
+}

@@ -1,0 +1,211 @@
+//! True-concurrency SPMD engine: P OS threads, one per simulated device,
+//! each with its own PJRT runtime (client + executables are thread-local —
+//! the xla crate's handles are not Send), synchronizing through
+//! `collective::Communicator` exactly like ranks over NCCL.
+//!
+//! This is the liveness-mode counterpart of the lockstep engine (DESIGN.md
+//! §3): the lockstep engine measures simulated-parallel time; this engine
+//! demonstrates the same SPMD program running under real concurrency, and
+//! the parity test pins both to identical scores.
+
+use super::shard::ShardState;
+use crate::collective::Communicator;
+use crate::graph::{Graph, Partition};
+use crate::model::Params;
+use crate::runtime::{artifact_name, HostTensor, Input, Runtime};
+use anyhow::{Context, Result};
+use std::path::PathBuf;
+
+/// Inputs each worker thread needs (everything is plain `Send` data).
+#[derive(Clone)]
+struct WorkerJob {
+    dir: PathBuf,
+    part: Partition,
+    rank: usize,
+    l: usize,
+    params: Params,
+    graph: Graph,
+    removed: Vec<bool>,
+    solution: Vec<bool>,
+    candidates: Vec<bool>,
+}
+
+/// One SPMD policy evaluation (Alg. 2 + Alg. 3) executed by a worker rank.
+fn worker_forward(job: &WorkerJob, comm: &Communicator) -> Result<Vec<f32>> {
+    let rt = Runtime::new(&job.dir).context("worker runtime")?;
+    let sh = ShardState::from_graphs(
+        job.part,
+        job.rank,
+        &[&job.graph],
+        &[&job.removed],
+        &[&job.solution],
+        &[&job.candidates],
+    );
+    let (b, n, ni, k) = (1usize, job.part.n, job.part.ni(), job.params.k);
+    let _p = job.part.p;
+    let params = &job.params;
+
+    let d_s = [b, ni];
+    let d_a = [b, ni, n];
+    let d_e = [b, k, ni];
+    let d_sum = [b, k];
+    let d_k = [k];
+    let d_kk = [k, k];
+    let d_2k = [2 * k];
+
+    let a_buf = rt.upload(&d_a, &sh.a)?;
+
+    // Stage 1.
+    let pre = rt
+        .execute_in(
+            &artifact_name("embed_pre", b, n, ni, k),
+            &[
+                Input::Host(HostTensor::new(&d_k, params.theta(0))),
+                Input::Host(HostTensor::new(&d_k, params.theta(1))),
+                Input::Host(HostTensor::new(&d_kk, params.theta(2))),
+                Input::Host(HostTensor::new(&d_s, &sh.s)),
+                Input::Dev(&a_buf),
+            ],
+        )?
+        .remove(0);
+
+    // Embedding layers with real all-reduce between ranks.
+    let mut embed = vec![0.0f32; b * k * ni];
+    let row0 = job.part.row0(job.rank);
+    for layer in 0..job.l {
+        let mut partial = if layer == 0 {
+            vec![0.0f32; b * k * n] // zeros constant — skip the msg stage
+        } else {
+            rt.execute_in(
+                &artifact_name("embed_msg", b, n, ni, k),
+                &[Input::Host(HostTensor::new(&d_e, &embed)), Input::Dev(&a_buf)],
+            )?
+            .remove(0)
+        };
+        comm.all_reduce_sum(&mut partial); // Alg. 2 line 12
+        let mut nbr = vec![0.0f32; b * k * ni];
+        for kk in 0..k {
+            nbr[kk * ni..(kk + 1) * ni]
+                .copy_from_slice(&partial[kk * n + row0..kk * n + row0 + ni]);
+        }
+        embed = rt
+            .execute_in(
+                &artifact_name("embed_combine", b, n, ni, k),
+                &[
+                    Input::Host(HostTensor::new(&d_kk, params.theta(3))),
+                    Input::Host(HostTensor::new(&d_e, &pre)),
+                    Input::Host(HostTensor::new(&d_e, &nbr)),
+                ],
+            )?
+            .remove(0);
+    }
+
+    // Alg. 3: q_sum all-reduce + scores all-gather.
+    let mut sum_all = rt
+        .execute_in(
+            &artifact_name("q_sum", b, n, ni, k),
+            &[Input::Host(HostTensor::new(&d_e, &embed))],
+        )?
+        .remove(0);
+    comm.all_reduce_sum(&mut sum_all);
+    let scores_local = rt
+        .execute_in(
+            &artifact_name("q_scores", b, n, ni, k),
+            &[
+                Input::Host(HostTensor::new(&d_kk, params.theta(4))),
+                Input::Host(HostTensor::new(&d_kk, params.theta(5))),
+                Input::Host(HostTensor::new(&d_2k, params.theta(6))),
+                Input::Host(HostTensor::new(&d_e, &embed)),
+                Input::Host(HostTensor::new(&d_s, &sh.c)),
+                Input::Host(HostTensor::new(&d_sum, &sum_all)),
+            ],
+        )?
+        .remove(0);
+    Ok(comm.all_gather(&scores_local)) // Alg. 4 line 6
+}
+
+/// Evaluate the policy over `p` concurrent worker threads; returns the
+/// gathered scores (identical on every rank; rank 0's copy is returned).
+pub fn forward_threaded(
+    dir: impl Into<PathBuf>,
+    part: Partition,
+    l: usize,
+    params: &Params,
+    graph: &Graph,
+    removed: &[bool],
+    solution: &[bool],
+    candidates: &[bool],
+) -> Result<Vec<f32>> {
+    let dir = dir.into();
+    let comms = Communicator::create(part.p);
+    let mut handles = Vec::new();
+    for (rank, comm) in comms.into_iter().enumerate() {
+        let job = WorkerJob {
+            dir: dir.clone(),
+            part,
+            rank,
+            l,
+            params: params.clone(),
+            graph: graph.clone(),
+            removed: removed.to_vec(),
+            solution: solution.to_vec(),
+            candidates: candidates.to_vec(),
+        };
+        handles.push(std::thread::spawn(move || worker_forward(&job, &comm)));
+    }
+    let mut out = None;
+    for (rank, h) in handles.into_iter().enumerate() {
+        let scores = h.join().expect("worker panicked")?;
+        if rank == 0 {
+            out = Some(scores);
+        }
+    }
+    Ok(out.unwrap())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::EngineCfg;
+    use crate::coordinator::fwd::forward;
+    use crate::coordinator::shard::shards_for_graph;
+    use crate::env::{GraphEnv, MvcEnv};
+    use crate::graph::generators;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn threaded_matches_lockstep() {
+        if !std::path::Path::new("artifacts/manifest.tsv").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let g = generators::erdos_renyi(20, 0.25, &mut Pcg32::seeded(2));
+        let params = Params::init(32, &mut Pcg32::seeded(3));
+        let env = MvcEnv::new(g.clone());
+        let cand: Vec<bool> = (0..g.n).map(|v| env.is_candidate(v)).collect();
+
+        for p in [1usize, 2, 3] {
+            let part = Partition::new(24, p);
+            // Lockstep reference.
+            let rt = Runtime::new("artifacts").unwrap();
+            let shards =
+                shards_for_graph(part, &g, env.removed_mask(), env.solution_mask(), &cand);
+            let cfg = EngineCfg::new(p, 2);
+            let want = forward(&rt, &cfg, &params, &shards, false, true).unwrap().scores;
+            // Real threads.
+            let got = forward_threaded(
+                "artifacts",
+                part,
+                2,
+                &params,
+                &g,
+                env.removed_mask(),
+                env.solution_mask(),
+                &cand,
+            )
+            .unwrap();
+            let d = crate::util::max_abs_diff(&got, &want);
+            assert!(d < 1e-4, "P={p}: threaded diverges from lockstep by {d}");
+        }
+    }
+}

@@ -1,0 +1,383 @@
+//! Parallel RL training (Alg. 5): seed-synchronized ε-greedy episodes over
+//! the training dataset, compressed replay, Tuples2Graphs minibatch
+//! reconstruction, distributed fwd/bwd, gradient all-reduce + replicated
+//! Adam, and the §4.5.2 repeated-gradient-iterations optimization (τ).
+
+use super::bwd::backward;
+use super::engine::{EngineCfg, StepTiming};
+use super::fwd::forward;
+use super::replay::{tuples_to_shards, BitSet, ReplayBuffer, Tuple};
+use super::selection::top_d;
+use super::shard::{shards_for_graph, ShardState};
+use crate::env::{GraphEnv, MvcEnv};
+use crate::graph::{Graph, Partition};
+use crate::model::{Adam, Hyper, Params};
+use crate::runtime::Runtime;
+use anyhow::{ensure, Result};
+
+/// Training configuration.
+#[derive(Debug, Clone)]
+pub struct TrainCfg {
+    pub engine: EngineCfg,
+    pub hyper: Hyper,
+    /// Padded bucket size (>= every training graph's |V|, divisible by 12).
+    pub bucket_n: usize,
+    /// Shared seed (Alg. 5 input SEED).
+    pub seed: u64,
+    /// Elide layer-0 message stage (exact; see fwd.rs).
+    pub skip_zero_layer: bool,
+    /// Resample the minibatch on every gradient iteration instead of
+    /// reusing it (ablation; the paper iterates on one minibatch).
+    pub resample_per_iter: bool,
+}
+
+impl TrainCfg {
+    pub fn new(p: usize, bucket_n: usize) -> TrainCfg {
+        TrainCfg {
+            engine: EngineCfg::new(p, 2),
+            hyper: Hyper::default(),
+            bucket_n,
+            seed: 1,
+            skip_zero_layer: true,
+            resample_per_iter: false,
+        }
+    }
+}
+
+/// Per-step record for learning curves and Fig. 11 timing.
+#[derive(Debug, Clone)]
+pub struct StepRecord {
+    pub episode: usize,
+    pub global_step: usize,
+    /// Mean loss over the τ gradient iterations (None before the replay
+    /// buffer can fill a minibatch).
+    pub loss: Option<f32>,
+    /// Simulated-parallel seconds for the full training step (policy eval +
+    /// state update + τ·(fwd+bwd) + optimizer).
+    pub sim_step_time: f64,
+    pub eval_timing: StepTiming,
+    pub train_timing: StepTiming,
+}
+
+/// The distributed trainer (one instance drives all P simulated devices).
+pub struct Trainer<'r> {
+    pub rt: &'r Runtime,
+    pub cfg: TrainCfg,
+    pub params: Params,
+    pub graphs: Vec<Graph>,
+    adam: Adam,
+    replay: ReplayBuffer,
+    rng: crate::util::rng::Pcg32,
+    pub global_step: usize,
+    episode: usize,
+}
+
+impl<'r> Trainer<'r> {
+    pub fn new(rt: &'r Runtime, cfg: TrainCfg, graphs: Vec<Graph>, params: Params) -> Result<Trainer<'r>> {
+        ensure!(!graphs.is_empty(), "empty training dataset");
+        let max_n = graphs.iter().map(|g| g.n).max().unwrap();
+        ensure!(max_n <= cfg.bucket_n, "graph |V|={max_n} exceeds bucket {}", cfg.bucket_n);
+        // Fail fast if artifacts for the training minibatch are missing.
+        let part = Partition::new(cfg.bucket_n, cfg.engine.p);
+        let name = crate::runtime::artifact_name(
+            "q_scores_bwd",
+            cfg.hyper.batch_size,
+            cfg.bucket_n,
+            part.ni(),
+            params.k,
+        );
+        ensure!(
+            rt.manifest.has(&name),
+            "missing training artifact {name}; add the shape to configs.py"
+        );
+        let adam = Adam::new(cfg.hyper.lr, params.flat.len());
+        let replay = ReplayBuffer::new(cfg.hyper.replay_capacity);
+        let rng = crate::util::rng::Pcg32::seeded(cfg.seed);
+        Ok(Trainer { rt, cfg, params, graphs, adam, replay, rng, global_step: 0, episode: 0 })
+    }
+
+    /// Capture a resumable checkpoint (params + optimizer + counters).
+    pub fn checkpoint(&self) -> crate::model::checkpoint::Checkpoint {
+        crate::model::checkpoint::Checkpoint::capture(
+            &self.params,
+            &self.adam,
+            self.global_step,
+            self.episode,
+        )
+    }
+
+    /// Resume params/optimizer/counters from a checkpoint (the replay
+    /// buffer is rebuilt by subsequent experience, as in the paper).
+    pub fn resume_from(&mut self, ck: &crate::model::checkpoint::Checkpoint) {
+        let (step, episode) = ck.restore(&mut self.params, &mut self.adam);
+        self.global_step = step;
+        self.episode = episode;
+    }
+
+    pub fn replay_len(&self) -> usize {
+        self.replay.len()
+    }
+
+    pub fn replay_bytes(&self) -> usize {
+        self.replay.bytes()
+    }
+
+    /// Run `episodes` episodes, invoking `on_step` after every global step.
+    pub fn run_episodes(
+        &mut self,
+        episodes: usize,
+        mut on_step: impl FnMut(&StepRecord),
+    ) -> Result<()> {
+        for _ in 0..episodes {
+            self.run_episode(None, &mut on_step)?;
+        }
+        Ok(())
+    }
+
+    /// Run exactly `steps` global training steps, crossing episode
+    /// boundaries and stopping mid-episode if needed (used by the Fig. 11
+    /// timing bench, where one big-graph episode is thousands of steps).
+    pub fn run_steps(
+        &mut self,
+        steps: usize,
+        mut on_step: impl FnMut(&StepRecord),
+    ) -> Result<()> {
+        let target = self.global_step + steps;
+        while self.global_step < target {
+            self.run_episode(Some(target), &mut on_step)?;
+        }
+        Ok(())
+    }
+
+    fn run_episode(
+        &mut self,
+        step_limit: Option<usize>,
+        on_step: &mut impl FnMut(&StepRecord),
+    ) -> Result<()> {
+        let gamma = self.cfg.hyper.gamma;
+        let b_train = self.cfg.hyper.batch_size;
+        let part = Partition::new(self.cfg.bucket_n, self.cfg.engine.p);
+
+        // Alg. 5 line 4: same seed => every process picks the same graph.
+        let graph_id = self.rng.gen_range(self.graphs.len()) as u32;
+        let g = self.graphs[graph_id as usize].clone();
+        let mut env = MvcEnv::new(g.clone());
+        let candidates: Vec<bool> = (0..g.n).map(|v| env.is_candidate(v)).collect();
+        let mut shards: Vec<ShardState> =
+            shards_for_graph(part, &g, env.removed_mask(), env.solution_mask(), &candidates);
+
+        // Tuple awaiting its Bellman target (needs next state's max-Q).
+        let mut pending: Option<(BitSet, u32, f32)> = None;
+
+        while !env.done() {
+            if step_limit.is_some_and(|lim| self.global_step >= lim) {
+                // Bounded run: abandon the episode, keeping the pending
+                // experience (reward-only target, like a terminal tuple).
+                if let Some((sol, action, reward)) = pending.take() {
+                    self.replay.push(Tuple { graph_id, solution: sol, action, target: reward });
+                }
+                return Ok(());
+            }
+            let mut sim_time = 0.0f64;
+
+            // --- policy evaluation on the current state (B=1) ---
+            let eval =
+                forward(self.rt, &self.cfg.engine, &self.params, &shards, false, self.cfg.skip_zero_layer)?;
+            sim_time += eval.timing.simulated();
+            let max_q = (0..g.n)
+                .filter(|&v| env.is_candidate(v))
+                .map(|v| eval.scores[v])
+                .fold(f32::NEG_INFINITY, f32::max);
+
+            // Finalize the pending tuple: y = r + γ·max_a' Q(s', a').
+            if let Some((sol, action, reward)) = pending.take() {
+                self.replay.push(Tuple {
+                    graph_id,
+                    solution: sol,
+                    action,
+                    target: reward + gamma * max_q,
+                });
+            }
+
+            // --- ε-greedy action (Alg. 5 line 10) ---
+            let eps = self.cfg.hyper.epsilon(self.global_step);
+            let cands: Vec<usize> = (0..g.n).filter(|&v| env.is_candidate(v)).collect();
+            let v_t = if self.rng.next_f32() < eps {
+                cands[self.rng.gen_range(cands.len())]
+            } else {
+                top_d(&eval.scores[..g.n], |v| env.is_candidate(v), 1)[0]
+            };
+
+            // --- apply action, update distributed state (lines 11-14) ---
+            let snapshot = BitSet::from_bools(env.solution_mask());
+            let (reward, done) = env.step(v_t);
+            for sh in shards.iter_mut() {
+                sh.apply_select(0, v_t);
+                sh.refresh_candidates(0, |v| env.is_candidate(v));
+            }
+            if done {
+                // Terminal tuple: no successor state, y = r.
+                self.replay.push(Tuple {
+                    graph_id,
+                    solution: snapshot,
+                    action: v_t as u32,
+                    target: reward,
+                });
+            } else {
+                pending = Some((snapshot, v_t as u32, reward));
+            }
+
+            // --- distributed training step (lines 17-26) ---
+            let mut loss = None;
+            let mut train_timing = StepTiming::new(self.cfg.engine.p);
+            if self.replay.len() >= b_train {
+                let mut batch = self.replay.sample(b_train, &mut self.rng);
+                let mut losses = 0.0f32;
+                for it in 0..self.cfg.hyper.grad_iters {
+                    if it > 0 && self.cfg.resample_per_iter {
+                        batch = self.replay.sample(b_train, &mut self.rng);
+                    }
+                    let (bshards, onehot, targets) =
+                        tuples_to_shards(part, &self.graphs, &batch);
+                    let fwd = forward(
+                        self.rt,
+                        &self.cfg.engine,
+                        &self.params,
+                        &bshards,
+                        true,
+                        self.cfg.skip_zero_layer,
+                    )?;
+                    let out = backward(
+                        self.rt,
+                        &self.cfg.engine,
+                        &self.params,
+                        &bshards,
+                        fwd.acts.as_ref().unwrap(),
+                        &onehot,
+                        &targets,
+                    )?;
+                    self.adam.step(&mut self.params.flat, &out.grads);
+                    losses += out.loss;
+                    train_timing.merge(&fwd.timing);
+                    train_timing.merge(&out.timing);
+                }
+                sim_time += train_timing.simulated();
+                loss = Some(losses / self.cfg.hyper.grad_iters as f32);
+            }
+
+            self.global_step += 1;
+            on_step(&StepRecord {
+                episode: self.episode,
+                global_step: self.global_step,
+                loss,
+                sim_step_time: sim_time,
+                eval_timing: eval.timing,
+                train_timing,
+            });
+        }
+        self.episode += 1;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::util::rng::Pcg32;
+
+    fn runtime() -> Option<Runtime> {
+        if !std::path::Path::new("artifacts/manifest.tsv").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        Some(Runtime::new("artifacts").unwrap())
+    }
+
+    fn dataset(count: usize, n: usize, seed: u64) -> Vec<Graph> {
+        let mut rng = Pcg32::seeded(seed);
+        (0..count).map(|_| generators::erdos_renyi(n, 0.15, &mut rng)).collect()
+    }
+
+    #[test]
+    fn episodes_fill_replay_and_learn() {
+        let Some(rt) = runtime() else { return };
+        let graphs = dataset(4, 20, 1);
+        let mut cfg = TrainCfg::new(1, 24);
+        cfg.hyper.lr = 1e-3;
+        let params = Params::init(32, &mut Pcg32::seeded(2));
+        let mut tr = Trainer::new(&rt, cfg, graphs, params).unwrap();
+        let mut steps = 0usize;
+        let mut losses: Vec<f32> = Vec::new();
+        tr.run_episodes(6, |rec| {
+            steps += 1;
+            if let Some(l) = rec.loss {
+                losses.push(l);
+            }
+            assert!(rec.sim_step_time > 0.0);
+        })
+        .unwrap();
+        assert!(steps >= 6, "too few steps: {steps}");
+        assert!(tr.replay_len() > 0);
+        assert!(!losses.is_empty(), "training never ran");
+        assert!(losses.iter().all(|l| l.is_finite()));
+    }
+
+    #[test]
+    fn training_is_seed_deterministic() {
+        let Some(rt) = runtime() else { return };
+        let run = |seed: u64| -> Vec<f32> {
+            let graphs = dataset(3, 20, 7);
+            let mut cfg = TrainCfg::new(1, 24);
+            cfg.seed = seed;
+            let params = Params::init(32, &mut Pcg32::seeded(9));
+            let mut tr = Trainer::new(&rt, cfg, graphs, params).unwrap();
+            tr.run_episodes(3, |_| {}).unwrap();
+            tr.params.flat
+        };
+        let a = run(5);
+        let b = run(5);
+        let c = run(6);
+        assert_eq!(a, b, "same seed diverged");
+        assert_ne!(a, c, "different seeds identical");
+    }
+
+    #[test]
+    fn trainer_p_parity() {
+        // End-to-end training determinism across device counts: parameters
+        // after a few episodes must match to fp tolerance.
+        let Some(rt) = runtime() else { return };
+        let run = |p: usize| -> Vec<f32> {
+            let graphs = dataset(3, 20, 11);
+            let mut cfg = TrainCfg::new(p, 24);
+            cfg.seed = 3;
+            let params = Params::init(32, &mut Pcg32::seeded(13));
+            let mut tr = Trainer::new(&rt, cfg, graphs, params).unwrap();
+            tr.run_episodes(2, |_| {}).unwrap();
+            tr.params.flat
+        };
+        let p1 = run(1);
+        let p2 = run(2);
+        let d = crate::util::max_abs_diff(&p1, &p2);
+        assert!(d < 5e-3, "P=1 vs P=2 params diverged by {d}");
+    }
+
+    #[test]
+    fn rejects_missing_artifacts() {
+        let Some(rt) = runtime() else { return };
+        let graphs = dataset(1, 20, 1);
+        let mut cfg = TrainCfg::new(1, 24);
+        cfg.hyper.batch_size = 99; // no artifacts at B=99
+        let params = Params::init(32, &mut Pcg32::seeded(2));
+        assert!(Trainer::new(&rt, cfg, graphs, params).is_err());
+    }
+
+    #[test]
+    fn rejects_oversized_graphs() {
+        let Some(rt) = runtime() else { return };
+        let graphs = dataset(1, 30, 1); // 30 > bucket 24
+        let cfg = TrainCfg::new(1, 24);
+        let params = Params::init(32, &mut Pcg32::seeded(2));
+        assert!(Trainer::new(&rt, cfg, graphs, params).is_err());
+    }
+}

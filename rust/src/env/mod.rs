@@ -1,0 +1,40 @@
+//! Graph learning environments (the paper's Graph Learning Environment
+//! module, Fig. 1): apply an action (node selection), return reward and
+//! termination, maintain the candidate set.
+//!
+//! Environments run on the host (CPU) exactly as in Alg. 5; the per-shard
+//! tensor state (`A^i`, `C^i`, `S^i`) lives in `coordinator::shard` and is
+//! updated in lockstep with the environment.
+
+pub mod mvc;
+pub mod maxcut;
+
+pub use mvc::MvcEnv;
+pub use maxcut::MaxCutEnv;
+
+/// A graph optimization environment over node-selection actions.
+pub trait GraphEnv {
+    /// Number of nodes of the underlying (unpadded) graph.
+    fn num_nodes(&self) -> usize;
+
+    /// Apply action `v` (select node v). Returns (reward, done).
+    fn step(&mut self, v: usize) -> (f32, bool);
+
+    /// Whether node v is currently a valid candidate action.
+    fn is_candidate(&self, v: usize) -> bool;
+
+    /// Current partial solution as a 0/1 vector over nodes.
+    fn solution_mask(&self) -> &[bool];
+
+    /// Nodes no longer participating in the residual graph (for MVC these
+    /// are the selected nodes; their rows/cols are zeroed per Fig. 4).
+    fn removed_mask(&self) -> &[bool];
+
+    /// True when a complete solution has been reached.
+    fn done(&self) -> bool;
+
+    /// Size of the current partial solution.
+    fn solution_size(&self) -> usize {
+        self.solution_mask().iter().filter(|&&b| b).count()
+    }
+}

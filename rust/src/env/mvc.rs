@@ -1,0 +1,168 @@
+//! Minimum Vertex Cover environment (§4, the paper's driving problem).
+//!
+//! State: partial solution S, candidate set C (= unselected nodes that still
+//! have uncovered incident edges), residual adjacency (selected nodes'
+//! rows/columns removed, Fig. 4). Action: select a candidate node. Reward:
+//! -1 per selected node (minimization). Done: every edge covered.
+
+use super::GraphEnv;
+use crate::graph::Graph;
+
+#[derive(Debug, Clone)]
+pub struct MvcEnv {
+    pub graph: Graph,
+    in_solution: Vec<bool>,
+    /// Count of *uncovered* edges incident to each node.
+    uncovered_deg: Vec<usize>,
+    uncovered_total: usize,
+}
+
+impl MvcEnv {
+    pub fn new(graph: Graph) -> MvcEnv {
+        let uncovered_deg: Vec<usize> = (0..graph.n).map(|v| graph.degree(v)).collect();
+        let uncovered_total = graph.m;
+        MvcEnv {
+            in_solution: vec![false; graph.n],
+            uncovered_deg,
+            uncovered_total,
+            graph,
+        }
+    }
+
+    pub fn uncovered_edges(&self) -> usize {
+        self.uncovered_total
+    }
+
+    /// Verify a full cover (every edge has a selected endpoint).
+    pub fn is_vertex_cover(graph: &Graph, sol: &[bool]) -> bool {
+        graph.edges().iter().all(|&(u, v)| sol[u as usize] || sol[v as usize])
+    }
+}
+
+impl GraphEnv for MvcEnv {
+    fn num_nodes(&self) -> usize {
+        self.graph.n
+    }
+
+    fn step(&mut self, v: usize) -> (f32, bool) {
+        assert!(self.is_candidate(v), "node {v} is not a candidate");
+        self.in_solution[v] = true;
+        // Cover v's uncovered incident edges.
+        for &u in self.graph.neighbors(v) {
+            let u = u as usize;
+            if !self.in_solution[u] {
+                self.uncovered_deg[u] -= 1;
+                self.uncovered_total -= 1;
+            }
+        }
+        self.uncovered_deg[v] = 0;
+        (-1.0, self.done())
+    }
+
+    fn is_candidate(&self, v: usize) -> bool {
+        v < self.graph.n && !self.in_solution[v] && self.uncovered_deg[v] > 0
+    }
+
+    fn solution_mask(&self) -> &[bool] {
+        &self.in_solution
+    }
+
+    fn removed_mask(&self) -> &[bool] {
+        // For MVC, selected nodes leave the residual graph (Fig. 4's zeroed
+        // row/column): removed == in_solution.
+        &self.in_solution
+    }
+
+    fn done(&self) -> bool {
+        self.uncovered_total == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::util::prop;
+    use crate::util::rng::Pcg32;
+
+    fn path4() -> Graph {
+        Graph::from_edges(4, &[(0, 1), (1, 2), (2, 3)]).unwrap()
+    }
+
+    #[test]
+    fn rewards_and_done() {
+        let mut env = MvcEnv::new(path4());
+        assert!(!env.done());
+        let (r, done) = env.step(1);
+        assert_eq!(r, -1.0);
+        assert!(!done);
+        assert_eq!(env.uncovered_edges(), 1);
+        let (r, done) = env.step(2);
+        assert_eq!(r, -1.0);
+        assert!(done);
+        assert!(MvcEnv::is_vertex_cover(&env.graph, env.solution_mask()));
+    }
+
+    #[test]
+    fn candidates_shrink() {
+        let mut env = MvcEnv::new(path4());
+        assert!(env.is_candidate(0));
+        env.step(1);
+        // Node 0's only edge is now covered: no longer a candidate.
+        assert!(!env.is_candidate(0));
+        assert!(!env.is_candidate(1)); // in solution
+        assert!(env.is_candidate(2));
+    }
+
+    #[test]
+    #[should_panic(expected = "not a candidate")]
+    fn rejects_non_candidate() {
+        let mut env = MvcEnv::new(path4());
+        env.step(1);
+        env.step(0);
+    }
+
+    #[test]
+    fn isolated_nodes_never_candidates() {
+        let g = Graph::from_edges(3, &[(0, 1)]).unwrap();
+        let env = MvcEnv::new(g);
+        assert!(!env.is_candidate(2));
+    }
+
+    #[test]
+    fn prop_episode_terminates_with_valid_cover() {
+        prop::check_msg(
+            "mvc-episode",
+            25,
+            |r| {
+                let n = 8 + r.gen_range(40);
+                (generators::erdos_renyi(n, 0.2, r), r.next_u64())
+            },
+            |(g, seed)| {
+                let mut rng = Pcg32::seeded(*seed);
+                let mut env = MvcEnv::new(g.clone());
+                let mut steps = 0usize;
+                while !env.done() {
+                    let cands: Vec<usize> =
+                        (0..g.n).filter(|&v| env.is_candidate(v)).collect();
+                    if cands.is_empty() {
+                        return Err("no candidates but not done".into());
+                    }
+                    env.step(cands[rng.gen_range(cands.len())]);
+                    steps += 1;
+                    if steps > g.n {
+                        return Err("episode exceeded |V| steps".into());
+                    }
+                }
+                if !MvcEnv::is_vertex_cover(g, env.solution_mask()) {
+                    return Err("final solution is not a cover".into());
+                }
+                // Reward total == -|S|
+                if env.solution_size() != steps {
+                    return Err("solution size != steps".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}

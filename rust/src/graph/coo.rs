@@ -1,0 +1,130 @@
+//! Sparse COO (coordinate) adjacency storage — the paper's on-GPU format
+//! (§5.2: `torch.sparse.FloatTensor`, 20 bytes per nonzero). Used for
+//! import/export interop and for validating the §5.2 memory model against
+//! actual structures; the compute path densifies per shard (DESIGN.md §3).
+
+use super::csr::Graph;
+
+/// A COO sparse matrix over the directed expansion of an undirected graph
+/// (each undirected edge appears twice, like the paper's adjacency).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Coo {
+    pub n_rows: usize,
+    pub n_cols: usize,
+    pub rows: Vec<u32>,
+    pub cols: Vec<u32>,
+    pub vals: Vec<f32>,
+}
+
+impl Coo {
+    /// Full adjacency of `g` in COO (2m nonzeros).
+    pub fn from_graph(g: &Graph) -> Coo {
+        let mut rows = Vec::with_capacity(2 * g.m);
+        let mut cols = Vec::with_capacity(2 * g.m);
+        for u in 0..g.n {
+            for &v in g.neighbors(u) {
+                rows.push(u as u32);
+                cols.push(v);
+            }
+        }
+        let nnz = rows.len();
+        Coo { n_rows: g.n, n_cols: g.n, rows, cols, vals: vec![1.0; nnz] }
+    }
+
+    /// One shard's row block [row0, row0+rows) as COO (the paper's
+    /// distributed storage unit, Fig. 2).
+    pub fn shard_from_graph(g: &Graph, row0: usize, rows_count: usize) -> Coo {
+        let mut rows = Vec::new();
+        let mut cols = Vec::new();
+        for r in 0..rows_count {
+            let v = row0 + r;
+            if v >= g.n {
+                continue;
+            }
+            for &u in g.neighbors(v) {
+                rows.push(r as u32);
+                cols.push(u);
+            }
+        }
+        let nnz = rows.len();
+        Coo { n_rows: rows_count, n_cols: g.n, rows, cols, vals: vec![1.0; nnz] }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Bytes under the paper's accounting: 20 bytes per nonzero
+    /// (2× int64 index + f32 value, §5.2).
+    pub fn bytes_paper(&self) -> usize {
+        20 * self.nnz()
+    }
+
+    /// Bytes of this implementation (u32 indices + f32 values).
+    pub fn bytes_actual(&self) -> usize {
+        12 * self.nnz()
+    }
+
+    /// Densify into row-major f32 (for parity tests against `densify_rows`).
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.n_rows * self.n_cols];
+        for i in 0..self.nnz() {
+            out[self.rows[i] as usize * self.n_cols + self.cols[i] as usize] = self.vals[i];
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::util::prop;
+
+    #[test]
+    fn full_coo_counts() {
+        let g = Graph::from_edges(3, &[(0, 1), (1, 2)]).unwrap();
+        let c = Coo::from_graph(&g);
+        assert_eq!(c.nnz(), 4);
+        assert_eq!(c.bytes_paper(), 80);
+        assert_eq!(c.bytes_actual(), 48);
+    }
+
+    #[test]
+    fn prop_shard_coo_matches_densify() {
+        prop::check_msg(
+            "coo-shard-vs-dense",
+            15,
+            |r| {
+                let n = 8 + r.gen_range(40);
+                (generators::erdos_renyi(n, 0.25, r), r.gen_range(4) + 1)
+            },
+            |(g, p)| {
+                // Compare COO shard densification against Graph::densify_rows
+                // over p row blocks covering the graph (padded).
+                let padded = g.n.div_ceil(*p) * p;
+                let rows = padded / p;
+                for shard in 0..*p {
+                    let row0 = shard * rows;
+                    let coo = Coo::shard_from_graph(g, row0, rows);
+                    let mut want = vec![0.0f32; rows * g.n];
+                    g.densify_rows(row0, rows, g.n, &vec![false; g.n], &mut want);
+                    if coo.to_dense() != want {
+                        return Err(format!("shard {shard} mismatch"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn shard_blocks_partition_nnz() {
+        let mut rng = crate::util::rng::Pcg32::seeded(5);
+        let g = generators::erdos_renyi(48, 0.2, &mut rng);
+        let full = Coo::from_graph(&g).nnz();
+        let total: usize =
+            (0..4).map(|s| Coo::shard_from_graph(&g, s * 12, 12).nnz()).sum();
+        assert_eq!(total, full);
+    }
+}

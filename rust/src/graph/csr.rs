@@ -1,0 +1,201 @@
+//! Compressed-sparse-row undirected graph.
+
+use anyhow::{bail, Result};
+
+/// An undirected simple graph in CSR form. Each edge {u,v} appears in both
+/// adjacency lists; `m` counts undirected edges once.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Graph {
+    /// Number of nodes.
+    pub n: usize,
+    /// Number of undirected edges.
+    pub m: usize,
+    /// CSR row offsets, length n+1.
+    pub row_ptr: Vec<usize>,
+    /// CSR column indices, length 2m, each row sorted ascending.
+    pub col_idx: Vec<u32>,
+}
+
+impl Graph {
+    /// Build from an undirected edge list; duplicates and self-loops are
+    /// rejected (the paper's graphs are simple).
+    pub fn from_edges(n: usize, edges: &[(u32, u32)]) -> Result<Graph> {
+        let mut adj: Vec<Vec<u32>> = vec![Vec::new(); n];
+        for &(u, v) in edges {
+            let (u, v) = (u as usize, v as usize);
+            if u >= n || v >= n {
+                bail!("edge ({u},{v}) out of range for n={n}");
+            }
+            if u == v {
+                bail!("self-loop at node {u}");
+            }
+            adj[u].push(v as u32);
+            adj[v].push(u as u32);
+        }
+        let mut row_ptr = Vec::with_capacity(n + 1);
+        let mut col_idx = Vec::with_capacity(2 * edges.len());
+        row_ptr.push(0);
+        for list in adj.iter_mut() {
+            list.sort_unstable();
+            if list.windows(2).any(|w| w[0] == w[1]) {
+                bail!("duplicate edge detected");
+            }
+            col_idx.extend_from_slice(list);
+            row_ptr.push(col_idx.len());
+        }
+        Ok(Graph { n, m: edges.len(), row_ptr, col_idx })
+    }
+
+    /// Empty graph on n nodes.
+    pub fn empty(n: usize) -> Graph {
+        Graph { n, m: 0, row_ptr: vec![0; n + 1], col_idx: Vec::new() }
+    }
+
+    /// Neighbors of `v` (sorted).
+    pub fn neighbors(&self, v: usize) -> &[u32] {
+        &self.col_idx[self.row_ptr[v]..self.row_ptr[v + 1]]
+    }
+
+    pub fn degree(&self, v: usize) -> usize {
+        self.row_ptr[v + 1] - self.row_ptr[v]
+    }
+
+    pub fn has_edge(&self, u: usize, v: usize) -> bool {
+        self.neighbors(u).binary_search(&(v as u32)).is_ok()
+    }
+
+    /// Undirected edge list (u < v).
+    pub fn edges(&self) -> Vec<(u32, u32)> {
+        let mut out = Vec::with_capacity(self.m);
+        for u in 0..self.n {
+            for &v in self.neighbors(u) {
+                if (u as u32) < v {
+                    out.push((u as u32, v));
+                }
+            }
+        }
+        out
+    }
+
+    /// Edge probability rho = m / C(n,2) (Table 1's last column).
+    pub fn edge_probability(&self) -> f64 {
+        if self.n < 2 {
+            return 0.0;
+        }
+        self.m as f64 / (self.n as f64 * (self.n as f64 - 1.0) / 2.0)
+    }
+
+    /// Densify rows [row0, row0+rows) into `out` (rows x width, row-major
+    /// f32; `width >= n` allows bucket padding), skipping nodes marked
+    /// removed. This materializes one shard's sub-adjacency-matrix A^i
+    /// (Fig. 2) for the XLA compute path.
+    pub fn densify_rows(
+        &self,
+        row0: usize,
+        rows: usize,
+        width: usize,
+        removed: &[bool],
+        out: &mut [f32],
+    ) {
+        assert!(width >= self.n, "width {width} < graph n {}", self.n);
+        assert_eq!(out.len(), rows * width);
+        assert!(removed.len() >= self.n);
+        out.fill(0.0);
+        for r in 0..rows {
+            let v = row0 + r;
+            if v >= self.n || removed[v] {
+                continue;
+            }
+            let base = r * width;
+            for &u in self.neighbors(v) {
+                if !removed[u as usize] {
+                    out[base + u as usize] = 1.0;
+                }
+            }
+        }
+    }
+
+    /// Total remaining (uncovered) edges given removed-node marks.
+    pub fn remaining_edges(&self, removed: &[bool]) -> usize {
+        let mut cnt = 0;
+        for u in 0..self.n {
+            if removed[u] {
+                continue;
+            }
+            for &v in self.neighbors(u) {
+                if (u as u32) < v && !removed[v as usize] {
+                    cnt += 1;
+                }
+            }
+        }
+        cnt
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn triangle() -> Graph {
+        Graph::from_edges(3, &[(0, 1), (1, 2), (0, 2)]).unwrap()
+    }
+
+    #[test]
+    fn csr_structure() {
+        let g = triangle();
+        assert_eq!(g.n, 3);
+        assert_eq!(g.m, 3);
+        assert_eq!(g.neighbors(0), &[1, 2]);
+        assert_eq!(g.degree(1), 2);
+        assert!(g.has_edge(2, 0));
+        assert!(!g.has_edge(0, 0));
+    }
+
+    #[test]
+    fn rejects_bad_edges() {
+        assert!(Graph::from_edges(2, &[(0, 0)]).is_err());
+        assert!(Graph::from_edges(2, &[(0, 3)]).is_err());
+        assert!(Graph::from_edges(3, &[(0, 1), (1, 0)]).is_err());
+    }
+
+    #[test]
+    fn edges_roundtrip() {
+        let g = triangle();
+        let e = g.edges();
+        let g2 = Graph::from_edges(3, &e).unwrap();
+        assert_eq!(g, g2);
+    }
+
+    #[test]
+    fn densify_respects_removed() {
+        let g = triangle();
+        let mut out = vec![0.0; 2 * 3];
+        g.densify_rows(0, 2, 3, &[false, false, true], &mut out);
+        // row 0 (node 0): neighbor 1 only (2 removed); row 1 (node 1): neighbor 0.
+        assert_eq!(out, vec![0.0, 1.0, 0.0, 1.0, 0.0, 0.0]);
+        g.densify_rows(1, 2, 3, &[false, false, false], &mut out);
+        // rows for nodes 1 and 2
+        assert_eq!(out, vec![1.0, 0.0, 1.0, 1.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn densify_pads_past_n() {
+        let g = triangle();
+        let mut out = vec![7.0; 2 * 3];
+        g.densify_rows(2, 2, 3, &[false; 3], &mut out); // row 3 is padding
+        assert_eq!(&out[3..], &[0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn remaining_edges_counts() {
+        let g = triangle();
+        assert_eq!(g.remaining_edges(&[false; 3]), 3);
+        assert_eq!(g.remaining_edges(&[true, false, false]), 1);
+        assert_eq!(g.remaining_edges(&[true, true, false]), 0);
+    }
+
+    #[test]
+    fn edge_probability_triangle() {
+        assert!((triangle().edge_probability() - 1.0).abs() < 1e-12);
+    }
+}

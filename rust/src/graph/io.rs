@@ -1,0 +1,84 @@
+//! Edge-list I/O (whitespace-separated `u v` pairs, `#` comments), the
+//! format used by NetworkRepository/SNAP dumps, so real datasets can be
+//! dropped in when available.
+
+use super::csr::Graph;
+use anyhow::{Context, Result};
+use std::io::{BufRead, Write};
+use std::path::Path;
+
+/// Read an edge-list file. Node ids may be arbitrary (non-contiguous);
+/// they are compacted to 0..n preserving first-appearance order.
+pub fn read_edge_list(path: impl AsRef<Path>) -> Result<Graph> {
+    let f = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("open {}", path.as_ref().display()))?;
+    let mut ids = std::collections::HashMap::new();
+    let mut edges: Vec<(u32, u32)> = Vec::new();
+    let intern = |ids: &mut std::collections::HashMap<u64, u32>, raw: u64| {
+        let next = ids.len() as u32;
+        *ids.entry(raw).or_insert(next)
+    };
+    for (lineno, line) in std::io::BufReader::new(f).lines().enumerate() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') || t.starts_with('%') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let u: u64 = it.next().context("missing u")?.parse()
+            .with_context(|| format!("line {}", lineno + 1))?;
+        let v: u64 = it.next().context("missing v")?.parse()
+            .with_context(|| format!("line {}", lineno + 1))?;
+        if u == v {
+            continue; // drop self-loops quietly (common in dumps)
+        }
+        let (a, b) = (intern(&mut ids, u), intern(&mut ids, v));
+        let (a, b) = if a < b { (a, b) } else { (b, a) };
+        edges.push((a, b));
+    }
+    edges.sort_unstable();
+    edges.dedup();
+    Graph::from_edges(ids.len(), &edges)
+}
+
+/// Write a graph as an edge list.
+pub fn write_edge_list(path: impl AsRef<Path>, g: &Graph) -> Result<()> {
+    let mut w = std::io::BufWriter::new(std::fs::File::create(path.as_ref())?);
+    writeln!(w, "# oggm edge list: n={} m={}", g.n, g.m)?;
+    for (u, v) in g.edges() {
+        writeln!(w, "{u} {v}")?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join(format!("oggm_io_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("g.txt");
+        let g = generators::erdos_renyi(60, 0.2, &mut Pcg32::seeded(1));
+        write_edge_list(&p, &g).unwrap();
+        let g2 = read_edge_list(&p).unwrap();
+        assert_eq!(g.m, g2.m);
+        assert_eq!(g.n, g2.n);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn handles_comments_dups_and_loops() {
+        let dir = std::env::temp_dir().join(format!("oggm_io2_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("g.txt");
+        std::fs::write(&p, "# c\n10 20\n20 10\n5 5\n10 30\n").unwrap();
+        let g = read_edge_list(&p).unwrap();
+        assert_eq!(g.n, 3);
+        assert_eq!(g.m, 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

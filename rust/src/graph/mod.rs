@@ -1,0 +1,16 @@
+//! Graph substrate: CSR storage, generators, row partitioning, I/O, stats.
+//!
+//! The paper stores adjacency matrices in sparse COO on each GPU (§4.1 /
+//! §5.2); here CSR is the canonical host-side representation (environment
+//! logic, replay reconstruction) and dense per-shard f32 tensors are
+//! materialized for the XLA compute path (DESIGN.md §3).
+
+pub mod csr;
+pub mod coo;
+pub mod generators;
+pub mod partition;
+pub mod io;
+pub mod stats;
+
+pub use csr::Graph;
+pub use partition::Partition;

@@ -1,0 +1,113 @@
+//! Row-block spatial partitioning (§4.1, Fig. 2): node rows are split into
+//! P contiguous blocks of NI = N/P rows; shard i owns rows
+//! [i*NI, (i+1)*NI). Graphs are padded to the bucket size N first.
+
+/// A spatial partition of a padded N-node graph over P shards.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Partition {
+    /// Padded node count (bucket size, divisible by 12).
+    pub n: usize,
+    /// Number of shards ("GPUs").
+    pub p: usize,
+}
+
+impl Partition {
+    pub fn new(n: usize, p: usize) -> Partition {
+        assert!(p >= 1 && n % p == 0, "P={p} must divide padded N={n}");
+        Partition { n, p }
+    }
+
+    /// Shard height NI = N / P.
+    pub fn ni(&self) -> usize {
+        self.n / self.p
+    }
+
+    /// First row owned by shard i.
+    pub fn row0(&self, i: usize) -> usize {
+        assert!(i < self.p);
+        i * self.ni()
+    }
+
+    /// Row range [start, end) owned by shard i.
+    pub fn range(&self, i: usize) -> std::ops::Range<usize> {
+        self.row0(i)..self.row0(i) + self.ni()
+    }
+
+    /// The shard that owns node v.
+    pub fn owner(&self, v: usize) -> usize {
+        assert!(v < self.n);
+        v / self.ni()
+    }
+
+    /// Local row index of node v within its owner shard.
+    pub fn local(&self, v: usize) -> usize {
+        v % self.ni()
+    }
+
+    /// Round `n` up to the next bucket size divisible by `lcm` (12 covers
+    /// P ∈ {1,2,3,4,6}).
+    pub fn pad_to_bucket(n: usize, lcm: usize) -> usize {
+        n.div_ceil(lcm) * lcm
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn ranges_tile_rows() {
+        let part = Partition::new(24, 4);
+        assert_eq!(part.ni(), 6);
+        let mut covered = vec![0u8; 24];
+        for i in 0..4 {
+            for r in part.range(i) {
+                covered[r] += 1;
+            }
+        }
+        assert!(covered.iter().all(|&c| c == 1));
+    }
+
+    #[test]
+    fn owner_and_local_consistent() {
+        let part = Partition::new(24, 3);
+        for v in 0..24 {
+            let i = part.owner(v);
+            assert!(part.range(i).contains(&v));
+            assert_eq!(part.row0(i) + part.local(v), v);
+        }
+    }
+
+    #[test]
+    fn pad_to_bucket_rounds_up() {
+        assert_eq!(Partition::pad_to_bucket(20, 12), 24);
+        assert_eq!(Partition::pad_to_bucket(24, 12), 24);
+        assert_eq!(Partition::pad_to_bucket(250, 12), 252);
+        assert_eq!(Partition::pad_to_bucket(1, 12), 12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_nondivisible() {
+        Partition::new(25, 4);
+    }
+
+    #[test]
+    fn prop_partition_is_exact_cover() {
+        prop::check(
+            "partition-cover",
+            50,
+            |r| {
+                let p = [1, 2, 3, 4, 6][r.gen_range(5)];
+                let n = 12 * (1 + r.gen_range(20));
+                (n, p)
+            },
+            |&(n, p)| {
+                let part = Partition::new(n, p);
+                (0..n).all(|v| part.range(part.owner(v)).contains(&v))
+                    && (0..p).map(|i| part.range(i).len()).sum::<usize>() == n
+            },
+        );
+    }
+}

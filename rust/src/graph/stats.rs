@@ -1,0 +1,82 @@
+//! Dataset statistics (Table 1 rows) and structural measures.
+
+use super::csr::Graph;
+use crate::util::rng::Pcg32;
+
+/// One Table-1 row.
+#[derive(Debug, Clone)]
+pub struct DatasetStats {
+    pub name: String,
+    pub nodes: usize,
+    pub edges: usize,
+    pub rho: f64,
+    pub max_degree: usize,
+    pub mean_degree: f64,
+}
+
+pub fn dataset_stats(name: &str, g: &Graph) -> DatasetStats {
+    DatasetStats {
+        name: name.to_string(),
+        nodes: g.n,
+        edges: g.m,
+        rho: g.edge_probability(),
+        max_degree: (0..g.n).map(|v| g.degree(v)).max().unwrap_or(0),
+        mean_degree: if g.n == 0 { 0.0 } else { 2.0 * g.m as f64 / g.n as f64 },
+    }
+}
+
+/// Sampled average local clustering coefficient (exact when samples >= n).
+pub fn clustering_coefficient(g: &Graph, samples: usize, rng: &mut Pcg32) -> f64 {
+    if g.n == 0 {
+        return 0.0;
+    }
+    let nodes: Vec<usize> = if samples >= g.n {
+        (0..g.n).collect()
+    } else {
+        (0..samples).map(|_| rng.gen_range(g.n)).collect()
+    };
+    let mut total = 0.0;
+    let mut counted = 0usize;
+    for &v in &nodes {
+        let nbrs = g.neighbors(v);
+        let d = nbrs.len();
+        if d < 2 {
+            continue;
+        }
+        let mut tri = 0usize;
+        for i in 0..d {
+            for j in (i + 1)..d {
+                if g.has_edge(nbrs[i] as usize, nbrs[j] as usize) {
+                    tri += 1;
+                }
+            }
+        }
+        total += 2.0 * tri as f64 / (d * (d - 1)) as f64;
+        counted += 1;
+    }
+    if counted == 0 { 0.0 } else { total / counted as f64 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_of_triangle() {
+        let g = Graph::from_edges(3, &[(0, 1), (1, 2), (0, 2)]).unwrap();
+        let s = dataset_stats("tri", &g);
+        assert_eq!(s.nodes, 3);
+        assert_eq!(s.edges, 3);
+        assert_eq!(s.max_degree, 2);
+        assert!((s.rho - 1.0).abs() < 1e-12);
+        let mut rng = Pcg32::seeded(0);
+        assert!((clustering_coefficient(&g, 100, &mut rng) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn clustering_of_star_is_zero() {
+        let g = Graph::from_edges(5, &[(0, 1), (0, 2), (0, 3), (0, 4)]).unwrap();
+        let mut rng = Pcg32::seeded(0);
+        assert_eq!(clustering_coefficient(&g, 100, &mut rng), 0.0);
+    }
+}

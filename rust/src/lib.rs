@@ -1,0 +1,17 @@
+//! OpenGraphGym-MG reproduction library.
+//!
+//! A multi-device graph-RL framework (deep Q-learning + structure2vec) with
+//! spatial parallelism: graph state is row-partitioned across P simulated
+//! devices, the policy model runs as AOT-compiled JAX/Pallas stages on the
+//! PJRT CPU client, and the Rust coordinator owns collectives, the replay
+//! buffer, the training loop, and the inference loop. See DESIGN.md.
+
+pub mod util;
+pub mod graph;
+pub mod env;
+pub mod solvers;
+pub mod model;
+pub mod collective;
+pub mod runtime;
+pub mod coordinator;
+pub mod analysis;

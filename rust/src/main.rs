@@ -1,0 +1,33 @@
+//! `oggm` — OpenGraphGym-MG command-line entry point.
+//!
+//! Subcommands:
+//!   info                         print artifact/manifest + device info
+//!   train  [--opts]              distributed RL training (Alg. 5)
+//!   infer  [--opts]              distributed RL inference (Alg. 4)
+//!   solve  [--opts]              classical baselines (exact / greedy / 2-approx)
+
+use oggm::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let code = match cmd {
+        "info" => oggm::coordinator::cmd::cmd_info(&args),
+        "train" => oggm::coordinator::cmd::cmd_train(&args),
+        "infer" => oggm::coordinator::cmd::cmd_infer(&args),
+        "solve" => oggm::coordinator::cmd::cmd_solve(&args),
+        _ => {
+            eprintln!(
+                "usage: oggm <info|train|infer|solve> [--key value ...]\n\
+                 see README.md for options"
+            );
+            Ok(())
+        }
+    }
+    .map(|_| 0)
+    .unwrap_or_else(|e| {
+        eprintln!("error: {e:#}");
+        1
+    });
+    std::process::exit(code);
+}

@@ -1,0 +1,128 @@
+//! Training checkpoints: parameters + Adam state + step counters in one
+//! OGGM container, so long training runs (paper-scale learning curves) can
+//! be resumed bit-exactly.
+
+use super::adam::Adam;
+use super::params::Params;
+use crate::util::binio::{self, Tensor};
+use anyhow::{bail, Result};
+use std::path::Path;
+
+/// A full training checkpoint.
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    pub params: Params,
+    pub adam_m: Vec<f32>,
+    pub adam_v: Vec<f32>,
+    pub adam_t: u64,
+    pub global_step: u64,
+    pub episode: u64,
+}
+
+impl Checkpoint {
+    pub fn capture(params: &Params, adam: &Adam, global_step: usize, episode: usize) -> Checkpoint {
+        let (m, v, t) = adam.state();
+        Checkpoint {
+            params: params.clone(),
+            adam_m: m.to_vec(),
+            adam_v: v.to_vec(),
+            adam_t: t,
+            global_step: global_step as u64,
+            episode: episode as u64,
+        }
+    }
+
+    /// Restore into an (params, adam) pair; returns (global_step, episode).
+    pub fn restore(&self, params: &mut Params, adam: &mut Adam) -> (usize, usize) {
+        params.flat.copy_from_slice(&self.params.flat);
+        adam.restore(&self.adam_m, &self.adam_v, self.adam_t);
+        (self.global_step as usize, self.episode as usize)
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let meta = vec![self.adam_t as f32, self.global_step as f32, self.episode as f32,
+                        self.params.k as f32];
+        binio::save(
+            path,
+            &[
+                Tensor::new("params", vec![self.params.flat.len()], self.params.flat.clone()),
+                Tensor::new("adam_m", vec![self.adam_m.len()], self.adam_m.clone()),
+                Tensor::new("adam_v", vec![self.adam_v.len()], self.adam_v.clone()),
+                Tensor::new("meta", vec![4], meta),
+            ],
+        )
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
+        let ts = binio::load(path)?;
+        let meta = binio::find(&ts, "meta")?.data.clone();
+        if meta.len() != 4 {
+            bail!("malformed checkpoint meta");
+        }
+        let k = meta[3] as usize;
+        let flat = binio::find(&ts, "params")?.data.clone();
+        if flat.len() != Params::len_for_k(k) {
+            bail!("checkpoint param length mismatch for K={k}");
+        }
+        Ok(Checkpoint {
+            params: Params { k, flat },
+            adam_m: binio::find(&ts, "adam_m")?.data.clone(),
+            adam_v: binio::find(&ts, "adam_v")?.data.clone(),
+            adam_t: meta[0] as u64,
+            global_step: meta[1] as u64,
+            episode: meta[2] as u64,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn roundtrip_resumes_bit_exact() {
+        let dir = std::env::temp_dir().join(format!("oggm_ckpt_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("c.oggm");
+
+        let mut rng = Pcg32::seeded(1);
+        let mut params = Params::init(32, &mut rng);
+        let mut adam = Adam::new(1e-3, params.flat.len());
+        // Take some optimizer steps so m/v/t are non-trivial.
+        for s in 0..5 {
+            let g: Vec<f32> = (0..params.flat.len()).map(|i| ((i + s) as f32).sin()).collect();
+            adam.step(&mut params.flat, &g);
+        }
+        let ck = Checkpoint::capture(&params, &adam, 42, 7);
+        ck.save(&path).unwrap();
+
+        let loaded = Checkpoint::load(&path).unwrap();
+        let mut params2 = Params::zeros(32);
+        let mut adam2 = Adam::new(1e-3, params2.flat.len());
+        let (step, ep) = loaded.restore(&mut params2, &mut adam2);
+        assert_eq!((step, ep), (42, 7));
+        assert_eq!(params2.flat, params.flat);
+
+        // Continuing both optimizers must stay identical.
+        let g = vec![0.25f32; params.flat.len()];
+        adam.step(&mut params.flat, &g);
+        adam2.step(&mut params2.flat, &g);
+        assert_eq!(params.flat, params2.flat);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_corrupt() {
+        let dir = std::env::temp_dir().join(format!("oggm_ckpt2_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.oggm");
+        crate::util::binio::save(
+            &path,
+            &[crate::util::binio::Tensor::new("meta", vec![1], vec![1.0])],
+        )
+        .unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,70 @@
+//! Hyper-parameters (paper §6.1 defaults).
+
+/// RL + model hyper-parameters.
+#[derive(Debug, Clone)]
+pub struct Hyper {
+    /// Embedding dimension K (paper: 32). Must match the AOT artifacts.
+    pub k: usize,
+    /// Number of recurrent embedding layers L (paper: 2).
+    pub l: usize,
+    /// Learning rate η (paper: 1e-5; examples default higher for the
+    /// short CPU-scale runs recorded in EXPERIMENTS.md).
+    pub lr: f32,
+    /// Discount factor γ (paper: 0.9).
+    pub gamma: f32,
+    /// ε-greedy start/end (paper: 0.9 → 0.1, linear decay).
+    pub eps_start: f32,
+    pub eps_end: f32,
+    /// Steps over which ε decays.
+    pub eps_decay_steps: usize,
+    /// Replay buffer capacity R (paper: 50,000).
+    pub replay_capacity: usize,
+    /// Minibatch size B for experience tuples.
+    pub batch_size: usize,
+    /// Gradient-descent iterations τ per training step (§4.5.2; paper
+    /// default 1, best 8).
+    pub grad_iters: usize,
+}
+
+impl Default for Hyper {
+    fn default() -> Hyper {
+        Hyper {
+            k: 32,
+            l: 2,
+            lr: 1e-3,
+            gamma: 0.9,
+            eps_start: 0.9,
+            eps_end: 0.1,
+            eps_decay_steps: 500,
+            replay_capacity: 50_000,
+            batch_size: 8,
+            grad_iters: 1,
+        }
+    }
+}
+
+impl Hyper {
+    /// ε at a given global training step (linear decay).
+    pub fn epsilon(&self, step: usize) -> f32 {
+        if step >= self.eps_decay_steps {
+            return self.eps_end;
+        }
+        let frac = step as f32 / self.eps_decay_steps as f32;
+        self.eps_start + (self.eps_end - self.eps_start) * frac
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn epsilon_decays_linearly() {
+        let h = Hyper::default();
+        assert_eq!(h.epsilon(0), 0.9);
+        assert_eq!(h.epsilon(h.eps_decay_steps), 0.1);
+        assert_eq!(h.epsilon(10 * h.eps_decay_steps), 0.1);
+        let mid = h.epsilon(h.eps_decay_steps / 2);
+        assert!((mid - 0.5).abs() < 1e-3);
+    }
+}

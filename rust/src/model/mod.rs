@@ -1,0 +1,13 @@
+//! Policy-model parameters (θ1..θ7 of Eq. 1/Eq. 2), optimizer, and
+//! hyper-parameters. The flat layout mirrors python/compile/model.py's
+//! `PARAM_ORDER`; artifacts consume the θ tensors as separate PJRT inputs
+//! sliced from the flat vector.
+
+pub mod params;
+pub mod adam;
+pub mod hyper;
+pub mod checkpoint;
+
+pub use adam::Adam;
+pub use hyper::Hyper;
+pub use params::Params;

@@ -1,0 +1,128 @@
+//! Flat parameter vector with named views, matching
+//! python/compile/model.py PARAM_ORDER exactly:
+//!   theta1[K], theta2[K], theta3[K,K], theta4[K,K],
+//!   theta5[K,K], theta6[K,K], theta7[2K]
+
+use crate::util::binio::{self, Tensor};
+use crate::util::rng::Pcg32;
+use anyhow::{bail, Result};
+use std::path::Path;
+
+/// Names in flat order.
+pub const PARAM_NAMES: [&str; 7] =
+    ["theta1", "theta2", "theta3", "theta4", "theta5", "theta6", "theta7"];
+
+/// The policy-model parameters (flat f32 vector + embedding dim K).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Params {
+    pub k: usize,
+    pub flat: Vec<f32>,
+}
+
+impl Params {
+    pub fn len_for_k(k: usize) -> usize {
+        4 * k * k + 4 * k
+    }
+
+    /// Shapes in flat order for embedding dim k.
+    pub fn shapes(k: usize) -> [(usize, Vec<usize>); 7] {
+        [
+            (k, vec![k]),
+            (k, vec![k]),
+            (k * k, vec![k, k]),
+            (k * k, vec![k, k]),
+            (k * k, vec![k, k]),
+            (k * k, vec![k, k]),
+            (2 * k, vec![2 * k]),
+        ]
+    }
+
+    pub fn zeros(k: usize) -> Params {
+        Params { k, flat: vec![0.0; Self::len_for_k(k)] }
+    }
+
+    /// Gaussian init (scale 0.1, the reference model's init).
+    pub fn init(k: usize, rng: &mut Pcg32) -> Params {
+        let mut p = Params::zeros(k);
+        for x in p.flat.iter_mut() {
+            *x = 0.1 * rng.next_normal();
+        }
+        p
+    }
+
+    /// Byte offset (in f32 elements) of the i-th θ tensor.
+    pub fn offset(&self, idx: usize) -> usize {
+        Self::shapes(self.k)[..idx].iter().map(|(n, _)| n).sum()
+    }
+
+    /// Slice of the i-th θ tensor.
+    pub fn theta(&self, idx: usize) -> &[f32] {
+        let off = self.offset(idx);
+        let len = Self::shapes(self.k)[idx].0;
+        &self.flat[off..off + len]
+    }
+
+    /// Dims of the i-th θ tensor.
+    pub fn theta_dims(&self, idx: usize) -> Vec<usize> {
+        Self::shapes(self.k)[idx].1.clone()
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        binio::save(path, &[Tensor::new("params", vec![self.flat.len()], self.flat.clone())])
+    }
+
+    pub fn load(path: impl AsRef<Path>, k: usize) -> Result<Params> {
+        let tensors = binio::load(path)?;
+        let t = binio::find(&tensors, "params")?;
+        if t.data.len() != Self::len_for_k(k) {
+            bail!("param length {} != expected {} for K={k}", t.data.len(), Self::len_for_k(k));
+        }
+        Ok(Params { k, flat: t.data.clone() })
+    }
+
+    /// L2 norm (debug/metrics).
+    pub fn norm(&self) -> f32 {
+        self.flat.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_matches_python() {
+        let k = 32;
+        let p = Params::zeros(k);
+        assert_eq!(p.flat.len(), 4224);
+        assert_eq!(p.offset(0), 0);
+        assert_eq!(p.offset(1), 32);
+        assert_eq!(p.offset(2), 64);
+        assert_eq!(p.offset(3), 64 + 1024);
+        assert_eq!(p.offset(6), 64 + 4 * 1024);
+        assert_eq!(p.theta(6).len(), 64);
+        assert_eq!(p.theta_dims(2), vec![32, 32]);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("oggm_params_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("p.oggm");
+        let mut rng = Pcg32::seeded(1);
+        let p = Params::init(32, &mut rng);
+        p.save(&path).unwrap();
+        let q = Params::load(&path, 32).unwrap();
+        assert_eq!(p, q);
+        assert!(Params::load(&path, 16).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn init_is_scaled_gaussian() {
+        let mut rng = Pcg32::seeded(2);
+        let p = Params::init(32, &mut rng);
+        let var = p.flat.iter().map(|x| x * x).sum::<f32>() / p.flat.len() as f32;
+        assert!((var.sqrt() - 0.1).abs() < 0.01, "std {}", var.sqrt());
+    }
+}

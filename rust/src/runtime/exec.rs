@@ -1,0 +1,294 @@
+//! Stage executor: lazy-compiles HLO-text artifacts on the PJRT CPU client
+//! and runs them with f32 host tensors.
+//!
+//! Adapted from /opt/xla-example/load_hlo: HLO *text* → HloModuleProto →
+//! XlaComputation → PjRtLoadedExecutable; outputs come back as a 1-tuple
+//! (the AOT step lowers with return_tuple=True).
+
+use super::manifest::{ArtifactInfo, Manifest};
+use anyhow::{bail, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+use std::time::{Duration, Instant};
+
+/// A borrowed f32 host tensor (shape + row-major data).
+#[derive(Debug, Clone, Copy)]
+pub struct HostTensor<'a> {
+    pub dims: &'a [usize],
+    pub data: &'a [f32],
+}
+
+impl<'a> HostTensor<'a> {
+    pub fn new(dims: &'a [usize], data: &'a [f32]) -> HostTensor<'a> {
+        assert_eq!(
+            dims.iter().product::<usize>(),
+            data.len(),
+            "HostTensor dims {dims:?} do not match data length {}",
+            data.len()
+        );
+        HostTensor { dims, data }
+    }
+
+    fn to_buffer(self, client: &xla::PjRtClient) -> Result<xla::PjRtBuffer> {
+        // Direct host->device-buffer upload. Deliberately NOT the
+        // Literal-based `execute` path: the vendored crate's C glue leaks
+        // every input buffer it creates from a literal (xla_rs.cc
+        // `execute`: `buffer.release()` with no delete after Execute), and
+        // the literal adds a second host-side copy. `execute_b` with
+        // Rust-owned PjRtBuffers fixes both (see EXPERIMENTS.md §Perf).
+        Ok(client.buffer_from_host_buffer::<f32>(self.data, self.dims, None)?)
+    }
+}
+
+/// A stage input: host data (uploaded on the fly) or an already-uploaded
+/// device buffer (the §Perf A-reuse optimization — upload the big adjacency
+/// shard once per step and share it across every stage that reads it).
+pub enum Input<'a> {
+    Host(HostTensor<'a>),
+    Dev(&'a xla::PjRtBuffer),
+}
+
+/// Cumulative execution counters (perf accounting).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ExecStats {
+    pub executions: u64,
+    pub compile_time: Duration,
+    pub exec_time: Duration,
+    pub h2d_time: Duration,
+    pub d2h_time: Duration,
+}
+
+/// The PJRT stage runtime. Single-threaded by design (the lockstep engine
+/// drives all shards from one thread; see DESIGN.md §3).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    exes: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    stats: RefCell<ExecStats>,
+}
+
+impl Runtime {
+    /// Create a CPU-PJRT runtime over the artifact directory.
+    pub fn new(dir: impl AsRef<Path>) -> Result<Runtime> {
+        // Quiet XLA's client-lifecycle info logs unless the user opted in.
+        if std::env::var_os("TF_CPP_MIN_LOG_LEVEL").is_none() {
+            std::env::set_var("TF_CPP_MIN_LOG_LEVEL", "1");
+        }
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime {
+            client,
+            manifest,
+            exes: RefCell::new(HashMap::new()),
+            stats: RefCell::new(ExecStats::default()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn stats(&self) -> ExecStats {
+        *self.stats.borrow()
+    }
+
+    pub fn reset_stats(&self) {
+        *self.stats.borrow_mut() = ExecStats::default();
+    }
+
+    /// Number of executables compiled so far.
+    pub fn compiled_count(&self) -> usize {
+        self.exes.borrow().len()
+    }
+
+    fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.exes.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let info = self.manifest.get(name)?;
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&info.file)
+            .with_context(|| format!("parse HLO text {}", info.file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("XLA compile of {name}"))?,
+        );
+        self.stats.borrow_mut().compile_time += t0.elapsed();
+        self.exes.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Pre-compile an artifact (warmup so benches don't measure compiles).
+    pub fn warm(&self, name: &str) -> Result<()> {
+        self.executable(name).map(|_| ())
+    }
+
+    /// Upload a host tensor to a reusable device buffer.
+    pub fn upload(&self, dims: &[usize], data: &[f32]) -> Result<xla::PjRtBuffer> {
+        let t0 = Instant::now();
+        let buf = HostTensor::new(dims, data).to_buffer(&self.client)?;
+        self.stats.borrow_mut().h2d_time += t0.elapsed();
+        Ok(buf)
+    }
+
+    /// Execute artifact `name` with the given inputs; returns one Vec<f32>
+    /// per output (the AOT tuple is flattened).
+    pub fn execute(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<Vec<f32>>> {
+        let mixed: Vec<Input> = inputs.iter().map(|&t| Input::Host(t)).collect();
+        self.execute_in(name, &mixed)
+    }
+
+    /// Execute with a mix of host inputs and pre-uploaded device buffers.
+    pub fn execute_in(&self, name: &str, inputs: &[Input]) -> Result<Vec<Vec<f32>>> {
+        let info: ArtifactInfo = self.manifest.get(name)?.clone();
+        let exe = self.executable(name)?;
+
+        let t_h2d = Instant::now();
+        // Owned temporaries for host inputs; `refs` borrows both kinds.
+        let mut owned: Vec<xla::PjRtBuffer> = Vec::new();
+        let mut refs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(inputs.len());
+        for (slot, input) in inputs.iter().enumerate() {
+            match input {
+                Input::Host(t) => {
+                    owned.push(
+                        t.to_buffer(&self.client)
+                            .with_context(|| format!("input {slot} of {name}"))?,
+                    );
+                }
+                Input::Dev(_) => {}
+            }
+        }
+        let mut owned_it = owned.iter();
+        for input in inputs {
+            match input {
+                Input::Host(_) => refs.push(owned_it.next().unwrap()),
+                Input::Dev(b) => refs.push(b),
+            }
+        }
+        let h2d = t_h2d.elapsed();
+
+        let t_exec = Instant::now();
+        let result = exe
+            .execute_b::<&xla::PjRtBuffer>(&refs)
+            .with_context(|| format!("execute {name}"))?;
+        let exec = t_exec.elapsed();
+
+        let t_d2h = Instant::now();
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetch result of {name}"))?;
+        let parts = tuple.to_tuple().with_context(|| format!("untuple result of {name}"))?;
+        if parts.len() != info.num_outputs {
+            bail!(
+                "{name}: expected {} outputs, got {}",
+                info.num_outputs,
+                parts.len()
+            );
+        }
+        let out: Vec<Vec<f32>> =
+            parts.into_iter().map(|l| l.to_vec::<f32>()).collect::<xla::Result<_>>()?;
+        let d2h = t_d2h.elapsed();
+
+        let mut st = self.stats.borrow_mut();
+        st.executions += 1;
+        st.exec_time += exec;
+        st.h2d_time += h2d;
+        st.d2h_time += d2h;
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact_name;
+
+    fn runtime() -> Option<Runtime> {
+        if !std::path::Path::new("artifacts/manifest.tsv").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        Some(Runtime::new("artifacts").unwrap())
+    }
+
+    #[test]
+    fn host_tensor_validates_shape() {
+        let data = vec![0.0f32; 6];
+        let _ = HostTensor::new(&[2, 3], &data);
+        let r = std::panic::catch_unwind(|| {
+            let d = vec![0.0f32; 5];
+            let _ = HostTensor::new(&[2, 3], &d);
+        });
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn q_sum_stage_executes() {
+        let Some(rt) = runtime() else { return };
+        // q_sum: embed [B,K,NI] -> [B,K] (row sums over NI).
+        let (b, k, ni) = (1usize, 32usize, 12usize);
+        let name = artifact_name("q_sum", b, 24, ni, k);
+        let embed: Vec<f32> = (0..b * k * ni).map(|i| (i % 5) as f32).collect();
+        let out = rt.execute(&name, &[HostTensor::new(&[b, k, ni], &embed)]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].len(), b * k);
+        for kk in 0..k {
+            let want: f32 = (0..ni).map(|j| ((kk * ni + j) % 5) as f32).sum();
+            assert!((out[0][kk] - want).abs() < 1e-4, "k={kk}");
+        }
+        assert_eq!(rt.stats().executions, 1);
+    }
+
+    #[test]
+    fn embed_msg_matches_manual_bmm() {
+        let Some(rt) = runtime() else { return };
+        let (b, k, ni, n) = (1usize, 32usize, 12usize, 24usize);
+        let name = artifact_name("embed_msg", b, n, ni, k);
+        let mut rng = crate::util::rng::Pcg32::seeded(5);
+        let embed: Vec<f32> = (0..b * k * ni).map(|_| rng.next_normal()).collect();
+        let a: Vec<f32> = (0..b * ni * n).map(|_| (rng.next_f32() < 0.2) as u32 as f32).collect();
+        let out = rt
+            .execute(
+                &name,
+                &[HostTensor::new(&[b, k, ni], &embed), HostTensor::new(&[b, ni, n], &a)],
+            )
+            .unwrap();
+        // manual bmm
+        let mut want = vec![0.0f32; b * k * n];
+        for kk in 0..k {
+            for j in 0..ni {
+                let e = embed[kk * ni + j];
+                if e == 0.0 {
+                    continue;
+                }
+                for nn in 0..n {
+                    want[kk * n + nn] += e * a[j * n + nn];
+                }
+            }
+        }
+        let diff = crate::util::max_abs_diff(&out[0], &want);
+        assert!(diff < 1e-3, "diff {diff}");
+    }
+
+    #[test]
+    fn missing_artifact_is_informative() {
+        let Some(rt) = runtime() else { return };
+        let err = rt.execute("embed_msg_b9_n24_ni24_k32", &[]).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("configs.py"), "{msg}");
+    }
+
+    #[test]
+    fn executable_cache_reuses() {
+        let Some(rt) = runtime() else { return };
+        let name = artifact_name("q_sum", 1, 24, 24, 32);
+        rt.warm(&name).unwrap();
+        let c1 = rt.compiled_count();
+        rt.warm(&name).unwrap();
+        assert_eq!(rt.compiled_count(), c1);
+    }
+}

@@ -1,0 +1,173 @@
+//! Artifact manifest parsing (artifacts/manifest.tsv).
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// One manifest row: a compiled stage at a concrete shape.
+#[derive(Debug, Clone)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub stage: String,
+    pub b: usize,
+    pub n: usize,
+    pub ni: usize,
+    pub k: usize,
+    pub num_outputs: usize,
+    pub file: PathBuf,
+}
+
+/// The parsed artifact set.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub k: usize,
+    pub l: usize,
+    pub entries: HashMap<String, ArtifactInfo>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.tsv`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {} (run `make artifacts` first)", path.display()))?;
+        let mut entries = HashMap::new();
+        let (mut k, mut l) = (32usize, 2usize);
+        for (lineno, line) in text.lines().enumerate() {
+            if line.starts_with('#') {
+                // Header carries `k=..` / `l=..` metadata fields.
+                for tok in line.trim_start_matches('#').split_whitespace() {
+                    for part in tok.split('\t') {
+                        if let Some(v) = part.strip_prefix("k=") {
+                            k = v.parse().context("bad k in manifest header")?;
+                        } else if let Some(v) = part.strip_prefix("l=") {
+                            l = v.parse().context("bad l in manifest header")?;
+                        }
+                    }
+                }
+                continue;
+            }
+            if line.trim().is_empty() {
+                continue;
+            }
+            let cols: Vec<&str> = line.split('\t').collect();
+            if cols.len() != 8 {
+                bail!("manifest line {} has {} columns", lineno + 1, cols.len());
+            }
+            let info = ArtifactInfo {
+                name: cols[0].to_string(),
+                stage: cols[1].to_string(),
+                b: cols[2].parse()?,
+                n: cols[3].parse()?,
+                ni: cols[4].parse()?,
+                k: cols[5].parse()?,
+                num_outputs: cols[6].parse()?,
+                file: dir.join(cols[7]),
+            };
+            entries.insert(info.name.clone(), info);
+        }
+        if entries.is_empty() {
+            bail!("manifest {} contains no entries", path.display());
+        }
+        Ok(Manifest { dir, k, l, entries })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactInfo> {
+        self.entries.get(name).with_context(|| {
+            format!(
+                "artifact '{name}' not in manifest ({} entries); \
+                 add its shape to python/compile/configs.py and re-run `make artifacts`",
+                self.entries.len()
+            )
+        })
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.entries.contains_key(name)
+    }
+
+    /// Smallest compiled bucket N that fits a graph of `n` nodes with `p`
+    /// shards at batch size `b` (inference stages).
+    pub fn bucket_for(&self, n: usize, p: usize, b: usize) -> Result<usize> {
+        self.entries
+            .values()
+            .filter(|e| {
+                e.stage == "q_scores" && e.b == b && e.n >= n && e.n % p == 0 && e.ni == e.n / p
+            })
+            .map(|e| e.n)
+            .min()
+            .with_context(|| {
+                format!(
+                    "no compiled bucket fits n={n}, P={p}, B={b}; \
+                     add one to python/compile/configs.py and re-run `make artifacts`"
+                )
+            })
+    }
+
+    /// All (n, ni) fwd shard configs available for batch size b.
+    pub fn available_fwd_shapes(&self, b: usize) -> Vec<(usize, usize)> {
+        let mut v: Vec<(usize, usize)> = self
+            .entries
+            .values()
+            .filter(|e| e.stage == "q_scores" && e.b == b)
+            .map(|e| (e.n, e.ni))
+            .collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+/// Default artifacts directory: `$OGGM_ARTIFACTS` or `./artifacts`.
+pub fn default_dir() -> PathBuf {
+    std::env::var_os("OGGM_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_manifest_format() {
+        let dir = std::env::temp_dir().join(format!("oggm_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.tsv"),
+            "# oggm artifact manifest\tk=32\tl=2\n\
+             # name\tstage\tb\tn\tni\tk\tnum_outputs\tfile\n\
+             q_scores_b1_n24_ni12_k32\tq_scores\t1\t24\t12\t32\t1\tq.hlo.txt\n",
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.k, 32);
+        assert_eq!(m.l, 2);
+        let e = m.get("q_scores_b1_n24_ni12_k32").unwrap();
+        assert_eq!(e.ni, 12);
+        assert_eq!(e.num_outputs, 1);
+        assert!(m.get("nope").is_err());
+        assert_eq!(m.available_fwd_shapes(1), vec![(24, 12)]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn real_manifest_if_built() {
+        if !std::path::Path::new("artifacts/manifest.tsv").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load("artifacts").unwrap();
+        assert_eq!(m.k, 32);
+        assert!(m.entries.len() > 200, "expected full artifact set");
+        // Spot-check a few names the coordinator depends on.
+        for name in [
+            "embed_pre_b1_n24_ni24_k32",
+            "embed_msg_b1_n1488_ni248_k32",
+            "q_scores_bwd_b8_n24_ni12_k32",
+        ] {
+            assert!(m.has(name), "{name} missing");
+        }
+    }
+}

