@@ -20,6 +20,12 @@ P_SET = (1, 2, 3, 4, 6)   # device counts exercised (one Summit node = 6 GPUs)
 FWD_STAGES = ("embed_pre", "embed_msg", "embed_combine", "q_sum", "q_scores")
 BWD_STAGES = ("embed_pre_bwd", "embed_msg_bwd", "embed_combine_bwd", "q_scores_bwd")
 
+# Small/medium (bucket, device-set) pairs shared by fwd_shapes() and
+# batch_shapes(): the learning-curve buckets (Fig. 6/8) where graph-level
+# batching is the utilization lever. Keeping one list prevents the B=1 and
+# B>1 artifact sets from drifting apart.
+BATCHED_BUCKETS = ((24, P_SET), (252, (1, 2, 3)))
+
 
 @dataclass(frozen=True, order=True)
 class StageShape:
@@ -46,8 +52,8 @@ def fwd_shapes() -> list:
     """Inference / policy-evaluation shapes (B = 1)."""
     shapes = []
     # Learning-curve graphs (Fig. 6/8): train |V|=20 -> 24, test |V|=250 -> 252.
-    shapes += _shards(24, P_SET)
-    shapes += _shards(252, (1, 2, 3))
+    for n, ps in BATCHED_BUCKETS:
+        shapes += _shards(n, ps)
     # Multi-node-selection study (Fig. 7): 750/1500/3000-node graphs, P = 1.
     shapes += _shards(756, (1,))
     shapes += _shards(1500, (1,))
@@ -60,6 +66,24 @@ def fwd_shapes() -> list:
     shapes += _shards(2028, P_SET)
     shapes += _shards(2352, P_SET)
     shapes += _shards(2628, P_SET)
+    return shapes
+
+
+def batch_shapes() -> list:
+    """Graph-level batched inference shapes (fwd stages only).
+
+    The Rust batch engine (rust/src/batch/) packs B graphs block-diagonally
+    and steps them through one shared forward pass; eviction/compaction
+    drops finished graphs to the next smaller compiled capacity, so each
+    BATCHED_BUCKETS entry gets a capacity ladder B in {2, 4, 8} on top of
+    its B=1 shapes from fwd_shapes(). Small/medium buckets only —
+    graph-level batching is the small-graph utilization lever (large
+    graphs already fill devices).
+    """
+    shapes = []
+    for b in (2, 4, 8):
+        for n, ps in BATCHED_BUCKETS:
+            shapes += [StageShape(b, n, n // p) for p in ps]
     return shapes
 
 
@@ -84,7 +108,7 @@ def artifact_name(stage: str, s: StageShape) -> str:
 def all_artifacts() -> list:
     """[(name, stage, shape)] for every artifact to emit (deduplicated)."""
     out = {}
-    for s in fwd_shapes():
+    for s in fwd_shapes() + batch_shapes():
         for st in FWD_STAGES:
             out[artifact_name(st, s)] = (st, s)
     for s in train_shapes():

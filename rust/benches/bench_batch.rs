@@ -1,0 +1,100 @@
+//! bench_batch: graph-level batched inference vs sequential inference.
+//!
+//! The paper's graph-level batched processing claim: packing B small/medium
+//! graphs into one forward pass per step keeps the device busy, so the
+//! *per-graph* step cost drops well below B sequential single-graph runs.
+//! This bench solves the same 8 graphs (a) sequentially via `solve_mvc` and
+//! (b) packed via `solve_pack`, and reports wall-clock and simulated time
+//! per graph-evaluation, plus the speedup. Run with compaction on and off
+//! to see the eviction effect.
+
+#[path = "common.rs"]
+mod common;
+
+use oggm::batch::{solve_pack, BatchCfg};
+use oggm::coordinator::infer::{solve_mvc, InferCfg};
+use oggm::coordinator::metrics::Table;
+use oggm::env::Scenario;
+use oggm::graph::{generators, Graph};
+use oggm::util::rng::Pcg32;
+
+fn main() {
+    let rt = common::runtime();
+    let mut rng = Pcg32::seeded(0xBA);
+    let params = common::init_params(&mut rng);
+    let b = 8usize;
+    let n = 20usize;
+    let bucket = 24usize;
+    let p_list: Vec<usize> = if common::fast_mode() { vec![1, 2] } else { vec![1, 2, 3, 4] };
+    let reps = common::scaled(3, 1);
+
+    let graphs: Vec<Graph> = (0..b)
+        .map(|i| {
+            if i % 2 == 0 {
+                generators::erdos_renyi(n, 0.2, &mut rng)
+            } else {
+                generators::barabasi_albert(n, 3, &mut rng)
+            }
+        })
+        .collect();
+
+    let mut t = Table::new(
+        &format!("bench_batch: {b} graphs |V|={n}, per graph-eval seconds (wall)"),
+        &["seq", "batched", "speedup", "seq_sim", "bat_sim", "repacks"],
+    );
+    for &p in &p_list {
+        let caps = rt.manifest.batch_sizes(bucket, bucket / p);
+        if caps.last().copied().unwrap_or(0) < b {
+            println!("P={p}: no compiled batch-{b} shapes at N={bucket}, skipping \
+                      (add batch shapes in configs.py and re-run make artifacts)");
+            continue;
+        }
+        let icfg = InferCfg::new(p, 2);
+        let bcfg = BatchCfg::new(p, 2);
+        // Warm both artifact sets so compiles stay off the clock.
+        for g in &graphs[..1] {
+            solve_mvc(&rt, &icfg, &params, g, bucket).unwrap();
+        }
+        solve_pack(&rt, &bcfg, &params, Scenario::Mvc, graphs.clone(), bucket).unwrap();
+
+        let (mut seq_wall, mut seq_sim, mut seq_evals) = (0.0f64, 0.0f64, 0usize);
+        for _ in 0..reps {
+            for g in &graphs {
+                let r = solve_mvc(&rt, &icfg, &params, g, bucket).unwrap();
+                seq_wall += r.wall_total;
+                seq_sim += r.sim_time_per_eval * r.evaluations as f64;
+                seq_evals += r.evaluations;
+            }
+        }
+        let (mut bat_wall, mut bat_sim, mut bat_evals, mut repacks) =
+            (0.0f64, 0.0f64, 0usize, 0usize);
+        for _ in 0..reps {
+            let r = solve_pack(&rt, &bcfg, &params, Scenario::Mvc, graphs.clone(), bucket).unwrap();
+            bat_wall += r.wall_total;
+            bat_sim += r.sim_total;
+            bat_evals += r.per_graph.iter().map(|g| g.evaluations).sum::<usize>();
+            repacks += r.repacks;
+        }
+        let seq_per = seq_wall / seq_evals as f64;
+        let bat_per = bat_wall / bat_evals as f64;
+        let speedup = seq_per / bat_per;
+        println!(
+            "P={p}: sequential {seq_per:.5}s/graph-eval, batched {bat_per:.5}s/graph-eval \
+             ({speedup:.2}x, {} repacks/run)",
+            repacks / reps
+        );
+        t.row(
+            format!("P={p}"),
+            vec![
+                seq_per,
+                bat_per,
+                speedup,
+                seq_sim / seq_evals as f64,
+                bat_sim / bat_evals as f64,
+                (repacks / reps) as f64,
+            ],
+        );
+    }
+    common::emit(&t);
+    println!("bench_batch: OK");
+}

@@ -1,0 +1,102 @@
+//! `BatchEnv`: B per-graph environments driven in lockstep by the batched
+//! solve engine. The host owns all environment logic (as in Alg. 5); this
+//! wrapper only adds per-graph bookkeeping over `env::GraphEnv` — which
+//! graphs are still active, per-graph candidate vectors, and solution
+//! extraction — so `batch::solve` can treat the pack uniformly.
+
+use crate::env::{GraphEnv, Scenario};
+use crate::graph::Graph;
+
+pub struct BatchEnv {
+    pub scenario: Scenario,
+    envs: Vec<Box<dyn GraphEnv>>,
+}
+
+impl BatchEnv {
+    /// Each graph is moved into its env — the pack holds exactly one copy.
+    pub fn new(scenario: Scenario, graphs: Vec<Graph>) -> BatchEnv {
+        let envs: Vec<Box<dyn GraphEnv>> =
+            graphs.into_iter().map(|g| scenario.make_env(g)).collect();
+        BatchEnv { scenario, envs }
+    }
+
+    /// Number of graphs in the batch.
+    pub fn len(&self) -> usize {
+        self.envs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.envs.is_empty()
+    }
+
+    pub fn graph(&self, i: usize) -> &Graph {
+        self.envs[i].graph()
+    }
+
+    pub fn env(&self, i: usize) -> &dyn GraphEnv {
+        self.envs[i].as_ref()
+    }
+
+    pub fn env_mut(&mut self, i: usize) -> &mut dyn GraphEnv {
+        self.envs[i].as_mut()
+    }
+
+    pub fn done(&self, i: usize) -> bool {
+        self.envs[i].done()
+    }
+
+    pub fn all_done(&self) -> bool {
+        self.envs.iter().all(|e| e.done())
+    }
+
+    /// Indices of graphs that still need solving, in batch order.
+    pub fn active(&self) -> Vec<usize> {
+        (0..self.len()).filter(|&i| !self.done(i)).collect()
+    }
+
+    /// Current candidate mask of graph `i` over its (unpadded) nodes.
+    pub fn candidates(&self, i: usize) -> Vec<bool> {
+        let env = self.env(i);
+        (0..env.num_nodes()).map(|v| env.is_candidate(v)).collect()
+    }
+
+    /// Whether graph `i`'s final solution is structurally valid.
+    pub fn validate(&self, i: usize) -> bool {
+        let env = self.env(i);
+        self.scenario.validate(env.graph(), env.solution_mask())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Graph;
+
+    fn graphs() -> Vec<Graph> {
+        vec![
+            Graph::from_edges(3, &[(0, 1), (1, 2)]).unwrap(),
+            Graph::from_edges(4, &[(0, 1), (1, 2), (2, 3), (0, 3)]).unwrap(),
+        ]
+    }
+
+    #[test]
+    fn tracks_per_graph_progress() {
+        let mut benv = BatchEnv::new(Scenario::Mvc, graphs());
+        assert_eq!(benv.len(), 2);
+        assert_eq!(benv.active(), vec![0, 1]);
+        assert!(!benv.all_done());
+        benv.env_mut(0).step(1); // path covered by its center
+        assert!(benv.done(0));
+        assert_eq!(benv.active(), vec![1]);
+        assert!(benv.validate(0));
+        assert_eq!(benv.candidates(1), vec![true; 4]);
+    }
+
+    #[test]
+    fn scenario_dispatch_per_batch() {
+        let benv = BatchEnv::new(Scenario::Mis, graphs());
+        // MIS: every node (even degree-0) is a candidate initially.
+        assert_eq!(benv.candidates(0), vec![true; 3]);
+        assert_eq!(benv.env(1).solution_size(), 0);
+    }
+}

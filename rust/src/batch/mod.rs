@@ -1,0 +1,22 @@
+//! Graph-level batched solve engine (the paper's §4.5 "graph-level batched
+//! processing" headline optimization, grown into a subsystem).
+//!
+//! Many independent graphs are packed into one block-diagonal sharded state
+//! (`graph::pack`) and driven through a *shared* embedding/Q forward pass
+//! per step: per-graph environments (`env`), per-graph candidate masking and
+//! adaptive multi-node selection, and early-exit compaction — finished
+//! graphs are evicted from the pack so later steps shrink to a smaller
+//! compiled batch capacity (`solve`). A job-queue front-end (`queue` +
+//! `spec`) groups heterogeneous solve requests by (scenario, bucket), packs
+//! them, and emits per-graph solutions + timing JSON; the `oggm batch-solve`
+//! subcommand is its CLI surface. See DESIGN.md §Batch.
+
+pub mod env;
+pub mod solve;
+pub mod spec;
+pub mod queue;
+
+pub use env::BatchEnv;
+pub use queue::{run_queue, Job, JobOutcome, PackStat, QueueReport};
+pub use solve::{solve_pack, BatchCfg, BatchGraphResult, BatchResult};
+pub use spec::{load_manifest, parse_manifest, GraphSource, JobSpec};

@@ -1,0 +1,227 @@
+//! Job-queue front-end over the batched solve engine: the serve-style
+//! entry the ROADMAP's "many concurrent solve requests" north star needs.
+//!
+//! Heterogeneous jobs (different sizes, generators, scenarios) are grouped
+//! by (scenario, compiled bucket), chunked to the largest compiled batch
+//! capacity, and each pack is driven through `solve_pack`'s shared forward
+//! passes. Results come back per job with timing, so callers can account
+//! end-to-end latency per request as well as per-pack amortized step cost.
+
+use crate::batch::solve::{solve_pack, BatchCfg};
+use crate::env::Scenario;
+use crate::graph::Graph;
+use crate::model::Params;
+use crate::runtime::Runtime;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// One solve request.
+#[derive(Debug, Clone)]
+pub struct Job {
+    pub id: String,
+    pub scenario: Scenario,
+    pub graph: Graph,
+}
+
+/// Per-job outcome.
+#[derive(Debug, Clone)]
+pub struct JobOutcome {
+    pub id: String,
+    pub scenario: Scenario,
+    pub nodes: usize,
+    pub edges: usize,
+    /// Index of the pack this job was solved in.
+    pub pack: usize,
+    /// Selected node ids (ascending).
+    pub solution: Vec<usize>,
+    pub solution_size: usize,
+    pub objective: f64,
+    pub valid: bool,
+    pub evaluations: usize,
+    pub selections: usize,
+}
+
+/// Per-pack statistics.
+#[derive(Debug, Clone)]
+pub struct PackStat {
+    pub pack: usize,
+    pub scenario: Scenario,
+    pub bucket_n: usize,
+    pub jobs: usize,
+    /// Compiled batch capacity the pack opened at.
+    pub capacity: usize,
+    pub rounds: usize,
+    pub repacks: usize,
+    pub sim_time: f64,
+    pub wall_time: f64,
+    pub comm_bytes: u64,
+}
+
+/// Everything `oggm batch-solve` reports.
+#[derive(Debug)]
+pub struct QueueReport {
+    pub outcomes: Vec<JobOutcome>,
+    pub packs: Vec<PackStat>,
+    pub wall_total: f64,
+}
+
+impl QueueReport {
+    pub fn to_json(&self) -> Json {
+        let jobs: Vec<Json> = self
+            .outcomes
+            .iter()
+            .map(|o| {
+                Json::obj()
+                    .set("id", o.id.as_str())
+                    .set("scenario", o.scenario.name())
+                    .set("nodes", o.nodes)
+                    .set("edges", o.edges)
+                    .set("pack", o.pack)
+                    .set("solution", o.solution.clone())
+                    .set("solution_size", o.solution_size)
+                    .set("objective", o.objective)
+                    .set("valid", o.valid)
+                    .set("evaluations", o.evaluations)
+                    .set("selections", o.selections)
+            })
+            .collect();
+        let packs: Vec<Json> = self
+            .packs
+            .iter()
+            .map(|p| {
+                Json::obj()
+                    .set("pack", p.pack)
+                    .set("scenario", p.scenario.name())
+                    .set("bucket_n", p.bucket_n)
+                    .set("jobs", p.jobs)
+                    .set("capacity", p.capacity)
+                    .set("rounds", p.rounds)
+                    .set("repacks", p.repacks)
+                    .set("sim_time", p.sim_time)
+                    .set("wall_time", p.wall_time)
+                    .set("comm_bytes", p.comm_bytes)
+            })
+            .collect();
+        Json::obj()
+            .set("jobs", Json::Arr(jobs))
+            .set("packs", Json::Arr(packs))
+            .set("wall_total", self.wall_total)
+    }
+}
+
+/// Group jobs into packs and solve them all. Outcomes are returned in the
+/// original job order.
+pub fn run_queue(
+    rt: &Runtime,
+    cfg: &BatchCfg,
+    params: &Params,
+    jobs: &[Job],
+) -> Result<QueueReport> {
+    let wall = Instant::now();
+    let p = cfg.engine.p;
+
+    // Group by (scenario, compiled bucket); BTreeMap keeps pack order
+    // deterministic across runs.
+    let mut groups: BTreeMap<(Scenario, usize), Vec<usize>> = BTreeMap::new();
+    for (ji, job) in jobs.iter().enumerate() {
+        let bucket = rt
+            .manifest
+            .bucket_for_any_batch(job.graph.n, p)
+            .with_context(|| format!("job '{}' (|V|={})", job.id, job.graph.n))?;
+        groups.entry((job.scenario, bucket)).or_default().push(ji);
+    }
+
+    let mut outcomes: Vec<Option<JobOutcome>> = (0..jobs.len()).map(|_| None).collect();
+    let mut packs = Vec::new();
+    for ((scenario, bucket), members) in groups {
+        let part_ni = bucket / p;
+        let caps = rt.manifest.batch_sizes(bucket, part_ni);
+        let max_cap = *caps.last().expect("bucket_for_any_batch guarantees an entry");
+        for chunk in members.chunks(max_cap) {
+            let pack_idx = packs.len();
+            let graphs: Vec<Graph> = chunk.iter().map(|&ji| jobs[ji].graph.clone()).collect();
+            let res = solve_pack(rt, cfg, params, scenario, graphs, bucket)
+                .with_context(|| format!("pack {pack_idx} ({scenario}, N={bucket})"))?;
+            for (slot, &ji) in chunk.iter().enumerate() {
+                let r = &res.per_graph[slot];
+                let solution: Vec<usize> =
+                    r.solution.iter().enumerate().filter(|(_, &b)| b).map(|(v, _)| v).collect();
+                outcomes[ji] = Some(JobOutcome {
+                    id: jobs[ji].id.clone(),
+                    scenario,
+                    nodes: jobs[ji].graph.n,
+                    edges: jobs[ji].graph.m,
+                    pack: pack_idx,
+                    solution,
+                    solution_size: r.solution_size,
+                    objective: r.objective,
+                    valid: r.valid,
+                    evaluations: r.evaluations,
+                    selections: r.selections,
+                });
+            }
+            packs.push(PackStat {
+                pack: pack_idx,
+                scenario,
+                bucket_n: bucket,
+                jobs: chunk.len(),
+                capacity: res.initial_capacity,
+                rounds: res.rounds,
+                repacks: res.repacks,
+                sim_time: res.sim_total,
+                wall_time: res.wall_total,
+                comm_bytes: res.timing.comm_bytes,
+            });
+        }
+    }
+
+    Ok(QueueReport {
+        outcomes: outcomes.into_iter().map(|o| o.expect("every job assigned to a pack")).collect(),
+        packs,
+        wall_total: wall.elapsed().as_secs_f64(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_json_shape() {
+        let report = QueueReport {
+            outcomes: vec![JobOutcome {
+                id: "a".into(),
+                scenario: Scenario::Mvc,
+                nodes: 20,
+                edges: 30,
+                pack: 0,
+                solution: vec![1, 4, 7],
+                solution_size: 3,
+                objective: 3.0,
+                valid: true,
+                evaluations: 3,
+                selections: 3,
+            }],
+            packs: vec![PackStat {
+                pack: 0,
+                scenario: Scenario::Mvc,
+                bucket_n: 24,
+                jobs: 1,
+                capacity: 1,
+                rounds: 3,
+                repacks: 0,
+                sim_time: 0.5,
+                wall_time: 0.6,
+                comm_bytes: 1024,
+            }],
+            wall_total: 0.7,
+        };
+        let s = report.to_json().render();
+        assert!(s.contains("\"id\":\"a\""), "{s}");
+        assert!(s.contains("\"solution\":[1,4,7]"), "{s}");
+        assert!(s.contains("\"capacity\":1"), "{s}");
+        assert!(s.contains("\"wall_total\":0.7"), "{s}");
+    }
+}

@@ -1,0 +1,310 @@
+//! Batched RL inference: Alg. 4 lifted to a pack of B graphs.
+//!
+//! Per step ("round"), ONE distributed forward pass evaluates every active
+//! graph's scores at once — the pack shares the embedding/Q stages, so the
+//! per-graph cost of kernel launch, upload, and collectives is amortized by
+//! B. Selection, environment stepping, and shard updates then run per graph
+//! on its own block, exactly mirroring `coordinator::infer::solve_env`; the
+//! per-graph state trajectories are therefore identical to B sequential
+//! single-graph runs (the block-diagonal pack has no cross-graph terms),
+//! which `rust/tests/batch_equivalence.rs` asserts.
+//!
+//! Early-exit compaction: graphs finish at different steps. When enough have
+//! finished that a smaller *compiled* batch capacity fits the survivors, the
+//! pack is rebuilt without them (their padded blocks would otherwise ride
+//! along in every remaining stage execution). Capacities come from the
+//! artifact manifest, so compaction is exactly as fine-grained as the
+//! compiled batch buckets.
+
+use crate::batch::env::BatchEnv;
+use crate::coordinator::engine::{EngineCfg, StepTiming};
+use crate::coordinator::fwd::forward;
+use crate::coordinator::selection::{select_count, top_d, SelectionPolicy};
+use crate::coordinator::shard::{mirror_selection, shards_for_pack, ShardState};
+use crate::env::Scenario;
+use crate::graph::{Graph, PackLayout, Partition};
+use crate::model::Params;
+use crate::runtime::Runtime;
+use anyhow::{ensure, Result};
+use std::time::Instant;
+
+/// Batched-inference configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchCfg {
+    pub engine: EngineCfg,
+    pub policy: SelectionPolicy,
+    /// Elide layer-0 message stage (exact; see fwd.rs).
+    pub skip_zero_layer: bool,
+    /// Evict finished graphs and repack to smaller compiled capacities.
+    pub compact: bool,
+}
+
+impl BatchCfg {
+    pub fn new(p: usize, l: usize) -> BatchCfg {
+        BatchCfg {
+            engine: EngineCfg::new(p, l),
+            policy: SelectionPolicy::Single,
+            skip_zero_layer: true,
+            compact: true,
+        }
+    }
+}
+
+/// Outcome for one graph of the pack.
+#[derive(Debug, Clone)]
+pub struct BatchGraphResult {
+    /// Solution mask over the graph's (unpadded) nodes.
+    pub solution: Vec<bool>,
+    pub solution_size: usize,
+    /// Scenario objective (|S| except MaxCut: cut weight).
+    pub objective: f64,
+    /// Shared forward passes this graph participated in.
+    pub evaluations: usize,
+    /// Nodes selected in total.
+    pub selections: usize,
+    /// Structural validity (cover / independent set / always true for cut).
+    pub valid: bool,
+}
+
+/// Outcome of solving one pack.
+#[derive(Debug)]
+pub struct BatchResult {
+    /// Per-graph outcomes, in input order.
+    pub per_graph: Vec<BatchGraphResult>,
+    /// Shared forward passes executed (batched steps).
+    pub rounds: usize,
+    /// Compaction events (pack rebuilds evicting finished graphs).
+    pub repacks: usize,
+    /// Batch capacity of the first round (compiled bucket the pack opened at).
+    pub initial_capacity: usize,
+    /// Accumulated lockstep timing across rounds.
+    pub timing: StepTiming,
+    /// Simulated-parallel seconds, total.
+    pub sim_total: f64,
+    /// Wall-clock total.
+    pub wall_total: f64,
+}
+
+/// Smallest compiled capacity that fits `want` graphs (capacities are the
+/// manifest's ascending batch sizes for this bucket/shard shape).
+fn capacity_for(caps: &[usize], want: usize) -> usize {
+    caps.iter().copied().find(|&c| c >= want).unwrap_or_else(|| *caps.last().unwrap())
+}
+
+/// Layout of the current pack: one slot per packed graph, empty padding
+/// slots as zero-size. The gathered score vector of each forward pass is
+/// indexed exactly by the layout's packed ids, so all block slicing goes
+/// through it.
+fn pack_layout(
+    benv: &BatchEnv,
+    slots: &[usize],
+    capacity: usize,
+    bucket_n: usize,
+) -> PackLayout {
+    let mut sizes: Vec<usize> = slots.iter().map(|&gi| benv.graph(gi).n).collect();
+    sizes.resize(capacity, 0);
+    PackLayout::new(bucket_n, sizes)
+}
+
+/// Build the P shard states for the pack slots (padding empty slots with
+/// zero-node blocks up to `capacity`).
+fn build_shards(
+    benv: &BatchEnv,
+    slots: &[usize],
+    capacity: usize,
+    part: Partition,
+    empty: &Graph,
+) -> Vec<ShardState> {
+    let cand: Vec<Vec<bool>> = slots.iter().map(|&gi| benv.candidates(gi)).collect();
+    let mut graphs: Vec<&Graph> = Vec::with_capacity(capacity);
+    let mut removed: Vec<&[bool]> = Vec::with_capacity(capacity);
+    let mut solution: Vec<&[bool]> = Vec::with_capacity(capacity);
+    let mut candidates: Vec<&[bool]> = Vec::with_capacity(capacity);
+    for (slot, &gi) in slots.iter().enumerate() {
+        graphs.push(benv.graph(gi));
+        removed.push(benv.env(gi).removed_mask());
+        solution.push(benv.env(gi).solution_mask());
+        candidates.push(&cand[slot]);
+    }
+    for _ in slots.len()..capacity {
+        graphs.push(empty);
+        removed.push(&[]);
+        solution.push(&[]);
+        candidates.push(&[]);
+    }
+    shards_for_pack(part, &graphs, &removed, &solution, &candidates)
+}
+
+/// Solve a pack of graphs under one scenario with shared forward passes.
+///
+/// All graphs must fit `bucket_n`, and the pack must fit the largest batch
+/// capacity compiled for (bucket_n, P) — the job queue (`batch::queue`)
+/// handles chunking larger workloads into packs. Graphs are taken by value
+/// and moved into the per-graph environments (no internal copies).
+pub fn solve_pack(
+    rt: &Runtime,
+    cfg: &BatchCfg,
+    params: &Params,
+    scenario: Scenario,
+    graphs: Vec<Graph>,
+    bucket_n: usize,
+) -> Result<BatchResult> {
+    let wall = Instant::now();
+    let part = Partition::new(bucket_n, cfg.engine.p);
+    let caps = rt.manifest.batch_sizes(bucket_n, part.ni());
+    ensure!(
+        !caps.is_empty(),
+        "no compiled fwd stages at bucket N={bucket_n}, P={} (any batch size); \
+         add shapes to python/compile/configs.py and re-run `make artifacts`",
+        cfg.engine.p
+    );
+    let max_cap = *caps.last().unwrap();
+    ensure!(
+        !graphs.is_empty() && graphs.len() <= max_cap,
+        "pack of {} graphs exceeds the largest compiled batch capacity {max_cap} \
+         at bucket N={bucket_n} (the job queue chunks packs to capacity)",
+        graphs.len()
+    );
+    for g in &graphs {
+        ensure!(g.n <= bucket_n, "graph |V|={} exceeds bucket N={bucket_n}", g.n);
+    }
+
+    let mut benv = BatchEnv::new(scenario, graphs);
+    let empty = Graph::empty(0);
+    let mut evals = vec![0usize; benv.len()];
+    let mut sels = vec![0usize; benv.len()];
+    let mut timing = StepTiming::new(cfg.engine.p);
+    let (mut rounds, mut repacks) = (0usize, 0usize);
+    let mut sim_total = 0.0f64;
+
+    // Slots: graph indices currently packed, in batch order.
+    let mut slots: Vec<usize> = benv.active();
+    let mut capacity = if slots.is_empty() { 0 } else { capacity_for(&caps, slots.len()) };
+    let initial_capacity = capacity;
+    let mut layout = pack_layout(&benv, &slots, capacity, bucket_n);
+    let mut shards = if slots.is_empty() {
+        Vec::new()
+    } else {
+        build_shards(&benv, &slots, capacity, part, &empty)
+    };
+    let mut removed_prev: Vec<Vec<bool>> =
+        slots.iter().map(|&gi| benv.env(gi).removed_mask().to_vec()).collect();
+
+    while !benv.all_done() {
+        // Early-exit compaction: rebuild the pack without finished graphs
+        // once a smaller compiled capacity fits the survivors.
+        let active: Vec<usize> = slots.iter().copied().filter(|&gi| !benv.done(gi)).collect();
+        if active.is_empty() {
+            break;
+        }
+        if cfg.compact {
+            let want = capacity_for(&caps, active.len());
+            if want < capacity {
+                slots = active;
+                capacity = want;
+                layout = pack_layout(&benv, &slots, capacity, bucket_n);
+                shards = build_shards(&benv, &slots, capacity, part, &empty);
+                removed_prev =
+                    slots.iter().map(|&gi| benv.env(gi).removed_mask().to_vec()).collect();
+                repacks += 1;
+            }
+        }
+
+        // ONE shared distributed policy evaluation for the whole pack.
+        let out = forward(rt, &cfg.engine, params, &shards, false, cfg.skip_zero_layer)?;
+        rounds += 1;
+        sim_total += out.timing.simulated();
+        timing.merge(&out.timing);
+
+        // Per-graph selection + state update on each block (identical to
+        // the sequential loop in coordinator::infer::solve_env).
+        let t_host = Instant::now();
+        for slot in 0..slots.len() {
+            let gi = slots[slot];
+            if benv.done(gi) {
+                continue;
+            }
+            let gn = layout.sizes[slot];
+            let block = &out.scores[layout.slot_range(slot)][..gn];
+            let env = benv.env_mut(gi);
+            evals[gi] += 1;
+            let num_cand = (0..gn).filter(|&v| env.is_candidate(v)).count();
+            let d = select_count(cfg.policy, num_cand, gn);
+            let picked = top_d(block, |v| env.is_candidate(v), d);
+            assert!(!picked.is_empty(), "no candidates but graph {gi} not done");
+            for v in picked {
+                if !env.is_candidate(v) {
+                    continue;
+                }
+                let (_r, done) = env.step(v);
+                sels[gi] += 1;
+                mirror_selection(&mut shards, slot, v, &*env, &mut removed_prev[slot]);
+                if done {
+                    break;
+                }
+            }
+            for sh in shards.iter_mut() {
+                sh.refresh_candidates(slot, |v| env.is_candidate(v));
+            }
+        }
+        let host_t = t_host.elapsed().as_secs_f64();
+        timing.host += host_t;
+        sim_total += host_t;
+    }
+
+    let per_graph = (0..benv.len())
+        .map(|gi| {
+            let env = benv.env(gi);
+            BatchGraphResult {
+                solution: env.solution_mask().to_vec(),
+                solution_size: env.solution_size(),
+                objective: env.objective(),
+                evaluations: evals[gi],
+                selections: sels[gi],
+                valid: benv.validate(gi),
+            }
+        })
+        .collect();
+    Ok(BatchResult {
+        per_graph,
+        rounds,
+        repacks,
+        initial_capacity,
+        timing,
+        sim_total,
+        wall_total: wall.elapsed().as_secs_f64(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capacity_for_picks_smallest_fit() {
+        let caps = [1usize, 2, 4, 8];
+        assert_eq!(capacity_for(&caps, 1), 1);
+        assert_eq!(capacity_for(&caps, 3), 4);
+        assert_eq!(capacity_for(&caps, 4), 4);
+        assert_eq!(capacity_for(&caps, 5), 8);
+        // Overfull falls back to the largest (caller enforces the bound).
+        assert_eq!(capacity_for(&caps, 9), 8);
+    }
+
+    #[test]
+    fn build_shards_pads_empty_slots() {
+        use crate::graph::Graph;
+        let g = Graph::from_edges(4, &[(0, 1), (2, 3)]).unwrap();
+        let benv = BatchEnv::new(Scenario::Mvc, vec![g]);
+        let part = Partition::new(12, 2);
+        let empty = Graph::empty(0);
+        let shards = build_shards(&benv, &[0], 4, part, &empty);
+        assert_eq!(shards.len(), 2);
+        assert_eq!(shards[0].b, 4);
+        // Slot 0 carries the graph; slots 1..4 are all-zero blocks.
+        let (n, ni) = (12, 6);
+        assert!(shards[0].a[..ni * n].iter().any(|&x| x == 1.0));
+        assert!(shards[0].a[ni * n..].iter().all(|&x| x == 0.0));
+        assert!(shards[0].c[ni..].iter().all(|&x| x == 0.0));
+    }
+}

@@ -1,0 +1,244 @@
+//! Batch-solve manifest: the line-oriented job list `oggm batch-solve`
+//! consumes (serde is unavailable offline, so the format is hand-parsed).
+//!
+//! One job per line; `#`/`%` comments and blank lines are skipped:
+//!
+//! ```text
+//! # <source> [key=value ...] [scenario] [id=NAME]
+//! file graphs/road.txt mvc id=road
+//! gen er n=250 rho=0.15 seed=7 maxcut
+//! gen ba n=120 d=4 seed=3 mis
+//! gen hk n=500 d=4 triad=0.25 seed=9
+//! ```
+//!
+//! Scenario defaults to `mvc`, ids default to `job<line-index>`, generator
+//! parameters default to the paper's values (rho=0.15, d=4, triad=0.25,
+//! seed=line index). Generation is deterministic per (model, n, params,
+//! seed) — reruns of a manifest reproduce the same graphs.
+
+use crate::env::Scenario;
+use crate::graph::{generators, io as gio, Graph};
+use crate::util::rng::Pcg32;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Where a job's graph comes from.
+#[derive(Debug, Clone, PartialEq)]
+pub enum GraphSource {
+    /// Edge-list file (NetworkRepository/SNAP format, see graph::io).
+    File(PathBuf),
+    /// Synthetic generator spec.
+    Gen { model: String, n: usize, rho: f64, d: usize, triad: f64, seed: u64 },
+}
+
+/// One parsed manifest line.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobSpec {
+    pub id: String,
+    pub scenario: Scenario,
+    pub source: GraphSource,
+}
+
+impl JobSpec {
+    /// Materialize the graph (read the file or run the generator).
+    pub fn materialize(&self) -> Result<Graph> {
+        match &self.source {
+            GraphSource::File(path) => gio::read_edge_list(path)
+                .with_context(|| format!("job '{}': reading {}", self.id, path.display())),
+            GraphSource::Gen { model, n, rho, d, triad, seed } => {
+                // Dedicated stream so manifest jobs never alias the
+                // training/inference RNG streams.
+                let mut rng = Pcg32::new(*seed, 0xBA7C4);
+                match model.as_str() {
+                    "er" => Ok(generators::erdos_renyi(*n, *rho, &mut rng)),
+                    "ba" => Ok(generators::barabasi_albert(*n, *d, &mut rng)),
+                    "hk" => Ok(generators::holme_kim(*n, *d, *triad, &mut rng)),
+                    other => bail!("job '{}': unknown generator '{other}' (er|ba|hk)", self.id),
+                }
+            }
+        }
+    }
+}
+
+/// Parse manifest text into job specs.
+pub fn parse_manifest(text: &str) -> Result<Vec<JobSpec>> {
+    let mut jobs = Vec::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') || line.starts_with('%') {
+            continue;
+        }
+        let job = parse_line(line, jobs.len())
+            .with_context(|| format!("manifest line {}: '{line}'", lineno + 1))?;
+        jobs.push(job);
+    }
+    if jobs.is_empty() {
+        bail!("manifest contains no jobs");
+    }
+    Ok(jobs)
+}
+
+/// Load and parse `<path>`.
+pub fn load_manifest(path: impl AsRef<Path>) -> Result<Vec<JobSpec>> {
+    let text = std::fs::read_to_string(path.as_ref())
+        .with_context(|| format!("read manifest {}", path.as_ref().display()))?;
+    parse_manifest(&text)
+}
+
+fn parse_line(line: &str, index: usize) -> Result<JobSpec> {
+    let mut toks = line.split_whitespace();
+    let kind = toks.next().unwrap(); // non-empty by construction
+    let mut id = format!("job{index}");
+    let mut scenario = Scenario::Mvc;
+    let mut kv: Vec<(String, String)> = Vec::new();
+    let mut bare: Vec<String> = Vec::new();
+    for t in toks {
+        if let Some((k, v)) = t.split_once('=') {
+            if k == "id" {
+                id = v.to_string();
+            } else if k == "scenario" {
+                scenario = Scenario::parse(v)?;
+            } else {
+                kv.push((k.to_string(), v.to_string()));
+            }
+        } else if let Ok(s) = Scenario::parse(t) {
+            scenario = s;
+        } else {
+            bare.push(t.to_string());
+        }
+    }
+    let get = |key: &str, default: &str| -> String {
+        kv.iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.clone())
+            .unwrap_or_else(|| default.to_string())
+    };
+    // Reject unknown keys: a typo'd `sed=7` must error, not silently run
+    // the job with default parameters.
+    let check_keys = |allowed: &[&str]| -> Result<()> {
+        for (k, _) in &kv {
+            if !allowed.contains(&k.as_str()) {
+                let hint = if allowed.is_empty() {
+                    "this source takes none".to_string()
+                } else {
+                    format!("allowed: {}=", allowed.join("=, "))
+                };
+                bail!("unknown key '{k}=' ({hint})");
+            }
+        }
+        Ok(())
+    };
+    let source = match kind {
+        "file" => {
+            check_keys(&[])?;
+            if bare.len() != 1 {
+                bail!("'file' takes exactly one path, got {bare:?}");
+            }
+            GraphSource::File(PathBuf::from(&bare[0]))
+        }
+        "gen" => {
+            check_keys(&["n", "rho", "d", "triad", "seed"])?;
+            if bare.len() != 1 {
+                bail!("'gen' takes exactly one model (er|ba|hk), got {bare:?}");
+            }
+            let model = bare[0].clone();
+            if !matches!(model.as_str(), "er" | "ba" | "hk") {
+                bail!("unknown generator '{model}' (er|ba|hk)");
+            }
+            GraphSource::Gen {
+                model,
+                n: get("n", "250").parse().context("bad n=")?,
+                rho: get("rho", "0.15").parse().context("bad rho=")?,
+                d: get("d", "4").parse().context("bad d=")?,
+                triad: get("triad", "0.25").parse().context("bad triad=")?,
+                seed: get("seed", &index.to_string()).parse().context("bad seed=")?,
+            }
+        }
+        other => bail!("unknown job kind '{other}' (file|gen)"),
+    };
+    Ok(JobSpec { id, scenario, source })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_mixed_manifest() {
+        let text = "\
+# demo manifest
+gen er n=20 rho=0.2 seed=7 maxcut id=alpha
+
+% another comment style
+gen ba n=30 d=4 mis
+file graphs/road.txt
+gen hk n=40 triad=0.5 scenario=mvc
+";
+        let jobs = parse_manifest(text).unwrap();
+        assert_eq!(jobs.len(), 4);
+        assert_eq!(jobs[0].id, "alpha");
+        assert_eq!(jobs[0].scenario, Scenario::MaxCut);
+        assert_eq!(
+            jobs[0].source,
+            GraphSource::Gen { model: "er".into(), n: 20, rho: 0.2, d: 4, triad: 0.25, seed: 7 }
+        );
+        assert_eq!(jobs[1].id, "job1");
+        assert_eq!(jobs[1].scenario, Scenario::Mis);
+        // seed defaults to the job index.
+        match &jobs[1].source {
+            GraphSource::Gen { seed, .. } => assert_eq!(*seed, 1),
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(jobs[2].source, GraphSource::File(PathBuf::from("graphs/road.txt")));
+        assert_eq!(jobs[3].scenario, Scenario::Mvc);
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(parse_manifest("").is_err());
+        assert!(parse_manifest("solve er n=10").is_err());
+        assert!(parse_manifest("gen zz n=10").is_err());
+        assert!(parse_manifest("gen er n=abc").is_err());
+        assert!(parse_manifest("file a.txt b.txt").is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_keys() {
+        // Typos must error, not silently run with default parameters.
+        let err = parse_manifest("gen er n=100 sed=7").unwrap_err();
+        assert!(format!("{err:#}").contains("sed"), "{err:#}");
+        assert!(parse_manifest("gen er rho0=0.3").is_err());
+        assert!(parse_manifest("file a.txt n=30").is_err());
+        // Known keys still pass.
+        assert!(parse_manifest("gen er n=100 seed=7").is_ok());
+    }
+
+    #[test]
+    fn materialize_is_deterministic() {
+        let jobs = parse_manifest("gen er n=40 rho=0.2 seed=11\ngen ba n=40 d=3 seed=11").unwrap();
+        let a1 = jobs[0].materialize().unwrap();
+        let a2 = jobs[0].materialize().unwrap();
+        assert_eq!(a1, a2);
+        let b = jobs[1].materialize().unwrap();
+        assert_eq!(b.n, 40);
+        assert_ne!(a1, b);
+    }
+
+    #[test]
+    fn materialize_file_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("oggm_spec_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("g.txt");
+        let g = generators::erdos_renyi(30, 0.2, &mut Pcg32::seeded(5));
+        gio::write_edge_list(&p, &g).unwrap();
+        let spec = JobSpec {
+            id: "f".into(),
+            scenario: Scenario::Mvc,
+            source: GraphSource::File(p.clone()),
+        };
+        let g2 = spec.materialize().unwrap();
+        assert_eq!(g.n, g2.n);
+        assert_eq!(g.m, g2.m);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -3,6 +3,7 @@
 use super::infer::{solve_mvc, InferCfg};
 use super::selection::SelectionPolicy;
 use super::train::{TrainCfg, Trainer};
+use crate::batch::{self, BatchCfg, Job};
 use crate::graph::{generators, io as gio, stats, Graph, Partition};
 use crate::model::Params;
 use crate::runtime::{manifest, Runtime};
@@ -125,6 +126,89 @@ pub fn cmd_infer(args: &Args) -> Result<()> {
         res.timing.comm_bytes as f64 / 1024.0,
         res.timing.collectives
     );
+    Ok(())
+}
+
+/// `oggm batch-solve --manifest jobs.txt --p 2 --multi --out results.json`
+/// — the job-queue front-end over the graph-level batched solve engine.
+/// `--demo <count>` synthesizes a mixed ER/BA manifest instead of reading
+/// one (a zero-setup smoke path). `--scenario` overrides every job's
+/// scenario; `--no-compact` disables early-exit pack compaction.
+pub fn cmd_batch_solve(args: &Args) -> Result<()> {
+    let rt = load_runtime()?;
+    let mut rng = Pcg32::new(args.get_u64("seed", 4), 80);
+    let specs = match args.get("manifest") {
+        Some(path) => batch::load_manifest(path)?,
+        None => {
+            let count = args.get_usize("demo", 0);
+            if count == 0 {
+                bail!("batch-solve needs --manifest <file> or --demo <count>");
+            }
+            let n = args.get_usize("n", 20);
+            // Mixed ER/BA jobs, deterministic per --seed.
+            let text: String = (0..count)
+                .map(|i| {
+                    let model = if i % 2 == 0 { "er" } else { "ba" };
+                    let seed = args.get_u64("seed", 4) + i as u64;
+                    format!("gen {model} n={n} seed={seed} id=demo{i}\n")
+                })
+                .collect();
+            batch::parse_manifest(&text)?
+        }
+    };
+    let override_scenario = match args.get("scenario") {
+        Some(s) => Some(crate::env::Scenario::parse(s)?),
+        None => None,
+    };
+    let mut jobs = Vec::with_capacity(specs.len());
+    for spec in &specs {
+        jobs.push(Job {
+            id: spec.id.clone(),
+            scenario: override_scenario.unwrap_or(spec.scenario),
+            graph: spec.materialize()?,
+        });
+    }
+    println!("batch-solve: {} jobs", jobs.len());
+
+    let mut cfg = BatchCfg::new(args.get_usize("p", 1), 2);
+    if args.has_flag("multi") {
+        cfg.policy = SelectionPolicy::AdaptiveMulti;
+    }
+    if args.has_flag("no-compact") {
+        cfg.compact = false;
+    }
+    let params = load_or_init_params(args, &mut rng)?;
+    let report = batch::run_queue(&rt, &cfg, &params, &jobs)?;
+
+    for p in &report.packs {
+        println!(
+            "pack {:>3}: {:>6} N={:<5} jobs={:<3} capacity={:<3} rounds={:<4} repacks={} \
+             sim {:.4}s  wall {:.2}s",
+            p.pack, p.scenario.name(), p.bucket_n, p.jobs, p.capacity, p.rounds, p.repacks,
+            p.sim_time, p.wall_time
+        );
+    }
+    for o in &report.outcomes {
+        println!(
+            "job {:>12}: {:>6} |V|={:<5} |E|={:<6} solution={:<4} objective={:<8} \
+             {} evals={} (pack {})",
+            o.id, o.scenario.name(), o.nodes, o.edges, o.solution_size, o.objective,
+            if o.valid { "valid" } else { "INVALID" }, o.evaluations, o.pack
+        );
+    }
+    let invalid = report.outcomes.iter().filter(|o| !o.valid).count();
+    println!(
+        "batch-solve: {} jobs in {} packs, {:.2}s wall total ({} invalid)",
+        report.outcomes.len(), report.packs.len(), report.wall_total, invalid
+    );
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, report.to_json().render())
+            .with_context(|| format!("writing {out}"))?;
+        println!("wrote {out}");
+    }
+    if invalid > 0 {
+        bail!("{invalid} jobs produced invalid solutions");
+    }
     Ok(())
 }
 

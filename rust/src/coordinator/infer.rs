@@ -5,8 +5,8 @@
 use super::engine::{EngineCfg, StepTiming};
 use super::fwd::forward;
 use super::selection::{select_count, top_d, SelectionPolicy};
-use super::shard::{shards_for_graph, ShardState};
-use crate::env::{GraphEnv, MvcEnv};
+use super::shard::{mirror_selection, shards_for_graph, ShardState};
+use crate::env::{GraphEnv, Scenario};
 use crate::graph::{Graph, Partition};
 use crate::model::Params;
 use crate::runtime::Runtime;
@@ -38,6 +38,8 @@ pub struct InferResult {
     /// Solution mask over the (unpadded) nodes.
     pub solution: Vec<bool>,
     pub solution_size: usize,
+    /// Scenario objective of the final solution (|S| except MaxCut: cut weight).
+    pub objective: f64,
     /// Policy-model evaluations performed (= steps of Alg. 4).
     pub evaluations: usize,
     /// Nodes selected in total (>= evaluations under multi-select).
@@ -50,20 +52,25 @@ pub struct InferResult {
     pub wall_total: f64,
 }
 
-/// Solve the MVC instance `g` with the pretrained `params` on `p` shards.
-pub fn solve_mvc(
+/// Solve one environment instance by RL inference (Alg. 4 generalized over
+/// scenarios). `env` must be freshly constructed over `g`; the scenario's
+/// residual-graph semantics are mirrored onto the shards by diffing the
+/// environment's removed mask after each selection (MVC removes the node,
+/// MIS its closed neighborhood, MaxCut nothing).
+pub fn solve_env(
     rt: &Runtime,
     cfg: &InferCfg,
     params: &Params,
     g: &Graph,
     bucket_n: usize,
+    env: &mut dyn GraphEnv,
 ) -> Result<InferResult> {
     let wall = Instant::now();
     let part = Partition::new(bucket_n, cfg.engine.p);
-    let mut env = MvcEnv::new(g.clone());
     let candidates: Vec<bool> = (0..g.n).map(|v| env.is_candidate(v)).collect();
     let mut shards: Vec<ShardState> =
         shards_for_graph(part, g, env.removed_mask(), env.solution_mask(), &candidates);
+    let mut removed_prev: Vec<bool> = env.removed_mask().to_vec();
 
     let mut timing = StepTiming::new(cfg.engine.p);
     let mut evaluations = 0usize;
@@ -93,9 +100,7 @@ pub fn solve_mvc(
             let (_r, done) = env.step(v);
             selections += 1;
             let t_upd = Instant::now();
-            for sh in shards.iter_mut() {
-                sh.apply_select(0, v);
-            }
+            mirror_selection(&mut shards, 0, v, &*env, &mut removed_prev);
             host_t += t_upd.elapsed().as_secs_f64();
             if done {
                 break;
@@ -111,16 +116,45 @@ pub fn solve_mvc(
         sim_total += host_t;
     }
 
-    assert!(MvcEnv::is_vertex_cover(g, env.solution_mask()), "inference produced a non-cover");
     Ok(InferResult {
         solution: env.solution_mask().to_vec(),
         solution_size: env.solution_size(),
+        objective: env.objective(),
         evaluations,
         selections,
         sim_time_per_eval: if evaluations > 0 { sim_total / evaluations as f64 } else { 0.0 },
         timing,
         wall_total: wall.elapsed().as_secs_f64(),
     })
+}
+
+/// Solve `g` under `scenario` with a freshly constructed environment.
+pub fn solve_scenario(
+    rt: &Runtime,
+    cfg: &InferCfg,
+    params: &Params,
+    g: &Graph,
+    bucket_n: usize,
+    scenario: Scenario,
+) -> Result<InferResult> {
+    let mut env = scenario.make_env(g.clone());
+    let res = solve_env(rt, cfg, params, g, bucket_n, env.as_mut())?;
+    assert!(
+        scenario.validate(g, &res.solution),
+        "{scenario} inference produced an invalid solution"
+    );
+    Ok(res)
+}
+
+/// Solve the MVC instance `g` with the pretrained `params` on `p` shards.
+pub fn solve_mvc(
+    rt: &Runtime,
+    cfg: &InferCfg,
+    params: &Params,
+    g: &Graph,
+    bucket_n: usize,
+) -> Result<InferResult> {
+    solve_scenario(rt, cfg, params, g, bucket_n, Scenario::Mvc)
 }
 
 #[cfg(test)]

@@ -6,6 +6,7 @@
 //! node selection zeroes the node's local row and its column on every shard
 //! (Fig. 4), sets S, and clears C.
 
+use crate::env::GraphEnv;
 use crate::graph::{Graph, Partition};
 
 /// One shard's tensor state for a batch of B graph instances.
@@ -103,15 +104,35 @@ impl ShardState {
 
     /// Apply "select node v into the solution" for batch element g_idx
     /// (Fig. 4): zero v's row (if local) and v's column (always), set S,
-    /// clear C for v.
+    /// clear C for v. This fuses `set_solution` + `apply_remove` — the MVC
+    /// semantics where selection and residual-removal coincide.
     pub fn apply_select(&mut self, g_idx: usize, v: usize) {
+        self.set_solution(g_idx, v);
+        self.apply_remove(g_idx, v);
+    }
+
+    /// Mark node v as part of batch element g_idx's solution (S only; the
+    /// residual graph is updated separately via `apply_remove`, since
+    /// scenarios differ in what selection removes — MVC drops the node,
+    /// MIS drops its closed neighborhood, MaxCut drops nothing).
+    pub fn set_solution(&mut self, g_idx: usize, v: usize) {
+        let ni = self.ni();
+        assert!(g_idx < self.b && v < self.n());
+        if self.owns(v) {
+            let r = self.part.local(v);
+            self.s[g_idx * ni + r] = 1.0;
+        }
+    }
+
+    /// Remove node v from batch element g_idx's residual graph (Fig. 4):
+    /// zero v's row (if local) and v's column (always), clear C for v.
+    pub fn apply_remove(&mut self, g_idx: usize, v: usize) {
         let (n, ni) = (self.n(), self.ni());
         assert!(g_idx < self.b && v < n);
         let base_a = g_idx * ni * n;
         if self.owns(v) {
             let r = self.part.local(v);
             self.a[base_a + r * n..base_a + (r + 1) * n].fill(0.0);
-            self.s[g_idx * ni + r] = 1.0;
             self.c[g_idx * ni + r] = 0.0;
         }
         // Zero column v across all local rows.
@@ -149,6 +170,49 @@ pub fn shards_for_graph(
         .map(|i| {
             ShardState::from_graphs(part, i, &[g], &[removed], &[solution], &[candidates])
         })
+        .collect()
+}
+
+/// Mirror one environment selection onto the shard tensors (batch element
+/// `g_idx`): set S for the picked node, then diff the environment's removed
+/// mask against `removed_prev` and zero rows/cols of newly removed nodes.
+/// The diff is what makes the mirroring scenario-generic — MVC removes the
+/// node itself, MIS its closed neighborhood, MaxCut nothing — and it is
+/// shared by the sequential (`infer::solve_env`) and batched
+/// (`batch::solve_pack`) loops so their per-graph trajectories cannot
+/// drift apart.
+pub fn mirror_selection(
+    shards: &mut [ShardState],
+    g_idx: usize,
+    v: usize,
+    env: &dyn GraphEnv,
+    removed_prev: &mut [bool],
+) {
+    for sh in shards.iter_mut() {
+        sh.set_solution(g_idx, v);
+    }
+    let rm = env.removed_mask();
+    for u in 0..env.num_nodes() {
+        if rm[u] && !removed_prev[u] {
+            removed_prev[u] = true;
+            for sh in shards.iter_mut() {
+                sh.apply_remove(g_idx, u);
+            }
+        }
+    }
+}
+
+/// Build all P shards for a pack of graph instances (batched inference
+/// entry): one block-diagonal batch element per graph.
+pub fn shards_for_pack(
+    part: Partition,
+    graphs: &[&Graph],
+    removed: &[&[bool]],
+    solution: &[&[bool]],
+    candidates: &[&[bool]],
+) -> Vec<ShardState> {
+    (0..part.p)
+        .map(|i| ShardState::from_graphs(part, i, graphs, removed, solution, candidates))
         .collect()
 }
 
@@ -235,6 +299,41 @@ mod tests {
         assert_eq!(block2.iter().filter(|&&x| x == 1.0).count(), 2);
         assert_eq!(block2[2], 1.0);
         assert_eq!(block2[8], 1.0);
+    }
+
+    #[test]
+    fn set_solution_without_removal_keeps_rows() {
+        // MaxCut semantics: selection marks S but the node stays in the
+        // residual graph (no row/col zeroing).
+        let g = square();
+        let part = Partition::new(4, 2);
+        let mut shards = fresh(part, &g);
+        for sh in shards.iter_mut() {
+            sh.set_solution(0, 1);
+        }
+        assert_eq!(shards[0].s, vec![0.0, 1.0]);
+        assert_eq!(&shards[0].a[4..8], &[1.0, 0.0, 1.0, 0.0]); // row intact
+        assert_eq!(shards[1].a[1], 1.0); // column intact
+    }
+
+    #[test]
+    fn apply_select_equals_solution_plus_remove() {
+        let g = square();
+        let part = Partition::new(4, 2);
+        let mut a = fresh(part, &g);
+        let mut b = fresh(part, &g);
+        for sh in a.iter_mut() {
+            sh.apply_select(0, 2);
+        }
+        for sh in b.iter_mut() {
+            sh.set_solution(0, 2);
+            sh.apply_remove(0, 2);
+        }
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.a, y.a);
+            assert_eq!(x.s, y.s);
+            assert_eq!(x.c, y.c);
+        }
     }
 
     #[test]

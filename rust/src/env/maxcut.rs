@@ -56,8 +56,8 @@ impl MaxCutEnv {
 }
 
 impl GraphEnv for MaxCutEnv {
-    fn num_nodes(&self) -> usize {
-        self.graph.n
+    fn graph(&self) -> &Graph {
+        &self.graph
     }
 
     fn step(&mut self, v: usize) -> (f32, bool) {
@@ -83,6 +83,10 @@ impl GraphEnv for MaxCutEnv {
     fn done(&self) -> bool {
         // Terminate when no candidate addition improves the cut.
         !(0..self.graph.n).any(|v| self.is_candidate(v) && self.gain(v) > 0)
+    }
+
+    fn objective(&self) -> f64 {
+        self.cut_value as f64
     }
 }
 

@@ -1,0 +1,178 @@
+//! Maximum Independent Set environment — third scenario for the batched
+//! solve engine (Fig. 1's pluggable-environment point, like MaxCut).
+//!
+//! State: independent set S, residual graph with selected nodes *and their
+//! neighbors* removed (selecting v forecloses its whole neighborhood, so the
+//! residual update zeroes the closed neighborhood's rows/columns). Action:
+//! select any surviving node. Reward: +1 per selected node (maximization).
+//! Done: the residual graph is empty — the set is then maximal by
+//! construction, and isolated nodes are candidates too (they always belong
+//! to some maximum independent set).
+
+use super::GraphEnv;
+use crate::graph::Graph;
+
+#[derive(Debug, Clone)]
+pub struct MisEnv {
+    pub graph: Graph,
+    in_set: Vec<bool>,
+    /// Selected nodes plus their neighbors (dropped from the residual graph).
+    removed: Vec<bool>,
+    remaining: usize,
+}
+
+impl MisEnv {
+    pub fn new(graph: Graph) -> MisEnv {
+        MisEnv {
+            in_set: vec![false; graph.n],
+            removed: vec![false; graph.n],
+            remaining: graph.n,
+            graph,
+        }
+    }
+
+    /// Nodes still in the residual graph.
+    pub fn remaining_nodes(&self) -> usize {
+        self.remaining
+    }
+
+    /// Verify independence: no edge with both endpoints selected.
+    pub fn is_independent_set(graph: &Graph, sol: &[bool]) -> bool {
+        graph.edges().iter().all(|&(u, v)| !(sol[u as usize] && sol[v as usize]))
+    }
+
+    /// Verify maximality: every unselected node has a selected neighbor
+    /// (no node can be added without breaking independence).
+    pub fn is_maximal(graph: &Graph, sol: &[bool]) -> bool {
+        (0..graph.n).all(|v| {
+            sol[v] || graph.neighbors(v).iter().any(|&u| sol[u as usize])
+        })
+    }
+}
+
+impl GraphEnv for MisEnv {
+    fn graph(&self) -> &Graph {
+        &self.graph
+    }
+
+    fn step(&mut self, v: usize) -> (f32, bool) {
+        assert!(self.is_candidate(v), "node {v} is not a candidate");
+        self.in_set[v] = true;
+        self.removed[v] = true;
+        self.remaining -= 1;
+        for &u in self.graph.neighbors(v) {
+            let u = u as usize;
+            if !self.removed[u] {
+                self.removed[u] = true;
+                self.remaining -= 1;
+            }
+        }
+        (1.0, self.done())
+    }
+
+    fn is_candidate(&self, v: usize) -> bool {
+        v < self.graph.n && !self.removed[v]
+    }
+
+    fn solution_mask(&self) -> &[bool] {
+        &self.in_set
+    }
+
+    fn removed_mask(&self) -> &[bool] {
+        &self.removed
+    }
+
+    fn done(&self) -> bool {
+        self.remaining == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::util::prop;
+    use crate::util::rng::Pcg32;
+
+    fn path4() -> Graph {
+        Graph::from_edges(4, &[(0, 1), (1, 2), (2, 3)]).unwrap()
+    }
+
+    #[test]
+    fn selecting_removes_closed_neighborhood() {
+        let mut env = MisEnv::new(path4());
+        assert_eq!(env.remaining_nodes(), 4);
+        let (r, done) = env.step(1);
+        assert_eq!(r, 1.0);
+        assert!(!done);
+        // 0, 1, 2 removed; only 3 survives.
+        assert!(!env.is_candidate(0));
+        assert!(!env.is_candidate(2));
+        assert!(env.is_candidate(3));
+        let (r, done) = env.step(3);
+        assert_eq!(r, 1.0);
+        assert!(done);
+        assert!(MisEnv::is_independent_set(&env.graph, env.solution_mask()));
+        assert!(MisEnv::is_maximal(&env.graph, env.solution_mask()));
+        assert_eq!(env.solution_size(), 2);
+    }
+
+    #[test]
+    fn isolated_nodes_are_candidates() {
+        let g = Graph::from_edges(3, &[(0, 1)]).unwrap();
+        let mut env = MisEnv::new(g);
+        assert!(env.is_candidate(2));
+        env.step(2);
+        assert!(!env.done());
+        env.step(0);
+        assert!(env.done());
+        assert_eq!(env.solution_size(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "not a candidate")]
+    fn rejects_removed_node() {
+        let mut env = MisEnv::new(path4());
+        env.step(1);
+        env.step(0); // removed as a neighbor of 1
+    }
+
+    #[test]
+    fn prop_episode_yields_maximal_independent_set() {
+        prop::check_msg(
+            "mis-episode",
+            25,
+            |r| {
+                let n = 8 + r.gen_range(40);
+                (generators::erdos_renyi(n, 0.2, r), r.next_u64())
+            },
+            |(g, seed)| {
+                let mut rng = Pcg32::seeded(*seed);
+                let mut env = MisEnv::new(g.clone());
+                let mut steps = 0usize;
+                while !env.done() {
+                    let cands: Vec<usize> =
+                        (0..g.n).filter(|&v| env.is_candidate(v)).collect();
+                    if cands.is_empty() {
+                        return Err("no candidates but not done".into());
+                    }
+                    env.step(cands[rng.gen_range(cands.len())]);
+                    steps += 1;
+                    if steps > g.n {
+                        return Err("episode exceeded |V| steps".into());
+                    }
+                }
+                if !MisEnv::is_independent_set(g, env.solution_mask()) {
+                    return Err("final solution is not independent".into());
+                }
+                if !MisEnv::is_maximal(g, env.solution_mask()) {
+                    return Err("final solution is not maximal".into());
+                }
+                if env.solution_size() != steps {
+                    return Err("solution size != steps".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}

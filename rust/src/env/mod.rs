@@ -8,14 +8,24 @@
 
 pub mod mvc;
 pub mod maxcut;
+pub mod mis;
 
 pub use mvc::MvcEnv;
 pub use maxcut::MaxCutEnv;
+pub use mis::MisEnv;
+
+use crate::graph::Graph;
+use anyhow::bail;
 
 /// A graph optimization environment over node-selection actions.
 pub trait GraphEnv {
+    /// The underlying (unpadded) graph instance.
+    fn graph(&self) -> &Graph;
+
     /// Number of nodes of the underlying (unpadded) graph.
-    fn num_nodes(&self) -> usize;
+    fn num_nodes(&self) -> usize {
+        self.graph().n
+    }
 
     /// Apply action `v` (select node v). Returns (reward, done).
     fn step(&mut self, v: usize) -> (f32, bool);
@@ -36,5 +46,96 @@ pub trait GraphEnv {
     /// Size of the current partial solution.
     fn solution_size(&self) -> usize {
         self.solution_mask().iter().filter(|&&b| b).count()
+    }
+
+    /// Scenario-specific objective value of the current solution (defaults
+    /// to the solution size; MaxCut reports the cut weight instead).
+    fn objective(&self) -> f64 {
+        self.solution_size() as f64
+    }
+}
+
+/// The problem scenarios the solve engines can run. Each scenario shares
+/// the same node-selection action space and policy model; only the
+/// environment semantics differ (Fig. 1's pluggable-environment point).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Scenario {
+    /// Minimum Vertex Cover (the paper's driving problem).
+    Mvc,
+    /// Maximum Cut (greedy-termination convention).
+    MaxCut,
+    /// Maximum Independent Set.
+    Mis,
+}
+
+impl Scenario {
+    pub fn parse(s: &str) -> anyhow::Result<Scenario> {
+        match s.to_ascii_lowercase().as_str() {
+            "mvc" => Ok(Scenario::Mvc),
+            "maxcut" | "max-cut" => Ok(Scenario::MaxCut),
+            "mis" => Ok(Scenario::Mis),
+            other => bail!("unknown scenario '{other}' (mvc|maxcut|mis)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Scenario::Mvc => "mvc",
+            Scenario::MaxCut => "maxcut",
+            Scenario::Mis => "mis",
+        }
+    }
+
+    /// Instantiate the environment for `g`.
+    pub fn make_env(self, g: Graph) -> Box<dyn GraphEnv> {
+        match self {
+            Scenario::Mvc => Box::new(MvcEnv::new(g)),
+            Scenario::MaxCut => Box::new(MaxCutEnv::new(g)),
+            Scenario::Mis => Box::new(MisEnv::new(g)),
+        }
+    }
+
+    /// Whether `sol` is a structurally valid complete solution for `g`
+    /// (MVC: a vertex cover; MIS: an independent set; MaxCut: any subset).
+    pub fn validate(self, g: &Graph, sol: &[bool]) -> bool {
+        match self {
+            Scenario::Mvc => MvcEnv::is_vertex_cover(g, sol),
+            Scenario::MaxCut => true,
+            Scenario::Mis => MisEnv::is_independent_set(g, sol),
+        }
+    }
+}
+
+impl std::fmt::Display for Scenario {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scenario_parse_roundtrip() {
+        for s in [Scenario::Mvc, Scenario::MaxCut, Scenario::Mis] {
+            assert_eq!(Scenario::parse(s.name()).unwrap(), s);
+        }
+        assert_eq!(Scenario::parse("MaxCut").unwrap(), Scenario::MaxCut);
+        assert!(Scenario::parse("tsp").is_err());
+    }
+
+    #[test]
+    fn make_env_dispatches() {
+        let g = Graph::from_edges(3, &[(0, 1), (1, 2)]).unwrap();
+        let mut env = Scenario::Mvc.make_env(g.clone());
+        assert_eq!(env.num_nodes(), 3);
+        env.step(1);
+        assert!(env.done());
+        assert!(Scenario::Mvc.validate(&g, env.solution_mask()));
+
+        let mis = Scenario::Mis.make_env(g.clone());
+        assert!(mis.is_candidate(0));
+        assert_eq!(mis.objective(), 0.0);
     }
 }

@@ -40,8 +40,8 @@ impl MvcEnv {
 }
 
 impl GraphEnv for MvcEnv {
-    fn num_nodes(&self) -> usize {
-        self.graph.n
+    fn graph(&self) -> &Graph {
+        &self.graph
     }
 
     fn step(&mut self, v: usize) -> (f32, bool) {

@@ -9,8 +9,10 @@ pub mod csr;
 pub mod coo;
 pub mod generators;
 pub mod partition;
+pub mod pack;
 pub mod io;
 pub mod stats;
 
 pub use csr::Graph;
+pub use pack::PackLayout;
 pub use partition::Partition;

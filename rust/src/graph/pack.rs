@@ -1,0 +1,154 @@
+//! Block-diagonal graph packing for graph-level batched processing.
+//!
+//! B independent graphs are packed into one sharded state whose virtual
+//! adjacency is block-diagonal: slot `s` owns the padded row/column block
+//! `[s*N, (s+1)*N)` of an (B·N)×(B·N) matrix. Because the off-diagonal
+//! blocks are identically zero, the physical realization is the stage batch
+//! dimension (`ShardState` stores B×NI×N) — per-slot blocks never interact,
+//! which is exactly what makes batched inference per-graph-equivalent to
+//! sequential runs. This module owns the id arithmetic: mapping a (slot,
+//! local node) pair to its packed id and back, so solutions can be
+//! round-tripped out of the pack.
+
+/// The layout of one pack: a common padded bucket size and the per-slot
+/// unpadded graph sizes (a size of 0 marks an empty padding slot).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PackLayout {
+    /// Padded per-graph bucket size N (divisible by the shard lcm).
+    pub bucket_n: usize,
+    /// Unpadded node count of the graph in each slot.
+    pub sizes: Vec<usize>,
+}
+
+impl PackLayout {
+    pub fn new(bucket_n: usize, sizes: Vec<usize>) -> PackLayout {
+        assert!(bucket_n > 0, "bucket must be positive");
+        assert!(
+            sizes.iter().all(|&n| n <= bucket_n),
+            "a slot's graph exceeds the bucket size {bucket_n}"
+        );
+        PackLayout { bucket_n, sizes }
+    }
+
+    /// Number of slots B in the pack (including empty padding slots).
+    pub fn slots(&self) -> usize {
+        self.sizes.len()
+    }
+
+    /// Total padded node count across the pack (the virtual block-diagonal
+    /// matrix is this many rows/columns).
+    pub fn total_padded(&self) -> usize {
+        self.slots() * self.bucket_n
+    }
+
+    /// Packed id of local node `v` of the graph in `slot`.
+    pub fn pack_id(&self, slot: usize, v: usize) -> usize {
+        assert!(slot < self.slots(), "slot {slot} out of range");
+        assert!(v < self.sizes[slot], "node {v} outside slot {slot}'s graph");
+        slot * self.bucket_n + v
+    }
+
+    /// Inverse of `pack_id`: (slot, local node). Panics on ids that fall in
+    /// padding (no graph node lives there).
+    pub fn unpack_id(&self, id: usize) -> (usize, usize) {
+        let slot = id / self.bucket_n;
+        let v = id % self.bucket_n;
+        assert!(slot < self.slots(), "packed id {id} out of range");
+        assert!(v < self.sizes[slot], "packed id {id} falls in slot {slot}'s padding");
+        (slot, v)
+    }
+
+    /// The packed-id range holding slot `slot`'s block (including padding).
+    pub fn slot_range(&self, slot: usize) -> std::ops::Range<usize> {
+        assert!(slot < self.slots());
+        slot * self.bucket_n..(slot + 1) * self.bucket_n
+    }
+
+    /// Whether a packed id addresses a real graph node (not padding).
+    pub fn is_real(&self, id: usize) -> bool {
+        let slot = id / self.bucket_n;
+        slot < self.slots() && id % self.bucket_n < self.sizes[slot]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let layout = PackLayout::new(24, vec![20, 17, 24, 0, 5]);
+        for slot in 0..layout.slots() {
+            for v in 0..layout.sizes[slot] {
+                let id = layout.pack_id(slot, v);
+                assert_eq!(layout.unpack_id(id), (slot, v));
+                assert!(layout.is_real(id));
+            }
+        }
+        assert_eq!(layout.total_padded(), 5 * 24);
+    }
+
+    #[test]
+    fn padding_is_not_real() {
+        let layout = PackLayout::new(12, vec![10, 12]);
+        assert!(!layout.is_real(10)); // slot 0 padding
+        assert!(!layout.is_real(11));
+        assert!(layout.is_real(12)); // slot 1 node 0
+        assert!(layout.is_real(23));
+        assert!(!layout.is_real(24)); // past the pack
+        // Empty slot: nothing is real in its whole block.
+        let e = PackLayout::new(12, vec![0, 3]);
+        assert!((0..12).all(|id| !e.is_real(id)));
+    }
+
+    #[test]
+    fn slot_ranges_tile_the_pack() {
+        let layout = PackLayout::new(24, vec![20, 24, 8]);
+        let mut covered = vec![0u8; layout.total_padded()];
+        for slot in 0..layout.slots() {
+            for id in layout.slot_range(slot) {
+                covered[id] += 1;
+            }
+        }
+        assert!(covered.iter().all(|&c| c == 1));
+    }
+
+    #[test]
+    #[should_panic(expected = "padding")]
+    fn unpack_rejects_padding_ids() {
+        PackLayout::new(24, vec![20]).unpack_id(21);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds the bucket")]
+    fn rejects_oversized_slot() {
+        PackLayout::new(12, vec![13]);
+    }
+
+    #[test]
+    fn prop_roundtrip_all_layouts() {
+        prop::check(
+            "pack-roundtrip",
+            50,
+            |r| {
+                let bucket = 12 * (1 + r.gen_range(4));
+                let slots = 1 + r.gen_range(8);
+                let sizes: Vec<usize> =
+                    (0..slots).map(|_| r.gen_range(bucket + 1)).collect();
+                (bucket, sizes)
+            },
+            |(bucket, sizes)| {
+                let layout = PackLayout::new(*bucket, sizes.clone());
+                (0..layout.slots()).all(|s| {
+                    (0..layout.sizes[s]).all(|v| {
+                        let id = layout.pack_id(s, v);
+                        layout.unpack_id(id) == (s, v)
+                            && layout.slot_range(s).contains(&id)
+                            && layout.is_real(id)
+                    })
+                })
+            },
+        );
+    }
+}

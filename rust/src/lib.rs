@@ -14,4 +14,5 @@ pub mod model;
 pub mod collective;
 pub mod runtime;
 pub mod coordinator;
+pub mod batch;
 pub mod analysis;

@@ -5,6 +5,7 @@
 //!   train  [--opts]              distributed RL training (Alg. 5)
 //!   infer  [--opts]              distributed RL inference (Alg. 4)
 //!   solve  [--opts]              classical baselines (exact / greedy / 2-approx)
+//!   batch-solve [--opts]         batched inference over a job manifest (§Batch)
 
 use oggm::util::cli::Args;
 
@@ -16,9 +17,10 @@ fn main() {
         "train" => oggm::coordinator::cmd::cmd_train(&args),
         "infer" => oggm::coordinator::cmd::cmd_infer(&args),
         "solve" => oggm::coordinator::cmd::cmd_solve(&args),
+        "batch-solve" => oggm::coordinator::cmd::cmd_batch_solve(&args),
         _ => {
             eprintln!(
-                "usage: oggm <info|train|infer|solve> [--key value ...]\n\
+                "usage: oggm <info|train|infer|solve|batch-solve> [--key value ...]\n\
                  see README.md for options"
             );
             Ok(())

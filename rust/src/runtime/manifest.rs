@@ -88,22 +88,62 @@ impl Manifest {
         self.entries.contains_key(name)
     }
 
-    /// Smallest compiled bucket N that fits a graph of `n` nodes with `p`
-    /// shards at batch size `b` (inference stages).
-    pub fn bucket_for(&self, n: usize, p: usize, b: usize) -> Result<usize> {
+    /// Smallest compiled q_scores bucket N that fits n nodes on p shards,
+    /// among entries additionally satisfying `pred`. Shared core of
+    /// `bucket_for` / `bucket_for_any_batch` so bucket-selection rules
+    /// cannot drift between the single-graph and batched paths.
+    fn smallest_bucket(
+        &self,
+        n: usize,
+        p: usize,
+        pred: impl Fn(&ArtifactInfo) -> bool,
+    ) -> Option<usize> {
         self.entries
             .values()
             .filter(|e| {
-                e.stage == "q_scores" && e.b == b && e.n >= n && e.n % p == 0 && e.ni == e.n / p
+                e.stage == "q_scores" && e.n >= n && e.n % p == 0 && e.ni == e.n / p && pred(e)
             })
             .map(|e| e.n)
             .min()
-            .with_context(|| {
-                format!(
-                    "no compiled bucket fits n={n}, P={p}, B={b}; \
-                     add one to python/compile/configs.py and re-run `make artifacts`"
-                )
-            })
+    }
+
+    /// Smallest compiled bucket N that fits a graph of `n` nodes with `p`
+    /// shards at batch size `b` (inference stages).
+    pub fn bucket_for(&self, n: usize, p: usize, b: usize) -> Result<usize> {
+        self.smallest_bucket(n, p, |e| e.b == b).with_context(|| {
+            format!(
+                "no compiled bucket fits n={n}, P={p}, B={b}; \
+                 add one to python/compile/configs.py and re-run `make artifacts`"
+            )
+        })
+    }
+
+    /// Batch sizes with compiled fwd stages at bucket `n`, shard height
+    /// `ni`, ascending. These are the pack capacities the batched solve
+    /// engine can step through (eviction/compaction drops to the smallest
+    /// capacity that still fits the active graphs).
+    pub fn batch_sizes(&self, n: usize, ni: usize) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .entries
+            .values()
+            .filter(|e| e.stage == "q_scores" && e.n == n && e.ni == ni)
+            .map(|e| e.b)
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Smallest compiled bucket N that fits a graph of `n` nodes with `p`
+    /// shards at *any* batch size (the batched engine picks capacities per
+    /// step from `batch_sizes`).
+    pub fn bucket_for_any_batch(&self, n: usize, p: usize) -> Result<usize> {
+        self.smallest_bucket(n, p, |_| true).with_context(|| {
+            format!(
+                "no compiled bucket fits n={n}, P={p} at any batch size; \
+                 add one to python/compile/configs.py and re-run `make artifacts`"
+            )
+        })
     }
 
     /// All (n, ni) fwd shard configs available for batch size b.
@@ -149,6 +189,10 @@ mod tests {
         assert_eq!(e.num_outputs, 1);
         assert!(m.get("nope").is_err());
         assert_eq!(m.available_fwd_shapes(1), vec![(24, 12)]);
+        assert_eq!(m.batch_sizes(24, 12), vec![1]);
+        assert!(m.batch_sizes(24, 24).is_empty());
+        assert_eq!(m.bucket_for_any_batch(20, 2).unwrap(), 24);
+        assert!(m.bucket_for_any_batch(20, 4).is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
 

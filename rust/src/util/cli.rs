@@ -11,17 +11,33 @@ pub struct Args {
     pub flags: Vec<String>,
 }
 
+/// Whether a token introduces an option (`--key` / `--flag`), as opposed to
+/// being a value or positional. Single-dash numerics (`-3.5`, `-1,-2`) are
+/// ordinary values; a double-dash token continuing with a digit, dot, or
+/// further dash (`--3.5`, `---`) is never treated as an option *name* — it
+/// passes through verbatim as a value/positional (callers parsing it
+/// numerically will still reject the literal dashes).
+fn is_option_token(tok: &str) -> bool {
+    match tok.strip_prefix("--") {
+        Some(rest) => {
+            !matches!(rest.chars().next(), Some(c) if c.is_ascii_digit() || c == '.' || c == '-')
+        }
+        None => false,
+    }
+}
+
 impl Args {
     /// Parse from an explicit iterator (tests) or `std::env::args` (main).
     pub fn parse<I: IntoIterator<Item = String>>(it: I) -> Args {
         let mut args = Args::default();
         let mut iter = it.into_iter().peekable();
         while let Some(a) = iter.next() {
-            if let Some(key) = a.strip_prefix("--") {
+            if is_option_token(&a) {
+                let key = a.strip_prefix("--").unwrap();
                 // `--key=value`, `--key value`, or bare `--flag`.
                 if let Some((k, v)) = key.split_once('=') {
                     args.options.insert(k.to_string(), v.to_string());
-                } else if iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                } else if iter.peek().map(|n| !is_option_token(n)).unwrap_or(false) {
                     let v = iter.next().unwrap();
                     args.options.insert(key.to_string(), v);
                 } else {
@@ -95,5 +111,51 @@ mod tests {
         assert_eq!(a.get_usize_list("p", &[1]), vec![1, 2, 6]);
         assert_eq!(a.get_usize_list("q", &[4]), vec![4]);
         assert_eq!(a.get_or("mode", "sim"), "sim");
+    }
+
+    #[test]
+    fn negative_number_values() {
+        // `--key value` must accept negative numbers in both spellings.
+        let a = parse("--offset -3.5 --bias=-2 --temps -1,-2,3 --lr 1e-3");
+        assert_eq!(a.get_f64("offset", 0.0), -3.5);
+        assert_eq!(a.get_f64("bias", 0.0), -2.0);
+        assert_eq!(a.get("temps"), Some("-1,-2,3"));
+        assert_eq!(a.get_f64("lr", 0.0), 1e-3);
+        assert!(a.flags.is_empty(), "negative values misread as flags: {:?}", a.flags);
+    }
+
+    #[test]
+    fn negative_value_after_flag_and_option_boundaries() {
+        // A flag followed by an option stays a flag; a flag followed by a
+        // negative number swallows it as the value (grammar is untyped).
+        let a = parse("solve --multi --budget -0.5 --verbose");
+        assert_eq!(a.positional, vec!["solve"]);
+        assert!(a.has_flag("multi"));
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.get_f64("budget", 0.0), -0.5);
+    }
+
+    #[test]
+    fn option_token_classification() {
+        assert!(is_option_token("--key"));
+        assert!(is_option_token("--k"));
+        assert!(!is_option_token("-3.5"));
+        // Double-dash numerics never become option *names*; as values they
+        // pass through verbatim (numeric parsing rejects them downstream).
+        assert!(!is_option_token("--3.5"));
+        assert!(!is_option_token("--.5"));
+        assert!(!is_option_token("---"));
+        assert!(!is_option_token("positional"));
+        assert!(!is_option_token("-x"));
+        let a = parse("--offset --3.5");
+        assert_eq!(a.get("offset"), Some("--3.5"));
+    }
+
+    #[test]
+    fn trailing_option_with_negative_value() {
+        let a = parse("--delta -1");
+        assert_eq!(a.get_f64("delta", 0.0), -1.0);
+        let b = parse("--delta");
+        assert!(b.has_flag("delta"));
     }
 }

@@ -1,0 +1,212 @@
+//! Batching invariants (ISSUE 1 acceptance):
+//!  - block-diagonal pack/unpack round-trips node ids and per-graph blocks;
+//!  - batched inference over B graphs produces identical per-graph
+//!    solutions to B sequential single-graph runs (same seeds) for MVC,
+//!    MaxCut, and MIS at P in {1, 2, 4};
+//!  - eviction/compaction changes the schedule, never the solutions.
+//!
+//! Equivalence is asserted on solutions, not raw scores: the b=1 and b>=2
+//! executables differ by ~2e-7 (XLA reduction patterns vary per batch
+//! size; see DESIGN.md §4 Numerics), which argmax selection absorbs.
+//!
+//! Runtime-dependent tests skip when artifacts are not built (same
+//! convention as e2e.rs) or when the batched shapes are not compiled.
+
+use oggm::batch::{run_queue, solve_pack, BatchCfg, Job};
+use oggm::coordinator::infer::{solve_scenario, InferCfg};
+use oggm::coordinator::selection::SelectionPolicy;
+use oggm::coordinator::shard::{shards_for_graph, ShardState};
+use oggm::env::Scenario;
+use oggm::graph::{generators, Graph, PackLayout, Partition};
+use oggm::model::Params;
+use oggm::runtime::Runtime;
+use oggm::util::rng::Pcg32;
+
+fn setup() -> Option<Runtime> {
+    if !std::path::Path::new("artifacts/manifest.tsv").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(Runtime::new("artifacts").unwrap())
+}
+
+/// Skip unless the batched fwd shapes for (bucket, p) reach capacity `b`.
+fn has_batch_shapes(rt: &Runtime, bucket: usize, p: usize, b: usize) -> bool {
+    let ok = rt.manifest.batch_sizes(bucket, bucket / p).last().copied().unwrap_or(0) >= b;
+    if !ok {
+        eprintln!(
+            "skipping: no compiled batch-{b} shapes at N={bucket}, P={p} (re-run make artifacts)"
+        );
+    }
+    ok
+}
+
+fn test_graphs(count: usize, seed: u64) -> Vec<Graph> {
+    let mut rng = Pcg32::seeded(seed);
+    (0..count)
+        .map(|i| {
+            if i % 2 == 0 {
+                generators::erdos_renyi(20, 0.2, &mut rng)
+            } else {
+                generators::barabasi_albert(20, 3, &mut rng)
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn packed_blocks_match_single_graph_shards() {
+    // Pure host-side invariant (no runtime): each graph's block of the
+    // packed shard state is byte-identical to the shard built for that
+    // graph alone, and the pack layout round-trips its node ids.
+    let graphs = test_graphs(4, 17);
+    let part = Partition::new(24, 2);
+    let layout = PackLayout::new(24, graphs.iter().map(|g| g.n).collect());
+    for slot in 0..layout.slots() {
+        for v in 0..layout.sizes[slot] {
+            assert_eq!(layout.unpack_id(layout.pack_id(slot, v)), (slot, v));
+        }
+    }
+
+    let removed: Vec<Vec<bool>> = graphs.iter().map(|g| vec![false; g.n]).collect();
+    let sol = removed.clone();
+    let cand: Vec<Vec<bool>> = graphs
+        .iter()
+        .map(|g| (0..g.n).map(|v| g.degree(v) > 0).collect())
+        .collect();
+    for shard in 0..part.p {
+        let g_refs: Vec<&Graph> = graphs.iter().collect();
+        let r_refs: Vec<&[bool]> = removed.iter().map(|v| v.as_slice()).collect();
+        let s_refs: Vec<&[bool]> = sol.iter().map(|v| v.as_slice()).collect();
+        let c_refs: Vec<&[bool]> = cand.iter().map(|v| v.as_slice()).collect();
+        let packed = ShardState::from_graphs(part, shard, &g_refs, &r_refs, &s_refs, &c_refs);
+        let (n, ni) = (part.n, part.ni());
+        for (slot, g) in graphs.iter().enumerate() {
+            let single = shards_for_graph(part, g, &removed[slot], &sol[slot], &cand[slot]);
+            assert_eq!(
+                &packed.a[slot * ni * n..(slot + 1) * ni * n],
+                &single[shard].a[..],
+                "adjacency block diverged (shard {shard}, slot {slot})"
+            );
+            assert_eq!(&packed.s[slot * ni..(slot + 1) * ni], &single[shard].s[..]);
+            assert_eq!(&packed.c[slot * ni..(slot + 1) * ni], &single[shard].c[..]);
+        }
+    }
+}
+
+fn assert_batch_matches_sequential(scenario: Scenario, policy: SelectionPolicy) {
+    let Some(rt) = setup() else { return };
+    let graphs = test_graphs(8, 23);
+    let params = Params::init(32, &mut Pcg32::seeded(42));
+    for p in [1usize, 2, 4] {
+        if !has_batch_shapes(&rt, 24, p, 8) {
+            return;
+        }
+        let mut bcfg = BatchCfg::new(p, 2);
+        bcfg.policy = policy;
+        let batched = solve_pack(&rt, &bcfg, &params, scenario, graphs.clone(), 24).unwrap();
+        assert_eq!(batched.per_graph.len(), graphs.len());
+
+        let mut icfg = InferCfg::new(p, 2);
+        icfg.policy = policy;
+        for (i, g) in graphs.iter().enumerate() {
+            let seq = solve_scenario(&rt, &icfg, &params, g, 24, scenario).unwrap();
+            let b = &batched.per_graph[i];
+            assert!(b.valid, "{scenario} graph {i} invalid at P={p}");
+            assert_eq!(
+                b.solution, seq.solution,
+                "{scenario} graph {i} diverged from sequential at P={p}"
+            );
+            assert_eq!(
+                b.evaluations, seq.evaluations,
+                "{scenario} graph {i} used a different eval count at P={p}"
+            );
+            assert_eq!(b.objective, seq.objective);
+        }
+    }
+}
+
+#[test]
+fn batched_equals_sequential_mvc() {
+    assert_batch_matches_sequential(Scenario::Mvc, SelectionPolicy::Single);
+}
+
+#[test]
+fn batched_equals_sequential_maxcut() {
+    assert_batch_matches_sequential(Scenario::MaxCut, SelectionPolicy::Single);
+}
+
+#[test]
+fn batched_equals_sequential_mis() {
+    assert_batch_matches_sequential(Scenario::Mis, SelectionPolicy::Single);
+}
+
+#[test]
+fn batched_equals_sequential_multi_select() {
+    assert_batch_matches_sequential(Scenario::Mvc, SelectionPolicy::AdaptiveMulti);
+}
+
+#[test]
+fn compaction_preserves_solutions_and_shrinks_rounds() {
+    let Some(rt) = setup() else { return };
+    if !has_batch_shapes(&rt, 24, 2, 8) {
+        return;
+    }
+    let graphs = test_graphs(8, 31);
+    let params = Params::init(32, &mut Pcg32::seeded(7));
+    let mut on = BatchCfg::new(2, 2);
+    on.compact = true;
+    let mut off = on;
+    off.compact = false;
+    let a = solve_pack(&rt, &on, &params, Scenario::Mvc, graphs.clone(), 24).unwrap();
+    let b = solve_pack(&rt, &off, &params, Scenario::Mvc, graphs.clone(), 24).unwrap();
+    for (x, y) in a.per_graph.iter().zip(&b.per_graph) {
+        assert_eq!(x.solution, y.solution, "compaction changed a solution");
+        assert_eq!(x.evaluations, y.evaluations);
+    }
+    assert_eq!(b.repacks, 0);
+    // A graph is active in a contiguous prefix of rounds (rounds 0..evals),
+    // so the active count at round r is #{g : evals_g > r}. With the
+    // compiled capacity ladder {1,2,4,8}, compaction must fire exactly when
+    // some executed round has <= 4 graphs active — i.e. when fewer than 5
+    // graphs survive to the final round.
+    let mut evals: Vec<usize> = a.per_graph.iter().map(|r| r.evaluations).collect();
+    evals.sort_unstable_by(|x, y| y.cmp(x));
+    if evals[4] < evals[0] {
+        assert!(a.repacks > 0, "straggler tail <= 4 active but no compaction: {evals:?}");
+    } else {
+        assert_eq!(a.repacks, 0, "compaction fired with > 4 graphs always active");
+    }
+}
+
+#[test]
+fn queue_groups_and_returns_in_order() {
+    let Some(rt) = setup() else { return };
+    if !has_batch_shapes(&rt, 24, 1, 8) {
+        return;
+    }
+    let params = Params::init(32, &mut Pcg32::seeded(9));
+    let graphs = test_graphs(6, 77);
+    // Interleave scenarios so grouping has to reorder internally.
+    let scenarios =
+        [Scenario::Mvc, Scenario::Mis, Scenario::Mvc, Scenario::Mis, Scenario::Mvc, Scenario::Mvc];
+    let jobs: Vec<Job> = graphs
+        .iter()
+        .zip(scenarios)
+        .enumerate()
+        .map(|(i, (g, s))| Job { id: format!("j{i}"), scenario: s, graph: g.clone() })
+        .collect();
+    let cfg = BatchCfg::new(1, 2);
+    let report = run_queue(&rt, &cfg, &params, &jobs).unwrap();
+    assert_eq!(report.outcomes.len(), jobs.len());
+    for (i, o) in report.outcomes.iter().enumerate() {
+        assert_eq!(o.id, format!("j{i}"), "outcomes out of order");
+        assert_eq!(o.scenario, jobs[i].scenario);
+        assert!(o.valid);
+        assert_eq!(o.solution.len(), o.solution_size);
+    }
+    // Two scenario groups → at least two packs.
+    assert!(report.packs.len() >= 2);
+    let json = report.to_json().render();
+    assert!(json.contains("\"jobs\""));
+}

@@ -1,0 +1,195 @@
+//! Offline vendored stand-in for the `anyhow` crate (the build image has no
+//! crates.io access; see DESIGN.md §Build). Implements exactly the subset
+//! this repo uses — `Error`, `Result`, `Context`, `bail!` / `ensure!` /
+//! `anyhow!`, and the `{:#}` cause-chain formatting — with call-compatible
+//! signatures, so the real crate can be swapped in when a registry is
+//! available.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with the usual default-parameter alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A context-carrying error: an outermost message plus a cause chain.
+pub struct Error(Box<ErrorImpl>);
+
+struct ErrorImpl {
+    msg: String,
+    source: Option<Error>,
+}
+
+impl Error {
+    /// Construct from a displayable message.
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error(Box::new(ErrorImpl { msg: m.to_string(), source: None }))
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(self, ctx: C) -> Error {
+        Error(Box::new(ErrorImpl { msg: ctx.to_string(), source: Some(self) }))
+    }
+
+    /// Messages from outermost context to root cause.
+    pub fn chain(&self) -> Vec<&str> {
+        let mut out = Vec::new();
+        let mut cur = Some(self);
+        while let Some(e) = cur {
+            out.push(e.0.msg.as_str());
+            cur = e.0.source.as_ref();
+        }
+        out
+    }
+
+    /// The root cause's message (innermost in the chain).
+    pub fn root_cause(&self) -> &str {
+        self.chain().last().copied().unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: the full cause chain, colon-separated (anyhow's style).
+            write!(f, "{}", self.chain().join(": "))
+        } else {
+            write!(f, "{}", self.0.msg)
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0.msg)?;
+        let chain = self.chain();
+        if chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// `?`-conversion from any std error; the source chain is flattened into
+// owned messages (the borrowed sources cannot be retained). `Error` itself
+// deliberately does NOT implement std::error::Error, which keeps this
+// blanket impl coherent with the reflexive `From<Error> for Error`.
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut msgs = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            msgs.push(s.to_string());
+            src = s.source();
+        }
+        let mut err = Error::msg(msgs.pop().unwrap());
+        while let Some(m) = msgs.pop() {
+            err = err.context(m);
+        }
+        err
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to results
+/// and options. A single `Into<Error>` bound covers both std errors and
+/// `Error` itself without overlapping impls.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| e.into().context(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Build an `Error` from format arguments.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted `Error`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with a formatted `Error` unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "no such file")
+    }
+
+    #[test]
+    fn context_chains_and_formats() {
+        let r: Result<()> = Err(io_err().into());
+        let e = r.context("reading manifest").unwrap_err();
+        assert_eq!(format!("{e}"), "reading manifest");
+        assert_eq!(format!("{e:#}"), "reading manifest: no such file");
+        assert_eq!(e.root_cause(), "no such file");
+    }
+
+    #[test]
+    fn with_context_on_option() {
+        let v: Option<u32> = None;
+        let e = v.with_context(|| format!("missing {}", "u")).unwrap_err();
+        assert_eq!(format!("{e}"), "missing u");
+    }
+
+    #[test]
+    fn macros_format() {
+        fn f(x: i32) -> Result<()> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            if x > 10 {
+                bail!("x too large: {}", x);
+            }
+            Ok(())
+        }
+        assert!(f(5).is_ok());
+        assert_eq!(format!("{}", f(-1).unwrap_err()), "x must be positive, got -1");
+        assert_eq!(format!("{}", f(11).unwrap_err()), "x too large: 11");
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn f() -> Result<()> {
+            Err::<(), std::io::Error>(io_err())?;
+            Ok(())
+        }
+        assert_eq!(format!("{}", f().unwrap_err()), "no such file");
+    }
+}

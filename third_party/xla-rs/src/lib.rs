@@ -1,0 +1,138 @@
+//! Stub of the vendored `xla-rs` PJRT bindings.
+//!
+//! The real bindings (HLO-text → XlaComputation → PjRtLoadedExecutable on
+//! the PJRT CPU client, adapted from /opt/xla-example/load_hlo) live in the
+//! accelerator build image and are dropped into this directory when
+//! present. Containers without that image still need `cargo build` and
+//! `cargo test -q` to succeed, so this stub mirrors the exact API surface
+//! `rust/src/runtime/exec.rs` uses and fails at *client construction* with
+//! an actionable message. Every artifact-dependent test in the repo first
+//! checks for `artifacts/manifest.tsv` and skips before constructing a
+//! client, so the full test suite passes against the stub.
+
+use std::borrow::Borrow;
+use std::fmt;
+use std::path::Path;
+
+/// Error type of the bindings; implements `std::error::Error` so call
+/// sites can `?` it into `anyhow::Error`.
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what}: PJRT runtime unavailable — this build links the offline \
+         xla-rs stub; vendor the real bindings into third_party/xla-rs \
+         (see DESIGN.md §Build) to execute compiled artifacts"
+    )))
+}
+
+/// PJRT client handle (stub: construction always fails).
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn buffer_from_host_buffer<T: Copy>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        unavailable("PjRtClient::buffer_from_host_buffer")
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+/// Device buffer handle.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Compiled executable handle.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b<B: Borrow<PjRtBuffer>>(&self, _args: &[B]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute_b")
+    }
+}
+
+/// Host-side literal (tuple or dense array).
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        unavailable("Literal::to_tuple")
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+}
+
+/// Parsed HLO module proto.
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// XLA computation wrapper.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_construction_fails_with_guidance() {
+        let err = PjRtClient::cpu().err().expect("stub must refuse to construct");
+        let msg = err.to_string();
+        assert!(msg.contains("stub"), "{msg}");
+        assert!(msg.contains("third_party/xla-rs"), "{msg}");
+    }
+}
