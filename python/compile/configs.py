@@ -17,7 +17,10 @@ K = 32          # graph-embedding dimension (paper Sec. 6.1)
 L = 2           # embedding layers (runtime loop, recorded for reference)
 P_SET = (1, 2, 3, 4, 6)   # device counts exercised (one Summit node = 6 GPUs)
 
-FWD_STAGES = ("embed_pre", "embed_msg", "embed_combine", "q_sum", "q_scores")
+# a_mask is the device-side residual-graph patch for the device-resident
+# coordinator path (Rust DeviceState): emitted alongside every fwd shape so
+# any solvable shape can also be patched in place.
+FWD_STAGES = ("embed_pre", "embed_msg", "embed_combine", "q_sum", "q_scores", "a_mask")
 BWD_STAGES = ("embed_pre_bwd", "embed_msg_bwd", "embed_combine_bwd", "q_scores_bwd")
 
 # Small/medium (bucket, device-set) pairs shared by fwd_shapes() and

@@ -57,6 +57,19 @@ def q_scores(theta5, theta6, theta7, embed, c, sum_all):
     return ref.q_scores_ref(theta5, theta6, theta7, embed, c, sum_all)
 
 
+def a_mask(a, row_mask, col_mask):
+    """Device-side residual-graph update for the device-resident path.
+
+    a [B,NI,N] * row_mask [B,NI] (broadcast over columns) * col_mask [B,N]
+    (broadcast over rows). Node removal (Fig. 4) only ever zeroes rows and
+    columns, so multiplying by 0/1 masks reproduces the host-side update
+    bit-exactly (1.0*x == x, 0.0*x == 0.0 for the 0/1 adjacency entries) —
+    the coordinator uploads two small mask vectors per step instead of the
+    full B*NI*N shard adjacency (rust/src/coordinator/fwd.rs DeviceState).
+    """
+    return a * row_mask[:, :, None] * col_mask[:, None, :]
+
+
 # ---------------------------------------------------------------- backward
 # VJP stages. Data inputs (s, a, c) never need cotangents; the collective
 # adjoints (all-gather of d_nbr, all-reduce of d_sum_all / d_theta) and the
@@ -105,6 +118,7 @@ def example_args(stage: str, b: int, n: int, ni: int, k: int):
     e_bkni = jax.ShapeDtypeStruct((b, k, ni), f32)
     m_bkn = jax.ShapeDtypeStruct((b, k, n), f32)
     v_bk = jax.ShapeDtypeStruct((b, k), f32)
+    v_bn = jax.ShapeDtypeStruct((b, n), f32)
     sc_bni = jax.ShapeDtypeStruct((b, ni), f32)
     table = {
         "embed_pre": [t_k, t_k, t_kk, s_bni, a_bnin],
@@ -112,6 +126,7 @@ def example_args(stage: str, b: int, n: int, ni: int, k: int):
         "embed_combine": [t_kk, e_bkni, e_bkni],
         "q_sum": [e_bkni],
         "q_scores": [t_kk, t_kk, t_2k, e_bkni, s_bni, v_bk],
+        "a_mask": [a_bnin, s_bni, v_bn],
         "embed_pre_bwd": [t_k, t_k, t_kk, s_bni, a_bnin, e_bkni],
         "embed_msg_bwd": [a_bnin, m_bkn],
         "embed_combine_bwd": [t_kk, e_bkni, e_bkni, e_bkni],
@@ -128,6 +143,7 @@ def stage_fn(stage: str, *, use_pallas: bool):
         "embed_combine": lambda *xs: (embed_combine(*xs, use_pallas=use_pallas),),
         "q_sum": lambda *xs: (q_sum(*xs),),
         "q_scores": lambda *xs: (q_scores(*xs),),
+        "a_mask": lambda *xs: (a_mask(*xs),),
         "embed_pre_bwd": lambda *xs: tuple(embed_pre_bwd(*xs)),
         "embed_msg_bwd": lambda *xs: (embed_msg_bwd(*xs),),
         "embed_combine_bwd": lambda *xs: tuple(embed_combine_bwd(*xs)),
@@ -142,6 +158,7 @@ STAGE_NUM_OUTPUTS = {
     "embed_combine": 1,
     "q_sum": 1,
     "q_scores": 1,
+    "a_mask": 1,
     "embed_pre_bwd": 3,
     "embed_msg_bwd": 1,
     "embed_combine_bwd": 3,

@@ -85,6 +85,36 @@ def test_padding_nodes_are_inert():
                     atol=1e-5)
 
 
+@pytest.mark.parametrize("p", [1, 2, 4])
+def test_a_mask_matches_host_row_col_zeroing(p):
+    # The device-resident path patches each shard's adjacency on device with
+    # a_mask instead of re-uploading it (DESIGN.md §6); the 0/1-mask multiply
+    # must reproduce explicit row/column zeroing BIT-exactly, per shard
+    # (rows are shard-local, columns are global — the apply_remove split).
+    b, n = 2, 24
+    ni = n // p
+    key = jax.random.PRNGKey(7)
+    a_full, _, _ = _random_instance(key, b, n)
+    a_full = np.asarray(a_full)
+    removed = [(0, 3), (0, 17), (1, 11)]  # (batch element, global node)
+    for shard in range(p):
+        row0 = shard * ni
+        a = a_full[:, row0:row0 + ni, :]
+        row_mask = np.ones((b, ni), np.float32)
+        col_mask = np.ones((b, n), np.float32)
+        want = a.copy()
+        for g, v in removed:
+            if row0 <= v < row0 + ni:
+                row_mask[g, v - row0] = 0.0
+                want[g, v - row0, :] = 0.0
+            col_mask[g, v] = 0.0
+            want[g, :, v] = 0.0
+        got = np.asarray(stages.a_mask(
+            jnp.asarray(a), jnp.asarray(row_mask), jnp.asarray(col_mask)))
+        assert (got.view(np.uint32) == want.view(np.uint32)).all(), \
+            f"a_mask diverges from host zeroing on shard {shard} (P={p})"
+
+
 def test_q_sa_masking_selects_action_column():
     params, a, s, c, onehot, targets = _setup(b=4, n=24, seed=5)
     scores = model.full_forward(params, a, s, c)

@@ -1,0 +1,165 @@
+//! bench_transfer: per-step h2d/d2h transfer accounting, device-resident
+//! (cached) vs fresh-upload (uncached) paths, on a 200-node MVC solve.
+//!
+//! The device-residency claim (DESIGN.md §6): after step 1 pays for the
+//! θ/A uploads, each further step moves only the selection deltas (two
+//! small masks) plus S/C — so steady-state h2d bytes/step drop >= 10x vs
+//! the fresh-upload path, which re-uploads the full B×NI×N adjacency and
+//! all seven θ tensors every evaluation. Emits BENCH_transfer.json.
+//!
+//! Check mode: without artifacts (CI containers) the bench prints a skip
+//! notice and exits 0, like the artifact-gated tests.
+
+#[path = "common.rs"]
+mod common;
+
+use oggm::coordinator::engine::EngineCfg;
+use oggm::coordinator::fwd::{forward_dev, DeviceState};
+use oggm::coordinator::infer::{solve_mvc, InferCfg};
+use oggm::coordinator::metrics::{exec_stats_json, Table};
+use oggm::coordinator::shard::{mirror_selection, shards_for_graph, ShardState};
+use oggm::env::{GraphEnv, Scenario};
+use oggm::graph::Partition;
+use oggm::model::Params;
+use oggm::runtime::Runtime;
+use oggm::util::json::Json;
+use oggm::util::rng::Pcg32;
+use std::time::Instant;
+
+/// Drive the cached solve manually so per-step byte deltas are observable;
+/// returns (per-step h2d bytes, per-step d2h bytes, per-step wall seconds).
+fn cached_steps(
+    rt: &Runtime,
+    params: &Params,
+    g: &oggm::graph::Graph,
+    bucket: usize,
+    max_steps: usize,
+) -> (Vec<u64>, Vec<u64>, Vec<f64>) {
+    let part = Partition::new(bucket, 1);
+    let cfg = EngineCfg::new(1, 2);
+    let mut env = Scenario::Mvc.make_env(g.clone());
+    let candidates: Vec<bool> = (0..g.n).map(|v| env.is_candidate(v)).collect();
+    let mut shards: Vec<ShardState> =
+        shards_for_graph(part, g, env.removed_mask(), env.solution_mask(), &candidates);
+    let mut removed_prev: Vec<bool> = env.removed_mask().to_vec();
+    let (mut h2d, mut d2h, mut wall) = (Vec::new(), Vec::new(), Vec::new());
+    let mut snap = rt.stats();
+    let mut dev = DeviceState::new(rt, params, &mut shards).unwrap();
+    while !env.done() && h2d.len() < max_steps {
+        // Time the FULL step (sync + forward + selection + state mirror),
+        // so the wall column is like-for-like with the uncached path's
+        // whole-solve-per-evaluation number.
+        let t0 = Instant::now();
+        dev.sync(&mut shards).unwrap();
+        let out = forward_dev(rt, &cfg, params, &shards, false, true, Some(&dev)).unwrap();
+        let delta = rt.stats().since(&snap);
+        h2d.push(delta.h2d_bytes);
+        d2h.push(delta.d2h_bytes);
+        snap = rt.stats();
+        let v = (0..g.n)
+            .filter(|&v| env.is_candidate(v))
+            .max_by(|&a, &b| out.scores[a].partial_cmp(&out.scores[b]).unwrap())
+            .unwrap();
+        env.step(v);
+        mirror_selection(&mut shards, 0, v, &*env, &mut removed_prev);
+        for sh in shards.iter_mut() {
+            sh.refresh_candidates(0, |v| env.is_candidate(v));
+        }
+        wall.push(t0.elapsed().as_secs_f64());
+    }
+    (h2d, d2h, wall)
+}
+
+fn mean_u64(v: &[u64]) -> f64 {
+    if v.is_empty() {
+        0.0
+    } else {
+        v.iter().sum::<u64>() as f64 / v.len() as f64
+    }
+}
+
+fn main() {
+    if !oggm::runtime::manifest::default_dir().join("manifest.tsv").exists() {
+        println!("bench_transfer: artifacts not built, skipping (check mode OK)");
+        return;
+    }
+    let rt = common::runtime();
+    let mut rng = Pcg32::seeded(0x7F);
+    let params = common::init_params(&mut rng);
+    let n = 200usize;
+    let bucket = match rt.manifest.bucket_for(n, 1, 1) {
+        Ok(b) => b,
+        Err(e) => {
+            println!("bench_transfer: {e:#}, skipping");
+            return;
+        }
+    };
+    let g = oggm::graph::generators::erdos_renyi(n, 0.15, &mut rng);
+    let steps = common::scaled(20, 6);
+
+    // Warm compiles off the clock for both paths.
+    let mut warm_cfg = InferCfg::new(1, 2);
+    solve_mvc(&rt, &warm_cfg, &params, &g, bucket).unwrap();
+    warm_cfg.device_resident = false;
+    solve_mvc(&rt, &warm_cfg, &params, &g, bucket).unwrap();
+
+    // Uncached: whole solve, averaged per evaluation.
+    let mut fresh_cfg = InferCfg::new(1, 2);
+    fresh_cfg.device_resident = false;
+    let before = rt.stats();
+    let t0 = Instant::now();
+    let res = solve_mvc(&rt, &fresh_cfg, &params, &g, bucket).unwrap();
+    let fresh_wall = t0.elapsed().as_secs_f64();
+    let fresh = rt.stats().since(&before);
+    let evals = res.evaluations as f64;
+    let (f_h2d, f_d2h, f_wall) =
+        (fresh.h2d_bytes as f64 / evals, fresh.d2h_bytes as f64 / evals, fresh_wall / evals);
+
+    // Cached: per-step series; steady state = steps 2+.
+    let (h2d, d2h, wall) = cached_steps(&rt, &params, &g, bucket, steps);
+    assert!(h2d.len() >= 3, "solve ended before steady state: {h2d:?}");
+    let (c_h2d_1, c_h2d) = (h2d[0] as f64, mean_u64(&h2d[1..]));
+    let c_d2h = mean_u64(&d2h[1..]);
+    let c_wall = wall[1..].iter().sum::<f64>() / (wall.len() - 1) as f64;
+    let reduction = f_h2d / c_h2d.max(1.0);
+
+    let mut t = Table::new(
+        &format!("bench_transfer: {n}-node MVC (bucket {bucket}, P=1), per step"),
+        &["h2d_B", "d2h_B", "wall_s"],
+    );
+    t.row("uncached", vec![f_h2d, f_d2h, f_wall]);
+    t.row("cached_step1", vec![c_h2d_1, d2h[0] as f64, wall[0]]);
+    t.row("cached_steady", vec![c_h2d, c_d2h, c_wall]);
+    common::emit(&t);
+    println!(
+        "bench_transfer: steady-state h2d {c_h2d:.0} B/step vs uncached {f_h2d:.0} B/step \
+         ({reduction:.1}x reduction{})",
+        if reduction >= 10.0 { "" } else { " — BELOW the 10x target" }
+    );
+
+    let json = Json::obj()
+        .set("bench", "transfer")
+        .set("n", n)
+        .set("bucket", bucket)
+        .set("p", 1usize)
+        .set("evaluations", res.evaluations)
+        .set(
+            "uncached",
+            Json::obj()
+                .set("h2d_bytes_per_step", f_h2d)
+                .set("d2h_bytes_per_step", f_d2h)
+                .set("wall_per_step", f_wall),
+        )
+        .set(
+            "cached",
+            Json::obj()
+                .set("step1_h2d_bytes", c_h2d_1)
+                .set("steady_h2d_bytes_per_step", c_h2d)
+                .set("steady_d2h_bytes_per_step", c_d2h)
+                .set("steady_wall_per_step", c_wall),
+        )
+        .set("h2d_reduction", reduction)
+        .set("solve_exec_stats", exec_stats_json(&fresh));
+    std::fs::write("BENCH_transfer.json", json.render()).expect("write BENCH_transfer.json");
+    println!("bench_transfer: wrote BENCH_transfer.json; OK");
+}

@@ -8,10 +8,11 @@
 //! end-to-end latency per request as well as per-pack amortized step cost.
 
 use crate::batch::solve::{solve_pack, BatchCfg};
+use crate::coordinator::metrics::exec_stats_json;
 use crate::env::Scenario;
 use crate::graph::Graph;
 use crate::model::Params;
-use crate::runtime::Runtime;
+use crate::runtime::{ExecStats, Runtime};
 use crate::util::json::Json;
 use anyhow::{Context, Result};
 use std::collections::BTreeMap;
@@ -57,6 +58,9 @@ pub struct PackStat {
     pub sim_time: f64,
     pub wall_time: f64,
     pub comm_bytes: u64,
+    /// Runtime transfer accounting for this pack (h2d/d2h bytes, stage
+    /// executions, exec time — see DESIGN.md §6).
+    pub exec: ExecStats,
 }
 
 /// Everything `oggm batch-solve` reports.
@@ -102,6 +106,7 @@ impl QueueReport {
                     .set("sim_time", p.sim_time)
                     .set("wall_time", p.wall_time)
                     .set("comm_bytes", p.comm_bytes)
+                    .set("exec", exec_stats_json(&p.exec))
             })
             .collect();
         Json::obj()
@@ -173,6 +178,7 @@ pub fn run_queue(
                 sim_time: res.sim_total,
                 wall_time: res.wall_total,
                 comm_bytes: res.timing.comm_bytes,
+                exec: res.exec,
             });
         }
     }
@@ -215,6 +221,12 @@ mod tests {
                 sim_time: 0.5,
                 wall_time: 0.6,
                 comm_bytes: 1024,
+                exec: ExecStats {
+                    executions: 9,
+                    h2d_bytes: 2048,
+                    d2h_bytes: 96,
+                    ..Default::default()
+                },
             }],
             wall_total: 0.7,
         };
@@ -223,5 +235,9 @@ mod tests {
         assert!(s.contains("\"solution\":[1,4,7]"), "{s}");
         assert!(s.contains("\"capacity\":1"), "{s}");
         assert!(s.contains("\"wall_total\":0.7"), "{s}");
+        // Transfer accounting is surfaced per pack.
+        assert!(s.contains("\"executions\":9"), "{s}");
+        assert!(s.contains("\"h2d_bytes\":2048"), "{s}");
+        assert!(s.contains("\"d2h_bytes\":96"), "{s}");
     }
 }

@@ -18,13 +18,13 @@
 
 use crate::batch::env::BatchEnv;
 use crate::coordinator::engine::{EngineCfg, StepTiming};
-use crate::coordinator::fwd::forward;
+use crate::coordinator::fwd::{forward_dev, DeviceState};
 use crate::coordinator::selection::{select_count, top_d, SelectionPolicy};
 use crate::coordinator::shard::{mirror_selection, shards_for_pack, ShardState};
 use crate::env::Scenario;
 use crate::graph::{Graph, PackLayout, Partition};
 use crate::model::Params;
-use crate::runtime::Runtime;
+use crate::runtime::{ExecStats, Runtime};
 use anyhow::{ensure, Result};
 use std::time::Instant;
 
@@ -37,6 +37,9 @@ pub struct BatchCfg {
     pub skip_zero_layer: bool,
     /// Evict finished graphs and repack to smaller compiled capacities.
     pub compact: bool,
+    /// Hold θ/A on device across rounds (exact; see fwd.rs `DeviceState`).
+    /// A compaction repack invalidates and rebuilds the device buffers.
+    pub device_resident: bool,
 }
 
 impl BatchCfg {
@@ -46,6 +49,7 @@ impl BatchCfg {
             policy: SelectionPolicy::Single,
             skip_zero_layer: true,
             compact: true,
+            device_resident: true,
         }
     }
 }
@@ -83,6 +87,9 @@ pub struct BatchResult {
     pub sim_total: f64,
     /// Wall-clock total.
     pub wall_total: f64,
+    /// Runtime transfer/execution counters accumulated by this pack
+    /// (h2d/d2h bytes, executions, exec time).
+    pub exec: ExecStats,
 }
 
 /// Smallest compiled capacity that fits `want` graphs (capacities are the
@@ -169,6 +176,7 @@ pub fn solve_pack(
         ensure!(g.n <= bucket_n, "graph |V|={} exceeds bucket N={bucket_n}", g.n);
     }
 
+    let stats0 = rt.stats();
     let mut benv = BatchEnv::new(scenario, graphs);
     let empty = Graph::empty(0);
     let mut evals = vec![0usize; benv.len()];
@@ -190,6 +198,21 @@ pub fn solve_pack(
     let mut removed_prev: Vec<Vec<bool>> =
         slots.iter().map(|&gi| benv.env(gi).removed_mask().to_vec()).collect();
 
+    // Device residency (DESIGN.md §6): θ + pack adjacency uploaded once,
+    // kept in sync by per-round deltas; a compaction repack changes the
+    // batch capacity (every buffer shape), so it explicitly invalidates
+    // and rebuilds the device buffers. The one-time upload is booked like
+    // every other transfer so resident-vs-fresh times stay comparable.
+    let mut dev = if cfg.device_resident && !shards.is_empty() {
+        let d = DeviceState::new(rt, params, &mut shards)?;
+        let up_t = d.last_transfer_secs();
+        timing.h2d += up_t;
+        sim_total += up_t;
+        Some(d)
+    } else {
+        None
+    };
+
     while !benv.all_done() {
         // Early-exit compaction: rebuild the pack without finished graphs
         // once a smaller compiled capacity fits the survivors.
@@ -207,11 +230,25 @@ pub fn solve_pack(
                 removed_prev =
                     slots.iter().map(|&gi| benv.env(gi).removed_mask().to_vec()).collect();
                 repacks += 1;
+                if let Some(d) = dev.as_mut() {
+                    d.rebuild(&mut shards)?;
+                    let up_t = d.last_transfer_secs();
+                    timing.h2d += up_t;
+                    sim_total += up_t;
+                }
             }
+        }
+        // Push A deltas from the previous round's selections to the device.
+        if let Some(d) = dev.as_mut() {
+            d.sync(&mut shards)?;
+            let sync_t = d.last_transfer_secs();
+            timing.h2d += sync_t;
+            sim_total += sync_t;
         }
 
         // ONE shared distributed policy evaluation for the whole pack.
-        let out = forward(rt, &cfg.engine, params, &shards, false, cfg.skip_zero_layer)?;
+        let skip0 = cfg.skip_zero_layer;
+        let out = forward_dev(rt, &cfg.engine, params, &shards, false, skip0, dev.as_ref())?;
         rounds += 1;
         sim_total += out.timing.simulated();
         timing.merge(&out.timing);
@@ -273,6 +310,7 @@ pub fn solve_pack(
         timing,
         sim_total,
         wall_total: wall.elapsed().as_secs_f64(),
+        exec: rt.stats().since(&stats0),
     })
 }
 

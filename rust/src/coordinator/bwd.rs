@@ -8,10 +8,11 @@
 //! across shards (≡ the paper's gradient all-reduce of 4K²+4K floats).
 
 use super::engine::{EngineCfg, StepTiming};
-use super::fwd::Activations;
+use super::fwd::{Activations, DeviceState, ThetaViews};
 use super::shard::ShardState;
 use crate::model::Params;
 use crate::runtime::{artifact_name, HostTensor, Input, Runtime};
+use crate::util::add_assign;
 use anyhow::Result;
 use std::time::Instant;
 
@@ -36,22 +37,43 @@ pub fn backward(
     onehot: &[f32],
     targets: &[f32],
 ) -> Result<GradOutput> {
+    backward_dev(rt, cfg, params, shards, acts, onehot, targets, None)
+}
+
+/// `backward` with optional device residency: a [`DeviceState`] shares the
+/// already-uploaded θ and adjacency buffers with the forward pass, so the
+/// τ repeated gradient iterations of §4.5.2 re-upload nothing but the
+/// (small) activations.
+#[allow(clippy::too_many_arguments)]
+pub fn backward_dev(
+    rt: &Runtime,
+    cfg: &EngineCfg,
+    params: &Params,
+    shards: &[ShardState],
+    acts: &Activations,
+    onehot: &[f32],
+    targets: &[f32],
+    dev: Option<&DeviceState>,
+) -> Result<GradOutput> {
     let wall = Instant::now();
     let p = shards.len();
     let (b, n, ni, k) = (shards[0].b, shards[0].n(), shards[0].ni(), params.k);
     assert_eq!(onehot.len(), b * n);
     assert_eq!(targets.len(), b);
+    if let Some(d) = dev {
+        // Same guards as forward_dev: a stale or re-shaped device adjacency
+        // would silently produce wrong gradients.
+        d.assert_in_sync(shards);
+    }
     let mut timing = StepTiming::new(p);
     let mut grads = vec![0.0f32; params.flat.len()];
+    let th = ThetaViews::new(params, dev);
 
     let d_s = [b, ni];
     let d_a = [b, ni, n];
     let d_e = [b, k, ni];
     let d_m = [b, k, n];
     let d_sum = [b, k];
-    let d_k = [k];
-    let d_kk = [k, k];
-    let d_2k = [2 * k];
 
     let exec = |shard: usize, name: &str, inputs: &[Input], timing: &mut StepTiming| {
         let t0 = Instant::now();
@@ -60,13 +82,18 @@ pub fn backward(
         out
     };
 
-    // §Perf: upload each shard's A once; pre_bwd and msg_bwd share it.
-    let mut a_bufs = Vec::with_capacity(p);
-    for (i, sh) in shards.iter().enumerate() {
-        let t0 = Instant::now();
-        a_bufs.push(rt.upload(&d_a, &sh.a)?);
-        timing.compute[i] += t0.elapsed().as_secs_f64();
-    }
+    // §Perf: the adjacency comes from the DeviceState when one is active
+    // (zero upload) or is uploaded once and shared by pre_bwd and msg_bwd
+    // (same fresh-upload accounting as the forward pass).
+    let a_owned: Vec<xla::PjRtBuffer> = if dev.is_none() {
+        super::fwd::upload_a_fresh(rt, shards, &d_a, &mut timing)?
+    } else {
+        Vec::new()
+    };
+    let a_bufs: Vec<&xla::PjRtBuffer> = match dev {
+        Some(d) => (0..p).map(|i| d.a_buf(i)).collect(),
+        None => a_owned.iter().collect(),
+    };
 
     // ---- loss adjoint (host): q_sa = Σ_shards Σ_j scores_i·onehot_i  ----
     let t_host = Instant::now();
@@ -110,17 +137,14 @@ pub fn backward(
     let name_qbwd = artifact_name("q_scores_bwd", b, n, ni, k);
     let mut d_embed: Vec<Vec<f32>> = Vec::with_capacity(p);
     let mut d_sum_all = vec![0.0f32; b * k];
-    let th5 = HostTensor::new(&d_kk, params.theta(4));
-    let th6 = HostTensor::new(&d_kk, params.theta(5));
-    let th7 = HostTensor::new(&d_2k, params.theta(6));
     for (i, sh) in shards.iter().enumerate() {
         let out = exec(
             i,
             &name_qbwd,
             &[
-                Input::Host(th5),
-                Input::Host(th6),
-                Input::Host(th7),
+                th.t(4),
+                th.t(5),
+                th.t(6),
                 Input::Host(HostTensor::new(&d_e, &acts.embed_final[i])),
                 Input::Host(HostTensor::new(&d_s, &sh.c)),
                 Input::Host(HostTensor::new(&d_sum, &acts.sum_all)),
@@ -140,9 +164,7 @@ pub fn backward(
         accumulate(&mut grads, params.offset(4), &d5);
         accumulate(&mut grads, params.offset(5), &d6);
         accumulate(&mut grads, params.offset(6), &d7);
-        for (acc, x) in d_sum_all.iter_mut().zip(d_sa.iter()) {
-            *acc += x;
-        }
+        add_assign(&mut d_sum_all, &d_sa);
         d_embed.push(d_e_i);
         timing.host += t_host.elapsed().as_secs_f64();
     }
@@ -165,7 +187,6 @@ pub fn backward(
     // ---- layer loop, reversed ----
     let name_cbwd = artifact_name("embed_combine_bwd", b, n, ni, k);
     let name_mbwd = artifact_name("embed_msg_bwd", b, n, ni, k);
-    let th4 = HostTensor::new(&d_kk, params.theta(3));
     let mut d_pre_acc: Vec<Vec<f32>> = (0..p).map(|_| vec![0.0f32; b * k * ni]).collect();
     for layer in (0..cfg.l).rev() {
         let mut d_nbr: Vec<Vec<f32>> = Vec::with_capacity(p);
@@ -174,7 +195,7 @@ pub fn backward(
                 i,
                 &name_cbwd,
                 &[
-                    Input::Host(th4),
+                    th.t(3),
                     Input::Host(HostTensor::new(&d_e, &acts.pre[i])),
                     Input::Host(HostTensor::new(&d_e, &acts.nbr_slice[layer][i])),
                     Input::Host(HostTensor::new(&d_e, &d_embed[i])),
@@ -186,9 +207,7 @@ pub fn backward(
                 (it.next().unwrap(), it.next().unwrap(), it.next().unwrap());
             let t_host = Instant::now();
             accumulate(&mut grads, params.offset(3), &d4);
-            for (acc, x) in d_pre_acc[i].iter_mut().zip(d_pre.iter()) {
-                *acc += x;
-            }
+            add_assign(&mut d_pre_acc[i], &d_pre);
             d_nbr.push(d_nb);
             timing.host += t_host.elapsed().as_secs_f64();
         }
@@ -216,7 +235,7 @@ pub fn backward(
             let out = exec(
                 i,
                 &name_mbwd,
-                &[Input::Dev(&a_bufs[i]), Input::Host(HostTensor::new(&d_m, &d_partial))],
+                &[Input::Dev(a_bufs[i]), Input::Host(HostTensor::new(&d_m, &d_partial))],
                 &mut timing,
             )?;
             d_embed[i] = out.into_iter().next().unwrap();
@@ -225,19 +244,16 @@ pub fn backward(
 
     // ---- stage 1 adjoint ----
     let name_pbwd = artifact_name("embed_pre_bwd", b, n, ni, k);
-    let th1 = HostTensor::new(&d_k, params.theta(0));
-    let th2 = HostTensor::new(&d_k, params.theta(1));
-    let th3 = HostTensor::new(&d_kk, params.theta(2));
     for (i, sh) in shards.iter().enumerate() {
         let out = exec(
             i,
             &name_pbwd,
             &[
-                Input::Host(th1),
-                Input::Host(th2),
-                Input::Host(th3),
+                th.t(0),
+                th.t(1),
+                th.t(2),
                 Input::Host(HostTensor::new(&d_s, &sh.s)),
-                Input::Dev(&a_bufs[i]),
+                Input::Dev(a_bufs[i]),
                 Input::Host(HostTensor::new(&d_e, &d_pre_acc[i])),
             ],
             &mut timing,
@@ -259,9 +275,7 @@ pub fn backward(
 }
 
 fn accumulate(grads: &mut [f32], offset: usize, part: &[f32]) {
-    for (g, x) in grads[offset..offset + part.len()].iter_mut().zip(part.iter()) {
-        *g += x;
-    }
+    add_assign(&mut grads[offset..offset + part.len()], part);
 }
 
 #[cfg(test)]
@@ -338,6 +352,30 @@ mod tests {
                     assert!(d < 1e-3, "grads P={p} diverge by {d}");
                 }
             }
+        }
+    }
+
+    #[test]
+    fn backward_dev_matches_fresh() {
+        // The device-resident backward (shared θ/A buffers) must reproduce
+        // the fresh-upload gradients bit-exactly.
+        let Some(rt) = runtime() else { return };
+        let params = Params::init(32, &mut Pcg32::seeded(51));
+        let (onehot, targets) = make_targets(8, 24, 52);
+        for p in [1usize, 2] {
+            let part = Partition::new(24, p);
+            let mut shards = batch_shards(part, 8, 50);
+            let cfg = EngineCfg::new(p, 2);
+            let fwd = forward(&rt, &cfg, &params, &shards, true, false).unwrap();
+            let acts = fwd.acts.as_ref().unwrap();
+            let fresh = backward(&rt, &cfg, &params, &shards, acts, &onehot, &targets).unwrap();
+            let dev = crate::coordinator::fwd::DeviceState::new(&rt, &params, &mut shards).unwrap();
+            let res = super::backward_dev(
+                &rt, &cfg, &params, &shards, acts, &onehot, &targets, Some(&dev),
+            )
+            .unwrap();
+            assert_eq!(res.loss, fresh.loss, "P={p} loss diverges");
+            assert_eq!(res.grads, fresh.grads, "P={p} grads diverge");
         }
     }
 

@@ -183,9 +183,12 @@ pub fn cmd_batch_solve(args: &Args) -> Result<()> {
     for p in &report.packs {
         println!(
             "pack {:>3}: {:>6} N={:<5} jobs={:<3} capacity={:<3} rounds={:<4} repacks={} \
-             sim {:.4}s  wall {:.2}s",
+             sim {:.4}s  wall {:.2}s  h2d {:.1} KiB  d2h {:.1} KiB ({} execs)",
             p.pack, p.scenario.name(), p.bucket_n, p.jobs, p.capacity, p.rounds, p.repacks,
-            p.sim_time, p.wall_time
+            p.sim_time, p.wall_time,
+            p.exec.h2d_bytes as f64 / 1024.0,
+            p.exec.d2h_bytes as f64 / 1024.0,
+            p.exec.executions
         );
     }
     for o in &report.outcomes {

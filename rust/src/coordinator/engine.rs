@@ -19,6 +19,13 @@ pub struct StepTiming {
     pub comm: f64,
     /// Host-side coordinator seconds (state updates, reductions in Rust).
     pub host: f64,
+    /// Host→device transfer seconds (explicit uploads on the coordinator's
+    /// critical path — kept separate from `compute` so bench JSON can split
+    /// compute/comm/transfer). Defined as "cost of getting device state
+    /// current": explicit uploads, and on the device-resident path the
+    /// on-device delta patches (`a_mask`) that replace them — so the fresh
+    /// and resident paths' columns compare like-for-like.
+    pub h2d: f64,
     /// Measured wall-clock of the whole lockstep pass.
     pub wall: f64,
     /// Bytes moved through collectives.
@@ -33,9 +40,9 @@ impl StepTiming {
     }
 
     /// Simulated parallel time: slowest shard's compute + modeled comm +
-    /// host time (the coordinator's serial work).
+    /// host time (the coordinator's serial work) + transfer time.
     pub fn simulated(&self) -> f64 {
-        self.compute.iter().copied().fold(0.0, f64::max) + self.comm + self.host
+        self.compute.iter().copied().fold(0.0, f64::max) + self.comm + self.host + self.h2d
     }
 
     /// Total compute across shards (what a single device would do).
@@ -58,6 +65,7 @@ impl StepTiming {
         }
         self.comm += other.comm;
         self.host += other.host;
+        self.h2d += other.h2d;
         self.wall += other.wall;
         self.comm_bytes += other.comm_bytes;
         self.collectives += other.collectives;
@@ -93,6 +101,9 @@ mod tests {
         t.host = 0.25;
         assert_eq!(t.simulated(), 3.75);
         assert_eq!(t.compute_total(), 6.0);
+        // Transfer time is its own term, separable from compute.
+        t.h2d = 0.25;
+        assert_eq!(t.simulated(), 4.0);
     }
 
     #[test]
@@ -103,10 +114,12 @@ mod tests {
         let mut b = StepTiming::new(2);
         b.compute = vec![0.5, 0.5];
         b.add_comm(0.2, 200);
+        b.h2d = 0.125;
         a.merge(&b);
         assert_eq!(a.compute, vec![1.5, 2.5]);
         assert_eq!(a.comm_bytes, 300);
         assert_eq!(a.collectives, 2);
         assert!((a.comm - 0.3).abs() < 1e-12);
+        assert_eq!(a.h2d, 0.125);
     }
 }

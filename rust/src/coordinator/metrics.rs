@@ -1,9 +1,24 @@
 //! Metrics output: learning-curve records, bench rows, JSON/CSV writers.
 
+use crate::runtime::ExecStats;
 use crate::util::json::Json;
 use anyhow::Result;
 use std::io::Write;
 use std::path::Path;
+
+/// Runtime transfer/execution counters as a JSON object (the shared shape
+/// for `oggm batch-solve` pack stats and the transfer bench).
+pub fn exec_stats_json(st: &ExecStats) -> Json {
+    Json::obj()
+        .set("executions", st.executions)
+        .set("h2d_bytes", st.h2d_bytes)
+        .set("d2h_bytes", st.d2h_bytes)
+        .set("cache_hits", st.cache_hits)
+        .set("exec_time", st.exec_time.as_secs_f64())
+        .set("h2d_time", st.h2d_time.as_secs_f64())
+        .set("d2h_time", st.d2h_time.as_secs_f64())
+        .set("compile_time", st.compile_time.as_secs_f64())
+}
 
 /// Approximation ratio |sol| / |opt| (the paper's quality metric, Fig. 6/8).
 pub fn approx_ratio(solution_size: usize, optimal_size: usize) -> f64 {
@@ -122,6 +137,20 @@ mod tests {
         assert_eq!(approx_ratio(10, 8), 1.25);
         assert_eq!(approx_ratio(0, 0), 1.0);
         assert!(approx_ratio(1, 0).is_infinite());
+    }
+
+    #[test]
+    fn exec_stats_render_as_json() {
+        let mut st = ExecStats::default();
+        st.executions = 12;
+        st.h2d_bytes = 4096;
+        st.d2h_bytes = 128;
+        st.cache_hits = 3;
+        let s = exec_stats_json(&st).render();
+        assert!(s.contains("\"executions\":12"), "{s}");
+        assert!(s.contains("\"h2d_bytes\":4096"), "{s}");
+        assert!(s.contains("\"d2h_bytes\":128"), "{s}");
+        assert!(s.contains("\"cache_hits\":3"), "{s}");
     }
 
     #[test]

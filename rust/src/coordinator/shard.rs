@@ -23,6 +23,14 @@ pub struct ShardState {
     pub s: Vec<f32>,
     /// Candidate set, B × NI.
     pub c: Vec<f32>,
+    /// Locally-owned A-rows zeroed since the last `take_dirty`, as
+    /// (batch element, local row). Fuels the device-residency delta path:
+    /// instead of re-uploading the full B×NI×N adjacency, the coordinator
+    /// patches the device copy with these deltas (fwd.rs `DeviceState`).
+    dirty_rows: Vec<(u32, u32)>,
+    /// A-columns zeroed since the last `take_dirty`, as (batch element,
+    /// global column).
+    dirty_cols: Vec<(u32, u32)>,
 }
 
 impl ShardState {
@@ -55,7 +63,7 @@ impl ShardState {
                 }
             }
         }
-        ShardState { part, shard, b, a, s, c }
+        ShardState { part, shard, b, a, s, c, dirty_rows: Vec::new(), dirty_cols: Vec::new() }
     }
 
     /// Build a shard directly from dense full-graph tensors (B×N×N
@@ -86,7 +94,7 @@ impl ShardState {
                 c[g * ni + r] = c_full[g * n + v];
             }
         }
-        ShardState { part, shard, b, a, s, c }
+        ShardState { part, shard, b, a, s, c, dirty_rows: Vec::new(), dirty_cols: Vec::new() }
     }
 
     pub fn ni(&self) -> usize {
@@ -134,11 +142,30 @@ impl ShardState {
             let r = self.part.local(v);
             self.a[base_a + r * n..base_a + (r + 1) * n].fill(0.0);
             self.c[g_idx * ni + r] = 0.0;
+            self.dirty_rows.push((g_idx as u32, r as u32));
         }
         // Zero column v across all local rows.
         for r in 0..ni {
             self.a[base_a + r * n + v] = 0.0;
         }
+        self.dirty_cols.push((g_idx as u32, v as u32));
+    }
+
+    /// Whether A has been mutated since the last `take_dirty`.
+    pub fn is_dirty(&self) -> bool {
+        !self.dirty_rows.is_empty() || !self.dirty_cols.is_empty()
+    }
+
+    /// Consume the recorded A-deltas: (zeroed local rows, zeroed columns),
+    /// each as (batch element, index) pairs. Resets the dirty sets.
+    pub fn take_dirty(&mut self) -> (Vec<(u32, u32)>, Vec<(u32, u32)>) {
+        (std::mem::take(&mut self.dirty_rows), std::mem::take(&mut self.dirty_cols))
+    }
+
+    /// Forget recorded deltas (after a fresh full upload of A).
+    pub fn clear_dirty(&mut self) {
+        self.dirty_rows.clear();
+        self.dirty_cols.clear();
     }
 
     /// Refresh the candidate mask for batch element g_idx from the
@@ -334,6 +361,32 @@ mod tests {
             assert_eq!(x.s, y.s);
             assert_eq!(x.c, y.c);
         }
+    }
+
+    #[test]
+    fn dirty_tracking_records_removed_rows_and_cols() {
+        let g = square();
+        let part = Partition::new(4, 2);
+        let mut shards = fresh(part, &g);
+        assert!(!shards[0].is_dirty() && !shards[1].is_dirty());
+        for sh in shards.iter_mut() {
+            sh.apply_remove(0, 1);
+        }
+        // Node 1 lives on shard 0 (local row 1): row dirty there only; the
+        // column is dirty on every shard.
+        assert!(shards[0].is_dirty() && shards[1].is_dirty());
+        let (rows0, cols0) = shards[0].take_dirty();
+        assert_eq!(rows0, vec![(0, 1)]);
+        assert_eq!(cols0, vec![(0, 1)]);
+        let (rows1, cols1) = shards[1].take_dirty();
+        assert!(rows1.is_empty());
+        assert_eq!(cols1, vec![(0, 1)]);
+        // take_dirty resets; clear_dirty drops pending deltas.
+        assert!(!shards[0].is_dirty());
+        shards[1].apply_remove(0, 3);
+        assert!(shards[1].is_dirty());
+        shards[1].clear_dirty();
+        assert!(!shards[1].is_dirty());
     }
 
     #[test]

@@ -45,6 +45,7 @@ impl<'a> HostTensor<'a> {
 /// A stage input: host data (uploaded on the fly) or an already-uploaded
 /// device buffer (the §Perf A-reuse optimization — upload the big adjacency
 /// shard once per step and share it across every stage that reads it).
+#[derive(Clone, Copy)]
 pub enum Input<'a> {
     Host(HostTensor<'a>),
     Dev(&'a xla::PjRtBuffer),
@@ -58,6 +59,31 @@ pub struct ExecStats {
     pub exec_time: Duration,
     pub h2d_time: Duration,
     pub d2h_time: Duration,
+    /// Bytes uploaded host→device (stage inputs + explicit uploads).
+    pub h2d_bytes: u64,
+    /// Bytes fetched device→host (stage outputs + explicit fetches).
+    pub d2h_bytes: u64,
+    /// Keyed-cache hits: uploads skipped because the (key, generation)
+    /// buffer was already device-resident.
+    pub cache_hits: u64,
+}
+
+impl ExecStats {
+    /// Counter deltas accumulated since `earlier` (snapshot arithmetic for
+    /// per-solve / per-pack transfer accounting). Saturating throughout, so
+    /// a `reset_stats` between the snapshots yields zeros, not underflow.
+    pub fn since(&self, earlier: &ExecStats) -> ExecStats {
+        ExecStats {
+            executions: self.executions.saturating_sub(earlier.executions),
+            compile_time: self.compile_time.saturating_sub(earlier.compile_time),
+            exec_time: self.exec_time.saturating_sub(earlier.exec_time),
+            h2d_time: self.h2d_time.saturating_sub(earlier.h2d_time),
+            d2h_time: self.d2h_time.saturating_sub(earlier.d2h_time),
+            h2d_bytes: self.h2d_bytes.saturating_sub(earlier.h2d_bytes),
+            d2h_bytes: self.d2h_bytes.saturating_sub(earlier.d2h_bytes),
+            cache_hits: self.cache_hits.saturating_sub(earlier.cache_hits),
+        }
+    }
 }
 
 /// The PJRT stage runtime. Single-threaded by design (the lockstep engine
@@ -67,6 +93,12 @@ pub struct Runtime {
     pub manifest: Manifest,
     exes: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
     stats: RefCell<ExecStats>,
+    /// Named, generation-tracked device buffers (the device-residency
+    /// layer): `upload_keyed` with a matching (key, generation) skips the
+    /// h2d entirely and returns the cached buffer.
+    bufs: RefCell<HashMap<String, (u64, Vec<usize>, Rc<xla::PjRtBuffer>)>>,
+    /// Monotonic id source for `DeviceState` key namespaces.
+    next_id: std::cell::Cell<u64>,
 }
 
 impl Runtime {
@@ -83,6 +115,8 @@ impl Runtime {
             manifest,
             exes: RefCell::new(HashMap::new()),
             stats: RefCell::new(ExecStats::default()),
+            bufs: RefCell::new(HashMap::new()),
+            next_id: std::cell::Cell::new(0),
         })
     }
 
@@ -131,8 +165,93 @@ impl Runtime {
     pub fn upload(&self, dims: &[usize], data: &[f32]) -> Result<xla::PjRtBuffer> {
         let t0 = Instant::now();
         let buf = HostTensor::new(dims, data).to_buffer(&self.client)?;
-        self.stats.borrow_mut().h2d_time += t0.elapsed();
+        let mut st = self.stats.borrow_mut();
+        st.h2d_time += t0.elapsed();
+        st.h2d_bytes += 4 * data.len() as u64;
         Ok(buf)
+    }
+
+    /// Allocate a fresh key namespace for a device-state owner (buffers are
+    /// registered as `"ds<id>/<name>"`, so eviction by prefix is safe even
+    /// with several live `DeviceState`s).
+    pub fn alloc_state_id(&self) -> u64 {
+        let id = self.next_id.get();
+        self.next_id.set(id + 1);
+        id
+    }
+
+    /// Upload into the named, generation-tracked buffer cache. If `key` is
+    /// already resident at `generation`, the upload is skipped (a cache hit)
+    /// and the existing device buffer is returned; otherwise the data is
+    /// uploaded and replaces whatever generation the key held. A hit
+    /// asserts the dims match the resident buffer — a caller that changes
+    /// shape without bumping the generation gets a clear panic here
+    /// instead of an opaque XLA shape error downstream.
+    pub fn upload_keyed(
+        &self,
+        key: &str,
+        generation: u64,
+        dims: &[usize],
+        data: &[f32],
+    ) -> Result<Rc<xla::PjRtBuffer>> {
+        if let Some((gen, cached_dims, buf)) = self.bufs.borrow().get(key) {
+            if *gen == generation {
+                assert_eq!(
+                    cached_dims.as_slice(),
+                    dims,
+                    "keyed buffer '{key}' hit at generation {generation} with a different shape"
+                );
+                self.stats.borrow_mut().cache_hits += 1;
+                return Ok(buf.clone());
+            }
+        }
+        let buf = Rc::new(self.upload(dims, data)?);
+        self.bufs.borrow_mut().insert(key.to_string(), (generation, dims.to_vec(), buf.clone()));
+        Ok(buf)
+    }
+
+    /// Register an already-device-resident buffer (e.g. a stage output that
+    /// replaces a cached input, like the masked adjacency) under a key;
+    /// `dims` is its shape (for the hit-time shape check).
+    pub fn put_keyed(
+        &self,
+        key: &str,
+        generation: u64,
+        dims: &[usize],
+        buf: xla::PjRtBuffer,
+    ) -> Rc<xla::PjRtBuffer> {
+        let buf = Rc::new(buf);
+        self.bufs.borrow_mut().insert(key.to_string(), (generation, dims.to_vec(), buf.clone()));
+        buf
+    }
+
+    /// Generation currently resident for `key`, if any.
+    pub fn keyed_generation(&self, key: &str) -> Option<u64> {
+        self.bufs.borrow().get(key).map(|(gen, _, _)| *gen)
+    }
+
+    /// Drop every cached buffer whose key starts with `prefix`; returns how
+    /// many entries were evicted.
+    pub fn evict_keyed(&self, prefix: &str) -> usize {
+        let mut bufs = self.bufs.borrow_mut();
+        let before = bufs.len();
+        bufs.retain(|k, _| !k.starts_with(prefix));
+        before - bufs.len()
+    }
+
+    /// Number of live keyed device buffers.
+    pub fn keyed_count(&self) -> usize {
+        self.bufs.borrow().len()
+    }
+
+    /// Fetch a device buffer to host (d2h accounted).
+    pub fn fetch(&self, buf: &xla::PjRtBuffer) -> Result<Vec<f32>> {
+        let t0 = Instant::now();
+        let out: Vec<f32> = buf.to_literal_sync()?.to_vec::<f32>()?;
+        let mut st = self.stats.borrow_mut();
+        st.d2h_time += t0.elapsed();
+        st.d2h_bytes += 4 * out.len() as u64;
+        Ok(out)
     }
 
     /// Execute artifact `name` with the given inputs; returns one Vec<f32>
@@ -146,30 +265,8 @@ impl Runtime {
     pub fn execute_in(&self, name: &str, inputs: &[Input]) -> Result<Vec<Vec<f32>>> {
         let info: ArtifactInfo = self.manifest.get(name)?.clone();
         let exe = self.executable(name)?;
-
-        let t_h2d = Instant::now();
-        // Owned temporaries for host inputs; `refs` borrows both kinds.
-        let mut owned: Vec<xla::PjRtBuffer> = Vec::new();
-        let mut refs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(inputs.len());
-        for (slot, input) in inputs.iter().enumerate() {
-            match input {
-                Input::Host(t) => {
-                    owned.push(
-                        t.to_buffer(&self.client)
-                            .with_context(|| format!("input {slot} of {name}"))?,
-                    );
-                }
-                Input::Dev(_) => {}
-            }
-        }
-        let mut owned_it = owned.iter();
-        for input in inputs {
-            match input {
-                Input::Host(_) => refs.push(owned_it.next().unwrap()),
-                Input::Dev(b) => refs.push(b),
-            }
-        }
-        let h2d = t_h2d.elapsed();
+        let (owned, h2d, h2d_bytes) = self.upload_hosts(name, inputs)?;
+        let refs = input_refs(inputs, &owned);
 
         let t_exec = Instant::now();
         let result = exe
@@ -198,8 +295,81 @@ impl Runtime {
         st.exec_time += exec;
         st.h2d_time += h2d;
         st.d2h_time += d2h;
+        st.h2d_bytes += h2d_bytes;
+        st.d2h_bytes += 4 * out.iter().map(|o| o.len() as u64).sum::<u64>();
         Ok(out)
     }
+
+    /// Execute and keep the outputs device-resident: returns one
+    /// `PjRtBuffer` per output (untupled on device) with NO d2h. This is
+    /// the hot-path variant — chain an output into the next stage via
+    /// `Input::Dev`, and bring it to host only at collectives/final scores
+    /// with `fetch`.
+    pub fn execute_d(&self, name: &str, inputs: &[Input]) -> Result<Vec<xla::PjRtBuffer>> {
+        let info: ArtifactInfo = self.manifest.get(name)?.clone();
+        let exe = self.executable(name)?;
+        let (owned, h2d, h2d_bytes) = self.upload_hosts(name, inputs)?;
+        let refs = input_refs(inputs, &owned);
+
+        let t_exec = Instant::now();
+        let result = exe
+            .execute_untupled::<&xla::PjRtBuffer>(&refs)
+            .with_context(|| format!("execute {name}"))?;
+        let exec = t_exec.elapsed();
+
+        let mut devices = result.into_iter();
+        let outs: Vec<xla::PjRtBuffer> =
+            devices.next().map(|v| v.into_iter().collect()).unwrap_or_default();
+        if outs.len() != info.num_outputs {
+            bail!("{name}: expected {} outputs, got {}", info.num_outputs, outs.len());
+        }
+
+        let mut st = self.stats.borrow_mut();
+        st.executions += 1;
+        st.exec_time += exec;
+        st.h2d_time += h2d;
+        st.h2d_bytes += h2d_bytes;
+        Ok(outs)
+    }
+
+    /// Upload every `Input::Host` tensor as an owned device buffer (in input
+    /// order); returns (uploads, h2d time, h2d bytes).
+    fn upload_hosts(
+        &self,
+        name: &str,
+        inputs: &[Input],
+    ) -> Result<(Vec<xla::PjRtBuffer>, Duration, u64)> {
+        let t_h2d = Instant::now();
+        let mut owned: Vec<xla::PjRtBuffer> = Vec::new();
+        let mut h2d_bytes = 0u64;
+        for (slot, input) in inputs.iter().enumerate() {
+            if let Input::Host(t) = input {
+                owned.push(
+                    t.to_buffer(&self.client)
+                        .with_context(|| format!("input {slot} of {name}"))?,
+                );
+                h2d_bytes += 4 * t.data.len() as u64;
+            }
+        }
+        Ok((owned, t_h2d.elapsed(), h2d_bytes))
+    }
+}
+
+/// Interleave freshly uploaded host buffers with the caller's device
+/// buffers, restoring the stage's input order.
+fn input_refs<'a>(
+    inputs: &'a [Input<'a>],
+    owned: &'a [xla::PjRtBuffer],
+) -> Vec<&'a xla::PjRtBuffer> {
+    let mut refs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(inputs.len());
+    let mut owned_it = owned.iter();
+    for input in inputs {
+        match input {
+            Input::Host(_) => refs.push(owned_it.next().unwrap()),
+            Input::Dev(b) => refs.push(b),
+        }
+    }
+    refs
 }
 
 #[cfg(test)]
@@ -213,6 +383,32 @@ mod tests {
             return None;
         }
         Some(Runtime::new("artifacts").unwrap())
+    }
+
+    #[test]
+    fn exec_stats_since_subtracts_counters() {
+        let mut early = ExecStats::default();
+        early.executions = 3;
+        early.h2d_bytes = 1000;
+        early.d2h_bytes = 200;
+        early.cache_hits = 1;
+        early.exec_time = Duration::from_millis(5);
+        let mut late = early;
+        late.executions += 7;
+        late.h2d_bytes += 4096;
+        late.d2h_bytes += 512;
+        late.cache_hits += 4;
+        late.exec_time += Duration::from_millis(20);
+        let d = late.since(&early);
+        assert_eq!(d.executions, 7);
+        assert_eq!(d.h2d_bytes, 4096);
+        assert_eq!(d.d2h_bytes, 512);
+        assert_eq!(d.cache_hits, 4);
+        assert_eq!(d.exec_time, Duration::from_millis(20));
+        // A snapshot minus itself is all-zero.
+        let z = late.since(&late);
+        assert_eq!(z.executions, 0);
+        assert_eq!(z.h2d_bytes + z.d2h_bytes + z.cache_hits, 0);
     }
 
     #[test]
@@ -240,7 +436,54 @@ mod tests {
             let want: f32 = (0..ni).map(|j| ((kk * ni + j) % 5) as f32).sum();
             assert!((out[0][kk] - want).abs() < 1e-4, "k={kk}");
         }
-        assert_eq!(rt.stats().executions, 1);
+        let st = rt.stats();
+        assert_eq!(st.executions, 1);
+        assert_eq!(st.h2d_bytes, 4 * (b * k * ni) as u64);
+        assert_eq!(st.d2h_bytes, 4 * (b * k) as u64);
+    }
+
+    #[test]
+    fn keyed_cache_hits_and_evicts() {
+        let Some(rt) = runtime() else { return };
+        let data = vec![1.0f32; 8];
+        rt.upload_keyed("t/x", 0, &[8], &data).unwrap();
+        let before = rt.stats();
+        rt.upload_keyed("t/x", 0, &[8], &data).unwrap();
+        let after = rt.stats();
+        assert_eq!(after.cache_hits, before.cache_hits + 1);
+        assert_eq!(after.h2d_bytes, before.h2d_bytes, "cache hit must not re-upload");
+        // A new generation re-uploads and replaces (same key: count stable).
+        let count = rt.keyed_count();
+        rt.upload_keyed("t/x", 1, &[8], &data).unwrap();
+        assert_eq!(rt.keyed_generation("t/x"), Some(1));
+        assert_eq!(rt.keyed_count(), count);
+        assert_eq!(rt.stats().h2d_bytes, after.h2d_bytes + 32);
+        assert_eq!(rt.evict_keyed("t/"), 1);
+        assert_eq!(rt.keyed_generation("t/x"), None);
+        assert_eq!(rt.keyed_count(), count - 1);
+    }
+
+    #[test]
+    fn execute_d_chains_without_d2h() {
+        let Some(rt) = runtime() else { return };
+        // q_sum twice: once via execute (host round-trip), once via
+        // execute_d keeping the input device-resident — byte counters must
+        // show zero d2h for the device variant until fetch.
+        let (b, k, ni) = (1usize, 32usize, 12usize);
+        let name = artifact_name("q_sum", b, 24, ni, k);
+        let embed: Vec<f32> = (0..b * k * ni).map(|i| (i % 7) as f32).collect();
+        let want = rt.execute(&name, &[HostTensor::new(&[b, k, ni], &embed)]).unwrap();
+
+        let e_buf = rt.upload(&[b, k, ni], &embed).unwrap();
+        let before = rt.stats();
+        let outs = rt.execute_d(&name, &[Input::Dev(&e_buf)]).unwrap();
+        assert_eq!(outs.len(), 1);
+        let mid = rt.stats();
+        assert_eq!(mid.d2h_bytes, before.d2h_bytes, "execute_d must not fetch");
+        assert_eq!(mid.h2d_bytes, before.h2d_bytes, "all inputs were device-resident");
+        let got = rt.fetch(&outs[0]).unwrap();
+        assert_eq!(rt.stats().d2h_bytes, mid.d2h_bytes + 4 * (b * k) as u64);
+        assert_eq!(got, want[0], "device-chained output differs from host path");
     }
 
     #[test]

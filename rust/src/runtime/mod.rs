@@ -7,7 +7,7 @@
 pub mod manifest;
 pub mod exec;
 
-pub use exec::{HostTensor, Input, Runtime};
+pub use exec::{ExecStats, HostTensor, Input, Runtime};
 pub use manifest::{ArtifactInfo, Manifest};
 
 /// Artifact naming convention; must mirror python/compile/configs.py.

@@ -8,6 +8,24 @@ pub mod json;
 pub mod prop;
 pub mod cli;
 
+/// Element-wise `acc += src` over f32 slices, processed in fixed-width
+/// chunks so the compiler autovectorizes (the scalar `iter_mut().zip()`
+/// form defeated SIMD on the B·K·N all-reduce accumulation hot path).
+pub fn add_assign(acc: &mut [f32], src: &[f32]) {
+    assert_eq!(acc.len(), src.len(), "add_assign length mismatch");
+    const W: usize = 8;
+    let mut a = acc.chunks_exact_mut(W);
+    let mut s = src.chunks_exact(W);
+    for (ca, cs) in (&mut a).zip(&mut s) {
+        for i in 0..W {
+            ca[i] += cs[i];
+        }
+    }
+    for (x, y) in a.into_remainder().iter_mut().zip(s.remainder()) {
+        *x += y;
+    }
+}
+
 /// Maximum absolute difference between two slices (for fp parity checks).
 pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
     assert_eq!(a.len(), b.len(), "length mismatch: {} vs {}", a.len(), b.len());
@@ -30,5 +48,17 @@ mod tests {
     fn diff_helpers() {
         assert_eq!(max_abs_diff(&[1.0, 2.0], &[1.0, 2.5]), 0.5);
         assert!(rel_l2(&[1.0, 0.0], &[1.0, 0.0]) < 1e-9);
+    }
+
+    #[test]
+    fn add_assign_matches_scalar_at_all_remainders() {
+        // Cover lengths around the chunk width, including 0 and non-multiples.
+        for len in [0usize, 1, 7, 8, 9, 16, 23, 64] {
+            let mut acc: Vec<f32> = (0..len).map(|i| i as f32 * 0.5).collect();
+            let src: Vec<f32> = (0..len).map(|i| (i * i) as f32 * 0.25).collect();
+            let want: Vec<f32> = acc.iter().zip(&src).map(|(a, s)| a + s).collect();
+            add_assign(&mut acc, &src);
+            assert_eq!(acc, want, "len={len}");
+        }
     }
 }

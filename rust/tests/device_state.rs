@@ -1,0 +1,213 @@
+//! Device-residency invariants (ISSUE 2 acceptance):
+//!  - cached-path (DeviceState) scores are bit-exact vs the fresh-upload
+//!    path at P in {1, 2, 4} for all three scenarios, including mid-solve
+//!    states reached through dirty-delta syncs;
+//!  - cached-path solutions are identical to fresh-upload solutions, and
+//!    survive an eviction/compaction repack (which invalidates and rebuilds
+//!    the device buffers);
+//!  - steady-state h2d bytes/step drop >= 10x vs step 1 on a 200-node MVC
+//!    solve (the ExecStats byte-counter criterion).
+//!
+//! Runtime-dependent tests skip when artifacts are not built (same
+//! convention as e2e.rs); the byte-counter test additionally needs the
+//! a_mask artifact (re-run `make artifacts` after updating configs.py).
+
+use oggm::coordinator::fwd::{forward, forward_dev, DeviceState};
+use oggm::coordinator::infer::{solve_scenario, InferCfg};
+use oggm::coordinator::shard::{mirror_selection, shards_for_graph, ShardState};
+use oggm::env::{GraphEnv, Scenario};
+use oggm::graph::{generators, Graph, Partition};
+use oggm::model::Params;
+use oggm::runtime::{artifact_name, Runtime};
+use oggm::util::rng::Pcg32;
+
+fn setup() -> Option<Runtime> {
+    if !std::path::Path::new("artifacts/manifest.tsv").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(Runtime::new("artifacts").unwrap())
+}
+
+fn test_graphs(count: usize, seed: u64) -> Vec<Graph> {
+    let mut rng = Pcg32::seeded(seed);
+    (0..count)
+        .map(|i| {
+            if i % 2 == 0 {
+                generators::erdos_renyi(20, 0.2, &mut rng)
+            } else {
+                generators::barabasi_albert(20, 3, &mut rng)
+            }
+        })
+        .collect()
+}
+
+/// Greedy-drive up to `max_steps` selections of `scenario` over a
+/// DeviceState-backed solve, exactly mirroring `solve_env`'s state updates
+/// (sync → cached forward → greedy pick → mirror → candidate refresh).
+/// `on_step` runs after each synced cached forward with the shard states
+/// and the cached scores — the hooks below compare against the fresh path
+/// and snapshot byte counters.
+fn drive_cached(
+    rt: &Runtime,
+    scenario: Scenario,
+    p: usize,
+    g: &Graph,
+    params: &Params,
+    bucket: usize,
+    max_steps: usize,
+    mut on_step: impl FnMut(&[ShardState], &[f32]),
+) {
+    let part = Partition::new(bucket, p);
+    let cfg = oggm::coordinator::engine::EngineCfg::new(p, 2);
+    let mut env = scenario.make_env(g.clone());
+    let candidates: Vec<bool> = (0..g.n).map(|v| env.is_candidate(v)).collect();
+    let mut shards: Vec<ShardState> =
+        shards_for_graph(part, g, env.removed_mask(), env.solution_mask(), &candidates);
+    let mut removed_prev: Vec<bool> = env.removed_mask().to_vec();
+    let mut dev = DeviceState::new(rt, params, &mut shards).unwrap();
+
+    for _ in 0..max_steps {
+        if env.done() {
+            break;
+        }
+        dev.sync(&mut shards).unwrap();
+        let out = forward_dev(rt, &cfg, params, &shards, false, true, Some(&dev)).unwrap();
+        on_step(&shards, &out.scores);
+        // Greedy-select the best candidate and mirror it (dirty deltas).
+        let v = (0..g.n)
+            .filter(|&v| env.is_candidate(v))
+            .max_by(|&a, &b| out.scores[a].partial_cmp(&out.scores[b]).unwrap())
+            .expect("env not done but no candidates");
+        env.step(v);
+        mirror_selection(&mut shards, 0, v, &*env, &mut removed_prev);
+        for sh in shards.iter_mut() {
+            sh.refresh_candidates(0, |v| env.is_candidate(v));
+        }
+    }
+}
+
+/// After every state change the device-resident forward must reproduce the
+/// fresh-upload scores bit-exactly (f32 ==).
+fn assert_scores_bit_exact(rt: &Runtime, scenario: Scenario, p: usize) {
+    let g = generators::erdos_renyi(20, 0.25, &mut Pcg32::seeded(0xD5));
+    let params = Params::init(32, &mut Pcg32::seeded(0xD6));
+    let cfg = oggm::coordinator::engine::EngineCfg::new(p, 2);
+    let mut step = 0;
+    drive_cached(rt, scenario, p, &g, &params, 24, 4, |shards, scores| {
+        let fresh = forward(rt, &cfg, &params, shards, false, true).unwrap();
+        assert_eq!(
+            scores,
+            &fresh.scores[..],
+            "{scenario} P={p} step {step}: cached scores diverge from fresh"
+        );
+        step += 1;
+    });
+    assert!(step >= 3, "{scenario} P={p}: solve ended after {step} steps");
+}
+
+#[test]
+fn cached_scores_bit_exact_all_scenarios() {
+    let Some(rt) = setup() else { return };
+    for scenario in [Scenario::Mvc, Scenario::Mis, Scenario::MaxCut] {
+        for p in [1usize, 2, 4] {
+            assert_scores_bit_exact(&rt, scenario, p);
+        }
+    }
+}
+
+#[test]
+fn cached_solutions_equal_fresh_all_scenarios() {
+    let Some(rt) = setup() else { return };
+    let graphs = test_graphs(4, 0xE1);
+    let params = Params::init(32, &mut Pcg32::seeded(0xE2));
+    for scenario in [Scenario::Mvc, Scenario::Mis, Scenario::MaxCut] {
+        for p in [1usize, 2, 4] {
+            let mut cached = InferCfg::new(p, 2);
+            cached.device_resident = true;
+            let mut fresh = cached;
+            fresh.device_resident = false;
+            for (i, g) in graphs.iter().enumerate() {
+                let a = solve_scenario(&rt, &cached, &params, g, 24, scenario).unwrap();
+                let b = solve_scenario(&rt, &fresh, &params, g, 24, scenario).unwrap();
+                assert_eq!(
+                    a.solution, b.solution,
+                    "{scenario} graph {i} P={p}: cached solve diverged"
+                );
+                assert_eq!(a.evaluations, b.evaluations);
+                assert_eq!(a.objective, b.objective);
+            }
+        }
+    }
+}
+
+#[test]
+fn repack_invalidation_preserves_solutions() {
+    // A compaction repack rebuilds the device buffers; solutions must match
+    // both the fresh-upload batched path and the PR-1-style sequential path.
+    use oggm::batch::{solve_pack, BatchCfg};
+    let Some(rt) = setup() else { return };
+    if rt.manifest.batch_sizes(24, 12).last().copied().unwrap_or(0) < 8 {
+        eprintln!("skipping: no compiled batch-8 shapes at N=24, P=2");
+        return;
+    }
+    let graphs = test_graphs(8, 31);
+    let params = Params::init(32, &mut Pcg32::seeded(7));
+    let mut cached = BatchCfg::new(2, 2);
+    cached.compact = true;
+    cached.device_resident = true;
+    let mut fresh = cached;
+    fresh.device_resident = false;
+    let a = solve_pack(&rt, &cached, &params, Scenario::Mvc, graphs.clone(), 24).unwrap();
+    let b = solve_pack(&rt, &fresh, &params, Scenario::Mvc, graphs.clone(), 24).unwrap();
+    assert_eq!(a.repacks, b.repacks, "residency changed the compaction schedule");
+    for (i, (x, y)) in a.per_graph.iter().zip(&b.per_graph).enumerate() {
+        assert!(x.valid, "graph {i} invalid on the cached path");
+        assert_eq!(x.solution, y.solution, "graph {i}: repack broke the cached path");
+        assert_eq!(x.evaluations, y.evaluations);
+    }
+    // The cached path must also match sequential single-graph solves.
+    let icfg = InferCfg::new(2, 2);
+    for (i, g) in graphs.iter().enumerate() {
+        let seq = solve_scenario(&rt, &icfg, &params, g, 24, Scenario::Mvc).unwrap();
+        assert_eq!(
+            a.per_graph[i].solution, seq.solution,
+            "graph {i}: cached batched diverged from sequential"
+        );
+    }
+}
+
+#[test]
+fn steady_state_h2d_drops_10x_on_200_node_mvc() {
+    let Some(rt) = setup() else { return };
+    let n = 200usize;
+    let p = 1usize;
+    let Ok(bucket) = rt.manifest.bucket_for(n, p, 1) else {
+        eprintln!("skipping: no compiled bucket for n={n}");
+        return;
+    };
+    if !rt.manifest.has(&artifact_name("a_mask", 1, bucket, bucket / p, 32)) {
+        eprintln!("skipping: a_mask artifact not built (re-run make artifacts)");
+        return;
+    }
+    let g = generators::erdos_renyi(n, 0.15, &mut Pcg32::seeded(0xF1));
+    let params = Params::init(32, &mut Pcg32::seeded(0xF2));
+
+    // Per-step deltas: step 1's window opens before DeviceState::new, so it
+    // carries the one-time θ/A upload; steps 2+ carry only the deltas.
+    let mut per_step_h2d: Vec<u64> = Vec::new();
+    let mut snap = rt.stats();
+    drive_cached(&rt, Scenario::Mvc, p, &g, &params, bucket, 6, |_, _| {
+        per_step_h2d.push(rt.stats().since(&snap).h2d_bytes);
+        snap = rt.stats();
+    });
+    assert!(per_step_h2d.len() >= 3, "solve finished too quickly: {per_step_h2d:?}");
+    let step1 = per_step_h2d[0];
+    for (i, &later) in per_step_h2d[1..].iter().enumerate() {
+        assert!(
+            later * 10 <= step1,
+            "step {} h2d {later} B not >= 10x below step 1 {step1} B ({per_step_h2d:?})",
+            i + 2
+        );
+    }
+}

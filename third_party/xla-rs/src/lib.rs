@@ -9,6 +9,13 @@
 //! an actionable message. Every artifact-dependent test in the repo first
 //! checks for `artifacts/manifest.tsv` and skips before constructing a
 //! client, so the full test suite passes against the stub.
+//!
+//! NOTE for vendoring the real bindings: besides the original surface
+//! (`execute_b`, `to_literal_sync`, …), the runtime's device-resident path
+//! now also needs `PjRtLoadedExecutable::execute_untupled` — `execute_b`
+//! with `xla::ExecuteOptions::untuple_result = true`, returning the tuple
+//! leaves as separate `PjRtBuffer`s. The C glue change mirrors
+//! `execute_b`'s exactly (see DESIGN.md §5).
 
 use std::borrow::Borrow;
 use std::fmt;
@@ -84,6 +91,18 @@ pub struct PjRtLoadedExecutable {
 impl PjRtLoadedExecutable {
     pub fn execute_b<B: Borrow<PjRtBuffer>>(&self, _args: &[B]) -> Result<Vec<Vec<PjRtBuffer>>> {
         unavailable("PjRtLoadedExecutable::execute_b")
+    }
+
+    /// Execute with `ExecuteOptions.untuple_result = true`: the result tuple
+    /// is split on device and returned as one leaf `PjRtBuffer` per output
+    /// (outer Vec: device; inner Vec: outputs). This is what lets the
+    /// runtime chain stage outputs into the next stage's inputs without a
+    /// host round-trip (see rust/src/runtime/exec.rs `execute_d`).
+    pub fn execute_untupled<B: Borrow<PjRtBuffer>>(
+        &self,
+        _args: &[B],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute_untupled")
     }
 }
 
