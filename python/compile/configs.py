@@ -23,6 +23,31 @@ P_SET = (1, 2, 3, 4, 6)   # device counts exercised (one Summit node = 6 GPUs)
 FWD_STAGES = ("embed_pre", "embed_msg", "embed_combine", "q_sum", "q_scores", "a_mask")
 BWD_STAGES = ("embed_pre_bwd", "embed_msg_bwd", "embed_combine_bwd", "q_scores_bwd")
 
+# Sparse (CSR) compute path (DESIGN.md §7). Only two stage families touch
+# the adjacency, so only they get sparse replacements:
+#   embed_pre_sp  — per (B, NI): degree-vector variant of embed_pre (N-free;
+#                   emitted with n=0 in its name/manifest row).
+#   embed_msg_sp  — per (B, NC, EC): gather + segment-sum over one padded
+#                   edge tile (named/manifested with n=EC, ni=NC).
+# combine / q_sum / q_scores (and their bwd) are already N-free in math, so
+# the sparse path reuses the dense-named artifacts at (B, N, NI) — sparse
+# buckets emit those names below without the dense embed_pre/embed_msg/
+# a_mask, which is exactly where the O(NI·N) artifact surface disappears.
+SPARSE_FWD_STAGES = ("embed_pre_sp", "embed_msg_sp")
+SPARSE_BWD_STAGES = ("embed_pre_sp_bwd", "embed_msg_sp_bwd")
+SPARSE_SHARED_FWD = ("embed_combine", "q_sum", "q_scores")
+SPARSE_SHARED_BWD = ("embed_combine_bwd", "q_scores_bwd")
+
+# Node-chunk / edge-capacity ladders shared by every sparse bucket. The
+# coordinator picks the largest chunk <= NI (else the smallest available;
+# rust/src/runtime/manifest.rs `sparse_chunk_for` mirrors chunk_for below)
+# and per tile the smallest capacity that fits, chaining overflow into
+# sibling tiles. Capacities are multiples of every chunk so the shapes
+# satisfy StageShape's divisibility checks when carried in its (n, ni)
+# slots.
+SPARSE_CHUNKS = (12, 48)
+SPARSE_EDGE_CAPS = (96, 768)
+
 # Small/medium (bucket, device-set) pairs shared by fwd_shapes() and
 # batch_shapes(): the learning-curve buckets (Fig. 6/8) where graph-level
 # batching is the utilization lever. Keeping one list prevents the B=1 and
@@ -104,6 +129,55 @@ def train_shapes() -> list:
     return shapes
 
 
+def chunk_for(ni: int) -> int:
+    """Node chunk NC used at shard height NI: the largest compiled chunk
+    that fits, else the smallest (chunks need not divide NI — the
+    coordinator zero-pads the last source chunk and clips the last
+    destination chunk)."""
+    fits = [c for c in SPARSE_CHUNKS if c <= ni]
+    return max(fits) if fits else min(SPARSE_CHUNKS)
+
+
+def sparse_fwd_shapes() -> list:
+    """Buckets served by the sparse CSR inference path.
+
+    The small/medium buckets double up with the dense set (the dense path
+    stays the golden oracle there — rust/tests/sparse_equivalence.rs), with
+    the full batch-capacity ladder so the batched engine can repack packs
+    on the sparse path too. The large buckets are sparse-ONLY: no dense
+    embed_pre/embed_msg/a_mask is compiled for them, so their artifact and
+    runtime footprint scales with E and NI, never NI·N (DESIGN.md §7).
+    """
+    shapes = []
+    for b in (1, 2, 4, 8):
+        for n, ps in BATCHED_BUCKETS:
+            shapes += [StageShape(b, n, n // p) for p in ps]
+    # Sparse-only scaling buckets (§7 ladder): ~5k and ~10k nodes at every
+    # device count; 12 | N and P | N for P in {1,2,3,4,6}.
+    shapes += _shards(4992, P_SET)
+    shapes += _shards(9996, P_SET)
+    return shapes
+
+
+def sparse_train_shapes() -> list:
+    """Training minibatch shapes compiled for the sparse path (fwd + bwd
+    sparse stages; parity with the dense train_shapes() small bucket)."""
+    return [StageShape(8, 24, ni) for ni in (24, 12, 8)]
+
+
+def sparse_msg_shapes(train_only: bool = False) -> list:
+    """(B, NC, EC) combinations for embed_msg_sp, carried as
+    StageShape(b, n=EC, ni=NC). One entry per (batch size, chunk) in use,
+    at every edge capacity of the ladder."""
+    src = sparse_train_shapes() if train_only else sparse_fwd_shapes()
+    combos = sorted({(s.b, chunk_for(s.ni)) for s in src})
+    return [
+        StageShape(b, ec, nc)
+        for (b, nc) in combos
+        for ec in SPARSE_EDGE_CAPS
+    ]
+
+
 def artifact_name(stage: str, s: StageShape) -> str:
     return f"{stage}_b{s.b}_n{s.n}_ni{s.ni}_k{K}"
 
@@ -117,6 +191,21 @@ def all_artifacts() -> list:
     for s in train_shapes():
         for st in FWD_STAGES + BWD_STAGES:
             out[artifact_name(st, s)] = (st, s)
+    # Sparse path (DESIGN.md §7): N-free stages + shared dense-named ones.
+    for s in sparse_fwd_shapes():
+        for st in SPARSE_SHARED_FWD:
+            out[artifact_name(st, s)] = (st, s)
+        sp = StageShape(s.b, 0, s.ni)
+        out[artifact_name("embed_pre_sp", sp)] = ("embed_pre_sp", sp)
+    for s in sparse_msg_shapes():
+        out[artifact_name("embed_msg_sp", s)] = ("embed_msg_sp", s)
+    for s in sparse_train_shapes():
+        for st in SPARSE_SHARED_BWD:
+            out[artifact_name(st, s)] = (st, s)
+        sp = StageShape(s.b, 0, s.ni)
+        out[artifact_name("embed_pre_sp_bwd", sp)] = ("embed_pre_sp_bwd", sp)
+    for s in sparse_msg_shapes(train_only=True):
+        out[artifact_name("embed_msg_sp_bwd", s)] = ("embed_msg_sp_bwd", s)
     return [(name, st, s) for name, (st, s) in sorted(out.items())]
 
 

@@ -30,17 +30,28 @@ def combine_ref(theta4, pre, nbr):
 # --- full stage math (used by stages.py's ref path and by the VJPs) ---
 
 
+def embed_pre_deg_ref(theta1, theta2, theta3, s, deg):
+    """`embed_pre` math with the residual degree vector as a direct input.
+
+    theta1, theta2 [K]; theta3 [K,K]; s, deg [B,NI] -> pre [B,K,NI].
+    The dense stage derives deg = sum(A, axis=2) on device; the sparse
+    (CSR) path maintains deg host-side from the live-edge counts and never
+    materializes A — the two are bit-identical because the 0/1 row sums are
+    small integers, exactly representable in f32.
+    """
+    e1 = theta1[None, :, None] * s[:, None, :]
+    w = jax.nn.relu(theta2[None, :, None] * deg[:, None, :])
+    e2 = jnp.einsum("km,bmj->bkj", theta3, w)
+    return e1 + e2
+
+
 def embed_pre_ref(theta1, theta2, theta3, s, a):
     """Alg. 2 lines 5-8: the layer-independent part of the embedding.
 
     theta1, theta2 [K]; theta3 [K,K]; s [B,NI]; a [B,NI,N] -> pre [B,K,NI].
     e1 = theta1 (x) S^T; w = relu(theta2 (x) deg); e2 = theta3 @ w.
     """
-    e1 = theta1[None, :, None] * s[:, None, :]
-    deg = jnp.sum(a, axis=2)
-    w = jax.nn.relu(theta2[None, :, None] * deg[:, None, :])
-    e2 = jnp.einsum("km,bmj->bkj", theta3, w)
-    return e1 + e2
+    return embed_pre_deg_ref(theta1, theta2, theta3, s, jnp.sum(a, axis=2))
 
 
 def q_scores_ref(theta5, theta6, theta7, embed, c, sum_all):

@@ -57,6 +57,69 @@ def q_scores(theta5, theta6, theta7, embed, c, sum_all):
     return ref.q_scores_ref(theta5, theta6, theta7, embed, c, sum_all)
 
 
+def embed_pre_sp(theta1, theta2, theta3, s, deg):
+    """Sparse stage 1: `embed_pre` with the degree vector as input.
+
+    theta1, theta2 [K]; theta3 [K,K]; s, deg [B,NI] -> pre [B,K,NI].
+    The CSR path never materializes the B*NI*N adjacency; the coordinator
+    maintains the live out-degree per shard row (SparseShard::deg) and
+    uploads it instead. deg entries are small integers, so this is
+    bit-identical to the dense stage's on-device row sum.
+    """
+    return ref.embed_pre_deg_ref(theta1, theta2, theta3, s, deg)
+
+
+def embed_msg_sp(embed_chunk, src, dst, w):
+    """Sparse stage 2 over one (source-chunk, dest-chunk) edge tile.
+
+    Gather-from-neighbor + segment-sum over a padded edge list (S2V-DQN's
+    sparse message passing; Dai et al., Drori et al.):
+
+      embed_chunk [B,K,NC]  — source-chunk slice of the local embedding
+      src, dst    [EC]      — chunk-local endpoint indices as f32 (cast to
+                              int32 in-stage; exact for indices < 2^24,
+                              keeping the runtime's f32-only upload path)
+      dst gathers nothing: out[b,k,c] = sum_e [dst_e == c] *
+                              embed_chunk[b,k,src_e] * w[b,e]
+      w           [B,EC]    — per-batch-element live-edge mask (0 for
+                              padding, removed edges, and edges belonging
+                              to other graphs of the pack)
+
+    Returns the tile's partial message [B,K,NC] for the destination chunk.
+    Artifact shapes depend on (B, NC, EC, K) only — never on N — which is
+    what makes the compiled set reusable across all graph sizes
+    (DESIGN.md §7).
+    """
+    si = src.astype(jnp.int32)
+    di = dst.astype(jnp.int32)
+    b, k, nc = embed_chunk.shape
+    vals = embed_chunk[:, :, si] * w[:, None, :]
+    return jnp.zeros((b, k, nc), embed_chunk.dtype).at[:, :, di].add(vals)
+
+
+def embed_msg_sp_bwd(d_chunk, src, dst, w):
+    """VJP of `embed_msg_sp` w.r.t. its embedding input (edges are data).
+
+    d_chunk [B,K,NC] is the destination-chunk cotangent; the adjoint of a
+    gather+segment-sum is the reversed gather+segment-sum:
+      d_embed[b,k,j] = sum_e [src_e == j] * d_chunk[b,k,dst_e] * w[b,e].
+    """
+    si = src.astype(jnp.int32)
+    di = dst.astype(jnp.int32)
+    b, k, nc = d_chunk.shape
+    vals = d_chunk[:, :, di] * w[:, None, :]
+    return jnp.zeros((b, k, nc), d_chunk.dtype).at[:, :, si].add(vals)
+
+
+def embed_pre_sp_bwd(theta1, theta2, theta3, s, deg, d_pre):
+    """d(theta1, theta2, theta3) for sparse stage 1."""
+    _, vjp = jax.vjp(
+        lambda t1, t2, t3: ref.embed_pre_deg_ref(t1, t2, t3, s, deg),
+        theta1, theta2, theta3,
+    )
+    return vjp(d_pre)
+
+
 def a_mask(a, row_mask, col_mask):
     """Device-side residual-graph update for the device-resident path.
 
@@ -108,7 +171,13 @@ def q_scores_bwd(theta5, theta6, theta7, embed, c, sum_all, d_scores):
 # ------------------------------------------------- stage registry for AOT
 
 def example_args(stage: str, b: int, n: int, ni: int, k: int):
-    """jax.ShapeDtypeStruct argument list for lowering `stage`."""
+    """jax.ShapeDtypeStruct argument list for lowering `stage`.
+
+    Sparse stages overload the (n, ni) slots (mirrored by the manifest
+    columns, see rust/src/runtime/manifest.rs): for `embed_msg_sp*`,
+    n = EC (edge capacity) and ni = NC (node chunk); for `embed_pre_sp*`,
+    n = 0 (the stage is N-free) and ni keeps its meaning.
+    """
     f32 = jnp.float32
     t_k = jax.ShapeDtypeStruct((k,), f32)
     t_kk = jax.ShapeDtypeStruct((k, k), f32)
@@ -127,10 +196,24 @@ def example_args(stage: str, b: int, n: int, ni: int, k: int):
         "q_sum": [e_bkni],
         "q_scores": [t_kk, t_kk, t_2k, e_bkni, s_bni, v_bk],
         "a_mask": [a_bnin, s_bni, v_bn],
+        "embed_pre_sp": [t_k, t_k, t_kk, s_bni, s_bni],
+        "embed_msg_sp": [
+            jax.ShapeDtypeStruct((b, k, ni), f32),  # embed_chunk [B,K,NC]
+            jax.ShapeDtypeStruct((n,), f32),        # src [EC]
+            jax.ShapeDtypeStruct((n,), f32),        # dst [EC]
+            jax.ShapeDtypeStruct((b, n), f32),      # w [B,EC]
+        ],
         "embed_pre_bwd": [t_k, t_k, t_kk, s_bni, a_bnin, e_bkni],
         "embed_msg_bwd": [a_bnin, m_bkn],
         "embed_combine_bwd": [t_kk, e_bkni, e_bkni, e_bkni],
         "q_scores_bwd": [t_kk, t_kk, t_2k, e_bkni, sc_bni, v_bk, sc_bni],
+        "embed_pre_sp_bwd": [t_k, t_k, t_kk, s_bni, s_bni, e_bkni],
+        "embed_msg_sp_bwd": [
+            jax.ShapeDtypeStruct((b, k, ni), f32),  # d_chunk [B,K,NC]
+            jax.ShapeDtypeStruct((n,), f32),        # src [EC]
+            jax.ShapeDtypeStruct((n,), f32),        # dst [EC]
+            jax.ShapeDtypeStruct((b, n), f32),      # w [B,EC]
+        ],
     }
     return table[stage]
 
@@ -144,6 +227,10 @@ def stage_fn(stage: str, *, use_pallas: bool):
         "q_sum": lambda *xs: (q_sum(*xs),),
         "q_scores": lambda *xs: (q_scores(*xs),),
         "a_mask": lambda *xs: (a_mask(*xs),),
+        "embed_pre_sp": lambda *xs: (embed_pre_sp(*xs),),
+        "embed_msg_sp": lambda *xs: (embed_msg_sp(*xs),),
+        "embed_pre_sp_bwd": lambda *xs: tuple(embed_pre_sp_bwd(*xs)),
+        "embed_msg_sp_bwd": lambda *xs: (embed_msg_sp_bwd(*xs),),
         "embed_pre_bwd": lambda *xs: tuple(embed_pre_bwd(*xs)),
         "embed_msg_bwd": lambda *xs: (embed_msg_bwd(*xs),),
         "embed_combine_bwd": lambda *xs: tuple(embed_combine_bwd(*xs)),
@@ -159,6 +246,10 @@ STAGE_NUM_OUTPUTS = {
     "q_sum": 1,
     "q_scores": 1,
     "a_mask": 1,
+    "embed_pre_sp": 1,
+    "embed_msg_sp": 1,
+    "embed_pre_sp_bwd": 3,
+    "embed_msg_sp_bwd": 1,
     "embed_pre_bwd": 3,
     "embed_msg_bwd": 1,
     "embed_combine_bwd": 3,

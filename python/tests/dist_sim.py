@@ -7,7 +7,10 @@ design validation for the hand-rolled distributed backprop. It is also the
 executable specification the Rust implementation mirrors.
 """
 
+import math
+
 import jax.numpy as jnp
+import numpy as np
 
 from compile import model, stages
 
@@ -15,6 +18,185 @@ from compile import model, stages
 def shard(x, p, axis):
     """Split along `axis` into p equal parts (row partitioning, Fig. 2)."""
     return jnp.split(x, p, axis=axis)
+
+
+# ---------------------------------------------------------------- sparse path
+# Executable specification of the CSR compute path (DESIGN.md §7): edge
+# tiling, chunked gather/segment-sum message passing, and its backward.
+# rust/src/coordinator/{shard,fwd,bwd}.rs mirror this exactly.
+
+
+def build_tiles(a_i, nc, caps):
+    """Tile one shard's sub-adjacency [B,NI,N] into padded edge lists.
+
+    Edges are enumerated batch-element-major, then row-major (the order
+    SparseShard::from_graphs uses), bucketed by (source chunk sc = r // nc,
+    destination chunk dc = u // nc), and each bucket is split into tiles of
+    the smallest capacity from `caps` that fits the remainder (overflow
+    chains into sibling tiles of the largest capacity). Returns a list of
+    (sc, dc, src[EC], dst[EC], w[B,EC]) with chunk-local f32 indices and a
+    per-batch-element live mask.
+    """
+    A = np.asarray(a_i)
+    b, ni, n = A.shape
+    buckets = {}
+    for g in range(b):
+        for r in range(ni):
+            for u in np.nonzero(A[g, r])[0]:
+                buckets.setdefault((r // nc, int(u) // nc), []).append((g, r % nc, int(u) % nc))
+    caps = sorted(caps)
+    tiles = []
+    for (sc, dc) in sorted(buckets):
+        edges = buckets[(sc, dc)]
+        while edges:
+            cap = next((c for c in caps if c >= len(edges)), caps[-1])
+            take, edges = edges[:cap], edges[cap:]
+            src = np.zeros(cap, np.float32)
+            dst = np.zeros(cap, np.float32)
+            w = np.zeros((b, cap), np.float32)
+            for pos, (g, rl, ul) in enumerate(take):
+                src[pos] = rl
+                dst[pos] = ul
+                w[g, pos] = 1.0
+            tiles.append((sc, dc, src, dst, w))
+    return tiles
+
+
+def sparse_msg(embed_i, tiles, n, nc):
+    """Shard-local message partial [B,K,N] from tiled embed_msg_sp calls.
+
+    Pads the source embedding to a whole number of chunks (padding rows are
+    never referenced by live edges) and clips the final destination chunk
+    at N — the same boundary handling the Rust coordinator performs.
+    """
+    e = np.asarray(embed_i)
+    b, k, ni = e.shape
+    nsc = math.ceil(ni / nc)
+    emb = np.zeros((b, k, nsc * nc), np.float32)
+    emb[:, :, :ni] = e
+    partial = np.zeros((b, k, n), np.float32)
+    for sc, dc, src, dst, w in tiles:
+        chunk = jnp.asarray(emb[:, :, sc * nc:(sc + 1) * nc])
+        out = np.asarray(stages.embed_msg_sp(chunk, jnp.asarray(src), jnp.asarray(dst),
+                                             jnp.asarray(w)))
+        hi = min(n, (dc + 1) * nc)
+        partial[:, :, dc * nc:hi] += out[:, :, :hi - dc * nc]
+    return jnp.asarray(partial)
+
+
+def sparse_msg_bwd(d_partial, tiles, ni, nc):
+    """Adjoint of `sparse_msg`: d_embed [B,K,NI] from the [B,K,N] cotangent."""
+    d = np.asarray(d_partial)
+    b, k, n = d.shape
+    ndc = math.ceil(n / nc)
+    dpad = np.zeros((b, k, ndc * nc), np.float32)
+    dpad[:, :, :n] = d
+    nsc = math.ceil(ni / nc)
+    d_emb = np.zeros((b, k, nsc * nc), np.float32)
+    for sc, dc, src, dst, w in tiles:
+        chunk = jnp.asarray(dpad[:, :, dc * nc:(dc + 1) * nc])
+        out = np.asarray(stages.embed_msg_sp_bwd(chunk, jnp.asarray(src), jnp.asarray(dst),
+                                                 jnp.asarray(w)))
+        d_emb[:, :, sc * nc:(sc + 1) * nc] += out
+    return jnp.asarray(d_emb[:, :, :ni])
+
+
+def dist_forward_sparse(params, a, s, c, p, nc=12, caps=(96, 768),
+                        layers=model.L, save=False):
+    """`dist_forward` on the sparse CSR path (DESIGN.md §7).
+
+    The dense a [B,N,N] is reference input only — the compute consumes edge
+    tiles and the degree vector, never an N-wide adjacency tensor.
+    """
+    a_i = shard(a, p, axis=1)
+    s_i = shard(s, p, axis=1)
+    c_i = shard(c, p, axis=1)
+    n = a.shape[1]
+    ni = n // p
+    deg_i = [jnp.sum(a_i[i], axis=2) for i in range(p)]
+    tiles_i = [build_tiles(a_i[i], nc, caps) for i in range(p)]
+
+    pre = [stages.embed_pre_sp(params["theta1"], params["theta2"], params["theta3"],
+                               s_i[i], deg_i[i]) for i in range(p)]
+    embed = [jnp.zeros_like(pre[i]) for i in range(p)]
+    acts = {"pre": pre, "embed_in": [], "nbr_slice": []}
+    for _ in range(layers):
+        if save:
+            acts["embed_in"].append(list(embed))
+        partial = [sparse_msg(embed[i], tiles_i[i], n, nc) for i in range(p)]
+        nbr = sum(partial)                                      # ALL-REDUCE
+        nbr_i = shard(nbr, p, axis=2)
+        if save:
+            acts["nbr_slice"].append(list(nbr_i))
+        embed = [stages.embed_combine(params["theta4"], pre[i], nbr_i[i],
+                                      use_pallas=False) for i in range(p)]
+    sums = [stages.q_sum(embed[i]) for i in range(p)]
+    sum_all = sum(sums)                                         # ALL-REDUCE
+    scores = [stages.q_scores(params["theta5"], params["theta6"], params["theta7"],
+                              embed[i], c_i[i], sum_all) for i in range(p)]
+    out = jnp.concatenate(scores, axis=1)                       # ALL-GATHER
+    if save:
+        acts["embed_final"] = embed
+        acts["sum_all"] = sum_all
+        acts["s_i"], acts["c_i"] = s_i, c_i
+        acts["deg_i"], acts["tiles_i"], acts["ni"], acts["nc"] = deg_i, tiles_i, ni, nc
+        return out, acts
+    return out
+
+
+def dist_backward_sparse(params, acts, scores, onehot, targets, p, layers=model.L):
+    """Distributed backward on the sparse path (tile-transposed msg VJP)."""
+    b = scores.shape[0]
+    onehot_i = shard(onehot, p, axis=1)
+    scores_i = shard(scores, p, axis=1)
+    q_sa = sum(jnp.sum(scores_i[i] * onehot_i[i], axis=1) for i in range(p))
+    d_qsa = 2.0 / b * (q_sa - targets)
+    d_scores = [d_qsa[:, None] * onehot_i[i] for i in range(p)]
+
+    g = {name: jnp.zeros_like(params[name]) for name in model.PARAM_ORDER}
+    d_embed, d_sum_parts = [], []
+    for i in range(p):
+        d5, d6, d7, d_e, d_sa = stages.q_scores_bwd(
+            params["theta5"], params["theta6"], params["theta7"],
+            acts["embed_final"][i], acts["c_i"][i], acts["sum_all"], d_scores[i])
+        g["theta5"] += d5
+        g["theta6"] += d6
+        g["theta7"] += d7
+        d_embed.append(d_e)
+        d_sum_parts.append(d_sa)
+    d_sum_all = sum(d_sum_parts)
+    d_embed = [d_embed[i] + d_sum_all[:, :, None] for i in range(p)]
+
+    d_pre_acc = [jnp.zeros_like(acts["pre"][i]) for i in range(p)]
+    for l in reversed(range(layers)):
+        d_nbr = []
+        for i in range(p):
+            d4, d_pre, d_nb = stages.embed_combine_bwd(
+                params["theta4"], acts["pre"][i], acts["nbr_slice"][l][i], d_embed[i])
+            g["theta4"] += d4
+            d_pre_acc[i] += d_pre
+            d_nbr.append(d_nb)
+        d_partial = jnp.concatenate(d_nbr, axis=2)              # ALL-GATHER
+        d_embed = [sparse_msg_bwd(d_partial, acts["tiles_i"][i], acts["ni"], acts["nc"])
+                   for i in range(p)]
+
+    for i in range(p):
+        d1, d2, d3 = stages.embed_pre_sp_bwd(
+            params["theta1"], params["theta2"], params["theta3"],
+            acts["s_i"][i], acts["deg_i"][i], d_pre_acc[i])
+        g["theta1"] += d1
+        g["theta2"] += d2
+        g["theta3"] += d3
+    return g
+
+
+def dist_loss_and_grad_sparse(params, a, s, c, onehot, targets, p,
+                              layers=model.L, nc=12, caps=(96, 768)):
+    scores, acts = dist_forward_sparse(params, a, s, c, p, nc, caps, layers, save=True)
+    q_sa = jnp.sum(scores * onehot, axis=1)
+    loss = jnp.mean((q_sa - targets) ** 2)
+    g = dist_backward_sparse(params, acts, scores, onehot, targets, p, layers)
+    return loss, g
 
 
 def dist_forward(params, a, s, c, p, layers=model.L, save=False):

@@ -22,9 +22,42 @@ def test_artifact_names_unique_and_parse():
     arts = configs.all_artifacts()
     names = [n for n, _, _ in arts]
     assert len(names) == len(set(names))
+    known = (configs.FWD_STAGES + configs.BWD_STAGES
+             + configs.SPARSE_FWD_STAGES + configs.SPARSE_BWD_STAGES)
     for name, stage, s in arts:
         assert name == configs.artifact_name(stage, s)
-        assert stage in configs.FWD_STAGES + configs.BWD_STAGES
+        assert stage in known
+
+
+def test_sparse_shape_slots_are_consistent():
+    # Sparse stages overload the StageShape slots (n=EC, ni=NC for msg;
+    # n=0 for the N-free pre stage); the rust manifest helpers rely on
+    # these invariants (rust/src/runtime/manifest.rs).
+    for s in configs.sparse_msg_shapes():
+        assert s.ni in configs.SPARSE_CHUNKS        # NC
+        assert s.n in configs.SPARSE_EDGE_CAPS      # EC
+        assert s.n % s.ni == 0, "caps must be multiples of every chunk"
+    for s in configs.sparse_fwd_shapes():
+        # Every sparse bucket's shared stages and chunk must be compiled.
+        nc = configs.chunk_for(s.ni)
+        assert nc in configs.SPARSE_CHUNKS
+        arts = {n for n, _, _ in configs.all_artifacts()}
+        assert configs.artifact_name("q_scores", s) in arts
+        sp = configs.StageShape(s.b, 0, s.ni)
+        assert configs.artifact_name("embed_pre_sp", sp) in arts
+
+
+def test_sparse_train_shapes_have_bwd_artifacts():
+    arts = {n for n, _, _ in configs.all_artifacts()}
+    for s in configs.sparse_train_shapes():
+        for st in configs.SPARSE_SHARED_BWD:
+            assert configs.artifact_name(st, s) in arts
+        sp = configs.StageShape(s.b, 0, s.ni)
+        assert configs.artifact_name("embed_pre_sp_bwd", sp) in arts
+        nc = configs.chunk_for(s.ni)
+        for ec in configs.SPARSE_EDGE_CAPS:
+            assert configs.artifact_name(
+                "embed_msg_sp_bwd", configs.StageShape(s.b, ec, nc)) in arts
 
 
 def test_train_shapes_have_bwd_artifacts():
@@ -53,6 +86,12 @@ def test_example_args_match_stage_fns():
         fn = stages.stage_fn(stage, use_pallas=False)
         lowered = jax.jit(fn).lower(*args)
         assert lowered is not None
+    # Sparse stages lower at their overloaded slots (n=EC, ni=NC / n=0).
+    for stage, (n, ni) in (("embed_pre_sp", (0, 12)), ("embed_msg_sp", (96, 12)),
+                           ("embed_pre_sp_bwd", (0, 12)), ("embed_msg_sp_bwd", (96, 12))):
+        args = stages.example_args(stage, s.b, n, ni, configs.K)
+        fn = stages.stage_fn(stage, use_pallas=False)
+        assert jax.jit(fn).lower(*args) is not None
 
 
 def test_hlo_text_has_no_custom_calls():
@@ -61,6 +100,10 @@ def test_hlo_text_has_no_custom_calls():
         txt = aot.lower_stage(stage, configs.StageShape(1, 24, 12))
         assert "custom-call" not in txt.lower(), f"{stage} left a custom call"
         assert "ENTRY" in txt
+    # The sparse gather/segment-sum must lower to a plain HLO scatter.
+    txt = aot.lower_stage("embed_msg_sp", configs.StageShape(1, 96, 12))
+    assert "custom-call" not in txt.lower()
+    assert "scatter" in txt.lower()
 
 
 def test_goldens_selfconsistent(tmp_path):

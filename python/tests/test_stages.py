@@ -115,6 +115,99 @@ def test_a_mask_matches_host_row_col_zeroing(p):
             f"a_mask diverges from host zeroing on shard {shard} (P={p})"
 
 
+@pytest.mark.parametrize("p", [1, 2, 3, 4, 6])
+def test_sparse_forward_matches_monolithic(p):
+    # The CSR path (edge tiles + degree vector, DESIGN.md §7) must compose
+    # to the same scores as the monolithic dense model. p=4 gives NI=6 < the
+    # chunk (12), covering the padded-source-chunk boundary.
+    params, a, s, c, _, _ = _setup(b=3, n=24, seed=21)
+    mono = model.full_forward(params, a, s, c)
+    sp = dist_sim.dist_forward_sparse(params, a, s, c, p)
+    assert_allclose(np.asarray(sp), np.asarray(mono), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("p", [1, 2, 3])
+def test_sparse_grad_matches_jax_grad(p):
+    params, a, s, c, onehot, targets = _setup(b=4, n=24, seed=23)
+    want = model.full_loss_grad(params, a, s, c, onehot, targets)
+    loss, got = dist_sim.dist_loss_and_grad_sparse(params, a, s, c, onehot, targets, p)
+    want_loss = model.full_loss(params, a, s, c, onehot, targets)
+    assert abs(float(loss) - float(want_loss)) < 1e-5
+    for name in model.PARAM_ORDER:
+        assert_allclose(np.asarray(got[name]), np.asarray(want[name]),
+                        rtol=1e-4, atol=1e-5, err_msg=name)
+
+
+def test_embed_pre_sp_matches_dense():
+    # Degree-vector stage 1 vs the dense stage that row-sums A on device:
+    # 0/1 row sums are small integers (exact in f32), so the two must agree
+    # bit-for-bit.
+    params, a, s, _, _, _ = _setup(b=2, n=24, seed=25)
+    deg = jnp.sum(a, axis=2)
+    dense = np.asarray(stages.embed_pre(
+        params["theta1"], params["theta2"], params["theta3"], s, a))
+    sp = np.asarray(stages.embed_pre_sp(
+        params["theta1"], params["theta2"], params["theta3"], s, deg))
+    assert (sp.view(np.uint32) == dense.view(np.uint32)).all(), \
+        "embed_pre_sp diverges from the dense stage"
+
+
+@pytest.mark.parametrize("caps", [(96, 768), (4, 8)])
+def test_sparse_msg_matches_dense_bmm(caps):
+    # Tiled gather/segment-sum vs the dense embed @ A — including tiny edge
+    # capacities that force tile chaining within one (sc, dc) bucket.
+    params, a, s, c, _, _ = _setup(b=2, n=24, seed=27)
+    a_i = dist_sim.shard(a, 2, axis=1)[0]            # [B,12,24]
+    e = jax.random.normal(jax.random.PRNGKey(2), (2, model.K, 12))
+    want = stages.embed_msg(e, a_i, use_pallas=False)
+    tiles = dist_sim.build_tiles(a_i, 12, caps)
+    got = dist_sim.sparse_msg(e, tiles, 24, 12)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+def test_sparse_msg_bwd_is_vjp_of_dense():
+    params, a, _, _, _, _ = _setup(b=2, n=24, seed=29)
+    a_i = dist_sim.shard(a, 2, axis=1)[1]
+    e = jax.random.normal(jax.random.PRNGKey(3), (2, model.K, 12))
+    d_partial = jax.random.normal(jax.random.PRNGKey(4), (2, model.K, 24))
+    want = stages.embed_msg_bwd(a_i, d_partial)      # d @ A^T (dense VJP)
+    tiles = dist_sim.build_tiles(a_i, 12, (96, 768))
+    got = dist_sim.sparse_msg_bwd(d_partial, tiles, 12, 12)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+def test_live_edge_mask_matches_dense_row_col_zeroing():
+    # Node removal on the sparse path zeroes the live-edge mask w for every
+    # edge incident to the removed node; the resulting messages must match
+    # the dense path's row+column zeroing (Fig. 4).
+    params, a, _, _, _, _ = _setup(b=2, n=24, seed=31)
+    a = np.asarray(a).copy()
+    e = jax.random.normal(jax.random.PRNGKey(5), (2, model.K, 24))
+    removed = [(0, 5), (0, 13), (1, 2)]              # (batch element, node)
+    tiles = dist_sim.build_tiles(jnp.asarray(a), 12, (96, 768))
+    # Sparse removal: kill w where either endpoint is the removed node.
+    # (P=1 here, so local row index == global node id.)
+    masked = []
+    for sc, dc, src, dst, w in tiles:
+        w = w.copy()
+        for g, v in removed:
+            for pos in range(len(src)):
+                if w[g, pos] == 0.0:
+                    continue
+                gsrc = sc * 12 + int(src[pos])
+                gdst = dc * 12 + int(dst[pos])
+                if gsrc == v or gdst == v:
+                    w[g, pos] = 0.0
+        masked.append((sc, dc, src, dst, w))
+    got = dist_sim.sparse_msg(e, masked, 24, 12)
+    # Dense removal: zero row + column.
+    for g, v in removed:
+        a[g, v, :] = 0.0
+        a[g, :, v] = 0.0
+    want = stages.embed_msg(e, jnp.asarray(a), use_pallas=False)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
 def test_q_sa_masking_selects_action_column():
     params, a, s, c, onehot, targets = _setup(b=4, n=24, seed=5)
     scores = model.full_forward(params, a, s, c)

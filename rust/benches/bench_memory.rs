@@ -1,0 +1,183 @@
+//! bench_memory: per-shard resident adjacency bytes, dense (B×NI×N) vs
+//! sparse CSR tiles (O(E/P + NI)), across the in-repo bucket ladder — the
+//! DESIGN.md §7 memory-model observable. Emits BENCH_memory.json.
+//!
+//! Two modes compose:
+//!  - **Host accounting (always runs, no artifacts needed):** builds the
+//!    sparse shard state for generated graphs at each bucket and compares
+//!    its measured bytes against the dense formula 4·B·NI·N (validated
+//!    against a materialized dense shard at the smallest bucket — the big
+//!    buckets use the formula so the bench itself never allocates the
+//!    dense wall it is measuring).
+//!  - **Measured solve (artifacts + sparse shapes present):** drives one
+//!    dense and one sparse MVC solve and records each pack's `state_bytes`
+//!    and the runtime's `ExecStats` byte counters, tying the table to
+//!    measured transfers.
+//!
+//! Check mode: without artifacts the bench still emits the host-side table
+//! and JSON, prints a notice for the skipped solve section, and exits 0.
+
+#[path = "common.rs"]
+mod common;
+
+use oggm::batch::{solve_pack, BatchCfg};
+use oggm::coordinator::metrics::{exec_stats_json, Table};
+use oggm::coordinator::shard::{sparse_shards_for_graph, ShardState, Storage};
+use oggm::env::Scenario;
+use oggm::graph::{generators, Graph, Partition};
+use oggm::util::json::Json;
+use oggm::util::rng::Pcg32;
+
+/// Fallback sparse tiling config mirroring python/compile/configs.py
+/// (SPARSE_CHUNKS / SPARSE_EDGE_CAPS) for artifact-less host accounting.
+const FALLBACK_CHUNK: usize = 48;
+const FALLBACK_CAPS: [usize; 2] = [96, 768];
+
+struct Row {
+    bucket: usize,
+    p: usize,
+    nodes: usize,
+    edges: usize,
+    dense_bytes: usize,
+    sparse_bytes: usize,
+}
+
+fn host_rows() -> Vec<Row> {
+    // BA(d=4) stand-ins: the large-sparse-graph regime the CSR path is
+    // for. The ladder ends at the largest in-repo bucket (sparse-only
+    // 9996); in fast mode the tail is trimmed.
+    let mut specs: Vec<(usize, usize)> = vec![(250, 252), (1488, 1488), (2496, 2496)];
+    if !common::fast_mode() {
+        specs.push((4992, 4992));
+        specs.push((9996, 9996));
+    }
+    let mut rows = Vec::new();
+    let mut rng = Pcg32::seeded(0x3E);
+    for (n, bucket) in specs {
+        let g = generators::barabasi_albert(n, 4, &mut rng);
+        for p in [1usize, 4] {
+            let part = Partition::new(bucket, p);
+            let removed = vec![false; g.n];
+            let sol = vec![false; g.n];
+            let cand: Vec<bool> = (0..g.n).map(|v| g.degree(v) > 0).collect();
+            let sparse = sparse_shards_for_graph(
+                part, &g, &removed, &sol, &cand, FALLBACK_CHUNK, &FALLBACK_CAPS,
+            );
+            let sparse_bytes: usize = sparse.iter().map(|s| s.adjacency_bytes()).sum();
+            // Dense bytes by formula (4·B·NI·N per shard, B = 1, P shards);
+            // materializing the big buckets would allocate the very wall
+            // the sparse path removes.
+            let dense_bytes = 4 * part.ni() * part.n * p;
+            rows.push(Row { bucket, p, nodes: g.n, edges: g.m, dense_bytes, sparse_bytes });
+        }
+    }
+    rows
+}
+
+/// Validate the dense formula against one materialized shard set.
+fn check_dense_formula() {
+    let mut rng = Pcg32::seeded(0x3F);
+    let g = generators::barabasi_albert(250, 4, &mut rng);
+    let part = Partition::new(252, 4);
+    let removed = vec![false; g.n];
+    let sol = vec![false; g.n];
+    let cand: Vec<bool> = (0..g.n).map(|v| g.degree(v) > 0).collect();
+    let measured: usize = (0..part.p)
+        .map(|i| {
+            ShardState::from_graphs(part, i, &[&g], &[&removed], &[&sol], &[&cand])
+                .adjacency_bytes()
+        })
+        .sum();
+    assert_eq!(measured, 4 * part.ni() * part.n * part.p, "dense formula drifted");
+}
+
+fn main() {
+    check_dense_formula();
+    let rows = host_rows();
+
+    let mut t = Table::new(
+        "bench_memory: resident adjacency bytes per pack (B=1), dense vs sparse CSR",
+        &["P", "E", "dense_B", "sparse_B", "reduction"],
+    );
+    let mut json_rows: Vec<Json> = Vec::new();
+    let mut worst_large = f64::INFINITY;
+    let mut largest = 0usize;
+    for r in &rows {
+        let red = r.dense_bytes as f64 / r.sparse_bytes.max(1) as f64;
+        t.row(
+            format!("N={}", r.bucket),
+            vec![r.p as f64, r.edges as f64, r.dense_bytes as f64, r.sparse_bytes as f64, red],
+        );
+        if r.bucket > largest {
+            largest = r.bucket;
+            worst_large = red;
+        } else if r.bucket == largest {
+            worst_large = worst_large.min(red);
+        }
+        json_rows.push(
+            Json::obj()
+                .set("bucket", r.bucket)
+                .set("p", r.p)
+                .set("nodes", r.nodes)
+                .set("edges", r.edges)
+                .set("dense_adjacency_bytes", r.dense_bytes)
+                .set("sparse_adjacency_bytes", r.sparse_bytes)
+                .set("reduction", red),
+        );
+    }
+    common::emit(&t);
+    println!(
+        "bench_memory: largest bucket N={largest} adjacency reduction {worst_large:.1}x{}",
+        if worst_large >= 5.0 { "" } else { " — BELOW the 5x target" }
+    );
+
+    let mut json = Json::obj()
+        .set("bench", "memory")
+        .set("chunk", FALLBACK_CHUNK)
+        .set("rows", json_rows)
+        .set("largest_bucket_reduction", worst_large);
+
+    // Measured-solve section (needs artifacts + sparse shapes).
+    if !oggm::runtime::manifest::default_dir().join("manifest.tsv").exists() {
+        println!("bench_memory: artifacts not built, skipping measured solves (check mode OK)");
+    } else {
+        let rt = common::runtime();
+        if rt.manifest.sparse_config(1, 252, 32).is_err() {
+            println!("bench_memory: sparse shapes not compiled, skipping measured solves");
+        } else {
+            let mut rng = Pcg32::seeded(0x40);
+            let params = common::init_params(&mut rng);
+            let g: Graph = generators::barabasi_albert(250, 4, &mut rng);
+            let dense_cfg = BatchCfg::new(1, 2);
+            let mut sparse_cfg = dense_cfg;
+            sparse_cfg.storage = Storage::Sparse;
+            let d =
+                solve_pack(&rt, &dense_cfg, &params, Scenario::Mvc, vec![g.clone()], 252).unwrap();
+            let s = solve_pack(&rt, &sparse_cfg, &params, Scenario::Mvc, vec![g], 252).unwrap();
+            assert_eq!(d.per_graph[0].solution, s.per_graph[0].solution, "solve diverged");
+            println!(
+                "bench_memory: measured 250-node MVC — dense state {} B, sparse state {} B \
+                 ({:.1}x); h2d dense {} B vs sparse {} B",
+                d.state_bytes,
+                s.state_bytes,
+                d.state_bytes as f64 / s.state_bytes.max(1) as f64,
+                d.exec.h2d_bytes,
+                s.exec.h2d_bytes
+            );
+            json = json.set(
+                "measured",
+                Json::obj()
+                    .set("n", 250usize)
+                    .set("bucket", 252usize)
+                    .set("dense_state_bytes", d.state_bytes)
+                    .set("sparse_state_bytes", s.state_bytes)
+                    .set("pack_edges", s.pack_edges)
+                    .set("dense_exec", exec_stats_json(&d.exec))
+                    .set("sparse_exec", exec_stats_json(&s.exec)),
+            );
+        }
+    }
+
+    std::fs::write("BENCH_memory.json", json.render()).expect("write BENCH_memory.json");
+    println!("bench_memory: wrote BENCH_memory.json; OK");
+}

@@ -69,6 +69,7 @@ impl ModelConfig {
         (self.t_embed_seq() / p as f64) / self.t_embed(p)
     }
 
+    /// Parallel efficiency of the action-evaluation phase.
     pub fn efficiency_action(&self, p: usize) -> f64 {
         (self.t_action(1) / p as f64) / self.t_action(p)
     }
@@ -82,9 +83,13 @@ impl ModelConfig {
 /// §5.2 memory model: bytes per device.
 #[derive(Debug, Clone, Copy)]
 pub struct MemoryModel {
+    /// Minibatch size B.
     pub b: usize,
+    /// Padded node count N.
     pub n: usize,
+    /// Edge probability ρ.
     pub rho: f64,
+    /// Replay tuples held.
     pub replay_tuples: usize,
 }
 

@@ -7,7 +7,9 @@
 use crate::env::{GraphEnv, Scenario};
 use crate::graph::Graph;
 
+/// B per-graph environments driven in lockstep (one per pack slot).
 pub struct BatchEnv {
+    /// Scenario shared by every environment in the batch.
     pub scenario: Scenario,
     envs: Vec<Box<dyn GraphEnv>>,
 }
@@ -25,26 +27,32 @@ impl BatchEnv {
         self.envs.len()
     }
 
+    /// Whether the batch holds no graphs.
     pub fn is_empty(&self) -> bool {
         self.envs.is_empty()
     }
 
+    /// Graph behind batch element i.
     pub fn graph(&self, i: usize) -> &Graph {
         self.envs[i].graph()
     }
 
+    /// Environment of batch element i.
     pub fn env(&self, i: usize) -> &dyn GraphEnv {
         self.envs[i].as_ref()
     }
 
+    /// Mutable environment of batch element i.
     pub fn env_mut(&mut self, i: usize) -> &mut dyn GraphEnv {
         self.envs[i].as_mut()
     }
 
+    /// Whether batch element i has reached a complete solution.
     pub fn done(&self, i: usize) -> bool {
         self.envs[i].done()
     }
 
+    /// Whether every batch element is done.
     pub fn all_done(&self) -> bool {
         self.envs.iter().all(|e| e.done())
     }

@@ -11,9 +11,13 @@
 //! them, and emits per-graph solutions + timing JSON; the `oggm batch-solve`
 //! subcommand is its CLI surface. See DESIGN.md §Batch.
 
+/// B per-graph environments in lockstep.
 pub mod env;
+/// The batched solve engine (`solve_pack`).
 pub mod solve;
+/// Job-manifest parsing (`oggm batch-solve` input format).
 pub mod spec;
+/// The job queue: grouping, chunking, reporting.
 pub mod queue;
 
 pub use env::BatchEnv;

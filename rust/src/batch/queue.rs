@@ -21,42 +21,63 @@ use std::time::Instant;
 /// One solve request.
 #[derive(Debug, Clone)]
 pub struct Job {
+    /// Caller-facing job identifier (echoed in outcomes).
     pub id: String,
+    /// Scenario this job solves.
     pub scenario: Scenario,
+    /// The instance to solve (moved into the pack's environment).
     pub graph: Graph,
 }
 
 /// Per-job outcome.
 #[derive(Debug, Clone)]
 pub struct JobOutcome {
+    /// Job identifier (as submitted).
     pub id: String,
+    /// Scenario solved.
     pub scenario: Scenario,
+    /// Node count |V| of the job's graph.
     pub nodes: usize,
+    /// Undirected edge count |E|.
     pub edges: usize,
     /// Index of the pack this job was solved in.
     pub pack: usize,
     /// Selected node ids (ascending).
     pub solution: Vec<usize>,
+    /// Number of selected nodes |S|.
     pub solution_size: usize,
+    /// Scenario objective (|S| except MaxCut: cut weight).
     pub objective: f64,
+    /// Structural validity of the solution.
     pub valid: bool,
+    /// Shared forward passes this job participated in.
     pub evaluations: usize,
+    /// Nodes selected in total (>= evaluations under multi-select).
     pub selections: usize,
 }
 
 /// Per-pack statistics.
 #[derive(Debug, Clone)]
 pub struct PackStat {
+    /// Pack index within the report.
     pub pack: usize,
+    /// Scenario shared by every job in the pack.
     pub scenario: Scenario,
+    /// Padded bucket size N of the pack.
     pub bucket_n: usize,
+    /// Number of jobs solved in this pack.
     pub jobs: usize,
     /// Compiled batch capacity the pack opened at.
     pub capacity: usize,
+    /// Shared forward passes executed.
     pub rounds: usize,
+    /// Compaction repacks performed.
     pub repacks: usize,
+    /// Simulated-parallel seconds for the pack.
     pub sim_time: f64,
+    /// Wall-clock seconds for the pack.
     pub wall_time: f64,
+    /// Bytes moved through collectives.
     pub comm_bytes: u64,
     /// Runtime transfer accounting for this pack (h2d/d2h bytes, stage
     /// executions, exec time — see DESIGN.md §6).
@@ -66,12 +87,16 @@ pub struct PackStat {
 /// Everything `oggm batch-solve` reports.
 #[derive(Debug)]
 pub struct QueueReport {
+    /// Per-job outcomes, in submission order.
     pub outcomes: Vec<JobOutcome>,
+    /// Per-pack statistics, in execution order.
     pub packs: Vec<PackStat>,
+    /// Wall-clock seconds for the whole queue.
     pub wall_total: f64,
 }
 
 impl QueueReport {
+    /// Render the report as the `oggm batch-solve` JSON document.
     pub fn to_json(&self) -> Json {
         let jobs: Vec<Json> = self
             .outcomes

@@ -28,14 +28,30 @@ pub enum GraphSource {
     /// Edge-list file (NetworkRepository/SNAP format, see graph::io).
     File(PathBuf),
     /// Synthetic generator spec.
-    Gen { model: String, n: usize, rho: f64, d: usize, triad: f64, seed: u64 },
+    Gen {
+        /// Generator model (`er` | `ba` | `hk`).
+        model: String,
+        /// Node count.
+        n: usize,
+        /// ER edge probability.
+        rho: f64,
+        /// BA/HK attachment degree.
+        d: usize,
+        /// HK triad-closure probability.
+        triad: f64,
+        /// Generator seed.
+        seed: u64,
+    },
 }
 
 /// One parsed manifest line.
 #[derive(Debug, Clone, PartialEq)]
 pub struct JobSpec {
+    /// Job identifier (explicit `id=` or generated).
     pub id: String,
+    /// Scenario for this job (default MVC).
     pub scenario: Scenario,
+    /// Where the graph comes from.
     pub source: GraphSource,
 }
 

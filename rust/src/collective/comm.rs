@@ -24,6 +24,7 @@ struct State {
 #[derive(Clone)]
 pub struct Communicator {
     inner: Arc<(Mutex<State>, Condvar)>,
+    /// This handle's rank (0..P).
     pub rank: usize,
 }
 
@@ -46,6 +47,7 @@ impl Communicator {
         (0..p).map(|rank| Communicator { inner: inner.clone(), rank }).collect()
     }
 
+    /// Number of participating ranks P.
     pub fn p(&self) -> usize {
         self.inner.0.lock().unwrap().p
     }

@@ -7,7 +7,9 @@
 //! `cost` implements the paper's α–β communication model (Eq. 3/5) used by
 //! the lockstep engine to attribute simulated communication time.
 
+/// Threaded P-way collectives (all-reduce / all-gather).
 pub mod comm;
+/// α–β communication cost model (DESIGN.md §3).
 pub mod cost;
 
 pub use comm::Communicator;

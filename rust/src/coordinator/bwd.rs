@@ -8,10 +8,10 @@
 //! across shards (≡ the paper's gradient all-reduce of 4K²+4K floats).
 
 use super::engine::{EngineCfg, StepTiming};
-use super::fwd::{Activations, DeviceState, ThetaViews};
-use super::shard::ShardState;
+use super::fwd::{Activations, AnyDeviceState, DeviceState, SparseDeviceState, ThetaViews};
+use super::shard::{ShardSet, ShardState, SparseShard};
 use crate::model::Params;
-use crate::runtime::{artifact_name, HostTensor, Input, Runtime};
+use crate::runtime::{artifact_name, sparse_msg_name, sparse_pre_name, HostTensor, Input, Runtime};
 use crate::util::add_assign;
 use anyhow::Result;
 use std::time::Instant;
@@ -19,9 +19,11 @@ use std::time::Instant;
 /// Backward output: scalar loss, flat parameter gradient, timing.
 #[derive(Debug)]
 pub struct GradOutput {
+    /// Minibatch DQN regression loss.
     pub loss: f32,
     /// Flat gradient in Params layout (already summed over shards).
     pub grads: Vec<f32>,
+    /// Accumulated lockstep timing of the backward pass.
     pub timing: StepTiming,
 }
 
@@ -67,7 +69,7 @@ pub fn backward_dev(
     }
     let mut timing = StepTiming::new(p);
     let mut grads = vec![0.0f32; params.flat.len()];
-    let th = ThetaViews::new(params, dev);
+    let th = ThetaViews::new(params, dev.map(|d| d.theta_bufs()));
 
     let d_s = [b, ni];
     let d_a = [b, ni, n];
@@ -278,6 +280,315 @@ fn accumulate(grads: &mut [f32], offset: usize, part: &[f32]) {
     add_assign(&mut grads[offset..offset + part.len()], part);
 }
 
+/// DQN loss + full backward pass on the sparse CSR path (DESIGN.md §7):
+/// the layer-message adjoint runs `embed_msg_sp_bwd` per edge tile (the
+/// reversed gather/segment-sum), and stage 1's adjoint is
+/// `embed_pre_sp_bwd` over the degree vector — no stage ever touches an
+/// N-wide adjacency. python/tests/dist_sim.py `dist_backward_sparse` is
+/// the executable specification. A [`SparseDeviceState`] shares the θ and
+/// edge-tile buffers already uploaded by the forward pass.
+#[allow(clippy::too_many_arguments)]
+pub fn backward_sparse(
+    rt: &Runtime,
+    cfg: &EngineCfg,
+    params: &Params,
+    shards: &[SparseShard],
+    acts: &Activations,
+    onehot: &[f32],
+    targets: &[f32],
+    dev: Option<&SparseDeviceState>,
+) -> Result<GradOutput> {
+    let wall = Instant::now();
+    let p = shards.len();
+    let (b, n, ni, k) = (shards[0].b, shards[0].n(), shards[0].ni(), params.k);
+    let chunk = shards[0].chunk;
+    assert_eq!(onehot.len(), b * n);
+    assert_eq!(targets.len(), b);
+    if let Some(d) = dev {
+        d.assert_in_sync(shards);
+    }
+    let mut timing = StepTiming::new(p);
+    let mut grads = vec![0.0f32; params.flat.len()];
+    let th = ThetaViews::new(params, dev.map(|d| d.theta_bufs()));
+
+    let d_s = [b, ni];
+    let d_e = [b, k, ni];
+    let d_ec = [b, k, chunk];
+    let d_sum = [b, k];
+
+    let exec = |shard: usize, name: &str, inputs: &[Input], timing: &mut StepTiming| {
+        let t0 = Instant::now();
+        let out = rt.execute_in(name, inputs);
+        timing.compute[shard] += t0.elapsed().as_secs_f64();
+        out
+    };
+
+    // §Perf: edge tiles come from the SparseDeviceState when one is active
+    // (zero upload) or are uploaded once and shared by every layer's tile
+    // sweep (same fresh-upload accounting as the forward pass and the
+    // dense path's A upload).
+    let tile_owned: Vec<Vec<(xla::PjRtBuffer, xla::PjRtBuffer, xla::PjRtBuffer)>> =
+        if dev.is_none() {
+            super::fwd::upload_tiles_fresh(rt, shards, &mut timing)?
+        } else {
+            Vec::new()
+        };
+
+    // ---- loss adjoint (host) — identical to the dense path ----
+    let t_host = Instant::now();
+    let mut onehot_i: Vec<Vec<f32>> = Vec::with_capacity(p);
+    for sh in shards.iter() {
+        let row0 = sh.part.row0(sh.shard);
+        let mut local = vec![0.0f32; b * ni];
+        for g in 0..b {
+            local[g * ni..(g + 1) * ni]
+                .copy_from_slice(&onehot[g * n + row0..g * n + row0 + ni]);
+        }
+        onehot_i.push(local);
+    }
+    let mut q_sa = vec![0.0f32; b];
+    for i in 0..p {
+        for g in 0..b {
+            for r in 0..ni {
+                q_sa[g] += acts.scores_i[i][g * ni + r] * onehot_i[i][g * ni + r];
+            }
+        }
+    }
+    timing.add_comm(cfg.cost.all_reduce(p, 4 * b), 4 * b);
+    let mut loss = 0.0f32;
+    let mut d_qsa = vec![0.0f32; b];
+    for g in 0..b {
+        let diff = q_sa[g] - targets[g];
+        loss += diff * diff / b as f32;
+        d_qsa[g] = 2.0 * diff / b as f32;
+    }
+    let d_scores: Vec<Vec<f32>> = (0..p)
+        .map(|i| (0..b * ni).map(|idx| d_qsa[idx / ni] * onehot_i[i][idx]).collect())
+        .collect();
+    timing.host += t_host.elapsed().as_secs_f64();
+
+    // ---- stage 5 adjoint (shared N-free stage) ----
+    let name_qbwd = artifact_name("q_scores_bwd", b, n, ni, k);
+    let mut d_embed: Vec<Vec<f32>> = Vec::with_capacity(p);
+    let mut d_sum_all = vec![0.0f32; b * k];
+    for (i, sh) in shards.iter().enumerate() {
+        let out = exec(
+            i,
+            &name_qbwd,
+            &[
+                th.t(4),
+                th.t(5),
+                th.t(6),
+                Input::Host(HostTensor::new(&d_e, &acts.embed_final[i])),
+                Input::Host(HostTensor::new(&d_s, &sh.c)),
+                Input::Host(HostTensor::new(&d_sum, &acts.sum_all)),
+                Input::Host(HostTensor::new(&d_s, &d_scores[i])),
+            ],
+            &mut timing,
+        )?;
+        let mut it = out.into_iter();
+        let (d5, d6, d7, d_e_i, d_sa) = (
+            it.next().unwrap(),
+            it.next().unwrap(),
+            it.next().unwrap(),
+            it.next().unwrap(),
+            it.next().unwrap(),
+        );
+        let t_host = Instant::now();
+        accumulate(&mut grads, params.offset(4), &d5);
+        accumulate(&mut grads, params.offset(5), &d6);
+        accumulate(&mut grads, params.offset(6), &d7);
+        add_assign(&mut d_sum_all, &d_sa);
+        d_embed.push(d_e_i);
+        timing.host += t_host.elapsed().as_secs_f64();
+    }
+    timing.add_comm(cfg.cost.all_reduce(p, 4 * b * k), 4 * b * k);
+    let t_host = Instant::now();
+    for d_e_i in d_embed.iter_mut() {
+        for g in 0..b {
+            for kk in 0..k {
+                let base = g * k * ni + kk * ni;
+                let add = d_sum_all[g * k + kk];
+                for r in 0..ni {
+                    d_e_i[base + r] += add;
+                }
+            }
+        }
+    }
+    timing.host += t_host.elapsed().as_secs_f64();
+
+    // ---- layer loop, reversed ----
+    let name_cbwd = artifact_name("embed_combine_bwd", b, n, ni, k);
+    let mut d_pre_acc: Vec<Vec<f32>> = (0..p).map(|_| vec![0.0f32; b * k * ni]).collect();
+    let mut dchunk = vec![0.0f32; b * k * chunk];
+    for layer in (0..cfg.l).rev() {
+        let mut d_nbr: Vec<Vec<f32>> = Vec::with_capacity(p);
+        for i in 0..p {
+            let out = exec(
+                i,
+                &name_cbwd,
+                &[
+                    th.t(3),
+                    Input::Host(HostTensor::new(&d_e, &acts.pre[i])),
+                    Input::Host(HostTensor::new(&d_e, &acts.nbr_slice[layer][i])),
+                    Input::Host(HostTensor::new(&d_e, &d_embed[i])),
+                ],
+                &mut timing,
+            )?;
+            let mut it = out.into_iter();
+            let (d4, d_pre, d_nb) = (it.next().unwrap(), it.next().unwrap(), it.next().unwrap());
+            let t_host = Instant::now();
+            accumulate(&mut grads, params.offset(3), &d4);
+            add_assign(&mut d_pre_acc[i], &d_pre);
+            d_nbr.push(d_nb);
+            timing.host += t_host.elapsed().as_secs_f64();
+        }
+        if layer == 0 {
+            // Layer 0's message input is the zeros constant: its cotangent
+            // is discarded, so the all-gather + tile sweep are elided.
+            break;
+        }
+        // Collective adjoint: ALL-GATHER cotangent slices into B*K*N.
+        let t_host = Instant::now();
+        let mut d_partial = vec![0.0f32; b * k * n];
+        for (i, sh) in shards.iter().enumerate() {
+            let row0 = sh.part.row0(sh.shard);
+            for g in 0..b {
+                for kk in 0..k {
+                    let dst = g * k * n + kk * n + row0;
+                    let src = g * k * ni + kk * ni;
+                    d_partial[dst..dst + ni].copy_from_slice(&d_nbr[i][src..src + ni]);
+                }
+            }
+        }
+        timing.host += t_host.elapsed().as_secs_f64();
+        timing.add_comm(cfg.cost.all_gather(p, 4 * b * k * ni), 4 * b * k * ni * p);
+        // Tile sweep: d_embed[b,k,j] = Σ_e [src_e == j] d_partial[dst_e]·w_e,
+        // one embed_msg_sp_bwd per tile, destination-chunk sliced in and
+        // source-chunk accumulated out (the transpose of the forward sweep).
+        for (i, sh) in shards.iter().enumerate() {
+            let mut d_emb = vec![0.0f32; b * k * ni];
+            let tiles = &sh.tiles;
+            let mut ti = 0usize;
+            while ti < tiles.len() {
+                let dc = tiles[ti].dc;
+                // The forward groups by sc; chained (sc, dc) runs still
+                // share dc, so slicing per run stays correct either way —
+                // slice d_partial's destination chunk for this run.
+                let t_host = Instant::now();
+                let dlo = dc * chunk;
+                let dhi = (dlo + chunk).min(n);
+                dchunk.fill(0.0);
+                for g in 0..b {
+                    for kk in 0..k {
+                        let so = g * k * n + kk * n + dlo;
+                        let eo = g * k * chunk + kk * chunk;
+                        dchunk[eo..eo + (dhi - dlo)]
+                            .copy_from_slice(&d_partial[so..so + (dhi - dlo)]);
+                    }
+                }
+                timing.host += t_host.elapsed().as_secs_f64();
+                while ti < tiles.len() && tiles[ti].dc == dc {
+                    let tile = &tiles[ti];
+                    let name = sparse_msg_name("embed_msg_sp_bwd", b, tile.cap, chunk, k);
+                    let (src_in, dst_in, w_in) = match dev {
+                        Some(d) => (
+                            Input::Dev(&d.src[i][ti]),
+                            Input::Dev(&d.dst[i][ti]),
+                            Input::Dev(&d.w[i][ti]),
+                        ),
+                        None => {
+                            let (sb, db, wb) = &tile_owned[i][ti];
+                            (Input::Dev(sb), Input::Dev(db), Input::Dev(wb))
+                        }
+                    };
+                    let inputs =
+                        [Input::Host(HostTensor::new(&d_ec, &dchunk)), src_in, dst_in, w_in];
+                    let part = exec(i, &name, &inputs, &mut timing)?.into_iter().next().unwrap();
+                    let t_host = Instant::now();
+                    let slo = tile.sc * chunk;
+                    let shi = (slo + chunk).min(ni);
+                    for g in 0..b {
+                        for kk in 0..k {
+                            let no = g * k * ni + kk * ni + slo;
+                            let po = g * k * chunk + kk * chunk;
+                            let len = shi - slo;
+                            add_assign(&mut d_emb[no..no + len], &part[po..po + len]);
+                        }
+                    }
+                    timing.host += t_host.elapsed().as_secs_f64();
+                    ti += 1;
+                }
+            }
+            d_embed[i] = d_emb;
+        }
+    }
+
+    // ---- stage 1 adjoint (degree-vector variant) ----
+    let name_pbwd = sparse_pre_name("embed_pre_sp_bwd", b, ni, k);
+    for (i, sh) in shards.iter().enumerate() {
+        let out = exec(
+            i,
+            &name_pbwd,
+            &[
+                th.t(0),
+                th.t(1),
+                th.t(2),
+                Input::Host(HostTensor::new(&d_s, &sh.s)),
+                Input::Host(HostTensor::new(&d_s, &sh.deg)),
+                Input::Host(HostTensor::new(&d_e, &d_pre_acc[i])),
+            ],
+            &mut timing,
+        )?;
+        let mut it = out.into_iter();
+        let (d1, d2, d3) = (it.next().unwrap(), it.next().unwrap(), it.next().unwrap());
+        let t_host = Instant::now();
+        accumulate(&mut grads, params.offset(0), &d1);
+        accumulate(&mut grads, params.offset(1), &d2);
+        accumulate(&mut grads, params.offset(2), &d3);
+        timing.host += t_host.elapsed().as_secs_f64();
+    }
+
+    // Gradient all-reduce (θ1-θ7 = 4K²+4K floats, §5.1(3)).
+    timing.add_comm(cfg.cost.all_reduce(p, 4 * grads.len()), 4 * grads.len());
+
+    timing.wall = wall.elapsed().as_secs_f64();
+    Ok(GradOutput { loss, grads, timing })
+}
+
+/// Storage-generic backward: dispatch a [`ShardSet`] to [`backward_dev`]
+/// (dense) or [`backward_sparse`] with the matching device state.
+#[allow(clippy::too_many_arguments)]
+pub fn backward_set(
+    rt: &Runtime,
+    cfg: &EngineCfg,
+    params: &Params,
+    set: &ShardSet,
+    acts: &Activations,
+    onehot: &[f32],
+    targets: &[f32],
+    dev: Option<&AnyDeviceState>,
+) -> Result<GradOutput> {
+    match set {
+        ShardSet::Dense(sh) => {
+            let d = match dev {
+                Some(AnyDeviceState::Dense(d)) => Some(d),
+                None => None,
+                Some(AnyDeviceState::Sparse(_)) => panic!("sparse device state on dense set"),
+            };
+            backward_dev(rt, cfg, params, sh, acts, onehot, targets, d)
+        }
+        ShardSet::Sparse(sh) => {
+            let d = match dev {
+                Some(AnyDeviceState::Sparse(d)) => Some(d),
+                None => None,
+                Some(AnyDeviceState::Dense(_)) => panic!("dense device state on sparse set"),
+            };
+            backward_sparse(rt, cfg, params, sh, acts, onehot, targets, d)
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -376,6 +687,83 @@ mod tests {
             .unwrap();
             assert_eq!(res.loss, fresh.loss, "P={p} loss diverges");
             assert_eq!(res.grads, fresh.grads, "P={p} grads diverge");
+        }
+    }
+
+    /// Sparse twin of `batch_shards` (same seed → same graphs/states).
+    fn batch_sparse_shards(
+        rt: &Runtime,
+        part: Partition,
+        b: usize,
+        seed: u64,
+    ) -> Option<Vec<SparseShard>> {
+        let Ok((chunk, caps)) = rt.manifest.sparse_config(b, part.ni(), 32) else {
+            eprintln!("skipping: sparse train artifacts not compiled");
+            return None;
+        };
+        let mut rng = Pcg32::seeded(seed);
+        let graphs: Vec<_> = (0..b).map(|_| generators::erdos_renyi(20, 0.25, &mut rng)).collect();
+        let grefs: Vec<&crate::graph::Graph> = graphs.iter().collect();
+        let removed: Vec<Vec<bool>> = graphs.iter().map(|g| vec![false; g.n]).collect();
+        let sol = removed.clone();
+        let cand: Vec<Vec<bool>> = graphs
+            .iter()
+            .map(|g| (0..g.n).map(|v| g.degree(v) > 0).collect())
+            .collect();
+        Some(
+            (0..part.p)
+                .map(|i| {
+                    SparseShard::from_graphs(
+                        part,
+                        i,
+                        &grefs,
+                        &removed.iter().map(|r| r.as_slice()).collect::<Vec<_>>(),
+                        &sol.iter().map(|r| r.as_slice()).collect::<Vec<_>>(),
+                        &cand.iter().map(|r| r.as_slice()).collect::<Vec<_>>(),
+                        chunk,
+                        &caps,
+                    )
+                })
+                .collect(),
+        )
+    }
+
+    #[test]
+    fn sparse_backward_matches_dense() {
+        // Sparse-path gradients must match the dense oracle to fp tolerance
+        // (the tile scatter's summation order differs from the matmul's),
+        // and the device-resident sparse backward must be bit-exact vs the
+        // fresh sparse backward.
+        let Some(rt) = runtime() else { return };
+        let params = Params::init(32, &mut Pcg32::seeded(61));
+        let (onehot, targets) = make_targets(8, 24, 62);
+        for p in [1usize, 2] {
+            let part = Partition::new(24, p);
+            let dense = batch_shards(part, 8, 60);
+            let Some(mut sparse) = batch_sparse_shards(&rt, part, 8, 60) else { return };
+            let cfg = EngineCfg::new(p, 2);
+            let fwd_d = forward(&rt, &cfg, &params, &dense, true, false).unwrap();
+            let want = backward(&rt, &cfg, &params, &dense, fwd_d.acts.as_ref().unwrap(),
+                                &onehot, &targets).unwrap();
+            let fwd_s = crate::coordinator::fwd::forward_sparse(
+                &rt, &cfg, &params, &sparse, true, false, None,
+            )
+            .unwrap();
+            let acts_s = fwd_s.acts.as_ref().unwrap();
+            let got =
+                backward_sparse(&rt, &cfg, &params, &sparse, acts_s, &onehot, &targets, None)
+                    .unwrap();
+            assert!((got.loss - want.loss).abs() < 1e-4, "P={p} loss diverges");
+            let d = crate::util::max_abs_diff(&got.grads, &want.grads);
+            assert!(d < 1e-3, "P={p} sparse grads diverge from dense by {d}");
+
+            let dev = SparseDeviceState::new(&rt, &params, &mut sparse).unwrap();
+            let res = backward_sparse(
+                &rt, &cfg, &params, &sparse, acts_s, &onehot, &targets, Some(&dev),
+            )
+            .unwrap();
+            assert_eq!(res.loss, got.loss, "P={p} resident sparse loss diverges");
+            assert_eq!(res.grads, got.grads, "P={p} resident sparse grads diverge");
         }
     }
 

@@ -76,6 +76,9 @@ pub fn cmd_train(args: &Args) -> Result<()> {
     cfg.hyper.lr = args.get_f64("lr", 1e-3) as f32;
     cfg.hyper.grad_iters = args.get_usize("tau", 1);
     cfg.hyper.batch_size = args.get_usize("batch", 8);
+    if args.has_flag("sparse") {
+        cfg.storage = super::shard::Storage::Sparse;
+    }
     let params = load_or_init_params(args, &mut rng)?;
     let mut trainer = Trainer::new(&rt, cfg, graphs, params)?;
     let episodes = args.get_usize("episodes", 20);
@@ -114,6 +117,9 @@ pub fn cmd_infer(args: &Args) -> Result<()> {
     if args.has_flag("multi") {
         cfg.policy = SelectionPolicy::AdaptiveMulti;
     }
+    if args.has_flag("sparse") {
+        cfg.storage = super::shard::Storage::Sparse;
+    }
     let res = solve_mvc(&rt, &cfg, &params, &g, bucket)?;
     println!(
         "graph |V|={} |E|={}: cover size {} in {} evaluations ({} selections)",
@@ -133,7 +139,8 @@ pub fn cmd_infer(args: &Args) -> Result<()> {
 /// — the job-queue front-end over the graph-level batched solve engine.
 /// `--demo <count>` synthesizes a mixed ER/BA manifest instead of reading
 /// one (a zero-setup smoke path). `--scenario` overrides every job's
-/// scenario; `--no-compact` disables early-exit pack compaction.
+/// scenario; `--no-compact` disables early-exit pack compaction;
+/// `--sparse` switches the packs to CSR storage (DESIGN.md §7).
 pub fn cmd_batch_solve(args: &Args) -> Result<()> {
     let rt = load_runtime()?;
     let mut rng = Pcg32::new(args.get_u64("seed", 4), 80);
@@ -176,6 +183,9 @@ pub fn cmd_batch_solve(args: &Args) -> Result<()> {
     }
     if args.has_flag("no-compact") {
         cfg.compact = false;
+    }
+    if args.has_flag("sparse") {
+        cfg.storage = super::shard::Storage::Sparse;
     }
     let params = load_or_init_params(args, &mut rng)?;
     let report = batch::run_queue(&rt, &cfg, &params, &jobs)?;

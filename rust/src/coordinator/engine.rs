@@ -35,6 +35,7 @@ pub struct StepTiming {
 }
 
 impl StepTiming {
+    /// Zeroed timing for P shards.
     pub fn new(p: usize) -> StepTiming {
         StepTiming { compute: vec![0.0; p], ..Default::default() }
     }
@@ -50,12 +51,14 @@ impl StepTiming {
         self.compute.iter().sum()
     }
 
+    /// Record one collective: modeled seconds + payload bytes.
     pub fn add_comm(&mut self, cost: f64, bytes: usize) {
         self.comm += cost;
         self.comm_bytes += bytes as u64;
         self.collectives += 1;
     }
 
+    /// Accumulate another timing into this one.
     pub fn merge(&mut self, other: &StepTiming) {
         if self.compute.len() < other.compute.len() {
             self.compute.resize(other.compute.len(), 0.0);
@@ -84,6 +87,7 @@ pub struct EngineCfg {
 }
 
 impl EngineCfg {
+    /// Default engine config for P shards and L layers.
     pub fn new(p: usize, l: usize) -> EngineCfg {
         EngineCfg { p, l, cost: CostModel::default() }
     }

@@ -19,9 +19,9 @@
 //!   by rust/tests/device_state.rs).
 
 use super::engine::{EngineCfg, StepTiming};
-use super::shard::ShardState;
+use super::shard::{ShardSet, ShardState, SparseShard};
 use crate::model::Params;
-use crate::runtime::{artifact_name, HostTensor, Input, Runtime};
+use crate::runtime::{artifact_name, sparse_msg_name, sparse_pre_name, HostTensor, Input, Runtime};
 use crate::util::add_assign;
 use anyhow::Result;
 use std::cell::RefCell;
@@ -50,7 +50,9 @@ pub struct Activations {
 pub struct FwdOutput {
     /// Gathered scores, B*N (node-major within each graph).
     pub scores: Vec<f32>,
+    /// Saved activations (present when `save` was set).
     pub acts: Option<Activations>,
+    /// Accumulated lockstep timing of this evaluation.
     pub timing: StepTiming,
 }
 
@@ -66,8 +68,11 @@ pub struct DeviceState<'r> {
     /// on-device patch so the keyed cache never serves a stale copy.
     gen_a: u64,
     gen_theta: u64,
+    /// Batch size B of the resident shards.
     pub b: usize,
+    /// Padded global node count N.
     pub n: usize,
+    /// Shard height NI.
     pub ni: usize,
     k: usize,
     theta: Vec<Rc<xla::PjRtBuffer>>,
@@ -273,6 +278,11 @@ impl DeviceState<'_> {
     pub(crate) fn a_buf(&self, i: usize) -> &xla::PjRtBuffer {
         &self.a[i]
     }
+
+    /// The 7 resident θ buffers (feeds [`ThetaViews`]).
+    pub(crate) fn theta_bufs(&self) -> &[Rc<xla::PjRtBuffer>] {
+        &self.theta
+    }
 }
 
 impl Drop for DeviceState<'_> {
@@ -315,22 +325,26 @@ fn upload_shard_state(
     Ok((a, zero_e, mask_name, secs))
 }
 
-/// θ stage inputs: device-resident buffers when a `DeviceState` is active,
-/// per-call host tensors otherwise. Shared by the forward and backward
-/// orchestrators.
+/// θ stage inputs: device-resident buffers when a device state (dense
+/// [`DeviceState`] or sparse [`SparseDeviceState`]) is active, per-call
+/// host tensors otherwise. Shared by the forward and backward
+/// orchestrators of both storage modes.
 pub(crate) struct ThetaViews<'p> {
     params: &'p Params,
     dims: Vec<Vec<usize>>,
-    dev: Option<&'p DeviceState<'p>>,
+    dev: Option<&'p [Rc<xla::PjRtBuffer>]>,
 }
 
 impl<'p> ThetaViews<'p> {
-    pub(crate) fn new(params: &'p Params, dev: Option<&'p DeviceState<'p>>) -> ThetaViews<'p> {
+    pub(crate) fn new(
+        params: &'p Params,
+        dev: Option<&'p [Rc<xla::PjRtBuffer>]>,
+    ) -> ThetaViews<'p> {
         ThetaViews { params, dims: (0..7).map(|i| params.theta_dims(i)).collect(), dev }
     }
     pub(crate) fn t(&self, idx: usize) -> Input<'_> {
         match self.dev {
-            Some(d) => Input::Dev(&d.theta[idx]),
+            Some(theta) => Input::Dev(&theta[idx]),
             None => Input::Host(HostTensor::new(&self.dims[idx], self.params.theta(idx))),
         }
     }
@@ -373,7 +387,7 @@ pub fn forward_dev(
         d.assert_in_sync(shards);
     }
     let mut timing = StepTiming::new(p);
-    let th = ThetaViews::new(params, dev);
+    let th = ThetaViews::new(params, dev.map(|d| d.theta_bufs()));
 
     let d_s = [b, ni];
     let d_a = [b, ni, n];
@@ -661,6 +675,573 @@ pub fn forward_dev(
     Ok(FwdOutput { scores, acts, timing })
 }
 
+/// Persistent device residency for one solve on the sparse path (DESIGN.md
+/// §7): θ plus every shard's edge-tile tensors (src/dst indices uploaded
+/// once — topology never changes within a pack — and the per-tile live
+/// masks w re-uploaded only for tiles a removal actually touched). The
+/// per-tile B×EC mask upload is the sparse analog of the dense path's
+/// `a_mask` patch: a removal moves O(degree) small tensors instead of a
+/// B×NI×N adjacency.
+pub struct SparseDeviceState<'r> {
+    rt: &'r Runtime,
+    id: u64,
+    /// Content generation of the tile buffers: bumped on every re-upload so
+    /// the keyed cache never serves a stale mask.
+    gen_w: u64,
+    gen_theta: u64,
+    /// Batch size B of the resident shards.
+    pub b: usize,
+    /// Padded global node count N.
+    pub n: usize,
+    /// Shard height NI.
+    pub ni: usize,
+    k: usize,
+    chunk: usize,
+    theta: Vec<Rc<xla::PjRtBuffer>>,
+    /// Per shard, per tile: chunk-local source indices [EC] (shared with
+    /// the backward orchestrator, hence crate-visible).
+    pub(crate) src: Vec<Vec<Rc<xla::PjRtBuffer>>>,
+    /// Per shard, per tile: chunk-local destination indices [EC].
+    pub(crate) dst: Vec<Vec<Rc<xla::PjRtBuffer>>>,
+    /// Per shard, per tile: live-edge mask [B,EC].
+    pub(crate) w: Vec<Vec<Rc<xla::PjRtBuffer>>>,
+    /// Simulated transfer seconds of the most recent upload operation
+    /// (same max-across-shards rule as the dense `DeviceState`).
+    xfer_secs: f64,
+}
+
+/// Upload every tile tensor of every shard under `sds<id>/t/` keys at
+/// `generation`; returns (src, dst, w buffers, slowest-shard seconds).
+/// Pending dirty deltas are cleared — the upload captures current state.
+#[allow(clippy::type_complexity)]
+fn upload_tile_state(
+    rt: &Runtime,
+    id: u64,
+    generation: u64,
+    shards: &mut [SparseShard],
+) -> Result<(
+    Vec<Vec<Rc<xla::PjRtBuffer>>>,
+    Vec<Vec<Rc<xla::PjRtBuffer>>>,
+    Vec<Vec<Rc<xla::PjRtBuffer>>>,
+    f64,
+)> {
+    let b = shards[0].b;
+    let mut src = Vec::with_capacity(shards.len());
+    let mut dst = Vec::with_capacity(shards.len());
+    let mut w = Vec::with_capacity(shards.len());
+    let mut slowest = 0.0f64;
+    for (i, sh) in shards.iter_mut().enumerate() {
+        let t0 = Instant::now();
+        let mut src_i = Vec::with_capacity(sh.tiles.len());
+        let mut dst_i = Vec::with_capacity(sh.tiles.len());
+        let mut w_i = Vec::with_capacity(sh.tiles.len());
+        for (t, tile) in sh.tiles.iter().enumerate() {
+            let cap = [tile.cap];
+            let bcap = [b, tile.cap];
+            src_i.push(rt.upload_keyed(&format!("sds{id}/t/{i}/{t}/src"), generation, &cap,
+                                       &tile.src)?);
+            dst_i.push(rt.upload_keyed(&format!("sds{id}/t/{i}/{t}/dst"), generation, &cap,
+                                       &tile.dst)?);
+            w_i.push(rt.upload_keyed(&format!("sds{id}/t/{i}/{t}/w"), generation, &bcap,
+                                     &tile.w)?);
+        }
+        sh.clear_dirty();
+        src.push(src_i);
+        dst.push(dst_i);
+        w.push(w_i);
+        slowest = slowest.max(t0.elapsed().as_secs_f64());
+    }
+    Ok((src, dst, w, slowest))
+}
+
+impl<'r> SparseDeviceState<'r> {
+    /// Upload θ and every shard's edge tiles. `shards` must share one
+    /// partition/batch/chunk shape (as built by `sparse_shards_for_graph`/
+    /// `_pack`).
+    pub fn new(
+        rt: &'r Runtime,
+        params: &Params,
+        shards: &mut [SparseShard],
+    ) -> Result<SparseDeviceState<'r>> {
+        assert!(!shards.is_empty(), "SparseDeviceState needs at least one shard");
+        let (b, n, ni, k, chunk) =
+            (shards[0].b, shards[0].n(), shards[0].ni(), params.k, shards[0].chunk);
+        let id = rt.alloc_state_id();
+        let t_theta = Instant::now();
+        let mut theta = Vec::with_capacity(7);
+        for i in 0..7 {
+            theta.push(rt.upload_keyed(
+                &format!("sds{id}/theta{i}"),
+                0,
+                &params.theta_dims(i),
+                params.theta(i),
+            )?);
+        }
+        let theta_secs = t_theta.elapsed().as_secs_f64();
+        let (src, dst, w, tile_secs) = upload_tile_state(rt, id, 0, shards)?;
+        Ok(SparseDeviceState {
+            rt,
+            id,
+            gen_w: 0,
+            gen_theta: 0,
+            b,
+            n,
+            ni,
+            k,
+            chunk,
+            theta,
+            src,
+            dst,
+            w,
+            xfer_secs: theta_secs + tile_secs,
+        })
+    }
+
+    /// The 7 resident θ buffers (feeds [`ThetaViews`]).
+    pub(crate) fn theta_bufs(&self) -> &[Rc<xla::PjRtBuffer>] {
+        &self.theta
+    }
+
+    /// Simulated transfer seconds of the most recent upload operation
+    /// (`new`/`rebuild`/`sync`/`refresh_theta`).
+    pub fn last_transfer_secs(&self) -> f64 {
+        self.xfer_secs
+    }
+
+    /// The `forward_sparse` precondition: resident buffers match these
+    /// shards' shape and tile counts, with no un-synced live-mask deltas.
+    pub fn assert_in_sync(&self, shards: &[SparseShard]) {
+        assert_eq!(shards.len(), self.w.len(), "shard count mismatch");
+        let want = (shards[0].b, shards[0].n(), shards[0].ni(), shards[0].chunk);
+        let got = (self.b, self.n, self.ni, self.chunk);
+        assert_eq!(got, want, "SparseDeviceState shape mismatch (rebuild after repack)");
+        for (i, sh) in shards.iter().enumerate() {
+            assert_eq!(sh.tiles.len(), self.w[i].len(), "tile count changed; rebuild");
+            assert!(!sh.is_dirty(), "un-synced live-mask deltas; call sync first");
+        }
+    }
+
+    /// Re-upload θ after an optimizer step (tiles untouched).
+    pub fn refresh_theta(&mut self, params: &Params) -> Result<()> {
+        assert_eq!(params.k, self.k, "embedding dim changed");
+        let t0 = Instant::now();
+        self.gen_theta += 1;
+        for i in 0..7 {
+            self.theta[i] = self.rt.upload_keyed(
+                &format!("sds{}/theta{i}", self.id),
+                self.gen_theta,
+                &params.theta_dims(i),
+                params.theta(i),
+            )?;
+        }
+        self.xfer_secs = t0.elapsed().as_secs_f64();
+        Ok(())
+    }
+
+    /// Explicit invalidation + rebuild from freshly built shards (a
+    /// compaction repack changes the batch capacity, edge set, and tile
+    /// layout). θ is kept — repacks do not change parameters.
+    pub fn rebuild(&mut self, shards: &mut [SparseShard]) -> Result<()> {
+        assert_eq!(shards.len(), self.w.len(), "shard count (P) cannot change");
+        self.rt.evict_keyed(&format!("sds{}/t/", self.id));
+        self.gen_w += 1;
+        self.b = shards[0].b;
+        self.n = shards[0].n();
+        self.ni = shards[0].ni();
+        self.chunk = shards[0].chunk;
+        let (src, dst, w, secs) = upload_tile_state(self.rt, self.id, self.gen_w, shards)?;
+        self.src = src;
+        self.dst = dst;
+        self.w = w;
+        self.xfer_secs = secs;
+        Ok(())
+    }
+
+    /// Push recorded live-mask deltas to the device: re-upload w ([B,EC])
+    /// for exactly the tiles a removal touched. Call after applying
+    /// selections and before the next `forward_sparse`.
+    pub fn sync(&mut self, shards: &mut [SparseShard]) -> Result<()> {
+        assert_eq!(shards.len(), self.w.len(), "shard count changed; rebuild instead");
+        let (b, n, ni) = (self.b, self.n, self.ni);
+        let mut slowest = 0.0f64;
+        for (i, sh) in shards.iter_mut().enumerate() {
+            assert_eq!((sh.b, sh.n(), sh.ni()), (b, n, ni), "shape changed; rebuild instead");
+            if !sh.is_dirty() {
+                continue;
+            }
+            let t_shard = Instant::now();
+            self.gen_w += 1;
+            for t in sh.take_dirty_tiles() {
+                let tile = &sh.tiles[t as usize];
+                self.w[i][t as usize] = self.rt.upload_keyed(
+                    &format!("sds{}/t/{i}/{t}/w", self.id),
+                    self.gen_w,
+                    &[b, tile.cap],
+                    &tile.w,
+                )?;
+            }
+            slowest = slowest.max(t_shard.elapsed().as_secs_f64());
+        }
+        self.xfer_secs = slowest;
+        Ok(())
+    }
+}
+
+impl Drop for SparseDeviceState<'_> {
+    fn drop(&mut self) {
+        self.rt.evict_keyed(&format!("sds{}/", self.id));
+    }
+}
+
+/// Fresh-path edge-tile upload: one owned (src, dst, w) buffer triple per
+/// tile per shard, uploaded once per evaluation (shared across all L
+/// layers) with the slowest shard's upload booked as the step's transfer
+/// time — the sparse twin of [`upload_a_fresh`], so dense-vs-sparse and
+/// resident-vs-fresh `StepTiming::h2d` comparisons stay like-for-like.
+/// Shared by the forward and backward orchestrators.
+#[allow(clippy::type_complexity)]
+pub(crate) fn upload_tiles_fresh(
+    rt: &Runtime,
+    shards: &[SparseShard],
+    timing: &mut StepTiming,
+) -> Result<Vec<Vec<(xla::PjRtBuffer, xla::PjRtBuffer, xla::PjRtBuffer)>>> {
+    let mut owned = Vec::with_capacity(shards.len());
+    let mut slowest = 0.0f64;
+    for sh in shards.iter() {
+        let t0 = Instant::now();
+        let mut per = Vec::with_capacity(sh.tiles.len());
+        for tile in &sh.tiles {
+            per.push((
+                rt.upload(&[tile.cap], &tile.src)?,
+                rt.upload(&[tile.cap], &tile.dst)?,
+                rt.upload(&[sh.b, tile.cap], &tile.w)?,
+            ));
+        }
+        slowest = slowest.max(t0.elapsed().as_secs_f64());
+        owned.push(per);
+    }
+    timing.h2d += slowest;
+    Ok(owned)
+}
+
+/// Run the distributed policy evaluation on the sparse CSR path (DESIGN.md
+/// §7): `embed_pre_sp` consumes the live-degree vector, each layer's
+/// message is a sweep of `embed_msg_sp` gather/segment-sum tiles
+/// accumulated into the B×K×N all-reduce scratch, and the N-free
+/// combine/q_sum/q_scores stages are shared with the dense path.
+/// python/tests/dist_sim.py `dist_forward_sparse` is the executable
+/// specification. Pass a [`SparseDeviceState`] (kept in sync via its
+/// `sync`) to keep θ and the edge tensors device-resident across steps.
+pub fn forward_sparse(
+    rt: &Runtime,
+    cfg: &EngineCfg,
+    params: &Params,
+    shards: &[SparseShard],
+    save: bool,
+    skip_zero_layer: bool,
+    dev: Option<&SparseDeviceState>,
+) -> Result<FwdOutput> {
+    let wall = Instant::now();
+    let p = shards.len();
+    assert_eq!(p, cfg.p, "shard count != cfg.p");
+    let (b, n, ni, k) = (shards[0].b, shards[0].n(), shards[0].ni(), params.k);
+    let chunk = shards[0].chunk;
+    for sh in shards {
+        assert_eq!((sh.b, sh.n(), sh.ni(), sh.chunk), (b, n, ni, chunk), "mixed shard shapes");
+    }
+    if let Some(d) = dev {
+        d.assert_in_sync(shards);
+    }
+    let mut timing = StepTiming::new(p);
+    let th = ThetaViews::new(params, dev.map(|d| d.theta_bufs()));
+
+    let d_s = [b, ni];
+    let d_e = [b, k, ni];
+    let d_ec = [b, k, chunk];
+    let d_sum = [b, k];
+
+    let exec = |shard: usize, name: &str, inputs: &[Input], timing: &mut StepTiming| {
+        let t0 = Instant::now();
+        let out = rt.execute_in(name, inputs);
+        timing.compute[shard] += t0.elapsed().as_secs_f64();
+        out
+    };
+
+    // §Perf: the edge tiles either live on device across steps
+    // (SparseDeviceState) or are uploaded once per evaluation, shared by
+    // every layer's tile sweep, and booked as transfer time — mirroring
+    // the dense path's per-evaluation A upload accounting.
+    let tile_owned: Vec<Vec<(xla::PjRtBuffer, xla::PjRtBuffer, xla::PjRtBuffer)>> =
+        if dev.is_none() { upload_tiles_fresh(rt, shards, &mut timing)? } else { Vec::new() };
+
+    // Stage 1: embed_pre_sp(θ1..θ3, S, deg) — the degree vector replaces
+    // the dense adjacency row-sum (bit-identical: 0/1 row sums are small
+    // integers).
+    let name_pre = sparse_pre_name("embed_pre_sp", b, ni, k);
+    let mut pre_h: Vec<Vec<f32>> = Vec::with_capacity(p);
+    for (i, sh) in shards.iter().enumerate() {
+        let inputs = [
+            th.t(0),
+            th.t(1),
+            th.t(2),
+            Input::Host(HostTensor::new(&d_s, &sh.s)),
+            Input::Host(HostTensor::new(&d_s, &sh.deg)),
+        ];
+        pre_h.push(exec(i, &name_pre, &inputs, &mut timing)?.into_iter().next().unwrap());
+    }
+
+    // Embedding layers: per shard, sweep the edge tiles grouped by source
+    // chunk (tiles are (sc, dc)-sorted by construction), slice the source
+    // embedding once per group, and accumulate each tile's [B,K,NC] partial
+    // into the B×K×N all-reduce scratch at its destination-chunk columns.
+    let mut embed_h: Vec<Vec<f32>> = (0..p).map(|_| vec![0.0f32; b * k * ni]).collect();
+    let mut embed_in: Vec<Vec<Vec<f32>>> = Vec::new();
+    let mut nbr_slice_acts: Vec<Vec<Vec<f32>>> = Vec::new();
+    let name_cmb = artifact_name("embed_combine", b, n, ni, k);
+    let mut nbr_full = vec![0.0f32; b * k * n];
+    let mut echunk = vec![0.0f32; b * k * chunk];
+
+    for layer in 0..cfg.l {
+        if save {
+            embed_in.push(embed_h.clone());
+        }
+        let skip_msg = layer == 0 && skip_zero_layer;
+        nbr_full.fill(0.0);
+        if !skip_msg {
+            for (i, sh) in shards.iter().enumerate() {
+                let tiles = &sh.tiles;
+                let mut ti = 0usize;
+                while ti < tiles.len() {
+                    let sc = tiles[ti].sc;
+                    // Source-chunk slice of the local embedding, zero-padded
+                    // past NI (padding rows are never referenced by live
+                    // edges).
+                    let t_host = Instant::now();
+                    let lo = sc * chunk;
+                    let hi = (lo + chunk).min(ni);
+                    echunk.fill(0.0);
+                    if lo < ni {
+                        for g in 0..b {
+                            for kk in 0..k {
+                                let so = g * k * ni + kk * ni + lo;
+                                let eo = g * k * chunk + kk * chunk;
+                                echunk[eo..eo + (hi - lo)]
+                                    .copy_from_slice(&embed_h[i][so..so + (hi - lo)]);
+                            }
+                        }
+                    }
+                    timing.host += t_host.elapsed().as_secs_f64();
+                    while ti < tiles.len() && tiles[ti].sc == sc {
+                        let tile = &tiles[ti];
+                        let name = sparse_msg_name("embed_msg_sp", b, tile.cap, chunk, k);
+                        let (src_in, dst_in, w_in) = match dev {
+                            Some(d) => (
+                                Input::Dev(&d.src[i][ti]),
+                                Input::Dev(&d.dst[i][ti]),
+                                Input::Dev(&d.w[i][ti]),
+                            ),
+                            None => {
+                                let (sb, db, wb) = &tile_owned[i][ti];
+                                (Input::Dev(sb), Input::Dev(db), Input::Dev(wb))
+                            }
+                        };
+                        let inputs =
+                            [Input::Host(HostTensor::new(&d_ec, &echunk)), src_in, dst_in, w_in];
+                        let part =
+                            exec(i, &name, &inputs, &mut timing)?.into_iter().next().unwrap();
+                        let t_host = Instant::now();
+                        let dlo = tile.dc * chunk;
+                        let dhi = (dlo + chunk).min(n);
+                        for g in 0..b {
+                            for kk in 0..k {
+                                let no = g * k * n + kk * n + dlo;
+                                let po = g * k * chunk + kk * chunk;
+                                add_assign(
+                                    &mut nbr_full[no..no + (dhi - dlo)],
+                                    &part[po..po + (dhi - dlo)],
+                                );
+                            }
+                        }
+                        timing.host += t_host.elapsed().as_secs_f64();
+                        ti += 1;
+                    }
+                }
+            }
+            timing.add_comm(cfg.cost.all_reduce(p, 4 * b * k * n), 4 * b * k * n);
+        }
+        // Local column slice + combine (shared N-free stage).
+        let t_host = Instant::now();
+        let mut nbr_slices: Vec<Vec<f32>> = Vec::with_capacity(p);
+        for sh in shards.iter() {
+            let row0 = sh.part.row0(sh.shard);
+            let mut sl = vec![0.0f32; b * k * ni];
+            for g in 0..b {
+                for kk in 0..k {
+                    let src = g * k * n + kk * n + row0;
+                    let dst = g * k * ni + kk * ni;
+                    sl[dst..dst + ni].copy_from_slice(&nbr_full[src..src + ni]);
+                }
+            }
+            nbr_slices.push(sl);
+        }
+        timing.host += t_host.elapsed().as_secs_f64();
+        for i in 0..p {
+            let inputs = [
+                th.t(3),
+                Input::Host(HostTensor::new(&d_e, &pre_h[i])),
+                Input::Host(HostTensor::new(&d_e, &nbr_slices[i])),
+            ];
+            embed_h[i] = exec(i, &name_cmb, &inputs, &mut timing)?.into_iter().next().unwrap();
+        }
+        if save {
+            nbr_slice_acts.push(nbr_slices);
+        }
+    }
+
+    // Stage 4 + ALL-REDUCE (shared N-free stage).
+    let name_qsum = artifact_name("q_sum", b, n, ni, k);
+    let mut sum_all = vec![0.0f32; b * k];
+    for i in 0..p {
+        let part = exec(i, &name_qsum, &[Input::Host(HostTensor::new(&d_e, &embed_h[i]))],
+                        &mut timing)?
+            .into_iter()
+            .next()
+            .unwrap();
+        let t_host = Instant::now();
+        add_assign(&mut sum_all, &part);
+        timing.host += t_host.elapsed().as_secs_f64();
+    }
+    timing.add_comm(cfg.cost.all_reduce(p, 4 * b * k), 4 * b * k);
+
+    // Stage 5 + ALL-GATHER of scores (shared N-free stage).
+    let name_q = artifact_name("q_scores", b, n, ni, k);
+    let mut scores = vec![0.0f32; b * n];
+    let mut scores_i: Vec<Vec<f32>> = Vec::with_capacity(p);
+    for (i, sh) in shards.iter().enumerate() {
+        let inputs = [
+            th.t(4),
+            th.t(5),
+            th.t(6),
+            Input::Host(HostTensor::new(&d_e, &embed_h[i])),
+            Input::Host(HostTensor::new(&d_s, &sh.c)),
+            Input::Host(HostTensor::new(&d_sum, &sum_all)),
+        ];
+        let local = exec(i, &name_q, &inputs, &mut timing)?.into_iter().next().unwrap();
+        let t_host = Instant::now();
+        let row0 = sh.part.row0(sh.shard);
+        for g in 0..b {
+            scores[g * n + row0..g * n + row0 + ni].copy_from_slice(&local[g * ni..(g + 1) * ni]);
+        }
+        timing.host += t_host.elapsed().as_secs_f64();
+        scores_i.push(local);
+    }
+    timing.add_comm(cfg.cost.all_gather(p, 4 * b * ni), 4 * b * ni * p);
+
+    timing.wall = wall.elapsed().as_secs_f64();
+    let acts = if save {
+        Some(Activations {
+            pre: pre_h,
+            embed_in,
+            nbr_slice: nbr_slice_acts,
+            embed_final: embed_h,
+            sum_all,
+            scores_i,
+        })
+    } else {
+        None
+    };
+    Ok(FwdOutput { scores, acts, timing })
+}
+
+/// A device state for either storage mode — what the storage-generic solve
+/// loops hold alongside a [`ShardSet`].
+pub enum AnyDeviceState<'r> {
+    /// Dense θ+A residency ([`DeviceState`]).
+    Dense(DeviceState<'r>),
+    /// Sparse θ+edge-tile residency ([`SparseDeviceState`]).
+    Sparse(SparseDeviceState<'r>),
+}
+
+impl<'r> AnyDeviceState<'r> {
+    /// Upload device state matching the set's storage mode.
+    pub fn new(rt: &'r Runtime, params: &Params, set: &mut ShardSet) -> Result<AnyDeviceState<'r>> {
+        match set {
+            ShardSet::Dense(sh) => Ok(AnyDeviceState::Dense(DeviceState::new(rt, params, sh)?)),
+            ShardSet::Sparse(sh) => {
+                Ok(AnyDeviceState::Sparse(SparseDeviceState::new(rt, params, sh)?))
+            }
+        }
+    }
+
+    /// Push recorded host-side deltas to the device copies (see the
+    /// per-mode `sync` docs).
+    pub fn sync(&mut self, set: &mut ShardSet) -> Result<()> {
+        match (self, set) {
+            (AnyDeviceState::Dense(d), ShardSet::Dense(sh)) => d.sync(sh),
+            (AnyDeviceState::Sparse(d), ShardSet::Sparse(sh)) => d.sync(sh),
+            _ => panic!("device-state storage mode does not match the shard set"),
+        }
+    }
+
+    /// Invalidate + re-upload after a repack (see the per-mode docs).
+    pub fn rebuild(&mut self, set: &mut ShardSet) -> Result<()> {
+        match (self, set) {
+            (AnyDeviceState::Dense(d), ShardSet::Dense(sh)) => d.rebuild(sh),
+            (AnyDeviceState::Sparse(d), ShardSet::Sparse(sh)) => d.rebuild(sh),
+            _ => panic!("device-state storage mode does not match the shard set"),
+        }
+    }
+
+    /// Re-upload θ after an optimizer step.
+    pub fn refresh_theta(&mut self, params: &Params) -> Result<()> {
+        match self {
+            AnyDeviceState::Dense(d) => d.refresh_theta(params),
+            AnyDeviceState::Sparse(d) => d.refresh_theta(params),
+        }
+    }
+
+    /// Simulated transfer seconds of the most recent upload operation.
+    pub fn last_transfer_secs(&self) -> f64 {
+        match self {
+            AnyDeviceState::Dense(d) => d.last_transfer_secs(),
+            AnyDeviceState::Sparse(d) => d.last_transfer_secs(),
+        }
+    }
+}
+
+/// Storage-generic policy evaluation: dispatch a [`ShardSet`] to
+/// [`forward_dev`] (dense) or [`forward_sparse`] with the matching device
+/// state. Panics if a device state of the other mode is passed — the solve
+/// loops construct both from the same set, so a mismatch is a logic bug.
+pub fn forward_set(
+    rt: &Runtime,
+    cfg: &EngineCfg,
+    params: &Params,
+    set: &ShardSet,
+    save: bool,
+    skip_zero_layer: bool,
+    dev: Option<&AnyDeviceState>,
+) -> Result<FwdOutput> {
+    match set {
+        ShardSet::Dense(sh) => {
+            let d = match dev {
+                Some(AnyDeviceState::Dense(d)) => Some(d),
+                None => None,
+                Some(AnyDeviceState::Sparse(_)) => panic!("sparse device state on dense set"),
+            };
+            forward_dev(rt, cfg, params, sh, save, skip_zero_layer, d)
+        }
+        ShardSet::Sparse(sh) => {
+            let d = match dev {
+                Some(AnyDeviceState::Sparse(d)) => Some(d),
+                None => None,
+                Some(AnyDeviceState::Dense(_)) => panic!("dense device state on sparse set"),
+            };
+            forward_sparse(rt, cfg, params, sh, save, skip_zero_layer, d)
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -761,6 +1342,93 @@ mod tests {
             let fresh = forward(&rt, &cfg, &params, &shards, false, true).unwrap();
             assert_eq!(res.scores, fresh.scores, "P={p} synced scores diverge");
         }
+    }
+
+    fn fresh_sparse_shards(
+        rt: &Runtime,
+        part: Partition,
+        g: &crate::graph::Graph,
+    ) -> Option<Vec<SparseShard>> {
+        let Ok((chunk, caps)) = rt.manifest.sparse_config(1, part.ni(), 32) else {
+            eprintln!("skipping: sparse artifacts not compiled");
+            return None;
+        };
+        let removed = vec![false; g.n];
+        let sol = vec![false; g.n];
+        let cand: Vec<bool> = (0..g.n).map(|v| g.degree(v) > 0).collect();
+        Some(crate::coordinator::shard::sparse_shards_for_graph(
+            part, g, &removed, &sol, &cand, chunk, &caps,
+        ))
+    }
+
+    #[test]
+    fn sparse_forward_matches_dense_oracle() {
+        // The CSR path must reproduce the dense path's scores to fp
+        // tolerance at every device count (the scatter's summation order
+        // differs from the matmul's, so parity is fp-tolerant like the
+        // batch engine's b=1-vs-b>=2 note, DESIGN.md §4 Numerics).
+        let Some(rt) = runtime() else { return };
+        let g = generators::erdos_renyi(20, 0.25, &mut Pcg32::seeded(9));
+        let params = Params::init(32, &mut Pcg32::seeded(17));
+        for p in [1usize, 2, 4] {
+            let part = Partition::new(24, p);
+            let dense = fresh_shards(part, &g);
+            let Some(sparse) = fresh_sparse_shards(&rt, part, &g) else { return };
+            let cfg = EngineCfg::new(p, 2);
+            let want = forward(&rt, &cfg, &params, &dense, false, true).unwrap();
+            let got = forward_sparse(&rt, &cfg, &params, &sparse, false, true, None).unwrap();
+            let d = crate::util::max_abs_diff(&got.scores, &want.scores);
+            assert!(d < 1e-4, "P={p} sparse diverges from dense by {d}");
+            // Transfer/collective accounting matches the dense shape.
+            assert_eq!(got.timing.collectives, want.timing.collectives);
+        }
+    }
+
+    #[test]
+    fn sparse_device_state_is_bit_exact_and_tracks_removals() {
+        // Resident vs fresh on the SPARSE path is bit-exact (same stage
+        // programs, same input bits — only the transport differs), and a
+        // synced SparseDeviceState must track live-mask deltas after
+        // removals.
+        let Some(rt) = runtime() else { return };
+        let g = generators::erdos_renyi(20, 0.25, &mut Pcg32::seeded(10));
+        let params = Params::init(32, &mut Pcg32::seeded(18));
+        for p in [1usize, 2] {
+            let part = Partition::new(24, p);
+            let Some(mut sparse) = fresh_sparse_shards(&rt, part, &g) else { return };
+            let cfg = EngineCfg::new(p, 2);
+            let mut dev = SparseDeviceState::new(&rt, &params, &mut sparse).unwrap();
+            let res =
+                forward_sparse(&rt, &cfg, &params, &sparse, false, true, Some(&dev)).unwrap();
+            let fresh = forward_sparse(&rt, &cfg, &params, &sparse, false, true, None).unwrap();
+            assert_eq!(res.scores, fresh.scores, "P={p} resident sparse scores diverge");
+            for sh in sparse.iter_mut() {
+                sh.apply_select(0, 3);
+                sh.apply_select(0, 11);
+            }
+            dev.sync(&mut sparse).unwrap();
+            let res2 =
+                forward_sparse(&rt, &cfg, &params, &sparse, false, true, Some(&dev)).unwrap();
+            let fresh2 = forward_sparse(&rt, &cfg, &params, &sparse, false, true, None).unwrap();
+            assert_eq!(res2.scores, fresh2.scores, "P={p} synced sparse scores diverge");
+            assert_ne!(res2.scores, res.scores, "removals did not change scores");
+        }
+    }
+
+    #[test]
+    fn forward_set_dispatches_storage_modes() {
+        let Some(rt) = runtime() else { return };
+        let g = generators::erdos_renyi(20, 0.25, &mut Pcg32::seeded(11));
+        let params = Params::init(32, &mut Pcg32::seeded(19));
+        let part = Partition::new(24, 2);
+        let cfg = EngineCfg::new(2, 2);
+        let dense_set = ShardSet::Dense(fresh_shards(part, &g));
+        let Some(sp) = fresh_sparse_shards(&rt, part, &g) else { return };
+        let sparse_set = ShardSet::Sparse(sp);
+        let a = forward_set(&rt, &cfg, &params, &dense_set, false, true, None).unwrap();
+        let b = forward_set(&rt, &cfg, &params, &sparse_set, false, true, None).unwrap();
+        let d = crate::util::max_abs_diff(&a.scores, &b.scores);
+        assert!(d < 1e-4, "set dispatch paths diverge by {d}");
     }
 
     #[test]

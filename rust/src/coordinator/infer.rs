@@ -3,9 +3,9 @@
 //! until the environment reports a complete solution.
 
 use super::engine::{EngineCfg, StepTiming};
-use super::fwd::{forward_dev, DeviceState};
+use super::fwd::{forward_set, AnyDeviceState};
 use super::selection::{select_count, top_d, SelectionPolicy};
-use super::shard::{mirror_selection, shards_for_graph, ShardState};
+use super::shard::{shards_for_graph, sparse_shards_for_graph, ShardSet, Storage};
 use crate::env::{GraphEnv, Scenario};
 use crate::graph::{Graph, Partition};
 use crate::model::Params;
@@ -16,22 +16,30 @@ use std::time::Instant;
 /// Inference configuration.
 #[derive(Debug, Clone, Copy)]
 pub struct InferCfg {
+    /// Shared engine parameters (P, L, comm cost model).
     pub engine: EngineCfg,
+    /// Node-selection policy (single / adaptive multi / fixed multi).
     pub policy: SelectionPolicy,
     /// Elide layer-0 message stage (exact; see fwd.rs).
     pub skip_zero_layer: bool,
-    /// Hold θ/A on device across steps (exact; see fwd.rs `DeviceState`).
-    /// Off = the fresh-upload reference path.
+    /// Hold θ + adjacency state on device across steps (exact; see fwd.rs
+    /// `DeviceState`/`SparseDeviceState`). Off = the fresh-upload reference
+    /// path.
     pub device_resident: bool,
+    /// Per-shard storage mode (DESIGN.md §7): dense B×NI×N oracle or
+    /// CSR-backed sparse tiles scaling O(E/P + NI).
+    pub storage: Storage,
 }
 
 impl InferCfg {
+    /// Default configuration for `p` shards and `l` embedding layers.
     pub fn new(p: usize, l: usize) -> InferCfg {
         InferCfg {
             engine: EngineCfg::new(p, l),
             policy: SelectionPolicy::Single,
             skip_zero_layer: true,
             device_resident: true,
+            storage: Storage::Dense,
         }
     }
 }
@@ -41,6 +49,7 @@ impl InferCfg {
 pub struct InferResult {
     /// Solution mask over the (unpadded) nodes.
     pub solution: Vec<bool>,
+    /// Number of selected nodes |S|.
     pub solution_size: usize,
     /// Scenario objective of the final solution (|S| except MaxCut: cut weight).
     pub objective: f64,
@@ -72,8 +81,27 @@ pub fn solve_env(
     let wall = Instant::now();
     let part = Partition::new(bucket_n, cfg.engine.p);
     let candidates: Vec<bool> = (0..g.n).map(|v| env.is_candidate(v)).collect();
-    let mut shards: Vec<ShardState> =
-        shards_for_graph(part, g, env.removed_mask(), env.solution_mask(), &candidates);
+    let mut set = match cfg.storage {
+        Storage::Dense => ShardSet::Dense(shards_for_graph(
+            part,
+            g,
+            env.removed_mask(),
+            env.solution_mask(),
+            &candidates,
+        )),
+        Storage::Sparse => {
+            let (chunk, caps) = rt.manifest.sparse_config(1, part.ni(), params.k)?;
+            ShardSet::Sparse(sparse_shards_for_graph(
+                part,
+                g,
+                env.removed_mask(),
+                env.solution_mask(),
+                &candidates,
+                chunk,
+                &caps,
+            ))
+        }
+    };
     let mut removed_prev: Vec<bool> = env.removed_mask().to_vec();
 
     let mut timing = StepTiming::new(cfg.engine.p);
@@ -81,12 +109,13 @@ pub fn solve_env(
     let mut selections = 0usize;
     let mut sim_total = 0.0f64;
 
-    // Device residency (DESIGN.md §6): θ and the shard adjacencies are
-    // uploaded once here; each step pushes only the selection deltas. The
-    // one-time upload is a real cost — book it like every other transfer
-    // so resident-vs-fresh simulated times stay comparable.
+    // Device residency (DESIGN.md §6/§7): θ and the shard adjacency state
+    // (dense A, or the sparse edge tiles) are uploaded once here; each step
+    // pushes only the selection deltas. The one-time upload is a real cost —
+    // book it like every other transfer so resident-vs-fresh simulated
+    // times stay comparable.
     let mut dev = if cfg.device_resident {
-        let d = DeviceState::new(rt, params, &mut shards)?;
+        let d = AnyDeviceState::new(rt, params, &mut set)?;
         let up_t = d.last_transfer_secs();
         timing.h2d += up_t;
         sim_total += up_t;
@@ -96,24 +125,30 @@ pub fn solve_env(
     };
 
     while !env.done() {
-        // Push A deltas from the previous step's selections to the device.
+        // Push state deltas from the previous step's selections to the
+        // device (dense: row/col masks; sparse: dirty tile live-masks).
         if let Some(d) = dev.as_mut() {
-            d.sync(&mut shards)?;
+            d.sync(&mut set)?;
             let sync_t = d.last_transfer_secs();
             timing.h2d += sync_t;
             sim_total += sync_t;
         }
         // Distributed policy evaluation (Alg. 4 lines 4-6).
         let skip0 = cfg.skip_zero_layer;
-        let out = forward_dev(rt, &cfg.engine, params, &shards, false, skip0, dev.as_ref())?;
+        let out = forward_set(rt, &cfg.engine, params, &set, false, skip0, dev.as_ref())?;
         evaluations += 1;
         sim_total += out.timing.simulated();
         timing.merge(&out.timing);
 
-        // Selection (line 7 / §4.5.1).
+        // Selection (line 7 / §4.5.1). The adaptive-d thresholds compare
+        // |C| against the LIVE residual-graph size, not the original N —
+        // multi-node removals shrink the graph, and a schedule pinned to
+        // the original N under-selects on the shrunken remainder.
         let t_host = Instant::now();
+        let rm = env.removed_mask();
         let num_cand = (0..g.n).filter(|&v| env.is_candidate(v)).count();
-        let d = select_count(cfg.policy, num_cand, g.n);
+        let live = (0..g.n).filter(|&v| !rm[v]).count();
+        let d = select_count(cfg.policy, num_cand, live);
         let picked = top_d(&out.scores[..g.n], |v| env.is_candidate(v), d);
         assert!(!picked.is_empty(), "no candidates but env not done");
         // Apply selections (lines 8-10) — candidates can be invalidated by
@@ -126,7 +161,7 @@ pub fn solve_env(
             let (_r, done) = env.step(v);
             selections += 1;
             let t_upd = Instant::now();
-            mirror_selection(&mut shards, 0, v, &*env, &mut removed_prev);
+            set.mirror_selection(0, v, &*env, &mut removed_prev);
             host_t += t_upd.elapsed().as_secs_f64();
             if done {
                 break;
@@ -134,9 +169,7 @@ pub fn solve_env(
         }
         // Refresh candidate masks from the environment (covered-out nodes).
         let t_upd = Instant::now();
-        for sh in shards.iter_mut() {
-            sh.refresh_candidates(0, |v| env.is_candidate(v));
-        }
+        set.refresh_candidates(0, |v| env.is_candidate(v));
         host_t += t_upd.elapsed().as_secs_f64();
         timing.host += host_t;
         sim_total += host_t;
@@ -231,6 +264,28 @@ mod tests {
         // Quality should be close (paper: ratio ≈ 1.00x at these scales).
         let ratio = rm.solution_size as f64 / rs.solution_size as f64;
         assert!(ratio < 1.25, "multi-select ratio degraded: {ratio}");
+    }
+
+    #[test]
+    fn sparse_storage_matches_dense_solutions() {
+        // Same graph, same params: the CSR path must pick the same cover as
+        // the dense oracle (argmax selection absorbs the fp-level scatter
+        // vs matmul summation difference; DESIGN.md §7).
+        let Some(rt) = runtime() else { return };
+        let g = generators::erdos_renyi(20, 0.2, &mut Pcg32::seeded(21));
+        let params = Params::init(32, &mut Pcg32::seeded(22));
+        for p in [1usize, 2] {
+            if rt.manifest.sparse_config(1, 24 / p, 32).is_err() {
+                eprintln!("skipping: sparse artifacts not compiled");
+                return;
+            }
+            let dense = solve_mvc(&rt, &InferCfg::new(p, 2), &params, &g, 24).unwrap();
+            let mut scfg = InferCfg::new(p, 2);
+            scfg.storage = crate::coordinator::shard::Storage::Sparse;
+            let sparse = solve_mvc(&rt, &scfg, &params, &g, 24).unwrap();
+            assert_eq!(sparse.solution, dense.solution, "P={p} sparse cover diverges");
+            assert_eq!(sparse.evaluations, dense.evaluations);
+        }
     }
 
     #[test]

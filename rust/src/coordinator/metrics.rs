@@ -31,8 +31,11 @@ pub fn approx_ratio(solution_size: usize, optimal_size: usize) -> f64 {
 /// A learning-curve point (training step → mean test approx ratio).
 #[derive(Debug, Clone)]
 pub struct CurvePoint {
+    /// Global training step of the measurement.
     pub step: usize,
+    /// Mean test approximation ratio at that step.
     pub ratio: f64,
+    /// Mean training loss at that step, if training ran.
     pub loss: Option<f64>,
 }
 
@@ -55,12 +58,16 @@ pub fn write_curve_csv(path: impl AsRef<Path>, points: &[CurvePoint]) -> Result<
 /// A generic bench row: label → named values; renders aligned tables and JSON.
 #[derive(Debug, Clone)]
 pub struct Table {
+    /// Table caption (printed and logged).
     pub title: String,
+    /// Column headers.
     pub columns: Vec<String>,
+    /// (row label, values) pairs.
     pub rows: Vec<(String, Vec<f64>)>,
 }
 
 impl Table {
+    /// Create an empty table with a caption and column headers.
     pub fn new(title: &str, columns: &[&str]) -> Table {
         Table {
             title: title.to_string(),
@@ -69,6 +76,7 @@ impl Table {
         }
     }
 
+    /// Append one row.
     pub fn row(&mut self, label: impl Into<String>, values: Vec<f64>) {
         let label = label.into();
         assert_eq!(values.len(), self.columns.len(), "row width mismatch in {}", self.title);
@@ -105,6 +113,7 @@ impl Table {
         out
     }
 
+    /// Render as a JSON object (bench_results.jsonl rows).
     pub fn to_json(&self) -> Json {
         let rows: Vec<Json> = self
             .rows

@@ -6,14 +6,25 @@
 //! multiple-node selection + repeated-gradient-iteration optimizations
 //! (§4.5).
 
+/// CLI subcommand implementations for the `oggm` binary.
 pub mod cmd;
+/// Per-shard distributed state, dense and sparse (DESIGN.md §7).
 pub mod shard;
+/// Lockstep simulation-engine primitives (timing, config).
 pub mod engine;
+/// Distributed forward pass + device-residency layers.
 pub mod fwd;
+/// Distributed backward pass (hand-rolled VJP orchestration).
 pub mod bwd;
+/// Node-selection policies (argmax / §4.5.1 adaptive multi).
 pub mod selection;
+/// Parallel RL inference (Alg. 4).
 pub mod infer;
+/// Compressed experience replay (§4.4) + Tuples2Graphs.
 pub mod replay;
+/// Parallel RL training (Alg. 5).
 pub mod train;
+/// Metrics output: curves, tables, JSON/CSV writers.
 pub mod metrics;
+/// Thread-per-shard execution harness (collective validation).
 pub mod threaded;

@@ -3,7 +3,7 @@
 //! target); `Tuples2Graphs` reconstructs the dense minibatch state from the
 //! original CSR graphs at training time.
 
-use super::shard::ShardState;
+use super::shard::{ShardSet, ShardState, SparseShard, Storage};
 use crate::graph::{Graph, Partition};
 use crate::util::rng::Pcg32;
 
@@ -24,10 +24,12 @@ pub struct Tuple {
 #[derive(Debug, Clone, PartialEq)]
 pub struct BitSet {
     words: Vec<u64>,
+    /// Number of bits (nodes) the set covers.
     pub len: usize,
 }
 
 impl BitSet {
+    /// Pack a bool mask.
     pub fn from_bools(mask: &[bool]) -> BitSet {
         let mut words = vec![0u64; mask.len().div_ceil(64)];
         for (i, &b) in mask.iter().enumerate() {
@@ -38,14 +40,17 @@ impl BitSet {
         BitSet { words, len: mask.len() }
     }
 
+    /// Bit i.
     pub fn get(&self, i: usize) -> bool {
         self.words[i / 64] & (1 << (i % 64)) != 0
     }
 
+    /// Unpack to a bool mask.
     pub fn to_bools(&self) -> Vec<bool> {
         (0..self.len).map(|i| self.get(i)).collect()
     }
 
+    /// Bytes held by the packed words.
     pub fn bytes(&self) -> usize {
         8 * self.words.len()
     }
@@ -59,10 +64,12 @@ pub struct ReplayBuffer {
 }
 
 impl ReplayBuffer {
+    /// Empty buffer holding at most `capacity` tuples.
     pub fn new(capacity: usize) -> ReplayBuffer {
         ReplayBuffer { capacity, tuples: std::collections::VecDeque::new() }
     }
 
+    /// Append a tuple, evicting the oldest at capacity.
     pub fn push(&mut self, t: Tuple) {
         if self.tuples.len() == self.capacity {
             self.tuples.pop_front();
@@ -70,10 +77,12 @@ impl ReplayBuffer {
         self.tuples.push_back(t);
     }
 
+    /// Number of buffered tuples.
     pub fn len(&self) -> usize {
         self.tuples.len()
     }
 
+    /// Whether the buffer holds no tuples.
     pub fn is_empty(&self) -> bool {
         self.tuples.is_empty()
     }
@@ -97,26 +106,32 @@ impl ReplayBuffer {
     }
 }
 
-/// Tuples2Graphs (Alg. 5 line 21-24): rebuild the per-shard dense minibatch
-/// tensors for `tuples` over the training dataset `graphs`.
-///
-/// For MVC the residual graph removes solution nodes, candidates are the
-/// non-solution nodes with uncovered incident edges — reconstructed here
-/// from the CSR graph + snapshot, exactly like the paper regenerates
-/// subgraphs from (index, S).
-pub fn tuples_to_shards(
-    part: Partition,
-    graphs: &[Graph],
-    tuples: &[&Tuple],
-) -> (Vec<ShardState>, Vec<f32>, Vec<f32>) {
+/// Reconstructed minibatch state (Tuples2Graphs, before sharding).
+struct MiniState<'g> {
+    grefs: Vec<&'g Graph>,
+    removed: Vec<Vec<bool>>,
+    solution: Vec<Vec<bool>>,
+    candidates: Vec<Vec<bool>>,
+    onehot: Vec<f32>,
+    targets: Vec<f32>,
+}
+
+/// Tuples2Graphs (Alg. 5 line 21-24): rebuild the per-graph minibatch masks
+/// for `tuples` over the training dataset `graphs`. For MVC the residual
+/// graph removes solution nodes; candidates are the non-solution nodes with
+/// uncovered incident edges — reconstructed from the CSR graph + snapshot,
+/// exactly like the paper regenerates subgraphs from (index, S).
+fn reconstruct<'g>(part: Partition, graphs: &'g [Graph], tuples: &[&Tuple]) -> MiniState<'g> {
     let b = tuples.len();
     let n = part.n;
-    let mut grefs: Vec<&Graph> = Vec::with_capacity(b);
-    let mut removed: Vec<Vec<bool>> = Vec::with_capacity(b);
-    let mut solution: Vec<Vec<bool>> = Vec::with_capacity(b);
-    let mut candidates: Vec<Vec<bool>> = Vec::with_capacity(b);
-    let mut onehot = vec![0.0f32; b * n];
-    let mut targets = vec![0.0f32; b];
+    let mut st = MiniState {
+        grefs: Vec::with_capacity(b),
+        removed: Vec::with_capacity(b),
+        solution: Vec::with_capacity(b),
+        candidates: Vec::with_capacity(b),
+        onehot: vec![0.0f32; b * n],
+        targets: vec![0.0f32; b],
+    };
     for (bi, t) in tuples.iter().enumerate() {
         let g = &graphs[t.graph_id as usize];
         let sol = t.solution.to_bools();
@@ -128,26 +143,75 @@ pub fn tuples_to_shards(
                     && g.neighbors(v).iter().any(|&u| !sol[u as usize])
             })
             .collect();
-        grefs.push(g);
-        removed.push(sol.clone());
-        solution.push(sol);
-        candidates.push(cand);
-        onehot[bi * n + t.action as usize] = 1.0;
-        targets[bi] = t.target;
+        st.grefs.push(g);
+        st.removed.push(sol.clone());
+        st.solution.push(sol);
+        st.candidates.push(cand);
+        st.onehot[bi * n + t.action as usize] = 1.0;
+        st.targets[bi] = t.target;
     }
+    st
+}
+
+/// Rebuild the per-shard *dense* minibatch tensors for `tuples` (the
+/// original Tuples2Graphs entry; see [`tuples_to_shard_set`] for the
+/// storage-generic variant).
+pub fn tuples_to_shards(
+    part: Partition,
+    graphs: &[Graph],
+    tuples: &[&Tuple],
+) -> (Vec<ShardState>, Vec<f32>, Vec<f32>) {
+    let st = reconstruct(part, graphs, tuples);
     let shards = (0..part.p)
         .map(|i| {
             ShardState::from_graphs(
                 part,
                 i,
-                &grefs,
-                &removed.iter().map(|r| r.as_slice()).collect::<Vec<_>>(),
-                &solution.iter().map(|r| r.as_slice()).collect::<Vec<_>>(),
-                &candidates.iter().map(|r| r.as_slice()).collect::<Vec<_>>(),
+                &st.grefs,
+                &st.removed.iter().map(|r| r.as_slice()).collect::<Vec<_>>(),
+                &st.solution.iter().map(|r| r.as_slice()).collect::<Vec<_>>(),
+                &st.candidates.iter().map(|r| r.as_slice()).collect::<Vec<_>>(),
             )
         })
         .collect();
-    (shards, onehot, targets)
+    (shards, st.onehot, st.targets)
+}
+
+/// Storage-generic Tuples2Graphs: rebuild the minibatch as a [`ShardSet`]
+/// in the requested storage mode. `sparse_cfg` is the (chunk, edge caps)
+/// pair from `Manifest::sparse_config`, required iff `storage` is sparse.
+pub fn tuples_to_shard_set(
+    part: Partition,
+    graphs: &[Graph],
+    tuples: &[&Tuple],
+    storage: Storage,
+    sparse_cfg: Option<(usize, &[usize])>,
+) -> (ShardSet, Vec<f32>, Vec<f32>) {
+    match storage {
+        Storage::Dense => {
+            let (shards, onehot, targets) = tuples_to_shards(part, graphs, tuples);
+            (ShardSet::Dense(shards), onehot, targets)
+        }
+        Storage::Sparse => {
+            let (chunk, caps) = sparse_cfg.expect("sparse storage needs a sparse_cfg");
+            let st = reconstruct(part, graphs, tuples);
+            let shards = (0..part.p)
+                .map(|i| {
+                    SparseShard::from_graphs(
+                        part,
+                        i,
+                        &st.grefs,
+                        &st.removed.iter().map(|r| r.as_slice()).collect::<Vec<_>>(),
+                        &st.solution.iter().map(|r| r.as_slice()).collect::<Vec<_>>(),
+                        &st.candidates.iter().map(|r| r.as_slice()).collect::<Vec<_>>(),
+                        chunk,
+                        caps,
+                    )
+                })
+                .collect();
+            (ShardSet::Sparse(shards), st.onehot, st.targets)
+        }
+    }
 }
 
 #[cfg(test)]

@@ -15,7 +15,17 @@ pub enum SelectionPolicy {
     FixedMulti(usize),
 }
 
-/// The §4.5.1 schedule: d as a function of |C| and N.
+/// The §4.5.1 schedule: d as a function of |C| and the LIVE node count of
+/// the residual graph.
+///
+/// `n` must be the *current* number of unremoved nodes, not the original
+/// graph size: multi-node removals shrink the graph (MVC/MIS), and a
+/// schedule pinned to the original N compares |C| against thresholds that
+/// no longer describe the remainder — e.g. 80 candidates in a 100-node
+/// residue of an originally 1000-node graph is a dense (d=8) state, not a
+/// nearly-finished (d=1) one. The solve loops derive `n` from the
+/// environment's removed mask each evaluation (regression:
+/// `schedule_uses_live_graph_size`).
 pub fn adaptive_d(num_candidates: usize, n: usize) -> usize {
     if num_candidates > n / 2 {
         8
@@ -28,7 +38,8 @@ pub fn adaptive_d(num_candidates: usize, n: usize) -> usize {
     }
 }
 
-/// Number of nodes to select this evaluation under `policy`.
+/// Number of nodes to select this evaluation under `policy`. `n` is the
+/// live (unremoved) node count — see [`adaptive_d`].
 pub fn select_count(policy: SelectionPolicy, num_candidates: usize, n: usize) -> usize {
     let d = match policy {
         SelectionPolicy::Single => 1,
@@ -76,6 +87,19 @@ mod tests {
             assert!(d <= last, "d grew as |C| shrank");
             last = d;
         }
+    }
+
+    #[test]
+    fn schedule_uses_live_graph_size() {
+        // Regression (ISSUE 3 bugfix): the thresholds must be evaluated
+        // against the live residual-graph size the solve loops now pass,
+        // not the original N. 80 candidates in a 100-node remainder of an
+        // originally-1000-node graph is a dense (d=8) state — the pinned-N
+        // schedule would have collapsed it to d=1 after the removals that
+        // accompany a compaction repack.
+        assert_eq!(adaptive_d(80, 1000), 1); // what pinning N would yield
+        assert_eq!(adaptive_d(80, 100), 8); // live-count schedule
+        assert_eq!(select_count(SelectionPolicy::AdaptiveMulti, 80, 100), 8);
     }
 
     #[test]

@@ -1,17 +1,31 @@
-//! Per-shard distributed state: the dense compute-path mirror of the
-//! paper's three distributed data structures (§4.1, Fig. 2): sub-adjacency
-//! A^i (B×NI×N), candidate set C^i (B×NI) and partial solution S^i (B×NI).
+//! Per-shard distributed state in two storage modes (DESIGN.md §7):
 //!
-//! The coordinator keeps these in lockstep with the host-side environment:
-//! node selection zeroes the node's local row and its column on every shard
-//! (Fig. 4), sets S, and clears C.
+//! - [`ShardState`] — the dense compute-path mirror of the paper's three
+//!   distributed data structures (§4.1, Fig. 2): sub-adjacency A^i
+//!   (B×NI×N f32), candidate set C^i (B×NI) and partial solution S^i
+//!   (B×NI). O(B·NI·N) memory per shard; the golden oracle.
+//! - [`SparseShard`] — the paper's distributed *sparse* storage (§4.1):
+//!   the same S/C vectors plus the shard's directed edges as padded
+//!   (source-chunk × destination-chunk) tiles with a per-batch-element
+//!   live-edge mask, and the live out-degree vector. O(B·NI + E_i·(2+B))
+//!   memory, where E_i is the shard's directed edge count — the adjacency
+//!   term scales with edges, never NI·N.
+//!
+//! The coordinator keeps either mode in lockstep with the host-side
+//! environment: node selection zeroes the node's local row and its column
+//! on every shard (Fig. 4) — realized densely as row/column zeroing and
+//! sparsely as live-mask clearing of every incident edge — sets S, and
+//! clears C. [`mirror_selection`] is generic over the two so the solve
+//! loops cannot drift between them.
 
 use crate::env::GraphEnv;
 use crate::graph::{Graph, Partition};
+use std::collections::BTreeMap;
 
 /// One shard's tensor state for a batch of B graph instances.
 #[derive(Debug, Clone)]
 pub struct ShardState {
+    /// The row partition this shard belongs to.
     pub part: Partition,
     /// This shard's index (0..P).
     pub shard: usize,
@@ -97,10 +111,12 @@ impl ShardState {
         ShardState { part, shard, b, a, s, c, dirty_rows: Vec::new(), dirty_cols: Vec::new() }
     }
 
+    /// Shard height NI = N / P.
     pub fn ni(&self) -> usize {
         self.part.ni()
     }
 
+    /// Padded global node count N.
     pub fn n(&self) -> usize {
         self.part.n
     }
@@ -171,17 +187,390 @@ impl ShardState {
     /// Refresh the candidate mask for batch element g_idx from the
     /// environment's candidate predicate (the host owns candidate logic).
     pub fn refresh_candidates(&mut self, g_idx: usize, is_candidate: impl Fn(usize) -> bool) {
-        let ni = self.ni();
-        let row0 = self.part.row0(self.shard);
-        for r in 0..ni {
-            let v = row0 + r;
-            self.c[g_idx * ni + r] = if v < self.n() && is_candidate(v) { 1.0 } else { 0.0 };
-        }
+        refresh_candidate_row(self.part, self.shard, &mut self.c, g_idx, is_candidate);
     }
 
     /// Bytes held by this shard's tensors (memory accounting, §5.2).
     pub fn bytes(&self) -> usize {
         4 * (self.a.len() + self.s.len() + self.c.len())
+    }
+
+    /// Bytes of the adjacency representation alone (the B·NI·N·4 term the
+    /// sparse path eliminates; compared by `bench_memory`).
+    pub fn adjacency_bytes(&self) -> usize {
+        4 * self.a.len()
+    }
+}
+
+/// Which per-shard storage a solve/train loop should use (DESIGN.md §7).
+///
+/// `Dense` materializes the B×NI×N sub-adjacency (the golden oracle path);
+/// `Sparse` stores CSR-derived edge tiles and scales with the edge count.
+/// The chunk size and edge-capacity ladder of the sparse path come from
+/// the artifact manifest at solve time (`Manifest::sparse_config`), so the
+/// knob itself stays `Copy`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Storage {
+    /// Dense B×NI×N sub-adjacency per shard (the reference path).
+    #[default]
+    Dense,
+    /// CSR-backed edge tiles + live-edge masks per shard (O(E/P + NI)).
+    Sparse,
+}
+
+impl Storage {
+    /// Parse a CLI value (`dense` | `sparse`).
+    pub fn parse(s: &str) -> anyhow::Result<Storage> {
+        match s.to_ascii_lowercase().as_str() {
+            "dense" => Ok(Storage::Dense),
+            "sparse" | "csr" => Ok(Storage::Sparse),
+            other => anyhow::bail!("unknown storage '{other}' (dense|sparse)"),
+        }
+    }
+}
+
+/// One padded edge tile of a [`SparseShard`]: the live directed edges from
+/// source rows [sc·NC, (sc+1)·NC) of the shard into global destination
+/// columns [dc·NC, (dc+1)·NC), padded to a compiled edge capacity.
+#[derive(Debug, Clone)]
+pub struct EdgeTile {
+    /// Source chunk index within the shard's NI rows.
+    pub sc: usize,
+    /// Destination chunk index within the global N columns.
+    pub dc: usize,
+    /// Compiled edge capacity EC this tile is padded to (its artifact
+    /// bucket); `src`/`dst` have this length, `w` is B×EC.
+    pub cap: usize,
+    /// Number of real (non-padding) edges in the tile.
+    pub len: usize,
+    /// Chunk-local source row index per edge slot, as f32 (the runtime's
+    /// upload path is f32-only; indices < 2^24 are exact).
+    pub src: Vec<f32>,
+    /// Chunk-local destination column index per edge slot, as f32.
+    pub dst: Vec<f32>,
+    /// Live-edge mask, B×EC row-major: w[g·EC+e] is 1.0 iff edge slot e
+    /// carries a live edge of batch element g (0.0 for padding, removed
+    /// edges, and edges belonging to other graphs of the pack).
+    pub w: Vec<f32>,
+}
+
+/// One shard's sparse tensor state for a batch of B graph instances
+/// (DESIGN.md §7): S/C vectors as in [`ShardState`], plus edge tiles with
+/// live masks and the live out-degree vector that replaces the dense
+/// adjacency row sum in `embed_pre_sp`.
+#[derive(Debug, Clone)]
+pub struct SparseShard {
+    /// The row partition this shard belongs to.
+    pub part: Partition,
+    /// This shard's index (0..P).
+    pub shard: usize,
+    /// Batch size B.
+    pub b: usize,
+    /// Node chunk NC (source rows and destination columns are tiled in
+    /// chunks of this many nodes; the compiled `embed_msg_sp` shape).
+    pub chunk: usize,
+    /// Edge tiles, ordered by (sc, dc) with overflow chained in place.
+    pub tiles: Vec<EdgeTile>,
+    /// Partial solution, B × NI.
+    pub s: Vec<f32>,
+    /// Candidate set, B × NI.
+    pub c: Vec<f32>,
+    /// Live out-degree per local row, B × NI (consumed by `embed_pre_sp`;
+    /// integers, so bit-identical to the dense on-device row sum).
+    pub deg: Vec<f32>,
+    /// (batch element · N + global node) → every (tile, slot) the node is
+    /// an endpoint of. Host-only index that makes removal O(degree).
+    incidence: Vec<Vec<(u32, u32)>>,
+    /// Tiles whose live mask changed since the last `take_dirty_tiles`
+    /// (may contain duplicates until taken).
+    dirty_tiles: Vec<u32>,
+}
+
+impl SparseShard {
+    /// Build shard `shard` of the partition for a batch of graphs, given
+    /// per-graph removed/solution/candidate masks — the sparse analog of
+    /// [`ShardState::from_graphs`]. `edge_caps` is the compiled capacity
+    /// ladder (ascending after internal sort); each (source-chunk,
+    /// destination-chunk) bucket is split into tiles of the smallest
+    /// capacity that fits the remainder, chaining overflow through tiles of
+    /// the largest capacity (python/tests/dist_sim.py `build_tiles` is the
+    /// executable specification of this layout).
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_graphs(
+        part: Partition,
+        shard: usize,
+        graphs: &[&Graph],
+        removed: &[&[bool]],
+        solution: &[&[bool]],
+        candidates: &[&[bool]],
+        chunk: usize,
+        edge_caps: &[usize],
+    ) -> SparseShard {
+        let b = graphs.len();
+        assert!(b > 0 && removed.len() == b && solution.len() == b && candidates.len() == b);
+        assert!(chunk > 0, "chunk must be positive");
+        let mut caps: Vec<usize> = edge_caps.to_vec();
+        caps.sort_unstable();
+        caps.dedup();
+        assert!(!caps.is_empty(), "need at least one edge capacity");
+        let (n, ni) = (part.n, part.ni());
+        let row0 = part.row0(shard);
+
+        let mut s = vec![0.0f32; b * ni];
+        let mut c = vec![0.0f32; b * ni];
+        let mut deg = vec![0.0f32; b * ni];
+        // (sc, dc) → (batch element, chunk-local src, chunk-local dst),
+        // enumerated batch-element-major then row-major (the canonical
+        // tile order shared with the python spec).
+        let mut buckets: BTreeMap<(usize, usize), Vec<(u32, u32, u32)>> = BTreeMap::new();
+        for (g_idx, g) in graphs.iter().enumerate() {
+            assert!(g.n <= n, "graph larger than bucket");
+            for (r, u) in g.shard_edges(row0, ni, removed[g_idx]) {
+                let (r, u) = (r as usize, u as usize);
+                deg[g_idx * ni + r] += 1.0;
+                buckets
+                    .entry((r / chunk, u / chunk))
+                    .or_default()
+                    .push((g_idx as u32, (r % chunk) as u32, (u % chunk) as u32));
+            }
+            for r in 0..ni {
+                let v = row0 + r;
+                if v < g.n {
+                    s[g_idx * ni + r] = solution[g_idx][v] as u32 as f32;
+                    c[g_idx * ni + r] = candidates[g_idx][v] as u32 as f32;
+                }
+            }
+        }
+
+        let mut tiles: Vec<EdgeTile> = Vec::new();
+        let mut incidence: Vec<Vec<(u32, u32)>> = vec![Vec::new(); b * n];
+        for ((sc, dc), edges) in buckets {
+            let mut rest = edges.as_slice();
+            while !rest.is_empty() {
+                let cap = caps
+                    .iter()
+                    .copied()
+                    .find(|&cp| cp >= rest.len())
+                    .unwrap_or(*caps.last().unwrap());
+                let take = rest.len().min(cap);
+                let (head, tail) = rest.split_at(take);
+                rest = tail;
+                let mut tile = EdgeTile {
+                    sc,
+                    dc,
+                    cap,
+                    len: take,
+                    src: vec![0.0f32; cap],
+                    dst: vec![0.0f32; cap],
+                    w: vec![0.0f32; b * cap],
+                };
+                let t_idx = tiles.len() as u32;
+                for (pos, &(g, rl, ul)) in head.iter().enumerate() {
+                    tile.src[pos] = rl as f32;
+                    tile.dst[pos] = ul as f32;
+                    tile.w[g as usize * cap + pos] = 1.0;
+                    let gsrc = row0 + sc * chunk + rl as usize;
+                    let gdst = dc * chunk + ul as usize;
+                    incidence[g as usize * n + gsrc].push((t_idx, pos as u32));
+                    incidence[g as usize * n + gdst].push((t_idx, pos as u32));
+                }
+                tiles.push(tile);
+            }
+        }
+
+        SparseShard {
+            part,
+            shard,
+            b,
+            chunk,
+            tiles,
+            s,
+            c,
+            deg,
+            incidence,
+            dirty_tiles: Vec::new(),
+        }
+    }
+
+    /// Shard height NI = N / P.
+    pub fn ni(&self) -> usize {
+        self.part.ni()
+    }
+
+    /// Padded global node count N.
+    pub fn n(&self) -> usize {
+        self.part.n
+    }
+
+    /// Whether global node v lives on this shard.
+    pub fn owns(&self, v: usize) -> bool {
+        self.part.owner(v) == self.shard
+    }
+
+    /// Apply "select node v into the solution" for batch element `g_idx`
+    /// (Fig. 4): the fused [`SparseShard::set_solution`] +
+    /// [`SparseShard::apply_remove`], mirroring the dense path.
+    pub fn apply_select(&mut self, g_idx: usize, v: usize) {
+        self.set_solution(g_idx, v);
+        self.apply_remove(g_idx, v);
+    }
+
+    /// Mark node v as part of batch element `g_idx`'s solution (S only).
+    pub fn set_solution(&mut self, g_idx: usize, v: usize) {
+        let ni = self.ni();
+        assert!(g_idx < self.b && v < self.n());
+        if self.owns(v) {
+            let r = self.part.local(v);
+            self.s[g_idx * ni + r] = 1.0;
+        }
+    }
+
+    /// Remove node v from batch element `g_idx`'s residual graph: clear the
+    /// live mask of every incident edge (the sparse realization of Fig. 4's
+    /// row+column zeroing), decrement the surviving endpoints' degrees, and
+    /// clear C for v if local. O(degree of v) via the incidence index.
+    pub fn apply_remove(&mut self, g_idx: usize, v: usize) {
+        let (n, ni, chunk) = (self.n(), self.ni(), self.chunk);
+        assert!(g_idx < self.b && v < n);
+        if self.owns(v) {
+            let r = self.part.local(v);
+            self.c[g_idx * ni + r] = 0.0;
+        }
+        for &(t, pos) in &self.incidence[g_idx * n + v] {
+            let tile = &mut self.tiles[t as usize];
+            let wi = g_idx * tile.cap + pos as usize;
+            if tile.w[wi] == 0.0 {
+                continue; // already dead (other endpoint removed earlier)
+            }
+            tile.w[wi] = 0.0;
+            let src_row = tile.sc * chunk + tile.src[pos as usize] as usize;
+            self.deg[g_idx * ni + src_row] -= 1.0;
+            self.dirty_tiles.push(t);
+        }
+    }
+
+    /// Whether any tile's live mask changed since the last
+    /// `take_dirty_tiles`.
+    pub fn is_dirty(&self) -> bool {
+        !self.dirty_tiles.is_empty()
+    }
+
+    /// Consume the recorded live-mask deltas: the (deduplicated, sorted)
+    /// tile indices whose `w` changed. The device-resident path re-uploads
+    /// exactly these B×EC masks — the sparse analog of the dense `a_mask`
+    /// patch (DESIGN.md §7).
+    pub fn take_dirty_tiles(&mut self) -> Vec<u32> {
+        let mut v = std::mem::take(&mut self.dirty_tiles);
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Forget recorded deltas (after a fresh full upload of every tile).
+    pub fn clear_dirty(&mut self) {
+        self.dirty_tiles.clear();
+    }
+
+    /// Refresh the candidate mask for batch element `g_idx` from the
+    /// environment's candidate predicate (the host owns candidate logic).
+    pub fn refresh_candidates(&mut self, g_idx: usize, is_candidate: impl Fn(usize) -> bool) {
+        refresh_candidate_row(self.part, self.shard, &mut self.c, g_idx, is_candidate);
+    }
+
+    /// Bytes of the f32 tensors a device would hold for this shard
+    /// (S + C + deg + every tile's src/dst/w) — the sparse counterpart of
+    /// [`ShardState::bytes`].
+    pub fn bytes(&self) -> usize {
+        4 * (self.s.len() + self.c.len() + self.deg.len())
+            + self.tiles.iter().map(|t| 4 * (t.src.len() + t.dst.len() + t.w.len())).sum::<usize>()
+    }
+
+    /// Bytes of the adjacency representation alone (edge tiles; excludes
+    /// S/C/deg) — what `bench_memory` compares against the dense
+    /// B×NI×N·4 figure.
+    pub fn adjacency_bytes(&self) -> usize {
+        self.tiles.iter().map(|t| 4 * (t.src.len() + t.dst.len() + t.w.len())).sum()
+    }
+
+    /// Host-only bytes of the incidence index (removal acceleration; never
+    /// uploaded).
+    pub fn index_bytes(&self) -> usize {
+        self.incidence.iter().map(|v| 8 * v.len()).sum()
+    }
+
+    /// Total live directed edges of batch element `g_idx` (test/stat hook).
+    pub fn live_edges(&self, g_idx: usize) -> usize {
+        self.tiles
+            .iter()
+            .map(|t| {
+                (0..t.len).filter(|&e| t.w[g_idx * t.cap + e] != 0.0).count()
+            })
+            .sum()
+    }
+
+    /// Reconstruct batch element `g_idx`'s dense NI×N sub-adjacency from
+    /// the live tiles — the oracle hook the dense/sparse parity tests
+    /// compare against [`ShardState::a`].
+    pub fn densify(&self, g_idx: usize) -> Vec<f32> {
+        let (n, ni, chunk) = (self.n(), self.ni(), self.chunk);
+        let mut a = vec![0.0f32; ni * n];
+        for t in &self.tiles {
+            for e in 0..t.len {
+                if t.w[g_idx * t.cap + e] != 0.0 {
+                    let row = t.sc * chunk + t.src[e] as usize;
+                    let col = t.dc * chunk + t.dst[e] as usize;
+                    a[row * n + col] = 1.0;
+                }
+            }
+        }
+        a
+    }
+}
+
+/// Shared candidate-mask refresh over one shard's C row (both storage
+/// modes store C as a B×NI f32 vector): rows past the real graph and
+/// non-candidates go to 0.0. One body, so the dense and sparse candidate
+/// masks cannot drift.
+fn refresh_candidate_row(
+    part: Partition,
+    shard: usize,
+    c: &mut [f32],
+    g_idx: usize,
+    is_candidate: impl Fn(usize) -> bool,
+) {
+    let ni = part.ni();
+    let row0 = part.row0(shard);
+    for r in 0..ni {
+        let v = row0 + r;
+        c[g_idx * ni + r] = if v < part.n && is_candidate(v) { 1.0 } else { 0.0 };
+    }
+}
+
+/// The shard mutations a solve loop applies on every selection, shared by
+/// the dense and sparse storage modes so [`mirror_selection`] (and with it
+/// the sequential and batched loops) is storage-generic.
+pub trait ShardStateOps {
+    /// Mark node v as part of batch element `g_idx`'s solution.
+    fn set_solution(&mut self, g_idx: usize, v: usize);
+    /// Remove node v from batch element `g_idx`'s residual graph.
+    fn apply_remove(&mut self, g_idx: usize, v: usize);
+}
+
+impl ShardStateOps for ShardState {
+    fn set_solution(&mut self, g_idx: usize, v: usize) {
+        ShardState::set_solution(self, g_idx, v);
+    }
+    fn apply_remove(&mut self, g_idx: usize, v: usize) {
+        ShardState::apply_remove(self, g_idx, v);
+    }
+}
+
+impl ShardStateOps for SparseShard {
+    fn set_solution(&mut self, g_idx: usize, v: usize) {
+        SparseShard::set_solution(self, g_idx, v);
+    }
+    fn apply_remove(&mut self, g_idx: usize, v: usize) {
+        SparseShard::apply_remove(self, g_idx, v);
     }
 }
 
@@ -206,10 +595,11 @@ pub fn shards_for_graph(
 /// The diff is what makes the mirroring scenario-generic — MVC removes the
 /// node itself, MIS its closed neighborhood, MaxCut nothing — and it is
 /// shared by the sequential (`infer::solve_env`) and batched
-/// (`batch::solve_pack`) loops so their per-graph trajectories cannot
-/// drift apart.
-pub fn mirror_selection(
-    shards: &mut [ShardState],
+/// (`batch::solve_pack`) loops, and generic over the dense/sparse storage
+/// modes ([`ShardStateOps`]), so the per-graph trajectories cannot drift
+/// apart across any of those axes.
+pub fn mirror_selection<S: ShardStateOps>(
+    shards: &mut [S],
     g_idx: usize,
     v: usize,
     env: &dyn GraphEnv,
@@ -241,6 +631,139 @@ pub fn shards_for_pack(
     (0..part.p)
         .map(|i| ShardState::from_graphs(part, i, graphs, removed, solution, candidates))
         .collect()
+}
+
+/// Build all P sparse shards for a single graph instance (the [`Storage::Sparse`]
+/// analog of [`shards_for_graph`]).
+pub fn sparse_shards_for_graph(
+    part: Partition,
+    g: &Graph,
+    removed: &[bool],
+    solution: &[bool],
+    candidates: &[bool],
+    chunk: usize,
+    edge_caps: &[usize],
+) -> Vec<SparseShard> {
+    (0..part.p)
+        .map(|i| {
+            SparseShard::from_graphs(
+                part,
+                i,
+                &[g],
+                &[removed],
+                &[solution],
+                &[candidates],
+                chunk,
+                edge_caps,
+            )
+        })
+        .collect()
+}
+
+/// Build all P sparse shards for a pack of graph instances (the
+/// [`Storage::Sparse`] analog of [`shards_for_pack`]).
+#[allow(clippy::too_many_arguments)]
+pub fn sparse_shards_for_pack(
+    part: Partition,
+    graphs: &[&Graph],
+    removed: &[&[bool]],
+    solution: &[&[bool]],
+    candidates: &[&[bool]],
+    chunk: usize,
+    edge_caps: &[usize],
+) -> Vec<SparseShard> {
+    (0..part.p)
+        .map(|i| {
+            SparseShard::from_graphs(
+                part, i, graphs, removed, solution, candidates, chunk, edge_caps,
+            )
+        })
+        .collect()
+}
+
+/// A full shard set in either storage mode — what the solve/train loops
+/// hold, so one loop body serves both paths (DESIGN.md §7).
+#[derive(Debug, Clone)]
+pub enum ShardSet {
+    /// P dense shards (B×NI×N adjacency each).
+    Dense(Vec<ShardState>),
+    /// P sparse shards (edge tiles + live masks each).
+    Sparse(Vec<SparseShard>),
+}
+
+impl ShardSet {
+    /// Number of shards P.
+    pub fn len(&self) -> usize {
+        match self {
+            ShardSet::Dense(v) => v.len(),
+            ShardSet::Sparse(v) => v.len(),
+        }
+    }
+
+    /// Whether the set holds no shards (empty pack).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Storage mode of this set.
+    pub fn storage(&self) -> Storage {
+        match self {
+            ShardSet::Dense(_) => Storage::Dense,
+            ShardSet::Sparse(_) => Storage::Sparse,
+        }
+    }
+
+    /// Batch size B (shards agree by construction).
+    pub fn b(&self) -> usize {
+        match self {
+            ShardSet::Dense(v) => v[0].b,
+            ShardSet::Sparse(v) => v[0].b,
+        }
+    }
+
+    /// Mirror one environment selection onto every shard (see
+    /// [`mirror_selection`]).
+    pub fn mirror_selection(
+        &mut self,
+        g_idx: usize,
+        v: usize,
+        env: &dyn GraphEnv,
+        removed_prev: &mut [bool],
+    ) {
+        match self {
+            ShardSet::Dense(sh) => mirror_selection(sh, g_idx, v, env, removed_prev),
+            ShardSet::Sparse(sh) => mirror_selection(sh, g_idx, v, env, removed_prev),
+        }
+    }
+
+    /// Apply "select v" (S + residual removal) on every shard — the
+    /// training loop's MVC fused update.
+    pub fn apply_select(&mut self, g_idx: usize, v: usize) {
+        match self {
+            ShardSet::Dense(sh) => sh.iter_mut().for_each(|s| s.apply_select(g_idx, v)),
+            ShardSet::Sparse(sh) => sh.iter_mut().for_each(|s| s.apply_select(g_idx, v)),
+        }
+    }
+
+    /// Refresh batch element `g_idx`'s candidate mask on every shard.
+    pub fn refresh_candidates(&mut self, g_idx: usize, is_candidate: impl Fn(usize) -> bool) {
+        match self {
+            ShardSet::Dense(sh) => {
+                sh.iter_mut().for_each(|s| s.refresh_candidates(g_idx, &is_candidate))
+            }
+            ShardSet::Sparse(sh) => {
+                sh.iter_mut().for_each(|s| s.refresh_candidates(g_idx, &is_candidate))
+            }
+        }
+    }
+
+    /// Bytes held by all shards' f32 tensors (memory accounting, §5.2/§7).
+    pub fn bytes(&self) -> usize {
+        match self {
+            ShardSet::Dense(sh) => sh.iter().map(|s| s.bytes()).sum(),
+            ShardSet::Sparse(sh) => sh.iter().map(|s| s.bytes()).sum(),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -387,6 +910,226 @@ mod tests {
         assert!(shards[1].is_dirty());
         shards[1].clear_dirty();
         assert!(!shards[1].is_dirty());
+    }
+
+    fn fresh_sparse(part: Partition, g: &Graph, chunk: usize, caps: &[usize]) -> Vec<SparseShard> {
+        let removed = vec![false; g.n];
+        let sol = vec![false; g.n];
+        let cand: Vec<bool> = (0..g.n).map(|v| g.degree(v) > 0).collect();
+        sparse_shards_for_graph(part, g, &removed, &sol, &cand, chunk, caps)
+    }
+
+    #[test]
+    fn sparse_densify_matches_dense_shard() {
+        // The sparse tiles must reconstruct exactly the dense sub-adjacency,
+        // and S/C/deg must agree with the dense shard's state — for every
+        // shard, including a chunk that does not divide NI (NC=3 vs NI=2).
+        let g = square();
+        for (p, chunk) in [(1usize, 2usize), (2, 2), (2, 3), (4, 12)] {
+            let part = Partition::new(4, p);
+            let dense = fresh(part, &g);
+            let sparse = fresh_sparse(part, &g, chunk, &[2, 8]);
+            for (d, sp) in dense.iter().zip(&sparse) {
+                assert_eq!(sp.densify(0), d.a, "P={p} chunk={chunk}");
+                assert_eq!(sp.s, d.s);
+                assert_eq!(sp.c, d.c);
+                let ni = part.ni();
+                for r in 0..ni {
+                    let want: f32 = d.a[r * 4..(r + 1) * 4].iter().sum();
+                    assert_eq!(sp.deg[r], want, "deg row {r}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_remove_matches_dense_zeroing() {
+        // apply_remove on both paths, then compare densified adjacency,
+        // C, and deg — the Fig. 4 update equivalence.
+        let g = square();
+        let part = Partition::new(4, 2);
+        let mut dense = fresh(part, &g);
+        let mut sparse = fresh_sparse(part, &g, 2, &[8]);
+        for v in [1usize, 3] {
+            for sh in dense.iter_mut() {
+                sh.apply_select(0, v);
+            }
+            for sh in sparse.iter_mut() {
+                sh.apply_select(0, v);
+            }
+        }
+        for (d, sp) in dense.iter().zip(&sparse) {
+            assert_eq!(sp.densify(0), d.a);
+            assert_eq!(sp.s, d.s);
+            assert_eq!(sp.c, d.c);
+            let ni = part.ni();
+            for r in 0..ni {
+                let want: f32 = d.a[r * 4..(r + 1) * 4].iter().sum();
+                assert_eq!(sp.deg[r], want, "deg row {r} after removals");
+            }
+        }
+        // Everything incident to nodes 1 and 3 is dead: square 0-1-2-3-0
+        // loses all four edges.
+        assert_eq!(sparse[0].live_edges(0) + sparse[1].live_edges(0), 0);
+    }
+
+    #[test]
+    fn sparse_dirty_tiles_track_mask_changes() {
+        let g = square();
+        let part = Partition::new(4, 1);
+        let mut sp = fresh_sparse(part, &g, 2, &[8]).remove(0);
+        assert!(!sp.is_dirty());
+        sp.apply_remove(0, 1);
+        assert!(sp.is_dirty());
+        let dirty = sp.take_dirty_tiles();
+        assert!(!dirty.is_empty());
+        assert!(dirty.windows(2).all(|w| w[0] < w[1]), "sorted + deduped");
+        assert!(!sp.is_dirty());
+        // Removing the opposite corner re-dirties; clear_dirty drops it.
+        sp.apply_remove(0, 3);
+        assert!(sp.is_dirty());
+        sp.clear_dirty();
+        assert!(!sp.is_dirty());
+        // Double-removal of an already-dead neighborhood changes nothing
+        // and records no dirty tiles.
+        let before = sp.densify(0);
+        sp.apply_remove(0, 1);
+        assert!(!sp.is_dirty());
+        assert_eq!(sp.densify(0), before);
+    }
+
+    #[test]
+    fn sparse_tile_chaining_respects_caps() {
+        // A capacity ladder smaller than a bucket's edge count must chain
+        // tiles; all real edges survive and padding stays masked.
+        let g = Graph::from_edges(
+            6,
+            &[(0, 1), (0, 2), (0, 3), (0, 4), (0, 5), (1, 2), (1, 3), (1, 4)],
+        )
+        .unwrap();
+        let part = Partition::new(12, 1);
+        let sp = fresh_sparse(part, &g, 12, &[2, 4]).remove(0);
+        // 16 directed edges in one (0,0) bucket with max cap 4 → ≥ 4 tiles.
+        assert!(sp.tiles.len() >= 4, "expected chained tiles, got {}", sp.tiles.len());
+        for t in &sp.tiles {
+            assert!(t.len <= t.cap);
+            assert_eq!(t.src.len(), t.cap);
+            assert_eq!(t.w.len(), t.cap); // b = 1
+            for e in t.len..t.cap {
+                assert_eq!(t.w[e], 0.0, "padding slot live");
+            }
+        }
+        assert_eq!(sp.live_edges(0), 16);
+        let mut dense = vec![0.0f32; 12 * 12];
+        g.densify_rows(0, 12, 12, &[false; 6], &mut dense);
+        assert_eq!(sp.densify(0), dense);
+    }
+
+    #[test]
+    fn sparse_pack_blocks_are_per_graph() {
+        // Batched sparse state: each batch element's live mask selects only
+        // its own graph's edges (the block-diagonal invariant).
+        let g1 = square();
+        let g2 = Graph::from_edges(4, &[(0, 2)]).unwrap();
+        let part = Partition::new(4, 1);
+        let removed = vec![false; 4];
+        let sol = vec![false; 4];
+        let cand = vec![true; 4];
+        let sp = SparseShard::from_graphs(
+            part,
+            0,
+            &[&g1, &g2],
+            &[&removed, &removed],
+            &[&sol, &sol],
+            &[&cand, &cand],
+            2,
+            &[8],
+        );
+        assert_eq!(sp.b, 2);
+        assert_eq!(sp.live_edges(0), 8); // square: 4 undirected = 8 directed
+        assert_eq!(sp.live_edges(1), 2);
+        let dense0 = ShardState::from_graphs(
+            part,
+            0,
+            &[&g1, &g2],
+            &[&removed, &removed],
+            &[&sol, &sol],
+            &[&cand, &cand],
+        );
+        assert_eq!(sp.densify(0), &dense0.a[..16]);
+        assert_eq!(sp.densify(1), &dense0.a[16..32]);
+    }
+
+    #[test]
+    fn sparse_bytes_scale_with_edges_not_n() {
+        // The §7 scaling claim at unit-test size: a near-empty 48-node
+        // bucket costs the sparse path far less than the dense N² tensor.
+        let g = Graph::from_edges(40, &[(0, 1), (2, 3)]).unwrap();
+        let part = Partition::new(48, 1);
+        let dense = fresh(part, &g).remove(0);
+        let sparse = fresh_sparse(part, &g, 12, &[96]).remove(0);
+        assert_eq!(dense.adjacency_bytes(), 4 * 48 * 48);
+        assert!(
+            sparse.adjacency_bytes() * 5 <= dense.adjacency_bytes(),
+            "sparse {} vs dense {}",
+            sparse.adjacency_bytes(),
+            dense.adjacency_bytes()
+        );
+        assert!(sparse.index_bytes() > 0);
+    }
+
+    #[test]
+    fn mirror_selection_is_storage_generic() {
+        // Driving both storage modes through the shared mirror keeps them
+        // in lockstep with the environment diff.
+        use crate::env::{GraphEnv, MvcEnv};
+        let g = square();
+        let part = Partition::new(4, 2);
+        let mut dense = fresh(part, &g);
+        let mut sparse = fresh_sparse(part, &g, 2, &[8]);
+        let mut env = MvcEnv::new(g.clone());
+        let mut rp_d: Vec<bool> = env.removed_mask().to_vec();
+        let mut rp_s = rp_d.clone();
+        env.step(1);
+        mirror_selection(&mut dense, 0, 1, &env, &mut rp_d);
+        mirror_selection(&mut sparse, 0, 1, &env, &mut rp_s);
+        for (d, sp) in dense.iter().zip(&sparse) {
+            assert_eq!(sp.densify(0), d.a);
+            assert_eq!(sp.s, d.s);
+        }
+    }
+
+    #[test]
+    fn shard_set_dispatches_both_modes() {
+        use crate::env::{GraphEnv, MvcEnv};
+        let g = square();
+        let part = Partition::new(4, 2);
+        let mut sets = [
+            ShardSet::Dense(fresh(part, &g)),
+            ShardSet::Sparse(fresh_sparse(part, &g, 2, &[8])),
+        ];
+        for set in sets.iter_mut() {
+            assert_eq!(set.len(), 2);
+            assert_eq!(set.b(), 1);
+            assert!(!set.is_empty());
+            assert!(set.bytes() > 0);
+            let mut env = MvcEnv::new(g.clone());
+            let mut rp: Vec<bool> = env.removed_mask().to_vec();
+            env.step(2);
+            set.mirror_selection(0, 2, &env, &mut rp);
+            set.refresh_candidates(0, |v| env.is_candidate(v));
+        }
+        assert_eq!(sets[0].storage(), Storage::Dense);
+        assert_eq!(sets[1].storage(), Storage::Sparse);
+    }
+
+    #[test]
+    fn storage_parses() {
+        assert_eq!(Storage::parse("dense").unwrap(), Storage::Dense);
+        assert_eq!(Storage::parse("Sparse").unwrap(), Storage::Sparse);
+        assert_eq!(Storage::parse("csr").unwrap(), Storage::Sparse);
+        assert!(Storage::parse("coo").is_err());
+        assert_eq!(Storage::default(), Storage::Dense);
     }
 
     #[test]

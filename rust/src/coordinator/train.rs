@@ -3,12 +3,12 @@
 //! reconstruction, distributed fwd/bwd, gradient all-reduce + replicated
 //! Adam, and the §4.5.2 repeated-gradient-iterations optimization (τ).
 
-use super::bwd::backward_dev;
+use super::bwd::backward_set;
 use super::engine::{EngineCfg, StepTiming};
-use super::fwd::{forward_dev, DeviceState};
-use super::replay::{tuples_to_shards, BitSet, ReplayBuffer, Tuple};
+use super::fwd::{forward_set, AnyDeviceState};
+use super::replay::{tuples_to_shard_set, BitSet, ReplayBuffer, Tuple};
 use super::selection::top_d;
-use super::shard::{shards_for_graph, ShardState};
+use super::shard::{shards_for_graph, sparse_shards_for_graph, ShardSet, Storage};
 use crate::env::{GraphEnv, MvcEnv};
 use crate::graph::{Graph, Partition};
 use crate::model::{Adam, Hyper, Params};
@@ -18,7 +18,9 @@ use anyhow::{ensure, Result};
 /// Training configuration.
 #[derive(Debug, Clone)]
 pub struct TrainCfg {
+    /// Shared engine parameters (P, L, comm cost model).
     pub engine: EngineCfg,
+    /// RL/optimizer hyper-parameters (paper §6.1).
     pub hyper: Hyper,
     /// Padded bucket size (>= every training graph's |V|, divisible by 12).
     pub bucket_n: usize,
@@ -33,9 +35,13 @@ pub struct TrainCfg {
     /// gradient iterations (§4.5.2) — only θ is re-uploaded after each
     /// optimizer step. Exact; off = the fresh-upload reference path.
     pub device_resident: bool,
+    /// Per-shard storage mode (DESIGN.md §7) for both the episode policy
+    /// evaluations and the training minibatches.
+    pub storage: Storage,
 }
 
 impl TrainCfg {
+    /// Default configuration for `p` shards at padded bucket `bucket_n`.
     pub fn new(p: usize, bucket_n: usize) -> TrainCfg {
         TrainCfg {
             engine: EngineCfg::new(p, 2),
@@ -45,6 +51,7 @@ impl TrainCfg {
             skip_zero_layer: true,
             resample_per_iter: false,
             device_resident: true,
+            storage: Storage::Dense,
         }
     }
 }
@@ -52,7 +59,9 @@ impl TrainCfg {
 /// Per-step record for learning curves and Fig. 11 timing.
 #[derive(Debug, Clone)]
 pub struct StepRecord {
+    /// Episode index the step belongs to.
     pub episode: usize,
+    /// Global training-step counter.
     pub global_step: usize,
     /// Mean loss over the τ gradient iterations (None before the replay
     /// buffer can fill a minibatch).
@@ -60,24 +69,32 @@ pub struct StepRecord {
     /// Simulated-parallel seconds for the full training step (policy eval +
     /// state update + τ·(fwd+bwd) + optimizer).
     pub sim_step_time: f64,
+    /// Timing of the policy evaluation (Alg. 5 line 9).
     pub eval_timing: StepTiming,
+    /// Timing of the τ gradient iterations (lines 17-26).
     pub train_timing: StepTiming,
 }
 
 /// The distributed trainer (one instance drives all P simulated devices).
 pub struct Trainer<'r> {
+    /// Stage runtime executing the AOT artifacts.
     pub rt: &'r Runtime,
+    /// Training configuration.
     pub cfg: TrainCfg,
+    /// Current policy parameters (updated in place by Adam).
     pub params: Params,
+    /// Training dataset (graph index = replay `graph_id`).
     pub graphs: Vec<Graph>,
     adam: Adam,
     replay: ReplayBuffer,
     rng: crate::util::rng::Pcg32,
+    /// Global training-step counter.
     pub global_step: usize,
     episode: usize,
 }
 
 impl<'r> Trainer<'r> {
+    /// Build a trainer; fails fast when required artifacts are missing.
     pub fn new(rt: &'r Runtime, cfg: TrainCfg, graphs: Vec<Graph>, params: Params) -> Result<Trainer<'r>> {
         ensure!(!graphs.is_empty(), "empty training dataset");
         let max_n = graphs.iter().map(|g| g.n).max().unwrap();
@@ -95,6 +112,42 @@ impl<'r> Trainer<'r> {
             rt.manifest.has(&name),
             "missing training artifact {name}; add the shape to configs.py"
         );
+        if cfg.storage == Storage::Sparse {
+            // Fail fast on the sparse stage set too: minibatch fwd/bwd and
+            // the B=1 episode evaluations each need their own shapes.
+            let (chunk, caps) =
+                rt.manifest.sparse_config(cfg.hyper.batch_size, part.ni(), params.k)?;
+            rt.manifest.sparse_config(1, part.ni(), params.k)?;
+            let pbwd = crate::runtime::sparse_pre_name(
+                "embed_pre_sp_bwd",
+                cfg.hyper.batch_size,
+                part.ni(),
+                params.k,
+            );
+            ensure!(
+                rt.manifest.has(&pbwd),
+                "missing sparse training artifact {pbwd}; add the shape to \
+                 python/compile/configs.py sparse_train_shapes()"
+            );
+            // The backward tile sweep runs embed_msg_sp_bwd at exactly the
+            // capacities the forward ladder tiles with — every cap must be
+            // compiled, or training would die mid-episode at the first
+            // gradient iteration instead of here.
+            for &cap in &caps {
+                let mbwd = crate::runtime::sparse_msg_name(
+                    "embed_msg_sp_bwd",
+                    cfg.hyper.batch_size,
+                    cap,
+                    chunk,
+                    params.k,
+                );
+                ensure!(
+                    rt.manifest.has(&mbwd),
+                    "missing sparse training artifact {mbwd}; add the shape to \
+                     python/compile/configs.py sparse_train_shapes()"
+                );
+            }
+        }
         let adam = Adam::new(cfg.hyper.lr, params.flat.len());
         let replay = ReplayBuffer::new(cfg.hyper.replay_capacity);
         let rng = crate::util::rng::Pcg32::seeded(cfg.seed);
@@ -119,10 +172,12 @@ impl<'r> Trainer<'r> {
         self.episode = episode;
     }
 
+    /// Experience tuples currently buffered.
     pub fn replay_len(&self) -> usize {
         self.replay.len()
     }
 
+    /// Bytes held by the compressed replay buffer (§4.4).
     pub fn replay_bytes(&self) -> usize {
         self.replay.bytes()
     }
@@ -168,8 +223,27 @@ impl<'r> Trainer<'r> {
         let g = self.graphs[graph_id as usize].clone();
         let mut env = MvcEnv::new(g.clone());
         let candidates: Vec<bool> = (0..g.n).map(|v| env.is_candidate(v)).collect();
-        let mut shards: Vec<ShardState> =
-            shards_for_graph(part, &g, env.removed_mask(), env.solution_mask(), &candidates);
+        let mut set = match self.cfg.storage {
+            Storage::Dense => ShardSet::Dense(shards_for_graph(
+                part,
+                &g,
+                env.removed_mask(),
+                env.solution_mask(),
+                &candidates,
+            )),
+            Storage::Sparse => {
+                let (chunk, caps) = self.rt.manifest.sparse_config(1, part.ni(), self.params.k)?;
+                ShardSet::Sparse(sparse_shards_for_graph(
+                    part,
+                    &g,
+                    env.removed_mask(),
+                    env.solution_mask(),
+                    &candidates,
+                    chunk,
+                    &caps,
+                ))
+            }
+        };
 
         // Episode-long device residency for the policy-eval forward: the
         // episode graph's shards are uploaded once, patched per step; θ is
@@ -177,7 +251,7 @@ impl<'r> Trainer<'r> {
         // one-time upload cost is carried into the first step's transfer
         // time so resident-vs-fresh step times stay comparable.
         let (mut eval_dev, mut carry_h2d) = if self.cfg.device_resident {
-            let d = DeviceState::new(self.rt, &self.params, &mut shards)?;
+            let d = AnyDeviceState::new(self.rt, &self.params, &mut set)?;
             let t = d.last_transfer_secs();
             (Some(d), t)
         } else {
@@ -202,7 +276,7 @@ impl<'r> Trainer<'r> {
             // --- policy evaluation on the current state (B=1) ---
             let mut sync_t = std::mem::take(&mut carry_h2d);
             if let Some(d) = eval_dev.as_mut() {
-                d.sync(&mut shards)?;
+                d.sync(&mut set)?;
                 sync_t += d.last_transfer_secs();
                 if theta_stale {
                     d.refresh_theta(&self.params)?;
@@ -210,11 +284,11 @@ impl<'r> Trainer<'r> {
                     theta_stale = false;
                 }
             }
-            let mut eval = forward_dev(
+            let mut eval = forward_set(
                 self.rt,
                 &self.cfg.engine,
                 &self.params,
-                &shards,
+                &set,
                 false,
                 self.cfg.skip_zero_layer,
                 eval_dev.as_ref(),
@@ -250,10 +324,8 @@ impl<'r> Trainer<'r> {
             // --- apply action, update distributed state (lines 11-14) ---
             let snapshot = BitSet::from_bools(env.solution_mask());
             let (reward, done) = env.step(v_t);
-            for sh in shards.iter_mut() {
-                sh.apply_select(0, v_t);
-                sh.refresh_candidates(0, |v| env.is_candidate(v));
-            }
+            set.apply_select(0, v_t);
+            set.refresh_candidates(0, |v| env.is_candidate(v));
             if done {
                 // Terminal tuple: no successor state, y = r.
                 self.replay.push(Tuple {
@@ -277,10 +349,19 @@ impl<'r> Trainer<'r> {
                 // shard tensors: only θ is re-pushed after each optimizer
                 // step (previously every iteration re-built and re-uploaded
                 // the full B×NI×N minibatch state for both fwd and bwd).
-                let (mut bshards, mut onehot, mut targets) =
-                    tuples_to_shards(part, &self.graphs, &batch);
+                // Sparse minibatches resolve their (chunk, caps) once per
+                // training step (the manifest lookup is pure).
+                let sparse_cfg = match self.cfg.storage {
+                    Storage::Dense => None,
+                    Storage::Sparse => {
+                        Some(self.rt.manifest.sparse_config(b_train, part.ni(), self.params.k)?)
+                    }
+                };
+                let scfg = sparse_cfg.as_ref().map(|(c, v)| (*c, v.as_slice()));
+                let (mut bset, mut onehot, mut targets) =
+                    tuples_to_shard_set(part, &self.graphs, &batch, self.cfg.storage, scfg);
                 let (mut dev, up_t) = if self.cfg.device_resident {
-                    let d = DeviceState::new(self.rt, &self.params, &mut bshards)?;
+                    let d = AnyDeviceState::new(self.rt, &self.params, &mut bset)?;
                     let t = d.last_transfer_secs();
                     (Some(d), t)
                 } else {
@@ -291,10 +372,16 @@ impl<'r> Trainer<'r> {
                     if it > 0 {
                         if self.cfg.resample_per_iter {
                             batch = self.replay.sample(b_train, &mut self.rng);
-                            (bshards, onehot, targets) =
-                                tuples_to_shards(part, &self.graphs, &batch);
+                            let scfg = sparse_cfg.as_ref().map(|(c, v)| (*c, v.as_slice()));
+                            (bset, onehot, targets) = tuples_to_shard_set(
+                                part,
+                                &self.graphs,
+                                &batch,
+                                self.cfg.storage,
+                                scfg,
+                            );
                             if let Some(d) = dev.as_mut() {
-                                d.rebuild(&mut bshards)?;
+                                d.rebuild(&mut bset)?;
                                 train_timing.h2d += d.last_transfer_secs();
                             }
                         }
@@ -303,20 +390,20 @@ impl<'r> Trainer<'r> {
                             train_timing.h2d += d.last_transfer_secs();
                         }
                     }
-                    let fwd = forward_dev(
+                    let fwd = forward_set(
                         self.rt,
                         &self.cfg.engine,
                         &self.params,
-                        &bshards,
+                        &bset,
                         true,
                         self.cfg.skip_zero_layer,
                         dev.as_ref(),
                     )?;
-                    let out = backward_dev(
+                    let out = backward_set(
                         self.rt,
                         &self.cfg.engine,
                         &self.params,
-                        &bshards,
+                        &bset,
                         fwd.acts.as_ref().unwrap(),
                         &onehot,
                         &targets,
@@ -387,6 +474,33 @@ mod tests {
         assert!(steps >= 6, "too few steps: {steps}");
         assert!(tr.replay_len() > 0);
         assert!(!losses.is_empty(), "training never ran");
+        assert!(losses.iter().all(|l| l.is_finite()));
+    }
+
+    #[test]
+    fn sparse_storage_trains() {
+        // The sparse path must drive full episodes end-to-end: policy
+        // evaluations, replay fill, τ gradient iterations, optimizer steps.
+        let Some(rt) = runtime() else { return };
+        if rt.manifest.sparse_config(8, 24, 32).is_err() {
+            eprintln!("skipping: sparse train artifacts not compiled");
+            return;
+        }
+        let graphs = dataset(4, 20, 1);
+        let mut cfg = TrainCfg::new(1, 24);
+        cfg.hyper.lr = 1e-3;
+        cfg.storage = Storage::Sparse;
+        let params = Params::init(32, &mut Pcg32::seeded(2));
+        let mut tr = Trainer::new(&rt, cfg, graphs, params).unwrap();
+        let mut losses: Vec<f32> = Vec::new();
+        tr.run_episodes(4, |rec| {
+            if let Some(l) = rec.loss {
+                losses.push(l);
+            }
+        })
+        .unwrap();
+        assert!(tr.replay_len() > 0);
+        assert!(!losses.is_empty(), "sparse training never ran");
         assert!(losses.iter().all(|l| l.is_finite()));
     }
 

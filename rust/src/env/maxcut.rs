@@ -8,7 +8,9 @@ use super::GraphEnv;
 use crate::graph::Graph;
 
 #[derive(Debug, Clone)]
+/// Maximum Cut environment (greedy-termination convention).
 pub struct MaxCutEnv {
+    /// The instance being solved.
     pub graph: Graph,
     in_cut: Vec<bool>,
     /// Nodes stay in the residual compute graph for MaxCut (no row removal).
@@ -17,6 +19,7 @@ pub struct MaxCutEnv {
 }
 
 impl MaxCutEnv {
+    /// Fresh environment over `graph`.
     pub fn new(graph: Graph) -> MaxCutEnv {
         MaxCutEnv {
             in_cut: vec![false; graph.n],
@@ -41,6 +44,7 @@ impl MaxCutEnv {
         g
     }
 
+    /// Current cut weight (incrementally maintained).
     pub fn cut_value(&self) -> i64 {
         self.cut_value
     }

@@ -13,7 +13,9 @@ use super::GraphEnv;
 use crate::graph::Graph;
 
 #[derive(Debug, Clone)]
+/// Maximum Independent Set environment.
 pub struct MisEnv {
+    /// The instance being solved.
     pub graph: Graph,
     in_set: Vec<bool>,
     /// Selected nodes plus their neighbors (dropped from the residual graph).
@@ -22,6 +24,7 @@ pub struct MisEnv {
 }
 
 impl MisEnv {
+    /// Fresh environment over `graph`.
     pub fn new(graph: Graph) -> MisEnv {
         MisEnv {
             in_set: vec![false; graph.n],

@@ -6,8 +6,11 @@
 //! tensor state (`A^i`, `C^i`, `S^i`) lives in `coordinator::shard` and is
 //! updated in lockstep with the environment.
 
+/// Minimum Vertex Cover environment (the paper's driving problem).
 pub mod mvc;
+/// Maximum Cut environment.
 pub mod maxcut;
+/// Maximum Independent Set environment.
 pub mod mis;
 
 pub use mvc::MvcEnv;
@@ -69,6 +72,7 @@ pub enum Scenario {
 }
 
 impl Scenario {
+    /// Parse a scenario name (`mvc` | `maxcut` | `mis`).
     pub fn parse(s: &str) -> anyhow::Result<Scenario> {
         match s.to_ascii_lowercase().as_str() {
             "mvc" => Ok(Scenario::Mvc),
@@ -78,6 +82,7 @@ impl Scenario {
         }
     }
 
+    /// Canonical lowercase name.
     pub fn name(self) -> &'static str {
         match self {
             Scenario::Mvc => "mvc",

@@ -9,7 +9,9 @@ use super::GraphEnv;
 use crate::graph::Graph;
 
 #[derive(Debug, Clone)]
+/// Minimum Vertex Cover environment (Fig. 1's reference scenario).
 pub struct MvcEnv {
+    /// The instance being solved.
     pub graph: Graph,
     in_solution: Vec<bool>,
     /// Count of *uncovered* edges incident to each node.
@@ -18,6 +20,7 @@ pub struct MvcEnv {
 }
 
 impl MvcEnv {
+    /// Fresh environment over `graph`.
     pub fn new(graph: Graph) -> MvcEnv {
         let uncovered_deg: Vec<usize> = (0..graph.n).map(|v| graph.degree(v)).collect();
         let uncovered_total = graph.m;
@@ -29,6 +32,7 @@ impl MvcEnv {
         }
     }
 
+    /// Edges not yet covered by the partial solution.
     pub fn uncovered_edges(&self) -> usize {
         self.uncovered_total
     }

@@ -9,10 +9,15 @@ use super::csr::Graph;
 /// (each undirected edge appears twice, like the paper's adjacency).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Coo {
+    /// Number of matrix rows (shard height for shard COO).
     pub n_rows: usize,
+    /// Number of matrix columns (global node count).
     pub n_cols: usize,
+    /// Row index per nonzero.
     pub rows: Vec<u32>,
+    /// Column index per nonzero.
     pub cols: Vec<u32>,
+    /// Value per nonzero (1.0 for adjacency).
     pub vals: Vec<f32>,
 }
 
@@ -50,6 +55,7 @@ impl Coo {
         Coo { n_rows: rows_count, n_cols: g.n, rows, cols, vals: vec![1.0; nnz] }
     }
 
+    /// Number of stored nonzeros.
     pub fn nnz(&self) -> usize {
         self.rows.len()
     }

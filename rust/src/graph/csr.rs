@@ -56,10 +56,12 @@ impl Graph {
         &self.col_idx[self.row_ptr[v]..self.row_ptr[v + 1]]
     }
 
+    /// Degree of node v.
     pub fn degree(&self, v: usize) -> usize {
         self.row_ptr[v + 1] - self.row_ptr[v]
     }
 
+    /// Whether the undirected edge {u, v} exists.
     pub fn has_edge(&self, u: usize, v: usize) -> bool {
         self.neighbors(u).binary_search(&(v as u32)).is_ok()
     }
@@ -113,6 +115,48 @@ impl Graph {
                 }
             }
         }
+    }
+
+    /// Directed shard edges for the sparse compute path (DESIGN.md §7):
+    /// every (local source row, global destination column) pair whose
+    /// source lies in rows [row0, row0+rows) of this graph and whose
+    /// endpoints are both alive under `removed`. Enumerated row-major with
+    /// ascending destinations — the canonical order `SparseShard` tiles
+    /// (and python/tests/dist_sim.py `build_tiles` mirrors). Each
+    /// undirected edge {u,v} yields up to two entries across the shard set:
+    /// u→v on u's owner and v→u on v's owner, exactly the two dense
+    /// sub-adjacency cells it occupies.
+    pub fn shard_edges(&self, row0: usize, rows: usize, removed: &[bool]) -> Vec<(u32, u32)> {
+        assert!(removed.len() >= self.n);
+        let mut out = Vec::new();
+        for r in 0..rows {
+            let v = row0 + r;
+            if v >= self.n || removed[v] {
+                continue;
+            }
+            for &u in self.neighbors(v) {
+                if !removed[u as usize] {
+                    out.push((r as u32, u));
+                }
+            }
+        }
+        out
+    }
+
+    /// Live out-degree of each row in [row0, row0+rows) under `removed`
+    /// (rows past n or removed count 0) — the degree vector the sparse
+    /// `embed_pre_sp` stage consumes instead of row-summing a dense A.
+    pub fn live_degrees(&self, row0: usize, rows: usize, removed: &[bool]) -> Vec<u32> {
+        let mut deg = vec![0u32; rows];
+        for r in 0..rows {
+            let v = row0 + r;
+            if v >= self.n || removed[v] {
+                continue;
+            }
+            deg[r] =
+                self.neighbors(v).iter().filter(|&&u| !removed[u as usize]).count() as u32;
+        }
+        deg
     }
 
     /// Total remaining (uncovered) edges given removed-node marks.
@@ -184,6 +228,37 @@ mod tests {
         let mut out = vec![7.0; 2 * 3];
         g.densify_rows(2, 2, 3, &[false; 3], &mut out); // row 3 is padding
         assert_eq!(&out[3..], &[0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn shard_edges_match_densified_rows() {
+        // The sparse edge list must cover exactly the nonzero cells of the
+        // dense sub-adjacency, in row-major order.
+        let g = triangle();
+        let removed = [false, true, false];
+        let edges = g.shard_edges(0, 2, &removed);
+        assert_eq!(edges, vec![(0, 2)]); // node 0 -> 2 (1 removed); row 1 = removed node
+        let mut dense = vec![0.0; 2 * 3];
+        g.densify_rows(0, 2, 3, &removed, &mut dense);
+        let mut nonzero: Vec<(u32, u32)> = Vec::new();
+        for r in 0..2usize {
+            for u in 0..3usize {
+                if dense[r * 3 + u] != 0.0 {
+                    nonzero.push((r as u32, u as u32));
+                }
+            }
+        }
+        assert_eq!(edges, nonzero);
+        // Padding rows past n contribute nothing.
+        assert!(g.shard_edges(2, 4, &[false; 3]).iter().all(|&(r, _)| r == 0));
+    }
+
+    #[test]
+    fn live_degrees_track_removals() {
+        let g = triangle();
+        assert_eq!(g.live_degrees(0, 3, &[false; 3]), vec![2, 2, 2]);
+        assert_eq!(g.live_degrees(0, 3, &[false, true, false]), vec![1, 0, 1]);
+        assert_eq!(g.live_degrees(1, 4, &[false; 3]), vec![2, 2, 0, 0]); // padded
     }
 
     #[test]

@@ -127,6 +127,7 @@ pub fn holme_kim(n: usize, d: usize, p_triad: f64, rng: &mut Pcg32) -> Graph {
 
 /// The paper's generated-dataset defaults (§6.1).
 pub const ER_RHO: f64 = 0.15;
+/// Barabási–Albert attachment degree default (paper §6.1).
 pub const BA_D: usize = 4;
 
 /// Table 1 stand-in datasets (¼-scale Facebook university networks).

@@ -5,12 +5,19 @@
 //! logic, replay reconstruction) and dense per-shard f32 tensors are
 //! materialized for the XLA compute path (DESIGN.md §3).
 
+/// CSR host graph (the canonical representation).
 pub mod csr;
+/// COO sparse matrices (paper §5.2 accounting, interop).
 pub mod coo;
+/// ER / BA / HK graph generators (paper §6.1).
 pub mod generators;
+/// Row-block spatial partitioning (§4.1, Fig. 2).
 pub mod partition;
+/// Block-diagonal packing + edge-list offsets (DESIGN.md §4/§7).
 pub mod pack;
+/// Edge-list file I/O (NetworkRepository/SNAP format).
 pub mod io;
+/// Dataset statistics (Table 1 rows).
 pub mod stats;
 
 pub use csr::Graph;

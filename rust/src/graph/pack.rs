@@ -21,6 +21,7 @@ pub struct PackLayout {
 }
 
 impl PackLayout {
+    /// Build a layout; every slot size must fit the bucket.
     pub fn new(bucket_n: usize, sizes: Vec<usize>) -> PackLayout {
         assert!(bucket_n > 0, "bucket must be positive");
         assert!(
@@ -68,6 +69,43 @@ impl PackLayout {
     pub fn is_real(&self, id: usize) -> bool {
         let slot = id / self.bucket_n;
         slot < self.slots() && id % self.bucket_n < self.sizes[slot]
+    }
+
+    /// Undirected edge count per slot for the graphs occupying this layout
+    /// (`graphs[i]` fills slot i; missing trailing slots are empty padding).
+    /// On the sparse path the pack's "block-diagonal adjacency" is exactly
+    /// the concatenation of these per-slot edge lists — off-diagonal blocks
+    /// hold no edges by construction — so the concatenated list plus these
+    /// counts fully describes the pack (DESIGN.md §7).
+    pub fn edge_counts(&self, graphs: &[&crate::graph::Graph]) -> Vec<usize> {
+        assert!(graphs.len() <= self.slots(), "more graphs than slots");
+        let mut counts = vec![0usize; self.slots()];
+        for (slot, g) in graphs.iter().enumerate() {
+            assert_eq!(g.n, self.sizes[slot], "slot {slot} size mismatch");
+            counts[slot] = g.m;
+        }
+        counts
+    }
+
+    /// Prefix offsets of the concatenated per-slot edge lists: slot s's
+    /// undirected edges occupy [offsets[s], offsets[s+1]) of the
+    /// concatenation; the final entry is the pack's total edge count E —
+    /// the O(E/P + NI) term of the sparse memory model (DESIGN.md §7).
+    pub fn edge_offsets(&self, graphs: &[&crate::graph::Graph]) -> Vec<usize> {
+        let counts = self.edge_counts(graphs);
+        let mut offsets = Vec::with_capacity(counts.len() + 1);
+        let mut acc = 0usize;
+        offsets.push(0);
+        for c in counts {
+            acc += c;
+            offsets.push(acc);
+        }
+        offsets
+    }
+
+    /// Total undirected edges across the pack (edge_offsets' last entry).
+    pub fn total_edges(&self, graphs: &[&crate::graph::Graph]) -> usize {
+        graphs.iter().map(|g| g.m).sum()
     }
 }
 
@@ -124,6 +162,18 @@ mod tests {
     #[should_panic(expected = "exceeds the bucket")]
     fn rejects_oversized_slot() {
         PackLayout::new(12, vec![13]);
+    }
+
+    #[test]
+    fn edge_offsets_concatenate_slot_lists() {
+        use crate::graph::Graph;
+        let g1 = Graph::from_edges(4, &[(0, 1), (1, 2), (2, 3)]).unwrap();
+        let g2 = Graph::from_edges(3, &[(0, 2)]).unwrap();
+        let layout = PackLayout::new(12, vec![4, 3, 0]);
+        let refs: Vec<&Graph> = vec![&g1, &g2];
+        assert_eq!(layout.edge_counts(&refs), vec![3, 1, 0]);
+        assert_eq!(layout.edge_offsets(&refs), vec![0, 3, 4, 4]);
+        assert_eq!(layout.total_edges(&refs), 4);
     }
 
     #[test]

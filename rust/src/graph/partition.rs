@@ -12,6 +12,7 @@ pub struct Partition {
 }
 
 impl Partition {
+    /// Build a partition; P must divide the padded N.
     pub fn new(n: usize, p: usize) -> Partition {
         assert!(p >= 1 && n % p == 0, "P={p} must divide padded N={n}");
         Partition { n, p }

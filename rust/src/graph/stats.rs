@@ -6,14 +6,21 @@ use crate::util::rng::Pcg32;
 /// One Table-1 row.
 #[derive(Debug, Clone)]
 pub struct DatasetStats {
+    /// Dataset label.
     pub name: String,
+    /// Node count |V|.
     pub nodes: usize,
+    /// Undirected edge count |E|.
     pub edges: usize,
+    /// Edge probability m / C(n,2).
     pub rho: f64,
+    /// Maximum node degree.
     pub max_degree: usize,
+    /// Mean node degree 2m/n.
     pub mean_degree: f64,
 }
 
+/// Compute one Table-1 row for a graph.
 pub fn dataset_stats(name: &str, g: &Graph) -> DatasetStats {
     DatasetStats {
         name: name.to_string(),

@@ -6,13 +6,30 @@
 //! PJRT CPU client, and the Rust coordinator owns collectives, the replay
 //! buffer, the training loop, and the inference loop. See DESIGN.md.
 
+#![warn(missing_docs)]
+
+/// Offline stand-ins for rand/serde/clap/criterion: RNG, timers, binary
+/// tensor I/O, JSON writer, property-test harness, CLI parsing.
 pub mod util;
+/// L1 graph substrate: CSR/COO storage, generators, partitioning, packing,
+/// edge-list I/O, dataset statistics.
 pub mod graph;
+/// Graph learning environments (MVC / MaxCut / MIS) and the `Scenario`
+/// dispatch.
 pub mod env;
+/// Classical baselines: exact branch-and-bound, greedy, 2-approximation,
+/// local search.
 pub mod solvers;
+/// Policy-model parameters, Adam, hyper-parameters, checkpoints.
 pub mod model;
+/// Simulated collectives and the α–β communication cost model.
 pub mod collective;
+/// PJRT stage runtime: artifact manifest + lazy-compiled executables.
 pub mod runtime;
+/// L3 coordinator: shard state, distributed fwd/bwd, selection, RL
+/// inference/training loops, replay, metrics.
 pub mod coordinator;
+/// Graph-level batched solve engine and its job-queue front-end.
 pub mod batch;
+/// Closed-form performance/memory analysis helpers (paper §5).
 pub mod analysis;

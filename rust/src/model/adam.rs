@@ -6,9 +6,13 @@
 /// Adam state over a flat parameter vector.
 #[derive(Debug, Clone)]
 pub struct Adam {
+    /// Learning rate η.
     pub lr: f32,
+    /// First-moment decay β1.
     pub beta1: f32,
+    /// Second-moment decay β2.
     pub beta2: f32,
+    /// Numerical-stability term ε.
     pub eps: f32,
     m: Vec<f32>,
     v: Vec<f32>,
@@ -16,10 +20,12 @@ pub struct Adam {
 }
 
 impl Adam {
+    /// Fresh optimizer state over `n` parameters.
     pub fn new(lr: f32, n: usize) -> Adam {
         Adam { lr, beta1: 0.9, beta2: 0.999, eps: 1e-8, m: vec![0.0; n], v: vec![0.0; n], t: 0 }
     }
 
+    /// Optimizer steps taken so far.
     pub fn step_count(&self) -> u64 {
         self.t
     }

@@ -11,15 +11,22 @@ use std::path::Path;
 /// A full training checkpoint.
 #[derive(Debug, Clone)]
 pub struct Checkpoint {
+    /// Policy parameters.
     pub params: Params,
+    /// Adam first-moment state.
     pub adam_m: Vec<f32>,
+    /// Adam second-moment state.
     pub adam_v: Vec<f32>,
+    /// Adam step counter.
     pub adam_t: u64,
+    /// Global training step at capture.
     pub global_step: u64,
+    /// Episode counter at capture.
     pub episode: u64,
 }
 
 impl Checkpoint {
+    /// Capture the full training state.
     pub fn capture(params: &Params, adam: &Adam, global_step: usize, episode: usize) -> Checkpoint {
         let (m, v, t) = adam.state();
         Checkpoint {
@@ -39,6 +46,7 @@ impl Checkpoint {
         (self.global_step as usize, self.episode as usize)
     }
 
+    /// Write to the binio tensor container format.
     pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
         let meta = vec![self.adam_t as f32, self.global_step as f32, self.episode as f32,
                         self.params.k as f32];
@@ -53,6 +61,7 @@ impl Checkpoint {
         )
     }
 
+    /// Load a checkpoint written by `save`.
     pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
         let ts = binio::load(path)?;
         let meta = binio::find(&ts, "meta")?.data.clone();

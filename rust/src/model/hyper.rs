@@ -14,6 +14,7 @@ pub struct Hyper {
     pub gamma: f32,
     /// ε-greedy start/end (paper: 0.9 → 0.1, linear decay).
     pub eps_start: f32,
+    /// ε-greedy floor after decay.
     pub eps_end: f32,
     /// Steps over which ε decays.
     pub eps_decay_steps: usize,

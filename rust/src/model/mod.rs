@@ -3,9 +3,13 @@
 //! `PARAM_ORDER`; artifacts consume the θ tensors as separate PJRT inputs
 //! sliced from the flat vector.
 
+/// Policy parameters θ1..θ7 (flat layout + accessors).
 pub mod params;
+/// Replicated Adam optimizer.
 pub mod adam;
+/// RL/optimizer hyper-parameters (paper §6.1).
 pub mod hyper;
+/// Training checkpoints (params + optimizer + counters).
 pub mod checkpoint;
 
 pub use adam::Adam;

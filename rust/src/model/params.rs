@@ -15,11 +15,14 @@ pub const PARAM_NAMES: [&str; 7] =
 /// The policy-model parameters (flat f32 vector + embedding dim K).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Params {
+    /// Embedding dimension K.
     pub k: usize,
+    /// θ1..θ7 concatenated (4K² + 4K floats).
     pub flat: Vec<f32>,
 }
 
 impl Params {
+    /// Flat length for embedding dim k (4k² + 4k).
     pub fn len_for_k(k: usize) -> usize {
         4 * k * k + 4 * k
     }
@@ -37,6 +40,7 @@ impl Params {
         ]
     }
 
+    /// All-zero parameters (tests).
     pub fn zeros(k: usize) -> Params {
         Params { k, flat: vec![0.0; Self::len_for_k(k)] }
     }
@@ -67,10 +71,12 @@ impl Params {
         Self::shapes(self.k)[idx].1.clone()
     }
 
+    /// Save to the binio tensor container format.
     pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
         binio::save(path, &[Tensor::new("params", vec![self.flat.len()], self.flat.clone())])
     }
 
+    /// Load parameters saved by `save` (or the python build step).
     pub fn load(path: impl AsRef<Path>, k: usize) -> Result<Params> {
         let tensors = binio::load(path)?;
         let t = binio::find(&tensors, "params")?;

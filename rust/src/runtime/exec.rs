@@ -16,11 +16,14 @@ use std::time::{Duration, Instant};
 /// A borrowed f32 host tensor (shape + row-major data).
 #[derive(Debug, Clone, Copy)]
 pub struct HostTensor<'a> {
+    /// Row-major tensor shape.
     pub dims: &'a [usize],
+    /// Borrowed row-major f32 data.
     pub data: &'a [f32],
 }
 
 impl<'a> HostTensor<'a> {
+    /// Wrap a shape + data slice (lengths must agree).
     pub fn new(dims: &'a [usize], data: &'a [f32]) -> HostTensor<'a> {
         assert_eq!(
             dims.iter().product::<usize>(),
@@ -47,17 +50,24 @@ impl<'a> HostTensor<'a> {
 /// shard once per step and share it across every stage that reads it).
 #[derive(Clone, Copy)]
 pub enum Input<'a> {
+    /// Host data, uploaded on the fly for this execution.
     Host(HostTensor<'a>),
+    /// An already-uploaded device buffer (no transfer).
     Dev(&'a xla::PjRtBuffer),
 }
 
 /// Cumulative execution counters (perf accounting).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct ExecStats {
+    /// Stage executions performed.
     pub executions: u64,
+    /// Time spent XLA-compiling artifacts.
     pub compile_time: Duration,
+    /// Time spent executing stages.
     pub exec_time: Duration,
+    /// Time spent in host-to-device uploads.
     pub h2d_time: Duration,
+    /// Time spent in device-to-host fetches.
     pub d2h_time: Duration,
     /// Bytes uploaded host→device (stage inputs + explicit uploads).
     pub h2d_bytes: u64,
@@ -90,6 +100,7 @@ impl ExecStats {
 /// drives all shards from one thread; see DESIGN.md §3).
 pub struct Runtime {
     client: xla::PjRtClient,
+    /// The artifact manifest this runtime serves.
     pub manifest: Manifest,
     exes: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
     stats: RefCell<ExecStats>,
@@ -120,14 +131,17 @@ impl Runtime {
         })
     }
 
+    /// PJRT platform name (e.g. "cpu").
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
 
+    /// Snapshot of the cumulative execution counters.
     pub fn stats(&self) -> ExecStats {
         *self.stats.borrow()
     }
 
+    /// Zero the cumulative execution counters.
     pub fn reset_stats(&self) {
         *self.stats.borrow_mut() = ExecStats::default();
     }

@@ -1,4 +1,10 @@
 //! Artifact manifest parsing (artifacts/manifest.tsv).
+//!
+//! Column semantics: (name, stage, b, n, ni, k, num_outputs, file). Sparse
+//! stages overload the shape slots exactly as python/compile/configs.py
+//! does — for `embed_msg_sp`/`embed_msg_sp_bwd`, n = EC (edge capacity)
+//! and ni = NC (node chunk); for `embed_pre_sp`/`embed_pre_sp_bwd`, n = 0
+//! (the stage is N-free). The sparse lookup helpers below decode that.
 
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
@@ -7,22 +13,34 @@ use std::path::{Path, PathBuf};
 /// One manifest row: a compiled stage at a concrete shape.
 #[derive(Debug, Clone)]
 pub struct ArtifactInfo {
+    /// Artifact name (`<stage>_b<B>_n<N>_ni<NI>_k<K>`).
     pub name: String,
+    /// Stage family (e.g. `embed_msg`, `embed_msg_sp`).
     pub stage: String,
+    /// Batch size B.
     pub b: usize,
+    /// Padded node count N (sparse overloads: EC for msg_sp, 0 for pre_sp).
     pub n: usize,
+    /// Shard height NI (sparse overload: node chunk NC for msg_sp).
     pub ni: usize,
+    /// Embedding dimension K.
     pub k: usize,
+    /// Number of tuple outputs the artifact returns.
     pub num_outputs: usize,
+    /// HLO-text file backing this artifact.
     pub file: PathBuf,
 }
 
 /// The parsed artifact set.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Artifact directory the manifest was loaded from.
     pub dir: PathBuf,
+    /// Embedding dimension K of the artifact set.
     pub k: usize,
+    /// Embedding layers L recorded by the build step.
     pub l: usize,
+    /// All artifacts by name.
     pub entries: HashMap<String, ArtifactInfo>,
 }
 
@@ -74,6 +92,7 @@ impl Manifest {
         Ok(Manifest { dir, k, l, entries })
     }
 
+    /// Look up an artifact, with build guidance on a miss.
     pub fn get(&self, name: &str) -> Result<&ArtifactInfo> {
         self.entries.get(name).with_context(|| {
             format!(
@@ -84,6 +103,7 @@ impl Manifest {
         })
     }
 
+    /// Whether an artifact name is present.
     pub fn has(&self, name: &str) -> bool {
         self.entries.contains_key(name)
     }
@@ -146,6 +166,61 @@ impl Manifest {
         })
     }
 
+    /// Node chunk NC the sparse path should use at batch size `b`, shard
+    /// height `ni`: the largest compiled `embed_msg_sp` chunk that is <= ni,
+    /// else the smallest available (chunks need not divide NI — the
+    /// coordinator zero-pads the last source chunk and clips the last
+    /// destination chunk). Mirrors python/compile/configs.py `chunk_for`.
+    pub fn sparse_chunk_for(&self, b: usize, ni: usize, k: usize) -> Option<usize> {
+        let mut chunks: Vec<usize> = self
+            .entries
+            .values()
+            .filter(|e| e.stage == "embed_msg_sp" && e.b == b && e.k == k)
+            .map(|e| e.ni)
+            .collect();
+        chunks.sort_unstable();
+        chunks.dedup();
+        chunks.iter().rev().find(|&&nc| nc <= ni).or(chunks.first()).copied()
+    }
+
+    /// Ascending edge-capacity ladder compiled for (`stage`, b, chunk):
+    /// the EC values `SparseShard` may pad its tiles to.
+    pub fn edge_caps(&self, stage: &str, b: usize, chunk: usize, k: usize) -> Vec<usize> {
+        let mut caps: Vec<usize> = self
+            .entries
+            .values()
+            .filter(|e| e.stage == stage && e.b == b && e.ni == chunk && e.k == k)
+            .map(|e| e.n)
+            .collect();
+        caps.sort_unstable();
+        caps.dedup();
+        caps
+    }
+
+    /// Resolve the sparse compute configuration for (b, ni): the node
+    /// chunk and forward edge-capacity ladder, erroring with build guidance
+    /// when the sparse stages are not compiled for this shape.
+    pub fn sparse_config(&self, b: usize, ni: usize, k: usize) -> Result<(usize, Vec<usize>)> {
+        let pre = crate::runtime::sparse_pre_name("embed_pre_sp", b, ni, k);
+        if !self.has(&pre) {
+            bail!(
+                "sparse path needs artifact '{pre}'; add the bucket to \
+                 python/compile/configs.py sparse_fwd_shapes() and re-run `make artifacts`"
+            );
+        }
+        let chunk = self.sparse_chunk_for(b, ni, k).with_context(|| {
+            format!(
+                "no embed_msg_sp chunks compiled at B={b}, K={k}; \
+                 add them to python/compile/configs.py and re-run `make artifacts`"
+            )
+        })?;
+        let caps = self.edge_caps("embed_msg_sp", b, chunk, k);
+        if caps.is_empty() {
+            bail!("no embed_msg_sp edge capacities at B={b}, NC={chunk}, K={k}");
+        }
+        Ok((chunk, caps))
+    }
+
     /// All (n, ni) fwd shard configs available for batch size b.
     pub fn available_fwd_shapes(&self, b: usize) -> Vec<(usize, usize)> {
         let mut v: Vec<(usize, usize)> = self
@@ -194,6 +269,47 @@ mod tests {
         assert_eq!(m.bucket_for_any_batch(20, 2).unwrap(), 24);
         assert!(m.bucket_for_any_batch(20, 4).is_err());
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sparse_lookup_decodes_overloaded_columns() {
+        let dir = std::env::temp_dir().join(format!("oggm_manifest_sp_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.tsv"),
+            "# oggm artifact manifest\tk=32\tl=2\n\
+             embed_pre_sp_b1_n0_ni24_k32\tembed_pre_sp\t1\t0\t24\t32\t1\tp.hlo.txt\n\
+             embed_msg_sp_b1_n96_ni12_k32\tembed_msg_sp\t1\t96\t12\t32\t1\tm1.hlo.txt\n\
+             embed_msg_sp_b1_n768_ni12_k32\tembed_msg_sp\t1\t768\t12\t32\t1\tm2.hlo.txt\n\
+             embed_msg_sp_b1_n768_ni48_k32\tembed_msg_sp\t1\t768\t48\t32\t1\tm3.hlo.txt\n",
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        // Largest chunk <= NI wins; smaller NI falls back to the smallest.
+        assert_eq!(m.sparse_chunk_for(1, 24, 32), Some(12));
+        assert_eq!(m.sparse_chunk_for(1, 48, 32), Some(48));
+        assert_eq!(m.sparse_chunk_for(1, 8, 32), Some(12));
+        assert_eq!(m.sparse_chunk_for(2, 24, 32), None); // no B=2 entries
+        assert_eq!(m.edge_caps("embed_msg_sp", 1, 12, 32), vec![96, 768]);
+        assert_eq!(m.edge_caps("embed_msg_sp", 1, 48, 32), vec![768]);
+        assert!(m.edge_caps("embed_msg_sp_bwd", 1, 12, 32).is_empty());
+        let (chunk, caps) = m.sparse_config(1, 24, 32).unwrap();
+        assert_eq!((chunk, caps), (12, vec![96, 768]));
+        // Missing the N-free pre stage is an actionable error.
+        assert!(m.sparse_config(2, 24, 32).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sparse_names_match_python() {
+        assert_eq!(
+            crate::runtime::sparse_pre_name("embed_pre_sp", 1, 24, 32),
+            "embed_pre_sp_b1_n0_ni24_k32"
+        );
+        assert_eq!(
+            crate::runtime::sparse_msg_name("embed_msg_sp", 8, 96, 12, 32),
+            "embed_msg_sp_b8_n96_ni12_k32"
+        );
     }
 
     #[test]

@@ -4,7 +4,9 @@
 //! Python never runs on this path: the manifest + HLO files are the entire
 //! interface between the build step and the coordinator (DESIGN.md §2).
 
+/// Artifact manifest parsing + sparse shape lookups.
 pub mod manifest;
+/// Stage executor over the PJRT CPU client.
 pub mod exec;
 
 pub use exec::{ExecStats, HostTensor, Input, Runtime};
@@ -13,6 +15,20 @@ pub use manifest::{ArtifactInfo, Manifest};
 /// Artifact naming convention; must mirror python/compile/configs.py.
 pub fn artifact_name(stage: &str, b: usize, n: usize, ni: usize, k: usize) -> String {
     format!("{stage}_b{b}_n{n}_ni{ni}_k{k}")
+}
+
+/// Name of the N-free sparse stage-1 artifact (`embed_pre_sp`): the (n)
+/// slot is pinned to 0 because the stage consumes the degree vector
+/// instead of an N-wide adjacency (DESIGN.md §7).
+pub fn sparse_pre_name(stage: &str, b: usize, ni: usize, k: usize) -> String {
+    artifact_name(stage, b, 0, ni, k)
+}
+
+/// Name of a sparse message-tile artifact (`embed_msg_sp`/`_bwd`): the
+/// (n, ni) slots carry (edge capacity EC, node chunk NC) — the shape is
+/// N-free by construction (DESIGN.md §7).
+pub fn sparse_msg_name(stage: &str, b: usize, edge_cap: usize, chunk: usize, k: usize) -> String {
+    artifact_name(stage, b, edge_cap, chunk, k)
 }
 
 #[cfg(test)]

@@ -12,6 +12,7 @@ use crate::graph::Graph;
 use std::time::{Duration, Instant};
 
 #[derive(Debug, Clone)]
+/// Outcome of the branch-and-bound MVC solver.
 pub struct ExactResult {
     /// Best cover found (node mask).
     pub cover: Vec<bool>,

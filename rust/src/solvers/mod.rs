@@ -3,9 +3,13 @@
 //! DESIGN.md §3) plus the approximation/heuristic baselines used to judge
 //! solution quality.
 
+/// Exact branch-and-bound MVC (CPLEX stand-in, DESIGN.md §3).
 pub mod exact;
+/// Greedy max-degree MVC heuristic.
 pub mod greedy;
+/// Maximal-matching 2-approximation for MVC.
 pub mod approx2;
+/// Local-search refinement over a feasible cover.
 pub mod localsearch;
 
 pub use approx2::two_approx_mvc;

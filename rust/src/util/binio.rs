@@ -20,12 +20,16 @@ const VERSION: u32 = 1;
 /// A named f32 tensor.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Tensor {
+    /// Tensor name (lookup key).
     pub name: String,
+    /// Row-major shape.
     pub dims: Vec<usize>,
+    /// Row-major f32 data.
     pub data: Vec<f32>,
 }
 
 impl Tensor {
+    /// Build a named tensor; dims must match the data length.
     pub fn new(name: impl Into<String>, dims: Vec<usize>, data: Vec<f32>) -> Self {
         let t = Tensor { name: name.into(), dims, data };
         assert_eq!(t.dims.iter().product::<usize>(), t.data.len(), "dims/data mismatch");

@@ -6,8 +6,11 @@ use std::collections::HashMap;
 /// Parsed command-line arguments: positionals plus `--key value` options.
 #[derive(Debug, Default, Clone)]
 pub struct Args {
+    /// Positional arguments in order.
     pub positional: Vec<String>,
+    /// `--key value` options.
     pub options: HashMap<String, String>,
+    /// Bare `--flag` switches.
     pub flags: Vec<String>,
 }
 
@@ -50,30 +53,37 @@ impl Args {
         args
     }
 
+    /// Parse the process arguments (skipping argv[0]).
     pub fn from_env() -> Args {
         Args::parse(std::env::args().skip(1))
     }
 
+    /// Option value for `--key`, if given.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.options.get(key).map(|s| s.as_str())
     }
 
+    /// Option value with a default.
     pub fn get_or(&self, key: &str, default: &str) -> String {
         self.get(key).unwrap_or(default).to_string()
     }
 
+    /// Integer option with a default.
     pub fn get_usize(&self, key: &str, default: usize) -> usize {
         self.get(key).map(|v| v.parse().expect("integer option")).unwrap_or(default)
     }
 
+    /// u64 option with a default.
     pub fn get_u64(&self, key: &str, default: u64) -> u64 {
         self.get(key).map(|v| v.parse().expect("integer option")).unwrap_or(default)
     }
 
+    /// Float option with a default.
     pub fn get_f64(&self, key: &str, default: f64) -> f64 {
         self.get(key).map(|v| v.parse().expect("float option")).unwrap_or(default)
     }
 
+    /// Whether the bare flag `--key` was passed.
     pub fn has_flag(&self, key: &str) -> bool {
         self.flags.iter().any(|f| f == key)
     }

@@ -6,19 +6,27 @@ use std::fmt::Write as _;
 /// A JSON value builder.
 #[derive(Debug, Clone)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Number (integral values print without a decimal point).
     Num(f64),
+    /// Escaped string.
     Str(String),
+    /// Array of values.
     Arr(Vec<Json>),
+    /// Object as insertion-ordered key/value pairs.
     Obj(Vec<(String, Json)>),
 }
 
 impl Json {
+    /// Empty JSON object builder.
     pub fn obj() -> Json {
         Json::Obj(Vec::new())
     }
 
+    /// Append a key/value pair (panics on non-objects).
     pub fn set(mut self, key: &str, val: impl Into<Json>) -> Json {
         if let Json::Obj(ref mut kvs) = self {
             kvs.push((key.to_string(), val.into()));
@@ -28,6 +36,7 @@ impl Json {
         self
     }
 
+    /// Serialize to a compact JSON string.
     pub fn render(&self) -> String {
         let mut s = String::new();
         self.write(&mut s);

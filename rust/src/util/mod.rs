@@ -1,11 +1,17 @@
 //! Small self-contained utilities (the environment is fully offline, so
 //! rand/serde/criterion equivalents are hand-rolled here; see DESIGN.md §3).
 
+/// PCG32 random number generator (rand stand-in).
 pub mod rng;
+/// Stopwatches and summary statistics for the benches.
 pub mod timer;
+/// Binary f32-tensor container (`.oggm` files).
 pub mod binio;
+/// Minimal JSON writer (serde stand-in).
 pub mod json;
+/// Tiny property-test harness.
 pub mod prop;
+/// Hand-rolled CLI argument parsing (clap stand-in).
 pub mod cli;
 
 /// Element-wise `acc += src` over f32 slices, processed in fixed-width

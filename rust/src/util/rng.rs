@@ -30,6 +30,7 @@ impl Pcg32 {
         Self::new(seed, 0)
     }
 
+    /// Next 32 random bits (the PCG-XSH-RR output function).
     pub fn next_u32(&mut self) -> u32 {
         let old = self.state;
         self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
@@ -38,6 +39,7 @@ impl Pcg32 {
         xorshifted.rotate_right(rot)
     }
 
+    /// Next 64 random bits.
     pub fn next_u64(&mut self) -> u64 {
         ((self.next_u32() as u64) << 32) | self.next_u32() as u64
     }

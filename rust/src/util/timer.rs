@@ -7,15 +7,19 @@ use std::time::{Duration, Instant};
 pub struct Stopwatch(Instant);
 
 impl Stopwatch {
+    /// Start timing now.
     pub fn start() -> Self {
         Stopwatch(Instant::now())
     }
+    /// Elapsed time since start/restart.
     pub fn elapsed(&self) -> Duration {
         self.0.elapsed()
     }
+    /// Elapsed seconds since start/restart.
     pub fn elapsed_s(&self) -> f64 {
         self.0.elapsed().as_secs_f64()
     }
+    /// Return the elapsed time and restart the clock.
     pub fn restart(&mut self) -> Duration {
         let e = self.0.elapsed();
         self.0 = Instant::now();
@@ -26,28 +30,35 @@ impl Stopwatch {
 /// Summary statistics over repeated measurements.
 #[derive(Debug, Clone, Default)]
 pub struct Stats {
+    /// Raw samples in insertion order (seconds).
     pub samples: Vec<f64>,
 }
 
 impl Stats {
+    /// Record one measurement.
     pub fn push(&mut self, secs: f64) {
         self.samples.push(secs);
     }
+    /// Number of samples.
     pub fn n(&self) -> usize {
         self.samples.len()
     }
+    /// Arithmetic mean (0 when empty).
     pub fn mean(&self) -> f64 {
         if self.samples.is_empty() {
             return 0.0;
         }
         self.samples.iter().sum::<f64>() / self.samples.len() as f64
     }
+    /// Minimum sample.
     pub fn min(&self) -> f64 {
         self.samples.iter().copied().fold(f64::INFINITY, f64::min)
     }
+    /// Maximum sample.
     pub fn max(&self) -> f64 {
         self.samples.iter().copied().fold(0.0, f64::max)
     }
+    /// Sample standard deviation (0 below two samples).
     pub fn stddev(&self) -> f64 {
         if self.samples.len() < 2 {
             return 0.0;
@@ -57,6 +68,7 @@ impl Stats {
             / (self.samples.len() - 1) as f64;
         v.sqrt()
     }
+    /// Median sample (0 when empty).
     pub fn median(&self) -> f64 {
         if self.samples.is_empty() {
             return 0.0;

@@ -180,6 +180,32 @@ fn compaction_preserves_solutions_and_shrinks_rounds() {
 }
 
 #[test]
+fn multi_select_compaction_preserves_solutions() {
+    // Regression for the adaptive-d live-count fix at a repack boundary:
+    // under AdaptiveMulti the select count is derived from each graph's
+    // LIVE node count, which must be identical whether or not a compaction
+    // repack happens — so compacted and uncompacted runs (and hence runs
+    // straddling the repack boundary) pick the same nodes.
+    let Some(rt) = setup() else { return };
+    if !has_batch_shapes(&rt, 24, 2, 8) {
+        return;
+    }
+    let graphs = test_graphs(8, 53);
+    let params = Params::init(32, &mut Pcg32::seeded(13));
+    let mut on = BatchCfg::new(2, 2);
+    on.policy = SelectionPolicy::AdaptiveMulti;
+    on.compact = true;
+    let mut off = on;
+    off.compact = false;
+    let a = solve_pack(&rt, &on, &params, Scenario::Mvc, graphs.clone(), 24).unwrap();
+    let b = solve_pack(&rt, &off, &params, Scenario::Mvc, graphs, 24).unwrap();
+    for (i, (x, y)) in a.per_graph.iter().zip(&b.per_graph).enumerate() {
+        assert_eq!(x.solution, y.solution, "graph {i}: repack changed a multi-select solution");
+        assert_eq!(x.selections, y.selections);
+    }
+}
+
+#[test]
 fn queue_groups_and_returns_in_order() {
     let Some(rt) = setup() else { return };
     if !has_batch_shapes(&rt, 24, 1, 8) {

@@ -1,0 +1,82 @@
+#!/usr/bin/env python3
+"""Markdown link checker for the repo docs (stdlib only, used by CI).
+
+Scans the given markdown files (default: README.md DESIGN.md EXPERIMENTS.md
+PAPER.md) for inline links/images `[text](target)` and verifies that every
+*relative* target exists on disk (anchors are stripped; `http(s)://` and
+`mailto:` targets are skipped — the container is offline). Also verifies
+that backtick-quoted repo paths that look like files (contain a `/` and an
+extension) exist, which keeps DESIGN/EXPERIMENTS references like
+`rust/src/coordinator/fwd.rs` honest as the tree moves.
+
+Exit code 0 when clean, 1 with a listing of broken references otherwise.
+"""
+
+import os
+import re
+import sys
+
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)\)")
+PATH_RE = re.compile(r"`([A-Za-z0-9_./-]+/[A-Za-z0-9_.-]+\.[A-Za-z0-9]{1,5})`")
+SKIP_SCHEMES = ("http://", "https://", "mailto:", "#")
+
+# Backticked paths that are templates/outputs, not checked-in files.
+PATH_ALLOW_MISSING = (
+    "artifacts/",          # build outputs (make artifacts)
+    "results.json",
+    "params.oggm",
+    "trained.oggm",
+    "jobs.txt",
+    "graphs/",
+    "bench_results.jsonl",
+    "BENCH_",              # bench outputs
+)
+
+
+def check_file(path: str) -> list:
+    broken = []
+    root = os.path.dirname(os.path.abspath(path))
+    with open(path, encoding="utf-8") as f:
+        text = f.read()
+    for lineno, line in enumerate(text.splitlines(), 1):
+        for m in LINK_RE.finditer(line):
+            target = m.group(1)
+            if target.startswith(SKIP_SCHEMES):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            if not os.path.exists(os.path.join(root, rel)):
+                broken.append(f"{path}:{lineno}: broken link -> {target}")
+        for m in PATH_RE.finditer(line):
+            rel = m.group(1)
+            if rel.startswith(PATH_ALLOW_MISSING) or any(
+                rel.startswith(p) or p.rstrip("/") in rel for p in PATH_ALLOW_MISSING
+            ):
+                continue
+            # Docs shorthand: module paths relative to rust/src/ or python/.
+            candidates = [rel, os.path.join("rust", "src", rel), os.path.join("python", rel)]
+            if not any(os.path.exists(os.path.join(root, c)) for c in candidates):
+                broken.append(f"{path}:{lineno}: missing referenced path -> {rel}")
+    return broken
+
+
+def main() -> int:
+    files = sys.argv[1:] or ["README.md", "DESIGN.md", "EXPERIMENTS.md", "PAPER.md"]
+    broken = []
+    for path in files:
+        if not os.path.exists(path):
+            broken.append(f"{path}: file not found")
+            continue
+        broken.extend(check_file(path))
+    if broken:
+        print("check_links: FAIL")
+        for b in broken:
+            print(f"  {b}")
+        return 1
+    print(f"check_links: OK ({len(files)} files)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
