@@ -1,0 +1,100 @@
+//! bench_queue: solver-service throughput, cold vs warm (ISSUE 4).
+//!
+//! A service session's first drain pays θ upload + XLA compiles; every
+//! later drain runs against the warm runtime (compiled executables, θ
+//! device-resident under the service's ThetaCache). This bench submits the
+//! same mixed-scenario job set through one `Service` twice and reports
+//! jobs/sec plus h2d bytes for the cold and warm drains, and the
+//! amortized warm throughput over several repeats. Emits BENCH_queue.json.
+//!
+//! Check mode: without artifacts (CI containers) the bench prints a skip
+//! notice and exits 0, like the artifact-gated tests.
+
+#[path = "common.rs"]
+mod common;
+
+use oggm::batch::{BatchCfg, Job};
+use oggm::coordinator::metrics::Table;
+use oggm::service::Service;
+use oggm::util::json::Json;
+use oggm::util::rng::Pcg32;
+use std::time::Instant;
+
+/// Submit + drain the job set once; returns (wall seconds, h2d bytes).
+fn drain_once(svc: &mut Service<'_>, set: &[Job]) -> (f64, u64) {
+    let snap = svc.runtime().stats();
+    let t0 = Instant::now();
+    for job in set {
+        svc.submit(job.clone()).expect("admission failed");
+    }
+    let events = svc.drain();
+    let wall = t0.elapsed().as_secs_f64();
+    assert_eq!(events.len(), set.len());
+    for ev in &events {
+        assert!(ev.result.is_ok(), "job {} failed: {:?}", ev.id, ev.result);
+    }
+    (wall, svc.runtime().stats().since(&snap).h2d_bytes)
+}
+
+fn main() {
+    if !oggm::runtime::manifest::default_dir().join("manifest.tsv").exists() {
+        println!("bench_queue: artifacts not built, skipping (check mode OK)");
+        return;
+    }
+    let rt = common::runtime();
+    let mut rng = Pcg32::seeded(0xC1);
+    let params = common::init_params(&mut rng);
+    let count = common::scaled(12, 6);
+    let set = common::mixed_jobs(count, 0xC0);
+    let reps = common::scaled(3, 1);
+
+    let p_list: Vec<usize> = if common::fast_mode() { vec![1] } else { vec![1, 2] };
+    let mut table = Table::new(
+        &format!("bench_queue: {count} mixed-scenario jobs |V|=20 through one Service"),
+        &["cold_jps", "warm_jps", "speedup", "cold_h2d_B", "warm_h2d_B"],
+    );
+    let mut rows = Vec::new();
+    for &p in &p_list {
+        if rt.manifest.batch_sizes(24, 24 / p).last().copied().unwrap_or(0) < 4 {
+            println!("P={p}: no compiled batch shapes at N=24, skipping");
+            continue;
+        }
+        let mut svc = Service::with_cfg(&rt, params.clone(), BatchCfg::new(p, 2));
+        let (cold_wall, cold_h2d) = drain_once(&mut svc, &set);
+        // Warm: amortize over reps on the SAME session.
+        let (mut warm_wall, mut warm_h2d) = (0.0f64, 0u64);
+        for _ in 0..reps {
+            let (w, h) = drain_once(&mut svc, &set);
+            warm_wall += w;
+            warm_h2d += h;
+        }
+        let warm_wall = warm_wall / reps as f64;
+        let warm_h2d = warm_h2d / reps as u64;
+        let cold_jps = count as f64 / cold_wall;
+        let warm_jps = count as f64 / warm_wall;
+        println!(
+            "P={p}: cold {cold_jps:.2} jobs/s, warm {warm_jps:.2} jobs/s \
+             ({:.2}x), h2d {cold_h2d} -> {warm_h2d} B/drain, resident {:.1} KiB",
+            warm_jps / cold_jps,
+            rt.keyed_bytes() as f64 / 1024.0
+        );
+        table.row(
+            format!("P={p}"),
+            vec![cold_jps, warm_jps, warm_jps / cold_jps, cold_h2d as f64, warm_h2d as f64],
+        );
+        rows.push(
+            Json::obj()
+                .set("p", p)
+                .set("jobs", count)
+                .set("cold_jobs_per_sec", cold_jps)
+                .set("warm_jobs_per_sec", warm_jps)
+                .set("speedup", warm_jps / cold_jps)
+                .set("cold_h2d_bytes", cold_h2d)
+                .set("warm_h2d_bytes", warm_h2d),
+        );
+    }
+    common::emit(&table);
+    let json = Json::obj().set("bench", "queue").set("rows", Json::Arr(rows));
+    std::fs::write("BENCH_queue.json", json.render()).expect("write BENCH_queue.json");
+    println!("bench_queue: wrote BENCH_queue.json; OK");
+}

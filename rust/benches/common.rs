@@ -40,6 +40,30 @@ pub fn emit(table: &oggm::coordinator::metrics::Table) {
     }
 }
 
+/// Mixed-scenario job set: alternating ER/BA |V|=20 graphs cycling through
+/// every scenario in `Scenario::ALL` order. Shared by `bench_queue` and
+/// `rust/tests/service.rs` (via `#[path]`) so the bench measures exactly
+/// the job mix the service equivalence tests pin.
+pub fn mixed_jobs(count: usize, seed: u64) -> Vec<oggm::batch::Job> {
+    use oggm::env::Scenario;
+    use oggm::graph::generators;
+    let mut rng = Pcg32::seeded(seed);
+    (0..count)
+        .map(|i| {
+            let g = if i % 2 == 0 {
+                generators::erdos_renyi(20, 0.2, &mut rng)
+            } else {
+                generators::barabasi_albert(20, 3, &mut rng)
+            };
+            oggm::batch::Job {
+                id: format!("j{i}"),
+                scenario: Scenario::ALL[i % Scenario::ALL.len()],
+                graph: g,
+            }
+        })
+        .collect()
+}
+
 /// Pre-trained parameters for inference benches: run a short training burst
 /// so scores are meaningful (heavier training is train_mvc's job).
 pub fn quick_trained_params(rt: &Runtime, episodes: usize, seed: u64) -> Params {

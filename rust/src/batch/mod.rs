@@ -9,7 +9,9 @@
 //! compiled batch capacity (`solve`). A job-queue front-end (`queue` +
 //! `spec`) groups heterogeneous solve requests by (scenario, bucket), packs
 //! them, and emits per-graph solutions + timing JSON; the `oggm batch-solve`
-//! subcommand is its CLI surface. See DESIGN.md §Batch.
+//! subcommand is its CLI surface, and `run_queue` itself is a one-shot
+//! compatibility wrapper over the persistent `crate::service::Service`
+//! (incremental admission + streaming outcomes). See DESIGN.md §4/§8.
 
 /// B per-graph environments in lockstep.
 pub mod env;
@@ -22,5 +24,5 @@ pub mod queue;
 
 pub use env::BatchEnv;
 pub use queue::{run_queue, Job, JobOutcome, PackStat, QueueReport};
-pub use solve::{solve_pack, BatchCfg, BatchGraphResult, BatchResult};
-pub use spec::{load_manifest, parse_manifest, GraphSource, JobSpec};
+pub use solve::{solve_pack, solve_pack_in, BatchCfg, BatchGraphResult, BatchResult};
+pub use spec::{load_manifest, parse_job_line, parse_manifest, GraphSource, JobSpec};

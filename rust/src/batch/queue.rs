@@ -1,21 +1,29 @@
-//! Job-queue front-end over the batched solve engine: the serve-style
-//! entry the ROADMAP's "many concurrent solve requests" north star needs.
+//! Job-queue front-end over the batched solve engine — since the service
+//! redesign, a one-shot compatibility wrapper over
+//! [`crate::service::Service`] (DESIGN.md §8).
 //!
 //! Heterogeneous jobs (different sizes, generators, scenarios) are grouped
 //! by (scenario, compiled bucket), chunked to the largest compiled batch
 //! capacity, and each pack is driven through `solve_pack`'s shared forward
 //! passes. Results come back per job with timing, so callers can account
 //! end-to-end latency per request as well as per-pack amortized step cost.
+//! `run_queue` realizes that contract as submit-all → flush → drain on a
+//! throwaway `Service` in [`LaunchPolicy::OnFlush`] mode, whose flush-time
+//! grouping reproduces the historical pack order and outcomes bit-exact
+//! (`rust/tests/batch_equivalence.rs` pins it). Per-pack *transfer stats*
+//! deliberately improve: θ uploads once per call through the service's
+//! `ThetaCache` rather than once per pack, so packs after the first book
+//! lower `exec.h2d_bytes` than pre-service releases.
 
-use crate::batch::solve::{solve_pack, BatchCfg};
+use crate::batch::solve::BatchCfg;
 use crate::coordinator::metrics::exec_stats_json;
 use crate::env::Scenario;
 use crate::graph::Graph;
 use crate::model::Params;
 use crate::runtime::{ExecStats, Runtime};
+use crate::service::{LaunchPolicy, Service};
 use crate::util::json::Json;
-use anyhow::{Context, Result};
-use std::collections::BTreeMap;
+use anyhow::{anyhow, Context, Result};
 use std::time::Instant;
 
 /// One solve request.
@@ -54,6 +62,25 @@ pub struct JobOutcome {
     pub evaluations: usize,
     /// Nodes selected in total (>= evaluations under multi-select).
     pub selections: usize,
+}
+
+impl JobOutcome {
+    /// Render as the JSON object shared by the `oggm batch-solve` report
+    /// and the `oggm serve` JSONL stream.
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("id", self.id.as_str())
+            .set("scenario", self.scenario.name())
+            .set("nodes", self.nodes)
+            .set("edges", self.edges)
+            .set("pack", self.pack)
+            .set("solution", self.solution.clone())
+            .set("solution_size", self.solution_size)
+            .set("objective", self.objective)
+            .set("valid", self.valid)
+            .set("evaluations", self.evaluations)
+            .set("selections", self.selections)
+    }
 }
 
 /// Per-pack statistics.
@@ -98,24 +125,7 @@ pub struct QueueReport {
 impl QueueReport {
     /// Render the report as the `oggm batch-solve` JSON document.
     pub fn to_json(&self) -> Json {
-        let jobs: Vec<Json> = self
-            .outcomes
-            .iter()
-            .map(|o| {
-                Json::obj()
-                    .set("id", o.id.as_str())
-                    .set("scenario", o.scenario.name())
-                    .set("nodes", o.nodes)
-                    .set("edges", o.edges)
-                    .set("pack", o.pack)
-                    .set("solution", o.solution.clone())
-                    .set("solution_size", o.solution_size)
-                    .set("objective", o.objective)
-                    .set("valid", o.valid)
-                    .set("evaluations", o.evaluations)
-                    .set("selections", o.selections)
-            })
-            .collect();
+        let jobs: Vec<Json> = self.outcomes.iter().map(|o| o.to_json()).collect();
         let packs: Vec<Json> = self
             .packs
             .iter()
@@ -143,6 +153,15 @@ impl QueueReport {
 
 /// Group jobs into packs and solve them all. Outcomes are returned in the
 /// original job order.
+///
+/// Compatibility wrapper over [`Service`]: every job is submitted up
+/// front, nothing launches before `flush` ([`LaunchPolicy::OnFlush`]), so
+/// the (scenario, bucket)-ordered grouping, chunking, and pack numbering
+/// are exactly the historical one-shot behavior. Long-lived callers that
+/// want incremental admission and streaming outcomes should hold a
+/// [`Service`] instead. Where the old implementation panicked on internal
+/// invariants ("every job assigned to a pack"), this surfaces contextful
+/// errors per job.
 pub fn run_queue(
     rt: &Runtime,
     cfg: &BatchCfg,
@@ -150,69 +169,34 @@ pub fn run_queue(
     jobs: &[Job],
 ) -> Result<QueueReport> {
     let wall = Instant::now();
-    let p = cfg.engine.p;
-
-    // Group by (scenario, compiled bucket); BTreeMap keeps pack order
-    // deterministic across runs.
-    let mut groups: BTreeMap<(Scenario, usize), Vec<usize>> = BTreeMap::new();
-    for (ji, job) in jobs.iter().enumerate() {
-        let bucket = rt
-            .manifest
-            .bucket_for_any_batch(job.graph.n, p)
-            .with_context(|| format!("job '{}' (|V|={})", job.id, job.graph.n))?;
-        groups.entry((job.scenario, bucket)).or_default().push(ji);
+    // OnFlush pins the historical grouping; fail_fast pins the historical
+    // error path (an early pack failure must not keep solving packs whose
+    // outcomes this call is about to discard).
+    let mut svc = Service::with_cfg(rt, params.clone(), *cfg)
+        .launch_policy(LaunchPolicy::OnFlush)
+        .fail_fast(true);
+    for job in jobs {
+        // Admission errors (no compiled bucket fits) fail the whole queue,
+        // as the one-shot grouping always did.
+        svc.submit(job.clone())?;
     }
-
     let mut outcomes: Vec<Option<JobOutcome>> = (0..jobs.len()).map(|_| None).collect();
-    let mut packs = Vec::new();
-    for ((scenario, bucket), members) in groups {
-        let part_ni = bucket / p;
-        let caps = rt.manifest.batch_sizes(bucket, part_ni);
-        let max_cap = *caps.last().expect("bucket_for_any_batch guarantees an entry");
-        for chunk in members.chunks(max_cap) {
-            let pack_idx = packs.len();
-            let graphs: Vec<Graph> = chunk.iter().map(|&ji| jobs[ji].graph.clone()).collect();
-            let res = solve_pack(rt, cfg, params, scenario, graphs, bucket)
-                .with_context(|| format!("pack {pack_idx} ({scenario}, N={bucket})"))?;
-            for (slot, &ji) in chunk.iter().enumerate() {
-                let r = &res.per_graph[slot];
-                let solution: Vec<usize> =
-                    r.solution.iter().enumerate().filter(|(_, &b)| b).map(|(v, _)| v).collect();
-                outcomes[ji] = Some(JobOutcome {
-                    id: jobs[ji].id.clone(),
-                    scenario,
-                    nodes: jobs[ji].graph.n,
-                    edges: jobs[ji].graph.m,
-                    pack: pack_idx,
-                    solution,
-                    solution_size: r.solution_size,
-                    objective: r.objective,
-                    valid: r.valid,
-                    evaluations: r.evaluations,
-                    selections: r.selections,
-                });
-            }
-            packs.push(PackStat {
-                pack: pack_idx,
-                scenario,
-                bucket_n: bucket,
-                jobs: chunk.len(),
-                capacity: res.initial_capacity,
-                rounds: res.rounds,
-                repacks: res.repacks,
-                sim_time: res.sim_total,
-                wall_time: res.wall_total,
-                comm_bytes: res.timing.comm_bytes,
-                exec: res.exec,
-            });
-        }
+    for ev in svc.drain() {
+        let slot = outcomes.get_mut(ev.job.index()).with_context(|| {
+            format!("job '{}': service event {} outside the submitted range", ev.id, ev.job)
+        })?;
+        *slot = Some(ev.result.map_err(|e| anyhow!("job '{}': {e}", ev.id))?);
     }
-
-    Ok(QueueReport {
-        outcomes: outcomes.into_iter().map(|o| o.expect("every job assigned to a pack")).collect(),
-        packs,
-        wall_total: wall.elapsed().as_secs_f64(),
-    })
+    let outcomes = outcomes
+        .into_iter()
+        .enumerate()
+        .map(|(ji, o)| {
+            o.with_context(|| {
+                format!("job '{}': no outcome streamed for it (service bug)", jobs[ji].id)
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(QueueReport { outcomes, packs: svc.take_packs(), wall_total: wall.elapsed().as_secs_f64() })
 }
 
 #[cfg(test)]

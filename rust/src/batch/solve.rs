@@ -18,7 +18,7 @@
 
 use crate::batch::env::BatchEnv;
 use crate::coordinator::engine::{EngineCfg, StepTiming};
-use crate::coordinator::fwd::{forward_set, AnyDeviceState};
+use crate::coordinator::fwd::{forward_set, AnyDeviceState, ThetaCache};
 use crate::coordinator::selection::{select_count, top_d, SelectionPolicy};
 use crate::coordinator::shard::{shards_for_pack, sparse_shards_for_pack, ShardSet, Storage};
 use crate::env::Scenario;
@@ -188,6 +188,22 @@ pub fn solve_pack(
     graphs: Vec<Graph>,
     bucket_n: usize,
 ) -> Result<BatchResult> {
+    solve_pack_in(rt, cfg, params, scenario, graphs, bucket_n, None)
+}
+
+/// [`solve_pack`] with an optional shared θ residency: when `theta` is a
+/// service-owned [`ThetaCache`], the pack's device state uploads θ through
+/// it, so a warm runtime serves θ from cache instead of re-transferring it
+/// per pack (DESIGN.md §8).
+pub fn solve_pack_in(
+    rt: &Runtime,
+    cfg: &BatchCfg,
+    params: &Params,
+    scenario: Scenario,
+    graphs: Vec<Graph>,
+    bucket_n: usize,
+    theta: Option<&ThetaCache>,
+) -> Result<BatchResult> {
     let wall = Instant::now();
     let part = Partition::new(bucket_n, cfg.engine.p);
     let caps = rt.manifest.batch_sizes(bucket_n, part.ni());
@@ -241,7 +257,7 @@ pub fn solve_pack(
     // and rebuilds the device buffers. The one-time upload is booked like
     // every other transfer so resident-vs-fresh times stay comparable.
     let mut dev = if cfg.device_resident && !set.is_empty() {
-        let d = AnyDeviceState::new(rt, params, &mut set)?;
+        let d = AnyDeviceState::new_in(rt, params, &mut set, theta)?;
         let up_t = d.last_transfer_secs();
         timing.h2d += up_t;
         sim_total += up_t;

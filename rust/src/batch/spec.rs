@@ -76,17 +76,28 @@ impl JobSpec {
     }
 }
 
+/// Parse one manifest line incrementally (the `oggm serve` admission
+/// path): `Ok(None)` for blank/comment lines, `Ok(Some(spec))` for a job.
+/// `index` numbers the defaults (`id=job<index>`, generator seed) exactly
+/// as [`parse_manifest`] does — pass the count of jobs parsed so far so a
+/// streamed file yields the same specs as a batch-parsed one.
+pub fn parse_job_line(raw: &str, index: usize) -> Result<Option<JobSpec>> {
+    let line = raw.trim();
+    if line.is_empty() || line.starts_with('#') || line.starts_with('%') {
+        return Ok(None);
+    }
+    parse_line(line, index).map(Some)
+}
+
 /// Parse manifest text into job specs.
 pub fn parse_manifest(text: &str) -> Result<Vec<JobSpec>> {
     let mut jobs = Vec::new();
     for (lineno, raw) in text.lines().enumerate() {
-        let line = raw.trim();
-        if line.is_empty() || line.starts_with('#') || line.starts_with('%') {
-            continue;
+        if let Some(job) = parse_job_line(raw, jobs.len())
+            .with_context(|| format!("manifest line {}: '{}'", lineno + 1, raw.trim()))?
+        {
+            jobs.push(job);
         }
-        let job = parse_line(line, jobs.len())
-            .with_context(|| format!("manifest line {}: '{line}'", lineno + 1))?;
-        jobs.push(job);
     }
     if jobs.is_empty() {
         bail!("manifest contains no jobs");
@@ -207,6 +218,23 @@ gen hk n=40 triad=0.5 scenario=mvc
         }
         assert_eq!(jobs[2].source, GraphSource::File(PathBuf::from("graphs/road.txt")));
         assert_eq!(jobs[3].scenario, Scenario::Mvc);
+    }
+
+    #[test]
+    fn incremental_line_parse_matches_batch_parse() {
+        // The serve path parses line by line with a running job count; it
+        // must yield the same specs (ids, default seeds) as parse_manifest.
+        let text = "# header\ngen er n=20 seed=7\n\ngen ba n=30 d=4 mis\n% tail comment\n";
+        let batch = parse_manifest(text).unwrap();
+        let mut streamed = Vec::new();
+        for raw in text.lines() {
+            if let Some(j) = parse_job_line(raw, streamed.len()).unwrap() {
+                streamed.push(j);
+            }
+        }
+        assert_eq!(streamed, batch);
+        assert!(parse_job_line("   ", 0).unwrap().is_none());
+        assert!(parse_job_line("gen zz n=10", 0).is_err());
     }
 
     #[test]

@@ -1,15 +1,23 @@
 //! CLI subcommand implementations for the `oggm` binary.
+//!
+//! Every subcommand parses its shared knobs through the one
+//! `service::Options` front door and lowers to its loop config via `From`
+//! — the commands themselves are thin shells around the library entry
+//! points (`Trainer`, `solve_scenario`, `run_queue`, `Service`).
 
-use super::infer::{solve_mvc, InferCfg};
-use super::selection::SelectionPolicy;
+use super::infer::{solve_scenario, InferCfg};
 use super::train::{TrainCfg, Trainer};
 use crate::batch::{self, BatchCfg, Job};
+use crate::env::Scenario;
 use crate::graph::{generators, io as gio, stats, Graph, Partition};
 use crate::model::Params;
 use crate::runtime::{manifest, Runtime};
+use crate::service::{Options, Service};
 use crate::util::cli::Args;
+use crate::util::json::Json;
 use crate::util::rng::Pcg32;
 use anyhow::{bail, Context, Result};
+use std::io::{BufRead, Write};
 
 fn load_runtime() -> Result<Runtime> {
     Runtime::new(manifest::default_dir())
@@ -63,22 +71,14 @@ pub fn cmd_info(_args: &Args) -> Result<()> {
 /// `oggm train --n 20 --graphs 8 --episodes 20 --p 2 --tau 4 --out params.oggm`.
 pub fn cmd_train(args: &Args) -> Result<()> {
     let rt = load_runtime()?;
-    let seed = args.get_u64("seed", 1);
-    let mut rng = Pcg32::new(seed, 77);
+    let opts = Options::from_args(args)?;
+    let mut rng = Pcg32::new(opts.seed_or(1), 77);
     let n = args.get_usize("n", 20);
     let count = args.get_usize("graphs", 8);
     let graphs: Vec<Graph> = (0..count)
         .map(|_| generators::erdos_renyi(n, args.get_f64("rho", 0.15), &mut rng))
         .collect();
-    let bucket = Partition::pad_to_bucket(n, 12);
-    let mut cfg = TrainCfg::new(args.get_usize("p", 1), bucket);
-    cfg.seed = seed;
-    cfg.hyper.lr = args.get_f64("lr", 1e-3) as f32;
-    cfg.hyper.grad_iters = args.get_usize("tau", 1);
-    cfg.hyper.batch_size = args.get_usize("batch", 8);
-    if args.has_flag("sparse") {
-        cfg.storage = super::shard::Storage::Sparse;
-    }
+    let cfg = TrainCfg::from(&opts.clone().bucket(Partition::pad_to_bucket(n, 12)));
     let params = load_or_init_params(args, &mut rng)?;
     let mut trainer = Trainer::new(&rt, cfg, graphs, params)?;
     let episodes = args.get_usize("episodes", 20);
@@ -105,25 +105,24 @@ pub fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `oggm infer --n 250 --p 2 --multi --params trained.oggm`.
+/// `oggm infer --n 250 --p 2 --multi --scenario mis --params trained.oggm`
+/// — RL inference on one graph, any scenario (`--scenario` defaults to
+/// mvc, preserving the historical MVC-only behavior).
 pub fn cmd_infer(args: &Args) -> Result<()> {
     let rt = load_runtime()?;
-    let mut rng = Pcg32::new(args.get_u64("seed", 2), 78);
+    let opts = Options::from_args(args)?;
+    let mut rng = Pcg32::new(opts.seed_or(2), 78);
     let g = resolve_graph(args, &mut rng)?;
     let params = load_or_init_params(args, &mut rng)?;
-    let p = args.get_usize("p", 1);
-    let bucket = rt.manifest.bucket_for(g.n, p, 1)?;
-    let mut cfg = InferCfg::new(p, 2);
-    if args.has_flag("multi") {
-        cfg.policy = SelectionPolicy::AdaptiveMulti;
-    }
-    if args.has_flag("sparse") {
-        cfg.storage = super::shard::Storage::Sparse;
-    }
-    let res = solve_mvc(&rt, &cfg, &params, &g, bucket)?;
+    let scenario = opts.scenario.unwrap_or(Scenario::Mvc);
+    let bucket = rt.manifest.bucket_for(g.n, opts.p, 1)?;
+    let cfg = InferCfg::from(&opts);
+    let res = solve_scenario(&rt, &cfg, &params, &g, bucket, scenario)?;
     println!(
-        "graph |V|={} |E|={}: cover size {} in {} evaluations ({} selections)",
-        g.n, g.m, res.solution_size, res.evaluations, res.selections
+        "graph |V|={} |E|={}: {} solution size {} (objective {}) in {} evaluations \
+         ({} selections)",
+        g.n, g.m, scenario.name(), res.solution_size, res.objective, res.evaluations,
+        res.selections
     );
     println!(
         "sim time/eval {:.4}s   wall total {:.2}s   comm {:.1} KiB over {} collectives",
@@ -143,7 +142,8 @@ pub fn cmd_infer(args: &Args) -> Result<()> {
 /// `--sparse` switches the packs to CSR storage (DESIGN.md §7).
 pub fn cmd_batch_solve(args: &Args) -> Result<()> {
     let rt = load_runtime()?;
-    let mut rng = Pcg32::new(args.get_u64("seed", 4), 80);
+    let opts = Options::from_args(args)?;
+    let mut rng = Pcg32::new(opts.seed_or(4), 80);
     let specs = match args.get("manifest") {
         Some(path) => batch::load_manifest(path)?,
         None => {
@@ -151,42 +151,20 @@ pub fn cmd_batch_solve(args: &Args) -> Result<()> {
             if count == 0 {
                 bail!("batch-solve needs --manifest <file> or --demo <count>");
             }
-            let n = args.get_usize("n", 20);
-            // Mixed ER/BA jobs, deterministic per --seed.
-            let text: String = (0..count)
-                .map(|i| {
-                    let model = if i % 2 == 0 { "er" } else { "ba" };
-                    let seed = args.get_u64("seed", 4) + i as u64;
-                    format!("gen {model} n={n} seed={seed} id=demo{i}\n")
-                })
-                .collect();
-            batch::parse_manifest(&text)?
+            batch::parse_manifest(&demo_manifest(args, &opts, count, false))?
         }
-    };
-    let override_scenario = match args.get("scenario") {
-        Some(s) => Some(crate::env::Scenario::parse(s)?),
-        None => None,
     };
     let mut jobs = Vec::with_capacity(specs.len());
     for spec in &specs {
         jobs.push(Job {
             id: spec.id.clone(),
-            scenario: override_scenario.unwrap_or(spec.scenario),
+            scenario: opts.scenario.unwrap_or(spec.scenario),
             graph: spec.materialize()?,
         });
     }
     println!("batch-solve: {} jobs", jobs.len());
 
-    let mut cfg = BatchCfg::new(args.get_usize("p", 1), 2);
-    if args.has_flag("multi") {
-        cfg.policy = SelectionPolicy::AdaptiveMulti;
-    }
-    if args.has_flag("no-compact") {
-        cfg.compact = false;
-    }
-    if args.has_flag("sparse") {
-        cfg.storage = super::shard::Storage::Sparse;
-    }
+    let cfg = BatchCfg::from(&opts);
     let params = load_or_init_params(args, &mut rng)?;
     let report = batch::run_queue(&rt, &cfg, &params, &jobs)?;
 
@@ -225,9 +203,184 @@ pub fn cmd_batch_solve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Synthesize a demo job manifest: `count` mixed ER/BA jobs, deterministic
+/// per `--seed`. With `mixed_scenarios` the jobs also cycle through every
+/// scenario (the serve smoke path, so pack grouping is exercised);
+/// batch-solve's historical demo keeps the default (mvc) scenario.
+fn demo_manifest(args: &Args, opts: &Options, count: usize, mixed_scenarios: bool) -> String {
+    let n = args.get_usize("n", 20);
+    (0..count)
+        .map(|i| {
+            let model = if i % 2 == 0 { "er" } else { "ba" };
+            let seed = opts.seed_or(4) + i as u64;
+            let scenario = if mixed_scenarios {
+                format!(" {}", Scenario::ALL[i % Scenario::ALL.len()].name())
+            } else {
+                String::new()
+            };
+            format!("gen {model} n={n} seed={seed} id=demo{i}{scenario}\n")
+        })
+        .collect()
+}
+
+/// Write one JSONL error object for a job that never reached the service
+/// (parse / materialize / admission failure) — the stream stays one line
+/// per input job either way, and the line counts toward the summary like
+/// every other emitted line.
+fn serve_error_line(out: &mut dyn Write, written: &mut usize, id: &str, err: &str) -> Result<()> {
+    let line = Json::obj().set("id", id).set("error", err).render();
+    writeln!(out, "{line}").context("writing JSONL output")?;
+    // The failure is known now — stream it now (same contract as pack
+    // outcomes; a tailing consumer must not wait for the next pack).
+    out.flush().context("flushing JSONL output")?;
+    *written += 1;
+    Ok(())
+}
+
+/// Drain every ready service event to the JSONL sink (streaming: flushed
+/// immediately so a tailing caller sees outcomes as packs finish).
+fn serve_write_ready(
+    svc: &mut Service<'_>,
+    out: &mut dyn Write,
+    written: &mut usize,
+    failed: &mut usize,
+) -> Result<()> {
+    // Per-pack stats go to stderr as packs finish (and taking them keeps
+    // the persistent session's stats buffer from growing without bound).
+    for p in svc.take_packs() {
+        eprintln!(
+            "serve: pack {:>3}: {:>6} N={:<5} jobs={:<3} capacity={:<3} rounds={:<4} \
+             repacks={}  sim {:.4}s  h2d {:.1} KiB",
+            p.pack,
+            p.scenario.name(),
+            p.bucket_n,
+            p.jobs,
+            p.capacity,
+            p.rounds,
+            p.repacks,
+            p.sim_time,
+            p.exec.h2d_bytes as f64 / 1024.0
+        );
+    }
+    let mut any = false;
+    while let Some(ev) = svc.poll() {
+        if ev.result.is_err() {
+            *failed += 1;
+        }
+        writeln!(out, "{}", ev.to_json().render()).context("writing JSONL output")?;
+        *written += 1;
+        any = true;
+    }
+    if any {
+        out.flush().context("flushing JSONL output")?;
+    }
+    Ok(())
+}
+
+/// `oggm serve --jobs jobs.txt --out results.jsonl --p 2 --multi` — the
+/// persistent solver service front door. Job lines (the batch-solve
+/// manifest grammar, one job per line) stream in from `--jobs <file>` or
+/// stdin; each is admitted into the warm [`Service`] as it arrives, and
+/// one JSONL outcome line per job is appended to `--out` (default stdout)
+/// as packs finish — results stream while later jobs are still being read.
+/// `--demo <count>` synthesizes a mixed-scenario job stream instead of
+/// reading input. `--scenario` overrides every job; `--max-wait <secs>`
+/// launches partial packs past the deadline — checked as each input line
+/// arrives (the loop is single-threaded and blocks on reads, so a fully
+/// idle stream launches at the next line or EOF); `--check` exits 0 with
+/// a notice when artifacts are not built (CI smoke mode). Human-readable
+/// progress goes to stderr so stdout stays pure JSONL.
+pub fn cmd_serve(args: &Args) -> Result<()> {
+    let opts = Options::from_args(args)?;
+    if args.has_flag("check") && !manifest::default_dir().join("manifest.tsv").exists() {
+        println!("serve: artifacts not built, skipping (check mode OK)");
+        return Ok(());
+    }
+    let rt = load_runtime()?;
+    let mut rng = Pcg32::new(opts.seed_or(4), 80);
+    let params = load_or_init_params(args, &mut rng)?;
+    let mut svc = Service::new(&rt, params, &opts);
+
+    if args.get("jobs").is_some() && args.get_usize("demo", 0) > 0 {
+        bail!("--jobs and --demo are mutually exclusive (one real stream or one synthetic)");
+    }
+    let reader: Box<dyn BufRead> = match args.get_usize("demo", 0) {
+        0 => match args.get("jobs") {
+            Some(path) => Box::new(std::io::BufReader::new(
+                std::fs::File::open(path).with_context(|| format!("opening --jobs {path}"))?,
+            )),
+            None => Box::new(std::io::BufReader::new(std::io::stdin())),
+        },
+        count => Box::new(std::io::Cursor::new(demo_manifest(args, &opts, count, true))),
+    };
+    let mut out: Box<dyn Write> = match args.get("out") {
+        Some(path) => Box::new(std::io::BufWriter::new(
+            std::fs::File::create(path).with_context(|| format!("creating --out {path}"))?,
+        )),
+        None => Box::new(std::io::stdout()),
+    };
+
+    let (mut parsed, mut written, mut failed) = (0usize, 0usize, 0usize);
+    for (lineno, line) in reader.lines().enumerate() {
+        let raw = line.context("reading job input")?;
+        // Every input line is a chance to fire the max-wait policy and
+        // stream whatever finished, even when the line itself admits
+        // nothing (comments, blanks, malformed lines).
+        svc.tick();
+        serve_write_ready(&mut svc, &mut out, &mut written, &mut failed)?;
+        let spec = match batch::parse_job_line(&raw, parsed) {
+            Ok(None) => continue,
+            Ok(Some(spec)) => spec,
+            Err(e) => {
+                // One bad line must not kill the session: emit an error
+                // object for it and keep serving.
+                let id = format!("line{}", lineno + 1);
+                serve_error_line(&mut out, &mut written, &id, &format!("{e:#}"))?;
+                failed += 1;
+                continue;
+            }
+        };
+        parsed += 1;
+        let id = spec.id.clone();
+        let job = match spec.materialize() {
+            Ok(graph) => {
+                Job { id: id.clone(), scenario: opts.scenario.unwrap_or(spec.scenario), graph }
+            }
+            Err(e) => {
+                serve_error_line(&mut out, &mut written, &id, &format!("{e:#}"))?;
+                failed += 1;
+                continue;
+            }
+        };
+        if let Err(e) = svc.submit(job) {
+            serve_error_line(&mut out, &mut written, &id, &format!("{e:#}"))?;
+            failed += 1;
+        }
+        // Stream whatever finished (a pack that filled launches inside
+        // submit; max-wait launches happen in the service's tick).
+        serve_write_ready(&mut svc, &mut out, &mut written, &mut failed)?;
+    }
+    // EOF: solve the partial packs and drain the tail.
+    svc.flush();
+    serve_write_ready(&mut svc, &mut out, &mut written, &mut failed)?;
+    out.flush().context("flushing JSONL output")?;
+
+    eprintln!(
+        "serve: {} jobs in, {} JSONL lines out ({} failed), {} packs, \
+         warm device state {:.1} KiB",
+        parsed,
+        written,
+        failed,
+        svc.launched(),
+        rt.keyed_bytes() as f64 / 1024.0
+    );
+    Ok(())
+}
+
 /// `oggm solve --n 100` — classical baselines on one graph.
 pub fn cmd_solve(args: &Args) -> Result<()> {
-    let mut rng = Pcg32::new(args.get_u64("seed", 3), 79);
+    let opts = Options::from_args(args)?;
+    let mut rng = Pcg32::new(opts.seed_or(3), 79);
     let g = resolve_graph(args, &mut rng)?;
     let s = stats::dataset_stats("input", &g);
     println!("graph |V|={} |E|={} rho={:.4}", s.nodes, s.edges, s.rho);

@@ -56,18 +56,68 @@ pub struct FwdOutput {
     pub timing: StepTiming,
 }
 
+/// A θ-residency handle that OUTLIVES any one `DeviceState`: a stable
+/// keyed-cache namespace plus a content generation for the current
+/// parameters. Successive device states built with `new_in(.., Some(cache))`
+/// upload θ through this namespace, so the runtime serves the buffers from
+/// cache (no transfer) for every solve after the first — the warm-service
+/// optimization (`service::Service` holds one per session; DESIGN.md §8).
+/// The owner must call [`ThetaCache::evict`] when done (device-state drops
+/// deliberately leave the shared namespace resident).
+#[derive(Debug, Clone)]
+pub struct ThetaCache {
+    /// Keyed-cache prefix (`tc<id>/`), disjoint from every `ds<id>/` /
+    /// `sds<id>/` device-state namespace.
+    prefix: String,
+    /// Content generation of the host parameters last published here.
+    generation: u64,
+}
+
+impl ThetaCache {
+    /// Allocate a fresh θ namespace on `rt`. Nothing is uploaded yet; the
+    /// first `DeviceState`/`SparseDeviceState` built against the cache pays
+    /// the upload, later ones hit the keyed cache.
+    pub fn new(rt: &Runtime) -> ThetaCache {
+        ThetaCache { prefix: format!("tc{}/", rt.alloc_state_id()), generation: 0 }
+    }
+
+    /// Current content generation.
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// Invalidate after the host parameters change: the next device state
+    /// built against the cache re-uploads θ instead of hitting stale
+    /// buffers.
+    pub fn bump(&mut self) {
+        self.generation += 1;
+    }
+
+    /// Drop the cached θ buffers from the runtime (owner teardown).
+    pub fn evict(&self, rt: &Runtime) {
+        rt.evict_keyed(&self.prefix);
+    }
+}
+
 /// Persistent device residency for one solve: θ and the per-shard
 /// adjacency uploaded once, then kept in sync with the host `ShardState`s
 /// by delta patching (see `sync`). Buffers are registered in the runtime's
 /// keyed, generation-tracked cache under an exclusive `ds<id>/` namespace
-/// and evicted on drop.
+/// and evicted on drop — except θ built against a shared [`ThetaCache`],
+/// which stays resident for the cache's owner.
 pub struct DeviceState<'r> {
     rt: &'r Runtime,
     id: u64,
     /// Content generation of the A buffers: bumped on every re-upload or
     /// on-device patch so the keyed cache never serves a stale copy.
     gen_a: u64,
-    gen_theta: u64,
+    /// θ key prefix: the private `ds<id>/` namespace, or a shared
+    /// [`ThetaCache`] namespace that outlives this state.
+    theta_prefix: String,
+    theta_gen: u64,
+    /// θ lives in the private namespace (shared-cache states must not
+    /// `refresh_theta`; the cache owner bumps the generation instead).
+    theta_private: bool,
     /// Batch size B of the resident shards.
     pub b: usize,
     /// Padded global node count N.
@@ -102,15 +152,32 @@ impl<'r> DeviceState<'r> {
         params: &Params,
         shards: &mut [ShardState],
     ) -> Result<DeviceState<'r>> {
+        DeviceState::new_in(rt, params, shards, None)
+    }
+
+    /// Like [`DeviceState::new`], but θ goes through `theta` when given: a
+    /// shared, service-owned namespace the keyed cache serves without a
+    /// transfer once warm (the cold/warm h2d delta `rust/tests/service.rs`
+    /// asserts).
+    pub fn new_in(
+        rt: &'r Runtime,
+        params: &Params,
+        shards: &mut [ShardState],
+        theta_cache: Option<&ThetaCache>,
+    ) -> Result<DeviceState<'r>> {
         assert!(!shards.is_empty(), "DeviceState needs at least one shard");
         let (b, n, ni, k) = (shards[0].b, shards[0].n(), shards[0].ni(), params.k);
         let id = rt.alloc_state_id();
+        let (theta_prefix, theta_gen, theta_private) = match theta_cache {
+            Some(c) => (c.prefix.clone(), c.generation, false),
+            None => (format!("ds{id}/"), 0, true),
+        };
         let t_theta = Instant::now();
         let mut theta = Vec::with_capacity(7);
         for i in 0..7 {
             theta.push(rt.upload_keyed(
-                &format!("ds{id}/theta{i}"),
-                0,
+                &format!("{theta_prefix}theta{i}"),
+                theta_gen,
                 &params.theta_dims(i),
                 params.theta(i),
             )?);
@@ -122,7 +189,9 @@ impl<'r> DeviceState<'r> {
             rt,
             id,
             gen_a: 0,
-            gen_theta: 0,
+            theta_prefix,
+            theta_gen,
+            theta_private,
             b,
             n,
             ni,
@@ -162,15 +231,22 @@ impl<'r> DeviceState<'r> {
 
     /// Re-upload θ after an optimizer step (the device copy must track the
     /// host parameters; A is untouched — minibatch state does not change
-    /// across the τ repeated gradient iterations).
+    /// across the τ repeated gradient iterations). Only valid on a private
+    /// θ namespace: states built against a shared [`ThetaCache`] never
+    /// change parameters (the cache owner bumps the generation instead),
+    /// and a local bump here would silently desync the owner's tracking.
     pub fn refresh_theta(&mut self, params: &Params) -> Result<()> {
         assert_eq!(params.k, self.k, "embedding dim changed");
+        assert!(
+            self.theta_private,
+            "refresh_theta on a shared ThetaCache namespace; bump the cache and rebuild instead"
+        );
         let t0 = Instant::now();
-        self.gen_theta += 1;
+        self.theta_gen += 1;
         for i in 0..7 {
             self.theta[i] = self.rt.upload_keyed(
-                &format!("ds{}/theta{i}", self.id),
-                self.gen_theta,
+                &format!("{}theta{i}", self.theta_prefix),
+                self.theta_gen,
                 &params.theta_dims(i),
                 params.theta(i),
             )?;
@@ -688,7 +764,13 @@ pub struct SparseDeviceState<'r> {
     /// Content generation of the tile buffers: bumped on every re-upload so
     /// the keyed cache never serves a stale mask.
     gen_w: u64,
-    gen_theta: u64,
+    /// θ key prefix: the private `sds<id>/` namespace, or a shared
+    /// [`ThetaCache`] namespace that outlives this state. Dense and sparse
+    /// states built against the same cache share the same buffers — θ does
+    /// not depend on the storage mode.
+    theta_prefix: String,
+    theta_gen: u64,
+    theta_private: bool,
     /// Batch size B of the resident shards.
     pub b: usize,
     /// Padded global node count N.
@@ -763,16 +845,31 @@ impl<'r> SparseDeviceState<'r> {
         params: &Params,
         shards: &mut [SparseShard],
     ) -> Result<SparseDeviceState<'r>> {
+        SparseDeviceState::new_in(rt, params, shards, None)
+    }
+
+    /// Like [`SparseDeviceState::new`], but θ goes through a shared
+    /// [`ThetaCache`] when given (see [`DeviceState::new_in`]).
+    pub fn new_in(
+        rt: &'r Runtime,
+        params: &Params,
+        shards: &mut [SparseShard],
+        theta_cache: Option<&ThetaCache>,
+    ) -> Result<SparseDeviceState<'r>> {
         assert!(!shards.is_empty(), "SparseDeviceState needs at least one shard");
         let (b, n, ni, k, chunk) =
             (shards[0].b, shards[0].n(), shards[0].ni(), params.k, shards[0].chunk);
         let id = rt.alloc_state_id();
+        let (theta_prefix, theta_gen, theta_private) = match theta_cache {
+            Some(c) => (c.prefix.clone(), c.generation, false),
+            None => (format!("sds{id}/"), 0, true),
+        };
         let t_theta = Instant::now();
         let mut theta = Vec::with_capacity(7);
         for i in 0..7 {
             theta.push(rt.upload_keyed(
-                &format!("sds{id}/theta{i}"),
-                0,
+                &format!("{theta_prefix}theta{i}"),
+                theta_gen,
                 &params.theta_dims(i),
                 params.theta(i),
             )?);
@@ -783,7 +880,9 @@ impl<'r> SparseDeviceState<'r> {
             rt,
             id,
             gen_w: 0,
-            gen_theta: 0,
+            theta_prefix,
+            theta_gen,
+            theta_private,
             b,
             n,
             ni,
@@ -821,15 +920,20 @@ impl<'r> SparseDeviceState<'r> {
         }
     }
 
-    /// Re-upload θ after an optimizer step (tiles untouched).
+    /// Re-upload θ after an optimizer step (tiles untouched). Only valid
+    /// on a private θ namespace — see [`DeviceState::refresh_theta`].
     pub fn refresh_theta(&mut self, params: &Params) -> Result<()> {
         assert_eq!(params.k, self.k, "embedding dim changed");
+        assert!(
+            self.theta_private,
+            "refresh_theta on a shared ThetaCache namespace; bump the cache and rebuild instead"
+        );
         let t0 = Instant::now();
-        self.gen_theta += 1;
+        self.theta_gen += 1;
         for i in 0..7 {
             self.theta[i] = self.rt.upload_keyed(
-                &format!("sds{}/theta{i}", self.id),
-                self.gen_theta,
+                &format!("{}theta{i}", self.theta_prefix),
+                self.theta_gen,
                 &params.theta_dims(i),
                 params.theta(i),
             )?;
@@ -1165,10 +1269,23 @@ pub enum AnyDeviceState<'r> {
 impl<'r> AnyDeviceState<'r> {
     /// Upload device state matching the set's storage mode.
     pub fn new(rt: &'r Runtime, params: &Params, set: &mut ShardSet) -> Result<AnyDeviceState<'r>> {
+        AnyDeviceState::new_in(rt, params, set, None)
+    }
+
+    /// Like [`AnyDeviceState::new`], but θ goes through a shared
+    /// [`ThetaCache`] when given (see [`DeviceState::new_in`]).
+    pub fn new_in(
+        rt: &'r Runtime,
+        params: &Params,
+        set: &mut ShardSet,
+        theta_cache: Option<&ThetaCache>,
+    ) -> Result<AnyDeviceState<'r>> {
         match set {
-            ShardSet::Dense(sh) => Ok(AnyDeviceState::Dense(DeviceState::new(rt, params, sh)?)),
+            ShardSet::Dense(sh) => {
+                Ok(AnyDeviceState::Dense(DeviceState::new_in(rt, params, sh, theta_cache)?))
+            }
             ShardSet::Sparse(sh) => {
-                Ok(AnyDeviceState::Sparse(SparseDeviceState::new(rt, params, sh)?))
+                Ok(AnyDeviceState::Sparse(SparseDeviceState::new_in(rt, params, sh, theta_cache)?))
             }
         }
     }

@@ -206,6 +206,11 @@ pub fn solve_scenario(
 }
 
 /// Solve the MVC instance `g` with the pretrained `params` on `p` shards.
+///
+/// Deprecated in docs: a thin alias of [`solve_scenario`] with
+/// [`Scenario::Mvc`], kept for the paper-era callers/tests. New code
+/// (including `oggm infer`, which takes `--scenario`) should call
+/// `solve_scenario` directly.
 pub fn solve_mvc(
     rt: &Runtime,
     cfg: &InferCfg,

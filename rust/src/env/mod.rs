@@ -72,6 +72,10 @@ pub enum Scenario {
 }
 
 impl Scenario {
+    /// All scenarios, in `Ord` order — the (scenario, bucket) grouping
+    /// order of the batch queue and the service's open packs.
+    pub const ALL: [Scenario; 3] = [Scenario::Mvc, Scenario::MaxCut, Scenario::Mis];
+
     /// Parse a scenario name (`mvc` | `maxcut` | `mis`).
     pub fn parse(s: &str) -> anyhow::Result<Scenario> {
         match s.to_ascii_lowercase().as_str() {

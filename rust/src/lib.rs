@@ -31,5 +31,8 @@ pub mod runtime;
 pub mod coordinator;
 /// Graph-level batched solve engine and its job-queue front-end.
 pub mod batch;
+/// Persistent solver service: incremental job admission, streaming
+/// outcomes, unified `Options` (DESIGN.md §8).
+pub mod service;
 /// Closed-form performance/memory analysis helpers (paper §5).
 pub mod analysis;

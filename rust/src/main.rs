@@ -3,9 +3,11 @@
 //! Subcommands:
 //!   info                         print artifact/manifest + device info
 //!   train  [--opts]              distributed RL training (Alg. 5)
-//!   infer  [--opts]              distributed RL inference (Alg. 4)
+//!   infer  [--opts]              distributed RL inference (Alg. 4, --scenario)
 //!   solve  [--opts]              classical baselines (exact / greedy / 2-approx)
 //!   batch-solve [--opts]         batched inference over a job manifest (§Batch)
+//!   serve  [--opts]              persistent solver service: job lines in,
+//!                                JSONL outcomes streamed out (DESIGN.md §8)
 
 use oggm::util::cli::Args;
 
@@ -18,9 +20,10 @@ fn main() {
         "infer" => oggm::coordinator::cmd::cmd_infer(&args),
         "solve" => oggm::coordinator::cmd::cmd_solve(&args),
         "batch-solve" => oggm::coordinator::cmd::cmd_batch_solve(&args),
+        "serve" => oggm::coordinator::cmd::cmd_serve(&args),
         _ => {
             eprintln!(
-                "usage: oggm <info|train|infer|solve|batch-solve> [--key value ...]\n\
+                "usage: oggm <info|train|infer|solve|batch-solve|serve> [--key value ...]\n\
                  see README.md for options"
             );
             Ok(())

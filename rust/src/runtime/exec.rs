@@ -258,6 +258,17 @@ impl Runtime {
         self.bufs.borrow().len()
     }
 
+    /// Total f32 payload bytes of the live keyed device buffers — the
+    /// device-resident working set a warm service holds between requests
+    /// (surfaced by `oggm serve` and `bench_queue`).
+    pub fn keyed_bytes(&self) -> u64 {
+        self.bufs
+            .borrow()
+            .values()
+            .map(|(_, dims, _)| 4 * dims.iter().product::<usize>() as u64)
+            .sum()
+    }
+
     /// Fetch a device buffer to host (d2h accounted).
     pub fn fetch(&self, buf: &xla::PjRtBuffer) -> Result<Vec<f32>> {
         let t0 = Instant::now();

@@ -1,0 +1,490 @@
+//! The solver service: a persistent front door over the batched solve
+//! engine (DESIGN.md §8).
+//!
+//! Where `batch::run_queue` is one-shot — every job up front, solve
+//! everything, report at the end — a [`Service`] is a long-lived session
+//! that owns the warm state heavy solve traffic needs:
+//!
+//! * **Incremental admission** — [`Service::submit`] drops each job into an
+//!   *open pack* keyed by (scenario, compiled bucket). A pack launches the
+//!   moment it fills to the largest compiled batch capacity
+//!   ([`LaunchPolicy::OnFill`]), when an optional max-wait expires, or at
+//!   [`Service::flush`]. Admission errors (no compiled bucket fits the
+//!   graph) surface per job at `submit`, with the job id in the message.
+//! * **Streaming outcomes** — finished packs push one [`JobEvent`] per job
+//!   into a ready queue that [`Service::poll`] drains, so callers see
+//!   results while later jobs are still being admitted. A pack-level solve
+//!   failure becomes a contextful per-job error event, never a panic.
+//! * **Warm caches** — compiled executables live in the [`Runtime`], and θ
+//!   is published once through a service-owned
+//!   [`ThetaCache`](crate::coordinator::fwd::ThetaCache), so every pack
+//!   after the first skips the θ upload entirely (`rust/tests/service.rs`
+//!   asserts a warm drain moves strictly fewer h2d bytes than a cold one).
+//!
+//! Configuration comes from one builder-style [`Options`] shared with every
+//! CLI subcommand; `batch::run_queue` is a thin compatibility wrapper over
+//! this type (submit all → flush → drain, [`LaunchPolicy::OnFlush`]).
+
+/// The unified options layer (`Options`, `LaunchPolicy`).
+pub mod options;
+
+pub use options::{LaunchPolicy, Options};
+
+use crate::batch::queue::{Job, JobOutcome, PackStat};
+use crate::batch::solve::solve_pack_in;
+use crate::coordinator::fwd::ThetaCache;
+use crate::env::Scenario;
+use crate::graph::Graph;
+use crate::model::Params;
+use crate::runtime::Runtime;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::collections::btree_map::Entry;
+use std::collections::{BTreeMap, VecDeque};
+use std::time::Instant;
+
+/// Service-assigned job handle, monotonically numbered in admission order
+/// (so it doubles as the submission index).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct JobId(u64);
+
+impl JobId {
+    /// The admission index (0 = first job submitted to this service).
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+impl std::fmt::Display for JobId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "#{}", self.0)
+    }
+}
+
+/// One streamed per-job result: the outcome, or a contextful error for
+/// jobs whose pack failed to solve.
+#[derive(Debug, Clone)]
+pub struct JobEvent {
+    /// Service-assigned handle (as returned by [`Service::submit`]).
+    pub job: JobId,
+    /// Caller-facing id (echoed from the submitted [`Job`]).
+    pub id: String,
+    /// Scenario the job ran under.
+    pub scenario: Scenario,
+    /// The outcome, or the pack's error with job/pack context.
+    pub result: Result<JobOutcome, String>,
+}
+
+impl JobEvent {
+    /// Render as one `oggm serve` JSONL line: the [`JobOutcome`] object
+    /// plus the service `job` handle, or `{id, job, scenario, error}` for
+    /// failures (schema in README §serve).
+    pub fn to_json(&self) -> Json {
+        match &self.result {
+            Ok(o) => o.to_json().set("job", self.job.0),
+            Err(e) => Json::obj()
+                .set("id", self.id.as_str())
+                .set("job", self.job.0)
+                .set("scenario", self.scenario.name())
+                .set("error", e.as_str()),
+        }
+    }
+}
+
+/// Ascending node ids of a per-graph solution mask.
+fn solution_ids(mask: &[bool]) -> Vec<usize> {
+    mask.iter().enumerate().filter(|(_, &b)| b).map(|(v, _)| v).collect()
+}
+
+/// A not-yet-launched job riding in an open pack.
+#[derive(Debug)]
+struct Pending {
+    job: JobId,
+    id: String,
+    graph: Graph,
+}
+
+/// An open pack: jobs of one (scenario, bucket) waiting to fill.
+#[derive(Debug)]
+struct OpenPack {
+    members: Vec<Pending>,
+    opened: Instant,
+    /// Largest compiled batch capacity for the key's (bucket, P) — the
+    /// fill threshold and the flush-time chunk size.
+    max_cap: usize,
+}
+
+/// A persistent solver service session. See the module docs for the
+/// lifecycle; construction is [`Service::new`] from [`Options`] (CLI /
+/// library callers) or [`Service::with_cfg`] from a raw
+/// [`BatchCfg`](crate::batch::BatchCfg) (the `run_queue` compatibility
+/// wrapper, which must preserve an exact cfg including its cost model).
+pub struct Service<'r> {
+    rt: &'r Runtime,
+    params: Params,
+    cfg: crate::batch::BatchCfg,
+    launch: LaunchPolicy,
+    max_wait: Option<f64>,
+    /// Stop solving after the first pack-level error: later launches emit
+    /// skipped-error events instead of running (the `run_queue` wrapper's
+    /// historical fail-fast).
+    abort_on_error: bool,
+    aborted: bool,
+    theta: ThetaCache,
+    next_job: u64,
+    /// Packs launched so far (successful or failed) — the pack-index
+    /// source. `packs` holds stats for successful packs only, so its
+    /// length would reuse an index after a failure.
+    launched: usize,
+    open: BTreeMap<(Scenario, usize), OpenPack>,
+    ready: VecDeque<JobEvent>,
+    packs: Vec<PackStat>,
+}
+
+impl<'r> Service<'r> {
+    /// Open a service session over a warm runtime with the given options.
+    pub fn new(rt: &'r Runtime, params: Params, opts: &Options) -> Service<'r> {
+        let mut svc = Service::with_cfg(rt, params, crate::batch::BatchCfg::from(opts));
+        svc.launch = opts.launch;
+        svc.max_wait = opts.max_wait;
+        svc
+    }
+
+    /// Open a service session from an exact [`BatchCfg`](crate::batch::BatchCfg)
+    /// (launch policy [`LaunchPolicy::OnFill`], no max-wait; override with
+    /// [`Service::launch_policy`]).
+    pub fn with_cfg(rt: &'r Runtime, params: Params, cfg: crate::batch::BatchCfg) -> Service<'r> {
+        Service {
+            rt,
+            params,
+            cfg,
+            launch: LaunchPolicy::OnFill,
+            max_wait: None,
+            abort_on_error: false,
+            aborted: false,
+            theta: ThetaCache::new(rt),
+            next_job: 0,
+            launched: 0,
+            open: BTreeMap::new(),
+            ready: VecDeque::new(),
+            packs: Vec::new(),
+        }
+    }
+
+    /// Override the pack-launch policy (builder style).
+    pub fn launch_policy(mut self, launch: LaunchPolicy) -> Service<'r> {
+        self.launch = launch;
+        self
+    }
+
+    /// Stop solving after the first pack-level error (builder style):
+    /// later launches emit "skipped" error events instead of running their
+    /// packs. The one-shot `run_queue` wrapper sets this so an early pack
+    /// failure does not burn device time solving packs whose outcomes the
+    /// failed call will discard; a streaming service keeps the default
+    /// (false) and serves every pack independently.
+    pub fn fail_fast(mut self, on: bool) -> Service<'r> {
+        self.abort_on_error = on;
+        self
+    }
+
+    /// Admit one job. Errors (no compiled bucket fits the graph at this P)
+    /// are returned here with the job id in the context — the job is not
+    /// admitted and no event will be emitted for it. On success the job is
+    /// in an open pack; under [`LaunchPolicy::OnFill`] a pack that just
+    /// filled to compiled capacity launches before `submit` returns, so
+    /// its outcomes are already pollable.
+    pub fn submit(&mut self, job: Job) -> Result<JobId> {
+        let p = self.cfg.engine.p;
+        let bucket = self
+            .rt
+            .manifest
+            .bucket_for_any_batch(job.graph.n, p)
+            .with_context(|| format!("job '{}' (|V|={}) not admitted", job.id, job.graph.n))?;
+        let key = (job.scenario, bucket);
+        // The capacity lookup only matters when this key opens a new pack;
+        // an existing open pack already carries it.
+        let open = match self.open.entry(key) {
+            Entry::Occupied(e) => e.into_mut(),
+            Entry::Vacant(v) => {
+                let max_cap = self
+                    .rt
+                    .manifest
+                    .batch_sizes(bucket, bucket / p)
+                    .last()
+                    .copied()
+                    .with_context(|| {
+                        format!(
+                            "job '{}': no compiled batch capacities at bucket N={bucket}, P={p} \
+                             (manifest inconsistent: the bucket lookup accepted it)",
+                            job.id
+                        )
+                    })?;
+                v.insert(OpenPack { members: Vec::new(), opened: Instant::now(), max_cap })
+            }
+        };
+        let jid = JobId(self.next_job);
+        self.next_job += 1;
+        open.members.push(Pending { job: jid, id: job.id, graph: job.graph });
+        if self.launch == LaunchPolicy::OnFill && open.members.len() >= open.max_cap {
+            let pack = self.open.remove(&key).expect("open pack just inserted");
+            self.launch_chunks(key.0, key.1, pack);
+        }
+        self.tick();
+        Ok(jid)
+    }
+
+    /// Launch every open pack whose max-wait expired (no-op without a
+    /// max-wait policy). Called by `submit`; long-lived callers with idle
+    /// gaps (e.g. `oggm serve` between input lines) call it directly.
+    /// Under [`LaunchPolicy::OnFlush`] this is a no-op — that policy's
+    /// contract is "nothing launches before `flush()`", and the
+    /// deterministic flush-time grouping the `run_queue` wrapper relies on
+    /// must not be perturbed by a deadline.
+    pub fn tick(&mut self) {
+        if self.launch == LaunchPolicy::OnFlush {
+            return;
+        }
+        let Some(wait) = self.max_wait else { return };
+        let due: Vec<(Scenario, usize)> = self
+            .open
+            .iter()
+            .filter(|(_, pack)| pack.opened.elapsed().as_secs_f64() >= wait)
+            .map(|(&k, _)| k)
+            .collect();
+        for key in due {
+            let pack = self.open.remove(&key).expect("due key read from the map");
+            self.launch_chunks(key.0, key.1, pack);
+        }
+    }
+
+    /// Launch every open pack, in deterministic (scenario, bucket) key
+    /// order, chunking oversize [`LaunchPolicy::OnFlush`] groups to the
+    /// compiled capacity — exactly `run_queue`'s historical grouping.
+    pub fn flush(&mut self) {
+        let open = std::mem::take(&mut self.open);
+        for ((scenario, bucket), pack) in open {
+            self.launch_chunks(scenario, bucket, pack);
+        }
+    }
+
+    /// Pop the next streamed outcome, if any pack has finished since the
+    /// last poll.
+    pub fn poll(&mut self) -> Option<JobEvent> {
+        self.ready.pop_front()
+    }
+
+    /// Flush open packs and take every ready event (the "solve whatever is
+    /// left and give me everything" path).
+    pub fn drain(&mut self) -> Vec<JobEvent> {
+        self.flush();
+        self.ready.drain(..).collect()
+    }
+
+    /// Jobs admitted but not yet solved (riding in open packs).
+    pub fn pending(&self) -> usize {
+        self.open.values().map(|p| p.members.len()).sum()
+    }
+
+    /// Events ready to poll right now.
+    pub fn ready_len(&self) -> usize {
+        self.ready.len()
+    }
+
+    /// Jobs admitted over the session so far.
+    pub fn submitted(&self) -> u64 {
+        self.next_job
+    }
+
+    /// Per-pack statistics, in launch order (grows as packs finish;
+    /// failed packs have no stats row, so this can be shorter than
+    /// [`Service::launched`]).
+    pub fn packs(&self) -> &[PackStat] {
+        &self.packs
+    }
+
+    /// Packs launched so far, successful or failed.
+    pub fn launched(&self) -> usize {
+        self.launched
+    }
+
+    /// Take ownership of the per-pack statistics accumulated so far
+    /// (the `run_queue` wrapper builds its report from these).
+    pub fn take_packs(&mut self) -> Vec<PackStat> {
+        std::mem::take(&mut self.packs)
+    }
+
+    /// The parameters this service serves.
+    pub fn params(&self) -> &Params {
+        &self.params
+    }
+
+    /// The runtime this service runs on.
+    pub fn runtime(&self) -> &'r Runtime {
+        self.rt
+    }
+
+    /// Launch `pack`'s members as one or more solve packs of at most
+    /// `max_cap` jobs, preserving admission order.
+    fn launch_chunks(&mut self, scenario: Scenario, bucket: usize, pack: OpenPack) {
+        let mut members = pack.members;
+        while !members.is_empty() {
+            let rest = if members.len() > pack.max_cap {
+                members.split_off(pack.max_cap)
+            } else {
+                Vec::new()
+            };
+            let chunk = std::mem::replace(&mut members, rest);
+            self.launch(scenario, bucket, chunk);
+        }
+    }
+
+    /// Solve one chunk as a pack; emit one event per member. A pack-level
+    /// failure becomes a per-job error event with pack context (the
+    /// service boundary never panics on a bad pack).
+    fn launch(&mut self, scenario: Scenario, bucket: usize, chunk: Vec<Pending>) {
+        debug_assert!(!chunk.is_empty(), "launch of an empty chunk");
+        if self.aborted {
+            // Fail-fast mode after an earlier pack error: skip the solve,
+            // but still emit one event per job so nothing is lost.
+            for m in chunk {
+                self.ready.push_back(JobEvent {
+                    job: m.job,
+                    id: m.id,
+                    scenario,
+                    result: Err("skipped: an earlier pack failed (fail-fast)".into()),
+                });
+            }
+            return;
+        }
+        let pack_idx = self.launched;
+        self.launched += 1;
+        let mut meta = Vec::with_capacity(chunk.len());
+        let mut graphs = Vec::with_capacity(chunk.len());
+        for m in chunk {
+            meta.push((m.job, m.id, m.graph.n, m.graph.m));
+            graphs.push(m.graph);
+        }
+        let res = solve_pack_in(
+            self.rt,
+            &self.cfg,
+            &self.params,
+            scenario,
+            graphs,
+            bucket,
+            Some(&self.theta),
+        );
+        match res {
+            Ok(res) => {
+                for (slot, (job, id, nodes, edges)) in meta.into_iter().enumerate() {
+                    let r = &res.per_graph[slot];
+                    self.ready.push_back(JobEvent {
+                        job,
+                        id: id.clone(),
+                        scenario,
+                        result: Ok(JobOutcome {
+                            id,
+                            scenario,
+                            nodes,
+                            edges,
+                            pack: pack_idx,
+                            solution: solution_ids(&r.solution),
+                            solution_size: r.solution_size,
+                            objective: r.objective,
+                            valid: r.valid,
+                            evaluations: r.evaluations,
+                            selections: r.selections,
+                        }),
+                    });
+                }
+                self.packs.push(PackStat {
+                    pack: pack_idx,
+                    scenario,
+                    bucket_n: bucket,
+                    jobs: res.per_graph.len(),
+                    capacity: res.initial_capacity,
+                    rounds: res.rounds,
+                    repacks: res.repacks,
+                    sim_time: res.sim_total,
+                    wall_time: res.wall_total,
+                    comm_bytes: res.timing.comm_bytes,
+                    exec: res.exec,
+                });
+            }
+            Err(e) => {
+                if self.abort_on_error {
+                    self.aborted = true;
+                }
+                let msg = format!("pack {pack_idx} ({scenario}, N={bucket}): {e:#}");
+                for (job, id, _, _) in meta {
+                    self.ready.push_back(JobEvent {
+                        job,
+                        id,
+                        scenario,
+                        result: Err(msg.clone()),
+                    });
+                }
+            }
+        }
+    }
+}
+
+impl Drop for Service<'_> {
+    fn drop(&mut self) {
+        self.theta.evict(self.rt);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn outcome() -> JobOutcome {
+        JobOutcome {
+            id: "a".into(),
+            scenario: Scenario::Mis,
+            nodes: 20,
+            edges: 31,
+            pack: 2,
+            solution: vec![0, 5],
+            solution_size: 2,
+            objective: 2.0,
+            valid: true,
+            evaluations: 2,
+            selections: 2,
+        }
+    }
+
+    #[test]
+    fn event_json_done_and_failed() {
+        let ev = JobEvent {
+            job: JobId(7),
+            id: "a".into(),
+            scenario: Scenario::Mis,
+            result: Ok(outcome()),
+        };
+        let s = ev.to_json().render();
+        assert!(s.contains("\"id\":\"a\""), "{s}");
+        assert!(s.contains("\"job\":7"), "{s}");
+        assert!(s.contains("\"solution\":[0,5]"), "{s}");
+        assert!(s.contains("\"valid\":true"), "{s}");
+        assert!(!s.contains("error"), "{s}");
+
+        let ev = JobEvent {
+            job: JobId(8),
+            id: "b".into(),
+            scenario: Scenario::Mvc,
+            result: Err("pack 1 (mvc, N=24): boom".into()),
+        };
+        let s = ev.to_json().render();
+        assert!(s.contains("\"error\":\"pack 1 (mvc, N=24): boom\""), "{s}");
+        assert!(s.contains("\"job\":8"), "{s}");
+        assert!(!s.contains("solution"), "{s}");
+    }
+
+    #[test]
+    fn job_id_is_the_admission_index() {
+        assert_eq!(JobId(3).index(), 3);
+        assert_eq!(format!("{}", JobId(3)), "#3");
+    }
+}

@@ -1,0 +1,322 @@
+//! The unified options layer: ONE builder-style configuration type that
+//! every front door (CLI subcommands, [`crate::service::Service`], library
+//! callers) fills once and lowers into the per-loop configs (`InferCfg`,
+//! `TrainCfg`, `BatchCfg`) via `From` conversions — so p/l/storage/policy/
+//! compaction/seed plumbing cannot drift between entry points.
+//!
+//! `Options::from_args` is the single CLI parser: `--p`, `--l`, `--multi`,
+//! `--sparse`, `--no-compact`, `--fresh`, `--seed`, `--scenario`, `--lr`,
+//! `--tau`, `--batch`, `--max-wait`. Seed is kept as `Option<u64>` so each
+//! subcommand can preserve its historical default stream (`seed_or`).
+
+use crate::batch::BatchCfg;
+use crate::coordinator::engine::EngineCfg;
+use crate::coordinator::infer::InferCfg;
+use crate::coordinator::selection::SelectionPolicy;
+use crate::coordinator::shard::Storage;
+use crate::coordinator::train::TrainCfg;
+use crate::env::Scenario;
+use crate::util::cli::Args;
+use anyhow::Result;
+
+/// When the service launches a non-full open pack (full packs always
+/// launch immediately under [`LaunchPolicy::OnFill`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum LaunchPolicy {
+    /// Launch a pack the moment it fills to the largest compiled batch
+    /// capacity; partial packs wait for `flush()` / the max-wait policy.
+    /// The incremental service default: callers see outcomes stream in
+    /// while later jobs are still being admitted.
+    #[default]
+    OnFill,
+    /// Never launch before `flush()`; open packs may exceed the compiled
+    /// capacity and are chunked at flush time, in deterministic
+    /// (scenario, bucket) key order. This reproduces the one-shot
+    /// `batch::run_queue` grouping (and its pack numbering) exactly, which
+    /// is how the compatibility wrapper pins the redesign bit-exact.
+    OnFlush,
+}
+
+/// Unified solver options (see module docs). Build with the fluent setters,
+/// then lower with `InferCfg::from(&opts)` / `BatchCfg::from(&opts)` /
+/// `TrainCfg::from(&opts)`, or hand the whole thing to `Service::new`.
+#[derive(Debug, Clone)]
+pub struct Options {
+    /// Simulated device count P.
+    pub p: usize,
+    /// Embedding layers L.
+    pub l: usize,
+    /// Node-selection policy (single / adaptive multi).
+    pub policy: SelectionPolicy,
+    /// Per-shard storage mode (dense oracle or CSR tiles, DESIGN.md §7).
+    pub storage: Storage,
+    /// Early-exit pack compaction (batched paths only).
+    pub compact: bool,
+    /// Hold θ + adjacency state on device across steps (DESIGN.md §6).
+    pub device_resident: bool,
+    /// Elide the exact layer-0 message stage.
+    pub skip_zero_layer: bool,
+    /// Seed, when given explicitly (`seed_or` supplies the per-subcommand
+    /// historical default so RNG streams stay decorrelated).
+    pub seed: Option<u64>,
+    /// Scenario override: forces every job/solve to this scenario
+    /// (`oggm infer --scenario`, `oggm serve --scenario`).
+    pub scenario: Option<Scenario>,
+    /// Padded training bucket N (None = the lowering default, 24 — callers
+    /// that know their graphs set it, e.g. `cmd_train` from `--n`).
+    pub bucket_n: Option<usize>,
+    /// Learning rate (training).
+    pub lr: f32,
+    /// Repeated gradient iterations τ (§4.5.2).
+    pub tau: usize,
+    /// Replay minibatch size B (training).
+    pub batch: usize,
+    /// Service pack-launch policy.
+    pub launch: LaunchPolicy,
+    /// Service max-wait seconds: an open pack older than this launches on
+    /// the next `submit`/`tick` even if not full (None = wait for fill or
+    /// flush).
+    pub max_wait: Option<f64>,
+}
+
+impl Default for Options {
+    fn default() -> Options {
+        Options {
+            p: 1,
+            l: 2,
+            policy: SelectionPolicy::Single,
+            storage: Storage::Dense,
+            compact: true,
+            device_resident: true,
+            skip_zero_layer: true,
+            seed: None,
+            scenario: None,
+            bucket_n: None,
+            lr: 1e-3,
+            tau: 1,
+            batch: 8,
+            launch: LaunchPolicy::OnFill,
+            max_wait: None,
+        }
+    }
+}
+
+impl Options {
+    /// Start from the defaults (P=1, L=2, single-select, dense, compaction
+    /// and device residency on).
+    pub fn new() -> Options {
+        Options::default()
+    }
+
+    /// Parse every shared CLI option off `args` — the one front-door
+    /// parser all `oggm` subcommands use. Unknown scenario names error;
+    /// options not on the command line keep their defaults.
+    pub fn from_args(args: &Args) -> Result<Options> {
+        let mut o = Options::new();
+        o.p = args.get_usize("p", o.p);
+        o.l = args.get_usize("l", o.l);
+        if args.has_flag("multi") {
+            o.policy = SelectionPolicy::AdaptiveMulti;
+        }
+        if args.has_flag("sparse") {
+            o.storage = Storage::Sparse;
+        }
+        if args.has_flag("no-compact") {
+            o.compact = false;
+        }
+        if args.has_flag("fresh") {
+            o.device_resident = false;
+        }
+        o.seed = args.get("seed").map(|_| args.get_u64("seed", 0));
+        o.scenario = match args.get("scenario") {
+            Some(s) => Some(Scenario::parse(s)?),
+            None => None,
+        };
+        o.lr = args.get_f64("lr", o.lr as f64) as f32;
+        o.tau = args.get_usize("tau", o.tau);
+        o.batch = args.get_usize("batch", o.batch);
+        o.max_wait = args.get("max-wait").map(|_| args.get_f64("max-wait", 0.0));
+        Ok(o)
+    }
+
+    /// Set the device count P.
+    pub fn p(mut self, p: usize) -> Options {
+        self.p = p;
+        self
+    }
+
+    /// Set the embedding layer count L.
+    pub fn l(mut self, l: usize) -> Options {
+        self.l = l;
+        self
+    }
+
+    /// Set the selection policy.
+    pub fn policy(mut self, policy: SelectionPolicy) -> Options {
+        self.policy = policy;
+        self
+    }
+
+    /// Set the storage mode.
+    pub fn storage(mut self, storage: Storage) -> Options {
+        self.storage = storage;
+        self
+    }
+
+    /// Enable/disable early-exit compaction.
+    pub fn compact(mut self, on: bool) -> Options {
+        self.compact = on;
+        self
+    }
+
+    /// Set an explicit seed.
+    pub fn seed(mut self, seed: u64) -> Options {
+        self.seed = Some(seed);
+        self
+    }
+
+    /// Force every job to one scenario.
+    pub fn scenario(mut self, scenario: Scenario) -> Options {
+        self.scenario = Some(scenario);
+        self
+    }
+
+    /// Set the padded training bucket N.
+    pub fn bucket(mut self, bucket_n: usize) -> Options {
+        self.bucket_n = Some(bucket_n);
+        self
+    }
+
+    /// Set the service pack-launch policy.
+    pub fn launch(mut self, launch: LaunchPolicy) -> Options {
+        self.launch = launch;
+        self
+    }
+
+    /// Set the service max-wait seconds.
+    pub fn max_wait(mut self, secs: f64) -> Options {
+        self.max_wait = Some(secs);
+        self
+    }
+
+    /// The seed, or the calling subcommand's historical default (train 1,
+    /// infer 2, solve 3, batch/serve 4 — distinct so their RNG streams
+    /// never alias).
+    pub fn seed_or(&self, default: u64) -> u64 {
+        self.seed.unwrap_or(default)
+    }
+}
+
+impl From<&Options> for EngineCfg {
+    fn from(o: &Options) -> EngineCfg {
+        EngineCfg::new(o.p, o.l)
+    }
+}
+
+impl From<&Options> for InferCfg {
+    fn from(o: &Options) -> InferCfg {
+        InferCfg {
+            engine: EngineCfg::from(o),
+            policy: o.policy,
+            skip_zero_layer: o.skip_zero_layer,
+            device_resident: o.device_resident,
+            storage: o.storage,
+        }
+    }
+}
+
+impl From<&Options> for BatchCfg {
+    fn from(o: &Options) -> BatchCfg {
+        BatchCfg {
+            engine: EngineCfg::from(o),
+            policy: o.policy,
+            skip_zero_layer: o.skip_zero_layer,
+            compact: o.compact,
+            device_resident: o.device_resident,
+            storage: o.storage,
+        }
+    }
+}
+
+impl From<&Options> for TrainCfg {
+    fn from(o: &Options) -> TrainCfg {
+        let mut cfg = TrainCfg::new(o.p, o.bucket_n.unwrap_or(24));
+        cfg.engine = EngineCfg::from(o);
+        cfg.seed = o.seed_or(1);
+        cfg.hyper.lr = o.lr;
+        cfg.hyper.grad_iters = o.tau;
+        cfg.hyper.batch_size = o.batch;
+        cfg.skip_zero_layer = o.skip_zero_layer;
+        cfg.device_resident = o.device_resident;
+        cfg.storage = o.storage;
+        cfg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn from_args_covers_the_shared_surface() {
+        let a = parse("--p 2 --l 3 --multi --sparse --no-compact --seed 9 --scenario mis \
+                       --lr 0.01 --tau 4 --batch 16 --max-wait 0.5");
+        let o = Options::from_args(&a).unwrap();
+        assert_eq!(o.p, 2);
+        assert_eq!(o.l, 3);
+        assert_eq!(o.policy, SelectionPolicy::AdaptiveMulti);
+        assert_eq!(o.storage, Storage::Sparse);
+        assert!(!o.compact);
+        assert_eq!(o.seed, Some(9));
+        assert_eq!(o.seed_or(4), 9);
+        assert_eq!(o.scenario, Some(Scenario::Mis));
+        assert_eq!(o.lr, 0.01);
+        assert_eq!(o.tau, 4);
+        assert_eq!(o.batch, 16);
+        assert_eq!(o.max_wait, Some(0.5));
+    }
+
+    #[test]
+    fn defaults_match_the_historical_cfgs() {
+        let o = Options::from_args(&parse("")).unwrap();
+        assert_eq!(o.seed, None);
+        assert_eq!(o.seed_or(2), 2);
+        // Lowerings agree with the per-loop constructors the subcommands
+        // used to call directly.
+        let i = InferCfg::from(&o);
+        let d = InferCfg::new(1, 2);
+        assert_eq!(i.engine.p, d.engine.p);
+        assert_eq!(i.engine.l, d.engine.l);
+        assert_eq!(i.policy, d.policy);
+        assert_eq!(i.storage, d.storage);
+        assert_eq!(i.device_resident, d.device_resident);
+        assert_eq!(i.skip_zero_layer, d.skip_zero_layer);
+        let b = BatchCfg::from(&o);
+        let db = BatchCfg::new(1, 2);
+        assert_eq!(b.compact, db.compact);
+        assert_eq!(b.policy, db.policy);
+        let t = TrainCfg::from(&o.clone().bucket(36).seed(7));
+        assert_eq!(t.bucket_n, 36);
+        assert_eq!(t.seed, 7);
+        assert_eq!(t.hyper.lr, 1e-3);
+        assert_eq!(t.hyper.grad_iters, 1);
+        assert_eq!(t.hyper.batch_size, 8);
+    }
+
+    #[test]
+    fn fresh_flag_disables_residency_everywhere() {
+        let o = Options::from_args(&parse("--fresh")).unwrap();
+        assert!(!InferCfg::from(&o).device_resident);
+        assert!(!BatchCfg::from(&o).device_resident);
+        assert!(!TrainCfg::from(&o).device_resident);
+    }
+
+    #[test]
+    fn bad_scenario_errors() {
+        assert!(Options::from_args(&parse("--scenario tsp")).is_err());
+    }
+}

@@ -1,0 +1,260 @@
+//! Service invariants (ISSUE 4 acceptance):
+//!  - `Service` submit-in-any-order + flush yields bit-identical per-job
+//!    outcomes to `run_queue` for mixed MVC/MIS/MaxCut jobs at P in {1, 2},
+//!    dense and sparse (solutions, objectives, eval counts — everything
+//!    except the pack index, which legitimately depends on launch order);
+//!  - a second drain on a warm `Service` re-uploads strictly fewer h2d
+//!    bytes than the cold first drain (the shared-θ residency);
+//!  - OnFill packs stream outcomes before flush;
+//!  - admission errors are contextful and carry the job id.
+//!
+//! Runtime-dependent tests skip when artifacts are not built (same
+//! convention as e2e.rs / batch_equivalence.rs).
+
+// The shared bench/test job-set generator (`mixed_jobs`) — one source so
+// what bench_queue measures is exactly the mix these tests pin.
+#[path = "../benches/common.rs"]
+mod common;
+
+use common::mixed_jobs;
+use oggm::batch::{run_queue, BatchCfg, Job};
+use oggm::coordinator::shard::Storage;
+use oggm::env::Scenario;
+use oggm::graph::generators;
+use oggm::model::Params;
+use oggm::runtime::Runtime;
+use oggm::service::{LaunchPolicy, Options, Service};
+use oggm::util::rng::Pcg32;
+
+fn setup() -> Option<Runtime> {
+    if !std::path::Path::new("artifacts/manifest.tsv").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(Runtime::new("artifacts").unwrap())
+}
+
+fn has_batch_shapes(rt: &Runtime, bucket: usize, p: usize, b: usize) -> bool {
+    let ok = rt.manifest.batch_sizes(bucket, bucket / p).last().copied().unwrap_or(0) >= b;
+    if !ok {
+        eprintln!(
+            "skipping: no compiled batch-{b} shapes at N={bucket}, P={p} (re-run make artifacts)"
+        );
+    }
+    ok
+}
+
+/// Deterministic order shuffle (fixed odd stride, coprime to len).
+fn permuted<T: Clone>(xs: &[T], stride: usize) -> Vec<T> {
+    (0..xs.len()).map(|i| xs[(i * stride + 1) % xs.len()].clone()).collect()
+}
+
+#[test]
+fn service_matches_run_queue_bit_exact() {
+    let Some(rt) = setup() else { return };
+    let jobs = mixed_jobs(9, 0x5E);
+    let params = Params::init(32, &mut Pcg32::seeded(41));
+    for p in [1usize, 2] {
+        if !has_batch_shapes(&rt, 24, p, 8) {
+            return;
+        }
+        for storage in [Storage::Dense, Storage::Sparse] {
+            // 3 jobs per (scenario, bucket) group open at capacity 4 and
+            // may compact through 2 and 1 — the sparse arm needs shapes at
+            // each of those batch sizes.
+            if storage == Storage::Sparse
+                && [1usize, 2, 4].iter().any(|&b| rt.manifest.sparse_config(b, 24 / p, 32).is_err())
+            {
+                eprintln!("skipping sparse arm: sparse artifacts not compiled at N=24, P={p}");
+                continue;
+            }
+            let mut cfg = BatchCfg::new(p, 2);
+            cfg.storage = storage;
+            let reference = run_queue(&rt, &cfg, &params, &jobs).unwrap();
+
+            // Submit in a different order than the reference saw, then
+            // flush: per-job outcomes must be bit-identical anyway (the
+            // block-diagonal pack has no cross-graph terms, so pack
+            // membership cannot leak into a job's trajectory).
+            let mut svc = Service::with_cfg(&rt, params.clone(), cfg);
+            for job in permuted(&jobs, 4) {
+                svc.submit(job).unwrap();
+            }
+            let events = svc.drain();
+            assert_eq!(events.len(), jobs.len(), "P={p} {storage:?}: event count");
+            for ev in events {
+                let got = ev.result.expect("service job failed");
+                let want = reference
+                    .outcomes
+                    .iter()
+                    .find(|o| o.id == got.id)
+                    .expect("unknown job id in stream");
+                assert_eq!(got.scenario, want.scenario, "job {}", got.id);
+                assert_eq!(got.nodes, want.nodes, "job {}", got.id);
+                assert_eq!(got.edges, want.edges, "job {}", got.id);
+                assert_eq!(
+                    got.solution, want.solution,
+                    "P={p} {storage:?} job {}: solution diverged from run_queue",
+                    got.id
+                );
+                assert_eq!(got.solution_size, want.solution_size, "job {}", got.id);
+                assert_eq!(got.objective, want.objective, "job {}", got.id);
+                assert_eq!(got.valid, want.valid, "job {}", got.id);
+                assert_eq!(got.evaluations, want.evaluations, "job {}", got.id);
+                assert_eq!(got.selections, want.selections, "job {}", got.id);
+            }
+        }
+    }
+}
+
+#[test]
+fn run_queue_wrapper_reproduces_historical_grouping() {
+    // The OnFlush wrapper must reproduce the one-shot grouping exactly:
+    // packs in (scenario, bucket) key order, chunked to the largest
+    // compiled capacity, outcomes in submission order.
+    let Some(rt) = setup() else { return };
+    if !has_batch_shapes(&rt, 24, 1, 8) {
+        return;
+    }
+    let jobs = mixed_jobs(9, 0x77);
+    let params = Params::init(32, &mut Pcg32::seeded(9));
+    let cfg = BatchCfg::new(1, 2);
+    let report = run_queue(&rt, &cfg, &params, &jobs).unwrap();
+    assert_eq!(report.outcomes.len(), jobs.len());
+    for (i, o) in report.outcomes.iter().enumerate() {
+        assert_eq!(o.id, format!("j{i}"), "outcomes out of order");
+    }
+    // 3 scenarios at <= 8 jobs each -> one pack per scenario, in Ord order.
+    assert_eq!(report.packs.len(), 3);
+    let scenarios: Vec<Scenario> = report.packs.iter().map(|p| p.scenario).collect();
+    assert_eq!(scenarios, Scenario::ALL.to_vec());
+    for (i, p) in report.packs.iter().enumerate() {
+        assert_eq!(p.pack, i, "pack numbering must follow key order");
+    }
+}
+
+#[test]
+fn warm_service_re_uploads_less_than_cold() {
+    let Some(rt) = setup() else { return };
+    if !has_batch_shapes(&rt, 24, 1, 8) {
+        return;
+    }
+    let jobs = mixed_jobs(6, 0x91);
+    let params = Params::init(32, &mut Pcg32::seeded(5));
+    let mut svc = Service::with_cfg(&rt, params, BatchCfg::new(1, 2));
+
+    let snap = rt.stats();
+    for job in jobs.clone() {
+        svc.submit(job).unwrap();
+    }
+    let cold_events = svc.drain();
+    let cold = rt.stats().since(&snap);
+    assert!(cold_events.iter().all(|e| e.result.is_ok()));
+    assert!(cold.h2d_bytes > 0, "cold drain moved no bytes");
+
+    // Same jobs again on the SAME service: θ is already device-resident
+    // under the service's ThetaCache, so the second drain must move
+    // strictly fewer h2d bytes (it pays A/S/C uploads but not θ).
+    let snap = rt.stats();
+    for job in jobs.clone() {
+        svc.submit(job).unwrap();
+    }
+    let warm_events = svc.drain();
+    let warm = rt.stats().since(&snap);
+    assert!(warm_events.iter().all(|e| e.result.is_ok()));
+    assert!(
+        warm.h2d_bytes < cold.h2d_bytes,
+        "warm drain did not re-upload less: warm {} vs cold {} h2d bytes",
+        warm.h2d_bytes,
+        cold.h2d_bytes
+    );
+    assert!(warm.cache_hits > cold.cache_hits, "warm drain should hit the θ cache");
+
+    // And the outcomes are identical run to run — warmth is a pure
+    // transfer optimization.
+    for (c, w) in cold_events.iter().zip(&warm_events) {
+        let (c, w) = (c.result.as_ref().unwrap(), w.result.as_ref().unwrap());
+        assert_eq!(c.solution, w.solution, "job {}: warm solve diverged", c.id);
+        assert_eq!(c.evaluations, w.evaluations);
+    }
+}
+
+#[test]
+fn on_fill_streams_before_flush() {
+    let Some(rt) = setup() else { return };
+    if !has_batch_shapes(&rt, 24, 1, 2) {
+        return;
+    }
+    let params = Params::init(32, &mut Pcg32::seeded(3));
+    let max_cap = rt.manifest.batch_sizes(24, 24).last().copied().unwrap();
+    let mut svc = Service::with_cfg(&rt, params, BatchCfg::new(1, 2));
+    let jobs = mixed_jobs(max_cap + 1, 0x13);
+    // All same scenario so they share one open pack.
+    for (i, mut job) in jobs.into_iter().enumerate() {
+        job.scenario = Scenario::Mvc;
+        assert_eq!(svc.submit(job).unwrap().index(), i);
+    }
+    // The first max_cap submissions filled a pack -> it launched and its
+    // outcomes are already pollable; the +1 job still rides an open pack.
+    assert_eq!(svc.ready_len(), max_cap, "filled pack did not stream before flush");
+    assert_eq!(svc.pending(), 1);
+    assert_eq!(svc.packs().len(), 1);
+    let first = svc.poll().unwrap();
+    assert_eq!(first.job.index(), 0, "events stream in admission order");
+    assert!(first.result.is_ok());
+    // Flush solves the straggler.
+    let rest = svc.drain();
+    assert_eq!(rest.len(), max_cap, "{} ready + 1 flushed", max_cap - 1);
+    assert_eq!(svc.pending(), 0);
+    assert_eq!(svc.packs().len(), 2);
+}
+
+#[test]
+fn on_flush_ignores_max_wait() {
+    // OnFlush promises "nothing launches before flush()" — a max-wait
+    // deadline must not perturb it (the run_queue wrapper's bit-exact
+    // grouping depends on this).
+    let Some(rt) = setup() else { return };
+    if !has_batch_shapes(&rt, 24, 1, 2) {
+        return;
+    }
+    let params = Params::init(32, &mut Pcg32::seeded(6));
+    let opts = Options::new().launch(LaunchPolicy::OnFlush).max_wait(0.0);
+    let mut svc = Service::new(&rt, params, &opts);
+    for job in mixed_jobs(4, 0x21) {
+        svc.submit(job).unwrap();
+    }
+    svc.tick();
+    assert_eq!(svc.packs().len(), 0, "OnFlush launched before flush()");
+    assert_eq!(svc.ready_len(), 0);
+    assert_eq!(svc.pending(), 4);
+    let events = svc.drain();
+    assert_eq!(events.len(), 4);
+    assert!(events.iter().all(|e| e.result.is_ok()));
+}
+
+#[test]
+fn admission_error_is_contextful_and_isolated() {
+    let Some(rt) = setup() else { return };
+    if !has_batch_shapes(&rt, 24, 1, 1) {
+        return;
+    }
+    let params = Params::init(32, &mut Pcg32::seeded(8));
+    let mut svc = Service::with_cfg(&rt, params, BatchCfg::new(1, 2));
+    // A graph far above every compiled bucket cannot be admitted; the
+    // error must carry the job id and leave the service usable. (BA keeps
+    // generation O(n·d) at this size.)
+    let huge = generators::barabasi_albert(12_000, 2, &mut Pcg32::seeded(99));
+    let err = svc
+        .submit(Job { id: "whale".into(), scenario: Scenario::Mvc, graph: huge })
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("whale"), "admission error lost the job id: {msg}");
+    assert_eq!(svc.submitted(), 0, "failed admission must not consume a job id");
+
+    let ok = generators::erdos_renyi(20, 0.2, &mut Pcg32::seeded(100));
+    svc.submit(Job { id: "ok".into(), scenario: Scenario::Mvc, graph: ok }).unwrap();
+    let events = svc.drain();
+    assert_eq!(events.len(), 1);
+    assert!(events[0].result.is_ok(), "service unusable after a rejected job");
+}

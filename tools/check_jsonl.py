@@ -1,0 +1,104 @@
+#!/usr/bin/env python3
+"""Validate an `oggm serve` JSONL outcome stream (CI smoke check).
+
+Usage: check_jsonl.py <file> [--allow-missing]
+
+Schema (README §serve): one JSON object per line. Every line carries "id";
+outcome lines add scenario/nodes/edges/pack/solution/solution_size/
+objective/valid/evaluations/selections (+ the service "job" handle), error
+lines carry "error" instead. Exits non-zero on any malformed line, schema
+violation, or invalid solution flag; --allow-missing exits 0 when the file
+does not exist (serve skipped in check mode without artifacts).
+"""
+
+import json
+import sys
+from pathlib import Path
+
+OUTCOME_KEYS = {
+    "scenario": str,
+    "nodes": (int, float),
+    "edges": (int, float),
+    "pack": (int, float),
+    "solution": list,
+    "solution_size": (int, float),
+    "objective": (int, float),
+    "valid": bool,
+    "evaluations": (int, float),
+    "selections": (int, float),
+}
+SCENARIOS = {"mvc", "maxcut", "mis"}
+
+
+def fail(lineno, msg):
+    print(f"check_jsonl: line {lineno}: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def main():
+    args = [a for a in sys.argv[1:] if not a.startswith("--")]
+    flags = {a for a in sys.argv[1:] if a.startswith("--")}
+    if len(args) != 1:
+        print(__doc__, file=sys.stderr)
+        sys.exit(2)
+    path = Path(args[0])
+    if not path.exists():
+        if "--allow-missing" in flags:
+            print(f"check_jsonl: {path} missing, allowed (serve skipped)")
+            sys.exit(0)
+        print(f"check_jsonl: {path} does not exist", file=sys.stderr)
+        sys.exit(1)
+
+    outcomes = errors = 0
+    for lineno, raw in enumerate(path.read_text().splitlines(), start=1):
+        if not raw.strip():
+            fail(lineno, "blank line in JSONL stream")
+        try:
+            obj = json.loads(raw)
+        except json.JSONDecodeError as e:
+            fail(lineno, f"not valid JSON: {e}")
+        if not isinstance(obj, dict):
+            fail(lineno, "line is not a JSON object")
+        if not isinstance(obj.get("id"), str) or not obj["id"]:
+            fail(lineno, "missing/empty 'id'")
+        if "error" in obj:
+            if not isinstance(obj["error"], str) or not obj["error"]:
+                fail(lineno, "'error' must be a non-empty string")
+            errors += 1
+            continue
+        for key, ty in OUTCOME_KEYS.items():
+            if key not in obj:
+                fail(lineno, f"outcome line missing '{key}'")
+            if not isinstance(obj[key], ty) or (ty is not bool and isinstance(obj[key], bool)):
+                fail(lineno, f"'{key}' has wrong type: {obj[key]!r}")
+        if obj["scenario"] not in SCENARIOS:
+            fail(lineno, f"unknown scenario {obj['scenario']!r}")
+        sol = obj["solution"]
+        if any(not isinstance(v, int) or isinstance(v, bool) or v < 0 for v in sol):
+            fail(lineno, "solution must be non-negative integers")
+        if sol != sorted(sol) or len(set(sol)) != len(sol):
+            fail(lineno, "solution must be strictly ascending node ids")
+        if len(sol) != obj["solution_size"]:
+            fail(lineno, "solution_size disagrees with the solution list")
+        if sol and max(sol) >= obj["nodes"]:
+            fail(lineno, "solution node id out of range")
+        if not obj["valid"]:
+            fail(lineno, f"job {obj['id']} reported an invalid solution")
+        outcomes += 1
+
+    if outcomes + errors == 0:
+        print("check_jsonl: stream is empty", file=sys.stderr)
+        sys.exit(1)
+    if errors:
+        # Error lines are schema-valid, but a smoke run must be clean.
+        print(
+            f"check_jsonl: FAIL — {errors} error lines in the stream "
+            f"({outcomes} outcomes were fine)",
+            file=sys.stderr,
+        )
+        sys.exit(1)
+    print(f"check_jsonl: OK ({outcomes} outcomes)")
+
+
+if __name__ == "__main__":
+    main()
