@@ -84,11 +84,11 @@ fn bench_collectives() {
                         let st = timer::Stopwatch::start();
                         for _ in 0..iters {
                             match op {
-                                "all_reduce" => c.all_reduce_sum(&mut buf),
+                                "all_reduce" => c.all_reduce_sum(&mut buf).unwrap(),
                                 "all_gather" => {
-                                    let _ = c.all_gather(&buf[..elems / c.p()]);
+                                    let _ = c.all_gather(&buf[..elems / c.p()]).unwrap();
                                 }
-                                _ => c.barrier(),
+                                _ => c.barrier().unwrap(),
                             }
                         }
                         st.elapsed_s() / iters as f64

@@ -1,0 +1,160 @@
+//! bench_parallel: lockstep vs rank-parallel solve-step wall time (ISSUE 5).
+//!
+//! Solves the same pack (B=4 graphs, dense and sparse) under both engines
+//! at P∈{1,2,4} and reports the wall-clock seconds per shared solve step,
+//! plus the per-rank compute/transfer/collective breakdown — the
+//! reproduction of the paper's spatial-parallelism wall-clock scaling on
+//! the production hot path. The rank engine runs on a warm pool (second
+//! pack of the session), so θ uploads and thread spawns are off the
+//! measured path. Emits BENCH_parallel.json.
+//!
+//! Caveat (EXPERIMENTS.md §Perf): on a single host the PJRT CPU ranks
+//! share cores, so speedups reflect host parallelism, not P devices.
+//!
+//! Check mode: without artifacts (CI containers) the bench prints a skip
+//! notice and exits 0, like the artifact-gated tests.
+
+#[path = "common.rs"]
+mod common;
+
+use oggm::batch::{solve_pack_session, BatchCfg, BatchResult, SessionState};
+use oggm::coordinator::engine::Engine;
+use oggm::coordinator::metrics::Table;
+use oggm::coordinator::shard::Storage;
+use oggm::env::Scenario;
+use oggm::graph::{generators, Graph};
+use oggm::model::Params;
+use oggm::parallel::RankPool;
+use oggm::runtime::Runtime;
+use oggm::util::json::Json;
+use oggm::util::rng::Pcg32;
+
+fn pack_graphs(count: usize, seed: u64) -> Vec<Graph> {
+    let mut rng = Pcg32::seeded(seed);
+    (0..count).map(|_| generators::erdos_renyi(20, 0.25, &mut rng)).collect()
+}
+
+/// One pack solve (cold run warms compiles/θ; the second, warm call with
+/// the same arguments is the measurement).
+fn solve_once(
+    rt: &Runtime,
+    cfg: &BatchCfg,
+    params: &Params,
+    session: SessionState<'_>,
+    seed: u64,
+) -> BatchResult {
+    solve_pack_session(rt, cfg, params, Scenario::Mvc, pack_graphs(4, seed), 24, session)
+        .expect("pack solve failed")
+}
+
+fn main() {
+    if !oggm::runtime::manifest::default_dir().join("manifest.tsv").exists() {
+        println!("bench_parallel: artifacts not built, skipping (check mode OK)");
+        return;
+    }
+    let rt = common::runtime();
+    let mut rng = Pcg32::seeded(0xD1);
+    let params = common::init_params(&mut rng);
+    let p_list: Vec<usize> = if common::fast_mode() { vec![1, 2] } else { vec![1, 2, 4] };
+
+    let mut table = Table::new(
+        "bench_parallel: ms per shared solve step, B=4 pack of |V|=20 MVC",
+        &["lockstep_ms", "ranks_ms", "speedup", "ranks_comm_ms", "ranks_h2d_ms"],
+    );
+    let mut rows = Vec::new();
+    for storage in [Storage::Dense, Storage::Sparse] {
+        for &p in &p_list {
+            if rt.manifest.batch_sizes(24, 24 / p).last().copied().unwrap_or(0) < 4 {
+                println!("{storage:?} P={p}: no compiled batch shapes at N=24, skipping");
+                continue;
+            }
+            if storage == Storage::Sparse && rt.manifest.sparse_config(4, 24 / p, 32).is_err() {
+                println!("sparse P={p}: sparse artifacts not compiled, skipping");
+                continue;
+            }
+            let mut cfg = BatchCfg::new(p, 2);
+            cfg.storage = storage;
+            let seed = 0xD2 + p as u64;
+
+            // Lockstep reference (one-thread simulation engine): cold solve
+            // warms the compile caches, the second solve is measured.
+            let _ = solve_once(&rt, &cfg, &params, SessionState::default(), seed);
+            let lockstep = solve_once(&rt, &cfg, &params, SessionState::default(), seed);
+            let ls_step = lockstep.wall_total / lockstep.rounds.max(1) as f64;
+
+            // Rank-parallel on a warm pool; per-rank h2d bytes snapshot
+            // between the cold and warm solves, so the published figure is
+            // the WARM solve's transfer volume only.
+            let pool = match RankPool::new("artifacts", p) {
+                Ok(pool) => pool,
+                Err(e) => {
+                    println!("P={p}: rank pool unavailable ({e:#}), skipping");
+                    continue;
+                }
+            };
+            cfg.engine.mode = Engine::RankParallel;
+            let session = SessionState { theta: None, pool: Some(&pool) };
+            let _ = solve_once(&rt, &cfg, &params, session, seed);
+            let stats0 = pool.rank_stats().expect("rank stats");
+            let ranks = solve_once(&rt, &cfg, &params, session, seed);
+            let stats1 = pool.rank_stats().expect("rank stats");
+            let rk_step = ranks.wall_total / ranks.rounds.max(1) as f64;
+
+            // Parity guard: the bench only means something if both engines
+            // solved the pack identically.
+            for (a, b) in lockstep.per_graph.iter().zip(&ranks.per_graph) {
+                assert_eq!(a.solution, b.solution, "engines diverged; bench invalid");
+            }
+
+            let per_rank_h2d: Vec<f64> = stats1
+                .iter()
+                .zip(&stats0)
+                .map(|(s1, s0)| s1.since(s0).h2d_bytes as f64)
+                .collect();
+            let rounds = ranks.rounds.max(1) as f64;
+            println!(
+                "{storage:?} P={p}: lockstep {:.2} ms/step, rank-parallel {:.2} ms/step \
+                 ({:.2}x), comm {:.2} ms/step, h2d {:.2} ms/step over {} rounds",
+                ls_step * 1e3,
+                rk_step * 1e3,
+                ls_step / rk_step,
+                ranks.timing.comm / rounds * 1e3,
+                ranks.timing.h2d / rounds * 1e3,
+                ranks.rounds
+            );
+            table.row(
+                format!("{storage:?} P={p}"),
+                vec![
+                    ls_step * 1e3,
+                    rk_step * 1e3,
+                    ls_step / rk_step,
+                    ranks.timing.comm / rounds * 1e3,
+                    ranks.timing.h2d / rounds * 1e3,
+                ],
+            );
+            // All *_s fields are per solve step (divided by rounds), so the
+            // JSON compares directly against lockstep_step_s like the table.
+            let compute_per_step: Vec<f64> =
+                ranks.timing.compute.iter().map(|c| c / rounds).collect();
+            rows.push(
+                Json::obj()
+                    .set("storage", format!("{storage:?}").to_lowercase())
+                    .set("p", p)
+                    .set("rounds", ranks.rounds)
+                    .set("lockstep_step_s", ls_step)
+                    .set("rank_parallel_step_s", rk_step)
+                    .set("speedup", ls_step / rk_step)
+                    .set("rank_compute_step_s", compute_per_step)
+                    .set("rank_comm_step_s", ranks.timing.comm / rounds)
+                    .set("rank_h2d_step_s", ranks.timing.h2d / rounds)
+                    .set("rank_h2d_bytes", per_rank_h2d)
+                    .set("comm_bytes", ranks.timing.comm_bytes)
+                    .set("collectives", ranks.timing.collectives),
+            );
+        }
+    }
+    common::emit(&table);
+    let json = Json::obj().set("bench", "parallel").set("rows", Json::Arr(rows));
+    std::fs::write("BENCH_parallel.json", json.render()).expect("write BENCH_parallel.json");
+    println!("bench_parallel: wrote BENCH_parallel.json; OK");
+}

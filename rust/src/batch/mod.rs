@@ -24,5 +24,8 @@ pub mod queue;
 
 pub use env::BatchEnv;
 pub use queue::{run_queue, Job, JobOutcome, PackStat, QueueReport};
-pub use solve::{solve_pack, solve_pack_in, BatchCfg, BatchGraphResult, BatchResult};
+pub use solve::{
+    solve_pack, solve_pack_in, solve_pack_session, BatchCfg, BatchGraphResult, BatchResult,
+    SessionState,
+};
 pub use spec::{load_manifest, parse_job_line, parse_manifest, GraphSource, JobSpec};

@@ -17,13 +17,14 @@
 //! compiled batch buckets.
 
 use crate::batch::env::BatchEnv;
-use crate::coordinator::engine::{EngineCfg, StepTiming};
-use crate::coordinator::fwd::{forward_set, AnyDeviceState, ThetaCache};
+use crate::coordinator::engine::{Engine, EngineCfg, StepTiming};
+use crate::coordinator::fwd::ThetaCache;
 use crate::coordinator::selection::{select_count, top_d, SelectionPolicy};
 use crate::coordinator::shard::{shards_for_pack, sparse_shards_for_pack, ShardSet, Storage};
 use crate::env::Scenario;
 use crate::graph::{Graph, PackLayout, Partition};
 use crate::model::Params;
+use crate::parallel::{ExecEngine, RankPool};
 use crate::runtime::{ExecStats, Runtime};
 use anyhow::{ensure, Result};
 use std::time::Instant;
@@ -174,6 +175,19 @@ fn build_set(
     })
 }
 
+/// Session-owned warm state a pack solve can reuse: the service's shared
+/// θ cache (lockstep residency, DESIGN.md §8) and/or a persistent
+/// [`RankPool`] (rank-parallel engine, DESIGN.md §9 — its per-rank θ
+/// caches make the lockstep cache moot there).
+#[derive(Clone, Copy, Default)]
+pub struct SessionState<'a> {
+    /// Shared θ namespace for the lockstep device state.
+    pub theta: Option<&'a ThetaCache>,
+    /// Persistent rank pool (required for [`Engine::RankParallel`] warm
+    /// sessions; a transient pool is created per call otherwise).
+    pub pool: Option<&'a RankPool>,
+}
+
 /// Solve a pack of graphs under one scenario with shared forward passes.
 ///
 /// All graphs must fit `bucket_n`, and the pack must fit the largest batch
@@ -194,7 +208,9 @@ pub fn solve_pack(
 /// [`solve_pack`] with an optional shared θ residency: when `theta` is a
 /// service-owned [`ThetaCache`], the pack's device state uploads θ through
 /// it, so a warm runtime serves θ from cache instead of re-transferring it
-/// per pack (DESIGN.md §8).
+/// per pack (DESIGN.md §8). Under the rank-parallel engine a transient
+/// [`RankPool`] is created for this call; warm sessions pass one through
+/// [`solve_pack_session`] instead.
 pub fn solve_pack_in(
     rt: &Runtime,
     cfg: &BatchCfg,
@@ -203,6 +219,33 @@ pub fn solve_pack_in(
     graphs: Vec<Graph>,
     bucket_n: usize,
     theta: Option<&ThetaCache>,
+) -> Result<BatchResult> {
+    let transient = match cfg.engine.mode {
+        Engine::Lockstep => None,
+        Engine::RankParallel => Some(RankPool::new(rt.manifest.dir.clone(), cfg.engine.p)?),
+    };
+    solve_pack_session(
+        rt,
+        cfg,
+        params,
+        scenario,
+        graphs,
+        bucket_n,
+        SessionState { theta, pool: transient.as_ref() },
+    )
+}
+
+/// [`solve_pack`] over session-owned warm state (shared θ cache and/or a
+/// persistent rank pool) — the entry the persistent
+/// [`Service`](crate::service::Service) drives.
+pub fn solve_pack_session(
+    rt: &Runtime,
+    cfg: &BatchCfg,
+    params: &Params,
+    scenario: Scenario,
+    graphs: Vec<Graph>,
+    bucket_n: usize,
+    session: SessionState<'_>,
 ) -> Result<BatchResult> {
     let wall = Instant::now();
     let part = Partition::new(bucket_n, cfg.engine.p);
@@ -224,7 +267,7 @@ pub fn solve_pack_in(
         ensure!(g.n <= bucket_n, "graph |V|={} exceeds bucket N={bucket_n}", g.n);
     }
 
-    let stats0 = rt.stats();
+    let stats0 = exec_snapshot(rt, &session, cfg.engine.mode)?;
     let mut benv = BatchEnv::new(scenario, graphs);
     let empty = Graph::empty(0);
     let mut evals = vec![0usize; benv.len()];
@@ -251,19 +294,31 @@ pub fn solve_pack_in(
     let mut removed_prev: Vec<Vec<bool>> =
         slots.iter().map(|&gi| benv.env(gi).removed_mask().to_vec()).collect();
 
-    // Device residency (DESIGN.md §6/§7): θ + pack adjacency state uploaded
-    // once, kept in sync by per-round deltas; a compaction repack changes
-    // the batch capacity (every buffer shape), so it explicitly invalidates
-    // and rebuilds the device buffers. The one-time upload is booked like
-    // every other transfer so resident-vs-fresh times stay comparable.
-    let mut dev = if cfg.device_resident && !set.is_empty() {
-        let d = AnyDeviceState::new_in(rt, params, &mut set, theta)?;
-        let up_t = d.last_transfer_secs();
+    // Execution context (DESIGN.md §6/§7/§9): θ + pack adjacency state
+    // uploaded once — on the coordinator runtime (lockstep) or per rank
+    // (rank-parallel) — and kept in sync by per-round deltas; a compaction
+    // repack changes the batch capacity (every buffer shape), so it
+    // explicitly invalidates and rebuilds the device buffers. The one-time
+    // upload is booked like every other transfer so resident-vs-fresh
+    // times stay comparable. An all-done-at-admission pack (empty set)
+    // installs nothing; the round loop below never runs for it.
+    let mut ctx = if set.is_empty() {
+        None
+    } else {
+        let c = ExecEngine::install(
+            rt,
+            session.pool,
+            &cfg.engine,
+            params,
+            &mut set,
+            cfg.device_resident,
+            session.theta,
+            0,
+        )?;
+        let up_t = c.last_transfer_secs();
         timing.h2d += up_t;
         sim_total += up_t;
-        Some(d)
-    } else {
-        None
+        Some(c)
     };
 
     while !benv.all_done() {
@@ -283,9 +338,9 @@ pub fn solve_pack_in(
                 removed_prev =
                     slots.iter().map(|&gi| benv.env(gi).removed_mask().to_vec()).collect();
                 repacks += 1;
-                if let Some(d) = dev.as_mut() {
-                    d.rebuild(&mut set)?;
-                    let up_t = d.last_transfer_secs();
+                if let Some(c) = ctx.as_mut() {
+                    c.rebuild(&mut set)?;
+                    let up_t = c.last_transfer_secs();
                     timing.h2d += up_t;
                     sim_total += up_t;
                 }
@@ -293,16 +348,15 @@ pub fn solve_pack_in(
         }
         // Push state deltas from the previous round's selections to the
         // device (dense: row/col masks; sparse: dirty tile live-masks).
-        if let Some(d) = dev.as_mut() {
-            d.sync(&mut set)?;
-            let sync_t = d.last_transfer_secs();
-            timing.h2d += sync_t;
-            sim_total += sync_t;
-        }
+        let c = ctx.as_mut().expect("active graphs but no execution context");
+        c.sync(&mut set)?;
+        let sync_t = c.last_transfer_secs();
+        timing.h2d += sync_t;
+        sim_total += sync_t;
 
         // ONE shared distributed policy evaluation for the whole pack.
         let skip0 = cfg.skip_zero_layer;
-        let out = forward_set(rt, &cfg.engine, params, &set, false, skip0, dev.as_ref())?;
+        let out = c.forward(&cfg.engine, params, &set, false, skip0)?;
         rounds += 1;
         sim_total += out.timing.simulated();
         timing.merge(&out.timing);
@@ -359,6 +413,10 @@ pub fn solve_pack_in(
             }
         })
         .collect();
+    // Drop the execution context before the final stats snapshot so a
+    // rank-parallel uninstall's work is not racing the counter reads.
+    drop(ctx);
+    let exec = exec_snapshot(rt, &session, cfg.engine.mode)?.since(&stats0);
     Ok(BatchResult {
         per_graph,
         rounds,
@@ -367,10 +425,19 @@ pub fn solve_pack_in(
         timing,
         sim_total,
         wall_total: wall.elapsed().as_secs_f64(),
-        exec: rt.stats().since(&stats0),
+        exec,
         state_bytes,
         pack_edges,
     })
+}
+
+/// Runtime counters behind the configured engine: the coordinator runtime
+/// (lockstep) or the summed worker runtimes (rank-parallel).
+fn exec_snapshot(rt: &Runtime, session: &SessionState<'_>, mode: Engine) -> Result<ExecStats> {
+    match (mode, session.pool) {
+        (Engine::RankParallel, Some(pool)) => pool.stats(),
+        _ => Ok(rt.stats()),
+    }
 }
 
 #[cfg(test)]

@@ -1,182 +1,259 @@
 //! Generation-barrier shared-memory collectives.
 //!
 //! All P participants call the same collective in the same order (the SPMD
-//! discipline of Alg. 2-5). Each collective is two phases: contribute
-//! (under the mutex) then, once all P arrived, consume. A generation
-//! counter prevents a fast rank from racing into the next collective.
+//! discipline of Alg. 2-5). Each collective is phased: contribute into a
+//! per-rank deposit slot (its own mutex — no contention), synchronize on a
+//! generation barrier, then consume. A generation counter prevents a fast
+//! rank from racing into the next collective.
+//!
+//! Two properties the rank-parallel engine (DESIGN.md §9) relies on:
+//!
+//! - **Deterministic, chunked all-reduce.** The reduction is computed in
+//!   *rank order* (chunk `r` is `slot0 + slot1 + … + slotP−1`, left to
+//!   right), so the f32 summation order is identical to the lockstep
+//!   engine's sequential per-shard `add_assign` — scores and gradients
+//!   match across engines to the bit, not just to tolerance. Each rank
+//!   reduces its own 1/P chunk of the buffer concurrently, so the work
+//!   parallelizes instead of serializing the whole payload under one
+//!   mutex.
+//! - **Abort instead of deadlock.** A rank that fails mid-collective calls
+//!   [`Communicator::abort`]; every waiter wakes immediately and every
+//!   in-flight or subsequent collective returns a contextful
+//!   [`CommError`] instead of blocking forever on the condvar. Locks are
+//!   poison-tolerant (state is plain counters/buffers), so a *panicking*
+//!   participant cannot cascade panics through the survivors either.
 
-use std::sync::{Arc, Condvar, Mutex};
+use std::fmt;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 
-struct State {
-    p: usize,
+/// Error surfaced by a collective after a participant aborted: identifies
+/// the failing rank, its reason, and the operation the caller was in.
+#[derive(Debug, Clone)]
+pub struct CommError {
+    /// Rank that reported the failure via [`Communicator::abort`].
+    pub rank: usize,
+    /// The reason string passed to `abort`.
+    pub reason: String,
+    /// The collective phase the caller was in when the abort surfaced.
+    pub op: &'static str,
+}
+
+impl fmt::Display for CommError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "collective {} aborted by rank {}: {}",
+            self.op, self.rank, self.reason
+        )
+    }
+}
+
+impl std::error::Error for CommError {}
+
+/// Collective result type ([`CommError`] converts into `anyhow::Error`).
+pub type CommResult<T> = std::result::Result<T, CommError>;
+
+struct Ctl {
     arrived: usize,
     generation: u64,
-    /// Accumulation buffer for all-reduce (len set by first arriver).
-    acc: Vec<f32>,
-    /// Gather buffer: per-rank parts.
-    parts: Vec<Vec<f32>>,
+    /// Set once by the first `abort`; never cleared — a failed group is
+    /// permanently failed (callers recover by creating a new group).
+    aborted: Option<(usize, String)>,
     /// Bytes moved per rank (for metrics / the α–β model).
     bytes_total: u64,
     ops_total: u64,
 }
 
+struct Shared {
+    p: usize,
+    ctl: Mutex<Ctl>,
+    cv: Condvar,
+    /// Per-rank deposit slots: each rank writes only its own, so deposits
+    /// never contend on a shared lock.
+    slots: Vec<Mutex<Vec<f32>>>,
+    /// Per-rank reduction outputs: rank r owns the chunk it reduced.
+    reduced: Vec<Mutex<Vec<f32>>>,
+}
+
 /// A P-way collective communicator. Clone one handle per participant.
 #[derive(Clone)]
 pub struct Communicator {
-    inner: Arc<(Mutex<State>, Condvar)>,
+    shared: Arc<Shared>,
     /// This handle's rank (0..P).
     pub rank: usize,
+}
+
+/// Index range `[lo, hi)` of the chunk rank `rank` reduces (remainder
+/// spread over the leading ranks; empty for trailing ranks when P > len).
+fn chunk_range(len: usize, p: usize, rank: usize) -> (usize, usize) {
+    let base = len / p;
+    let rem = len % p;
+    let lo = rank * base + rank.min(rem);
+    (lo, lo + base + usize::from(rank < rem))
+}
+
+/// Poison-tolerant lock: the guarded state is plain counters/buffers whose
+/// invariants survive a panicking holder, and recovering here is what keeps
+/// one rank's panic from cascading `unwrap` panics through every survivor.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
 }
 
 impl Communicator {
     /// Create handles for all P ranks.
     pub fn create(p: usize) -> Vec<Communicator> {
         assert!(p >= 1);
-        let inner = Arc::new((
-            Mutex::new(State {
-                p,
+        let shared = Arc::new(Shared {
+            p,
+            ctl: Mutex::new(Ctl {
                 arrived: 0,
                 generation: 0,
-                acc: Vec::new(),
-                parts: vec![Vec::new(); p],
+                aborted: None,
                 bytes_total: 0,
                 ops_total: 0,
             }),
-            Condvar::new(),
-        ));
-        (0..p).map(|rank| Communicator { inner: inner.clone(), rank }).collect()
+            cv: Condvar::new(),
+            slots: (0..p).map(|_| Mutex::new(Vec::new())).collect(),
+            reduced: (0..p).map(|_| Mutex::new(Vec::new())).collect(),
+        });
+        (0..p).map(|rank| Communicator { shared: shared.clone(), rank }).collect()
     }
 
     /// Number of participating ranks P.
     pub fn p(&self) -> usize {
-        self.inner.0.lock().unwrap().p
+        self.shared.p
     }
 
     /// (total bytes sent+received across ranks, number of collectives).
     pub fn traffic(&self) -> (u64, u64) {
-        let s = self.inner.0.lock().unwrap();
+        let s = lock(&self.shared.ctl);
         (s.bytes_total, s.ops_total)
     }
 
-    /// Barrier: returns once all P ranks have arrived.
-    pub fn barrier(&self) {
-        let (lock, cv) = &*self.inner;
-        let mut s = lock.lock().unwrap();
+    /// Mark the group failed: wakes every waiter, and every in-flight or
+    /// subsequent collective on any handle returns a [`CommError`] carrying
+    /// this rank and reason. The first abort wins; later ones are no-ops.
+    pub fn abort(&self, reason: impl Into<String>) {
+        let mut s = lock(&self.shared.ctl);
+        if s.aborted.is_none() {
+            s.aborted = Some((self.rank, reason.into()));
+        }
+        self.shared.cv.notify_all();
+    }
+
+    /// One barrier phase: account traffic, arrive, and either release the
+    /// group (last arriver advances the generation) or wait. Returns an
+    /// error immediately if the group was aborted before or during the
+    /// wait.
+    fn phase(&self, op: &'static str, bytes: u64, count_op: bool) -> CommResult<()> {
+        let mut s = lock(&self.shared.ctl);
+        if let Some((rank, reason)) = &s.aborted {
+            return Err(CommError { rank: *rank, reason: reason.clone(), op });
+        }
         let gen = s.generation;
+        s.bytes_total += bytes;
         s.arrived += 1;
-        if s.arrived == s.p {
+        if s.arrived == self.shared.p {
             s.arrived = 0;
             s.generation += 1;
-            cv.notify_all();
+            if count_op {
+                s.ops_total += 1;
+            }
+            self.shared.cv.notify_all();
         } else {
-            while s.generation == gen {
-                s = cv.wait(s).unwrap();
+            while s.generation == gen && s.aborted.is_none() {
+                s = self.shared.cv.wait(s).unwrap_or_else(PoisonError::into_inner);
+            }
+            if let Some((rank, reason)) = &s.aborted {
+                return Err(CommError { rank: *rank, reason: reason.clone(), op });
             }
         }
+        Ok(())
+    }
+
+    /// Barrier: returns once all P ranks have arrived (or errs on abort).
+    pub fn barrier(&self) -> CommResult<()> {
+        self.phase("barrier", 0, false)
     }
 
     /// All-reduce (sum) in place: after return, `buf` on every rank holds
     /// the element-wise sum over ranks (Alg. 2 line 12 / Alg. 3 line 5).
-    pub fn all_reduce_sum(&self, buf: &mut [f32]) {
-        let (lock, cv) = &*self.inner;
-        let mut s = lock.lock().unwrap();
-        let gen = s.generation;
-        if s.acc.is_empty() {
-            s.acc = vec![0.0; buf.len()];
+    ///
+    /// Deterministic and chunked: every rank deposits into its own slot,
+    /// then reduces its 1/P chunk across the slots *in rank order* — the
+    /// same left-fold the lockstep engine's host `add_assign` performs —
+    /// while the other ranks reduce their chunks concurrently.
+    pub fn all_reduce_sum(&self, buf: &mut [f32]) -> CommResult<()> {
+        let p = self.shared.p;
+        let len = buf.len();
+        {
+            let mut slot = lock(&self.shared.slots[self.rank]);
+            slot.clear();
+            slot.extend_from_slice(buf);
         }
-        assert_eq!(s.acc.len(), buf.len(), "all_reduce length mismatch across ranks");
-        for (a, &x) in s.acc.iter_mut().zip(buf.iter()) {
-            *a += x;
-        }
-        s.bytes_total += 4 * buf.len() as u64;
-        s.arrived += 1;
-        if s.arrived == s.p {
-            s.arrived = 0;
-            s.generation += 1;
-            s.ops_total += 1;
-            cv.notify_all();
-        } else {
-            while s.generation == gen {
-                s = cv.wait(s).unwrap();
+        self.phase("all_reduce(deposit)", 4 * len as u64, true)?;
+        let (lo, hi) = chunk_range(len, p, self.rank);
+        {
+            let mut out = lock(&self.shared.reduced[self.rank]);
+            out.clear();
+            out.resize(hi - lo, 0.0);
+            for r in 0..p {
+                let slot = lock(&self.shared.slots[r]);
+                assert_eq!(slot.len(), len, "all_reduce length mismatch across ranks");
+                if r == 0 {
+                    out.copy_from_slice(&slot[lo..hi]);
+                } else {
+                    for (o, &x) in out.iter_mut().zip(&slot[lo..hi]) {
+                        *o += x;
+                    }
+                }
             }
         }
-        // Consume phase: every rank copies the sum out; the trailing
-        // barrier (`finish_reduce`) clears `acc` only after all have read.
-        buf.copy_from_slice(&s.acc);
-        drop(s);
-        self.finish_reduce();
-    }
-
-    /// Second barrier ensuring every rank copied out before acc is reused.
-    fn finish_reduce(&self) {
-        let (lock, cv) = &*self.inner;
-        let mut s = lock.lock().unwrap();
-        let gen = s.generation;
-        s.arrived += 1;
-        if s.arrived == s.p {
-            s.arrived = 0;
-            s.generation += 1;
-            s.acc.clear();
-            cv.notify_all();
-        } else {
-            while s.generation == gen {
-                s = cv.wait(s).unwrap();
-            }
+        self.phase("all_reduce(reduce)", 0, false)?;
+        for r in 0..p {
+            let (rlo, rhi) = chunk_range(len, p, r);
+            let red = lock(&self.shared.reduced[r]);
+            buf[rlo..rhi].copy_from_slice(&red);
         }
+        // Final barrier so no rank re-deposits before everyone copied out.
+        self.phase("all_reduce(consume)", 0, false)
     }
 
     /// All-gather: each rank contributes `part`; returns the concatenation
     /// ordered by rank (Alg. 4 line 6).
-    pub fn all_gather(&self, part: &[f32]) -> Vec<f32> {
-        let (lock, cv) = &*self.inner;
-        let mut s = lock.lock().unwrap();
-        let gen = s.generation;
-        let rank = self.rank;
-        s.parts[rank] = part.to_vec();
-        s.bytes_total += 4 * part.len() as u64;
-        s.arrived += 1;
-        if s.arrived == s.p {
-            s.arrived = 0;
-            s.generation += 1;
-            s.ops_total += 1;
-            cv.notify_all();
-        } else {
-            while s.generation == gen {
-                s = cv.wait(s).unwrap();
-            }
+    pub fn all_gather(&self, part: &[f32]) -> CommResult<Vec<f32>> {
+        {
+            let mut slot = lock(&self.shared.slots[self.rank]);
+            slot.clear();
+            slot.extend_from_slice(part);
         }
-        let out: Vec<f32> = s.parts.iter().flat_map(|p| p.iter().copied()).collect();
-        drop(s);
-        // Ensure all ranks consumed before parts are overwritten.
-        self.barrier();
-        out
+        self.phase("all_gather(deposit)", 4 * part.len() as u64, true)?;
+        let mut out = Vec::new();
+        for r in 0..self.shared.p {
+            out.extend_from_slice(&lock(&self.shared.slots[r]));
+        }
+        // Ensure all ranks consumed before slots are overwritten.
+        self.phase("all_gather(consume)", 0, false)?;
+        Ok(out)
     }
 
     /// Broadcast from rank 0.
-    pub fn broadcast(&self, buf: &mut Vec<f32>) {
-        let (lock, cv) = &*self.inner;
-        let mut s = lock.lock().unwrap();
-        let gen = s.generation;
-        if self.rank == 0 {
-            s.acc = buf.clone();
-            s.bytes_total += 4 * buf.len() as u64;
-        }
-        s.arrived += 1;
-        if s.arrived == s.p {
-            s.arrived = 0;
-            s.generation += 1;
-            s.ops_total += 1;
-            cv.notify_all();
+    pub fn broadcast(&self, buf: &mut Vec<f32>) -> CommResult<()> {
+        let bytes = if self.rank == 0 {
+            let mut slot = lock(&self.shared.slots[0]);
+            slot.clear();
+            slot.extend_from_slice(buf);
+            4 * buf.len() as u64
         } else {
-            while s.generation == gen {
-                s = cv.wait(s).unwrap();
-            }
-        }
+            0
+        };
+        self.phase("broadcast(deposit)", bytes, true)?;
         if self.rank != 0 {
-            *buf = s.acc.clone();
+            let slot = lock(&self.shared.slots[0]);
+            buf.clear();
+            buf.extend_from_slice(&slot);
         }
-        drop(s);
-        self.finish_reduce();
+        self.phase("broadcast(consume)", 0, false)
     }
 }
 
@@ -202,7 +279,7 @@ mod tests {
     fn all_reduce_sums() {
         run_ranks(4, |c| {
             let mut buf = vec![c.rank as f32, 1.0, -(c.rank as f32)];
-            c.all_reduce_sum(&mut buf);
+            c.all_reduce_sum(&mut buf).unwrap();
             assert_eq!(buf, vec![6.0, 4.0, -6.0]);
         });
     }
@@ -212,9 +289,47 @@ mod tests {
         run_ranks(3, |c| {
             for round in 0..20 {
                 let mut buf = vec![(c.rank + round) as f32];
-                c.all_reduce_sum(&mut buf);
+                c.all_reduce_sum(&mut buf).unwrap();
                 assert_eq!(buf[0], (3 * round + 3) as f32, "round {round}");
             }
+        });
+    }
+
+    #[test]
+    fn all_reduce_is_rank_order_deterministic() {
+        // The chunked reduction must reproduce the sequential rank-order
+        // left-fold bitwise — the property that pins rank-parallel scores
+        // to the lockstep engine's host reductions.
+        let p = 3usize;
+        let len = 1001usize; // not divisible by p: exercises chunk remainders
+        let val = |rank: usize, i: usize| ((rank * 31 + i * 7) % 97) as f32 * 0.034_217;
+        let mut want = vec![0.0f32; len];
+        for (i, w) in want.iter_mut().enumerate() {
+            *w = val(0, i);
+            for r in 1..p {
+                *w += val(r, i);
+            }
+        }
+        run_ranks(p, move |c| {
+            let mut buf: Vec<f32> = (0..len).map(|i| val(c.rank, i)).collect();
+            c.all_reduce_sum(&mut buf).unwrap();
+            for i in 0..len {
+                assert_eq!(
+                    buf[i].to_bits(),
+                    want[i].to_bits(),
+                    "element {i} not bitwise rank-order deterministic"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn all_reduce_shorter_than_p() {
+        // len < P leaves trailing ranks with empty chunks.
+        run_ranks(4, |c| {
+            let mut buf = vec![1.0f32, 2.0];
+            c.all_reduce_sum(&mut buf).unwrap();
+            assert_eq!(buf, vec![4.0, 8.0]);
         });
     }
 
@@ -222,7 +337,7 @@ mod tests {
     fn all_gather_orders_by_rank() {
         run_ranks(3, |c| {
             let part = vec![c.rank as f32 * 10.0, c.rank as f32 * 10.0 + 1.0];
-            let out = c.all_gather(&part);
+            let out = c.all_gather(&part).unwrap();
             assert_eq!(out, vec![0.0, 1.0, 10.0, 11.0, 20.0, 21.0]);
         });
     }
@@ -231,7 +346,7 @@ mod tests {
     fn broadcast_from_root() {
         run_ranks(4, |c| {
             let mut buf = if c.rank == 0 { vec![3.5, -1.0] } else { vec![0.0; 2] };
-            c.broadcast(&mut buf);
+            c.broadcast(&mut buf).unwrap();
             assert_eq!(buf, vec![3.5, -1.0]);
         });
     }
@@ -241,18 +356,18 @@ mod tests {
         let comms = Communicator::create(1);
         let c = &comms[0];
         let mut buf = vec![2.0];
-        c.all_reduce_sum(&mut buf);
+        c.all_reduce_sum(&mut buf).unwrap();
         assert_eq!(buf, vec![2.0]);
-        assert_eq!(c.all_gather(&[1.0, 2.0]), vec![1.0, 2.0]);
-        c.barrier();
+        assert_eq!(c.all_gather(&[1.0, 2.0]).unwrap(), vec![1.0, 2.0]);
+        c.barrier().unwrap();
     }
 
     #[test]
     fn traffic_accounting() {
         run_ranks(2, |c| {
             let mut buf = vec![0.0; 8];
-            c.all_reduce_sum(&mut buf);
-            let _ = c.all_gather(&buf[..4]);
+            c.all_reduce_sum(&mut buf).unwrap();
+            let _ = c.all_gather(&buf[..4]).unwrap();
         });
         // Recreate to read counters deterministically on one handle.
         let comms = Communicator::create(2);
@@ -260,10 +375,10 @@ mod tests {
         let c1 = comms[1].clone();
         let t = std::thread::spawn(move || {
             let mut b = vec![1.0f32; 8];
-            c1.all_reduce_sum(&mut b);
+            c1.all_reduce_sum(&mut b).unwrap();
         });
         let mut b = vec![1.0f32; 8];
-        c0.all_reduce_sum(&mut b);
+        c0.all_reduce_sum(&mut b).unwrap();
         t.join().unwrap();
         let (bytes, ops) = c0.traffic();
         assert_eq!(ops, 1);
@@ -274,16 +389,74 @@ mod tests {
     fn interleaved_mixed_collectives() {
         run_ranks(4, |c| {
             for round in 0..10 {
-                c.barrier();
+                c.barrier().unwrap();
                 let mut buf = vec![1.0f32; 5];
-                c.all_reduce_sum(&mut buf);
+                c.all_reduce_sum(&mut buf).unwrap();
                 assert!(buf.iter().all(|&x| x == 4.0));
-                let g = c.all_gather(&[c.rank as f32]);
+                let g = c.all_gather(&[c.rank as f32]).unwrap();
                 assert_eq!(g, vec![0.0, 1.0, 2.0, 3.0], "round {round}");
                 let mut b = vec![round as f32];
-                c.broadcast(&mut b);
+                c.broadcast(&mut b).unwrap();
                 assert_eq!(b[0], round as f32);
             }
         });
+    }
+
+    #[test]
+    fn abort_wakes_waiters_and_fails_future_ops() {
+        // The hang-on-failure regression (ISSUE 5): a rank that dies
+        // mid-collective must not leave the survivors blocked forever.
+        for p in [2usize, 4] {
+            let comms = Communicator::create(p);
+            let handles: Vec<_> = comms
+                .into_iter()
+                .map(|c| {
+                    std::thread::spawn(move || {
+                        if c.rank == 1 {
+                            c.abort("device exploded");
+                            return;
+                        }
+                        let mut buf = vec![1.0f32; 64];
+                        // Whether the abort lands before we arrive or while
+                        // we wait, the collective must return, not hang.
+                        let err = c.all_reduce_sum(&mut buf).unwrap_err();
+                        assert_eq!(err.rank, 1, "P={p}: wrong aborting rank");
+                        assert!(err.reason.contains("device exploded"), "P={p}: {err}");
+                        assert!(err.to_string().contains("rank 1"), "P={p}: {err}");
+                        // Every subsequent collective fails contextfully too.
+                        assert!(c.barrier().is_err(), "P={p}");
+                        assert!(c.all_gather(&[1.0]).is_err(), "P={p}");
+                        let mut b = vec![0.0f32; 2];
+                        assert!(c.broadcast(&mut b).is_err(), "P={p}");
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn first_abort_wins() {
+        let comms = Communicator::create(2);
+        comms[0].abort("first");
+        comms[1].abort("second");
+        let err = comms[0].barrier().unwrap_err();
+        assert_eq!(err.rank, 0);
+        assert_eq!(err.reason, "first");
+    }
+
+    #[test]
+    fn chunk_ranges_partition_the_buffer() {
+        for (len, p) in [(10usize, 3usize), (3, 4), (0, 2), (8, 1), (7, 7)] {
+            let mut covered = 0usize;
+            for r in 0..p {
+                let (lo, hi) = chunk_range(len, p, r);
+                assert_eq!(lo, covered, "len={len} p={p} rank={r}");
+                covered = hi;
+            }
+            assert_eq!(covered, len, "len={len} p={p}");
+        }
     }
 }

@@ -1,16 +1,19 @@
 //! Collective communication substrate (the NCCL / torch.distributed
-//! substitute, DESIGN.md §3).
+//! substitute, DESIGN.md §3/§9).
 //!
 //! `Communicator` implements barrier / all-reduce / all-gather / broadcast
-//! over P participants with generation-based synchronization; it is used by
-//! the threaded worker engine and validated standalone under real threads.
-//! `cost` implements the paper's α–β communication model (Eq. 3/5) used by
-//! the lockstep engine to attribute simulated communication time.
+//! over P participants with generation-based synchronization, a chunked
+//! rank-order-deterministic all-reduce, and an abort path that turns a
+//! failed rank into contextful errors instead of a deadlock; it is the
+//! transport of the rank-parallel engine (`crate::parallel`) and is
+//! validated standalone under real threads. `cost` implements the paper's
+//! α–β communication model (Eq. 3/5) used by the lockstep engine to
+//! attribute simulated communication time.
 
-/// Threaded P-way collectives (all-reduce / all-gather).
+/// Threaded P-way collectives (all-reduce / all-gather / abort).
 pub mod comm;
 /// α–β communication cost model (DESIGN.md §3).
 pub mod cost;
 
-pub use comm::Communicator;
+pub use comm::{CommError, CommResult, Communicator};
 pub use cost::CostModel;

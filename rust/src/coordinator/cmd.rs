@@ -139,10 +139,20 @@ pub fn cmd_infer(args: &Args) -> Result<()> {
 /// `--demo <count>` synthesizes a mixed ER/BA manifest instead of reading
 /// one (a zero-setup smoke path). `--scenario` overrides every job's
 /// scenario; `--no-compact` disables early-exit pack compaction;
-/// `--sparse` switches the packs to CSR storage (DESIGN.md §7).
+/// `--sparse` switches the packs to CSR storage (DESIGN.md §7);
+/// `--engine rank-parallel` runs the packs on the persistent rank pool
+/// (DESIGN.md §9); `--check` exits 0 with a notice when artifacts are not
+/// built (CI smoke mode, both engines).
 pub fn cmd_batch_solve(args: &Args) -> Result<()> {
-    let rt = load_runtime()?;
+    // Options are validated before the check-mode short-circuit (same
+    // order as cmd_serve), so CI's artifact-less smoke still catches a
+    // bad --engine/--scenario value.
     let opts = Options::from_args(args)?;
+    if args.has_flag("check") && !manifest::default_dir().join("manifest.tsv").exists() {
+        println!("batch-solve: artifacts not built, skipping (check mode OK)");
+        return Ok(());
+    }
+    let rt = load_runtime()?;
     let mut rng = Pcg32::new(opts.seed_or(4), 80);
     let specs = match args.get("manifest") {
         Some(path) => batch::load_manifest(path)?,
@@ -287,9 +297,11 @@ fn serve_write_ready(
 /// reading input. `--scenario` overrides every job; `--max-wait <secs>`
 /// launches partial packs past the deadline — checked as each input line
 /// arrives (the loop is single-threaded and blocks on reads, so a fully
-/// idle stream launches at the next line or EOF); `--check` exits 0 with
-/// a notice when artifacts are not built (CI smoke mode). Human-readable
-/// progress goes to stderr so stdout stays pure JSONL.
+/// idle stream launches at the next line or EOF); `--engine rank-parallel`
+/// solves packs on a session-persistent rank pool (DESIGN.md §9);
+/// `--check` exits 0 with a notice when artifacts are not built (CI smoke
+/// mode). Human-readable progress goes to stderr so stdout stays pure
+/// JSONL.
 pub fn cmd_serve(args: &Args) -> Result<()> {
     let opts = Options::from_args(args)?;
     if args.has_flag("check") && !manifest::default_dir().join("manifest.tsv").exists() {

@@ -9,6 +9,40 @@
 
 use crate::collective::CostModel;
 
+/// Which execution engine drives the P shards (DESIGN.md §3/§9).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Engine {
+    /// Single-threaded lockstep simulation: the P shard contexts are driven
+    /// from one thread with per-stage compute measured individually and
+    /// communication α–β-modeled (DESIGN.md §3). The reference engine.
+    #[default]
+    Lockstep,
+    /// Persistent rank-parallel pool (`crate::parallel`): P long-lived
+    /// worker threads, each owning its own PJRT runtime and its rank's
+    /// device-resident state, synchronizing through real shared-memory
+    /// collectives (DESIGN.md §9). The true-concurrency hot path.
+    RankParallel,
+}
+
+impl Engine {
+    /// Parse a CLI value (`lockstep` | `rank-parallel`).
+    pub fn parse(s: &str) -> anyhow::Result<Engine> {
+        match s.to_ascii_lowercase().as_str() {
+            "lockstep" => Ok(Engine::Lockstep),
+            "rank-parallel" | "ranks" | "parallel" => Ok(Engine::RankParallel),
+            other => anyhow::bail!("unknown engine '{other}' (lockstep|rank-parallel)"),
+        }
+    }
+
+    /// Short CLI/JSON name (`lockstep` / `rank-parallel`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Engine::Lockstep => "lockstep",
+            Engine::RankParallel => "rank-parallel",
+        }
+    }
+}
+
 /// Timing of one distributed operation (a policy evaluation, a training
 /// step, ...), accumulated across stages and collectives.
 #[derive(Debug, Clone, Default)]
@@ -78,24 +112,37 @@ impl StepTiming {
 /// Engine configuration shared by forward/backward orchestrators.
 #[derive(Debug, Clone, Copy)]
 pub struct EngineCfg {
-    /// Number of simulated devices P.
+    /// Number of devices P (simulated shards or worker ranks).
     pub p: usize,
     /// Embedding layers L (runtime loop).
     pub l: usize,
-    /// Communication cost model.
+    /// Communication cost model (lockstep comm attribution).
     pub cost: CostModel,
+    /// Which execution engine drives the shards (DESIGN.md §9).
+    pub mode: Engine,
 }
 
 impl EngineCfg {
-    /// Default engine config for P shards and L layers.
+    /// Default engine config for P shards and L layers (lockstep mode).
     pub fn new(p: usize, l: usize) -> EngineCfg {
-        EngineCfg { p, l, cost: CostModel::default() }
+        EngineCfg { p, l, cost: CostModel::default(), mode: Engine::Lockstep }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn engine_parses() {
+        assert_eq!(Engine::parse("lockstep").unwrap(), Engine::Lockstep);
+        assert_eq!(Engine::parse("rank-parallel").unwrap(), Engine::RankParallel);
+        assert_eq!(Engine::parse("Ranks").unwrap(), Engine::RankParallel);
+        assert!(Engine::parse("gpu").is_err());
+        assert_eq!(Engine::default(), Engine::Lockstep);
+        assert_eq!(EngineCfg::new(2, 2).mode, Engine::Lockstep);
+        assert_eq!(Engine::RankParallel.name(), "rank-parallel");
+    }
 
     #[test]
     fn simulated_takes_max_shard() {

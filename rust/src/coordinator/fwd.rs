@@ -86,6 +86,13 @@ impl ThetaCache {
         self.generation
     }
 
+    /// Keyed-cache key of θ tensor `i` in this namespace. The rank-parallel
+    /// workers pre-publish θ through these keys when parameters change, so
+    /// device states built against the cache hit without a transfer.
+    pub(crate) fn theta_key(&self, i: usize) -> String {
+        format!("{}theta{i}", self.prefix)
+    }
+
     /// Invalidate after the host parameters change: the next device state
     /// built against the cache re-uploads θ instead of hitting stale
     /// buffers.
@@ -358,6 +365,12 @@ impl DeviceState<'_> {
     /// The 7 resident θ buffers (feeds [`ThetaViews`]).
     pub(crate) fn theta_bufs(&self) -> &[Rc<xla::PjRtBuffer>] {
         &self.theta
+    }
+
+    /// The resident zeros block [B,K,NI] (layer-0 embedding input — shared
+    /// with the rank-parallel worker forward).
+    pub(crate) fn zero_buf(&self) -> &xla::PjRtBuffer {
+        &self.zero_e
     }
 }
 

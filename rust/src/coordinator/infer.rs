@@ -2,13 +2,13 @@
 //! score all-gather, (multi-)node selection, distributed state update —
 //! until the environment reports a complete solution.
 
-use super::engine::{EngineCfg, StepTiming};
-use super::fwd::{forward_set, AnyDeviceState};
+use super::engine::{Engine, EngineCfg, StepTiming};
 use super::selection::{select_count, top_d, SelectionPolicy};
 use super::shard::{shards_for_graph, sparse_shards_for_graph, ShardSet, Storage};
 use crate::env::{GraphEnv, Scenario};
 use crate::graph::{Graph, Partition};
 use crate::model::Params;
+use crate::parallel::{ExecEngine, RankPool};
 use crate::runtime::Runtime;
 use anyhow::Result;
 use std::time::Instant;
@@ -78,6 +78,28 @@ pub fn solve_env(
     bucket_n: usize,
     env: &mut dyn GraphEnv,
 ) -> Result<InferResult> {
+    // The rank-parallel engine amortizes its pool across every step of
+    // this solve; persistent callers hold one across solves and pass it
+    // through `solve_env_in` instead.
+    let transient = match cfg.engine.mode {
+        Engine::Lockstep => None,
+        Engine::RankParallel => Some(RankPool::new(rt.manifest.dir.clone(), cfg.engine.p)?),
+    };
+    solve_env_in(rt, cfg, params, g, bucket_n, env, transient.as_ref())
+}
+
+/// [`solve_env`] with an optional caller-owned [`RankPool`] (required —
+/// and used — only when `cfg.engine.mode` is [`Engine::RankParallel`];
+/// a warm pool skips the per-solve θ upload and thread spawns).
+pub fn solve_env_in(
+    rt: &Runtime,
+    cfg: &InferCfg,
+    params: &Params,
+    g: &Graph,
+    bucket_n: usize,
+    env: &mut dyn GraphEnv,
+    pool: Option<&RankPool>,
+) -> Result<InferResult> {
     let wall = Instant::now();
     let part = Partition::new(bucket_n, cfg.engine.p);
     let candidates: Vec<bool> = (0..g.n).map(|v| env.is_candidate(v)).collect();
@@ -109,33 +131,36 @@ pub fn solve_env(
     let mut selections = 0usize;
     let mut sim_total = 0.0f64;
 
-    // Device residency (DESIGN.md §6/§7): θ and the shard adjacency state
-    // (dense A, or the sparse edge tiles) are uploaded once here; each step
-    // pushes only the selection deltas. The one-time upload is a real cost —
-    // book it like every other transfer so resident-vs-fresh simulated
-    // times stay comparable.
-    let mut dev = if cfg.device_resident {
-        let d = AnyDeviceState::new(rt, params, &mut set)?;
-        let up_t = d.last_transfer_secs();
-        timing.h2d += up_t;
-        sim_total += up_t;
-        Some(d)
-    } else {
-        None
-    };
+    // Execution context (DESIGN.md §6/§7/§9): device residency — θ and the
+    // shard adjacency state (dense A, or the sparse edge tiles) uploaded
+    // once here, on the coordinator runtime (lockstep) or per rank
+    // (rank-parallel); each step pushes only the selection deltas. The
+    // one-time upload is a real cost — book it like every other transfer
+    // so resident-vs-fresh simulated times stay comparable.
+    let mut ctx = ExecEngine::install(
+        rt,
+        pool,
+        &cfg.engine,
+        params,
+        &mut set,
+        cfg.device_resident,
+        None,
+        0,
+    )?;
+    let up_t = ctx.last_transfer_secs();
+    timing.h2d += up_t;
+    sim_total += up_t;
 
     while !env.done() {
         // Push state deltas from the previous step's selections to the
         // device (dense: row/col masks; sparse: dirty tile live-masks).
-        if let Some(d) = dev.as_mut() {
-            d.sync(&mut set)?;
-            let sync_t = d.last_transfer_secs();
-            timing.h2d += sync_t;
-            sim_total += sync_t;
-        }
+        ctx.sync(&mut set)?;
+        let sync_t = ctx.last_transfer_secs();
+        timing.h2d += sync_t;
+        sim_total += sync_t;
         // Distributed policy evaluation (Alg. 4 lines 4-6).
         let skip0 = cfg.skip_zero_layer;
-        let out = forward_set(rt, &cfg.engine, params, &set, false, skip0, dev.as_ref())?;
+        let out = ctx.forward(&cfg.engine, params, &set, false, skip0)?;
         evaluations += 1;
         sim_total += out.timing.simulated();
         timing.merge(&out.timing);

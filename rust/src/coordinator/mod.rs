@@ -26,5 +26,3 @@ pub mod replay;
 pub mod train;
 /// Metrics output: curves, tables, JSON/CSV writers.
 pub mod metrics;
-/// Thread-per-shard execution harness (collective validation).
-pub mod threaded;

@@ -184,6 +184,29 @@ impl ShardState {
         self.dirty_cols.clear();
     }
 
+    /// Replay removal deltas recorded on another replica of this shard —
+    /// the rank-parallel engine ships `(rows, cols)` pairs instead of the
+    /// full adjacency (DESIGN.md §9). Zeroes exactly those rows/columns
+    /// and records them as dirty, so a following device `sync` patches
+    /// exactly what the originating replica's removals touched.
+    pub fn apply_removed_deltas(&mut self, rows: &[(u32, u32)], cols: &[(u32, u32)]) {
+        let (n, ni) = (self.n(), self.ni());
+        for &(g, r) in rows {
+            assert!((g as usize) < self.b && (r as usize) < ni, "row delta out of range");
+            let base = g as usize * ni * n + r as usize * n;
+            self.a[base..base + n].fill(0.0);
+            self.dirty_rows.push((g, r));
+        }
+        for &(g, v) in cols {
+            assert!((g as usize) < self.b && (v as usize) < n, "col delta out of range");
+            let base = g as usize * ni * n;
+            for r in 0..ni {
+                self.a[base + r * n + v as usize] = 0.0;
+            }
+            self.dirty_cols.push((g, v));
+        }
+    }
+
     /// Refresh the candidate mask for batch element g_idx from the
     /// environment's candidate predicate (the host owns candidate logic).
     pub fn refresh_candidates(&mut self, g_idx: usize, is_candidate: impl Fn(usize) -> bool) {
@@ -469,6 +492,17 @@ impl SparseShard {
     /// Forget recorded deltas (after a fresh full upload of every tile).
     pub fn clear_dirty(&mut self) {
         self.dirty_tiles.clear();
+    }
+
+    /// Overwrite tile `t`'s live-edge mask with another replica's copy and
+    /// mark it dirty — the sparse delta the rank-parallel engine ships per
+    /// removal-touched tile (DESIGN.md §9). The replica's `deg`/`c`
+    /// vectors are shipped per forward instead, so only `w` is replayed.
+    pub fn overwrite_tile_mask(&mut self, t: usize, w: Vec<f32>) {
+        let tile = &mut self.tiles[t];
+        assert_eq!(w.len(), self.b * tile.cap, "tile {t} mask length mismatch");
+        tile.w = w;
+        self.dirty_tiles.push(t as u32);
     }
 
     /// Refresh the candidate mask for batch element `g_idx` from the
@@ -764,6 +798,16 @@ impl ShardSet {
             ShardSet::Sparse(sh) => sh.iter().map(|s| s.bytes()).sum(),
         }
     }
+
+    /// Forget recorded deltas on every shard — after a full re-upload (or
+    /// after shipping replicas that captured the current state, as the
+    /// rank-parallel install does).
+    pub fn clear_dirty(&mut self) {
+        match self {
+            ShardSet::Dense(sh) => sh.iter_mut().for_each(|s| s.clear_dirty()),
+            ShardSet::Sparse(sh) => sh.iter_mut().for_each(|s| s.clear_dirty()),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -910,6 +954,58 @@ mod tests {
         assert!(shards[1].is_dirty());
         shards[1].clear_dirty();
         assert!(!shards[1].is_dirty());
+    }
+
+    #[test]
+    fn apply_removed_deltas_replays_a_replica() {
+        // The rank-parallel delta path: replaying (rows, cols) on a replica
+        // must reproduce the originating shard's adjacency and dirty sets.
+        let g = square();
+        let part = Partition::new(4, 2);
+        let mut origin = fresh(part, &g);
+        let mut replica = fresh(part, &g);
+        for sh in origin.iter_mut() {
+            sh.apply_remove(0, 1);
+            sh.apply_remove(0, 2);
+        }
+        for (o, r) in origin.iter_mut().zip(replica.iter_mut()) {
+            let (rows, cols) = o.take_dirty();
+            r.apply_removed_deltas(&rows, &cols);
+            assert_eq!(r.a, o.a, "replica adjacency diverged");
+            assert!(r.is_dirty(), "replica must record the replayed deltas");
+            let (rr, rc) = r.take_dirty();
+            assert_eq!(rr, rows);
+            assert_eq!(rc, cols);
+        }
+    }
+
+    #[test]
+    fn overwrite_tile_mask_replays_a_replica() {
+        let g = square();
+        let part = Partition::new(4, 1);
+        let mut origin = fresh_sparse(part, &g, 2, &[8]).remove(0);
+        let mut replica = origin.clone();
+        origin.apply_remove(0, 1);
+        let dirty = origin.take_dirty_tiles();
+        assert!(!dirty.is_empty());
+        for &t in &dirty {
+            replica.overwrite_tile_mask(t as usize, origin.tiles[t as usize].w.clone());
+        }
+        assert!(replica.is_dirty());
+        assert_eq!(replica.take_dirty_tiles(), dirty);
+        assert_eq!(replica.densify(0), origin.densify(0));
+    }
+
+    #[test]
+    fn shard_set_clear_dirty_clears_every_shard() {
+        let g = square();
+        let part = Partition::new(4, 2);
+        let mut set = ShardSet::Dense(fresh(part, &g));
+        set.apply_select(0, 1);
+        set.clear_dirty();
+        if let ShardSet::Dense(sh) = &set {
+            assert!(sh.iter().all(|s| !s.is_dirty()));
+        }
     }
 
     fn fresh_sparse(part: Partition, g: &Graph, chunk: usize, caps: &[usize]) -> Vec<SparseShard> {

@@ -3,15 +3,14 @@
 //! reconstruction, distributed fwd/bwd, gradient all-reduce + replicated
 //! Adam, and the §4.5.2 repeated-gradient-iterations optimization (τ).
 
-use super::bwd::backward_set;
-use super::engine::{EngineCfg, StepTiming};
-use super::fwd::{forward_set, AnyDeviceState};
+use super::engine::{Engine, EngineCfg, StepTiming};
 use super::replay::{tuples_to_shard_set, BitSet, ReplayBuffer, Tuple};
 use super::selection::top_d;
 use super::shard::{shards_for_graph, sparse_shards_for_graph, ShardSet, Storage};
 use crate::env::{GraphEnv, MvcEnv};
 use crate::graph::{Graph, Partition};
 use crate::model::{Adam, Hyper, Params};
+use crate::parallel::{ExecEngine, RankPool};
 use crate::runtime::Runtime;
 use anyhow::{ensure, Result};
 
@@ -91,6 +90,11 @@ pub struct Trainer<'r> {
     /// Global training-step counter.
     pub global_step: usize,
     episode: usize,
+    /// Persistent worker pool for the rank-parallel engine (None under
+    /// lockstep). One pool serves the whole training run: episode shards
+    /// live in slot 0, minibatches in slot 1, and θ re-publishes only when
+    /// the optimizer actually changed it.
+    pool: Option<RankPool>,
 }
 
 impl<'r> Trainer<'r> {
@@ -151,7 +155,24 @@ impl<'r> Trainer<'r> {
         let adam = Adam::new(cfg.hyper.lr, params.flat.len());
         let replay = ReplayBuffer::new(cfg.hyper.replay_capacity);
         let rng = crate::util::rng::Pcg32::seeded(cfg.seed);
-        Ok(Trainer { rt, cfg, params, graphs, adam, replay, rng, global_step: 0, episode: 0 })
+        let pool = match cfg.engine.mode {
+            Engine::Lockstep => None,
+            Engine::RankParallel => {
+                Some(RankPool::new(rt.manifest.dir.clone(), cfg.engine.p)?)
+            }
+        };
+        Ok(Trainer {
+            rt,
+            cfg,
+            params,
+            graphs,
+            adam,
+            replay,
+            rng,
+            global_step: 0,
+            episode: 0,
+            pool,
+        })
     }
 
     /// Capture a resumable checkpoint (params + optimizer + counters).
@@ -246,17 +267,23 @@ impl<'r> Trainer<'r> {
         };
 
         // Episode-long device residency for the policy-eval forward: the
-        // episode graph's shards are uploaded once, patched per step; θ is
-        // re-pushed only after optimizer steps actually changed it. The
-        // one-time upload cost is carried into the first step's transfer
-        // time so resident-vs-fresh step times stay comparable.
-        let (mut eval_dev, mut carry_h2d) = if self.cfg.device_resident {
-            let d = AnyDeviceState::new(self.rt, &self.params, &mut set)?;
-            let t = d.last_transfer_secs();
-            (Some(d), t)
-        } else {
-            (None, 0.0)
-        };
+        // episode graph's shards are uploaded once (coordinator runtime or
+        // per rank, by engine), patched per step; θ is re-pushed only
+        // after optimizer steps actually changed it. The one-time upload
+        // cost is carried into the first step's transfer time so
+        // resident-vs-fresh step times stay comparable.
+        let pool = self.pool.as_ref();
+        let mut eval_ctx = ExecEngine::install(
+            self.rt,
+            pool,
+            &self.cfg.engine,
+            &self.params,
+            &mut set,
+            self.cfg.device_resident,
+            None,
+            0,
+        )?;
+        let mut carry_h2d = eval_ctx.last_transfer_secs();
         let mut theta_stale = false;
 
         // Tuple awaiting its Bellman target (needs next state's max-Q).
@@ -275,23 +302,22 @@ impl<'r> Trainer<'r> {
 
             // --- policy evaluation on the current state (B=1) ---
             let mut sync_t = std::mem::take(&mut carry_h2d);
-            if let Some(d) = eval_dev.as_mut() {
-                d.sync(&mut set)?;
-                sync_t += d.last_transfer_secs();
-                if theta_stale {
-                    d.refresh_theta(&self.params)?;
-                    sync_t += d.last_transfer_secs();
-                    theta_stale = false;
-                }
+            eval_ctx.sync(&mut set)?;
+            sync_t += eval_ctx.last_transfer_secs();
+            if theta_stale {
+                // Lockstep: re-upload θ into the episode device state.
+                // Rank-parallel: a no-op when the minibatch context already
+                // published these parameters to the workers this step.
+                eval_ctx.refresh_theta(&self.params)?;
+                sync_t += eval_ctx.last_transfer_secs();
+                theta_stale = false;
             }
-            let mut eval = forward_set(
-                self.rt,
+            let mut eval = eval_ctx.forward(
                 &self.cfg.engine,
                 &self.params,
                 &set,
                 false,
                 self.cfg.skip_zero_layer,
-                eval_dev.as_ref(),
             )?;
             // Book the delta-sync/θ-refresh uploads as this step's transfer
             // time so resident-vs-fresh comparisons stay apples-to-apples.
@@ -360,14 +386,19 @@ impl<'r> Trainer<'r> {
                 let scfg = sparse_cfg.as_ref().map(|(c, v)| (*c, v.as_slice()));
                 let (mut bset, mut onehot, mut targets) =
                     tuples_to_shard_set(part, &self.graphs, &batch, self.cfg.storage, scfg);
-                let (mut dev, up_t) = if self.cfg.device_resident {
-                    let d = AnyDeviceState::new(self.rt, &self.params, &mut bset)?;
-                    let t = d.last_transfer_secs();
-                    (Some(d), t)
-                } else {
-                    (None, 0.0)
-                };
-                train_timing.h2d += up_t;
+                // Minibatch context in slot 1 — the episode state stays
+                // resident in slot 0 on the rank-parallel engine.
+                let mut mb_ctx = ExecEngine::install(
+                    self.rt,
+                    pool,
+                    &self.cfg.engine,
+                    &self.params,
+                    &mut bset,
+                    self.cfg.device_resident,
+                    None,
+                    1,
+                )?;
+                train_timing.h2d += mb_ctx.last_transfer_secs();
                 for it in 0..self.cfg.hyper.grad_iters {
                     if it > 0 {
                         if self.cfg.resample_per_iter {
@@ -380,34 +411,26 @@ impl<'r> Trainer<'r> {
                                 self.cfg.storage,
                                 scfg,
                             );
-                            if let Some(d) = dev.as_mut() {
-                                d.rebuild(&mut bset)?;
-                                train_timing.h2d += d.last_transfer_secs();
-                            }
+                            mb_ctx.rebuild(&mut bset)?;
+                            train_timing.h2d += mb_ctx.last_transfer_secs();
                         }
-                        if let Some(d) = dev.as_mut() {
-                            d.refresh_theta(&self.params)?;
-                            train_timing.h2d += d.last_transfer_secs();
-                        }
+                        mb_ctx.refresh_theta(&self.params)?;
+                        train_timing.h2d += mb_ctx.last_transfer_secs();
                     }
-                    let fwd = forward_set(
-                        self.rt,
+                    let fwd = mb_ctx.forward(
                         &self.cfg.engine,
                         &self.params,
                         &bset,
                         true,
                         self.cfg.skip_zero_layer,
-                        dev.as_ref(),
                     )?;
-                    let out = backward_set(
-                        self.rt,
+                    let out = mb_ctx.backward(
                         &self.cfg.engine,
                         &self.params,
                         &bset,
-                        fwd.acts.as_ref().unwrap(),
+                        fwd.acts.as_ref(),
                         &onehot,
                         &targets,
-                        dev.as_ref(),
                     )?;
                     self.adam.step(&mut self.params.flat, &out.grads);
                     losses += out.loss;

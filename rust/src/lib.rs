@@ -29,6 +29,9 @@ pub mod runtime;
 /// L3 coordinator: shard state, distributed fwd/bwd, selection, RL
 /// inference/training loops, replay, metrics.
 pub mod coordinator;
+/// Rank-parallel execution engine: persistent worker ranks with per-rank
+/// device residency and real collectives (DESIGN.md §9).
+pub mod parallel;
 /// Graph-level batched solve engine and its job-queue front-end.
 pub mod batch;
 /// Persistent solver service: incremental job admission, streaming

@@ -1,0 +1,225 @@
+//! Rank-parallel execution engine (DESIGN.md §9).
+//!
+//! Promotes true concurrency to the solve/train hot path: a persistent
+//! [`RankPool`] of P worker threads — each owning a thread-local PJRT
+//! [`Runtime`](crate::runtime::Runtime), its rank's device-resident state,
+//! and a per-rank θ cache that survives packs — synchronizing through the
+//! chunked, rank-order-deterministic collectives of `crate::collective`.
+//! This is the production reproduction of the paper's parallel training
+//! and inference algorithms (Alg. 2-5): the same SPMD per-rank programs
+//! the lockstep engine simulates, executed by real concurrent ranks.
+//!
+//! [`ExecEngine`] is the abstraction the solve/train loops drive: one
+//! install/sync/rebuild/forward/backward surface dispatching to either the
+//! single-threaded lockstep engine (DESIGN.md §3, the measurement
+//! reference) or the rank pool, selected by
+//! [`EngineCfg::mode`](crate::coordinator::engine::EngineCfg) /
+//! `--engine`. Solutions and scores are pinned identical across the two
+//! (rust/tests/parallel_equivalence.rs).
+
+mod pool;
+mod worker;
+
+pub use crate::coordinator::engine::Engine;
+pub use pool::RankPool;
+
+use crate::coordinator::bwd::{backward_set, GradOutput};
+use crate::coordinator::engine::EngineCfg;
+use crate::coordinator::fwd::{forward_set, Activations, AnyDeviceState, FwdOutput, ThetaCache};
+use crate::coordinator::shard::ShardSet;
+use crate::model::Params;
+use crate::runtime::Runtime;
+use anyhow::{ensure, Context, Result};
+
+/// One solve's execution context: device residency plus the forward /
+/// backward entry points, behind one surface for both engines. The
+/// lockstep arm wraps the classic `&Runtime` + [`AnyDeviceState`] pair;
+/// the rank-parallel arm drives a [`RankPool`] slot (uninstalled when the
+/// context drops — θ and compiled executables stay warm on the pool).
+pub enum ExecEngine<'a> {
+    /// Single-threaded lockstep simulation (DESIGN.md §3).
+    Lockstep {
+        /// The coordinator's runtime.
+        rt: &'a Runtime,
+        /// Device residency for this solve (None = fresh-upload path).
+        dev: Option<AnyDeviceState<'a>>,
+    },
+    /// Persistent rank pool (DESIGN.md §9).
+    Ranks {
+        /// The session- or solve-owned pool.
+        pool: &'a RankPool,
+        /// Pack slot this context installed (trainers use slot 0 for the
+        /// episode state and slot 1 for the minibatch).
+        slot: usize,
+        /// Slowest rank's transfer seconds of the most recent upload op.
+        xfer: f64,
+    },
+}
+
+impl<'a> ExecEngine<'a> {
+    /// Build the execution context for one solve: uploads device state
+    /// (when `resident`) on the lockstep engine, or installs the pack into
+    /// `slot` on the rank pool — which must be `Some` and sized P when
+    /// `cfg.mode` is [`Engine::RankParallel`]. The lockstep θ upload goes
+    /// through `theta` when given (the service's shared cache); the rank
+    /// engine's per-rank θ caches make that parameter moot there.
+    #[allow(clippy::too_many_arguments)]
+    pub fn install(
+        rt: &'a Runtime,
+        pool: Option<&'a RankPool>,
+        cfg: &EngineCfg,
+        params: &Params,
+        set: &mut ShardSet,
+        resident: bool,
+        theta: Option<&ThetaCache>,
+        slot: usize,
+    ) -> Result<ExecEngine<'a>> {
+        match cfg.mode {
+            Engine::Lockstep => {
+                let dev = if resident {
+                    Some(AnyDeviceState::new_in(rt, params, set, theta)?)
+                } else {
+                    None
+                };
+                Ok(ExecEngine::Lockstep { rt, dev })
+            }
+            Engine::RankParallel => {
+                let pool = pool.context(
+                    "rank-parallel engine selected but no RankPool was provided",
+                )?;
+                ensure!(
+                    pool.p() == cfg.p,
+                    "rank pool has {} ranks but the engine config wants P={}",
+                    pool.p(),
+                    cfg.p
+                );
+                let xfer = pool.install(slot, params, set, resident)?;
+                Ok(ExecEngine::Ranks { pool, slot, xfer })
+            }
+        }
+    }
+
+    /// Simulated transfer seconds of the most recent upload operation
+    /// (install / sync / rebuild / refresh_theta) — what the solve loops
+    /// book into `StepTiming::h2d`.
+    pub fn last_transfer_secs(&self) -> f64 {
+        match self {
+            ExecEngine::Lockstep { dev, .. } => {
+                dev.as_ref().map_or(0.0, |d| d.last_transfer_secs())
+            }
+            ExecEngine::Ranks { xfer, .. } => *xfer,
+        }
+    }
+
+    /// Push the shards' recorded dirty deltas to the device copies (dense:
+    /// row/col masks; sparse: dirty tile live-masks). A lockstep fresh
+    /// context is a no-op (deltas ride in the next full upload); the rank
+    /// engine always ships them — its workers' replicas must track the
+    /// coordinator's state.
+    pub fn sync(&mut self, set: &mut ShardSet) -> Result<()> {
+        match self {
+            ExecEngine::Lockstep { dev, .. } => {
+                if let Some(d) = dev.as_mut() {
+                    d.sync(set)?;
+                }
+                Ok(())
+            }
+            ExecEngine::Ranks { pool, slot, xfer } => {
+                *xfer = pool.sync(*slot, set)?;
+                Ok(())
+            }
+        }
+    }
+
+    /// Invalidate + re-upload after a compaction repack (the batch
+    /// capacity, and with it every buffer shape, may have changed).
+    pub fn rebuild(&mut self, set: &mut ShardSet) -> Result<()> {
+        match self {
+            ExecEngine::Lockstep { dev, .. } => {
+                if let Some(d) = dev.as_mut() {
+                    d.rebuild(set)?;
+                }
+                Ok(())
+            }
+            ExecEngine::Ranks { pool, slot, xfer } => {
+                *xfer = pool.rebuild(*slot, set)?;
+                Ok(())
+            }
+        }
+    }
+
+    /// Re-publish θ after an optimizer step. The rank engine publishes to
+    /// every rank at most once per parameter content (a no-op when another
+    /// context already pushed the same parameters this step).
+    pub fn refresh_theta(&mut self, params: &Params) -> Result<()> {
+        match self {
+            ExecEngine::Lockstep { dev, .. } => {
+                if let Some(d) = dev.as_mut() {
+                    d.refresh_theta(params)?;
+                }
+                Ok(())
+            }
+            ExecEngine::Ranks { pool, xfer, .. } => {
+                *xfer = pool.ensure_params(params)?;
+                Ok(())
+            }
+        }
+    }
+
+    /// One distributed policy evaluation of the installed pack. On the
+    /// rank engine, `save`d activations stay rank-local (the returned
+    /// `acts` is `None`) and are consumed by the following
+    /// [`ExecEngine::backward`].
+    pub fn forward(
+        &mut self,
+        cfg: &EngineCfg,
+        params: &Params,
+        set: &ShardSet,
+        save: bool,
+        skip_zero: bool,
+    ) -> Result<FwdOutput> {
+        match self {
+            ExecEngine::Lockstep { rt, dev } => {
+                forward_set(*rt, cfg, params, set, save, skip_zero, dev.as_ref())
+            }
+            ExecEngine::Ranks { pool, slot, .. } => {
+                pool.forward(*slot, cfg, set, save, skip_zero)
+            }
+        }
+    }
+
+    /// One distributed backward pass. The lockstep arm consumes the
+    /// activations returned by its forward (`acts` must be `Some`); the
+    /// rank arm uses the activations its workers kept from the last
+    /// `save` forward.
+    pub fn backward(
+        &mut self,
+        cfg: &EngineCfg,
+        params: &Params,
+        set: &ShardSet,
+        acts: Option<&Activations>,
+        onehot: &[f32],
+        targets: &[f32],
+    ) -> Result<GradOutput> {
+        match self {
+            ExecEngine::Lockstep { rt, dev } => {
+                let acts =
+                    acts.context("lockstep backward needs the forward's saved activations")?;
+                backward_set(*rt, cfg, params, set, acts, onehot, targets, dev.as_ref())
+            }
+            ExecEngine::Ranks { pool, slot, .. } => {
+                pool.backward(*slot, cfg, onehot, targets)
+            }
+        }
+    }
+
+}
+
+impl Drop for ExecEngine<'_> {
+    fn drop(&mut self) {
+        if let ExecEngine::Ranks { pool, slot, .. } = self {
+            // Free the pack's device buffers; θ and executables stay warm.
+            let _ = pool.uninstall(*slot);
+        }
+    }
+}

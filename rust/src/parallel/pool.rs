@@ -1,0 +1,505 @@
+//! The persistent rank pool: P long-lived worker threads driven over
+//! message channels by the (single-threaded) coordinator.
+//!
+//! Lifecycle (DESIGN.md §9): a pool is created once per session (Service /
+//! Trainer) or per solve (one-shot CLI paths); each worker constructs its
+//! own [`Runtime`] at spawn and keeps a per-rank θ cache warm across
+//! packs. Per pack, the coordinator *installs* each rank's shard replica
+//! (slot-addressed, so a trainer can keep the episode state and the
+//! current minibatch resident simultaneously), then per step ships only
+//! compact deltas (dirty rows/cols or dirty tile masks) and the small S/C
+//! masks. Shared immutable inputs — parameters, loss targets — cross the
+//! channel as `Arc`s, so publishing them is O(1) per rank, not O(N+E)
+//! (the fix for the old per-call engine's full-graph clones).
+//!
+//! Failure semantics: a worker that errors aborts the collective group
+//! (waking sibling ranks mid-collective), the pool surfaces one contextful
+//! error naming the originating rank, and the next `install` transparently
+//! resets the collective group so the pool stays usable — a failed rank
+//! becomes a per-job error at the service boundary, never a wedged
+//! process.
+
+use super::worker;
+use crate::collective::Communicator;
+use crate::coordinator::bwd::GradOutput;
+use crate::coordinator::engine::{EngineCfg, StepTiming};
+use crate::coordinator::fwd::FwdOutput;
+use crate::coordinator::shard::ShardSet;
+use crate::model::Params;
+use crate::runtime::ExecStats;
+use anyhow::{anyhow, bail, ensure, Context, Result};
+use std::cell::RefCell;
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// One rank's shard replica shipped at install/rebuild.
+pub(crate) enum RankShard {
+    Dense(crate::coordinator::shard::ShardState),
+    Sparse(crate::coordinator::shard::SparseShard),
+}
+
+/// Per-rank state delta shipped at sync (the rank-parallel twin of the
+/// lockstep `DeviceState::sync` inputs).
+pub(crate) enum SyncDelta {
+    Dense { rows: Vec<(u32, u32)>, cols: Vec<(u32, u32)> },
+    Sparse { tiles: Vec<(u32, Vec<f32>)> },
+}
+
+/// Per-rank forward request: the per-step masks plus loop knobs.
+pub(crate) struct FwdReq {
+    pub l: usize,
+    pub save: bool,
+    pub skip_zero: bool,
+    pub s: Vec<f32>,
+    pub c: Vec<f32>,
+    pub deg: Option<Vec<f32>>,
+}
+
+/// Coordinator → worker requests. Every request except `Shutdown` gets
+/// exactly one [`Resp`].
+pub(crate) enum Req {
+    SetParams(Arc<Params>),
+    NewComm(Communicator),
+    Install { slot: usize, shard: RankShard, resident: bool },
+    Sync { slot: usize, delta: SyncDelta },
+    Rebuild { slot: usize, shard: RankShard },
+    Forward { slot: usize, f: FwdReq },
+    Backward { slot: usize, l: usize, onehot: Arc<Vec<f32>>, targets: Arc<Vec<f32>> },
+    Uninstall { slot: usize },
+    Stats,
+    InjectFailure,
+    Shutdown,
+}
+
+/// Measured per-rank attribution of one forward/backward, aggregated by
+/// the pool into a [`StepTiming`] so rank-parallel and lockstep metrics
+/// stay column-compatible (compute per rank; host/comm/h2d max-aggregated
+/// where per-rank work overlaps in real time).
+#[derive(Debug, Clone, Copy, Default)]
+pub(crate) struct RankTiming {
+    pub compute: f64,
+    pub host: f64,
+    /// Seconds this rank spent blocked inside collectives.
+    pub comm: f64,
+    pub h2d: f64,
+    pub comm_bytes: u64,
+    pub collectives: u64,
+}
+
+/// Worker → coordinator responses.
+pub(crate) enum Resp {
+    /// Generic acknowledgment; `xfer` is the simulated transfer seconds of
+    /// the acknowledged upload operation (0 when nothing moved).
+    Unit { xfer: f64 },
+    Fwd { scores: Option<Vec<f32>>, timing: RankTiming },
+    Bwd { loss: f32, grads: Option<Vec<f32>>, timing: RankTiming },
+    Stats(ExecStats),
+    Err(String),
+}
+
+struct WorkerHandle {
+    tx: Sender<Req>,
+    rx: Receiver<Resp>,
+    join: Option<JoinHandle<()>>,
+}
+
+struct PoolCtl {
+    /// Flat copy of the last published parameters (change detection: a
+    /// warm pool re-publishes θ only when the content actually changed —
+    /// the zero-θ-bytes warm-pack property).
+    last_params: Option<Vec<f32>>,
+    /// Set after any failed operation; the next install resets the
+    /// collective group before proceeding.
+    poisoned: bool,
+}
+
+/// A persistent pool of P rank workers (DESIGN.md §9). Single-threaded
+/// coordinator side; the workers own the concurrency.
+pub struct RankPool {
+    p: usize,
+    workers: Vec<WorkerHandle>,
+    ctl: RefCell<PoolCtl>,
+}
+
+impl RankPool {
+    /// Spawn P persistent rank workers over the artifact directory. Each
+    /// worker constructs its own PJRT runtime; failure on any rank (e.g.
+    /// the offline xla stub) fails construction with that rank's error.
+    pub fn new(dir: impl Into<PathBuf>, p: usize) -> Result<RankPool> {
+        ensure!(p >= 1, "rank pool needs at least one rank");
+        let dir = dir.into();
+        // Runtime::new sets TF_CPP_MIN_LOG_LEVEL when unset; do that once
+        // here, before any worker exists, so P concurrent runtime startups
+        // never race the (non-thread-safe) env mutation.
+        if std::env::var_os("TF_CPP_MIN_LOG_LEVEL").is_none() {
+            std::env::set_var("TF_CPP_MIN_LOG_LEVEL", "1");
+        }
+        let comms = Communicator::create(p);
+        let mut workers = Vec::with_capacity(p);
+        for (rank, comm) in comms.into_iter().enumerate() {
+            let (tx, worker_rx) = channel::<Req>();
+            let (worker_tx, rx) = channel::<Resp>();
+            let d = dir.clone();
+            let join = std::thread::Builder::new()
+                .name(format!("oggm-rank{rank}"))
+                .spawn(move || worker::worker_main(d, rank, comm, worker_rx, worker_tx))
+                .context("spawning rank worker")?;
+            workers.push(WorkerHandle { tx, rx, join: Some(join) });
+        }
+        let pool = RankPool {
+            p,
+            workers,
+            ctl: RefCell::new(PoolCtl { last_params: None, poisoned: false }),
+        };
+        // Startup handshake: every worker acknowledges its runtime.
+        pool.collect_unit("start rank runtimes")?;
+        Ok(pool)
+    }
+
+    /// Number of worker ranks P.
+    pub fn p(&self) -> usize {
+        self.p
+    }
+
+    fn send_all<F: FnMut(usize) -> Req>(&self, mut f: F) -> Result<()> {
+        for (i, w) in self.workers.iter().enumerate() {
+            if w.tx.send(f(i)).is_err() {
+                self.ctl.borrow_mut().poisoned = true;
+                bail!("rank {i} worker is gone");
+            }
+        }
+        Ok(())
+    }
+
+    /// Collect one response per worker, in rank order. Any error response
+    /// (or dead worker) poisons the pool and surfaces as one contextful
+    /// error preferring the originating failure over abort echoes.
+    fn recv_all(&self, what: &str) -> Result<Vec<Resp>> {
+        let mut out = Vec::with_capacity(self.p);
+        let mut errs: Vec<(usize, String)> = Vec::new();
+        for (i, w) in self.workers.iter().enumerate() {
+            match w.rx.recv() {
+                Ok(Resp::Err(e)) => errs.push((i, e)),
+                Ok(r) => out.push(r),
+                Err(_) => errs.push((i, format!("rank {i}: worker thread died"))),
+            }
+        }
+        if !errs.is_empty() {
+            self.ctl.borrow_mut().poisoned = true;
+            let primary = errs
+                .iter()
+                .find(|(_, e)| !e.contains("aborted by rank"))
+                .unwrap_or(&errs[0]);
+            let extra = if errs.len() > 1 {
+                format!(" ({} of {} ranks affected)", errs.len(), self.p)
+            } else {
+                String::new()
+            };
+            bail!("{what} failed: {}{extra}", primary.1);
+        }
+        Ok(out)
+    }
+
+    /// Collect unit acknowledgments; returns the slowest rank's transfer
+    /// seconds (per-rank uploads overlap in real time).
+    fn collect_unit(&self, what: &str) -> Result<f64> {
+        let resps = self.recv_all(what)?;
+        let mut xfer = 0.0f64;
+        for (i, r) in resps.into_iter().enumerate() {
+            match r {
+                Resp::Unit { xfer: x } => xfer = xfer.max(x),
+                _ => bail!("rank {i}: unexpected response during {what}"),
+            }
+        }
+        Ok(xfer)
+    }
+
+    /// Recover from an earlier failed operation: drain stale responses and
+    /// hand every worker a fresh collective group (an aborted group is
+    /// permanently failed by design).
+    fn ensure_live(&self) -> Result<()> {
+        if !self.ctl.borrow().poisoned {
+            return Ok(());
+        }
+        for w in &self.workers {
+            while w.rx.try_recv().is_ok() {}
+        }
+        let comms = Communicator::create(self.p);
+        self.send_all(|i| Req::NewComm(comms[i].clone()))?;
+        self.collect_unit("reset collectives")?;
+        self.ctl.borrow_mut().poisoned = false;
+        Ok(())
+    }
+
+    /// Publish parameters to every rank if they changed since the last
+    /// publish: each worker re-uploads θ through its per-rank cache once.
+    /// Returns the slowest rank's upload seconds (0.0 on a warm no-op).
+    pub fn ensure_params(&self, params: &Params) -> Result<f64> {
+        if self.ctl.borrow().last_params.as_deref() == Some(params.flat.as_slice()) {
+            return Ok(0.0);
+        }
+        let arc = Arc::new(params.clone());
+        self.send_all(|_| Req::SetParams(arc.clone()))?;
+        let xfer = self.collect_unit("publish parameters")?;
+        self.ctl.borrow_mut().last_params = Some(params.flat.clone());
+        Ok(xfer)
+    }
+
+    /// Install a pack into `slot`: publish parameters (if changed), ship
+    /// each rank its shard replica, and build per-rank device residency
+    /// when `resident`. Clears the coordinator shards' dirty deltas — the
+    /// replicas capture the current state. Returns transfer seconds.
+    pub fn install(
+        &self,
+        slot: usize,
+        params: &Params,
+        set: &mut ShardSet,
+        resident: bool,
+    ) -> Result<f64> {
+        self.ensure_live()?;
+        let mut xfer = self.ensure_params(params)?;
+        set.clear_dirty();
+        self.send_shards(|shard| Req::Install { slot, shard, resident }, set)?;
+        xfer += self.collect_unit("install pack")?;
+        Ok(xfer)
+    }
+
+    /// Ship fresh shard replicas after a repack (capacity/shape change);
+    /// per-rank device state is rebuilt, θ is kept. Returns transfer secs.
+    pub fn rebuild(&self, slot: usize, set: &mut ShardSet) -> Result<f64> {
+        set.clear_dirty();
+        self.send_shards(|shard| Req::Rebuild { slot, shard }, set)?;
+        self.collect_unit("rebuild pack")
+    }
+
+    fn send_shards<F: Fn(RankShard) -> Req>(&self, f: F, set: &ShardSet) -> Result<()> {
+        match set {
+            ShardSet::Dense(shards) => {
+                ensure!(
+                    shards.len() == self.p,
+                    "pack has {} shards but the pool has {} ranks",
+                    shards.len(),
+                    self.p
+                );
+                self.send_all(|i| f(RankShard::Dense(shards[i].clone())))
+            }
+            ShardSet::Sparse(shards) => {
+                ensure!(
+                    shards.len() == self.p,
+                    "pack has {} shards but the pool has {} ranks",
+                    shards.len(),
+                    self.p
+                );
+                self.send_all(|i| f(RankShard::Sparse(shards[i].clone())))
+            }
+        }
+    }
+
+    /// Consume the coordinator shards' dirty deltas and ship them to the
+    /// ranks (dense: zeroed rows/cols; sparse: dirty tile masks), which
+    /// patch their replicas and device copies. A fully-clean set (e.g.
+    /// the first round after install, or MaxCut solves that never remove
+    /// nodes) skips the channel round-trip entirely. Returns transfer
+    /// seconds.
+    pub fn sync(&self, slot: usize, set: &mut ShardSet) -> Result<f64> {
+        let clean = match set {
+            ShardSet::Dense(shards) => shards.iter().all(|sh| !sh.is_dirty()),
+            ShardSet::Sparse(shards) => shards.iter().all(|sh| !sh.is_dirty()),
+        };
+        if clean {
+            return Ok(0.0);
+        }
+        let deltas: Vec<SyncDelta> = match set {
+            ShardSet::Dense(shards) => shards
+                .iter_mut()
+                .map(|sh| {
+                    let (rows, cols) = sh.take_dirty();
+                    SyncDelta::Dense { rows, cols }
+                })
+                .collect(),
+            ShardSet::Sparse(shards) => shards
+                .iter_mut()
+                .map(|sh| {
+                    let tiles = sh
+                        .take_dirty_tiles()
+                        .into_iter()
+                        .map(|t| (t, sh.tiles[t as usize].w.clone()))
+                        .collect();
+                    SyncDelta::Sparse { tiles }
+                })
+                .collect(),
+        };
+        let mut it = deltas.into_iter();
+        self.send_all(|_| Req::Sync { slot, delta: it.next().unwrap() })?;
+        self.collect_unit("sync pack deltas")
+    }
+
+    /// One rank-concurrent distributed policy evaluation of the installed
+    /// pack. `set` supplies each rank's current S/C (and sparse degree)
+    /// masks; activations saved under `save` stay rank-local for the
+    /// following [`RankPool::backward`].
+    pub fn forward(
+        &self,
+        slot: usize,
+        cfg: &EngineCfg,
+        set: &ShardSet,
+        save: bool,
+        skip_zero: bool,
+    ) -> Result<FwdOutput> {
+        let wall = Instant::now();
+        match set {
+            ShardSet::Dense(shards) => self.send_all(|i| Req::Forward {
+                slot,
+                f: FwdReq {
+                    l: cfg.l,
+                    save,
+                    skip_zero,
+                    s: shards[i].s.clone(),
+                    c: shards[i].c.clone(),
+                    deg: None,
+                },
+            })?,
+            ShardSet::Sparse(shards) => self.send_all(|i| Req::Forward {
+                slot,
+                f: FwdReq {
+                    l: cfg.l,
+                    save,
+                    skip_zero,
+                    s: shards[i].s.clone(),
+                    c: shards[i].c.clone(),
+                    deg: Some(shards[i].deg.clone()),
+                },
+            })?,
+        }
+        let resps = self.recv_all("rank-parallel forward")?;
+        let (scores, timing) = self.fold_fwd(resps, wall)?;
+        Ok(FwdOutput { scores, acts: None, timing })
+    }
+
+    fn fold_fwd(&self, resps: Vec<Resp>, wall: Instant) -> Result<(Vec<f32>, StepTiming)> {
+        let mut timing = StepTiming::new(self.p);
+        let mut scores = None;
+        for (i, r) in resps.into_iter().enumerate() {
+            let Resp::Fwd { scores: sc, timing: t } = r else {
+                bail!("rank {i}: unexpected response to forward");
+            };
+            fold_rank_timing(&mut timing, i, &t);
+            if sc.is_some() {
+                scores = sc;
+            }
+        }
+        timing.wall = wall.elapsed().as_secs_f64();
+        Ok((scores.context("rank 0 returned no scores")?, timing))
+    }
+
+    /// One rank-concurrent distributed backward over the activations the
+    /// last `save` forward left on the ranks. The gradient all-reduce runs
+    /// inside the workers; rank 0 returns the (replicated) result.
+    pub fn backward(
+        &self,
+        slot: usize,
+        cfg: &EngineCfg,
+        onehot: &[f32],
+        targets: &[f32],
+    ) -> Result<GradOutput> {
+        let wall = Instant::now();
+        let onehot = Arc::new(onehot.to_vec());
+        let targets = Arc::new(targets.to_vec());
+        self.send_all(|_| Req::Backward {
+            slot,
+            l: cfg.l,
+            onehot: onehot.clone(),
+            targets: targets.clone(),
+        })?;
+        let resps = self.recv_all("rank-parallel backward")?;
+        let mut timing = StepTiming::new(self.p);
+        let (mut loss, mut grads) = (0.0f32, None);
+        for (i, r) in resps.into_iter().enumerate() {
+            let Resp::Bwd { loss: lo, grads: g, timing: t } = r else {
+                bail!("rank {i}: unexpected response to backward");
+            };
+            fold_rank_timing(&mut timing, i, &t);
+            if i == 0 {
+                loss = lo;
+            }
+            if g.is_some() {
+                grads = g;
+            }
+        }
+        timing.wall = wall.elapsed().as_secs_f64();
+        Ok(GradOutput { loss, grads: grads.context("rank 0 returned no gradients")?, timing })
+    }
+
+    /// Drop the pack installed in `slot` on every rank (device buffers are
+    /// evicted; θ and compiled executables stay warm).
+    pub fn uninstall(&self, slot: usize) -> Result<()> {
+        self.send_all(|_| Req::Uninstall { slot })?;
+        self.collect_unit("uninstall pack")?;
+        Ok(())
+    }
+
+    /// Per-rank runtime counter snapshots, in rank order (each rank's h2d
+    /// bytes, executions, cache hits — the warm-pool observables).
+    pub fn rank_stats(&self) -> Result<Vec<ExecStats>> {
+        self.send_all(|_| Req::Stats)?;
+        let resps = self.recv_all("rank stats")?;
+        let mut out = Vec::with_capacity(self.p);
+        for (i, r) in resps.into_iter().enumerate() {
+            let Resp::Stats(s) = r else {
+                bail!("rank {i}: unexpected response to stats");
+            };
+            out.push(s);
+        }
+        Ok(out)
+    }
+
+    /// Summed runtime counters across all ranks (the pool-level
+    /// [`ExecStats`] the pack/queue metrics book).
+    pub fn stats(&self) -> Result<ExecStats> {
+        let mut total = ExecStats::default();
+        for s in self.rank_stats()? {
+            total.add(&s);
+        }
+        Ok(total)
+    }
+
+    /// Test hook: make `rank`'s worker fail its next forward (exercises
+    /// the abort-instead-of-deadlock path end to end).
+    #[doc(hidden)]
+    pub fn inject_failure(&self, rank: usize) -> Result<()> {
+        let w = self.workers.get(rank).ok_or_else(|| anyhow!("no rank {rank}"))?;
+        w.tx.send(Req::InjectFailure).map_err(|_| anyhow!("rank {rank} worker is gone"))?;
+        match w.rx.recv() {
+            Ok(Resp::Unit { .. }) => Ok(()),
+            _ => bail!("rank {rank}: unexpected response to inject_failure"),
+        }
+    }
+}
+
+/// Merge one rank's measured attribution into the pool-level timing.
+fn fold_rank_timing(timing: &mut StepTiming, rank: usize, t: &RankTiming) {
+    timing.compute[rank] = t.compute;
+    timing.host = timing.host.max(t.host);
+    timing.comm = timing.comm.max(t.comm);
+    timing.h2d = timing.h2d.max(t.h2d);
+    if rank == 0 {
+        timing.comm_bytes = t.comm_bytes;
+        timing.collectives = t.collectives;
+    }
+}
+
+impl Drop for RankPool {
+    fn drop(&mut self) {
+        for w in &self.workers {
+            let _ = w.tx.send(Req::Shutdown);
+        }
+        for w in &mut self.workers {
+            if let Some(j) = w.join.take() {
+                let _ = j.join();
+            }
+        }
+    }
+}

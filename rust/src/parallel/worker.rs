@@ -1,0 +1,1258 @@
+//! The rank worker: one long-lived thread per rank, owning a thread-local
+//! [`Runtime`] (PJRT handles are not `Send`), its rank's host shard mirror,
+//! its per-rank device residency, and a per-rank θ cache that persists
+//! across packs — the engine's warm-pool optimization (DESIGN.md §9).
+//!
+//! The worker executes the same SPMD per-rank programs as the lockstep
+//! engine's per-shard loops (Alg. 2-5), with the α–β-modeled collectives
+//! replaced by real [`Communicator`] operations. Because the communicator's
+//! all-reduce is rank-order deterministic (collective/comm.rs), scores and
+//! gradients match the lockstep engine's sequential host reductions.
+//!
+//! Failure discipline: any error or panic while handling a request aborts
+//! the collective group before the error response is sent, so sibling
+//! ranks blocked mid-collective wake with a contextful error instead of
+//! deadlocking (the hang-on-failure fix of ISSUE 5).
+
+use super::pool::{FwdReq, RankShard, RankTiming, Req, Resp, SyncDelta};
+use crate::collective::Communicator;
+use crate::coordinator::engine::StepTiming;
+use crate::coordinator::fwd::{
+    upload_tiles_fresh, AnyDeviceState, DeviceState, SparseDeviceState, ThetaCache, ThetaViews,
+};
+use crate::coordinator::shard::{ShardSet, ShardState, SparseShard};
+use crate::model::Params;
+use crate::runtime::{artifact_name, sparse_msg_name, sparse_pre_name, HostTensor, Input, Runtime};
+use crate::util::add_assign;
+use anyhow::{anyhow, bail, ensure, Context, Result};
+use std::path::PathBuf;
+use std::rc::Rc;
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Saved activations of this rank's last `save` forward (consumed by the
+/// following backward; the per-rank twin of `fwd::Activations` — they never
+/// leave the worker, which is what makes training minibatches rank-local).
+struct RankActs {
+    pre: Vec<f32>,
+    /// Per layer: this rank's local slice of the all-reduced message.
+    nbr_slice: Vec<Vec<f32>>,
+    embed_final: Vec<f32>,
+    sum_all: Vec<f32>,
+    scores_i: Vec<f32>,
+}
+
+/// One installed pack slot: the host mirror of this rank's shard plus its
+/// device residency. Multiple slots let a trainer keep the episode state
+/// and the current minibatch resident at once.
+struct Pack<'r> {
+    mirror: ShardSet,
+    dev: Option<AnyDeviceState<'r>>,
+    acts: Option<RankActs>,
+}
+
+/// Worker-persistent state that outlives packs.
+struct WorkerState {
+    rank: usize,
+    comm: Communicator,
+    /// Per-rank θ namespace; survives packs, so θ re-uploads only when the
+    /// parameters actually change (the warm-pool zero-θ-bytes property).
+    theta: ThetaCache,
+    /// The θ buffers published at the cache's current generation.
+    theta_bufs: Vec<Rc<xla::PjRtBuffer>>,
+    params: Option<Arc<Params>>,
+    fail_next: bool,
+}
+
+fn pack_mut<'a, 'r>(
+    packs: &'a mut Vec<Option<Pack<'r>>>,
+    slot: usize,
+) -> Result<&'a mut Pack<'r>> {
+    packs
+        .get_mut(slot)
+        .and_then(|p| p.as_mut())
+        .ok_or_else(|| anyhow!("no pack installed in slot {slot}"))
+}
+
+/// Worker thread entry: construct the thread-local runtime, acknowledge
+/// startup, then serve requests until shutdown. Every request gets exactly
+/// one response; failures abort the collective group first.
+pub(crate) fn worker_main(
+    dir: PathBuf,
+    rank: usize,
+    comm: Communicator,
+    rx: Receiver<Req>,
+    tx: Sender<Resp>,
+) {
+    let rt = match Runtime::new(&dir) {
+        Ok(rt) => {
+            let _ = tx.send(Resp::Unit { xfer: 0.0 });
+            rt
+        }
+        Err(e) => {
+            let _ = tx.send(Resp::Err(format!("rank {rank}: runtime start failed: {e:#}")));
+            return;
+        }
+    };
+    let mut st = WorkerState {
+        rank,
+        comm,
+        theta: ThetaCache::new(&rt),
+        theta_bufs: Vec::new(),
+        params: None,
+        fail_next: false,
+    };
+    let mut packs: Vec<Option<Pack>> = Vec::new();
+    while let Ok(req) = rx.recv() {
+        if matches!(req, Req::Shutdown) {
+            break;
+        }
+        let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            handle(&rt, &mut st, &mut packs, req)
+        }))
+        .unwrap_or_else(|payload| {
+            // Preserve the panic message (e.g. a length-mismatch assert)
+            // so the surfaced error stays contextful, not just "panicked".
+            let msg = payload
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| payload.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "unknown panic payload".into());
+            Err(anyhow!("worker panicked: {msg}"))
+        });
+        let resp = match out {
+            Ok(r) => r,
+            Err(e) => {
+                let msg = format!("rank {rank}: {e:#}");
+                // Wake sibling ranks blocked in a collective before the
+                // coordinator even sees this error — no deadlock window.
+                st.comm.abort(msg.clone());
+                Resp::Err(msg)
+            }
+        };
+        if tx.send(resp).is_err() {
+            break;
+        }
+    }
+}
+
+fn handle<'r>(
+    rt: &'r Runtime,
+    st: &mut WorkerState,
+    packs: &mut Vec<Option<Pack<'r>>>,
+    req: Req,
+) -> Result<Resp> {
+    match req {
+        Req::SetParams(p) => {
+            // Publish θ through the per-rank cache namespace: later device
+            // states built against the cache hit without a transfer, and a
+            // mid-pack refresh (optimizer step) re-points `theta_bufs`
+            // without rebuilding any pack state.
+            st.theta.bump();
+            let t0 = Instant::now();
+            st.theta_bufs.clear();
+            for i in 0..7 {
+                st.theta_bufs.push(rt.upload_keyed(
+                    &st.theta.theta_key(i),
+                    st.theta.generation(),
+                    &p.theta_dims(i),
+                    p.theta(i),
+                )?);
+            }
+            st.params = Some(p);
+            Ok(Resp::Unit { xfer: t0.elapsed().as_secs_f64() })
+        }
+        Req::NewComm(c) => {
+            st.comm = c;
+            Ok(Resp::Unit { xfer: 0.0 })
+        }
+        Req::Install { slot, shard, resident } => {
+            let params =
+                st.params.clone().context("install before parameters were published")?;
+            let mut mirror = match shard {
+                RankShard::Dense(sh) => ShardSet::Dense(vec![sh]),
+                RankShard::Sparse(sh) => ShardSet::Sparse(vec![sh]),
+            };
+            let (dev, xfer) = if resident {
+                let d = AnyDeviceState::new_in(rt, &params, &mut mirror, Some(&st.theta))?;
+                let x = d.last_transfer_secs();
+                (Some(d), x)
+            } else {
+                (None, 0.0)
+            };
+            if packs.len() <= slot {
+                packs.resize_with(slot + 1, || None);
+            }
+            packs[slot] = Some(Pack { mirror, dev, acts: None });
+            Ok(Resp::Unit { xfer })
+        }
+        Req::Rebuild { slot, shard } => {
+            let pack = pack_mut(packs, slot)?;
+            pack.mirror = match shard {
+                RankShard::Dense(sh) => ShardSet::Dense(vec![sh]),
+                RankShard::Sparse(sh) => ShardSet::Sparse(vec![sh]),
+            };
+            pack.acts = None;
+            let xfer = match pack.dev.as_mut() {
+                Some(d) => {
+                    d.rebuild(&mut pack.mirror)?;
+                    d.last_transfer_secs()
+                }
+                None => 0.0,
+            };
+            Ok(Resp::Unit { xfer })
+        }
+        Req::Sync { slot, delta } => {
+            let pack = pack_mut(packs, slot)?;
+            match (&mut pack.mirror, delta) {
+                (ShardSet::Dense(shards), SyncDelta::Dense { rows, cols }) => {
+                    shards[0].apply_removed_deltas(&rows, &cols);
+                }
+                (ShardSet::Sparse(shards), SyncDelta::Sparse { tiles }) => {
+                    for (t, w) in tiles {
+                        shards[0].overwrite_tile_mask(t as usize, w);
+                    }
+                }
+                _ => bail!("sync delta storage mode does not match the installed pack"),
+            }
+            let xfer = match pack.dev.as_mut() {
+                Some(d) => {
+                    d.sync(&mut pack.mirror)?;
+                    d.last_transfer_secs()
+                }
+                None => {
+                    // Fresh mode re-uploads from the (now updated) mirror
+                    // per evaluation; the deltas are already applied.
+                    pack.mirror.clear_dirty();
+                    0.0
+                }
+            };
+            Ok(Resp::Unit { xfer })
+        }
+        Req::Forward { slot, f } => {
+            if st.fail_next {
+                st.fail_next = false;
+                bail!("injected failure (test hook)");
+            }
+            let params =
+                st.params.clone().context("forward before parameters were published")?;
+            let pack = pack_mut(packs, slot)?;
+            run_forward(rt, st, &params, pack, f)
+        }
+        Req::Backward { slot, l, onehot, targets } => {
+            let params =
+                st.params.clone().context("backward before parameters were published")?;
+            let pack = pack_mut(packs, slot)?;
+            run_backward(rt, st, &params, pack, l, &onehot, &targets)
+        }
+        Req::Uninstall { slot } => {
+            if let Some(p) = packs.get_mut(slot) {
+                *p = None;
+            }
+            Ok(Resp::Unit { xfer: 0.0 })
+        }
+        Req::Stats => Ok(Resp::Stats(rt.stats())),
+        Req::InjectFailure => {
+            st.fail_next = true;
+            Ok(Resp::Unit { xfer: 0.0 })
+        }
+        Req::Shutdown => unreachable!("shutdown handled by the worker loop"),
+    }
+}
+
+fn run_forward<'r>(
+    rt: &'r Runtime,
+    st: &WorkerState,
+    params: &Params,
+    pack: &mut Pack<'r>,
+    f: FwdReq,
+) -> Result<Resp> {
+    let FwdReq { l, save, skip_zero, s, c, deg } = f;
+    // Refresh the per-step masks shipped with the request: S/C (and the
+    // sparse live-degree vector) are owned by the coordinator's candidate
+    // logic, so they arrive fresh instead of being replayed as deltas.
+    match &mut pack.mirror {
+        ShardSet::Dense(shards) => {
+            let sh = &mut shards[0];
+            ensure!(
+                s.len() == sh.s.len() && c.len() == sh.c.len(),
+                "forward mask shape mismatch (repack without rebuild?)"
+            );
+            sh.s = s;
+            sh.c = c;
+        }
+        ShardSet::Sparse(shards) => {
+            let sh = &mut shards[0];
+            let deg = deg.context("sparse forward request without a degree vector")?;
+            ensure!(
+                s.len() == sh.s.len() && c.len() == sh.c.len() && deg.len() == sh.deg.len(),
+                "forward mask shape mismatch (repack without rebuild?)"
+            );
+            sh.s = s;
+            sh.c = c;
+            sh.deg = deg;
+        }
+    }
+    if pack.dev.is_some() {
+        ensure!(st.theta_bufs.len() == 7, "device-resident forward without published θ");
+    }
+    match (&pack.mirror, &pack.dev) {
+        (ShardSet::Dense(shards), dev) => {
+            let d = match dev {
+                Some(AnyDeviceState::Dense(d)) => Some(d),
+                None => None,
+                Some(AnyDeviceState::Sparse(_)) => bail!("sparse device state on dense pack"),
+            };
+            forward_dense(rt, st, params, &shards[0], d, l, save, skip_zero, &mut pack.acts)
+        }
+        (ShardSet::Sparse(shards), dev) => {
+            let d = match dev {
+                Some(AnyDeviceState::Sparse(d)) => Some(d),
+                None => None,
+                Some(AnyDeviceState::Dense(_)) => bail!("dense device state on sparse pack"),
+            };
+            forward_sparse_rank(rt, st, params, &shards[0], d, l, save, skip_zero, &mut pack.acts)
+        }
+    }
+}
+
+/// Re-interleave an all-gather of per-rank [B, NI] parts into the global
+/// [B, N] layout (ranks own contiguous row blocks, but batch elements
+/// interleave them).
+fn scatter_gathered(gathered: &[f32], p: usize, b: usize, n: usize, ni: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; b * n];
+    for r in 0..p {
+        let r0 = r * ni;
+        for g in 0..b {
+            let src = r * b * ni + g * ni;
+            out[g * n + r0..g * n + r0 + ni].copy_from_slice(&gathered[src..src + ni]);
+        }
+    }
+    out
+}
+
+/// This rank's slice of an all-reduced [B, K, N] message.
+fn slice_rows(full: &[f32], b: usize, k: usize, n: usize, ni: usize, row0: usize) -> Vec<f32> {
+    let mut sl = vec![0.0f32; b * k * ni];
+    for g in 0..b {
+        for kk in 0..k {
+            let src = g * k * n + kk * n + row0;
+            let dst = g * k * ni + kk * ni;
+            sl[dst..dst + ni].copy_from_slice(&full[src..src + ni]);
+        }
+    }
+    sl
+}
+
+/// One SPMD policy evaluation on this rank's dense shard (Alg. 2 + Alg. 3):
+/// the per-shard body of the lockstep `forward_dev`, with real collectives.
+#[allow(clippy::too_many_arguments)]
+fn forward_dense(
+    rt: &Runtime,
+    st: &WorkerState,
+    params: &Params,
+    sh: &ShardState,
+    dev: Option<&DeviceState>,
+    l: usize,
+    save: bool,
+    skip_zero: bool,
+    acts_out: &mut Option<RankActs>,
+) -> Result<Resp> {
+    let (b, n, ni, k) = (sh.b, sh.n(), sh.ni(), params.k);
+    let row0 = sh.part.row0(sh.shard);
+    let p = st.comm.p();
+    let resident = dev.is_some();
+    let mut t = RankTiming::default();
+    let th = ThetaViews::new(params, resident.then(|| st.theta_bufs.as_slice()));
+
+    let d_s = [b, ni];
+    let d_a = [b, ni, n];
+    let d_e = [b, k, ni];
+    let d_sum = [b, k];
+
+    // A: device-resident across steps, or uploaded once per evaluation
+    // (booked as transfer, matching the lockstep fresh path's accounting).
+    let a_owned;
+    let a_ref: &xla::PjRtBuffer = match dev {
+        Some(d) => d.a_buf(0),
+        None => {
+            let t0 = Instant::now();
+            a_owned = rt.upload(&d_a, &sh.a)?;
+            t.h2d += t0.elapsed().as_secs_f64();
+            &a_owned
+        }
+    };
+
+    // Stage 1: pre (device-resident across all L layers when resident).
+    let name_pre = artifact_name("embed_pre", b, n, ni, k);
+    let pre_inputs =
+        [th.t(0), th.t(1), th.t(2), Input::Host(HostTensor::new(&d_s, &sh.s)), Input::Dev(a_ref)];
+    let mut pre_d: Option<xla::PjRtBuffer> = None;
+    let mut pre_h: Vec<f32> = Vec::new();
+    {
+        let t0 = Instant::now();
+        if resident {
+            let buf = rt.execute_d(&name_pre, &pre_inputs)?.into_iter().next().unwrap();
+            if save {
+                pre_h = rt.fetch(&buf)?;
+            }
+            pre_d = Some(buf);
+        } else {
+            pre_h = rt.execute_in(&name_pre, &pre_inputs)?.into_iter().next().unwrap();
+        }
+        t.compute += t0.elapsed().as_secs_f64();
+    }
+
+    // Embedding layers with REAL all-reduce between ranks (Alg. 2 line 12).
+    let name_msg = artifact_name("embed_msg", b, n, ni, k);
+    let name_cmb = artifact_name("embed_combine", b, n, ni, k);
+    let mut embed_d: Option<xla::PjRtBuffer> = None;
+    let mut embed_h: Vec<f32> = vec![0.0f32; b * k * ni];
+    let mut nbr_acts: Vec<Vec<f32>> = Vec::new();
+    for layer in 0..l {
+        let skip_msg = layer == 0 && skip_zero;
+        let nbr_slice: Vec<f32> = if skip_msg {
+            // Elided layer-0 message: the slice is exactly zeros (fwd.rs).
+            vec![0.0f32; b * k * ni]
+        } else {
+            let mut partial: Vec<f32>;
+            {
+                let t0 = Instant::now();
+                if resident {
+                    let embed_input = if layer == 0 {
+                        Input::Dev(dev.unwrap().zero_buf())
+                    } else {
+                        Input::Dev(embed_d.as_ref().unwrap())
+                    };
+                    let buf = rt
+                        .execute_d(&name_msg, &[embed_input, Input::Dev(a_ref)])?
+                        .into_iter()
+                        .next()
+                        .unwrap();
+                    partial = rt.fetch(&buf)?;
+                } else {
+                    partial = rt
+                        .execute_in(
+                            &name_msg,
+                            &[Input::Host(HostTensor::new(&d_e, &embed_h)), Input::Dev(a_ref)],
+                        )?
+                        .into_iter()
+                        .next()
+                        .unwrap();
+                }
+                t.compute += t0.elapsed().as_secs_f64();
+            }
+            let tc = Instant::now();
+            st.comm.all_reduce_sum(&mut partial)?;
+            t.comm += tc.elapsed().as_secs_f64();
+            t.comm_bytes += 4 * (b * k * n) as u64;
+            t.collectives += 1;
+            let t0 = Instant::now();
+            let sl = slice_rows(&partial, b, k, n, ni, row0);
+            t.host += t0.elapsed().as_secs_f64();
+            sl
+        };
+        if save {
+            nbr_acts.push(nbr_slice.clone());
+        }
+        // Stage 3: combine.
+        let pre_input = if resident {
+            Input::Dev(pre_d.as_ref().unwrap())
+        } else {
+            Input::Host(HostTensor::new(&d_e, &pre_h))
+        };
+        let cmb_inputs = [th.t(3), pre_input, Input::Host(HostTensor::new(&d_e, &nbr_slice))];
+        let t0 = Instant::now();
+        if resident {
+            let buf = rt.execute_d(&name_cmb, &cmb_inputs)?.into_iter().next().unwrap();
+            if save {
+                embed_h = rt.fetch(&buf)?;
+            }
+            embed_d = Some(buf);
+        } else {
+            embed_h = rt.execute_in(&name_cmb, &cmb_inputs)?.into_iter().next().unwrap();
+        }
+        t.compute += t0.elapsed().as_secs_f64();
+    }
+
+    // Final-embedding input shared by stages 4 and 5 (zeros block covers
+    // the L = 0 degenerate case on the resident path).
+    let e_input = if resident {
+        match &embed_d {
+            Some(buf) => Input::Dev(buf),
+            None => Input::Dev(dev.unwrap().zero_buf()),
+        }
+    } else {
+        Input::Host(HostTensor::new(&d_e, &embed_h))
+    };
+
+    // Stage 4 + ALL-REDUCE (Alg. 3 lines 4-5).
+    let name_qsum = artifact_name("q_sum", b, n, ni, k);
+    let mut sum_all: Vec<f32>;
+    {
+        let t0 = Instant::now();
+        if resident {
+            let buf = rt.execute_d(&name_qsum, &[e_input])?.into_iter().next().unwrap();
+            sum_all = rt.fetch(&buf)?;
+        } else {
+            sum_all = rt.execute_in(&name_qsum, &[e_input])?.into_iter().next().unwrap();
+        }
+        t.compute += t0.elapsed().as_secs_f64();
+    }
+    let tc = Instant::now();
+    st.comm.all_reduce_sum(&mut sum_all)?;
+    t.comm += tc.elapsed().as_secs_f64();
+    t.comm_bytes += 4 * (b * k) as u64;
+    t.collectives += 1;
+
+    // Stage 5 + ALL-GATHER of scores (Alg. 4 line 6).
+    let name_q = artifact_name("q_scores", b, n, ni, k);
+    let q_inputs = [
+        th.t(4),
+        th.t(5),
+        th.t(6),
+        e_input,
+        Input::Host(HostTensor::new(&d_s, &sh.c)),
+        Input::Host(HostTensor::new(&d_sum, &sum_all)),
+    ];
+    let local: Vec<f32>;
+    {
+        let t0 = Instant::now();
+        if resident {
+            let buf = rt.execute_d(&name_q, &q_inputs)?.into_iter().next().unwrap();
+            local = rt.fetch(&buf)?;
+        } else {
+            local = rt.execute_in(&name_q, &q_inputs)?.into_iter().next().unwrap();
+        }
+        t.compute += t0.elapsed().as_secs_f64();
+    }
+    let tc = Instant::now();
+    let gathered = st.comm.all_gather(&local)?;
+    t.comm += tc.elapsed().as_secs_f64();
+    t.comm_bytes += 4 * (b * ni * p) as u64;
+    t.collectives += 1;
+    // Only rank 0 returns the gathered scores; skipping the B×N re-
+    // interleave on the other ranks keeps their host column honest.
+    let t0 = Instant::now();
+    let scores = (st.rank == 0).then(|| scatter_gathered(&gathered, p, b, n, ni));
+    t.host += t0.elapsed().as_secs_f64();
+
+    *acts_out = save.then(|| RankActs {
+        pre: pre_h,
+        nbr_slice: nbr_acts,
+        embed_final: embed_h,
+        sum_all,
+        scores_i: local,
+    });
+    Ok(Resp::Fwd { scores, timing: t })
+}
+
+/// One SPMD policy evaluation on this rank's sparse shard (DESIGN.md §7):
+/// the per-shard body of the lockstep `forward_sparse` with real
+/// collectives — tile sweep into the local B×K×N scratch, all-reduce,
+/// slice, N-free combine/q stages.
+#[allow(clippy::too_many_arguments)]
+fn forward_sparse_rank(
+    rt: &Runtime,
+    st: &WorkerState,
+    params: &Params,
+    sh: &SparseShard,
+    dev: Option<&SparseDeviceState>,
+    l: usize,
+    save: bool,
+    skip_zero: bool,
+    acts_out: &mut Option<RankActs>,
+) -> Result<Resp> {
+    let (b, n, ni, k, chunk) = (sh.b, sh.n(), sh.ni(), params.k, sh.chunk);
+    let row0 = sh.part.row0(sh.shard);
+    let p = st.comm.p();
+    let resident = dev.is_some();
+    let mut t = RankTiming::default();
+    let th = ThetaViews::new(params, resident.then(|| st.theta_bufs.as_slice()));
+
+    let d_s = [b, ni];
+    let d_e = [b, k, ni];
+    let d_ec = [b, k, chunk];
+    let d_sum = [b, k];
+
+    // Edge tiles: device-resident, or uploaded once per evaluation.
+    let tile_owned: Vec<Vec<(xla::PjRtBuffer, xla::PjRtBuffer, xla::PjRtBuffer)>> = if resident {
+        Vec::new()
+    } else {
+        let mut tmp = StepTiming::new(1);
+        let owned = upload_tiles_fresh(rt, std::slice::from_ref(sh), &mut tmp)?;
+        t.h2d += tmp.h2d;
+        owned
+    };
+
+    // Stage 1: degree-vector pre.
+    let name_pre = sparse_pre_name("embed_pre_sp", b, ni, k);
+    let pre_h: Vec<f32>;
+    {
+        let t0 = Instant::now();
+        pre_h = rt
+            .execute_in(
+                &name_pre,
+                &[
+                    th.t(0),
+                    th.t(1),
+                    th.t(2),
+                    Input::Host(HostTensor::new(&d_s, &sh.s)),
+                    Input::Host(HostTensor::new(&d_s, &sh.deg)),
+                ],
+            )?
+            .into_iter()
+            .next()
+            .unwrap();
+        t.compute += t0.elapsed().as_secs_f64();
+    }
+
+    let name_cmb = artifact_name("embed_combine", b, n, ni, k);
+    let mut embed_h = vec![0.0f32; b * k * ni];
+    let mut nbr_acts: Vec<Vec<f32>> = Vec::new();
+    let mut nbr_full = vec![0.0f32; b * k * n];
+    let mut echunk = vec![0.0f32; b * k * chunk];
+    for layer in 0..l {
+        let skip_msg = layer == 0 && skip_zero;
+        let nbr_slice: Vec<f32> = if skip_msg {
+            vec![0.0f32; b * k * ni]
+        } else {
+            nbr_full.fill(0.0);
+            let tiles = &sh.tiles;
+            let mut ti = 0usize;
+            while ti < tiles.len() {
+                let sc = tiles[ti].sc;
+                // Source-chunk slice of the local embedding, zero-padded
+                // past NI (padding rows are never referenced by live edges).
+                let t0 = Instant::now();
+                let lo = sc * chunk;
+                let hi = (lo + chunk).min(ni);
+                echunk.fill(0.0);
+                if lo < ni {
+                    for g in 0..b {
+                        for kk in 0..k {
+                            let so = g * k * ni + kk * ni + lo;
+                            let eo = g * k * chunk + kk * chunk;
+                            echunk[eo..eo + (hi - lo)]
+                                .copy_from_slice(&embed_h[so..so + (hi - lo)]);
+                        }
+                    }
+                }
+                t.host += t0.elapsed().as_secs_f64();
+                while ti < tiles.len() && tiles[ti].sc == sc {
+                    let tile = &tiles[ti];
+                    let name = sparse_msg_name("embed_msg_sp", b, tile.cap, chunk, k);
+                    let (src_in, dst_in, w_in) = match dev {
+                        Some(d) => (
+                            Input::Dev(&d.src[0][ti]),
+                            Input::Dev(&d.dst[0][ti]),
+                            Input::Dev(&d.w[0][ti]),
+                        ),
+                        None => {
+                            let (sb, db, wb) = &tile_owned[0][ti];
+                            (Input::Dev(sb), Input::Dev(db), Input::Dev(wb))
+                        }
+                    };
+                    let inputs =
+                        [Input::Host(HostTensor::new(&d_ec, &echunk)), src_in, dst_in, w_in];
+                    let t0 = Instant::now();
+                    let part = rt.execute_in(&name, &inputs)?.into_iter().next().unwrap();
+                    t.compute += t0.elapsed().as_secs_f64();
+                    let t0 = Instant::now();
+                    let dlo = tile.dc * chunk;
+                    let dhi = (dlo + chunk).min(n);
+                    for g in 0..b {
+                        for kk in 0..k {
+                            let no = g * k * n + kk * n + dlo;
+                            let po = g * k * chunk + kk * chunk;
+                            add_assign(
+                                &mut nbr_full[no..no + (dhi - dlo)],
+                                &part[po..po + (dhi - dlo)],
+                            );
+                        }
+                    }
+                    t.host += t0.elapsed().as_secs_f64();
+                    ti += 1;
+                }
+            }
+            let tc = Instant::now();
+            st.comm.all_reduce_sum(&mut nbr_full)?;
+            t.comm += tc.elapsed().as_secs_f64();
+            t.comm_bytes += 4 * (b * k * n) as u64;
+            t.collectives += 1;
+            let t0 = Instant::now();
+            let sl = slice_rows(&nbr_full, b, k, n, ni, row0);
+            t.host += t0.elapsed().as_secs_f64();
+            sl
+        };
+        if save {
+            nbr_acts.push(nbr_slice.clone());
+        }
+        let t0 = Instant::now();
+        embed_h = rt
+            .execute_in(
+                &name_cmb,
+                &[
+                    th.t(3),
+                    Input::Host(HostTensor::new(&d_e, &pre_h)),
+                    Input::Host(HostTensor::new(&d_e, &nbr_slice)),
+                ],
+            )?
+            .into_iter()
+            .next()
+            .unwrap();
+        t.compute += t0.elapsed().as_secs_f64();
+    }
+
+    // Stage 4 + ALL-REDUCE (shared N-free stage).
+    let name_qsum = artifact_name("q_sum", b, n, ni, k);
+    let mut sum_all: Vec<f32>;
+    {
+        let t0 = Instant::now();
+        sum_all = rt
+            .execute_in(&name_qsum, &[Input::Host(HostTensor::new(&d_e, &embed_h))])?
+            .into_iter()
+            .next()
+            .unwrap();
+        t.compute += t0.elapsed().as_secs_f64();
+    }
+    let tc = Instant::now();
+    st.comm.all_reduce_sum(&mut sum_all)?;
+    t.comm += tc.elapsed().as_secs_f64();
+    t.comm_bytes += 4 * (b * k) as u64;
+    t.collectives += 1;
+
+    // Stage 5 + ALL-GATHER of scores.
+    let name_q = artifact_name("q_scores", b, n, ni, k);
+    let local: Vec<f32>;
+    {
+        let t0 = Instant::now();
+        local = rt
+            .execute_in(
+                &name_q,
+                &[
+                    th.t(4),
+                    th.t(5),
+                    th.t(6),
+                    Input::Host(HostTensor::new(&d_e, &embed_h)),
+                    Input::Host(HostTensor::new(&d_s, &sh.c)),
+                    Input::Host(HostTensor::new(&d_sum, &sum_all)),
+                ],
+            )?
+            .into_iter()
+            .next()
+            .unwrap();
+        t.compute += t0.elapsed().as_secs_f64();
+    }
+    let tc = Instant::now();
+    let gathered = st.comm.all_gather(&local)?;
+    t.comm += tc.elapsed().as_secs_f64();
+    t.comm_bytes += 4 * (b * ni * p) as u64;
+    t.collectives += 1;
+    // Only rank 0 returns the gathered scores; skipping the B×N re-
+    // interleave on the other ranks keeps their host column honest.
+    let t0 = Instant::now();
+    let scores = (st.rank == 0).then(|| scatter_gathered(&gathered, p, b, n, ni));
+    t.host += t0.elapsed().as_secs_f64();
+
+    *acts_out = save.then(|| RankActs {
+        pre: pre_h,
+        nbr_slice: nbr_acts,
+        embed_final: embed_h,
+        sum_all,
+        scores_i: local,
+    });
+    Ok(Resp::Fwd { scores, timing: t })
+}
+
+fn run_backward<'r>(
+    rt: &'r Runtime,
+    st: &WorkerState,
+    params: &Params,
+    pack: &mut Pack<'r>,
+    l: usize,
+    onehot: &[f32],
+    targets: &[f32],
+) -> Result<Resp> {
+    let Pack { mirror, dev, acts } = pack;
+    let acts = acts.as_ref().context("rank backward before a saved forward")?;
+    match (&*mirror, &*dev) {
+        (ShardSet::Dense(shards), dev) => {
+            let d = match dev {
+                Some(AnyDeviceState::Dense(d)) => Some(d),
+                None => None,
+                Some(AnyDeviceState::Sparse(_)) => bail!("sparse device state on dense pack"),
+            };
+            backward_dense(rt, st, params, &shards[0], d, acts, l, onehot, targets)
+        }
+        (ShardSet::Sparse(shards), dev) => {
+            let d = match dev {
+                Some(AnyDeviceState::Sparse(d)) => Some(d),
+                None => None,
+                Some(AnyDeviceState::Dense(_)) => bail!("dense device state on sparse pack"),
+            };
+            backward_sparse_rank(rt, st, params, &shards[0], d, acts, l, onehot, targets)
+        }
+    }
+}
+
+/// Shared loss adjoint: local q_sa partial, REAL all-reduce (B floats),
+/// replicated loss + this rank's d_scores. Returns (loss, d_scores).
+#[allow(clippy::too_many_arguments)]
+fn loss_adjoint(
+    st: &WorkerState,
+    t: &mut RankTiming,
+    scores_i: &[f32],
+    onehot: &[f32],
+    targets: &[f32],
+    b: usize,
+    n: usize,
+    ni: usize,
+    row0: usize,
+) -> Result<(f32, Vec<f32>)> {
+    let t0 = Instant::now();
+    let mut onehot_i = vec![0.0f32; b * ni];
+    for g in 0..b {
+        onehot_i[g * ni..(g + 1) * ni].copy_from_slice(&onehot[g * n + row0..g * n + row0 + ni]);
+    }
+    let mut q_sa = vec![0.0f32; b];
+    for g in 0..b {
+        for r in 0..ni {
+            q_sa[g] += scores_i[g * ni + r] * onehot_i[g * ni + r];
+        }
+    }
+    t.host += t0.elapsed().as_secs_f64();
+    let tc = Instant::now();
+    st.comm.all_reduce_sum(&mut q_sa)?;
+    t.comm += tc.elapsed().as_secs_f64();
+    t.comm_bytes += 4 * b as u64;
+    t.collectives += 1;
+    let t0 = Instant::now();
+    let mut loss = 0.0f32;
+    let mut d_qsa = vec![0.0f32; b];
+    for g in 0..b {
+        let diff = q_sa[g] - targets[g];
+        loss += diff * diff / b as f32;
+        d_qsa[g] = 2.0 * diff / b as f32;
+    }
+    let d_scores: Vec<f32> =
+        (0..b * ni).map(|idx| d_qsa[idx / ni] * onehot_i[idx]).collect();
+    t.host += t0.elapsed().as_secs_f64();
+    Ok((loss, d_scores))
+}
+
+fn accumulate(grads: &mut [f32], offset: usize, part: &[f32]) {
+    add_assign(&mut grads[offset..offset + part.len()], part);
+}
+
+/// Column-broadcast the all-reduced d_sum into the embedding cotangent
+/// (the q_sum collective's adjoint), in place.
+fn add_sum_columns(d_embed: &mut [f32], d_sum_all: &[f32], b: usize, k: usize, ni: usize) {
+    for g in 0..b {
+        for kk in 0..k {
+            let base = g * k * ni + kk * ni;
+            let add = d_sum_all[g * k + kk];
+            for r in 0..ni {
+                d_embed[base + r] += add;
+            }
+        }
+    }
+}
+
+/// The all-gather collective adjoint: gather this rank's cotangent slice
+/// and re-interleave into the global [B, K, N] cotangent.
+fn gather_cotangent(
+    st: &WorkerState,
+    t: &mut RankTiming,
+    d_nbr: &[f32],
+    b: usize,
+    k: usize,
+    n: usize,
+    ni: usize,
+) -> Result<Vec<f32>> {
+    let p = st.comm.p();
+    let tc = Instant::now();
+    let gathered = st.comm.all_gather(d_nbr)?;
+    t.comm += tc.elapsed().as_secs_f64();
+    t.comm_bytes += 4 * (b * k * ni * p) as u64;
+    t.collectives += 1;
+    let t0 = Instant::now();
+    let mut d_partial = vec![0.0f32; b * k * n];
+    for r in 0..p {
+        let r0 = r * ni;
+        for g in 0..b {
+            for kk in 0..k {
+                let dst = g * k * n + kk * n + r0;
+                let src = r * b * k * ni + g * k * ni + kk * ni;
+                d_partial[dst..dst + ni].copy_from_slice(&gathered[src..src + ni]);
+            }
+        }
+    }
+    t.host += t0.elapsed().as_secs_f64();
+    Ok(d_partial)
+}
+
+/// Shared stage-5 adjoint + the q_sum collective's adjoint (an N-free
+/// stage, identical on the dense and sparse paths): run `q_scores_bwd`,
+/// accumulate the θ5..θ7 gradients, all-reduce the sum cotangent, and
+/// return the embedding cotangent with the column broadcast applied.
+#[allow(clippy::too_many_arguments)]
+fn stage5_adjoint(
+    rt: &Runtime,
+    st: &WorkerState,
+    t: &mut RankTiming,
+    th: &ThetaViews,
+    params: &Params,
+    acts: &RankActs,
+    c: &[f32],
+    d_scores: &[f32],
+    grads: &mut [f32],
+    b: usize,
+    n: usize,
+    ni: usize,
+    k: usize,
+) -> Result<Vec<f32>> {
+    let (d_s, d_e, d_sum) = ([b, ni], [b, k, ni], [b, k]);
+    let name = artifact_name("q_scores_bwd", b, n, ni, k);
+    let out = {
+        let t0 = Instant::now();
+        let out = rt.execute_in(
+            &name,
+            &[
+                th.t(4),
+                th.t(5),
+                th.t(6),
+                Input::Host(HostTensor::new(&d_e, &acts.embed_final)),
+                Input::Host(HostTensor::new(&d_s, c)),
+                Input::Host(HostTensor::new(&d_sum, &acts.sum_all)),
+                Input::Host(HostTensor::new(&d_s, d_scores)),
+            ],
+        )?;
+        t.compute += t0.elapsed().as_secs_f64();
+        out
+    };
+    let mut it = out.into_iter();
+    let (d5, d6, d7, d_e_i, d_sa) = (
+        it.next().unwrap(),
+        it.next().unwrap(),
+        it.next().unwrap(),
+        it.next().unwrap(),
+        it.next().unwrap(),
+    );
+    let t0 = Instant::now();
+    accumulate(grads, params.offset(4), &d5);
+    accumulate(grads, params.offset(5), &d6);
+    accumulate(grads, params.offset(6), &d7);
+    t.host += t0.elapsed().as_secs_f64();
+    // q_sum collective adjoint: all-reduce d_sum, broadcast into columns.
+    let mut d_sum_all = d_sa;
+    let tc = Instant::now();
+    st.comm.all_reduce_sum(&mut d_sum_all)?;
+    t.comm += tc.elapsed().as_secs_f64();
+    t.comm_bytes += 4 * (b * k) as u64;
+    t.collectives += 1;
+    let mut d_embed = d_e_i;
+    let t0 = Instant::now();
+    add_sum_columns(&mut d_embed, &d_sum_all, b, k, ni);
+    t.host += t0.elapsed().as_secs_f64();
+    Ok(d_embed)
+}
+
+/// Shared per-layer combine adjoint (another N-free stage): run
+/// `embed_combine_bwd`, accumulate θ4 and the pre cotangent, and return
+/// the layer-message cotangent slice.
+#[allow(clippy::too_many_arguments)]
+fn combine_bwd_step(
+    rt: &Runtime,
+    t: &mut RankTiming,
+    th: &ThetaViews,
+    params: &Params,
+    acts: &RankActs,
+    layer: usize,
+    d_embed: &[f32],
+    grads: &mut [f32],
+    d_pre_acc: &mut [f32],
+    b: usize,
+    n: usize,
+    ni: usize,
+    k: usize,
+) -> Result<Vec<f32>> {
+    let d_e = [b, k, ni];
+    let name = artifact_name("embed_combine_bwd", b, n, ni, k);
+    let out = {
+        let t0 = Instant::now();
+        let out = rt.execute_in(
+            &name,
+            &[
+                th.t(3),
+                Input::Host(HostTensor::new(&d_e, &acts.pre)),
+                Input::Host(HostTensor::new(&d_e, &acts.nbr_slice[layer])),
+                Input::Host(HostTensor::new(&d_e, d_embed)),
+            ],
+        )?;
+        t.compute += t0.elapsed().as_secs_f64();
+        out
+    };
+    let mut it = out.into_iter();
+    let (d4, d_pre, d_nbr) = (it.next().unwrap(), it.next().unwrap(), it.next().unwrap());
+    let t0 = Instant::now();
+    accumulate(grads, params.offset(3), &d4);
+    add_assign(d_pre_acc, &d_pre);
+    t.host += t0.elapsed().as_secs_f64();
+    Ok(d_nbr)
+}
+
+/// Accumulate a stage-1 adjoint's θ1..θ3 outputs and run the final REAL
+/// gradient all-reduce (θ1-θ7 = 4K²+4K floats, §5.1(3)).
+fn finish_grads(
+    st: &WorkerState,
+    t: &mut RankTiming,
+    params: &Params,
+    grads: &mut Vec<f32>,
+    d123: Vec<Vec<f32>>,
+) -> Result<()> {
+    let t0 = Instant::now();
+    for (i, d) in d123.into_iter().enumerate() {
+        accumulate(grads, params.offset(i), &d);
+    }
+    t.host += t0.elapsed().as_secs_f64();
+    let tc = Instant::now();
+    st.comm.all_reduce_sum(grads)?;
+    t.comm += tc.elapsed().as_secs_f64();
+    t.comm_bytes += 4 * grads.len() as u64;
+    t.collectives += 1;
+    Ok(())
+}
+
+/// This rank's distributed backward on the dense path: the per-shard body
+/// of the lockstep `backward_dev`, with the collective adjoints realized
+/// as real all-reduce / all-gather operations (DESIGN.md §2/§9).
+#[allow(clippy::too_many_arguments)]
+fn backward_dense(
+    rt: &Runtime,
+    st: &WorkerState,
+    params: &Params,
+    sh: &ShardState,
+    dev: Option<&DeviceState>,
+    acts: &RankActs,
+    l: usize,
+    onehot: &[f32],
+    targets: &[f32],
+) -> Result<Resp> {
+    let (b, n, ni, k) = (sh.b, sh.n(), sh.ni(), params.k);
+    ensure!(onehot.len() == b * n && targets.len() == b, "loss target shape mismatch");
+    let row0 = sh.part.row0(sh.shard);
+    let resident = dev.is_some();
+    let mut t = RankTiming::default();
+    let mut grads = vec![0.0f32; params.flat.len()];
+    let th = ThetaViews::new(params, resident.then(|| st.theta_bufs.as_slice()));
+
+    let d_s = [b, ni];
+    let d_a = [b, ni, n];
+    let d_e = [b, k, ni];
+    let d_m = [b, k, n];
+
+    let a_owned;
+    let a_ref: &xla::PjRtBuffer = match dev {
+        Some(d) => d.a_buf(0),
+        None => {
+            let t0 = Instant::now();
+            a_owned = rt.upload(&d_a, &sh.a)?;
+            t.h2d += t0.elapsed().as_secs_f64();
+            &a_owned
+        }
+    };
+
+    let (loss, d_scores) =
+        loss_adjoint(st, &mut t, &acts.scores_i, onehot, targets, b, n, ni, row0)?;
+
+    // ---- stage 5 adjoint + q_sum collective adjoint (shared helper) ----
+    let mut d_embed =
+        stage5_adjoint(rt, st, &mut t, &th, params, acts, &sh.c, &d_scores, &mut grads, b, n,
+                       ni, k)?;
+
+    // ---- layer loop, reversed ----
+    let name_mbwd = artifact_name("embed_msg_bwd", b, n, ni, k);
+    let mut d_pre_acc = vec![0.0f32; b * k * ni];
+    for layer in (0..l).rev() {
+        let d_nbr = combine_bwd_step(
+            rt, &mut t, &th, params, acts, layer, &d_embed, &mut grads, &mut d_pre_acc, b, n,
+            ni, k,
+        )?;
+        if layer == 0 {
+            // Layer 0's message input is the zeros constant: its cotangent
+            // is discarded, so the all-gather + msg_bwd are elided.
+            break;
+        }
+        let d_partial = gather_cotangent(st, &mut t, &d_nbr, b, k, n, ni)?;
+        let t0 = Instant::now();
+        d_embed = rt
+            .execute_in(
+                &name_mbwd,
+                &[Input::Dev(a_ref), Input::Host(HostTensor::new(&d_m, &d_partial))],
+            )?
+            .into_iter()
+            .next()
+            .unwrap();
+        t.compute += t0.elapsed().as_secs_f64();
+    }
+
+    // ---- stage 1 adjoint ----
+    let name_pbwd = artifact_name("embed_pre_bwd", b, n, ni, k);
+    let out = {
+        let t0 = Instant::now();
+        let out = rt.execute_in(
+            &name_pbwd,
+            &[
+                th.t(0),
+                th.t(1),
+                th.t(2),
+                Input::Host(HostTensor::new(&d_s, &sh.s)),
+                Input::Dev(a_ref),
+                Input::Host(HostTensor::new(&d_e, &d_pre_acc)),
+            ],
+        )?;
+        t.compute += t0.elapsed().as_secs_f64();
+        out
+    };
+    finish_grads(st, &mut t, params, &mut grads, out)?;
+
+    Ok(Resp::Bwd { loss, grads: (st.rank == 0).then_some(grads), timing: t })
+}
+
+/// This rank's distributed backward on the sparse CSR path: the per-shard
+/// body of the lockstep `backward_sparse` with real collective adjoints —
+/// reversed tile sweep (`embed_msg_sp_bwd` per tile) and the degree-vector
+/// stage-1 adjoint (DESIGN.md §7/§9).
+#[allow(clippy::too_many_arguments)]
+fn backward_sparse_rank(
+    rt: &Runtime,
+    st: &WorkerState,
+    params: &Params,
+    sh: &SparseShard,
+    dev: Option<&SparseDeviceState>,
+    acts: &RankActs,
+    l: usize,
+    onehot: &[f32],
+    targets: &[f32],
+) -> Result<Resp> {
+    let (b, n, ni, k, chunk) = (sh.b, sh.n(), sh.ni(), params.k, sh.chunk);
+    ensure!(onehot.len() == b * n && targets.len() == b, "loss target shape mismatch");
+    let row0 = sh.part.row0(sh.shard);
+    let resident = dev.is_some();
+    let mut t = RankTiming::default();
+    let mut grads = vec![0.0f32; params.flat.len()];
+    let th = ThetaViews::new(params, resident.then(|| st.theta_bufs.as_slice()));
+
+    let d_s = [b, ni];
+    let d_e = [b, k, ni];
+    let d_ec = [b, k, chunk];
+
+    let tile_owned: Vec<Vec<(xla::PjRtBuffer, xla::PjRtBuffer, xla::PjRtBuffer)>> = if resident {
+        Vec::new()
+    } else {
+        let mut tmp = StepTiming::new(1);
+        let owned = upload_tiles_fresh(rt, std::slice::from_ref(sh), &mut tmp)?;
+        t.h2d += tmp.h2d;
+        owned
+    };
+
+    let (loss, d_scores) =
+        loss_adjoint(st, &mut t, &acts.scores_i, onehot, targets, b, n, ni, row0)?;
+
+    // ---- stage 5 adjoint + q_sum collective adjoint (shared helper) ----
+    let mut d_embed =
+        stage5_adjoint(rt, st, &mut t, &th, params, acts, &sh.c, &d_scores, &mut grads, b, n,
+                       ni, k)?;
+
+    // ---- layer loop, reversed ----
+    let mut d_pre_acc = vec![0.0f32; b * k * ni];
+    let mut dchunk = vec![0.0f32; b * k * chunk];
+    for layer in (0..l).rev() {
+        let d_nbr = combine_bwd_step(
+            rt, &mut t, &th, params, acts, layer, &d_embed, &mut grads, &mut d_pre_acc, b, n,
+            ni, k,
+        )?;
+        if layer == 0 {
+            break;
+        }
+        let d_partial = gather_cotangent(st, &mut t, &d_nbr, b, k, n, ni)?;
+        // Reversed tile sweep: destination-chunk sliced in, source-chunk
+        // accumulated out (the transpose of the forward sweep).
+        let mut d_emb = vec![0.0f32; b * k * ni];
+        let tiles = &sh.tiles;
+        let mut ti = 0usize;
+        while ti < tiles.len() {
+            let dc = tiles[ti].dc;
+            let t0 = Instant::now();
+            let dlo = dc * chunk;
+            let dhi = (dlo + chunk).min(n);
+            dchunk.fill(0.0);
+            for g in 0..b {
+                for kk in 0..k {
+                    let so = g * k * n + kk * n + dlo;
+                    let eo = g * k * chunk + kk * chunk;
+                    dchunk[eo..eo + (dhi - dlo)]
+                        .copy_from_slice(&d_partial[so..so + (dhi - dlo)]);
+                }
+            }
+            t.host += t0.elapsed().as_secs_f64();
+            while ti < tiles.len() && tiles[ti].dc == dc {
+                let tile = &tiles[ti];
+                let name = sparse_msg_name("embed_msg_sp_bwd", b, tile.cap, chunk, k);
+                let (src_in, dst_in, w_in) = match dev {
+                    Some(d) => (
+                        Input::Dev(&d.src[0][ti]),
+                        Input::Dev(&d.dst[0][ti]),
+                        Input::Dev(&d.w[0][ti]),
+                    ),
+                    None => {
+                        let (sb, db, wb) = &tile_owned[0][ti];
+                        (Input::Dev(sb), Input::Dev(db), Input::Dev(wb))
+                    }
+                };
+                let inputs = [Input::Host(HostTensor::new(&d_ec, &dchunk)), src_in, dst_in, w_in];
+                let t0 = Instant::now();
+                let part = rt.execute_in(&name, &inputs)?.into_iter().next().unwrap();
+                t.compute += t0.elapsed().as_secs_f64();
+                let t0 = Instant::now();
+                let slo = tile.sc * chunk;
+                let shi = (slo + chunk).min(ni);
+                for g in 0..b {
+                    for kk in 0..k {
+                        let no = g * k * ni + kk * ni + slo;
+                        let po = g * k * chunk + kk * chunk;
+                        let len = shi - slo;
+                        add_assign(&mut d_emb[no..no + len], &part[po..po + len]);
+                    }
+                }
+                t.host += t0.elapsed().as_secs_f64();
+                ti += 1;
+            }
+        }
+        d_embed = d_emb;
+    }
+
+    // ---- stage 1 adjoint (degree-vector variant) ----
+    let name_pbwd = sparse_pre_name("embed_pre_sp_bwd", b, ni, k);
+    let out = {
+        let t0 = Instant::now();
+        let out = rt.execute_in(
+            &name_pbwd,
+            &[
+                th.t(0),
+                th.t(1),
+                th.t(2),
+                Input::Host(HostTensor::new(&d_s, &sh.s)),
+                Input::Host(HostTensor::new(&d_s, &sh.deg)),
+                Input::Host(HostTensor::new(&d_e, &d_pre_acc)),
+            ],
+        )?;
+        t.compute += t0.elapsed().as_secs_f64();
+        out
+    };
+    finish_grads(st, &mut t, params, &mut grads, out)?;
+
+    Ok(Resp::Bwd { loss, grads: (st.rank == 0).then_some(grads), timing: t })
+}

@@ -79,6 +79,19 @@ pub struct ExecStats {
 }
 
 impl ExecStats {
+    /// Accumulate another snapshot into this one — summing the per-rank
+    /// runtimes of the rank-parallel pool into one pack/queue-level figure.
+    pub fn add(&mut self, other: &ExecStats) {
+        self.executions += other.executions;
+        self.compile_time += other.compile_time;
+        self.exec_time += other.exec_time;
+        self.h2d_time += other.h2d_time;
+        self.d2h_time += other.d2h_time;
+        self.h2d_bytes += other.h2d_bytes;
+        self.d2h_bytes += other.d2h_bytes;
+        self.cache_hits += other.cache_hits;
+    }
+
     /// Counter deltas accumulated since `earlier` (snapshot arithmetic for
     /// per-solve / per-pack transfer accounting). Saturating throughout, so
     /// a `reset_stats` between the snapshots yields zeros, not underflow.

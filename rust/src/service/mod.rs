@@ -31,11 +31,13 @@ pub mod options;
 pub use options::{LaunchPolicy, Options};
 
 use crate::batch::queue::{Job, JobOutcome, PackStat};
-use crate::batch::solve::solve_pack_in;
+use crate::batch::solve::{solve_pack_session, SessionState};
+use crate::coordinator::engine::Engine;
 use crate::coordinator::fwd::ThetaCache;
 use crate::env::Scenario;
 use crate::graph::Graph;
 use crate::model::Params;
+use crate::parallel::RankPool;
 use crate::runtime::Runtime;
 use crate::util::json::Json;
 use anyhow::{Context, Result};
@@ -131,6 +133,11 @@ pub struct Service<'r> {
     abort_on_error: bool,
     aborted: bool,
     theta: ThetaCache,
+    /// Persistent rank pool for the rank-parallel engine, created lazily
+    /// at the first launch (so construction stays infallible) and kept
+    /// warm across packs: each rank re-uploads θ only when the session
+    /// parameters change — i.e. never, after the first pack (DESIGN.md §9).
+    pool: Option<RankPool>,
     next_job: u64,
     /// Packs launched so far (successful or failed) — the pack-index
     /// source. `packs` holds stats for successful packs only, so its
@@ -163,6 +170,7 @@ impl<'r> Service<'r> {
             abort_on_error: false,
             aborted: false,
             theta: ThetaCache::new(rt),
+            pool: None,
             next_job: 0,
             launched: 0,
             open: BTreeMap::new(),
@@ -324,6 +332,20 @@ impl<'r> Service<'r> {
         self.rt
     }
 
+    /// Start the session's rank pool if the configured engine needs one
+    /// (no-op under lockstep, or once it exists). A startup failure (e.g.
+    /// the offline xla stub) surfaces through the caller's per-job error
+    /// events, like any pack-level failure.
+    fn ensure_pool(&mut self) -> Result<()> {
+        if self.cfg.engine.mode != Engine::RankParallel || self.pool.is_some() {
+            return Ok(());
+        }
+        let pool = RankPool::new(self.rt.manifest.dir.clone(), self.cfg.engine.p)
+            .context("starting the rank-parallel worker pool")?;
+        self.pool = Some(pool);
+        Ok(())
+    }
+
     /// Launch `pack`'s members as one or more solve packs of at most
     /// `max_cap` jobs, preserving admission order.
     fn launch_chunks(&mut self, scenario: Scenario, bucket: usize, pack: OpenPack) {
@@ -365,15 +387,18 @@ impl<'r> Service<'r> {
             meta.push((m.job, m.id, m.graph.n, m.graph.m));
             graphs.push(m.graph);
         }
-        let res = solve_pack_in(
-            self.rt,
-            &self.cfg,
-            &self.params,
-            scenario,
-            graphs,
-            bucket,
-            Some(&self.theta),
-        );
+        let res = match self.ensure_pool() {
+            Err(e) => Err(e),
+            Ok(()) => solve_pack_session(
+                self.rt,
+                &self.cfg,
+                &self.params,
+                scenario,
+                graphs,
+                bucket,
+                SessionState { theta: Some(&self.theta), pool: self.pool.as_ref() },
+            ),
+        };
         match res {
             Ok(res) => {
                 for (slot, (job, id, nodes, edges)) in meta.into_iter().enumerate() {

@@ -5,12 +5,13 @@
 //! compaction/seed plumbing cannot drift between entry points.
 //!
 //! `Options::from_args` is the single CLI parser: `--p`, `--l`, `--multi`,
-//! `--sparse`, `--no-compact`, `--fresh`, `--seed`, `--scenario`, `--lr`,
-//! `--tau`, `--batch`, `--max-wait`. Seed is kept as `Option<u64>` so each
-//! subcommand can preserve its historical default stream (`seed_or`).
+//! `--sparse`, `--engine`, `--no-compact`, `--fresh`, `--seed`,
+//! `--scenario`, `--lr`, `--tau`, `--batch`, `--max-wait`. Seed is kept as
+//! `Option<u64>` so each subcommand can preserve its historical default
+//! stream (`seed_or`).
 
 use crate::batch::BatchCfg;
-use crate::coordinator::engine::EngineCfg;
+use crate::coordinator::engine::{Engine, EngineCfg};
 use crate::coordinator::infer::InferCfg;
 use crate::coordinator::selection::SelectionPolicy;
 use crate::coordinator::shard::Storage;
@@ -50,6 +51,9 @@ pub struct Options {
     pub policy: SelectionPolicy,
     /// Per-shard storage mode (dense oracle or CSR tiles, DESIGN.md §7).
     pub storage: Storage,
+    /// Execution engine: single-threaded lockstep simulation, or the
+    /// persistent rank-parallel worker pool (DESIGN.md §9).
+    pub engine: Engine,
     /// Early-exit pack compaction (batched paths only).
     pub compact: bool,
     /// Hold θ + adjacency state on device across steps (DESIGN.md §6).
@@ -86,6 +90,7 @@ impl Default for Options {
             l: 2,
             policy: SelectionPolicy::Single,
             storage: Storage::Dense,
+            engine: Engine::Lockstep,
             compact: true,
             device_resident: true,
             skip_zero_layer: true,
@@ -120,6 +125,9 @@ impl Options {
         }
         if args.has_flag("sparse") {
             o.storage = Storage::Sparse;
+        }
+        if let Some(s) = args.get("engine") {
+            o.engine = Engine::parse(s)?;
         }
         if args.has_flag("no-compact") {
             o.compact = false;
@@ -160,6 +168,12 @@ impl Options {
     /// Set the storage mode.
     pub fn storage(mut self, storage: Storage) -> Options {
         self.storage = storage;
+        self
+    }
+
+    /// Set the execution engine.
+    pub fn engine(mut self, engine: Engine) -> Options {
+        self.engine = engine;
         self
     }
 
@@ -209,7 +223,9 @@ impl Options {
 
 impl From<&Options> for EngineCfg {
     fn from(o: &Options) -> EngineCfg {
-        EngineCfg::new(o.p, o.l)
+        let mut cfg = EngineCfg::new(o.p, o.l);
+        cfg.mode = o.engine;
+        cfg
     }
 }
 
@@ -263,13 +279,17 @@ mod tests {
 
     #[test]
     fn from_args_covers_the_shared_surface() {
-        let a = parse("--p 2 --l 3 --multi --sparse --no-compact --seed 9 --scenario mis \
-                       --lr 0.01 --tau 4 --batch 16 --max-wait 0.5");
+        let a = parse("--p 2 --l 3 --multi --sparse --engine rank-parallel --no-compact \
+                       --seed 9 --scenario mis --lr 0.01 --tau 4 --batch 16 --max-wait 0.5");
         let o = Options::from_args(&a).unwrap();
         assert_eq!(o.p, 2);
         assert_eq!(o.l, 3);
         assert_eq!(o.policy, SelectionPolicy::AdaptiveMulti);
         assert_eq!(o.storage, Storage::Sparse);
+        assert_eq!(o.engine, Engine::RankParallel);
+        assert_eq!(InferCfg::from(&o).engine.mode, Engine::RankParallel);
+        assert_eq!(BatchCfg::from(&o).engine.mode, Engine::RankParallel);
+        assert_eq!(TrainCfg::from(&o).engine.mode, Engine::RankParallel);
         assert!(!o.compact);
         assert_eq!(o.seed, Some(9));
         assert_eq!(o.seed_or(4), 9);
@@ -318,5 +338,13 @@ mod tests {
     #[test]
     fn bad_scenario_errors() {
         assert!(Options::from_args(&parse("--scenario tsp")).is_err());
+    }
+
+    #[test]
+    fn engine_defaults_to_lockstep_and_rejects_unknown() {
+        let o = Options::from_args(&parse("")).unwrap();
+        assert_eq!(o.engine, Engine::Lockstep);
+        assert_eq!(BatchCfg::from(&o).engine.mode, Engine::Lockstep);
+        assert!(Options::from_args(&parse("--engine gpu")).is_err());
     }
 }

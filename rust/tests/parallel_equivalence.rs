@@ -1,0 +1,329 @@
+//! Lockstep-vs-rank-parallel equivalence (ISSUE 5): the persistent rank
+//! pool must reproduce the lockstep engine's solutions and scores across
+//! storage modes, scenarios, device counts, batched packs, and repacks —
+//! and its failure path must error contextfully instead of deadlocking.
+//!
+//! Artifact-gated like every execution test: without `artifacts/` (or with
+//! the offline xla stub) each test returns early.
+
+use oggm::batch::{solve_pack, solve_pack_session, BatchCfg, SessionState};
+use oggm::coordinator::engine::{Engine, EngineCfg};
+use oggm::coordinator::fwd::forward_set;
+use oggm::coordinator::infer::{solve_scenario, InferCfg};
+use oggm::coordinator::shard::{
+    shards_for_graph, sparse_shards_for_graph, ShardSet, Storage,
+};
+use oggm::coordinator::train::{TrainCfg, Trainer};
+use oggm::env::Scenario;
+use oggm::graph::{generators, Graph, Partition};
+use oggm::model::Params;
+use oggm::parallel::RankPool;
+use oggm::runtime::Runtime;
+use oggm::util::rng::Pcg32;
+
+fn runtime() -> Option<Runtime> {
+    if !std::path::Path::new("artifacts/manifest.tsv").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(Runtime::new("artifacts").unwrap())
+}
+
+/// A pool, or None when the environment cannot run one (xla stub).
+fn pool(p: usize) -> Option<RankPool> {
+    match RankPool::new("artifacts", p) {
+        Ok(pool) => Some(pool),
+        Err(e) => {
+            eprintln!("skipping: rank pool unavailable: {e:#}");
+            None
+        }
+    }
+}
+
+fn fresh_set(rt: &Runtime, storage: Storage, part: Partition, g: &Graph) -> Option<ShardSet> {
+    let removed = vec![false; g.n];
+    let sol = vec![false; g.n];
+    let cand: Vec<bool> = (0..g.n).map(|v| g.degree(v) > 0).collect();
+    match storage {
+        Storage::Dense => {
+            Some(ShardSet::Dense(shards_for_graph(part, g, &removed, &sol, &cand)))
+        }
+        Storage::Sparse => {
+            let Ok((chunk, caps)) = rt.manifest.sparse_config(1, part.ni(), 32) else {
+                eprintln!("skipping: sparse artifacts not compiled");
+                return None;
+            };
+            Some(ShardSet::Sparse(sparse_shards_for_graph(
+                part, g, &removed, &sol, &cand, chunk, &caps,
+            )))
+        }
+    }
+}
+
+#[test]
+fn rank_forward_matches_lockstep() {
+    // One policy evaluation: identical scores from the single-threaded
+    // lockstep orchestrator and the concurrent rank pool (the rank-order
+    // deterministic all-reduce pins the fp summation order).
+    let Some(rt) = runtime() else { return };
+    let g = generators::erdos_renyi(20, 0.25, &mut Pcg32::seeded(71));
+    let params = Params::init(32, &mut Pcg32::seeded(72));
+    for p in [1usize, 2, 4] {
+        let Some(pool) = pool(p) else { return };
+        for storage in [Storage::Dense, Storage::Sparse] {
+            let part = Partition::new(24, p);
+            let Some(mut set) = fresh_set(&rt, storage, part, &g) else { continue };
+            let cfg = EngineCfg::new(p, 2);
+            let want = forward_set(&rt, &cfg, &params, &set, false, true, None).unwrap();
+            pool.install(0, &params, &mut set, true).unwrap();
+            let got = pool.forward(0, &cfg, &set, false, true).unwrap();
+            let d = oggm::util::max_abs_diff(&got.scores, &want.scores);
+            assert!(d < 1e-4, "P={p} {storage:?}: rank scores diverge by {d}");
+            // Per-rank compute attribution is populated like the lockstep
+            // engine's per-shard columns.
+            assert_eq!(got.timing.compute.len(), p);
+            assert!(got.timing.compute.iter().all(|&c| c > 0.0));
+            assert_eq!(got.timing.collectives, want.timing.collectives);
+            pool.uninstall(0).unwrap();
+        }
+    }
+}
+
+#[test]
+fn rank_solutions_match_lockstep_all_scenarios() {
+    // Full solves: identical solutions and objectives (within 1e-4) across
+    // dense/sparse × {MVC, MIS, MaxCut} × P∈{1,2,4}, resident and fresh.
+    let Some(rt) = runtime() else { return };
+    let g = generators::erdos_renyi(20, 0.25, &mut Pcg32::seeded(73));
+    let params = Params::init(32, &mut Pcg32::seeded(74));
+    for p in [1usize, 2, 4] {
+        for storage in [Storage::Dense, Storage::Sparse] {
+            if storage == Storage::Sparse && rt.manifest.sparse_config(1, 24 / p, 32).is_err() {
+                eprintln!("skipping sparse at P={p}: artifacts not compiled");
+                continue;
+            }
+            for scenario in Scenario::ALL {
+                let mut lockstep = InferCfg::new(p, 2);
+                lockstep.storage = storage;
+                let want = solve_scenario(&rt, &lockstep, &params, &g, 24, scenario).unwrap();
+                let mut ranks = lockstep;
+                ranks.engine.mode = Engine::RankParallel;
+                let got = match solve_scenario(&rt, &ranks, &params, &g, 24, scenario) {
+                    Ok(r) => r,
+                    Err(e) => {
+                        eprintln!("skipping: rank pool unavailable: {e:#}");
+                        return;
+                    }
+                };
+                assert_eq!(
+                    got.solution, want.solution,
+                    "P={p} {storage:?} {scenario}: solutions diverge"
+                );
+                assert_eq!(got.evaluations, want.evaluations);
+                assert!(
+                    (got.objective - want.objective).abs() < 1e-4,
+                    "P={p} {storage:?} {scenario}: objective diverges"
+                );
+            }
+        }
+    }
+    // Fresh-upload mode drives the same math without device residency.
+    let mut lockstep = InferCfg::new(2, 2);
+    lockstep.device_resident = false;
+    let want = solve_scenario(&rt, &lockstep, &params, &g, 24, Scenario::Mvc).unwrap();
+    let mut ranks = lockstep;
+    ranks.engine.mode = Engine::RankParallel;
+    let got = solve_scenario(&rt, &ranks, &params, &g, 24, Scenario::Mvc).unwrap();
+    assert_eq!(got.solution, want.solution, "fresh-mode solutions diverge");
+}
+
+#[test]
+fn rank_pack_with_repack_matches_lockstep() {
+    // Batched packs (B>1) through a compaction repack mid-solve: per-graph
+    // outcomes identical between engines, for both storage modes.
+    let Some(rt) = runtime() else { return };
+    let params = Params::init(32, &mut Pcg32::seeded(75));
+    let mut rng = Pcg32::seeded(76);
+    // Mixed sizes finish at different rounds, forcing a repack under
+    // compaction once a smaller compiled capacity fits the survivors.
+    let graphs: Vec<Graph> = [8usize, 20, 10, 18, 12]
+        .iter()
+        .map(|&n| generators::erdos_renyi(n, 0.3, &mut rng))
+        .collect();
+    for storage in [Storage::Dense, Storage::Sparse] {
+        if storage == Storage::Sparse && rt.manifest.sparse_config(8, 12, 32).is_err() {
+            eprintln!("skipping sparse pack: artifacts not compiled");
+            continue;
+        }
+        let mut lockstep = BatchCfg::new(2, 2);
+        lockstep.storage = storage;
+        let want =
+            solve_pack(&rt, &lockstep, &params, Scenario::Mvc, graphs.clone(), 24).unwrap();
+        assert!(want.repacks > 0, "{storage:?}: test pack never repacked");
+        let mut ranks = lockstep;
+        ranks.engine.mode = Engine::RankParallel;
+        let got = match solve_pack(&rt, &ranks, &params, Scenario::Mvc, graphs.clone(), 24) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("skipping: rank pool unavailable: {e:#}");
+                return;
+            }
+        };
+        assert_eq!(got.rounds, want.rounds, "{storage:?}: round counts diverge");
+        assert_eq!(got.repacks, want.repacks, "{storage:?}: repack counts diverge");
+        for (i, (g, w)) in got.per_graph.iter().zip(&want.per_graph).enumerate() {
+            assert_eq!(g.solution, w.solution, "{storage:?} graph {i}: solutions diverge");
+            assert!((g.objective - w.objective).abs() < 1e-4, "{storage:?} graph {i}");
+            assert!(g.valid, "{storage:?} graph {i}: invalid solution");
+        }
+        // Rank-engine transfer accounting is populated from the workers.
+        assert!(got.exec.executions > 0);
+        assert!(got.exec.h2d_bytes > 0);
+    }
+}
+
+#[test]
+fn warm_pool_skips_theta_reupload() {
+    // The warm-pool property: a second identical pack on the same pool
+    // moves strictly fewer h2d bytes per rank — at least θ's worth, since
+    // each rank's θ cache serves it without a transfer.
+    let Some(rt) = runtime() else { return };
+    let params = Params::init(32, &mut Pcg32::seeded(77));
+    let theta_bytes = 4 * params.flat.len() as u64;
+    let mut rng = Pcg32::seeded(78);
+    let graphs: Vec<Graph> =
+        (0..2).map(|_| generators::erdos_renyi(20, 0.25, &mut rng)).collect();
+    for p in [1usize, 2] {
+        let Some(pool) = pool(p) else { return };
+        let mut cfg = BatchCfg::new(p, 2);
+        cfg.engine.mode = Engine::RankParallel;
+        let session = SessionState { theta: None, pool: Some(&pool) };
+        let before = pool.rank_stats().unwrap();
+        let first = solve_pack_session(
+            &rt, &cfg, &params, Scenario::Mvc, graphs.clone(), 24, session,
+        )
+        .unwrap();
+        let mid = pool.rank_stats().unwrap();
+        let second = solve_pack_session(
+            &rt, &cfg, &params, Scenario::Mvc, graphs.clone(), 24, session,
+        )
+        .unwrap();
+        let after = pool.rank_stats().unwrap();
+        // Identical trajectories (same graphs, same params).
+        for (a, b) in first.per_graph.iter().zip(&second.per_graph) {
+            assert_eq!(a.solution, b.solution, "warm pack diverged from cold");
+        }
+        for rank in 0..p {
+            let cold = mid[rank].since(&before[rank]).h2d_bytes;
+            let warm = after[rank].since(&mid[rank]).h2d_bytes;
+            assert!(
+                warm < cold,
+                "P={p} rank {rank}: warm pack moved {warm} B, cold moved {cold} B"
+            );
+            assert!(
+                cold - warm >= theta_bytes,
+                "P={p} rank {rank}: warm pack saved {} B, expected ≥ θ ({theta_bytes} B)",
+                cold - warm
+            );
+            let hits = after[rank].since(&mid[rank]).cache_hits;
+            assert!(hits >= 7, "P={p} rank {rank}: θ cache hits {hits} < 7");
+        }
+    }
+}
+
+#[test]
+fn failing_rank_errors_without_deadlock() {
+    // The abort path end to end: a rank that fails mid-step surfaces as a
+    // contextful solve error (the sibling ranks blocked in the collective
+    // are woken), and the pool recovers for the next pack.
+    let Some(rt) = runtime() else { return };
+    let g = generators::erdos_renyi(20, 0.25, &mut Pcg32::seeded(79));
+    let params = Params::init(32, &mut Pcg32::seeded(80));
+    for p in [2usize, 4] {
+        let Some(pool) = pool(p) else { return };
+        let part = Partition::new(24, p);
+        let cfg = EngineCfg::new(p, 2);
+        let mut set = fresh_set(&rt, Storage::Dense, part, &g).unwrap();
+        pool.install(0, &params, &mut set, true).unwrap();
+        let ok = pool.forward(0, &cfg, &set, false, true).unwrap();
+        pool.inject_failure(1).unwrap();
+        let err = pool.forward(0, &cfg, &set, false, true).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("injected failure"), "P={p}: uncontextful error: {msg}");
+        assert!(msg.contains("rank 1"), "P={p}: failing rank not named: {msg}");
+        // The pool recovers transparently at the next install.
+        let mut set2 = fresh_set(&rt, Storage::Dense, part, &g).unwrap();
+        pool.install(0, &params, &mut set2, true).unwrap();
+        let again = pool.forward(0, &cfg, &set2, false, true).unwrap();
+        assert_eq!(again.scores, ok.scores, "P={p}: recovered pool diverges");
+    }
+}
+
+#[test]
+fn rank_training_matches_lockstep() {
+    // End-to-end training: rank-parallel minibatch fwd/bwd + gradient
+    // all-reduce must land on the lockstep parameters (fp tolerance, same
+    // bound as the trainer's own P-parity test).
+    let Some(rt) = runtime() else { return };
+    let run = |mode: Engine| -> Option<Vec<f32>> {
+        let mut rng = Pcg32::seeded(81);
+        let graphs: Vec<Graph> =
+            (0..3).map(|_| generators::erdos_renyi(20, 0.15, &mut rng)).collect();
+        let mut cfg = TrainCfg::new(2, 24);
+        cfg.seed = 5;
+        cfg.engine.mode = mode;
+        let params = Params::init(32, &mut Pcg32::seeded(82));
+        let mut tr = match Trainer::new(&rt, cfg, graphs, params) {
+            Ok(tr) => tr,
+            Err(e) => {
+                eprintln!("skipping: rank pool unavailable: {e:#}");
+                return None;
+            }
+        };
+        tr.run_episodes(2, |_| {}).unwrap();
+        Some(tr.params.flat)
+    };
+    let Some(want) = run(Engine::Lockstep) else { return };
+    let Some(got) = run(Engine::RankParallel) else { return };
+    let d = oggm::util::max_abs_diff(&got, &want);
+    assert!(d < 5e-3, "rank-parallel training diverged from lockstep by {d}");
+}
+
+#[test]
+fn service_rank_engine_streams_identical_outcomes() {
+    // The service boundary: the same job set through a rank-parallel
+    // session streams the same outcomes as the lockstep session.
+    let Some(rt) = runtime() else { return };
+    let params = Params::init(32, &mut Pcg32::seeded(83));
+    let mut rng = Pcg32::seeded(84);
+    let jobs: Vec<oggm::batch::Job> = (0..6)
+        .map(|i| oggm::batch::Job {
+            id: format!("j{i}"),
+            scenario: Scenario::ALL[i % Scenario::ALL.len()],
+            graph: generators::erdos_renyi(20, 0.2, &mut rng),
+        })
+        .collect();
+    let drain = |engine: Engine| -> Option<Vec<(String, Vec<usize>)>> {
+        let opts = oggm::service::Options::new().p(2).engine(engine);
+        let mut svc = oggm::service::Service::new(&rt, params.clone(), &opts);
+        for job in &jobs {
+            svc.submit(job.clone()).unwrap();
+        }
+        let mut out = Vec::new();
+        for ev in svc.drain() {
+            match ev.result {
+                Ok(o) => out.push((o.id, o.solution)),
+                Err(e) if e.contains("rank-parallel worker pool") => {
+                    eprintln!("skipping: rank pool unavailable: {e}");
+                    return None;
+                }
+                Err(e) => panic!("job {} failed: {e}", ev.id),
+            }
+        }
+        out.sort();
+        Some(out)
+    };
+    let Some(want) = drain(Engine::Lockstep) else { return };
+    let Some(got) = drain(Engine::RankParallel) else { return };
+    assert_eq!(got, want, "service outcomes diverge between engines");
+}
