@@ -1,0 +1,186 @@
+//! bench_service_load: networked serve front door under open-loop load
+//! (ISSUE 6).
+//!
+//! Drives `oggm serve --listen` over a real TCP socket with open-loop
+//! Poisson arrivals (exponential inter-arrival sleeps, independent of
+//! completions — a slow server builds queue, it does not slow the client)
+//! and reports client-observed p50/p99 round-trip latency against the
+//! offered jobs/sec, at P in {1, 2} under both execution engines. Every
+//! run stays below the per-tenant quota, so it also asserts the
+//! no-rejects-below-quota contract. Emits BENCH_service_load.json.
+//!
+//! Check mode: without artifacts (CI containers) the bench prints a skip
+//! notice and exits 0, like the artifact-gated tests.
+
+#[path = "common.rs"]
+mod common;
+
+use oggm::coordinator::engine::Engine;
+use oggm::coordinator::metrics::Table;
+use oggm::net::serve;
+use oggm::runtime::manifest;
+use oggm::service::Options;
+use oggm::util::json::Json;
+use oggm::util::rng::Pcg32;
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// Client-observed result of one load run.
+struct LoadRun {
+    latencies_ms: Vec<f64>,
+    rejects: usize,
+    wall_secs: f64,
+}
+
+/// Sorted-sample percentile (nearest-rank on the sorted slice).
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx]
+}
+
+/// One open-loop run: `jobs` Poisson arrivals at `rate` jobs/sec through a
+/// fresh single-connection server session.
+fn run_load(opts: &Options, jobs: usize, rate: f64, seed: u64) -> LoadRun {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+    let addr = listener.local_addr().unwrap();
+    let opts = opts.clone();
+    let params = common::init_params(&mut Pcg32::seeded(0xD1));
+    let server = thread::spawn(move || {
+        serve(listener, manifest::default_dir(), params, &opts).expect("serve failed")
+    });
+
+    let stream = TcpStream::connect(addr).expect("connect");
+    let reader = BufReader::new(stream.try_clone().expect("clone stream"));
+    // The reader thread timestamps every response line as it arrives so
+    // queueing delay on the socket is part of the measured latency.
+    let collector = thread::spawn(move || {
+        let mut seen: Vec<(String, Instant, bool)> = Vec::new();
+        for line in reader.lines() {
+            let line = match line {
+                Ok(l) => l,
+                Err(_) => break,
+            };
+            let at = Instant::now();
+            let v = Json::parse(&line).expect("response is not JSON");
+            let id = v.get("id").and_then(|j| j.as_str()).unwrap_or_default().to_string();
+            let rejected = v.get("rejected").and_then(|j| j.as_bool()).unwrap_or(false);
+            seen.push((id, at, rejected));
+        }
+        seen
+    });
+
+    let mut rng = Pcg32::seeded(seed);
+    let mut sent: HashMap<String, Instant> = HashMap::new();
+    let mut w = stream.try_clone().expect("clone stream");
+    let t0 = Instant::now();
+    for i in 0..jobs {
+        // Exponential inter-arrival gap: -ln(U)/rate, U in (0, 1].
+        let u = (1.0 - rng.next_f64()).max(1e-12);
+        thread::sleep(Duration::from_secs_f64(-u.ln() / rate));
+        let line = format!("gen er n=20 rho=0.2 seed={} id=l{i} mvc\n", 40 + i);
+        sent.insert(format!("l{i}"), Instant::now());
+        w.write_all(line.as_bytes()).expect("send job line");
+    }
+    // Half-close: EOF flushes the tenant's open packs and, with
+    // --max-conns 1, shuts the server down once everything drains.
+    stream.shutdown(Shutdown::Write).expect("half-close");
+    let seen = collector.join().expect("reader thread");
+    let summary = server.join().expect("server thread");
+    let wall_secs = t0.elapsed().as_secs_f64();
+
+    let mut latencies_ms = Vec::with_capacity(seen.len());
+    let mut rejects = 0usize;
+    for (id, at, rejected) in seen {
+        if rejected {
+            rejects += 1;
+            continue;
+        }
+        let from = sent.get(&id).unwrap_or_else(|| panic!("unknown response id '{id}'"));
+        latencies_ms.push(at.saturating_duration_since(*from).as_secs_f64() * 1e3);
+    }
+    assert_eq!(
+        latencies_ms.len() + rejects,
+        jobs,
+        "response stream lost jobs (summary: {} jobs, {} failed)",
+        summary.jobs,
+        summary.failed
+    );
+    assert_eq!(summary.failed, 0, "jobs failed under load");
+    // Open-loop in-flight is bounded by the job count, which every config
+    // keeps below the quota — any reject is a backpressure bug.
+    assert_eq!(rejects, 0, "rejected below quota ({rejects} rejects)");
+    assert_eq!(summary.snapshot.rejected, 0);
+    latencies_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    LoadRun { latencies_ms, rejects, wall_secs }
+}
+
+fn main() {
+    if !manifest::default_dir().join("manifest.tsv").exists() {
+        println!("bench_service_load: artifacts not built, skipping (check mode OK)");
+        return;
+    }
+    let rt = common::runtime();
+    let jobs = common::scaled(24, 8);
+    let rates: Vec<f64> = if common::fast_mode() { vec![32.0] } else { vec![8.0, 32.0] };
+    let p_list: Vec<usize> = if common::fast_mode() { vec![1] } else { vec![1, 2] };
+
+    let mut table = Table::new(
+        &format!("bench_service_load: {jobs} open-loop Poisson jobs over TCP"),
+        &["offered_jps", "achieved_jps", "p50_ms", "p99_ms", "rejects"],
+    );
+    let mut rows = Vec::new();
+    for &p in &p_list {
+        if rt.manifest.batch_sizes(24, 24 / p).last().copied().unwrap_or(0) < 4 {
+            println!("P={p}: no compiled batch shapes at N=24, skipping");
+            continue;
+        }
+        for engine in [Engine::Lockstep, Engine::RankParallel] {
+            for &rate in &rates {
+                // Quota far above the job count (the no-reject contract);
+                // a short max-wait bounds partial-pack tail latency.
+                let opts = Options::new()
+                    .p(p)
+                    .engine(engine)
+                    .max_wait(0.05)
+                    .quota(jobs * 4)
+                    .max_conns(1);
+                let run = run_load(&opts, jobs, rate, 0xE0 ^ (p as u64) ^ rate as u64);
+                let achieved = jobs as f64 / run.wall_secs;
+                let p50 = percentile(&run.latencies_ms, 0.50);
+                let p99 = percentile(&run.latencies_ms, 0.99);
+                println!(
+                    "P={p} {:>13}: offered {rate:>5.1} j/s, achieved {achieved:>6.2} j/s, \
+                     p50 {p50:>8.2} ms, p99 {p99:>8.2} ms, rejects {}",
+                    engine.name(),
+                    run.rejects
+                );
+                table.row(
+                    format!("P={p} {} @{rate}", engine.name()),
+                    vec![rate, achieved, p50, p99, run.rejects as f64],
+                );
+                rows.push(
+                    Json::obj()
+                        .set("p", p)
+                        .set("engine", engine.name())
+                        .set("offered_jobs_per_sec", rate)
+                        .set("achieved_jobs_per_sec", achieved)
+                        .set("jobs", jobs)
+                        .set("p50_ms", p50)
+                        .set("p99_ms", p99)
+                        .set("rejects", run.rejects),
+                );
+            }
+        }
+    }
+    common::emit(&table);
+    let json = Json::obj().set("bench", "service_load").set("rows", Json::Arr(rows));
+    std::fs::write("BENCH_service_load.json", json.render())
+        .expect("write BENCH_service_load.json");
+    println!("bench_service_load: wrote BENCH_service_load.json; OK");
+}

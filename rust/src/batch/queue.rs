@@ -21,7 +21,7 @@ use crate::env::Scenario;
 use crate::graph::Graph;
 use crate::model::Params;
 use crate::runtime::{ExecStats, Runtime};
-use crate::service::{LaunchPolicy, Service};
+use crate::service::{LaunchCause, LaunchPolicy, Service};
 use crate::util::json::Json;
 use anyhow::{anyhow, Context, Result};
 use std::time::Instant;
@@ -92,6 +92,8 @@ pub struct PackStat {
     pub scenario: Scenario,
     /// Padded bucket size N of the pack.
     pub bucket_n: usize,
+    /// What fired the pack's launch (fill / deadline / max_wait / flush).
+    pub cause: LaunchCause,
     /// Number of jobs solved in this pack.
     pub jobs: usize,
     /// Compiled batch capacity the pack opened at.
@@ -134,6 +136,7 @@ impl QueueReport {
                     .set("pack", p.pack)
                     .set("scenario", p.scenario.name())
                     .set("bucket_n", p.bucket_n)
+                    .set("cause", p.cause.name())
                     .set("jobs", p.jobs)
                     .set("capacity", p.capacity)
                     .set("rounds", p.rounds)
@@ -223,6 +226,7 @@ mod tests {
                 pack: 0,
                 scenario: Scenario::Mvc,
                 bucket_n: 24,
+                cause: LaunchCause::Flush,
                 jobs: 1,
                 capacity: 1,
                 rounds: 3,
@@ -243,6 +247,7 @@ mod tests {
         assert!(s.contains("\"id\":\"a\""), "{s}");
         assert!(s.contains("\"solution\":[1,4,7]"), "{s}");
         assert!(s.contains("\"capacity\":1"), "{s}");
+        assert!(s.contains("\"cause\":\"flush\""), "{s}");
         assert!(s.contains("\"wall_total\":0.7"), "{s}");
         // Transfer accounting is surfaced per pack.
         assert!(s.contains("\"executions\":9"), "{s}");

@@ -4,10 +4,10 @@
 //! One job per line; `#`/`%` comments and blank lines are skipped:
 //!
 //! ```text
-//! # <source> [key=value ...] [scenario] [id=NAME]
+//! # <source> [key=value ...] [scenario] [id=NAME] [max_latency_ms=MS]
 //! file graphs/road.txt mvc id=road
 //! gen er n=250 rho=0.15 seed=7 maxcut
-//! gen ba n=120 d=4 seed=3 mis
+//! gen ba n=120 d=4 seed=3 mis max_latency_ms=250
 //! gen hk n=500 d=4 triad=0.25 seed=9
 //! ```
 //!
@@ -53,6 +53,10 @@ pub struct JobSpec {
     pub scenario: Scenario,
     /// Where the graph comes from.
     pub source: GraphSource,
+    /// Launch-deadline budget in milliseconds (`max_latency_ms=`): the
+    /// job's pack launches at most this long after admission even if not
+    /// full. None = no per-job deadline (fill / max-wait / flush decide).
+    pub max_latency_ms: Option<u64>,
 }
 
 impl JobSpec {
@@ -117,6 +121,7 @@ fn parse_line(line: &str, index: usize) -> Result<JobSpec> {
     let kind = toks.next().unwrap(); // non-empty by construction
     let mut id = format!("job{index}");
     let mut scenario = Scenario::Mvc;
+    let mut max_latency_ms = None;
     let mut kv: Vec<(String, String)> = Vec::new();
     let mut bare: Vec<String> = Vec::new();
     for t in toks {
@@ -125,6 +130,8 @@ fn parse_line(line: &str, index: usize) -> Result<JobSpec> {
                 id = v.to_string();
             } else if k == "scenario" {
                 scenario = Scenario::parse(v)?;
+            } else if k == "max_latency_ms" {
+                max_latency_ms = Some(v.parse().context("bad max_latency_ms=")?);
             } else {
                 kv.push((k.to_string(), v.to_string()));
             }
@@ -183,7 +190,7 @@ fn parse_line(line: &str, index: usize) -> Result<JobSpec> {
         }
         other => bail!("unknown job kind '{other}' (file|gen)"),
     };
-    Ok(JobSpec { id, scenario, source })
+    Ok(JobSpec { id, scenario, source, max_latency_ms })
 }
 
 #[cfg(test)]
@@ -258,6 +265,17 @@ gen hk n=40 triad=0.5 scenario=mvc
     }
 
     #[test]
+    fn max_latency_key_parses_on_any_source() {
+        let jobs =
+            parse_manifest("gen er n=20 max_latency_ms=250\nfile a.txt max_latency_ms=5 mis")
+                .unwrap();
+        assert_eq!(jobs[0].max_latency_ms, Some(250));
+        assert_eq!(jobs[1].max_latency_ms, Some(5));
+        assert_eq!(parse_manifest("gen er n=20").unwrap()[0].max_latency_ms, None);
+        assert!(parse_manifest("gen er n=20 max_latency_ms=soon").is_err());
+    }
+
+    #[test]
     fn materialize_is_deterministic() {
         let jobs = parse_manifest("gen er n=40 rho=0.2 seed=11\ngen ba n=40 d=3 seed=11").unwrap();
         let a1 = jobs[0].materialize().unwrap();
@@ -279,6 +297,7 @@ gen hk n=40 triad=0.5 scenario=mvc
             id: "f".into(),
             scenario: Scenario::Mvc,
             source: GraphSource::File(p.clone()),
+            max_latency_ms: None,
         };
         let g2 = spec.materialize().unwrap();
         assert_eq!(g.n, g2.n);

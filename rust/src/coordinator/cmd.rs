@@ -6,18 +6,23 @@
 //! points (`Trainer`, `solve_scenario`, `run_queue`, `Service`).
 
 use super::infer::{solve_scenario, InferCfg};
+use super::metrics;
 use super::train::{TrainCfg, Trainer};
 use crate::batch::{self, BatchCfg, Job};
 use crate::env::Scenario;
 use crate::graph::{generators, io as gio, stats, Graph, Partition};
 use crate::model::Params;
+use crate::net;
 use crate::runtime::{manifest, Runtime};
-use crate::service::{Options, Service};
+use crate::service::{Options, Service, SubmitMeta};
 use crate::util::cli::Args;
 use crate::util::json::Json;
 use crate::util::rng::Pcg32;
 use anyhow::{bail, Context, Result};
 use std::io::{BufRead, Write};
+use std::net::TcpListener;
+use std::sync::mpsc::RecvTimeoutError;
+use std::time::Duration;
 
 fn load_runtime() -> Result<Runtime> {
     Runtime::new(manifest::default_dir())
@@ -257,19 +262,22 @@ fn serve_write_ready(
 ) -> Result<()> {
     // Per-pack stats go to stderr as packs finish (and taking them keeps
     // the persistent session's stats buffer from growing without bound).
+    let snap = svc.admission();
     for p in svc.take_packs() {
         eprintln!(
-            "serve: pack {:>3}: {:>6} N={:<5} jobs={:<3} capacity={:<3} rounds={:<4} \
-             repacks={}  sim {:.4}s  h2d {:.1} KiB",
+            "serve: pack {:>3}: {:>6} N={:<5} jobs={:<3} cause={:<8} capacity={:<3} \
+             rounds={:<4} sim {:.4}s  h2d {:.1} KiB | depth={} open={}",
             p.pack,
             p.scenario.name(),
             p.bucket_n,
             p.jobs,
+            p.cause.name(),
             p.capacity,
             p.rounds,
-            p.repacks,
             p.sim_time,
-            p.exec.h2d_bytes as f64 / 1024.0
+            p.exec.h2d_bytes as f64 / 1024.0,
+            snap.pending,
+            snap.open_packs
         );
     }
     let mut any = false;
@@ -295,28 +303,65 @@ fn serve_write_ready(
 /// as packs finish — results stream while later jobs are still being read.
 /// `--demo <count>` synthesizes a mixed-scenario job stream instead of
 /// reading input. `--scenario` overrides every job; `--max-wait <secs>`
-/// launches partial packs past the deadline — checked as each input line
-/// arrives (the loop is single-threaded and blocks on reads, so a fully
-/// idle stream launches at the next line or EOF); `--engine rank-parallel`
-/// solves packs on a session-persistent rank pool (DESIGN.md §9);
-/// `--check` exits 0 with a notice when artifacts are not built (CI smoke
-/// mode). Human-readable progress goes to stderr so stdout stays pure
-/// JSONL.
+/// and per-job `max_latency_ms=` launch partial packs on a real clock —
+/// input lines arrive on a side thread and the loop sleeps exactly until
+/// the earliest due pack, so an idle stream still launches on time;
+/// `--engine rank-parallel` solves packs on a session-persistent rank pool
+/// (DESIGN.md §9); `--check` exits 0 with a notice when artifacts are not
+/// built (CI smoke mode). Human-readable progress goes to stderr so stdout
+/// stays pure JSONL.
+///
+/// `--listen ADDR` switches to the networked front door (DESIGN.md §10):
+/// a TCP listener speaking the same line grammar (or its JSON form), one
+/// connection per tenant, multiplexed into one warm session with
+/// continuous batching, per-tenant quotas (`--quota`, default 64), a
+/// bounded admission queue (`--queue-cap`), and `--max-conns N` for
+/// deterministic drain-and-exit shutdown.
 pub fn cmd_serve(args: &Args) -> Result<()> {
     let opts = Options::from_args(args)?;
     if args.has_flag("check") && !manifest::default_dir().join("manifest.tsv").exists() {
         println!("serve: artifacts not built, skipping (check mode OK)");
         return Ok(());
     }
-    let rt = load_runtime()?;
     let mut rng = Pcg32::new(opts.seed_or(4), 80);
     let params = load_or_init_params(args, &mut rng)?;
+
+    if let Some(addr) = &opts.listen {
+        if args.get("jobs").is_some() || args.get_usize("demo", 0) > 0 {
+            bail!("--listen serves sockets; --jobs/--demo are file-mode inputs");
+        }
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding --listen {addr}"))?;
+        eprintln!(
+            "serve: listening on {} (quota {}, queue cap {}{})",
+            listener.local_addr().context("reading the bound address")?,
+            opts.quota.unwrap_or(net::server::DEFAULT_QUOTA),
+            opts.queue_cap,
+            match opts.max_conns {
+                Some(n) => format!(", max {n} conns"),
+                None => String::new(),
+            }
+        );
+        let summary = net::serve(listener, manifest::default_dir(), params, &opts)?;
+        eprintln!(
+            "serve: {} conns, {} jobs in, {} JSONL lines out ({} failed), {} packs",
+            summary.conns, summary.jobs, summary.lines_out, summary.failed,
+            summary.snapshot.launched
+        );
+        eprintln!(
+            "serve: admission {}",
+            metrics::admission_stats_json(&summary.snapshot).render()
+        );
+        return Ok(());
+    }
+
+    let rt = load_runtime()?;
     let mut svc = Service::new(&rt, params, &opts);
 
     if args.get("jobs").is_some() && args.get_usize("demo", 0) > 0 {
         bail!("--jobs and --demo are mutually exclusive (one real stream or one synthetic)");
     }
-    let reader: Box<dyn BufRead> = match args.get_usize("demo", 0) {
+    let reader: Box<dyn BufRead + Send> = match args.get_usize("demo", 0) {
         0 => match args.get("jobs") {
             Some(path) => Box::new(std::io::BufReader::new(
                 std::fs::File::open(path).with_context(|| format!("opening --jobs {path}"))?,
@@ -333,9 +378,25 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     };
 
     let (mut parsed, mut written, mut failed) = (0usize, 0usize, 0usize);
-    for (lineno, line) in reader.lines().enumerate() {
-        let raw = line.context("reading job input")?;
-        // Every input line is a chance to fire the max-wait policy and
+    let mut lineno = 0usize;
+    // Input lines arrive over a channel so the loop can sleep exactly
+    // until the earliest due pack — the same tick driver the TCP front
+    // loop uses (one clock for both serve modes).
+    let lines = net::driver::spawn_line_reader(reader);
+    loop {
+        let raw = match net::driver::recv_deadline(&lines, svc.next_due()) {
+            Err(RecvTimeoutError::Timeout) => {
+                // A pack came due (deadline or max-wait) while the input
+                // stream was idle: launch it and stream the results now.
+                svc.tick();
+                serve_write_ready(&mut svc, &mut out, &mut written, &mut failed)?;
+                continue;
+            }
+            Err(RecvTimeoutError::Disconnected) => break,
+            Ok(line) => line.context("reading job input")?,
+        };
+        lineno += 1;
+        // Every input line is also a chance to fire the clock policies and
         // stream whatever finished, even when the line itself admits
         // nothing (comments, blanks, malformed lines).
         svc.tick();
@@ -346,7 +407,7 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
             Err(e) => {
                 // One bad line must not kill the session: emit an error
                 // object for it and keep serving.
-                let id = format!("line{}", lineno + 1);
+                let id = format!("line{lineno}");
                 serve_error_line(&mut out, &mut written, &id, &format!("{e:#}"))?;
                 failed += 1;
                 continue;
@@ -354,6 +415,10 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         };
         parsed += 1;
         let id = spec.id.clone();
+        let meta = SubmitMeta {
+            tenant: 0,
+            max_latency: spec.max_latency_ms.map(Duration::from_millis),
+        };
         let job = match spec.materialize() {
             Ok(graph) => {
                 Job { id: id.clone(), scenario: opts.scenario.unwrap_or(spec.scenario), graph }
@@ -364,12 +429,12 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
                 continue;
             }
         };
-        if let Err(e) = svc.submit(job) {
+        if let Err(e) = svc.submit_with(job, meta) {
             serve_error_line(&mut out, &mut written, &id, &format!("{e:#}"))?;
             failed += 1;
         }
         // Stream whatever finished (a pack that filled launches inside
-        // submit; max-wait launches happen in the service's tick).
+        // submit; clock launches happen in the service's tick).
         serve_write_ready(&mut svc, &mut out, &mut written, &mut failed)?;
     }
     // EOF: solve the partial packs and drain the tail.
@@ -386,6 +451,7 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         svc.launched(),
         rt.keyed_bytes() as f64 / 1024.0
     );
+    eprintln!("serve: admission {}", metrics::admission_stats_json(&svc.admission()).render());
     Ok(())
 }
 

@@ -1,6 +1,7 @@
 //! Metrics output: learning-curve records, bench rows, JSON/CSV writers.
 
 use crate::runtime::ExecStats;
+use crate::service::AdmissionSnapshot;
 use crate::util::json::Json;
 use anyhow::Result;
 use std::io::Write;
@@ -18,6 +19,30 @@ pub fn exec_stats_json(st: &ExecStats) -> Json {
         .set("h2d_time", st.h2d_time.as_secs_f64())
         .set("d2h_time", st.d2h_time.as_secs_f64())
         .set("compile_time", st.compile_time.as_secs_f64())
+}
+
+/// Admission/backpressure counters as a JSON object — the shared shape for
+/// `oggm serve` stderr stats, the net front door's `{"op":"stats"}`
+/// response, and `BENCH_service_load.json` (DESIGN.md §10).
+pub fn admission_stats_json(snap: &AdmissionSnapshot) -> Json {
+    Json::obj()
+        .set("submitted", snap.submitted)
+        .set("rejected", snap.rejected)
+        .set("pending", snap.pending)
+        .set("in_flight", snap.in_flight)
+        .set("open_packs", snap.open_packs)
+        .set("peak_pending", snap.peak_pending)
+        .set("tenants", snap.tenants)
+        .set("max_tenant_load", snap.max_tenant_load)
+        .set("launched", snap.launched)
+        .set(
+            "launch_causes",
+            Json::obj()
+                .set("fill", snap.fill_launches)
+                .set("deadline", snap.deadline_launches)
+                .set("max_wait", snap.max_wait_launches)
+                .set("flush", snap.flush_launches),
+        )
 }
 
 /// Approximation ratio |sol| / |opt| (the paper's quality metric, Fig. 6/8).
@@ -160,6 +185,30 @@ mod tests {
         assert!(s.contains("\"h2d_bytes\":4096"), "{s}");
         assert!(s.contains("\"d2h_bytes\":128"), "{s}");
         assert!(s.contains("\"cache_hits\":3"), "{s}");
+    }
+
+    #[test]
+    fn admission_stats_render_as_json() {
+        let snap = AdmissionSnapshot {
+            submitted: 9,
+            rejected: 2,
+            pending: 3,
+            in_flight: 4,
+            open_packs: 1,
+            peak_pending: 5,
+            tenants: 2,
+            max_tenant_load: 4,
+            launched: 2,
+            fill_launches: 1,
+            deadline_launches: 1,
+            ..Default::default()
+        };
+        let s = admission_stats_json(&snap).render();
+        assert!(s.contains("\"submitted\":9"), "{s}");
+        assert!(s.contains("\"rejected\":2"), "{s}");
+        assert!(s.contains("\"in_flight\":4"), "{s}");
+        assert!(s.contains("\"max_tenant_load\":4"), "{s}");
+        assert!(s.contains("\"deadline\":1"), "{s}");
     }
 
     #[test]

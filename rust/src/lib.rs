@@ -37,5 +37,8 @@ pub mod batch;
 /// Persistent solver service: incremental job admission, streaming
 /// outcomes, unified `Options` (DESIGN.md §8).
 pub mod service;
+/// Networked serve front door: TCP listener, JSONL wire protocol,
+/// continuous batching across connections (DESIGN.md §10).
+pub mod net;
 /// Closed-form performance/memory analysis helpers (paper §5).
 pub mod analysis;

@@ -7,7 +7,12 @@
 //!   solve  [--opts]              classical baselines (exact / greedy / 2-approx)
 //!   batch-solve [--opts]         batched inference over a job manifest (§Batch)
 //!   serve  [--opts]              persistent solver service: job lines in,
-//!                                JSONL outcomes streamed out (DESIGN.md §8)
+//!                                JSONL outcomes streamed out (DESIGN.md §8);
+//!                                --listen ADDR serves the same protocol over
+//!                                TCP with continuous batching, per-tenant
+//!                                quotas (--quota), a bounded admission queue
+//!                                (--queue-cap), and --max-conns for
+//!                                deterministic shutdown (DESIGN.md §10)
 
 use oggm::util::cli::Args;
 

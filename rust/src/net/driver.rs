@@ -1,0 +1,85 @@
+//! The tick driver: one clock for every serve front end.
+//!
+//! Max-wait and per-job deadlines are *clock* launches — they must fire
+//! even when no request line arrives to piggyback on. Both serve modes
+//! therefore block on a channel with a timeout bounded by
+//! [`Admitter::next_due`](crate::service::Admitter::next_due):
+//!
+//! * file/stdin mode reads lines on a side thread
+//!   ([`spawn_line_reader`]) so the main loop can wake for a due pack
+//!   while the stream is idle;
+//! * the TCP front loop receives every message (jobs, EOFs, finished
+//!   packs) through one channel and uses the same [`recv_deadline`].
+//!
+//! Timeouts mean "a pack came due" — the caller runs `tick()` and goes
+//! back to waiting. No polling interval, no busy loop: the sleep is
+//! exactly as long as the earliest deadline.
+
+use std::io::BufRead;
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError};
+use std::time::Instant;
+
+/// Read lines on a dedicated thread, forwarding each over a bounded
+/// channel (capacity 256: backpressure instead of buffering a whole job
+/// file). The channel closes at EOF or on the first read error (the error
+/// is forwarded first).
+pub fn spawn_line_reader(
+    reader: Box<dyn BufRead + Send>,
+) -> Receiver<std::io::Result<String>> {
+    let (tx, rx) = mpsc::sync_channel(256);
+    std::thread::Builder::new()
+        .name("oggm-lines".into())
+        .spawn(move || {
+            for line in reader.lines() {
+                let stop = line.is_err();
+                if tx.send(line).is_err() || stop {
+                    break;
+                }
+            }
+        })
+        .expect("spawning the line-reader thread");
+    rx
+}
+
+/// Receive the next message, waking at `due` if nothing arrives first.
+/// `Err(Timeout)` means the deadline passed — tick the admission clock and
+/// call again. With no deadline pending this blocks indefinitely
+/// (`Err(Disconnected)` when every sender is gone).
+pub fn recv_deadline<T>(
+    rx: &Receiver<T>,
+    due: Option<Instant>,
+) -> Result<T, RecvTimeoutError> {
+    match due {
+        None => rx.recv().map_err(|_| RecvTimeoutError::Disconnected),
+        Some(at) => rx.recv_timeout(at.saturating_duration_since(Instant::now())),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn line_reader_streams_then_closes() {
+        let rx = spawn_line_reader(Box::new(std::io::Cursor::new("a\nb\n")));
+        assert_eq!(rx.recv().unwrap().unwrap(), "a");
+        assert_eq!(rx.recv().unwrap().unwrap(), "b");
+        assert!(rx.recv().is_err(), "channel must close at EOF");
+    }
+
+    #[test]
+    fn recv_deadline_times_out_and_blocks() {
+        let (tx, rx) = mpsc::channel::<u32>();
+        // A due instant in the past times out immediately.
+        let r = recv_deadline(&rx, Some(Instant::now()));
+        assert_eq!(r, Err(RecvTimeoutError::Timeout));
+        // A pending message beats any deadline.
+        tx.send(7).unwrap();
+        let r = recv_deadline(&rx, Some(Instant::now() + Duration::from_secs(60)));
+        assert_eq!(r, Ok(7));
+        // No deadline + closed channel = Disconnected, not a hang.
+        drop(tx);
+        assert_eq!(recv_deadline(&rx, None), Err(RecvTimeoutError::Disconnected));
+    }
+}

@@ -1,0 +1,47 @@
+//! The networked serve front door (DESIGN.md §10): a TCP listener
+//! speaking newline-delimited JSONL over the service's admission +
+//! execution halves.
+//!
+//! One process, four thread roles:
+//!
+//! * **accept** — owns the [`std::net::TcpListener`]; spawns one reader
+//!   thread per connection (each connection is one *tenant*).
+//! * **reader** (per connection) — parses request lines
+//!   ([`proto::parse_request`]: the batch-solve manifest grammar or its
+//!   JSON object form), materializes graphs, and forwards jobs into the
+//!   *bounded* front channel. A full channel rejects the job right here
+//!   with a backpressure line — admission memory is capped no matter how
+//!   fast clients write.
+//! * **front** — the only thread that touches the
+//!   [`Admitter`](crate::service::Admitter): multiplexes every
+//!   connection's jobs into one warm session's open packs, applies
+//!   per-tenant quotas, launches packs (fill / deadline / max-wait /
+//!   tenant EOF) onto the solver channel, and routes finished
+//!   [`JobEvent`](crate::service::JobEvent)s back to each tenant's socket.
+//!   Its clock is [`driver::recv_deadline`] bounded by
+//!   [`Admitter::next_due`](crate::service::Admitter::next_due), so
+//!   deadline launches fire with zero client traffic.
+//! * **solver** — owns its own [`Runtime`](crate::runtime::Runtime)
+//!   (single-threaded by design) inside an
+//!   [`Executor`](crate::service::Executor), pulling launched
+//!   [`PackRun`](crate::service::PackRun)s and pushing results back as
+//!   they finish. **Continuous batching** falls out of the split: while a
+//!   pack solves here, the front thread keeps admitting new arrivals into
+//!   the next open packs (`rust/tests/net.rs` pins it).
+//!
+//! Shutdown: a client half-closing its write side (EOF) flushes that
+//! tenant's open packs, and the server half-closes back once its last
+//! outcome is written. With `--max-conns N` the listener stops after N
+//! connections and [`server::serve`] returns a [`server::NetSummary`]
+//! once they drain — the deterministic mode CI smokes and
+//! `bench_service_load` use. Without it the process serves until killed.
+
+/// Tick/clock plumbing shared by the net front loop and file-mode serve.
+pub mod driver;
+/// Wire protocol: request-line parsing and response JSON shapes.
+pub mod proto;
+/// The TCP listener: accept/reader/front/solver thread assembly.
+pub mod server;
+
+pub use proto::Request;
+pub use server::{serve, serve_with, NetSummary};

@@ -1,0 +1,237 @@
+//! The serve wire protocol (DESIGN.md §10).
+//!
+//! Requests are newline-delimited, one per line, in either of two forms —
+//! both parse to the same [`JobSpec`] the file-mode front door uses:
+//!
+//! * the batch-solve manifest grammar (`gen er n=20 seed=7 mvc id=a`),
+//!   so a jobs file can be piped to the socket unchanged;
+//! * a JSON object: `{"id":"a","gen":"er","n":20,"seed":7,`
+//!   `"scenario":"mvc","max_latency_ms":250}` or
+//!   `{"id":"r","file":"graphs/road.txt"}`. Unknown keys are rejected
+//!   (same typo-hardening as the manifest grammar). `{"op":"stats"}`
+//!   requests an admission-counters line instead of a solve.
+//!
+//! Responses are one JSON object per line: [`JobEvent`] outcome lines
+//! (`crate::service::JobEvent::to_json`), error lines
+//! ([`error_json`]), backpressure reject lines ([`reject_json`] /
+//! [`busy_json`], marked `"rejected":true` so clients can retry), and
+//! stats lines ([`stats_json`]).
+
+use crate::batch::{parse_job_line, GraphSource, JobSpec};
+use crate::env::Scenario;
+use crate::service::AdmissionSnapshot;
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::path::PathBuf;
+
+/// One parsed request line.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// Solve this job.
+    Job(JobSpec),
+    /// Report admission/backpressure counters (`{"op":"stats"}`).
+    Stats,
+}
+
+/// Keys accepted in a JSON job request (everything else is a hard error:
+/// a typo'd `"sed":7` must not silently run with a default seed).
+const JOB_KEYS: &[&str] =
+    &["id", "scenario", "file", "gen", "n", "rho", "d", "triad", "seed", "max_latency_ms"];
+
+/// Parse one request line. `Ok(None)` for blank/comment lines;
+/// `index` numbers per-connection defaults (`id=job<index>`, generator
+/// seed) exactly like the file-mode manifest parser, counting this
+/// connection's job requests only.
+pub fn parse_request(line: &str, index: usize) -> Result<Option<Request>> {
+    let t = line.trim();
+    if !t.starts_with('{') {
+        // Blank/comment handling and the full grammar live in the manifest
+        // parser — one grammar, two transports.
+        return Ok(parse_job_line(t, index)?.map(Request::Job));
+    }
+    let j = Json::parse(t).context("request is not valid JSON")?;
+    if let Some(op) = j.get("op") {
+        let op = op.as_str().context("'op' must be a string")?;
+        if op == "stats" {
+            return Ok(Some(Request::Stats));
+        }
+        bail!("unknown op '{op}' (known: stats)");
+    }
+    for k in j.keys() {
+        if !JOB_KEYS.contains(&k) {
+            bail!("unknown request key '{k}' (allowed: {})", JOB_KEYS.join(", "));
+        }
+    }
+    let str_key = |key: &str| -> Result<Option<&str>> {
+        match j.get(key) {
+            Some(v) => Ok(Some(
+                v.as_str().with_context(|| format!("'{key}' must be a string"))?,
+            )),
+            None => Ok(None),
+        }
+    };
+    let int_key = |key: &str| -> Result<Option<u64>> {
+        match j.get(key) {
+            Some(v) => Ok(Some(v.as_u64().with_context(|| {
+                format!("'{key}' must be a non-negative integer")
+            })?)),
+            None => Ok(None),
+        }
+    };
+    let num_key = |key: &str| -> Result<Option<f64>> {
+        match j.get(key) {
+            Some(v) => {
+                Ok(Some(v.as_f64().with_context(|| format!("'{key}' must be a number"))?))
+            }
+            None => Ok(None),
+        }
+    };
+    let id = str_key("id")?.map(|s| s.to_string()).unwrap_or_else(|| format!("job{index}"));
+    let scenario = match str_key("scenario")? {
+        Some(s) => Scenario::parse(s)?,
+        None => Scenario::Mvc,
+    };
+    let max_latency_ms = int_key("max_latency_ms")?;
+    let source = match str_key("file")? {
+        Some(path) => {
+            for k in ["gen", "n", "rho", "d", "triad", "seed"] {
+                if j.get(k).is_some() {
+                    bail!("'file' requests take no '{k}' (generator keys are for 'gen')");
+                }
+            }
+            GraphSource::File(PathBuf::from(path))
+        }
+        None => {
+            let model = str_key("gen")?.unwrap_or("er").to_string();
+            if !matches!(model.as_str(), "er" | "ba" | "hk") {
+                bail!("unknown generator '{model}' (er|ba|hk)");
+            }
+            GraphSource::Gen {
+                model,
+                n: int_key("n")?.unwrap_or(250) as usize,
+                rho: num_key("rho")?.unwrap_or(0.15),
+                d: int_key("d")?.unwrap_or(4) as usize,
+                triad: num_key("triad")?.unwrap_or(0.25),
+                seed: int_key("seed")?.unwrap_or(index as u64),
+            }
+        }
+    };
+    Ok(Some(Request::Job(JobSpec { id, scenario, source, max_latency_ms })))
+}
+
+/// A per-job error line (parse/materialize/solve failures — terminal for
+/// the job, not retryable).
+pub fn error_json(id: &str, error: &str) -> Json {
+    Json::obj().set("id", id).set("error", error)
+}
+
+/// A quota-backpressure reject line: the tenant is at its load quota.
+/// `"rejected":true` marks it retryable; queue depth and the tenant's
+/// current load give the client its retry context.
+pub fn reject_json(id: &str, reason: &str, depth: usize, load: usize) -> Json {
+    Json::obj()
+        .set("id", id)
+        .set("error", reason)
+        .set("rejected", true)
+        .set("queue_depth", depth)
+        .set("tenant_load", load)
+}
+
+/// A queue-backpressure reject line: the bounded admission queue is full
+/// (written by the connection reader itself, before admission).
+pub fn busy_json(id: &str, queue_cap: usize) -> Json {
+    Json::obj()
+        .set("id", id)
+        .set("error", "server busy: admission queue full")
+        .set("rejected", true)
+        .set("queue_cap", queue_cap)
+}
+
+/// The `{"op":"stats"}` response: current admission counters.
+pub fn stats_json(snap: &AdmissionSnapshot) -> Json {
+    Json::obj()
+        .set("op", "stats")
+        .set("stats", crate::coordinator::metrics::admission_stats_json(snap))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_and_grammar_forms_parse_to_the_same_spec() {
+        let a = parse_request("gen er n=20 seed=7 maxcut id=alpha", 0).unwrap().unwrap();
+        let b = parse_request(
+            r#"{"id":"alpha","gen":"er","n":20,"seed":7,"scenario":"maxcut"}"#,
+            0,
+        )
+        .unwrap()
+        .unwrap();
+        assert_eq!(a, b);
+        match a {
+            Request::Job(spec) => {
+                assert_eq!(spec.id, "alpha");
+                assert_eq!(spec.scenario, Scenario::MaxCut);
+                assert_eq!(spec.max_latency_ms, None);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn json_defaults_match_the_grammar_defaults() {
+        let a = parse_request("gen er", 3).unwrap().unwrap();
+        let b = parse_request("{}", 3).unwrap().unwrap();
+        assert_eq!(a, b, "empty JSON object = default generator job");
+        let Request::Job(spec) = b else { panic!() };
+        assert_eq!(spec.id, "job3");
+        assert_eq!(
+            spec.source,
+            GraphSource::Gen { model: "er".into(), n: 250, rho: 0.15, d: 4, triad: 0.25, seed: 3 }
+        );
+    }
+
+    #[test]
+    fn deadline_file_and_stats_requests() {
+        let r = parse_request(r#"{"id":"d","n":24,"max_latency_ms":250}"#, 0).unwrap().unwrap();
+        let Request::Job(spec) = r else { panic!() };
+        assert_eq!(spec.max_latency_ms, Some(250));
+
+        let r = parse_request(r#"{"id":"f","file":"graphs/road.txt","scenario":"mis"}"#, 0)
+            .unwrap()
+            .unwrap();
+        let Request::Job(spec) = r else { panic!() };
+        assert_eq!(spec.source, GraphSource::File(PathBuf::from("graphs/road.txt")));
+
+        assert_eq!(parse_request(r#"{"op":"stats"}"#, 0).unwrap(), Some(Request::Stats));
+        assert!(parse_request("", 0).unwrap().is_none());
+        assert!(parse_request("# comment", 0).unwrap().is_none());
+    }
+
+    #[test]
+    fn rejects_malformed_requests() {
+        // Typos, bad types, unknown ops, broken JSON: all hard errors.
+        assert!(parse_request(r#"{"sed":7}"#, 0).is_err());
+        assert!(parse_request(r#"{"op":"solve-everything"}"#, 0).is_err());
+        assert!(parse_request(r#"{"n":"twenty"}"#, 0).is_err());
+        assert!(parse_request(r#"{"max_latency_ms":-1}"#, 0).is_err());
+        assert!(parse_request(r#"{"file":"a.txt","n":20}"#, 0).is_err());
+        assert!(parse_request(r#"{"gen":"zz"}"#, 0).is_err());
+        assert!(parse_request(r#"{"id":"a""#, 0).is_err());
+        assert!(parse_request("gen zz n=10", 0).is_err());
+    }
+
+    #[test]
+    fn response_shapes() {
+        let s = reject_json("j1", "tenant 3 at load quota", 5, 8).render();
+        assert!(s.contains("\"rejected\":true"), "{s}");
+        assert!(s.contains("\"queue_depth\":5"), "{s}");
+        assert!(s.contains("\"tenant_load\":8"), "{s}");
+        let s = busy_json("j2", 256).render();
+        assert!(s.contains("\"rejected\":true") && s.contains("\"queue_cap\":256"), "{s}");
+        let s = stats_json(&AdmissionSnapshot::default()).render();
+        assert!(s.contains("\"op\":\"stats\"") && s.contains("\"in_flight\":0"), "{s}");
+        let s = error_json("j3", "boom").render();
+        assert!(s.contains("\"error\":\"boom\"") && !s.contains("rejected"), "{s}");
+    }
+}

@@ -1,0 +1,452 @@
+//! The TCP serve front: accept/reader/front/solver thread assembly (see
+//! the module docs in `net/mod.rs` and DESIGN.md §10).
+
+use crate::batch::queue::{Job, PackStat};
+use crate::batch::spec::JobSpec;
+use crate::batch::BatchCfg;
+use crate::graph::Graph;
+use crate::model::Params;
+use crate::net::{driver, proto};
+use crate::runtime::{Manifest, Runtime};
+use crate::service::{
+    AdmitError, Admitter, AdmissionSnapshot, Executor, JobEvent, Options, PackDone, PackRun,
+    SubmitMeta,
+};
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Default per-tenant load quota when `--quota` is not given: deep enough
+/// to fill several packs per tenant, small enough that one firehose
+/// connection cannot monopolize the session.
+pub const DEFAULT_QUOTA: usize = 64;
+
+/// What a finished server run did (only reachable with
+/// [`Options::max_conns`] — an unbounded server runs until killed).
+#[derive(Debug)]
+pub struct NetSummary {
+    /// Connections served.
+    pub conns: u64,
+    /// Job requests received (after parse, before admission).
+    pub jobs: u64,
+    /// JSONL lines written to clients.
+    pub lines_out: u64,
+    /// Error/reject lines among them.
+    pub failed: u64,
+    /// Per-pack statistics, in launch order (successful packs).
+    pub packs: Vec<PackStat>,
+    /// Final admission counters.
+    pub snapshot: AdmissionSnapshot,
+}
+
+/// Everything the front loop can receive: connection lifecycle, parsed
+/// jobs, control requests, and finished packs — one channel, so
+/// [`driver::recv_deadline`] is the loop's only wait point.
+enum FrontMsg {
+    /// A reader thread registered its connection.
+    Conn { tenant: u64, writer: Arc<Mutex<TcpStream>> },
+    /// A parsed + materialized job request.
+    Job { tenant: u64, spec: JobSpec, graph: Graph },
+    /// A request line that failed to parse/materialize (per-job error).
+    BadLine { tenant: u64, id: String, error: String },
+    /// `{"op":"stats"}`.
+    Stats { tenant: u64 },
+    /// The tenant's input reached EOF (half-close or disconnect).
+    Eof { tenant: u64 },
+    /// The solver finished a pack.
+    Done(PackDone),
+    /// The accept loop stopped after spawning `conns` readers.
+    AcceptDone { conns: u64 },
+}
+
+/// What solves launched packs on the solver thread.
+enum Solver {
+    /// Production: construct a [`Runtime`] *inside* the solver thread (a
+    /// runtime is single-threaded) and run an [`Executor`] session on it.
+    Real {
+        /// Artifact directory to load the runtime from.
+        dir: PathBuf,
+        /// Batch configuration (engine, storage, policy).
+        cfg: BatchCfg,
+        /// Model parameters to serve.
+        params: Params,
+    },
+    /// Tests/benches: an injected solve function (deterministic timing, no
+    /// artifacts needed).
+    Custom(Box<dyn FnMut(PackRun) -> PackDone + Send>),
+}
+
+/// Serve the listener with the real solver: artifacts at `dir`, `params`
+/// as the session's θ. Blocks until the server drains (see
+/// [`NetSummary`]); without [`Options::max_conns`] that is "forever".
+pub fn serve(
+    listener: TcpListener,
+    dir: impl Into<PathBuf>,
+    params: Params,
+    opts: &Options,
+) -> Result<NetSummary> {
+    let dir = dir.into();
+    let manifest = Manifest::load(&dir)?;
+    let solver = Solver::Real { dir, cfg: BatchCfg::from(opts), params };
+    run_server(listener, manifest, opts, solver)
+}
+
+/// Serve the listener with an injected pack solver — the deterministic
+/// hook `rust/tests/net.rs` and `bench_service_load` use (admission,
+/// batching, deadlines, and quotas are all exercised for real; only the
+/// device solve is substituted). `manifest` supplies the compiled shapes
+/// admission packs against.
+pub fn serve_with(
+    listener: TcpListener,
+    manifest: Manifest,
+    opts: &Options,
+    solve: Box<dyn FnMut(PackRun) -> PackDone + Send>,
+) -> Result<NetSummary> {
+    run_server(listener, manifest, opts, Solver::Custom(solve))
+}
+
+/// Per-connection state the front thread tracks.
+struct Conn {
+    writer: Arc<Mutex<TcpStream>>,
+    eof: bool,
+}
+
+fn run_server(
+    listener: TcpListener,
+    manifest: Manifest,
+    opts: &Options,
+    solver: Solver,
+) -> Result<NetSummary> {
+    let queue_cap = opts.queue_cap.max(1);
+    // The ONE front channel: bounded, so total parsed-but-unadmitted jobs
+    // are capped; readers try_send jobs and reject on Full.
+    let (tx, rx) = mpsc::sync_channel::<FrontMsg>(queue_cap);
+    let (run_tx, run_rx) = mpsc::channel::<PackRun>();
+    let solver_handle = spawn_solver(solver, run_rx, tx.clone());
+    let accept_tx = tx.clone();
+    let max_conns = opts.max_conns;
+    std::thread::Builder::new()
+        .name("oggm-accept".into())
+        .spawn(move || accept_loop(listener, accept_tx, queue_cap, max_conns))
+        .context("spawning the accept thread")?;
+    // The front loop owns no sender; every remaining clone lives in a
+    // worker thread, so Disconnected can only mean total shutdown.
+    drop(tx);
+
+    let mut adm = Admitter::new(manifest, opts.p)
+        .launch_policy(opts.launch)
+        .max_wait(opts.max_wait)
+        .quota(Some(opts.quota.unwrap_or(DEFAULT_QUOTA)));
+    let mut conns: HashMap<u64, Conn> = HashMap::new();
+    let mut packs: Vec<PackStat> = Vec::new();
+    let (mut total_conns, mut closed, mut jobs_in) = (None::<u64>, 0u64, 0u64);
+    let (mut lines_out, mut failed) = (0u64, 0u64);
+
+    loop {
+        match driver::recv_deadline(&rx, adm.next_due()) {
+            Err(RecvTimeoutError::Timeout) => {
+                // A pack came due (deadline or max-wait) with no traffic.
+                send_runs(&run_tx, adm.tick(Instant::now()));
+            }
+            Err(RecvTimeoutError::Disconnected) => break,
+            Ok(FrontMsg::Conn { tenant, writer }) => {
+                conns.insert(tenant, Conn { writer, eof: false });
+            }
+            Ok(FrontMsg::Job { tenant, spec, graph }) => {
+                jobs_in += 1;
+                let id = spec.id.clone();
+                let meta = SubmitMeta {
+                    tenant,
+                    max_latency: spec.max_latency_ms.map(Duration::from_millis),
+                };
+                let job = Job {
+                    id: spec.id,
+                    scenario: opts.scenario.unwrap_or(spec.scenario),
+                    graph,
+                };
+                match adm.submit(job, meta) {
+                    Ok((_, runs)) => send_runs(&run_tx, runs),
+                    Err(AdmitError::Busy { reason, depth, load }) => {
+                        failed += 1;
+                        write_to(&conns, tenant, &proto::reject_json(&id, &reason, depth, load),
+                                 &mut lines_out);
+                    }
+                    Err(AdmitError::Invalid(e)) => {
+                        failed += 1;
+                        write_to(&conns, tenant, &proto::error_json(&id, &format!("{e:#}")),
+                                 &mut lines_out);
+                    }
+                }
+            }
+            Ok(FrontMsg::BadLine { tenant, id, error }) => {
+                failed += 1;
+                write_to(&conns, tenant, &proto::error_json(&id, &error), &mut lines_out);
+            }
+            Ok(FrontMsg::Stats { tenant }) => {
+                write_to(&conns, tenant, &proto::stats_json(&adm.snapshot()), &mut lines_out);
+            }
+            Ok(FrontMsg::Eof { tenant }) => {
+                if let Some(c) = conns.get_mut(&tenant) {
+                    c.eof = true;
+                }
+                // This tenant sends nothing more: its jobs must not wait
+                // for other tenants' traffic to fill a pack.
+                send_runs(&run_tx, adm.flush_tenant(tenant));
+                closed += maybe_close(&adm, &mut conns, tenant);
+            }
+            Ok(FrontMsg::Done(done)) => {
+                let mut touched = Vec::with_capacity(done.events.len());
+                for ev in done.events {
+                    adm.complete(ev.tenant, 1);
+                    if ev.result.is_err() {
+                        failed += 1;
+                    }
+                    write_to(&conns, ev.tenant, &ev.to_json(), &mut lines_out);
+                    touched.push(ev.tenant);
+                }
+                if let Some(stat) = done.stat {
+                    let snap = adm.snapshot();
+                    eprintln!(
+                        "serve: pack {:>3}: {:>6} N={:<5} jobs={:<3} cause={:<8} sim {:.4}s \
+                         | depth={} open={} in_flight={}",
+                        stat.pack, stat.scenario.name(), stat.bucket_n, stat.jobs,
+                        stat.cause.name(), stat.sim_time,
+                        snap.pending, snap.open_packs, snap.in_flight
+                    );
+                    packs.push(stat);
+                }
+                touched.sort_unstable();
+                touched.dedup();
+                for tenant in touched {
+                    closed += maybe_close(&adm, &mut conns, tenant);
+                }
+            }
+            Ok(FrontMsg::AcceptDone { conns: n }) => {
+                total_conns = Some(n);
+            }
+        }
+        // Drained exit: the listener stopped, every connection closed out,
+        // and nothing is queued or in flight.
+        if total_conns == Some(closed)
+            && adm.pending() == 0
+            && adm.snapshot().in_flight == 0
+        {
+            break;
+        }
+    }
+    // Closing the run channel stops the solver; its FrontMsg sender drops
+    // with it.
+    drop(run_tx);
+    let _ = solver_handle.join();
+    Ok(NetSummary {
+        conns: closed,
+        jobs: jobs_in,
+        lines_out,
+        failed,
+        packs,
+        snapshot: adm.snapshot(),
+    })
+}
+
+/// Forward launched packs to the solver thread (a send failure means the
+/// solver is gone — the front loop will exit via Disconnected).
+fn send_runs(run_tx: &mpsc::Sender<PackRun>, runs: Vec<PackRun>) {
+    for run in runs {
+        let _ = run_tx.send(run);
+    }
+}
+
+/// Write one JSONL line to a tenant's socket, counting it. Silently drops
+/// lines for vanished connections (a client that disconnected early still
+/// had its pack solved — co-packed tenants needed it).
+fn write_to(conns: &HashMap<u64, Conn>, tenant: u64, json: &Json, lines_out: &mut u64) {
+    let Some(conn) = conns.get(&tenant) else { return };
+    let mut line = json.render();
+    line.push('\n');
+    if let Ok(mut w) = conn.writer.lock() {
+        if (*w).write_all(line.as_bytes()).is_ok() {
+            *lines_out += 1;
+        }
+    }
+}
+
+/// Close out a tenant whose input ended and whose last outcome is written:
+/// half-close our write side (the client's read loop sees EOF) and drop
+/// the registration. Returns 1 when the connection closed.
+fn maybe_close(adm: &Admitter, conns: &mut HashMap<u64, Conn>, tenant: u64) -> u64 {
+    let done = conns
+        .get(&tenant)
+        .map(|c| c.eof && adm.tenant_load(tenant) == 0)
+        .unwrap_or(false);
+    if !done {
+        return 0;
+    }
+    if let Some(c) = conns.remove(&tenant) {
+        if let Ok(w) = c.writer.lock() {
+            let _ = w.shutdown(Shutdown::Write);
+        }
+    }
+    1
+}
+
+/// Accept connections until the listener errors fatally or `max_conns` is
+/// reached; one reader thread per connection. Tenant ids start at 1 (0 is
+/// the library/file-mode default tenant).
+fn accept_loop(
+    listener: TcpListener,
+    tx: SyncSender<FrontMsg>,
+    queue_cap: usize,
+    max_conns: Option<usize>,
+) {
+    let mut spawned = 0u64;
+    for stream in listener.incoming() {
+        let Ok(stream) = stream else { continue };
+        let Ok(writer) = stream.try_clone() else { continue };
+        let tenant = spawned + 1;
+        let writer = Arc::new(Mutex::new(writer));
+        let tx2 = tx.clone();
+        let ok = std::thread::Builder::new()
+            .name(format!("oggm-conn-{tenant}"))
+            .spawn(move || reader_loop(tenant, stream, writer, tx2, queue_cap))
+            .is_ok();
+        if ok {
+            spawned += 1;
+        }
+        if let Some(cap) = max_conns {
+            if spawned >= cap as u64 {
+                break;
+            }
+        }
+    }
+    let _ = tx.send(FrontMsg::AcceptDone { conns: spawned });
+}
+
+/// Per-connection reader: parse request lines, materialize graphs, and
+/// forward jobs with `try_send` — a full front channel becomes an
+/// immediate backpressure reject on this socket, written right here so the
+/// overloaded front thread never sees the job at all.
+fn reader_loop(
+    tenant: u64,
+    stream: TcpStream,
+    writer: Arc<Mutex<TcpStream>>,
+    tx: SyncSender<FrontMsg>,
+    queue_cap: usize,
+) {
+    if tx.send(FrontMsg::Conn { tenant, writer: writer.clone() }).is_err() {
+        return;
+    }
+    let (mut jobs, mut lineno) = (0usize, 0usize);
+    for line in BufReader::new(stream).lines() {
+        lineno += 1;
+        // A read error (reset, aborted) ends the connection like EOF.
+        let Ok(raw) = line else { break };
+        match proto::parse_request(&raw, jobs) {
+            Ok(None) => continue,
+            Ok(Some(proto::Request::Stats)) => {
+                if tx.send(FrontMsg::Stats { tenant }).is_err() {
+                    return;
+                }
+            }
+            Ok(Some(proto::Request::Job(spec))) => {
+                jobs += 1;
+                let id = spec.id.clone();
+                match spec.materialize() {
+                    Ok(graph) => match tx.try_send(FrontMsg::Job { tenant, spec, graph }) {
+                        Ok(()) => {}
+                        Err(TrySendError::Full(_)) => {
+                            let mut line = proto::busy_json(&id, queue_cap).render();
+                            line.push('\n');
+                            if let Ok(mut w) = writer.lock() {
+                                let _ = (*w).write_all(line.as_bytes());
+                            }
+                        }
+                        Err(TrySendError::Disconnected(_)) => return,
+                    },
+                    Err(e) => {
+                        let msg = FrontMsg::BadLine { tenant, id, error: format!("{e:#}") };
+                        if tx.send(msg).is_err() {
+                            return;
+                        }
+                    }
+                }
+            }
+            Err(e) => {
+                let msg = FrontMsg::BadLine {
+                    tenant,
+                    id: format!("line{lineno}"),
+                    error: format!("{e:#}"),
+                };
+                if tx.send(msg).is_err() {
+                    return;
+                }
+            }
+        }
+    }
+    let _ = tx.send(FrontMsg::Eof { tenant });
+}
+
+/// The solver thread: pull launched packs, solve, push results. The real
+/// variant constructs its [`Runtime`] here — in-thread — because runtimes
+/// are single-threaded by design; a startup failure degrades to contextful
+/// per-job error events rather than killing the server.
+fn spawn_solver(
+    solver: Solver,
+    run_rx: Receiver<PackRun>,
+    tx: SyncSender<FrontMsg>,
+) -> std::thread::JoinHandle<()> {
+    std::thread::Builder::new()
+        .name("oggm-solver".into())
+        .spawn(move || match solver {
+            Solver::Custom(mut solve) => {
+                for run in run_rx {
+                    if tx.send(FrontMsg::Done(solve(run))).is_err() {
+                        break;
+                    }
+                }
+            }
+            Solver::Real { dir, cfg, params } => match Runtime::new(&dir) {
+                Ok(rt) => {
+                    let mut exec = Executor::new(&rt, params, cfg);
+                    for run in run_rx {
+                        if tx.send(FrontMsg::Done(exec.run(run))).is_err() {
+                            break;
+                        }
+                    }
+                }
+                Err(e) => {
+                    let msg = format!("runtime startup failed: {e:#}");
+                    for run in run_rx {
+                        if tx.send(FrontMsg::Done(fail_pack(run, &msg))).is_err() {
+                            break;
+                        }
+                    }
+                }
+            },
+        })
+        .expect("spawning the solver thread")
+}
+
+/// Turn a pack into per-job error events (solver could not start).
+fn fail_pack(run: PackRun, msg: &str) -> PackDone {
+    let started = Instant::now();
+    let PackRun { pack, scenario, bucket, members, .. } = run;
+    let err = format!("pack {pack} ({scenario}, N={bucket}): {msg}");
+    let events = members
+        .into_iter()
+        .map(|m| JobEvent {
+            job: m.job,
+            id: m.id,
+            scenario,
+            tenant: m.tenant,
+            wait_ms: started.saturating_duration_since(m.submitted).as_secs_f64() * 1e3,
+            result: Err(err.clone()),
+        })
+        .collect();
+    PackDone { events, stat: None }
+}

@@ -1,0 +1,716 @@
+//! Admission control: the runtime-free half of the solver service.
+//!
+//! The [`Admitter`] owns everything about a session that does NOT need a
+//! device: open packs keyed by (scenario, compiled bucket), the launch
+//! policy (fill / flush / max-wait / per-job deadline), per-tenant load
+//! quotas, and the backpressure counters. It never solves anything —
+//! `submit`/`tick`/`flush` return [`PackRun`]s, and whoever owns the
+//! compute (the synchronous [`Service`](crate::service::Service), or the
+//! TCP front door's solver thread, DESIGN.md §10) executes them.
+//!
+//! That split is what makes **continuous batching** possible: the network
+//! front thread keeps admitting jobs into open packs through this type
+//! while earlier [`PackRun`]s are still in flight on the solver thread.
+//! It is also what makes launch policy *testable without artifacts* — the
+//! unit tests below drive deadlines and quotas against a synthetic
+//! manifest, no compiled stage anywhere.
+//!
+//! Launch policy, in precedence order (evaluated per open pack):
+//! 1. **Fill** — under [`LaunchPolicy::OnFill`] a pack launches inside
+//!    `submit` the moment it reaches the largest compiled batch capacity.
+//! 2. **Deadline** — each job may carry a `max_latency` budget; the pack's
+//!    due time is the earliest member deadline. `max_latency` bounds time
+//!    spent *queued in an open pack* (solve time is excluded — there is no
+//!    solve-time estimator; DESIGN.md §10 discusses the contract).
+//! 3. **Max-wait** — the session-wide cap on how long any open pack may
+//!    wait, measured from the pack's first admission.
+//! A pack's due time is the *earlier* of (2) and (3); when both are due,
+//! the deadline wins the cause bookkeeping (ties go to [`LaunchCause::Deadline`]).
+//! Under [`LaunchPolicy::OnFlush`] nothing launches before `flush()` —
+//! deadlines and max-wait are deliberately inert so the one-shot
+//! `batch::run_queue` wrapper keeps its bit-exact historical grouping.
+
+use crate::batch::queue::Job;
+use crate::env::Scenario;
+use crate::graph::Graph;
+use crate::runtime::Manifest;
+use crate::service::options::LaunchPolicy;
+use crate::service::JobId;
+use anyhow::{anyhow, Context, Result};
+use std::collections::btree_map::Entry;
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// Per-submission metadata the wire protocol attaches to a [`Job`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SubmitMeta {
+    /// Tenant (connection) the job belongs to; quota accounting is per
+    /// tenant. Library callers that don't multiplex use the default 0.
+    pub tenant: u64,
+    /// Launch-deadline budget: the job's pack becomes due this long after
+    /// admission (None = no per-job deadline).
+    pub max_latency: Option<Duration>,
+}
+
+/// Why `submit` refused a job.
+#[derive(Debug)]
+pub enum AdmitError {
+    /// Backpressure: the tenant is at its load quota. Retryable once some
+    /// of the tenant's jobs finish; carries queue-depth context for the
+    /// reject event.
+    Busy {
+        /// Human-readable reject reason (tenant load, quota).
+        reason: String,
+        /// Jobs currently waiting in open packs (session-wide).
+        depth: usize,
+        /// The rejecting tenant's current load (queued + in flight).
+        load: usize,
+    },
+    /// The job can never be admitted (no compiled bucket fits, manifest
+    /// inconsistency). Not retryable.
+    Invalid(anyhow::Error),
+}
+
+impl AdmitError {
+    /// Render the error message (both variants are contextful).
+    pub fn message(&self) -> String {
+        match self {
+            AdmitError::Busy { reason, .. } => reason.clone(),
+            AdmitError::Invalid(e) => format!("{e:#}"),
+        }
+    }
+}
+
+impl From<AdmitError> for anyhow::Error {
+    fn from(e: AdmitError) -> anyhow::Error {
+        match e {
+            AdmitError::Busy { reason, .. } => anyhow!(reason),
+            AdmitError::Invalid(err) => err,
+        }
+    }
+}
+
+/// What fired a pack launch (bookkept per pack and surfaced in
+/// [`PackStat`](crate::batch::queue::PackStat) / the admission snapshot).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LaunchCause {
+    /// The pack filled to the largest compiled batch capacity.
+    Fill,
+    /// A member job's `max_latency` deadline came due.
+    Deadline,
+    /// The session max-wait elapsed since the pack opened.
+    MaxWait,
+    /// An explicit `flush()` (or end-of-stream for a tenant).
+    Flush,
+}
+
+impl LaunchCause {
+    /// Lowercase name (JSON/stat rendering).
+    pub fn name(self) -> &'static str {
+        match self {
+            LaunchCause::Fill => "fill",
+            LaunchCause::Deadline => "deadline",
+            LaunchCause::MaxWait => "max_wait",
+            LaunchCause::Flush => "flush",
+        }
+    }
+}
+
+/// A job riding in an open pack (admission accepted, not yet launched).
+#[derive(Debug)]
+pub struct Pending {
+    /// Service-assigned handle.
+    pub job: JobId,
+    /// Caller-facing id.
+    pub id: String,
+    /// The instance to solve.
+    pub graph: Graph,
+    /// Owning tenant (quota accounting + event routing).
+    pub tenant: u64,
+    /// Admission time (queue-wait accounting).
+    pub submitted: Instant,
+    /// Launch deadline, if the job carried a `max_latency` budget.
+    pub due: Option<Instant>,
+}
+
+/// One launched pack, ready for an executor: the admission-ordered member
+/// jobs plus the pack's identity and launch cause. Produced by
+/// [`Admitter::submit`]/[`Admitter::tick`]/[`Admitter::flush`]; consumed by
+/// [`Executor::run`](crate::service::Executor::run) (inline or on a solver
+/// thread).
+#[derive(Debug)]
+pub struct PackRun {
+    /// Monotonic pack index (launch order, successful or not).
+    pub pack: usize,
+    /// Scenario shared by every member.
+    pub scenario: Scenario,
+    /// Padded bucket size N of the pack.
+    pub bucket: usize,
+    /// What fired the launch.
+    pub cause: LaunchCause,
+    /// Member jobs, in admission order.
+    pub members: Vec<Pending>,
+}
+
+/// Backpressure counters at a point in time (rendered by
+/// [`metrics::admission_stats_json`](crate::coordinator::metrics::admission_stats_json)).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AdmissionSnapshot {
+    /// Jobs admitted over the session.
+    pub submitted: u64,
+    /// Jobs refused for backpressure (quota / bounded queue).
+    pub rejected: u64,
+    /// Jobs waiting in open packs right now.
+    pub pending: usize,
+    /// Jobs launched but whose outcome event has not been emitted yet.
+    pub in_flight: usize,
+    /// Open (not yet launched) packs right now.
+    pub open_packs: usize,
+    /// High-water mark of `pending` over the session.
+    pub peak_pending: usize,
+    /// Tenants with non-zero load right now.
+    pub tenants: usize,
+    /// Largest single-tenant load (queued + in flight) right now.
+    pub max_tenant_load: usize,
+    /// Packs launched so far.
+    pub launched: usize,
+    /// Launches fired by pack fill.
+    pub fill_launches: u64,
+    /// Launches fired by a per-job deadline.
+    pub deadline_launches: u64,
+    /// Launches fired by the session max-wait.
+    pub max_wait_launches: u64,
+    /// Launches fired by an explicit flush / end-of-stream.
+    pub flush_launches: u64,
+}
+
+/// An open pack: jobs of one (scenario, bucket) waiting to launch.
+#[derive(Debug)]
+struct OpenPack {
+    members: Vec<Pending>,
+    opened: Instant,
+    /// Largest compiled batch capacity for the key's (bucket, P) — the
+    /// fill threshold and the chunk size at launch.
+    max_cap: usize,
+}
+
+impl OpenPack {
+    /// When this pack becomes due, and why: the earlier of the earliest
+    /// member deadline and `opened + max_wait`. Deadline wins ties.
+    fn due(&self, max_wait: Option<f64>) -> Option<(Instant, LaunchCause)> {
+        let deadline = self.members.iter().filter_map(|m| m.due).min();
+        // Clamp: from_secs_f64 panics on negative/huge CLI values.
+        let waited =
+            max_wait.map(|w| self.opened + Duration::from_secs_f64(w.clamp(0.0, 1e9)));
+        match (deadline, waited) {
+            (Some(d), Some(w)) if d <= w => Some((d, LaunchCause::Deadline)),
+            (Some(_) | None, Some(w)) => Some((w, LaunchCause::MaxWait)),
+            (Some(d), None) => Some((d, LaunchCause::Deadline)),
+            (None, None) => None,
+        }
+    }
+}
+
+/// Admission control for one service session (see module docs). Built
+/// from the artifact [`Manifest`] — no runtime, no device, `Send`.
+#[derive(Debug)]
+pub struct Admitter {
+    manifest: Manifest,
+    p: usize,
+    launch: LaunchPolicy,
+    max_wait: Option<f64>,
+    /// Max load (queued + in flight) per tenant; None = unlimited.
+    quota: Option<usize>,
+    open: BTreeMap<(Scenario, usize), OpenPack>,
+    /// Load per tenant: jobs admitted whose outcome event has not been
+    /// emitted yet (queued in an open pack OR launched and in flight).
+    load: BTreeMap<u64, usize>,
+    next_job: u64,
+    launched: usize,
+    in_flight: usize,
+    rejected: u64,
+    peak_pending: usize,
+    fill_launches: u64,
+    deadline_launches: u64,
+    max_wait_launches: u64,
+    flush_launches: u64,
+}
+
+impl Admitter {
+    /// New session over `manifest` with `p` shards per pack.
+    pub fn new(manifest: Manifest, p: usize) -> Admitter {
+        Admitter {
+            manifest,
+            p,
+            launch: LaunchPolicy::OnFill,
+            max_wait: None,
+            quota: None,
+            open: BTreeMap::new(),
+            load: BTreeMap::new(),
+            next_job: 0,
+            launched: 0,
+            in_flight: 0,
+            rejected: 0,
+            peak_pending: 0,
+            fill_launches: 0,
+            deadline_launches: 0,
+            max_wait_launches: 0,
+            flush_launches: 0,
+        }
+    }
+
+    /// Set the launch policy (builder style).
+    pub fn launch_policy(mut self, launch: LaunchPolicy) -> Admitter {
+        self.set_launch(launch);
+        self
+    }
+
+    /// Set the session max-wait seconds (builder style).
+    pub fn max_wait(mut self, secs: Option<f64>) -> Admitter {
+        self.set_max_wait(secs);
+        self
+    }
+
+    /// Set the per-tenant load quota (builder style; None = unlimited).
+    pub fn quota(mut self, quota: Option<usize>) -> Admitter {
+        self.set_quota(quota);
+        self
+    }
+
+    /// Set the launch policy in place (for embedding types).
+    pub fn set_launch(&mut self, launch: LaunchPolicy) {
+        self.launch = launch;
+    }
+
+    /// Set the session max-wait seconds in place.
+    pub fn set_max_wait(&mut self, secs: Option<f64>) {
+        self.max_wait = secs;
+    }
+
+    /// Set the per-tenant load quota in place (None = unlimited).
+    pub fn set_quota(&mut self, quota: Option<usize>) {
+        self.quota = quota;
+    }
+
+    /// Admit one job. On success the job is in an open pack and any packs
+    /// that launched as a consequence (fill under [`LaunchPolicy::OnFill`],
+    /// or a zero/past deadline) are returned for execution.
+    ///
+    /// [`AdmitError::Busy`] is backpressure (tenant at quota; job NOT
+    /// admitted, no job id consumed, retryable). [`AdmitError::Invalid`]
+    /// means the job can never run here (no compiled bucket fits).
+    pub fn submit(
+        &mut self,
+        job: Job,
+        meta: SubmitMeta,
+    ) -> std::result::Result<(JobId, Vec<PackRun>), AdmitError> {
+        let bucket = self
+            .manifest
+            .bucket_for_any_batch(job.graph.n, self.p)
+            .with_context(|| format!("job '{}' (|V|={}) not admitted", job.id, job.graph.n))
+            .map_err(AdmitError::Invalid)?;
+        if let Some(quota) = self.quota {
+            let used = self.load.get(&meta.tenant).copied().unwrap_or(0);
+            if used >= quota {
+                self.rejected += 1;
+                return Err(AdmitError::Busy {
+                    reason: format!(
+                        "job '{}' rejected: tenant {} at load quota ({used}/{quota} \
+                         jobs queued or in flight)",
+                        job.id, meta.tenant
+                    ),
+                    depth: self.pending(),
+                    load: used,
+                });
+            }
+        }
+        let key = (job.scenario, bucket);
+        let now = Instant::now();
+        // The capacity lookup only matters when this key opens a new pack;
+        // an existing open pack already carries it.
+        let open = match self.open.entry(key) {
+            Entry::Occupied(e) => e.into_mut(),
+            Entry::Vacant(v) => {
+                let max_cap = self
+                    .manifest
+                    .batch_sizes(bucket, bucket / self.p)
+                    .last()
+                    .copied()
+                    .with_context(|| {
+                        format!(
+                            "job '{}': no compiled batch capacities at bucket N={bucket}, P={} \
+                             (manifest inconsistent: the bucket lookup accepted it)",
+                            job.id, self.p
+                        )
+                    })
+                    .map_err(AdmitError::Invalid)?;
+                v.insert(OpenPack { members: Vec::new(), opened: now, max_cap })
+            }
+        };
+        let jid = JobId::new(self.next_job);
+        self.next_job += 1;
+        open.members.push(Pending {
+            job: jid,
+            id: job.id,
+            graph: job.graph,
+            tenant: meta.tenant,
+            submitted: now,
+            due: meta.max_latency.map(|d| now + d),
+        });
+        *self.load.entry(meta.tenant).or_insert(0) += 1;
+        self.peak_pending = self.peak_pending.max(self.pending());
+        let mut runs = Vec::new();
+        if self.launch == LaunchPolicy::OnFill && open.members.len() >= open.max_cap {
+            let pack = self.open.remove(&key).expect("open pack just inserted");
+            self.launch_chunks(key, pack, LaunchCause::Fill, &mut runs);
+        }
+        // A zero (or past) deadline launches on the spot.
+        runs.extend(self.tick(now));
+        Ok((jid, runs))
+    }
+
+    /// Launch every open pack that is due at `now` (deadline or max-wait),
+    /// in deterministic (scenario, bucket) key order. No-op under
+    /// [`LaunchPolicy::OnFlush`] — that policy's contract is "nothing
+    /// launches before `flush()`".
+    pub fn tick(&mut self, now: Instant) -> Vec<PackRun> {
+        let mut runs = Vec::new();
+        if self.launch == LaunchPolicy::OnFlush {
+            return runs;
+        }
+        let due: Vec<((Scenario, usize), LaunchCause)> = self
+            .open
+            .iter()
+            .filter_map(|(&k, pack)| {
+                pack.due(self.max_wait)
+                    .filter(|&(at, _)| at <= now)
+                    .map(|(_, cause)| (k, cause))
+            })
+            .collect();
+        for (key, cause) in due {
+            let pack = self.open.remove(&key).expect("due key read from the map");
+            self.launch_chunks(key, pack, cause, &mut runs);
+        }
+        runs
+    }
+
+    /// Launch every open pack (cause [`LaunchCause::Flush`]), in
+    /// deterministic key order, chunking oversize [`LaunchPolicy::OnFlush`]
+    /// groups to the compiled capacity — exactly `run_queue`'s historical
+    /// grouping.
+    pub fn flush(&mut self) -> Vec<PackRun> {
+        let open = std::mem::take(&mut self.open);
+        let mut runs = Vec::new();
+        for (key, pack) in open {
+            self.launch_chunks(key, pack, LaunchCause::Flush, &mut runs);
+        }
+        runs
+    }
+
+    /// Launch every open pack containing at least one of `tenant`'s jobs
+    /// (end-of-stream for that tenant: its jobs must not wait for traffic
+    /// from other tenants). Whole packs launch — co-riding jobs of other
+    /// tenants ride along, which only ever lowers their latency.
+    pub fn flush_tenant(&mut self, tenant: u64) -> Vec<PackRun> {
+        let keys: Vec<(Scenario, usize)> = self
+            .open
+            .iter()
+            .filter(|(_, pack)| pack.members.iter().any(|m| m.tenant == tenant))
+            .map(|(&k, _)| k)
+            .collect();
+        let mut runs = Vec::new();
+        for key in keys {
+            let pack = self.open.remove(&key).expect("key read from the map");
+            self.launch_chunks(key, pack, LaunchCause::Flush, &mut runs);
+        }
+        runs
+    }
+
+    /// The earliest instant any open pack becomes due (the tick driver's
+    /// sleep bound). None when nothing is waiting on a clock — no open
+    /// packs, no deadline/max-wait policy, or [`LaunchPolicy::OnFlush`].
+    pub fn next_due(&self) -> Option<Instant> {
+        if self.launch == LaunchPolicy::OnFlush {
+            return None;
+        }
+        self.open.values().filter_map(|p| p.due(self.max_wait)).map(|(at, _)| at).min()
+    }
+
+    /// Record that `count` outcome events for `tenant`'s launched jobs
+    /// were emitted (frees quota and in-flight accounting).
+    pub fn complete(&mut self, tenant: u64, count: usize) {
+        self.in_flight = self.in_flight.saturating_sub(count);
+        if let Some(load) = self.load.get_mut(&tenant) {
+            *load = load.saturating_sub(count);
+            if *load == 0 {
+                self.load.remove(&tenant);
+            }
+        }
+    }
+
+    /// Jobs waiting in open packs right now.
+    pub fn pending(&self) -> usize {
+        self.open.values().map(|p| p.members.len()).sum()
+    }
+
+    /// Jobs admitted for `tenant` whose outcome event has not been
+    /// emitted yet (queued + in flight).
+    pub fn tenant_load(&self, tenant: u64) -> usize {
+        self.load.get(&tenant).copied().unwrap_or(0)
+    }
+
+    /// Jobs admitted over the session so far.
+    pub fn submitted(&self) -> u64 {
+        self.next_job
+    }
+
+    /// Packs launched so far (successful or failed).
+    pub fn launched(&self) -> usize {
+        self.launched
+    }
+
+    /// Point-in-time backpressure counters.
+    pub fn snapshot(&self) -> AdmissionSnapshot {
+        AdmissionSnapshot {
+            submitted: self.next_job,
+            rejected: self.rejected,
+            pending: self.pending(),
+            in_flight: self.in_flight,
+            open_packs: self.open.len(),
+            peak_pending: self.peak_pending,
+            tenants: self.load.len(),
+            max_tenant_load: self.load.values().copied().max().unwrap_or(0),
+            launched: self.launched,
+            fill_launches: self.fill_launches,
+            deadline_launches: self.deadline_launches,
+            max_wait_launches: self.max_wait_launches,
+            flush_launches: self.flush_launches,
+        }
+    }
+
+    /// Chunk a closing pack to its compiled capacity and assign pack
+    /// indices, preserving admission order.
+    fn launch_chunks(
+        &mut self,
+        key: (Scenario, usize),
+        pack: OpenPack,
+        cause: LaunchCause,
+        runs: &mut Vec<PackRun>,
+    ) {
+        let mut members = pack.members;
+        while !members.is_empty() {
+            let rest = if members.len() > pack.max_cap {
+                members.split_off(pack.max_cap)
+            } else {
+                Vec::new()
+            };
+            let chunk = std::mem::replace(&mut members, rest);
+            self.in_flight += chunk.len();
+            match cause {
+                LaunchCause::Fill => self.fill_launches += 1,
+                LaunchCause::Deadline => self.deadline_launches += 1,
+                LaunchCause::MaxWait => self.max_wait_launches += 1,
+                LaunchCause::Flush => self.flush_launches += 1,
+            }
+            runs.push(PackRun {
+                pack: self.launched,
+                scenario: key.0,
+                bucket: key.1,
+                cause,
+                members: chunk,
+            });
+            self.launched += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::util::rng::Pcg32;
+
+    /// Synthetic manifest: one N=24 bucket with batch capacities 1/2/4 at
+    /// P=1 — launch policy runs entirely host-side, no artifacts needed.
+    fn manifest() -> Manifest {
+        let dir = std::env::temp_dir().join(format!(
+            "oggm_admit_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.tsv"),
+            "# oggm artifact manifest\tk=32\tl=2\n\
+             q_scores_b1_n24_ni24_k32\tq_scores\t1\t24\t24\t32\t1\tq1.hlo.txt\n\
+             q_scores_b2_n24_ni24_k32\tq_scores\t2\t24\t24\t32\t1\tq2.hlo.txt\n\
+             q_scores_b4_n24_ni24_k32\tq_scores\t4\t24\t24\t32\t1\tq4.hlo.txt\n",
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+        m
+    }
+
+    fn job(i: usize) -> Job {
+        Job {
+            id: format!("j{i}"),
+            scenario: Scenario::Mvc,
+            graph: generators::erdos_renyi(20, 0.2, &mut Pcg32::seeded(7 + i as u64)),
+        }
+    }
+
+    fn meta(tenant: u64, ms: Option<u64>) -> SubmitMeta {
+        SubmitMeta { tenant, max_latency: ms.map(Duration::from_millis) }
+    }
+
+    #[test]
+    fn fill_launch_chunks_and_numbers_packs() {
+        let mut a = Admitter::new(manifest(), 1);
+        let mut runs = Vec::new();
+        for i in 0..5 {
+            let (jid, r) = a.submit(job(i), SubmitMeta::default()).unwrap();
+            assert_eq!(jid.index(), i);
+            runs.extend(r);
+        }
+        // Capacity 4 filled once -> one fill launch; the 5th job rides on.
+        assert_eq!(runs.len(), 1);
+        assert_eq!(runs[0].pack, 0);
+        assert_eq!(runs[0].cause, LaunchCause::Fill);
+        assert_eq!(runs[0].members.len(), 4);
+        assert_eq!(a.pending(), 1);
+        assert_eq!(a.snapshot().in_flight, 4);
+        let tail = a.flush();
+        assert_eq!(tail.len(), 1);
+        assert_eq!(tail[0].pack, 1);
+        assert_eq!(tail[0].cause, LaunchCause::Flush);
+        let snap = a.snapshot();
+        assert_eq!((snap.fill_launches, snap.flush_launches), (1, 1));
+        assert_eq!(snap.peak_pending, 4);
+    }
+
+    #[test]
+    fn deadline_fires_before_fill() {
+        let mut a = Admitter::new(manifest(), 1);
+        // 2 of capacity 4, one with an immediate deadline: launches inside
+        // submit's tick without ever filling.
+        let (_, r) = a.submit(job(0), SubmitMeta::default()).unwrap();
+        assert!(r.is_empty());
+        let (_, r) = a.submit(job(1), meta(0, Some(0))).unwrap();
+        assert_eq!(r.len(), 1, "zero deadline must launch on the spot");
+        assert_eq!(r[0].cause, LaunchCause::Deadline);
+        assert_eq!(r[0].members.len(), 2, "the co-riding job launches too");
+        assert_eq!(a.snapshot().deadline_launches, 1);
+        assert!(a.next_due().is_none());
+    }
+
+    #[test]
+    fn deadline_vs_max_wait_precedence() {
+        // Deadline earlier than max-wait: cause is Deadline.
+        let mut a = Admitter::new(manifest(), 1).max_wait(Some(1e6));
+        let (_, runs) = a.submit(job(0), meta(0, Some(0))).unwrap();
+        assert_eq!(runs.len(), 1);
+        assert_eq!(runs[0].cause, LaunchCause::Deadline);
+        assert_eq!(a.snapshot().deadline_launches, 1);
+        assert_eq!(a.snapshot().max_wait_launches, 0);
+
+        // Max-wait earlier than every deadline: cause is MaxWait.
+        let mut a = Admitter::new(manifest(), 1).max_wait(Some(0.0));
+        let (_, runs) = a.submit(job(0), meta(0, Some(1_000_000))).unwrap();
+        assert_eq!(runs.len(), 1);
+        assert_eq!(runs[0].cause, LaunchCause::MaxWait);
+        assert_eq!(a.snapshot().max_wait_launches, 1);
+
+        // next_due reports the earlier bound (deadline here).
+        let mut a = Admitter::new(manifest(), 1).max_wait(Some(1e6));
+        a.submit(job(0), meta(0, Some(5_000))).unwrap();
+        let due = a.next_due().expect("a deadline is pending");
+        let lead = due.saturating_duration_since(Instant::now());
+        assert!(lead <= Duration::from_millis(5_000), "due follows the deadline, got {lead:?}");
+    }
+
+    #[test]
+    fn on_flush_ignores_clocks() {
+        let mut a = Admitter::new(manifest(), 1)
+            .launch_policy(LaunchPolicy::OnFlush)
+            .max_wait(Some(0.0));
+        let (_, runs) = a.submit(job(0), meta(0, Some(0))).unwrap();
+        assert!(runs.is_empty(), "OnFlush launched before flush()");
+        assert!(a.next_due().is_none());
+        assert!(a.tick(Instant::now()).is_empty());
+        // 5 jobs chunk to 4+1 at flush, key-ordered, pack-numbered.
+        for i in 1..5 {
+            a.submit(job(i), SubmitMeta::default()).unwrap();
+        }
+        let runs = a.flush();
+        assert_eq!(runs.len(), 2);
+        assert_eq!((runs[0].pack, runs[0].members.len()), (0, 4));
+        assert_eq!((runs[1].pack, runs[1].members.len()), (1, 1));
+    }
+
+    #[test]
+    fn quota_rejects_are_busy_and_retryable() {
+        let mut a = Admitter::new(manifest(), 1).quota(Some(2));
+        a.submit(job(0), meta(7, None)).unwrap();
+        a.submit(job(1), meta(7, None)).unwrap();
+        // Tenant 7 is at quota; tenant 8 is not.
+        let err = a.submit(job(2), meta(7, None)).unwrap_err();
+        match err {
+            AdmitError::Busy { reason, depth, load } => {
+                assert!(reason.contains("j2") && reason.contains("quota"), "{reason}");
+                assert_eq!((depth, load), (2, 2));
+            }
+            other => panic!("expected Busy, got {other:?}"),
+        }
+        assert_eq!(a.submitted(), 2, "rejected job must not consume an id");
+        assert_eq!(a.snapshot().rejected, 1);
+        a.submit(job(3), meta(8, None)).unwrap();
+        assert_eq!(a.snapshot().tenants, 2);
+        assert_eq!(a.snapshot().max_tenant_load, 2);
+
+        // Launch + complete frees the quota.
+        let runs = a.flush();
+        let t7: usize =
+            runs.iter().flat_map(|r| &r.members).filter(|m| m.tenant == 7).count();
+        assert_eq!(t7, 2);
+        a.complete(7, t7);
+        assert_eq!(a.tenant_load(7), 0);
+        assert!(a.submit(job(4), meta(7, None)).is_ok());
+    }
+
+    #[test]
+    fn flush_tenant_takes_whole_copacked_packs() {
+        let mut a = Admitter::new(manifest(), 1);
+        a.submit(job(0), meta(1, None)).unwrap();
+        a.submit(job(1), meta(2, None)).unwrap();
+        let mut b = job(2);
+        b.scenario = Scenario::Mis;
+        a.submit(b, meta(2, None)).unwrap();
+        // Tenant 1's EOF launches the MVC pack (tenant 2's job co-rides)
+        // but not tenant 2's MIS-only pack.
+        let runs = a.flush_tenant(1);
+        assert_eq!(runs.len(), 1);
+        assert_eq!(runs[0].scenario, Scenario::Mvc);
+        assert_eq!(runs[0].members.len(), 2);
+        assert_eq!(a.pending(), 1);
+        assert!(a.flush_tenant(99).is_empty());
+    }
+
+    #[test]
+    fn invalid_jobs_never_consume_ids() {
+        let mut a = Admitter::new(manifest(), 1);
+        let whale = Job {
+            id: "whale".into(),
+            scenario: Scenario::Mvc,
+            graph: generators::barabasi_albert(500, 2, &mut Pcg32::seeded(3)),
+        };
+        match a.submit(whale, SubmitMeta::default()) {
+            Err(AdmitError::Invalid(e)) => {
+                assert!(format!("{e:#}").contains("whale"), "{e:#}");
+            }
+            other => panic!("expected Invalid, got {other:?}"),
+        }
+        assert_eq!(a.submitted(), 0);
+        assert_eq!(a.snapshot().rejected, 0, "invalid is not backpressure");
+    }
+}

@@ -3,31 +3,46 @@
 //!
 //! Where `batch::run_queue` is one-shot — every job up front, solve
 //! everything, report at the end — a [`Service`] is a long-lived session
-//! that owns the warm state heavy solve traffic needs:
+//! that owns the warm state heavy solve traffic needs. Since PR 6 it is a
+//! thin composition of two halves that can also be used apart:
 //!
-//! * **Incremental admission** — [`Service::submit`] drops each job into an
-//!   *open pack* keyed by (scenario, compiled bucket). A pack launches the
-//!   moment it fills to the largest compiled batch capacity
-//!   ([`LaunchPolicy::OnFill`]), when an optional max-wait expires, or at
-//!   [`Service::flush`]. Admission errors (no compiled bucket fits the
-//!   graph) surface per job at `submit`, with the job id in the message.
-//! * **Streaming outcomes** — finished packs push one [`JobEvent`] per job
-//!   into a ready queue that [`Service::poll`] drains, so callers see
-//!   results while later jobs are still being admitted. A pack-level solve
-//!   failure becomes a contextful per-job error event, never a panic.
-//! * **Warm caches** — compiled executables live in the [`Runtime`], and θ
-//!   is published once through a service-owned
-//!   [`ThetaCache`](crate::coordinator::fwd::ThetaCache), so every pack
-//!   after the first skips the θ upload entirely (`rust/tests/service.rs`
-//!   asserts a warm drain moves strictly fewer h2d bytes than a cold one).
+//! * [`Admitter`] (`service/admission.rs`) — the runtime-free admission
+//!   core: open packs keyed by (scenario, compiled bucket), launch policy
+//!   (fill / flush / max-wait / per-job deadline), per-tenant quotas and
+//!   backpressure counters. `Send`, testable without artifacts.
+//! * [`Executor`] — the compute half: owns the session's warm
+//!   [`ThetaCache`](crate::coordinator::fwd::ThetaCache) and lazy
+//!   [`RankPool`], and turns each launched [`PackRun`] into per-job
+//!   [`JobEvent`]s plus a [`PackStat`].
 //!
-//! Configuration comes from one builder-style [`Options`] shared with every
-//! CLI subcommand; `batch::run_queue` is a thin compatibility wrapper over
-//! this type (submit all → flush → drain, [`LaunchPolicy::OnFlush`]).
+//! The synchronous [`Service`] wires them back to back: `submit` admits
+//! and solves any launched pack before returning. The TCP front door
+//! (`net/`, DESIGN.md §10) runs the same two halves on different threads —
+//! the [`Admitter`] on the connection-facing front thread, the
+//! [`Executor`] on a solver thread with its own [`Runtime`] — which is
+//! what makes continuous batching work: jobs keep packing while earlier
+//! packs are in flight.
+//!
+//! Behavior notes carried over from PR 4/5 (pinned by tests):
+//!
+//! * Streaming — finished packs push one [`JobEvent`] per job into a ready
+//!   queue drained by [`Service::poll`]; a pack-level solve failure becomes
+//!   contextful per-job error events, never a panic.
+//! * Warm caches — θ is published once per session; every pack after the
+//!   first skips the θ upload (`rust/tests/service.rs` pins it).
+//! * `batch::run_queue` stays a thin compatibility wrapper
+//!   ([`LaunchPolicy::OnFlush`] + fail-fast) with its historical grouping
+//!   bit-exact.
 
 /// The unified options layer (`Options`, `LaunchPolicy`).
 pub mod options;
 
+/// Runtime-free admission control (open packs, deadlines, quotas).
+pub mod admission;
+
+pub use admission::{
+    AdmitError, Admitter, AdmissionSnapshot, LaunchCause, PackRun, Pending, SubmitMeta,
+};
 pub use options::{LaunchPolicy, Options};
 
 use crate::batch::queue::{Job, JobOutcome, PackStat};
@@ -35,14 +50,12 @@ use crate::batch::solve::{solve_pack_session, SessionState};
 use crate::coordinator::engine::Engine;
 use crate::coordinator::fwd::ThetaCache;
 use crate::env::Scenario;
-use crate::graph::Graph;
 use crate::model::Params;
 use crate::parallel::RankPool;
 use crate::runtime::Runtime;
 use crate::util::json::Json;
 use anyhow::{Context, Result};
-use std::collections::btree_map::Entry;
-use std::collections::{BTreeMap, VecDeque};
+use std::collections::VecDeque;
 use std::time::Instant;
 
 /// Service-assigned job handle, monotonically numbered in admission order
@@ -51,6 +64,11 @@ use std::time::Instant;
 pub struct JobId(u64);
 
 impl JobId {
+    /// Wrap an admission index (the [`Admitter`] is the only id source).
+    pub(crate) fn new(i: u64) -> JobId {
+        JobId(i)
+    }
+
     /// The admission index (0 = first job submitted to this service).
     pub fn index(self) -> usize {
         self.0 as usize
@@ -73,23 +91,31 @@ pub struct JobEvent {
     pub id: String,
     /// Scenario the job ran under.
     pub scenario: Scenario,
+    /// Tenant that submitted the job (0 for single-tenant sessions).
+    pub tenant: u64,
+    /// Milliseconds the job waited between admission and its pack starting
+    /// to solve (queue wait; solve time is not included).
+    pub wait_ms: f64,
     /// The outcome, or the pack's error with job/pack context.
     pub result: Result<JobOutcome, String>,
 }
 
 impl JobEvent {
     /// Render as one `oggm serve` JSONL line: the [`JobOutcome`] object
-    /// plus the service `job` handle, or `{id, job, scenario, error}` for
-    /// failures (schema in README §serve).
+    /// plus the service `job` handle, tenant, and queue wait, or
+    /// `{id, job, scenario, tenant, wait_ms, error}` for failures (schema
+    /// in README §serve).
     pub fn to_json(&self) -> Json {
-        match &self.result {
-            Ok(o) => o.to_json().set("job", self.job.0),
+        let base = match &self.result {
+            Ok(o) => o.to_json(),
             Err(e) => Json::obj()
                 .set("id", self.id.as_str())
-                .set("job", self.job.0)
                 .set("scenario", self.scenario.name())
                 .set("error", e.as_str()),
-        }
+        };
+        base.set("job", self.job.0)
+            .set("tenant", self.tenant)
+            .set("wait_ms", (self.wait_ms * 1000.0).round() / 1000.0)
     }
 }
 
@@ -98,22 +124,193 @@ fn solution_ids(mask: &[bool]) -> Vec<usize> {
     mask.iter().enumerate().filter(|(_, &b)| b).map(|(v, _)| v).collect()
 }
 
-/// A not-yet-launched job riding in an open pack.
+/// The result of executing one [`PackRun`]: per-job events (in admission
+/// order) and, for successful packs, the pack's statistics row.
 #[derive(Debug)]
-struct Pending {
-    job: JobId,
-    id: String,
-    graph: Graph,
+pub struct PackDone {
+    /// One event per member job, in admission order.
+    pub events: Vec<JobEvent>,
+    /// Statistics for a successfully solved pack (None on failure/skip).
+    pub stat: Option<PackStat>,
 }
 
-/// An open pack: jobs of one (scenario, bucket) waiting to fill.
-#[derive(Debug)]
-struct OpenPack {
-    members: Vec<Pending>,
-    opened: Instant,
-    /// Largest compiled batch capacity for the key's (bucket, P) — the
-    /// fill threshold and the flush-time chunk size.
-    max_cap: usize,
+/// The compute half of a service session: a warm θ cache plus the lazy
+/// rank pool, turning launched [`PackRun`]s into [`PackDone`]s. Owned
+/// directly by [`Service`] for the synchronous path; the TCP front door
+/// runs one on a dedicated solver thread with its own [`Runtime`] (a
+/// `Runtime` is single-threaded, so the executor lives where the runtime
+/// lives).
+pub struct Executor<'r> {
+    rt: &'r Runtime,
+    params: Params,
+    cfg: crate::batch::BatchCfg,
+    /// Stop solving after the first pack-level error: later runs emit
+    /// skipped-error events instead of solving (`run_queue`'s historical
+    /// fail-fast).
+    abort_on_error: bool,
+    aborted: bool,
+    theta: ThetaCache,
+    /// Persistent rank pool for the rank-parallel engine, created lazily
+    /// at the first run (so construction stays infallible) and kept warm
+    /// across packs: each rank re-uploads θ only when the session
+    /// parameters change — i.e. never, after the first pack (DESIGN.md §9).
+    pool: Option<RankPool>,
+}
+
+impl<'r> Executor<'r> {
+    /// New executor over a warm runtime.
+    pub fn new(rt: &'r Runtime, params: Params, cfg: crate::batch::BatchCfg) -> Executor<'r> {
+        Executor {
+            rt,
+            params,
+            cfg,
+            abort_on_error: false,
+            aborted: false,
+            theta: ThetaCache::new(rt),
+            pool: None,
+        }
+    }
+
+    /// Stop solving after the first pack-level error (builder style); see
+    /// [`Service::fail_fast`].
+    pub fn fail_fast(mut self, on: bool) -> Executor<'r> {
+        self.abort_on_error = on;
+        self
+    }
+
+    /// The parameters this executor serves.
+    pub fn params(&self) -> &Params {
+        &self.params
+    }
+
+    /// Start the session's rank pool if the configured engine needs one
+    /// (no-op under lockstep, or once it exists). A startup failure (e.g.
+    /// the offline xla stub) surfaces through per-job error events, like
+    /// any pack-level failure.
+    fn ensure_pool(&mut self) -> Result<()> {
+        if self.cfg.engine.mode != Engine::RankParallel || self.pool.is_some() {
+            return Ok(());
+        }
+        let pool = RankPool::new(self.rt.manifest.dir.clone(), self.cfg.engine.p)
+            .context("starting the rank-parallel worker pool")?;
+        self.pool = Some(pool);
+        Ok(())
+    }
+
+    /// Solve one launched pack; emit one event per member. A pack-level
+    /// failure becomes per-job error events with pack context (the service
+    /// boundary never panics on a bad pack).
+    pub fn run(&mut self, run: PackRun) -> PackDone {
+        debug_assert!(!run.members.is_empty(), "run of an empty pack");
+        let PackRun { pack: pack_idx, scenario, bucket, cause, members } = run;
+        let started = Instant::now();
+        let mut events = Vec::with_capacity(members.len());
+        if self.aborted {
+            // Fail-fast mode after an earlier pack error: skip the solve,
+            // but still emit one event per job so nothing is lost.
+            for m in members {
+                events.push(JobEvent {
+                    job: m.job,
+                    id: m.id,
+                    scenario,
+                    tenant: m.tenant,
+                    wait_ms: ms_since(m.submitted, started),
+                    result: Err("skipped: an earlier pack failed (fail-fast)".into()),
+                });
+            }
+            return PackDone { events, stat: None };
+        }
+        let mut meta = Vec::with_capacity(members.len());
+        let mut graphs = Vec::with_capacity(members.len());
+        for m in members {
+            meta.push((m.job, m.id, m.graph.n, m.graph.m, m.tenant, m.submitted));
+            graphs.push(m.graph);
+        }
+        let res = match self.ensure_pool() {
+            Err(e) => Err(e),
+            Ok(()) => solve_pack_session(
+                self.rt,
+                &self.cfg,
+                &self.params,
+                scenario,
+                graphs,
+                bucket,
+                SessionState { theta: Some(&self.theta), pool: self.pool.as_ref() },
+            ),
+        };
+        match res {
+            Ok(res) => {
+                for (slot, (job, id, nodes, edges, tenant, submitted)) in
+                    meta.into_iter().enumerate()
+                {
+                    let r = &res.per_graph[slot];
+                    events.push(JobEvent {
+                        job,
+                        id: id.clone(),
+                        scenario,
+                        tenant,
+                        wait_ms: ms_since(submitted, started),
+                        result: Ok(JobOutcome {
+                            id,
+                            scenario,
+                            nodes,
+                            edges,
+                            pack: pack_idx,
+                            solution: solution_ids(&r.solution),
+                            solution_size: r.solution_size,
+                            objective: r.objective,
+                            valid: r.valid,
+                            evaluations: r.evaluations,
+                            selections: r.selections,
+                        }),
+                    });
+                }
+                let stat = PackStat {
+                    pack: pack_idx,
+                    scenario,
+                    bucket_n: bucket,
+                    cause,
+                    jobs: res.per_graph.len(),
+                    capacity: res.initial_capacity,
+                    rounds: res.rounds,
+                    repacks: res.repacks,
+                    sim_time: res.sim_total,
+                    wall_time: res.wall_total,
+                    comm_bytes: res.timing.comm_bytes,
+                    exec: res.exec,
+                };
+                PackDone { events, stat: Some(stat) }
+            }
+            Err(e) => {
+                if self.abort_on_error {
+                    self.aborted = true;
+                }
+                let msg = format!("pack {pack_idx} ({scenario}, N={bucket}): {e:#}");
+                for (job, id, _, _, tenant, submitted) in meta {
+                    events.push(JobEvent {
+                        job,
+                        id,
+                        scenario,
+                        tenant,
+                        wait_ms: ms_since(submitted, started),
+                        result: Err(msg.clone()),
+                    });
+                }
+                PackDone { events, stat: None }
+            }
+        }
+    }
+}
+
+impl Drop for Executor<'_> {
+    fn drop(&mut self) {
+        self.theta.evict(self.rt);
+    }
+}
+
+/// Milliseconds from `from` to `to` (0 if the clock went backwards).
+fn ms_since(from: Instant, to: Instant) -> f64 {
+    to.saturating_duration_since(from).as_secs_f64() * 1e3
 }
 
 /// A persistent solver service session. See the module docs for the
@@ -122,28 +319,8 @@ struct OpenPack {
 /// [`BatchCfg`](crate::batch::BatchCfg) (the `run_queue` compatibility
 /// wrapper, which must preserve an exact cfg including its cost model).
 pub struct Service<'r> {
-    rt: &'r Runtime,
-    params: Params,
-    cfg: crate::batch::BatchCfg,
-    launch: LaunchPolicy,
-    max_wait: Option<f64>,
-    /// Stop solving after the first pack-level error: later launches emit
-    /// skipped-error events instead of running (the `run_queue` wrapper's
-    /// historical fail-fast).
-    abort_on_error: bool,
-    aborted: bool,
-    theta: ThetaCache,
-    /// Persistent rank pool for the rank-parallel engine, created lazily
-    /// at the first launch (so construction stays infallible) and kept
-    /// warm across packs: each rank re-uploads θ only when the session
-    /// parameters change — i.e. never, after the first pack (DESIGN.md §9).
-    pool: Option<RankPool>,
-    next_job: u64,
-    /// Packs launched so far (successful or failed) — the pack-index
-    /// source. `packs` holds stats for successful packs only, so its
-    /// length would reuse an index after a failure.
-    launched: usize,
-    open: BTreeMap<(Scenario, usize), OpenPack>,
+    adm: Admitter,
+    exec: Executor<'r>,
     ready: VecDeque<JobEvent>,
     packs: Vec<PackStat>,
 }
@@ -152,28 +329,20 @@ impl<'r> Service<'r> {
     /// Open a service session over a warm runtime with the given options.
     pub fn new(rt: &'r Runtime, params: Params, opts: &Options) -> Service<'r> {
         let mut svc = Service::with_cfg(rt, params, crate::batch::BatchCfg::from(opts));
-        svc.launch = opts.launch;
-        svc.max_wait = opts.max_wait;
+        svc.adm.set_launch(opts.launch);
+        svc.adm.set_max_wait(opts.max_wait);
+        svc.adm.set_quota(opts.quota);
         svc
     }
 
     /// Open a service session from an exact [`BatchCfg`](crate::batch::BatchCfg)
-    /// (launch policy [`LaunchPolicy::OnFill`], no max-wait; override with
-    /// [`Service::launch_policy`]).
+    /// (launch policy [`LaunchPolicy::OnFill`], no max-wait, no quota;
+    /// override with [`Service::launch_policy`] / [`Service::quota`]).
     pub fn with_cfg(rt: &'r Runtime, params: Params, cfg: crate::batch::BatchCfg) -> Service<'r> {
+        let adm = Admitter::new(rt.manifest.clone(), cfg.engine.p);
         Service {
-            rt,
-            params,
-            cfg,
-            launch: LaunchPolicy::OnFill,
-            max_wait: None,
-            abort_on_error: false,
-            aborted: false,
-            theta: ThetaCache::new(rt),
-            pool: None,
-            next_job: 0,
-            launched: 0,
-            open: BTreeMap::new(),
+            adm,
+            exec: Executor::new(rt, params, cfg),
             ready: VecDeque::new(),
             packs: Vec::new(),
         }
@@ -181,7 +350,13 @@ impl<'r> Service<'r> {
 
     /// Override the pack-launch policy (builder style).
     pub fn launch_policy(mut self, launch: LaunchPolicy) -> Service<'r> {
-        self.launch = launch;
+        self.adm.set_launch(launch);
+        self
+    }
+
+    /// Set the per-tenant load quota (builder style; None = unlimited).
+    pub fn quota(mut self, quota: Option<usize>) -> Service<'r> {
+        self.adm.set_quota(quota);
         self
     }
 
@@ -192,88 +367,57 @@ impl<'r> Service<'r> {
     /// failed call will discard; a streaming service keeps the default
     /// (false) and serves every pack independently.
     pub fn fail_fast(mut self, on: bool) -> Service<'r> {
-        self.abort_on_error = on;
+        self.exec.abort_on_error = on;
         self
     }
 
-    /// Admit one job. Errors (no compiled bucket fits the graph at this P)
-    /// are returned here with the job id in the context — the job is not
-    /// admitted and no event will be emitted for it. On success the job is
-    /// in an open pack; under [`LaunchPolicy::OnFill`] a pack that just
-    /// filled to compiled capacity launches before `submit` returns, so
-    /// its outcomes are already pollable.
+    /// Admit one job under the default tenant (0, no deadline). Errors (no
+    /// compiled bucket fits the graph at this P, or the tenant is at
+    /// quota) are returned here with the job id in the context — the job
+    /// is not admitted and no event will be emitted for it. On success the
+    /// job is in an open pack; under [`LaunchPolicy::OnFill`] a pack that
+    /// just filled to compiled capacity launches (and solves) before
+    /// `submit` returns, so its outcomes are already pollable.
     pub fn submit(&mut self, job: Job) -> Result<JobId> {
-        let p = self.cfg.engine.p;
-        let bucket = self
-            .rt
-            .manifest
-            .bucket_for_any_batch(job.graph.n, p)
-            .with_context(|| format!("job '{}' (|V|={}) not admitted", job.id, job.graph.n))?;
-        let key = (job.scenario, bucket);
-        // The capacity lookup only matters when this key opens a new pack;
-        // an existing open pack already carries it.
-        let open = match self.open.entry(key) {
-            Entry::Occupied(e) => e.into_mut(),
-            Entry::Vacant(v) => {
-                let max_cap = self
-                    .rt
-                    .manifest
-                    .batch_sizes(bucket, bucket / p)
-                    .last()
-                    .copied()
-                    .with_context(|| {
-                        format!(
-                            "job '{}': no compiled batch capacities at bucket N={bucket}, P={p} \
-                             (manifest inconsistent: the bucket lookup accepted it)",
-                            job.id
-                        )
-                    })?;
-                v.insert(OpenPack { members: Vec::new(), opened: Instant::now(), max_cap })
-            }
-        };
-        let jid = JobId(self.next_job);
-        self.next_job += 1;
-        open.members.push(Pending { job: jid, id: job.id, graph: job.graph });
-        if self.launch == LaunchPolicy::OnFill && open.members.len() >= open.max_cap {
-            let pack = self.open.remove(&key).expect("open pack just inserted");
-            self.launch_chunks(key.0, key.1, pack);
-        }
-        self.tick();
+        self.submit_with(job, SubmitMeta::default())
+    }
+
+    /// Admit one job with explicit tenant / deadline metadata. See
+    /// [`Service::submit`]; the typed [`AdmitError`] (backpressure vs
+    /// invalid) is flattened into `anyhow` here — callers that need to
+    /// distinguish (the TCP front door) drive the [`Admitter`] directly.
+    pub fn submit_with(&mut self, job: Job, meta: SubmitMeta) -> Result<JobId> {
+        let (jid, runs) = self.adm.submit(job, meta).map_err(anyhow::Error::from)?;
+        self.run_packs(runs);
         Ok(jid)
     }
 
-    /// Launch every open pack whose max-wait expired (no-op without a
-    /// max-wait policy). Called by `submit`; long-lived callers with idle
-    /// gaps (e.g. `oggm serve` between input lines) call it directly.
-    /// Under [`LaunchPolicy::OnFlush`] this is a no-op — that policy's
-    /// contract is "nothing launches before `flush()`", and the
-    /// deterministic flush-time grouping the `run_queue` wrapper relies on
-    /// must not be perturbed by a deadline.
+    /// Launch (and solve) every open pack that is due — a member job's
+    /// deadline passed, or the session max-wait expired (no-op without
+    /// either policy). Called by `submit`; long-lived callers with idle
+    /// gaps (e.g. `oggm serve` between input lines) call it on a clock
+    /// bounded by [`Service::next_due`]. Under [`LaunchPolicy::OnFlush`]
+    /// this is a no-op — that policy's contract is "nothing launches
+    /// before `flush()`", and the deterministic flush-time grouping the
+    /// `run_queue` wrapper relies on must not be perturbed by a deadline.
     pub fn tick(&mut self) {
-        if self.launch == LaunchPolicy::OnFlush {
-            return;
-        }
-        let Some(wait) = self.max_wait else { return };
-        let due: Vec<(Scenario, usize)> = self
-            .open
-            .iter()
-            .filter(|(_, pack)| pack.opened.elapsed().as_secs_f64() >= wait)
-            .map(|(&k, _)| k)
-            .collect();
-        for key in due {
-            let pack = self.open.remove(&key).expect("due key read from the map");
-            self.launch_chunks(key.0, key.1, pack);
-        }
+        let runs = self.adm.tick(Instant::now());
+        self.run_packs(runs);
     }
 
-    /// Launch every open pack, in deterministic (scenario, bucket) key
-    /// order, chunking oversize [`LaunchPolicy::OnFlush`] groups to the
-    /// compiled capacity — exactly `run_queue`'s historical grouping.
+    /// The earliest instant any open pack becomes due, for sleep bounds in
+    /// tick-driving loops. None when no launch is waiting on a clock.
+    pub fn next_due(&self) -> Option<Instant> {
+        self.adm.next_due()
+    }
+
+    /// Launch (and solve) every open pack, in deterministic (scenario,
+    /// bucket) key order, chunking oversize [`LaunchPolicy::OnFlush`]
+    /// groups to the compiled capacity — exactly `run_queue`'s historical
+    /// grouping.
     pub fn flush(&mut self) {
-        let open = std::mem::take(&mut self.open);
-        for ((scenario, bucket), pack) in open {
-            self.launch_chunks(scenario, bucket, pack);
-        }
+        let runs = self.adm.flush();
+        self.run_packs(runs);
     }
 
     /// Pop the next streamed outcome, if any pack has finished since the
@@ -291,7 +435,7 @@ impl<'r> Service<'r> {
 
     /// Jobs admitted but not yet solved (riding in open packs).
     pub fn pending(&self) -> usize {
-        self.open.values().map(|p| p.members.len()).sum()
+        self.adm.pending()
     }
 
     /// Events ready to poll right now.
@@ -301,7 +445,7 @@ impl<'r> Service<'r> {
 
     /// Jobs admitted over the session so far.
     pub fn submitted(&self) -> u64 {
-        self.next_job
+        self.adm.submitted()
     }
 
     /// Per-pack statistics, in launch order (grows as packs finish;
@@ -313,7 +457,7 @@ impl<'r> Service<'r> {
 
     /// Packs launched so far, successful or failed.
     pub fn launched(&self) -> usize {
-        self.launched
+        self.adm.launched()
     }
 
     /// Take ownership of the per-pack statistics accumulated so far
@@ -322,141 +466,32 @@ impl<'r> Service<'r> {
         std::mem::take(&mut self.packs)
     }
 
+    /// Point-in-time admission/backpressure counters.
+    pub fn admission(&self) -> AdmissionSnapshot {
+        self.adm.snapshot()
+    }
+
     /// The parameters this service serves.
     pub fn params(&self) -> &Params {
-        &self.params
+        self.exec.params()
     }
 
     /// The runtime this service runs on.
     pub fn runtime(&self) -> &'r Runtime {
-        self.rt
+        self.exec.rt
     }
 
-    /// Start the session's rank pool if the configured engine needs one
-    /// (no-op under lockstep, or once it exists). A startup failure (e.g.
-    /// the offline xla stub) surfaces through the caller's per-job error
-    /// events, like any pack-level failure.
-    fn ensure_pool(&mut self) -> Result<()> {
-        if self.cfg.engine.mode != Engine::RankParallel || self.pool.is_some() {
-            return Ok(());
-        }
-        let pool = RankPool::new(self.rt.manifest.dir.clone(), self.cfg.engine.p)
-            .context("starting the rank-parallel worker pool")?;
-        self.pool = Some(pool);
-        Ok(())
-    }
-
-    /// Launch `pack`'s members as one or more solve packs of at most
-    /// `max_cap` jobs, preserving admission order.
-    fn launch_chunks(&mut self, scenario: Scenario, bucket: usize, pack: OpenPack) {
-        let mut members = pack.members;
-        while !members.is_empty() {
-            let rest = if members.len() > pack.max_cap {
-                members.split_off(pack.max_cap)
-            } else {
-                Vec::new()
-            };
-            let chunk = std::mem::replace(&mut members, rest);
-            self.launch(scenario, bucket, chunk);
-        }
-    }
-
-    /// Solve one chunk as a pack; emit one event per member. A pack-level
-    /// failure becomes a per-job error event with pack context (the
-    /// service boundary never panics on a bad pack).
-    fn launch(&mut self, scenario: Scenario, bucket: usize, chunk: Vec<Pending>) {
-        debug_assert!(!chunk.is_empty(), "launch of an empty chunk");
-        if self.aborted {
-            // Fail-fast mode after an earlier pack error: skip the solve,
-            // but still emit one event per job so nothing is lost.
-            for m in chunk {
-                self.ready.push_back(JobEvent {
-                    job: m.job,
-                    id: m.id,
-                    scenario,
-                    result: Err("skipped: an earlier pack failed (fail-fast)".into()),
-                });
+    /// Solve launched packs inline: events stream to the ready queue,
+    /// stats accumulate, and per-tenant load is released as events emit.
+    fn run_packs(&mut self, runs: Vec<PackRun>) {
+        for run in runs {
+            let done = self.exec.run(run);
+            for ev in &done.events {
+                self.adm.complete(ev.tenant, 1);
             }
-            return;
+            self.ready.extend(done.events);
+            self.packs.extend(done.stat);
         }
-        let pack_idx = self.launched;
-        self.launched += 1;
-        let mut meta = Vec::with_capacity(chunk.len());
-        let mut graphs = Vec::with_capacity(chunk.len());
-        for m in chunk {
-            meta.push((m.job, m.id, m.graph.n, m.graph.m));
-            graphs.push(m.graph);
-        }
-        let res = match self.ensure_pool() {
-            Err(e) => Err(e),
-            Ok(()) => solve_pack_session(
-                self.rt,
-                &self.cfg,
-                &self.params,
-                scenario,
-                graphs,
-                bucket,
-                SessionState { theta: Some(&self.theta), pool: self.pool.as_ref() },
-            ),
-        };
-        match res {
-            Ok(res) => {
-                for (slot, (job, id, nodes, edges)) in meta.into_iter().enumerate() {
-                    let r = &res.per_graph[slot];
-                    self.ready.push_back(JobEvent {
-                        job,
-                        id: id.clone(),
-                        scenario,
-                        result: Ok(JobOutcome {
-                            id,
-                            scenario,
-                            nodes,
-                            edges,
-                            pack: pack_idx,
-                            solution: solution_ids(&r.solution),
-                            solution_size: r.solution_size,
-                            objective: r.objective,
-                            valid: r.valid,
-                            evaluations: r.evaluations,
-                            selections: r.selections,
-                        }),
-                    });
-                }
-                self.packs.push(PackStat {
-                    pack: pack_idx,
-                    scenario,
-                    bucket_n: bucket,
-                    jobs: res.per_graph.len(),
-                    capacity: res.initial_capacity,
-                    rounds: res.rounds,
-                    repacks: res.repacks,
-                    sim_time: res.sim_total,
-                    wall_time: res.wall_total,
-                    comm_bytes: res.timing.comm_bytes,
-                    exec: res.exec,
-                });
-            }
-            Err(e) => {
-                if self.abort_on_error {
-                    self.aborted = true;
-                }
-                let msg = format!("pack {pack_idx} ({scenario}, N={bucket}): {e:#}");
-                for (job, id, _, _) in meta {
-                    self.ready.push_back(JobEvent {
-                        job,
-                        id,
-                        scenario,
-                        result: Err(msg.clone()),
-                    });
-                }
-            }
-        }
-    }
-}
-
-impl Drop for Service<'_> {
-    fn drop(&mut self) {
-        self.theta.evict(self.rt);
     }
 }
 
@@ -486,11 +521,15 @@ mod tests {
             job: JobId(7),
             id: "a".into(),
             scenario: Scenario::Mis,
+            tenant: 3,
+            wait_ms: 1.5,
             result: Ok(outcome()),
         };
         let s = ev.to_json().render();
         assert!(s.contains("\"id\":\"a\""), "{s}");
         assert!(s.contains("\"job\":7"), "{s}");
+        assert!(s.contains("\"tenant\":3"), "{s}");
+        assert!(s.contains("\"wait_ms\":1.5"), "{s}");
         assert!(s.contains("\"solution\":[0,5]"), "{s}");
         assert!(s.contains("\"valid\":true"), "{s}");
         assert!(!s.contains("error"), "{s}");
@@ -499,11 +538,14 @@ mod tests {
             job: JobId(8),
             id: "b".into(),
             scenario: Scenario::Mvc,
+            tenant: 0,
+            wait_ms: 0.0,
             result: Err("pack 1 (mvc, N=24): boom".into()),
         };
         let s = ev.to_json().render();
         assert!(s.contains("\"error\":\"pack 1 (mvc, N=24): boom\""), "{s}");
         assert!(s.contains("\"job\":8"), "{s}");
+        assert!(s.contains("\"tenant\":0"), "{s}");
         assert!(!s.contains("solution"), "{s}");
     }
 

@@ -6,9 +6,10 @@
 //!
 //! `Options::from_args` is the single CLI parser: `--p`, `--l`, `--multi`,
 //! `--sparse`, `--engine`, `--no-compact`, `--fresh`, `--seed`,
-//! `--scenario`, `--lr`, `--tau`, `--batch`, `--max-wait`. Seed is kept as
-//! `Option<u64>` so each subcommand can preserve its historical default
-//! stream (`seed_or`).
+//! `--scenario`, `--lr`, `--tau`, `--batch`, `--max-wait`, and the serve
+//! networking knobs `--listen`, `--quota`, `--queue-cap`, `--max-conns`.
+//! Seed is kept as `Option<u64>` so each subcommand can preserve its
+//! historical default stream (`seed_or`).
 
 use crate::batch::BatchCfg;
 use crate::coordinator::engine::{Engine, EngineCfg};
@@ -81,6 +82,21 @@ pub struct Options {
     /// the next `submit`/`tick` even if not full (None = wait for fill or
     /// flush).
     pub max_wait: Option<f64>,
+    /// TCP listen address for `oggm serve --listen` (None = read job lines
+    /// from a file / stdin, the PR 4 single-tenant mode).
+    pub listen: Option<String>,
+    /// Per-tenant load quota: max jobs a tenant may have queued or in
+    /// flight before admission rejects with backpressure (None = no
+    /// quota). The TCP front door defaults this to 64.
+    pub quota: Option<usize>,
+    /// Bound on the network front channel (parsed jobs waiting for
+    /// admission across all connections); arrivals beyond it are rejected
+    /// with backpressure instead of buffered without limit.
+    pub queue_cap: usize,
+    /// Stop accepting after this many connections, then exit once they
+    /// drain (None = serve until killed). Smoke tests and benches use it
+    /// for deterministic shutdown.
+    pub max_conns: Option<usize>,
 }
 
 impl Default for Options {
@@ -102,6 +118,10 @@ impl Default for Options {
             batch: 8,
             launch: LaunchPolicy::OnFill,
             max_wait: None,
+            listen: None,
+            quota: None,
+            queue_cap: 256,
+            max_conns: None,
         }
     }
 }
@@ -144,6 +164,10 @@ impl Options {
         o.tau = args.get_usize("tau", o.tau);
         o.batch = args.get_usize("batch", o.batch);
         o.max_wait = args.get("max-wait").map(|_| args.get_f64("max-wait", 0.0));
+        o.listen = args.get("listen").map(|s| s.to_string());
+        o.quota = args.get("quota").map(|_| args.get_usize("quota", 64));
+        o.queue_cap = args.get_usize("queue-cap", o.queue_cap);
+        o.max_conns = args.get("max-conns").map(|_| args.get_usize("max-conns", 1));
         Ok(o)
     }
 
@@ -210,6 +234,30 @@ impl Options {
     /// Set the service max-wait seconds.
     pub fn max_wait(mut self, secs: f64) -> Options {
         self.max_wait = Some(secs);
+        self
+    }
+
+    /// Set the TCP listen address (switches `serve` to network mode).
+    pub fn listen(mut self, addr: impl Into<String>) -> Options {
+        self.listen = Some(addr.into());
+        self
+    }
+
+    /// Set the per-tenant load quota.
+    pub fn quota(mut self, quota: usize) -> Options {
+        self.quota = Some(quota);
+        self
+    }
+
+    /// Set the bounded admission-queue capacity.
+    pub fn queue_cap(mut self, cap: usize) -> Options {
+        self.queue_cap = cap;
+        self
+    }
+
+    /// Stop accepting after `n` connections (deterministic shutdown).
+    pub fn max_conns(mut self, n: usize) -> Options {
+        self.max_conns = Some(n);
         self
     }
 
@@ -325,6 +373,24 @@ mod tests {
         assert_eq!(t.hyper.lr, 1e-3);
         assert_eq!(t.hyper.grad_iters, 1);
         assert_eq!(t.hyper.batch_size, 8);
+    }
+
+    #[test]
+    fn serve_networking_knobs_parse() {
+        let o = Options::from_args(&parse(
+            "--listen 127.0.0.1:7001 --quota 8 --queue-cap 32 --max-conns 2",
+        ))
+        .unwrap();
+        assert_eq!(o.listen.as_deref(), Some("127.0.0.1:7001"));
+        assert_eq!(o.quota, Some(8));
+        assert_eq!(o.queue_cap, 32);
+        assert_eq!(o.max_conns, Some(2));
+        // And the defaults: file mode, no quota, bounded queue.
+        let o = Options::from_args(&parse("")).unwrap();
+        assert!(o.listen.is_none());
+        assert_eq!(o.quota, None);
+        assert_eq!(o.queue_cap, 256);
+        assert_eq!(o.max_conns, None);
     }
 
     #[test]

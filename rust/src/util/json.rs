@@ -1,6 +1,9 @@
-//! Minimal JSON *writer* for metrics/bench output (serde is unavailable
-//! offline). Only what the harness needs: objects, arrays, strings, numbers.
+//! Minimal JSON writer *and reader* (serde is unavailable offline). The
+//! writer covers metrics/bench output; the reader ([`Json::parse`]) covers
+//! the net front door's JSONL request lines (`rust/src/net/proto.rs`) —
+//! full JSON (nested objects/arrays, escapes, numbers), recursion-capped.
 
+use anyhow::{bail, Result};
 use std::fmt::Write as _;
 
 /// A JSON value builder.
@@ -102,6 +105,245 @@ impl Json {
     }
 }
 
+impl Json {
+    /// Parse one JSON value from `text` (the whole string must be the
+    /// value, modulo surrounding whitespace). Errors carry a byte offset.
+    pub fn parse(text: &str) -> Result<Json> {
+        let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+        p.skip_ws();
+        let v = p.value(0)?;
+        p.skip_ws();
+        if p.pos != p.bytes.len() {
+            bail!("trailing characters at byte {}", p.pos);
+        }
+        Ok(v)
+    }
+
+    /// Object field lookup (None for non-objects or missing keys; the
+    /// first occurrence wins, matching how `set` appends).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(kvs) => kvs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// String payload of a `Json::Str`.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Numeric payload of a `Json::Num`.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    /// Non-negative integral payload of a `Json::Num` (rejects fractions,
+    /// negatives, and magnitudes past exact f64 integer range).
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(x) if x.fract() == 0.0 && *x >= 0.0 && *x < 9.0e15 => Some(*x as u64),
+            _ => None,
+        }
+    }
+
+    /// Boolean payload of a `Json::Bool`.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// The keys of an object, in document order (empty for non-objects).
+    pub fn keys(&self) -> Vec<&str> {
+        match self {
+            Json::Obj(kvs) => kvs.iter().map(|(k, _)| k.as_str()).collect(),
+            _ => Vec::new(),
+        }
+    }
+}
+
+/// Nesting bound for the reader: request lines are flat-ish; anything
+/// deeper than this is hostile or garbage, not a job.
+const MAX_DEPTH: usize = 32;
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl Parser<'_> {
+    fn skip_ws(&mut self) {
+        while let Some(&b) = self.bytes.get(self.pos) {
+            if matches!(b, b' ' | b'\t' | b'\n' | b'\r') {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn eat(&mut self, b: u8) -> Result<()> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            bail!("expected '{}' at byte {}", b as char, self.pos)
+        }
+    }
+
+    fn lit(&mut self, word: &str, v: Json) -> Result<Json> {
+        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(v)
+        } else {
+            bail!("invalid literal at byte {}", self.pos)
+        }
+    }
+
+    fn value(&mut self, depth: usize) -> Result<Json> {
+        if depth > MAX_DEPTH {
+            bail!("nesting deeper than {MAX_DEPTH} at byte {}", self.pos);
+        }
+        match self.peek() {
+            Some(b'{') => self.object(depth),
+            Some(b'[') => self.array(depth),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.lit("true", Json::Bool(true)),
+            Some(b'f') => self.lit("false", Json::Bool(false)),
+            Some(b'n') => self.lit("null", Json::Null),
+            Some(b'-' | b'0'..=b'9') => self.number(),
+            Some(c) => bail!("unexpected '{}' at byte {}", c as char, self.pos),
+            None => bail!("unexpected end of input"),
+        }
+    }
+
+    fn object(&mut self, depth: usize) -> Result<Json> {
+        self.eat(b'{')?;
+        let mut kvs = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(kvs));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.eat(b':')?;
+            self.skip_ws();
+            let val = self.value(depth + 1)?;
+            kvs.push((key, val));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(kvs));
+                }
+                _ => bail!("expected ',' or '}}' at byte {}", self.pos),
+            }
+        }
+    }
+
+    fn array(&mut self, depth: usize) -> Result<Json> {
+        self.eat(b'[')?;
+        let mut xs = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(xs));
+        }
+        loop {
+            self.skip_ws();
+            xs.push(self.value(depth + 1)?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(xs));
+                }
+                _ => bail!("expected ',' or ']' at byte {}", self.pos),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.eat(b'"')?;
+        let mut s = String::new();
+        loop {
+            match self.peek() {
+                None => bail!("unterminated string"),
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(s);
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    match self.peek() {
+                        Some(b'"') => s.push('"'),
+                        Some(b'\\') => s.push('\\'),
+                        Some(b'/') => s.push('/'),
+                        Some(b'n') => s.push('\n'),
+                        Some(b't') => s.push('\t'),
+                        Some(b'r') => s.push('\r'),
+                        Some(b'b') => s.push('\u{8}'),
+                        Some(b'f') => s.push('\u{c}'),
+                        Some(b'u') => {
+                            let hex = self
+                                .bytes
+                                .get(self.pos + 1..self.pos + 5)
+                                .ok_or_else(|| anyhow::anyhow!("short \\u escape"))?;
+                            let code = u32::from_str_radix(std::str::from_utf8(hex)?, 16)?;
+                            // Surrogates are not paired — request ids are
+                            // ASCII-ish; map them to the replacement char.
+                            s.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                            self.pos += 4;
+                        }
+                        _ => bail!("bad escape at byte {}", self.pos),
+                    }
+                    self.pos += 1;
+                }
+                Some(b) if b < 0x20 => bail!("control character in string at byte {}", self.pos),
+                Some(_) => {
+                    // Multi-byte UTF-8 passes through verbatim.
+                    let start = self.pos;
+                    self.pos += 1;
+                    while self.pos < self.bytes.len() && self.bytes[self.pos] & 0xC0 == 0x80 {
+                        self.pos += 1;
+                    }
+                    s.push_str(std::str::from_utf8(&self.bytes[start..self.pos])?);
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        while matches!(self.peek(), Some(b'0'..=b'9' | b'.' | b'e' | b'E' | b'+' | b'-')) {
+            self.pos += 1;
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos])?;
+        let x: f64 = text.parse().map_err(|_| anyhow::anyhow!("bad number '{text}'"))?;
+        Ok(Json::Num(x))
+    }
+}
+
 impl From<f64> for Json {
     fn from(x: f64) -> Json {
         Json::Num(x)
@@ -171,5 +413,54 @@ mod tests {
     fn escapes_strings() {
         let j = Json::Str("a\"b\n\\".into());
         assert_eq!(j.render(), r#""a\"b\n\\""#);
+    }
+
+    #[test]
+    fn parse_roundtrips_writer_output() {
+        let j = Json::obj()
+            .set("name", "fig9")
+            .set("p", 6usize)
+            .set("times", vec![1.5f64, 2.0, -3.25e2])
+            .set("ok", true)
+            .set("none", Json::Null)
+            .set("weird", "a\"b\n\\ü");
+        let back = Json::parse(&j.render()).unwrap();
+        assert_eq!(back.render(), j.render());
+        assert_eq!(back.get("name").unwrap().as_str(), Some("fig9"));
+        assert_eq!(back.get("p").unwrap().as_u64(), Some(6));
+        assert_eq!(back.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(back.get("weird").unwrap().as_str(), Some("a\"b\n\\ü"));
+        assert_eq!(back.keys(), vec!["name", "p", "times", "ok", "none", "weird"]);
+    }
+
+    #[test]
+    fn parse_accepts_request_shapes() {
+        let j = Json::parse(
+            r#" {"id":"a1","scenario":"mvc","gen":"er","n":20,"seed":7,"max_latency_ms":250} "#,
+        )
+        .unwrap();
+        assert_eq!(j.get("n").unwrap().as_u64(), Some(20));
+        assert_eq!(j.get("max_latency_ms").unwrap().as_u64(), Some(250));
+        assert!(j.get("missing").is_none());
+        // \u escapes and nested containers.
+        let j = Json::parse(r#"{"a":[{"b":"A"}],"c":{}}"#).unwrap();
+        assert_eq!(j.get("a").unwrap().render(), r#"[{"b":"A"}]"#);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        for bad in [
+            "", "{", "[1,", "{\"a\":}", "{'a':1}", "{\"a\":1} x", "nulll", "--1", "1.2.3",
+            "\"unterminated", "{\"a\" 1}",
+        ] {
+            assert!(Json::parse(bad).is_err(), "accepted {bad:?}");
+        }
+        // Fractional / negative / huge numbers are not u64s.
+        assert_eq!(Json::parse("1.5").unwrap().as_u64(), None);
+        assert_eq!(Json::parse("-3").unwrap().as_u64(), None);
+        assert_eq!(Json::parse("7").unwrap().as_u64(), Some(7));
+        // Depth cap trips instead of blowing the stack.
+        let deep = format!("{}1{}", "[".repeat(200), "]".repeat(200));
+        assert!(Json::parse(&deep).is_err());
     }
 }

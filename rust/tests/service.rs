@@ -23,8 +23,9 @@ use oggm::env::Scenario;
 use oggm::graph::generators;
 use oggm::model::Params;
 use oggm::runtime::Runtime;
-use oggm::service::{LaunchPolicy, Options, Service};
+use oggm::service::{LaunchCause, LaunchPolicy, Options, Service, SubmitMeta};
 use oggm::util::rng::Pcg32;
+use std::time::Duration;
 
 fn setup() -> Option<Runtime> {
     if !std::path::Path::new("artifacts/manifest.tsv").exists() {
@@ -231,6 +232,88 @@ fn on_flush_ignores_max_wait() {
     let events = svc.drain();
     assert_eq!(events.len(), 4);
     assert!(events.iter().all(|e| e.result.is_ok()));
+}
+
+#[test]
+fn deadline_launches_before_fill() {
+    let Some(rt) = setup() else { return };
+    // Capacity must exceed the 2 submitted jobs or fill fires first.
+    if !has_batch_shapes(&rt, 24, 1, 4) {
+        return;
+    }
+    let params = Params::init(32, &mut Pcg32::seeded(14));
+    let mut svc = Service::with_cfg(&rt, params, BatchCfg::new(1, 2));
+    let mut jobs = mixed_jobs(2, 0x61);
+    for j in &mut jobs {
+        j.scenario = Scenario::Mvc; // one shared open pack
+    }
+    let mut jobs = jobs.into_iter();
+    svc.submit(jobs.next().unwrap()).unwrap();
+    assert_eq!(svc.ready_len(), 0, "nothing is due yet");
+    // A zero deadline launches the open pack inside submit, well short of
+    // the compiled fill capacity.
+    let meta = SubmitMeta { tenant: 0, max_latency: Some(Duration::ZERO) };
+    svc.submit_with(jobs.next().unwrap(), meta).unwrap();
+    assert_eq!(svc.ready_len(), 2, "zero deadline must launch the open pack");
+    assert_eq!(svc.pending(), 0);
+    assert_eq!(svc.packs()[0].cause, LaunchCause::Deadline);
+    assert_eq!(svc.admission().deadline_launches, 1);
+    let ev = svc.poll().unwrap();
+    assert!(ev.result.is_ok());
+    assert!(ev.wait_ms >= 0.0);
+}
+
+#[test]
+fn max_wait_vs_deadline_precedence() {
+    let Some(rt) = setup() else { return };
+    if !has_batch_shapes(&rt, 24, 1, 1) {
+        return;
+    }
+    let params = Params::init(32, &mut Pcg32::seeded(15));
+    let mut jobs = mixed_jobs(2, 0x62).into_iter();
+
+    // An expired max-wait beats a far-future deadline: cause MaxWait.
+    let opts = Options::new().max_wait(0.0);
+    let mut svc = Service::new(&rt, params.clone(), &opts);
+    let meta = SubmitMeta { tenant: 0, max_latency: Some(Duration::from_secs(3600)) };
+    svc.submit_with(jobs.next().unwrap(), meta).unwrap();
+    assert_eq!(svc.packs()[0].cause, LaunchCause::MaxWait);
+    assert_eq!(svc.admission().max_wait_launches, 1);
+
+    // An expired deadline beats a far-future max-wait: cause Deadline
+    // (exact ties also go to the deadline — pinned at the Admitter level).
+    let opts = Options::new().max_wait(3600.0);
+    let mut svc = Service::new(&rt, params, &opts);
+    let meta = SubmitMeta { tenant: 0, max_latency: Some(Duration::ZERO) };
+    svc.submit_with(jobs.next().unwrap(), meta).unwrap();
+    assert_eq!(svc.packs()[0].cause, LaunchCause::Deadline);
+    assert_eq!(svc.admission().deadline_launches, 1);
+}
+
+#[test]
+fn quota_reject_is_retryable_after_drain() {
+    let Some(rt) = setup() else { return };
+    if !has_batch_shapes(&rt, 24, 1, 1) {
+        return;
+    }
+    let params = Params::init(32, &mut Pcg32::seeded(16));
+    // Quota 1 under OnFlush: the first job occupies the tenant's only
+    // slot while queued, so the second must bounce with backpressure.
+    let opts = Options::new().launch(LaunchPolicy::OnFlush).quota(1);
+    let mut svc = Service::new(&rt, params, &opts);
+    let mut jobs = mixed_jobs(3, 0x63).into_iter();
+    svc.submit(jobs.next().unwrap()).unwrap();
+    let err = svc.submit(jobs.next().unwrap()).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("quota"), "reject reason lost: {msg}");
+    assert_eq!(svc.admission().rejected, 1);
+    assert_eq!(svc.submitted(), 1, "rejected job must not consume an id");
+    // Draining emits the outcome, freeing the tenant's slot.
+    assert_eq!(svc.drain().len(), 1);
+    svc.submit(jobs.next().unwrap()).unwrap();
+    let events = svc.drain();
+    assert_eq!(events.len(), 1);
+    assert!(events[0].result.is_ok(), "service unusable after a quota reject");
 }
 
 #[test]

@@ -1,14 +1,25 @@
 #!/usr/bin/env python3
 """Validate an `oggm serve` JSONL outcome stream (CI smoke check).
 
-Usage: check_jsonl.py <file> [--allow-missing]
+Usage: check_jsonl.py <file> [--allow-missing] [--allow-rejects] [--allow-errors]
 
-Schema (README §serve): one JSON object per line. Every line carries "id";
-outcome lines add scenario/nodes/edges/pack/solution/solution_size/
-objective/valid/evaluations/selections (+ the service "job" handle), error
-lines carry "error" instead. Exits non-zero on any malformed line, schema
-violation, or invalid solution flag; --allow-missing exits 0 when the file
-does not exist (serve skipped in check mode without artifacts).
+Schema (README §serve): one JSON object per line.
+
+* Outcome lines carry id/scenario/nodes/edges/pack/solution/solution_size/
+  objective/valid/evaluations/selections, plus (since the TCP front door)
+  the service "job" handle, "tenant", and "wait_ms" queue-wait.
+* Error lines carry "id" and "error" instead of outcome fields.
+* Reject lines (backpressure) add "rejected": true with queue context:
+  either queue_depth + tenant_load (quota reject) or queue_cap (admission
+  queue full).
+* Stats lines ({"op": "stats", "stats": {...}}) answer a client stats
+  probe with numeric counters.
+
+Exits non-zero on any malformed line, schema violation, invalid solution
+flag, error line (unless --allow-errors: the TCP smoke without artifacts
+degrades to schema-valid "runtime startup failed" error lines), or reject
+line (unless --allow-rejects). --allow-missing exits 0 when the file does
+not exist (serve skipped in check mode without artifacts).
 """
 
 import json
@@ -27,12 +38,41 @@ OUTCOME_KEYS = {
     "evaluations": (int, float),
     "selections": (int, float),
 }
+# Optional service-layer keys (present on every line the TCP front door
+# emits; the file-mode stream may omit them on older captures).
+SERVICE_KEYS = {
+    "job": (int, float),
+    "tenant": (int, float),
+    "wait_ms": (int, float),
+}
 SCENARIOS = {"mvc", "maxcut", "mis"}
 
 
 def fail(lineno, msg):
     print(f"check_jsonl: line {lineno}: {msg}", file=sys.stderr)
     sys.exit(1)
+
+
+def check_service_keys(lineno, obj):
+    for key, ty in SERVICE_KEYS.items():
+        if key in obj:
+            if not isinstance(obj[key], ty) or isinstance(obj[key], bool):
+                fail(lineno, f"'{key}' has wrong type: {obj[key]!r}")
+            if obj[key] < 0:
+                fail(lineno, f"'{key}' must be non-negative: {obj[key]!r}")
+
+
+def check_stats(lineno, obj):
+    stats = obj.get("stats")
+    if not isinstance(stats, dict) or not stats:
+        fail(lineno, "stats line missing a non-empty 'stats' object")
+    for key, val in stats.items():
+        if key == "launch_causes":
+            if not isinstance(val, dict):
+                fail(lineno, "'launch_causes' must be an object")
+            continue
+        if not isinstance(val, (int, float)) or isinstance(val, bool):
+            fail(lineno, f"stats counter '{key}' is not numeric: {val!r}")
 
 
 def main():
@@ -49,7 +89,7 @@ def main():
         print(f"check_jsonl: {path} does not exist", file=sys.stderr)
         sys.exit(1)
 
-    outcomes = errors = 0
+    outcomes = errors = rejects = stats_lines = 0
     for lineno, raw in enumerate(path.read_text().splitlines(), start=1):
         if not raw.strip():
             fail(lineno, "blank line in JSONL stream")
@@ -59,8 +99,27 @@ def main():
             fail(lineno, f"not valid JSON: {e}")
         if not isinstance(obj, dict):
             fail(lineno, "line is not a JSON object")
+        if obj.get("op") == "stats":
+            check_stats(lineno, obj)
+            stats_lines += 1
+            continue
         if not isinstance(obj.get("id"), str) or not obj["id"]:
             fail(lineno, "missing/empty 'id'")
+        check_service_keys(lineno, obj)
+        if obj.get("rejected") is True:
+            if not isinstance(obj.get("error"), str) or not obj["error"]:
+                fail(lineno, "reject line must carry a non-empty 'error'")
+            has_quota_ctx = all(
+                isinstance(obj.get(k), (int, float)) and not isinstance(obj.get(k), bool)
+                for k in ("queue_depth", "tenant_load")
+            )
+            has_queue_ctx = isinstance(obj.get("queue_cap"), (int, float)) and not isinstance(
+                obj.get("queue_cap"), bool
+            )
+            if not (has_quota_ctx or has_queue_ctx):
+                fail(lineno, "reject line missing queue_depth+tenant_load or queue_cap")
+            rejects += 1
+            continue
         if "error" in obj:
             if not isinstance(obj["error"], str) or not obj["error"]:
                 fail(lineno, "'error' must be a non-empty string")
@@ -86,10 +145,10 @@ def main():
             fail(lineno, f"job {obj['id']} reported an invalid solution")
         outcomes += 1
 
-    if outcomes + errors == 0:
-        print("check_jsonl: stream is empty", file=sys.stderr)
+    if outcomes + errors + rejects == 0:
+        print("check_jsonl: stream has no job lines", file=sys.stderr)
         sys.exit(1)
-    if errors:
+    if errors and "--allow-errors" not in flags:
         # Error lines are schema-valid, but a smoke run must be clean.
         print(
             f"check_jsonl: FAIL — {errors} error lines in the stream "
@@ -97,7 +156,17 @@ def main():
             file=sys.stderr,
         )
         sys.exit(1)
-    print(f"check_jsonl: OK ({outcomes} outcomes)")
+    if rejects and "--allow-rejects" not in flags:
+        print(
+            f"check_jsonl: FAIL — {rejects} reject lines in the stream "
+            f"(pass --allow-rejects if backpressure is expected)",
+            file=sys.stderr,
+        )
+        sys.exit(1)
+    extra = f", {errors} error lines" if errors else ""
+    extra += f", {rejects} rejects" if rejects else ""
+    extra += f", {stats_lines} stats lines" if stats_lines else ""
+    print(f"check_jsonl: OK ({outcomes} outcomes{extra})")
 
 
 if __name__ == "__main__":

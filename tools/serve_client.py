@@ -1,0 +1,144 @@
+#!/usr/bin/env python3
+"""Minimal TCP client for the `oggm serve --listen` smoke (CI).
+
+Usage: serve_client.py HOST:PORT [--jobs N] [--stats] [--out FILE]
+                       [--expect-errors] [--connect-timeout SECS]
+
+Connects (retrying while the server starts up), sends N newline-delimited
+job requests (the same grammar `oggm serve` reads from files), optionally
+a {"op": "stats"} probe, half-closes the write side, and reads the JSONL
+response stream to EOF. Validates that:
+
+* exactly one response line arrives per job, ids matching what was sent;
+* responses are outcomes (or, with --expect-errors, error lines — the
+  degraded no-artifacts mode where the solver runtime fails to start but
+  the network front door still answers every job);
+* a stats line arrives iff --stats was sent;
+* the server closes the connection cleanly after EOF (clean shutdown).
+
+Writes the raw stream to --out (default stdout) for deeper schema checks
+via check_jsonl.py. Exits non-zero on any violation.
+"""
+
+import json
+import socket
+import sys
+import time
+
+SCENARIOS = ["mvc", "mis", "maxcut"]
+
+
+def fail(msg):
+    print(f"serve_client: FAIL — {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def parse_args(argv):
+    opts = {"jobs": 6, "stats": False, "out": None, "expect_errors": False, "timeout": 20.0}
+    positional = []
+    i = 0
+    while i < len(argv):
+        a = argv[i]
+        if a == "--jobs":
+            opts["jobs"] = int(argv[i + 1])
+            i += 2
+        elif a == "--stats":
+            opts["stats"] = True
+            i += 1
+        elif a == "--out":
+            opts["out"] = argv[i + 1]
+            i += 2
+        elif a == "--expect-errors":
+            opts["expect_errors"] = True
+            i += 1
+        elif a == "--connect-timeout":
+            opts["timeout"] = float(argv[i + 1])
+            i += 2
+        else:
+            positional.append(a)
+            i += 1
+    if len(positional) != 1 or ":" not in positional[0]:
+        print(__doc__, file=sys.stderr)
+        sys.exit(2)
+    host, port = positional[0].rsplit(":", 1)
+    return host, int(port), opts
+
+
+def connect(host, port, timeout):
+    deadline = time.monotonic() + timeout
+    while True:
+        try:
+            return socket.create_connection((host, port), timeout=5.0)
+        except OSError as e:
+            if time.monotonic() >= deadline:
+                fail(f"could not connect to {host}:{port} within {timeout}s: {e}")
+            time.sleep(0.2)
+
+
+def main():
+    host, port, opts = parse_args(sys.argv[1:])
+    sock = connect(host, port, opts["timeout"])
+    sock.settimeout(120.0)
+
+    sent_ids = []
+    lines = []
+    for i in range(opts["jobs"]):
+        jid = f"c{i}"
+        sent_ids.append(jid)
+        lines.append(
+            f"gen er n=20 rho=0.2 seed={40 + i} id={jid} {SCENARIOS[i % len(SCENARIOS)]}\n"
+        )
+    if opts["stats"]:
+        lines.append('{"op": "stats"}\n')
+    sock.sendall("".join(lines).encode())
+    # Half-close: end-of-stream flushes our open packs server-side and (with
+    # --max-conns 1) lets the server exit once everything drains.
+    sock.shutdown(socket.SHUT_WR)
+
+    raw = b""
+    while True:
+        chunk = sock.recv(65536)
+        if not chunk:
+            break
+        raw += chunk
+    sock.close()
+
+    text = raw.decode()
+    if opts["out"]:
+        with open(opts["out"], "w") as f:
+            f.write(text)
+    else:
+        sys.stdout.write(text)
+
+    got_ids, stats_lines, error_lines, outcome_lines = [], 0, 0, 0
+    for lineno, line in enumerate(text.splitlines(), start=1):
+        try:
+            obj = json.loads(line)
+        except json.JSONDecodeError as e:
+            fail(f"response line {lineno} is not JSON: {e}")
+        if obj.get("op") == "stats":
+            stats_lines += 1
+            continue
+        if not isinstance(obj.get("id"), str):
+            fail(f"response line {lineno} has no id: {line}")
+        got_ids.append(obj["id"])
+        if "error" in obj:
+            error_lines += 1
+        else:
+            outcome_lines += 1
+
+    if sorted(got_ids) != sorted(sent_ids):
+        fail(f"sent ids {sent_ids}, got {sorted(got_ids)}")
+    if stats_lines != (1 if opts["stats"] else 0):
+        fail(f"expected {'one' if opts['stats'] else 'no'} stats line, got {stats_lines}")
+    if opts["expect_errors"]:
+        if outcome_lines:
+            fail(f"{outcome_lines} outcome lines where only errors were expected")
+    elif error_lines:
+        fail(f"{error_lines} jobs came back as errors")
+    kind = "error lines (degraded mode)" if opts["expect_errors"] else "outcomes"
+    print(f"serve_client: OK — {len(got_ids)} {kind}, clean EOF", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()
