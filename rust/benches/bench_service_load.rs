@@ -28,11 +28,18 @@ use std::net::{Shutdown, TcpListener, TcpStream};
 use std::thread;
 use std::time::{Duration, Instant};
 
-/// Client-observed result of one load run.
+/// Client-observed result of one load run (plus the server's
+/// fault-recovery books, all zero on a clean run).
 struct LoadRun {
     latencies_ms: Vec<f64>,
     rejects: usize,
     wall_secs: f64,
+    /// Packs that needed a retry after a (scripted) fault.
+    retried_packs: u64,
+    /// Replacement ranks spawned by the pool supervisor.
+    restarts: u64,
+    /// Total recovery time (respawn + collective reset + θ republish).
+    recovery_ms: f64,
 }
 
 /// Sorted-sample percentile (nearest-rank on the sorted slice).
@@ -117,7 +124,17 @@ fn run_load(opts: &Options, jobs: usize, rate: f64, seed: u64) -> LoadRun {
     assert_eq!(rejects, 0, "rejected below quota ({rejects} rejects)");
     assert_eq!(summary.snapshot.rejected, 0);
     latencies_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    LoadRun { latencies_ms, rejects, wall_secs }
+    let restarts: u64 = summary.packs.iter().map(|s| s.exec.restarts).sum();
+    let recovery_ms: f64 =
+        summary.packs.iter().map(|s| s.exec.recovery_time.as_secs_f64()).sum::<f64>() * 1e3;
+    LoadRun {
+        latencies_ms,
+        rejects,
+        wall_secs,
+        retried_packs: summary.snapshot.retried_packs,
+        restarts,
+        recovery_ms,
+    }
 }
 
 fn main() {
@@ -177,6 +194,62 @@ fn main() {
                 );
             }
         }
+    }
+    // Faulted variant (ISSUE 7): the same open-loop load through the
+    // rank-parallel engine with ONE scripted rank panic mid-run — the pool
+    // replaces the rank, the hit pack retries, no job is lost. Reported
+    // against a clean baseline at the same rate so the p99 impact and the
+    // recovery cost are visible side by side in BENCH_service_load.json.
+    let p = 2usize;
+    if rt.manifest.batch_sizes(24, 24 / p).last().copied().unwrap_or(0) >= 4 {
+        let rate = rates.last().copied().unwrap_or(32.0);
+        let base = Options::new()
+            .p(p)
+            .engine(Engine::RankParallel)
+            .max_wait(0.05)
+            .quota(jobs * 4)
+            .max_conns(1);
+        let clean = run_load(&base, jobs, rate, 0xF1);
+        let faulted_opts = base
+            .retries(2)
+            .max_rank_restarts(2)
+            .fault_plan("rank=1,step=2,kind=panic");
+        let faulted = run_load(&faulted_opts, jobs, rate, 0xF1);
+        assert!(faulted.restarts >= 1, "the scripted rank panic spawned no replacement");
+        assert!(faulted.retried_packs >= 1, "no pack retried after the scripted fault");
+        let p99_clean = percentile(&clean.latencies_ms, 0.99);
+        let p99_faulted = percentile(&faulted.latencies_ms, 0.99);
+        println!(
+            "P={p} rank-par FAULTED: p99 {p99_faulted:>8.2} ms (clean {p99_clean:>8.2} ms), \
+             {} restarts, recovery {:.2} ms, {} retried packs",
+            faulted.restarts, faulted.recovery_ms, faulted.retried_packs
+        );
+        table.row(
+            format!("P={p} rank-par faulted @{rate}"),
+            vec![
+                rate,
+                jobs as f64 / faulted.wall_secs,
+                percentile(&faulted.latencies_ms, 0.50),
+                p99_faulted,
+                faulted.rejects as f64,
+            ],
+        );
+        rows.push(
+            Json::obj()
+                .set("p", p)
+                .set("engine", "rank-parallel")
+                .set("fault", "rank=1,step=2,kind=panic")
+                .set("offered_jobs_per_sec", rate)
+                .set("jobs", jobs)
+                .set("p50_ms", percentile(&faulted.latencies_ms, 0.50))
+                .set("p99_ms", p99_faulted)
+                .set("p99_clean_ms", p99_clean)
+                .set("restarts", faulted.restarts)
+                .set("recovery_ms", faulted.recovery_ms)
+                .set("retried_packs", faulted.retried_packs),
+        );
+    } else {
+        println!("P={p}: no compiled batch shapes at N=24, skipping the faulted variant");
     }
     common::emit(&table);
     let json = Json::obj().set("bench", "service_load").set("rows", Json::Arr(rows));

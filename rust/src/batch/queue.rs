@@ -108,6 +108,9 @@ pub struct PackStat {
     pub wall_time: f64,
     /// Bytes moved through collectives.
     pub comm_bytes: u64,
+    /// Full re-solve attempts after a retryable fault before this pack
+    /// succeeded (0 on the fault-free path; DESIGN.md §11).
+    pub retries: usize,
     /// Runtime transfer accounting for this pack (h2d/d2h bytes, stage
     /// executions, exec time — see DESIGN.md §6).
     pub exec: ExecStats,
@@ -144,6 +147,7 @@ impl QueueReport {
                     .set("sim_time", p.sim_time)
                     .set("wall_time", p.wall_time)
                     .set("comm_bytes", p.comm_bytes)
+                    .set("retries", p.retries)
                     .set("exec", exec_stats_json(&p.exec))
             })
             .collect();
@@ -234,6 +238,7 @@ mod tests {
                 sim_time: 0.5,
                 wall_time: 0.6,
                 comm_bytes: 1024,
+                retries: 1,
                 exec: ExecStats {
                     executions: 9,
                     h2d_bytes: 2048,
@@ -253,5 +258,6 @@ mod tests {
         assert!(s.contains("\"executions\":9"), "{s}");
         assert!(s.contains("\"h2d_bytes\":2048"), "{s}");
         assert!(s.contains("\"d2h_bytes\":96"), "{s}");
+        assert!(s.contains("\"retries\":1"), "{s}");
     }
 }

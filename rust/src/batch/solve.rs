@@ -47,6 +47,13 @@ pub struct BatchCfg {
     /// Per-shard storage mode (DESIGN.md §7): dense B×NI×N oracle or
     /// CSR-backed sparse tiles scaling O(E/P + NI).
     pub storage: Storage,
+    /// Full pack re-solve attempts after a retryable fault before per-job
+    /// errors are emitted (`--retries`, DESIGN.md §11). Retried solves are
+    /// bit-identical to fault-free ones (selection is deterministic in θ).
+    pub retries: usize,
+    /// Per-pack rank-replacement budget for the rank-parallel pool
+    /// (`--max-rank-restarts`, DESIGN.md §11).
+    pub max_rank_restarts: usize,
 }
 
 impl BatchCfg {
@@ -59,6 +66,8 @@ impl BatchCfg {
             compact: true,
             device_resident: true,
             storage: Storage::Dense,
+            retries: 1,
+            max_rank_restarts: crate::parallel::DEFAULT_MAX_RANK_RESTARTS,
         }
     }
 }
@@ -222,7 +231,12 @@ pub fn solve_pack_in(
 ) -> Result<BatchResult> {
     let transient = match cfg.engine.mode {
         Engine::Lockstep => None,
-        Engine::RankParallel => Some(RankPool::new(rt.manifest.dir.clone(), cfg.engine.p)?),
+        Engine::RankParallel => Some(RankPool::new_with(
+            rt.manifest.dir.clone(),
+            cfg.engine.p,
+            cfg.max_rank_restarts,
+            crate::collective::fault::FaultPlan::from_env()?,
+        )?),
     };
     solve_pack_session(
         rt,

@@ -23,6 +23,8 @@
 //!   poison-tolerant (state is plain counters/buffers), so a *panicking*
 //!   participant cannot cascade panics through the survivors either.
 
+use crate::collective::fault::{FaultKind, FaultPlan};
+use std::cell::Cell;
 use std::fmt;
 use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 
@@ -81,6 +83,13 @@ pub struct Communicator {
     shared: Arc<Shared>,
     /// This handle's rank (0..P).
     pub rank: usize,
+    /// Optional fault-injection script checked at every phase entry
+    /// (DESIGN.md §11). Shared across the group so one-shot specs fire
+    /// exactly once pool-wide.
+    fault: Option<Arc<FaultPlan>>,
+    /// Per-handle 0-based phase counter — the `step` coordinate a
+    /// [`FaultPlan`] spec addresses at this injection site.
+    phase_no: Cell<usize>,
 }
 
 /// Index range `[lo, hi)` of the chunk rank `rank` reduces (remainder
@@ -102,6 +111,12 @@ fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
 impl Communicator {
     /// Create handles for all P ranks.
     pub fn create(p: usize) -> Vec<Communicator> {
+        Communicator::create_with_faults(p, None)
+    }
+
+    /// Create handles for all P ranks with an optional fault-injection
+    /// plan attached to every handle (checked at each collective phase).
+    pub fn create_with_faults(p: usize, fault: Option<Arc<FaultPlan>>) -> Vec<Communicator> {
         assert!(p >= 1);
         let shared = Arc::new(Shared {
             p,
@@ -116,7 +131,14 @@ impl Communicator {
             slots: (0..p).map(|_| Mutex::new(Vec::new())).collect(),
             reduced: (0..p).map(|_| Mutex::new(Vec::new())).collect(),
         });
-        (0..p).map(|rank| Communicator { shared: shared.clone(), rank }).collect()
+        (0..p)
+            .map(|rank| Communicator {
+                shared: shared.clone(),
+                rank,
+                fault: fault.clone(),
+                phase_no: Cell::new(0),
+            })
+            .collect()
     }
 
     /// Number of participating ranks P.
@@ -141,11 +163,36 @@ impl Communicator {
         self.shared.cv.notify_all();
     }
 
+    /// Act out a scripted fault for this (rank, phase, op) coordinate, if
+    /// any. `Err` and `Panic` both abort the group first so survivors get
+    /// a contextful [`CommError`] naming this rank; `Panic` then unwinds
+    /// (the worker thread dies and the pool's supervisor replaces it),
+    /// while `Slow` just stalls this rank for the scripted duration.
+    fn maybe_inject(&self, op: &'static str) {
+        let Some(plan) = &self.fault else { return };
+        let step = self.phase_no.get();
+        self.phase_no.set(step + 1);
+        match plan.fire(self.rank, step, Some(op)) {
+            None => {}
+            Some(FaultKind::Slow(d)) => std::thread::sleep(d),
+            Some(FaultKind::Err) => {
+                self.abort(format!("injected fault at {op} (rank {}, phase {step})", self.rank));
+            }
+            Some(FaultKind::Panic) => {
+                let msg =
+                    format!("injected panic at {op} (rank {}, phase {step})", self.rank);
+                self.abort(msg.clone());
+                panic!("{msg}");
+            }
+        }
+    }
+
     /// One barrier phase: account traffic, arrive, and either release the
     /// group (last arriver advances the generation) or wait. Returns an
     /// error immediately if the group was aborted before or during the
     /// wait.
     fn phase(&self, op: &'static str, bytes: u64, count_op: bool) -> CommResult<()> {
+        self.maybe_inject(op);
         let mut s = lock(&self.shared.ctl);
         if let Some((rank, reason)) = &s.aborted {
             return Err(CommError { rank: *rank, reason: reason.clone(), op });
@@ -445,6 +492,109 @@ mod tests {
         let err = comms[0].barrier().unwrap_err();
         assert_eq!(err.rank, 0);
         assert_eq!(err.reason, "first");
+    }
+
+    /// Every collective phase op name, in call order within the mixed
+    /// sequence the injection test drives.
+    const PHASE_OPS: [&str; 8] = [
+        "barrier",
+        "all_reduce(deposit)",
+        "all_reduce(reduce)",
+        "all_reduce(consume)",
+        "all_gather(deposit)",
+        "all_gather(consume)",
+        "broadcast(deposit)",
+        "broadcast(consume)",
+    ];
+
+    fn mixed_sequence(c: &Communicator) -> CommResult<()> {
+        c.barrier()?;
+        let mut buf = vec![1.0f32; 9];
+        c.all_reduce_sum(&mut buf)?;
+        let _ = c.all_gather(&[c.rank as f32])?;
+        let mut b = vec![0.5f32; 2];
+        c.broadcast(&mut b)?;
+        Ok(())
+    }
+
+    #[test]
+    fn injected_fault_at_every_collective_phase_is_contextful() {
+        // Satellite of ISSUE 7: a scripted abort during deposit / reduce /
+        // gather / barrier / broadcast at P∈{2,4} must surface a
+        // contextful CommError naming the injected rank on EVERY
+        // participant, and a fresh group must recover.
+        use crate::collective::fault::FaultPlan;
+        for p in [2usize, 4] {
+            for inj in PHASE_OPS {
+                let plan =
+                    Arc::new(FaultPlan::parse(&format!("rank=1,kind=err,op={inj}")).unwrap());
+                let comms = Communicator::create_with_faults(p, Some(plan));
+                let handles: Vec<_> = comms
+                    .into_iter()
+                    .map(|c| std::thread::spawn(move || mixed_sequence(&c).err()))
+                    .collect();
+                for h in handles {
+                    let err = h
+                        .join()
+                        .unwrap()
+                        .unwrap_or_else(|| panic!("P={p} op={inj}: rank saw no error"));
+                    assert_eq!(err.rank, 1, "P={p} op={inj}: wrong aborting rank: {err}");
+                    assert!(
+                        err.reason.contains(&format!("injected fault at {inj}")),
+                        "P={p} op={inj}: reason lacks injection site: {err}"
+                    );
+                }
+                // Recovery path: the failed group is permanently failed;
+                // a fresh group (what RankPool::ensure_live creates) runs
+                // the same sequence clean.
+                run_ranks(p, |c| mixed_sequence(&c).unwrap());
+            }
+        }
+    }
+
+    #[test]
+    fn injected_slow_fault_is_latency_only() {
+        use crate::collective::fault::FaultPlan;
+        let plan = Arc::new(FaultPlan::parse("rank=0,kind=slow,ms=1,op=barrier").unwrap());
+        let comms = Communicator::create_with_faults(2, Some(plan));
+        let handles: Vec<_> = comms
+            .into_iter()
+            .map(|c| {
+                std::thread::spawn(move || {
+                    c.barrier().unwrap();
+                    let mut buf = vec![c.rank as f32; 4];
+                    c.all_reduce_sum(&mut buf).unwrap();
+                    assert_eq!(buf, vec![1.0; 4]);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn injected_panic_aborts_the_group_before_unwinding() {
+        // A panic-kind comm fault must mark the group aborted first so
+        // survivors get a CommError instead of hanging on the condvar.
+        use crate::collective::fault::FaultPlan;
+        let plan = Arc::new(FaultPlan::parse("rank=1,kind=panic,op=all_reduce(deposit)").unwrap());
+        let comms = Communicator::create_with_faults(2, Some(plan));
+        let handles: Vec<_> = comms
+            .into_iter()
+            .map(|c| {
+                std::thread::spawn(move || {
+                    let mut buf = vec![1.0f32; 8];
+                    c.all_reduce_sum(&mut buf)
+                })
+            })
+            .collect();
+        let survivor = handles.into_iter().map(|h| h.join()).collect::<Vec<_>>();
+        // Rank 1's thread panicked; rank 0 joined clean with a CommError.
+        assert!(survivor[1].is_err(), "injected panic should unwind rank 1");
+        let err = survivor[0].as_ref().unwrap().as_ref().unwrap_err();
+        assert_eq!(err.rank, 1);
+        assert!(err.reason.contains("injected panic"), "{err}");
     }
 
     #[test]

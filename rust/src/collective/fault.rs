@@ -1,0 +1,244 @@
+//! Deterministic fault injection for the rank-parallel engine
+//! (DESIGN.md §11).
+//!
+//! A [`FaultPlan`] is a small, seeded-by-construction script of *exactly
+//! when* a rank misbehaves: "rank 1, forward step 3, panic" or "rank 0,
+//! collective op 2 matching `all_reduce(deposit)`, error". Plans are
+//! parsed from a string (the `--fault-plan` CLI flag or the
+//! `OGGM_FAULT_PLAN` environment variable) and threaded into
+//! [`crate::parallel`] workers and [`crate::collective::comm`] handles, so
+//! every recovery path — worker death, collective abort, slow rank — is
+//! replayable in tests without sleeps or flaky timing.
+//!
+//! Grammar (entries separated by `;`, fields by `,`):
+//!
+//! ```text
+//! rank=1,step=3,kind=panic
+//! rank=0,kind=err,op=all_reduce(deposit)
+//! rank=1,step=0,kind=slow,ms=15
+//! ```
+//!
+//! - `rank` (required): which rank the fault targets.
+//! - `kind` (required): `panic` (thread dies → pool replaces the rank),
+//!   `err` (recoverable `Err` response), or `slow` (bounded sleep,
+//!   `ms=` duration, default 20ms).
+//! - `step` (optional): the 0-based occurrence counter at the injection
+//!   site — forward steps for worker faults, `phase()` calls on that
+//!   rank's handle for collective faults. Omitted = first opportunity.
+//! - `op` (optional): a collective phase name (e.g. `barrier`,
+//!   `all_gather(deposit)`). Present = the fault fires inside
+//!   `Communicator::phase`; absent = it fires at the worker's forward
+//!   step. The two sites keep independent counters.
+//!
+//! Every spec is **one-shot**: it fires at most once per plan instance
+//! (atomically), so a retried pack after recovery runs fault-free and can
+//! be asserted bit-identical to an unfaulted run.
+
+use anyhow::{bail, Context, Result};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// What the injected fault does at its trigger point.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Panic the worker thread (simulates a crashed rank; the pool's
+    /// supervisor replaces it).
+    Panic,
+    /// Return a recoverable error (simulates a transient device error;
+    /// the worker thread survives).
+    Err,
+    /// Sleep for the given duration (simulates a straggler rank; no
+    /// error, just latency attributed to that rank).
+    Slow(Duration),
+}
+
+/// One scripted fault: where (rank, site, occurrence) and what
+/// ([`FaultKind`]). One-shot: `fired` flips on first match.
+#[derive(Debug)]
+pub struct FaultSpec {
+    /// Target rank.
+    pub rank: usize,
+    /// 0-based occurrence counter at the injection site (None = first
+    /// opportunity).
+    pub step: Option<usize>,
+    /// Collective phase-op name; None targets the worker forward step.
+    pub op: Option<String>,
+    /// What happens when the spec matches.
+    pub kind: FaultKind,
+    fired: AtomicBool,
+}
+
+/// A parsed, shareable fault script (see module docs). Cloned by `Arc`
+/// into every worker thread and communicator handle so the one-shot
+/// accounting is global across the pool.
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    specs: Vec<FaultSpec>,
+}
+
+impl FaultPlan {
+    /// Parse a plan string (see module docs for the grammar). An empty
+    /// string parses as an empty (inert) plan.
+    pub fn parse(s: &str) -> Result<FaultPlan> {
+        let mut specs = Vec::new();
+        for entry in s.split(';').map(str::trim).filter(|e| !e.is_empty()) {
+            specs.push(Self::parse_entry(entry).with_context(|| format!("fault spec '{entry}'"))?);
+        }
+        Ok(FaultPlan { specs })
+    }
+
+    fn parse_entry(entry: &str) -> Result<FaultSpec> {
+        let mut rank = None;
+        let mut step = None;
+        let mut op = None;
+        let mut kind = None;
+        let mut ms = 20u64;
+        for field in entry.split(',').map(str::trim).filter(|f| !f.is_empty()) {
+            let (k, v) = field
+                .split_once('=')
+                .with_context(|| format!("field '{field}' is not key=value"))?;
+            match k.trim() {
+                "rank" => rank = Some(v.trim().parse::<usize>().context("rank")?),
+                "step" => step = Some(v.trim().parse::<usize>().context("step")?),
+                "op" => op = Some(v.trim().to_string()),
+                "kind" => {
+                    kind = Some(match v.trim() {
+                        "panic" => FaultKind::Panic,
+                        "err" => FaultKind::Err,
+                        "slow" => FaultKind::Slow(Duration::ZERO), // ms applied below
+                        other => bail!("unknown kind '{other}' (known: panic, err, slow)"),
+                    })
+                }
+                "ms" => ms = v.trim().parse::<u64>().context("ms")?,
+                other => bail!("unknown field '{other}' (known: rank, step, op, kind, ms)"),
+            }
+        }
+        let rank = rank.context("missing rank=")?;
+        let mut kind = kind.context("missing kind=")?;
+        if let FaultKind::Slow(_) = kind {
+            kind = FaultKind::Slow(Duration::from_millis(ms));
+        }
+        Ok(FaultSpec { rank, step, op, kind, fired: AtomicBool::new(false) })
+    }
+
+    /// Parse the `OGGM_FAULT_PLAN` environment variable, if set and
+    /// non-empty. Invalid plans error loudly rather than silently running
+    /// fault-free.
+    pub fn from_env() -> Result<Option<Arc<FaultPlan>>> {
+        match std::env::var("OGGM_FAULT_PLAN") {
+            Ok(s) if !s.trim().is_empty() => {
+                let plan = FaultPlan::parse(&s).context("OGGM_FAULT_PLAN")?;
+                Ok(Some(Arc::new(plan)))
+            }
+            _ => Ok(None),
+        }
+    }
+
+    /// Number of scripted faults (fired or not).
+    pub fn len(&self) -> usize {
+        self.specs.len()
+    }
+
+    /// True when the plan scripts nothing.
+    pub fn is_empty(&self) -> bool {
+        self.specs.is_empty()
+    }
+
+    /// Check (and atomically consume) a fault at an injection site.
+    ///
+    /// `rank` is the caller's rank, `step` the caller's 0-based counter at
+    /// this site, `op` the collective phase name (None at the worker
+    /// forward-step site). Returns the [`FaultKind`] to act out, or None.
+    /// A spec with `op` set only matches that phase name; a spec without
+    /// `op` only matches the forward-step site — the two never alias.
+    pub fn fire(&self, rank: usize, step: usize, op: Option<&str>) -> Option<FaultKind> {
+        for spec in &self.specs {
+            if spec.rank != rank {
+                continue;
+            }
+            if spec.op.as_deref() != op {
+                continue;
+            }
+            if let Some(want) = spec.step {
+                if want != step {
+                    continue;
+                }
+            }
+            if spec
+                .fired
+                .compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire)
+                .is_ok()
+            {
+                return Some(spec.kind);
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_documented_grammar() {
+        let plan = FaultPlan::parse(
+            "rank=1,step=3,kind=panic; rank=0,kind=err,op=all_reduce(deposit); \
+             rank=1,step=0,kind=slow,ms=15",
+        )
+        .unwrap();
+        assert_eq!(plan.len(), 3);
+        assert_eq!(plan.fire(1, 3, None), Some(FaultKind::Panic));
+        assert_eq!(plan.fire(0, 7, Some("all_reduce(deposit)")), Some(FaultKind::Err));
+        assert_eq!(plan.fire(1, 0, None), Some(FaultKind::Slow(Duration::from_millis(15))));
+    }
+
+    #[test]
+    fn specs_are_one_shot() {
+        let plan = FaultPlan::parse("rank=0,step=2,kind=err").unwrap();
+        assert_eq!(plan.fire(0, 2, None), Some(FaultKind::Err));
+        assert_eq!(plan.fire(0, 2, None), None, "a spec fires at most once");
+    }
+
+    #[test]
+    fn sites_never_alias() {
+        // An op-targeted spec does not fire at the forward-step site and
+        // vice versa, even with matching rank/step.
+        let plan = FaultPlan::parse("rank=0,step=1,kind=err,op=barrier; rank=1,step=1,kind=err")
+            .unwrap();
+        assert_eq!(plan.fire(0, 1, None), None);
+        assert_eq!(plan.fire(0, 1, Some("all_gather(deposit)")), None);
+        assert_eq!(plan.fire(0, 1, Some("barrier")), Some(FaultKind::Err));
+        assert_eq!(plan.fire(1, 1, Some("barrier")), None);
+        assert_eq!(plan.fire(1, 1, None), Some(FaultKind::Err));
+    }
+
+    #[test]
+    fn omitted_step_matches_first_opportunity_only_once() {
+        let plan = FaultPlan::parse("rank=2,kind=panic").unwrap();
+        assert_eq!(plan.fire(2, 0, None), Some(FaultKind::Panic));
+        assert_eq!(plan.fire(2, 1, None), None);
+    }
+
+    #[test]
+    fn empty_and_whitespace_plans_are_inert() {
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert!(FaultPlan::parse(" ; ").unwrap().is_empty());
+        assert_eq!(FaultPlan::default().fire(0, 0, None), None);
+    }
+
+    #[test]
+    fn bad_plans_error_with_context() {
+        for bad in [
+            "rank=1",                 // missing kind
+            "kind=panic",             // missing rank
+            "rank=x,kind=panic",      // bad rank
+            "rank=1,kind=explode",    // unknown kind
+            "rank=1,kind=err,who=me", // unknown field
+            "rank=1 kind=err",        // not key=value
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "'{bad}' should fail to parse");
+        }
+    }
+}

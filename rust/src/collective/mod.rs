@@ -14,6 +14,9 @@
 pub mod comm;
 /// α–β communication cost model (DESIGN.md §3).
 pub mod cost;
+/// Deterministic fault injection plans (DESIGN.md §11).
+pub mod fault;
 
 pub use comm::{CommError, CommResult, Communicator};
 pub use cost::CostModel;
+pub use fault::{FaultKind, FaultPlan};

@@ -316,7 +316,15 @@ fn serve_write_ready(
 /// connection per tenant, multiplexed into one warm session with
 /// continuous batching, per-tenant quotas (`--quota`, default 64), a
 /// bounded admission queue (`--queue-cap`), and `--max-conns N` for
-/// deterministic drain-and-exit shutdown.
+/// deterministic drain-and-exit shutdown. A `{"op":"drain"}` request or
+/// SIGTERM drains gracefully: stop accepting, flush open packs, stream
+/// every remaining outcome, exit 0 (DESIGN.md §11).
+///
+/// Fault tolerance (DESIGN.md §11): `--retries N` re-solves a pack that
+/// failed on a retryable fault (default 1), `--max-rank-restarts N`
+/// budgets rank replacement per pack (default 2), and `--fault-plan
+/// "rank=1,step=3,kind=panic"` injects deterministic faults for drills
+/// (also via `OGGM_FAULT_PLAN`).
 pub fn cmd_serve(args: &Args) -> Result<()> {
     let opts = Options::from_args(args)?;
     if args.has_flag("check") && !manifest::default_dir().join("manifest.tsv").exists() {
@@ -344,9 +352,15 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         );
         let summary = net::serve(listener, manifest::default_dir(), params, &opts)?;
         eprintln!(
-            "serve: {} conns, {} jobs in, {} JSONL lines out ({} failed), {} packs",
+            "serve: {} conns, {} jobs in, {} JSONL lines out ({} failed), {} packs{}{}",
             summary.conns, summary.jobs, summary.lines_out, summary.failed,
-            summary.snapshot.launched
+            summary.snapshot.launched,
+            if summary.slow_disconnects > 0 {
+                format!(", {} slow consumers disconnected", summary.slow_disconnects)
+            } else {
+                String::new()
+            },
+            if summary.drained { " [drained]" } else { "" }
         );
         eprintln!(
             "serve: admission {}",

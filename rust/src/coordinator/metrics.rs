@@ -19,6 +19,8 @@ pub fn exec_stats_json(st: &ExecStats) -> Json {
         .set("h2d_time", st.h2d_time.as_secs_f64())
         .set("d2h_time", st.d2h_time.as_secs_f64())
         .set("compile_time", st.compile_time.as_secs_f64())
+        .set("restarts", st.restarts)
+        .set("recovery_time", st.recovery_time.as_secs_f64())
 }
 
 /// Admission/backpressure counters as a JSON object — the shared shape for
@@ -43,6 +45,9 @@ pub fn admission_stats_json(snap: &AdmissionSnapshot) -> Json {
                 .set("max_wait", snap.max_wait_launches)
                 .set("flush", snap.flush_launches),
         )
+        .set("queue_full_rejects", snap.queue_full_rejects)
+        .set("retried_packs", snap.retried_packs)
+        .set("pack_faults", snap.pack_faults)
 }
 
 /// Approximation ratio |sol| / |opt| (the paper's quality metric, Fig. 6/8).
@@ -180,11 +185,15 @@ mod tests {
         st.h2d_bytes = 4096;
         st.d2h_bytes = 128;
         st.cache_hits = 3;
+        st.restarts = 2;
+        st.recovery_time = std::time::Duration::from_millis(250);
         let s = exec_stats_json(&st).render();
         assert!(s.contains("\"executions\":12"), "{s}");
         assert!(s.contains("\"h2d_bytes\":4096"), "{s}");
         assert!(s.contains("\"d2h_bytes\":128"), "{s}");
         assert!(s.contains("\"cache_hits\":3"), "{s}");
+        assert!(s.contains("\"restarts\":2"), "{s}");
+        assert!(s.contains("\"recovery_time\":0.25"), "{s}");
     }
 
     #[test]
@@ -201,6 +210,9 @@ mod tests {
             launched: 2,
             fill_launches: 1,
             deadline_launches: 1,
+            queue_full_rejects: 1,
+            retried_packs: 1,
+            pack_faults: 2,
             ..Default::default()
         };
         let s = admission_stats_json(&snap).render();
@@ -209,6 +221,9 @@ mod tests {
         assert!(s.contains("\"in_flight\":4"), "{s}");
         assert!(s.contains("\"max_tenant_load\":4"), "{s}");
         assert!(s.contains("\"deadline\":1"), "{s}");
+        assert!(s.contains("\"queue_full_rejects\":1"), "{s}");
+        assert!(s.contains("\"retried_packs\":1"), "{s}");
+        assert!(s.contains("\"pack_faults\":2"), "{s}");
     }
 
     #[test]

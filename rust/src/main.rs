@@ -12,7 +12,11 @@
 //!                                TCP with continuous batching, per-tenant
 //!                                quotas (--quota), a bounded admission queue
 //!                                (--queue-cap), and --max-conns for
-//!                                deterministic shutdown (DESIGN.md §10)
+//!                                deterministic shutdown (DESIGN.md §10);
+//!                                {"op":"drain"} or SIGTERM drains gracefully,
+//!                                --retries / --max-rank-restarts /
+//!                                --fault-plan tune fault tolerance
+//!                                (DESIGN.md §11)
 
 use oggm::util::cli::Args;
 

@@ -2,16 +2,24 @@
 //! speaking newline-delimited JSONL over the service's admission +
 //! execution halves.
 //!
-//! One process, four thread roles:
+//! One process, five thread roles:
 //!
 //! * **accept** — owns the [`std::net::TcpListener`]; spawns one reader
-//!   thread per connection (each connection is one *tenant*).
+//!   and one writer thread per connection (each connection is one
+//!   *tenant*).
 //! * **reader** (per connection) — parses request lines
 //!   ([`proto::parse_request`]: the batch-solve manifest grammar or its
 //!   JSON object form), materializes graphs, and forwards jobs into the
 //!   *bounded* front channel. A full channel rejects the job right here
 //!   with a backpressure line — admission memory is capped no matter how
-//!   fast clients write.
+//!   fast clients write (and the reject is counted:
+//!   `queue_full_rejects` in the stats probe).
+//! * **writer** (per connection) — the single owner of the socket's write
+//!   side, fed by a bounded line channel ([`server::WRITER_BUF`]). The
+//!   front thread `try_send`s outcome lines; a tenant whose buffer is
+//!   full when a line arrives is a *slow consumer* and is disconnected on
+//!   the spot (counted in [`server::NetSummary::slow_disconnects`]) — no
+//!   client can block or bloat the server by not reading.
 //! * **front** — the only thread that touches the
 //!   [`Admitter`](crate::service::Admitter): multiplexes every
 //!   connection's jobs into one warm session's open packs, applies
@@ -34,13 +42,19 @@
 //! outcome is written. With `--max-conns N` the listener stops after N
 //! connections and [`server::serve`] returns a [`server::NetSummary`]
 //! once they drain — the deterministic mode CI smokes and
-//! `bench_service_load` use. Without it the process serves until killed.
+//! `bench_service_load` use. A `{"op":"drain"}` request — or SIGTERM,
+//! routed through a self-pipe — drains *gracefully* (DESIGN.md §11):
+//! accepting stops, open packs flush, in-flight work finishes, every
+//! admitted job streams exactly one outcome line, and the server returns
+//! with `drained: true` (jobs arriving after the drain get a terminal
+//! error line instead of silence). Without any of these the process
+//! serves until killed.
 
 /// Tick/clock plumbing shared by the net front loop and file-mode serve.
 pub mod driver;
 /// Wire protocol: request-line parsing and response JSON shapes.
 pub mod proto;
-/// The TCP listener: accept/reader/front/solver thread assembly.
+/// The TCP listener: accept/reader/writer/front/solver thread assembly.
 pub mod server;
 
 pub use proto::Request;

@@ -9,7 +9,8 @@
 //!   `"scenario":"mvc","max_latency_ms":250}` or
 //!   `{"id":"r","file":"graphs/road.txt"}`. Unknown keys are rejected
 //!   (same typo-hardening as the manifest grammar). `{"op":"stats"}`
-//!   requests an admission-counters line instead of a solve.
+//!   requests an admission-counters line instead of a solve;
+//!   `{"op":"drain"}` asks the server to drain gracefully (DESIGN.md §11).
 //!
 //! Responses are one JSON object per line: [`JobEvent`] outcome lines
 //! (`crate::service::JobEvent::to_json`), error lines
@@ -31,6 +32,10 @@ pub enum Request {
     Job(JobSpec),
     /// Report admission/backpressure counters (`{"op":"stats"}`).
     Stats,
+    /// Gracefully drain the server (`{"op":"drain"}`): stop accepting,
+    /// flush open packs, finish in-flight work, stream every remaining
+    /// outcome, exit 0 (DESIGN.md §11). Equivalent to SIGTERM.
+    Drain,
 }
 
 /// Keys accepted in a JSON job request (everything else is a hard error:
@@ -55,7 +60,10 @@ pub fn parse_request(line: &str, index: usize) -> Result<Option<Request>> {
         if op == "stats" {
             return Ok(Some(Request::Stats));
         }
-        bail!("unknown op '{op}' (known: stats)");
+        if op == "drain" {
+            return Ok(Some(Request::Drain));
+        }
+        bail!("unknown op '{op}' (known: stats, drain)");
     }
     for k in j.keys() {
         if !JOB_KEYS.contains(&k) {
@@ -154,6 +162,16 @@ pub fn stats_json(snap: &AdmissionSnapshot) -> Json {
         .set("stats", crate::coordinator::metrics::admission_stats_json(snap))
 }
 
+/// The `{"op":"drain"}` acknowledgment: drain accepted, with the work
+/// still owed (all of it will be streamed before the server exits).
+pub fn drain_json(pending: usize, in_flight: usize) -> Json {
+    Json::obj()
+        .set("op", "drain")
+        .set("draining", true)
+        .set("pending", pending)
+        .set("in_flight", in_flight)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -204,6 +222,7 @@ mod tests {
         assert_eq!(spec.source, GraphSource::File(PathBuf::from("graphs/road.txt")));
 
         assert_eq!(parse_request(r#"{"op":"stats"}"#, 0).unwrap(), Some(Request::Stats));
+        assert_eq!(parse_request(r#"{"op":"drain"}"#, 0).unwrap(), Some(Request::Drain));
         assert!(parse_request("", 0).unwrap().is_none());
         assert!(parse_request("# comment", 0).unwrap().is_none());
     }
@@ -233,5 +252,9 @@ mod tests {
         assert!(s.contains("\"op\":\"stats\"") && s.contains("\"in_flight\":0"), "{s}");
         let s = error_json("j3", "boom").render();
         assert!(s.contains("\"error\":\"boom\"") && !s.contains("rejected"), "{s}");
+        let s = drain_json(3, 2).render();
+        assert!(s.contains("\"op\":\"drain\""), "{s}");
+        assert!(s.contains("\"draining\":true"), "{s}");
+        assert!(s.contains("\"pending\":3") && s.contains("\"in_flight\":2"), "{s}");
     }
 }

@@ -1,5 +1,5 @@
-//! The TCP serve front: accept/reader/front/solver thread assembly (see
-//! the module docs in `net/mod.rs` and DESIGN.md §10).
+//! The TCP serve front: accept/reader/writer/front/solver thread assembly
+//! (see the module docs in `net/mod.rs` and DESIGN.md §10/§11).
 
 use crate::batch::queue::{Job, PackStat};
 use crate::batch::spec::JobSpec;
@@ -16,10 +16,12 @@ use crate::util::json::Json;
 use anyhow::{Context, Result};
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
-use std::net::{Shutdown, TcpListener, TcpStream};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender, TrySendError};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
+use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 /// Default per-tenant load quota when `--quota` is not given: deep enough
@@ -27,18 +29,30 @@ use std::time::{Duration, Instant};
 /// connection cannot monopolize the session.
 pub const DEFAULT_QUOTA: usize = 64;
 
-/// What a finished server run did (only reachable with
-/// [`Options::max_conns`] — an unbounded server runs until killed).
+/// Outbound lines buffered per connection before the server declares the
+/// client a slow consumer and disconnects it (DESIGN.md §11): the front
+/// thread must never block on one tenant's unread socket.
+pub const WRITER_BUF: usize = 1024;
+
+/// What a finished server run did. A server returns after `--max-conns`
+/// connections drain, or after a graceful drain (`{"op":"drain"}` /
+/// SIGTERM); without either it runs until killed.
 #[derive(Debug)]
 pub struct NetSummary {
-    /// Connections served.
+    /// Connections served to completion (including force-disconnects).
     pub conns: u64,
     /// Job requests received (after parse, before admission).
     pub jobs: u64,
-    /// JSONL lines written to clients.
+    /// JSONL lines enqueued to clients (outcome + error + stats lines).
     pub lines_out: u64,
     /// Error/reject lines among them.
     pub failed: u64,
+    /// Connections force-closed because their outbound buffer overflowed
+    /// (slow consumers, DESIGN.md §11).
+    pub slow_disconnects: u64,
+    /// Whether the run ended via graceful drain (`{"op":"drain"}` or
+    /// SIGTERM) rather than `--max-conns` exhaustion.
+    pub drained: bool,
     /// Per-pack statistics, in launch order (successful packs).
     pub packs: Vec<PackStat>,
     /// Final admission counters.
@@ -49,14 +63,17 @@ pub struct NetSummary {
 /// jobs, control requests, and finished packs — one channel, so
 /// [`driver::recv_deadline`] is the loop's only wait point.
 enum FrontMsg {
-    /// A reader thread registered its connection.
-    Conn { tenant: u64, writer: Arc<Mutex<TcpStream>> },
+    /// The accept thread registered a connection (its writer channel, the
+    /// shutdown handle, and the writer thread's join handle).
+    Conn { tenant: u64, out: SyncSender<String>, sock: Arc<TcpStream>, join: JoinHandle<()> },
     /// A parsed + materialized job request.
     Job { tenant: u64, spec: JobSpec, graph: Graph },
     /// A request line that failed to parse/materialize (per-job error).
     BadLine { tenant: u64, id: String, error: String },
     /// `{"op":"stats"}`.
     Stats { tenant: u64 },
+    /// `{"op":"drain"}` or SIGTERM (tenant 0 = no acknowledging socket).
+    Drain { tenant: u64 },
     /// The tenant's input reached EOF (half-close or disconnect).
     Eof { tenant: u64 },
     /// The solver finished a pack.
@@ -72,10 +89,13 @@ enum Solver {
     Real {
         /// Artifact directory to load the runtime from.
         dir: PathBuf,
-        /// Batch configuration (engine, storage, policy).
+        /// Batch configuration (engine, storage, policy, retry budgets).
         cfg: BatchCfg,
         /// Model parameters to serve.
         params: Params,
+        /// `--fault-plan` spec for the executor's rank pool (None falls
+        /// back to `OGGM_FAULT_PLAN`).
+        fault_spec: Option<String>,
     },
     /// Tests/benches: an injected solve function (deterministic timing, no
     /// artifacts needed).
@@ -84,7 +104,8 @@ enum Solver {
 
 /// Serve the listener with the real solver: artifacts at `dir`, `params`
 /// as the session's θ. Blocks until the server drains (see
-/// [`NetSummary`]); without [`Options::max_conns`] that is "forever".
+/// [`NetSummary`]); without [`Options::max_conns`] or a drain request that
+/// is "forever".
 pub fn serve(
     listener: TcpListener,
     dir: impl Into<PathBuf>,
@@ -93,7 +114,12 @@ pub fn serve(
 ) -> Result<NetSummary> {
     let dir = dir.into();
     let manifest = Manifest::load(&dir)?;
-    let solver = Solver::Real { dir, cfg: BatchCfg::from(opts), params };
+    let solver = Solver::Real {
+        dir,
+        cfg: BatchCfg::from(opts),
+        params,
+        fault_spec: opts.fault_plan.clone(),
+    };
     run_server(listener, manifest, opts, solver)
 }
 
@@ -111,10 +137,110 @@ pub fn serve_with(
     run_server(listener, manifest, opts, Solver::Custom(solve))
 }
 
-/// Per-connection state the front thread tracks.
+/// Per-connection state the front thread tracks. Outbound lines go through
+/// `out` to the connection's writer thread ([`writer_loop`]); `sock` is
+/// the shutdown handle the supervisor uses to unblock reads / cut off a
+/// slow consumer.
 struct Conn {
-    writer: Arc<Mutex<TcpStream>>,
+    out: SyncSender<String>,
+    sock: Arc<TcpStream>,
+    join: Option<JoinHandle<()>>,
     eof: bool,
+}
+
+/// The front thread's view of every live connection, plus the outbound
+/// accounting. Owns the slow-consumer policy: a tenant whose writer buffer
+/// is full when a line arrives is disconnected on the spot.
+struct Conns {
+    map: HashMap<u64, Conn>,
+    /// Writer join handles of closed connections, joined at shutdown so
+    /// every enqueued line is flushed before the server returns.
+    writers: Vec<JoinHandle<()>>,
+    lines_out: u64,
+    slow_disconnects: u64,
+    closed: u64,
+}
+
+impl Conns {
+    fn new() -> Conns {
+        Conns {
+            map: HashMap::new(),
+            writers: Vec::new(),
+            lines_out: 0,
+            slow_disconnects: 0,
+            closed: 0,
+        }
+    }
+
+    /// Enqueue one JSONL line to a tenant's writer. Silently drops lines
+    /// for vanished connections (a client that disconnected early still
+    /// had its pack solved — co-packed tenants needed it). A full buffer
+    /// disconnects the slow consumer (DESIGN.md §11).
+    fn write(&mut self, tenant: u64, json: &Json) {
+        let Some(conn) = self.map.get(&tenant) else { return };
+        let mut line = json.render();
+        line.push('\n');
+        match conn.out.try_send(line) {
+            Ok(()) => self.lines_out += 1,
+            Err(TrySendError::Full(_)) => {
+                // Slow consumer: its unread backlog hit WRITER_BUF lines.
+                // Cut it off — the front thread must not block or buffer
+                // unboundedly for one tenant.
+                self.slow_disconnects += 1;
+                self.drop_conn(tenant, Shutdown::Both);
+            }
+            Err(TrySendError::Disconnected(_)) => {} // writer died with its socket
+        }
+    }
+
+    /// Mark a tenant's input as ended (no-op for unknown tenants).
+    fn eof(&mut self, tenant: u64) {
+        if let Some(c) = self.map.get_mut(&tenant) {
+            c.eof = true;
+        }
+    }
+
+    /// Close out a tenant whose input ended and whose last outcome is
+    /// enqueued: dropping the writer sender lets the writer thread flush
+    /// the backlog, half-close our write side (the client's read loop sees
+    /// EOF), and exit.
+    fn maybe_close(&mut self, adm: &Admitter, tenant: u64) {
+        let done = self
+            .map
+            .get(&tenant)
+            .map(|c| c.eof && adm.tenant_load(tenant) == 0)
+            .unwrap_or(false);
+        if done {
+            self.drop_conn(tenant, Shutdown::Read);
+        }
+    }
+
+    /// Remove a connection: count it closed, unblock its reader via `how`,
+    /// and stash the writer handle for the shutdown join. The writer keeps
+    /// flushing until every sender (front + reader) is gone.
+    fn drop_conn(&mut self, tenant: u64, how: Shutdown) {
+        if let Some(mut c) = self.map.remove(&tenant) {
+            self.closed += 1;
+            let _ = c.sock.shutdown(how);
+            if let Some(j) = c.join.take() {
+                self.writers.push(j);
+            }
+        }
+    }
+
+    /// Drain-exit teardown: close every remaining connection (their
+    /// readers unblock via `Shutdown::Read`; their writers flush whatever
+    /// is enqueued, FIN, and exit), then join every writer so no outcome
+    /// line is lost to process exit.
+    fn shutdown_all(&mut self) {
+        let tenants: Vec<u64> = self.map.keys().copied().collect();
+        for t in tenants {
+            self.drop_conn(t, Shutdown::Read);
+        }
+        for j in self.writers.drain(..) {
+            let _ = j.join();
+        }
+    }
 }
 
 fn run_server(
@@ -124,43 +250,70 @@ fn run_server(
     solver: Solver,
 ) -> Result<NetSummary> {
     let queue_cap = opts.queue_cap.max(1);
+    let addr = listener.local_addr().ok();
     // The ONE front channel: bounded, so total parsed-but-unadmitted jobs
     // are capped; readers try_send jobs and reject on Full.
     let (tx, rx) = mpsc::sync_channel::<FrontMsg>(queue_cap);
     let (run_tx, run_rx) = mpsc::channel::<PackRun>();
     let solver_handle = spawn_solver(solver, run_rx, tx.clone());
+    // Reader-side queue-full rejects never reach this thread (that is the
+    // point); they are counted here and folded into the Admitter's books.
+    let queue_full = Arc::new(AtomicU64::new(0));
+    let stop_accept = Arc::new(AtomicBool::new(false));
     let accept_tx = tx.clone();
+    let accept_stop = stop_accept.clone();
+    let accept_qf = queue_full.clone();
     let max_conns = opts.max_conns;
     std::thread::Builder::new()
         .name("oggm-accept".into())
-        .spawn(move || accept_loop(listener, accept_tx, queue_cap, max_conns))
+        .spawn(move || accept_loop(listener, accept_tx, queue_cap, max_conns, accept_stop, accept_qf))
         .context("spawning the accept thread")?;
+    // SIGTERM becomes a drain request on this channel (self-pipe trick).
+    sigterm::route_to(tx.clone());
     // The front loop owns no sender; every remaining clone lives in a
-    // worker thread, so Disconnected can only mean total shutdown.
+    // worker thread (or the SIGTERM router, cleared below), so
+    // Disconnected can only mean total shutdown.
     drop(tx);
 
     let mut adm = Admitter::new(manifest, opts.p)
         .launch_policy(opts.launch)
         .max_wait(opts.max_wait)
         .quota(Some(opts.quota.unwrap_or(DEFAULT_QUOTA)));
-    let mut conns: HashMap<u64, Conn> = HashMap::new();
+    let mut conns = Conns::new();
     let mut packs: Vec<PackStat> = Vec::new();
-    let (mut total_conns, mut closed, mut jobs_in) = (None::<u64>, 0u64, 0u64);
-    let (mut lines_out, mut failed) = (0u64, 0u64);
+    let (mut total_conns, mut jobs_in) = (None::<u64>, 0u64);
+    let mut failed = 0u64;
+    let mut draining = false;
 
     loop {
+        // Fold reader-side queue-full rejects into the admission books so
+        // stats probes and the final snapshot see them.
+        for _ in 0..queue_full.swap(0, Ordering::Relaxed) {
+            adm.record_queue_full();
+        }
         match driver::recv_deadline(&rx, adm.next_due()) {
             Err(RecvTimeoutError::Timeout) => {
                 // A pack came due (deadline or max-wait) with no traffic.
                 send_runs(&run_tx, adm.tick(Instant::now()));
             }
             Err(RecvTimeoutError::Disconnected) => break,
-            Ok(FrontMsg::Conn { tenant, writer }) => {
-                conns.insert(tenant, Conn { writer, eof: false });
+            Ok(FrontMsg::Conn { tenant, out, sock, join }) => {
+                conns.map.insert(tenant, Conn { out, sock, join: Some(join), eof: false });
             }
             Ok(FrontMsg::Job { tenant, spec, graph }) => {
                 jobs_in += 1;
                 let id = spec.id.clone();
+                if draining {
+                    // Drain protocol: jobs already admitted finish; jobs
+                    // arriving after the drain request are refused with a
+                    // terminal error line (DESIGN.md §11).
+                    failed += 1;
+                    conns.write(
+                        tenant,
+                        &proto::error_json(&id, "server is draining: job not admitted"),
+                    );
+                    continue;
+                }
                 let meta = SubmitMeta {
                     tenant,
                     max_latency: spec.max_latency_ms.map(Duration::from_millis),
@@ -174,81 +327,114 @@ fn run_server(
                     Ok((_, runs)) => send_runs(&run_tx, runs),
                     Err(AdmitError::Busy { reason, depth, load }) => {
                         failed += 1;
-                        write_to(&conns, tenant, &proto::reject_json(&id, &reason, depth, load),
-                                 &mut lines_out);
+                        conns.write(tenant, &proto::reject_json(&id, &reason, depth, load));
                     }
                     Err(AdmitError::Invalid(e)) => {
                         failed += 1;
-                        write_to(&conns, tenant, &proto::error_json(&id, &format!("{e:#}")),
-                                 &mut lines_out);
+                        conns.write(tenant, &proto::error_json(&id, &format!("{e:#}")));
                     }
                 }
             }
             Ok(FrontMsg::BadLine { tenant, id, error }) => {
                 failed += 1;
-                write_to(&conns, tenant, &proto::error_json(&id, &error), &mut lines_out);
+                conns.write(tenant, &proto::error_json(&id, &error));
             }
             Ok(FrontMsg::Stats { tenant }) => {
-                write_to(&conns, tenant, &proto::stats_json(&adm.snapshot()), &mut lines_out);
+                conns.write(tenant, &proto::stats_json(&adm.snapshot()));
+            }
+            Ok(FrontMsg::Drain { tenant }) => {
+                let snap = adm.snapshot();
+                conns.write(tenant, &proto::drain_json(snap.pending, snap.in_flight));
+                if !draining {
+                    draining = true;
+                    // Stop accepting, then nudge the blocked accept loop
+                    // with a throwaway self-connection so it observes the
+                    // flag and reports AcceptDone.
+                    stop_accept.store(true, Ordering::Release);
+                    nudge_accept(addr);
+                    // Flush every open pack: admitted jobs all solve.
+                    send_runs(&run_tx, adm.flush());
+                }
             }
             Ok(FrontMsg::Eof { tenant }) => {
-                if let Some(c) = conns.get_mut(&tenant) {
-                    c.eof = true;
-                }
+                conns.eof(tenant);
                 // This tenant sends nothing more: its jobs must not wait
                 // for other tenants' traffic to fill a pack.
                 send_runs(&run_tx, adm.flush_tenant(tenant));
-                closed += maybe_close(&adm, &mut conns, tenant);
+                conns.maybe_close(&adm, tenant);
             }
             Ok(FrontMsg::Done(done)) => {
+                adm.record_retries(done.retries as u64, done.faults as u64);
                 let mut touched = Vec::with_capacity(done.events.len());
                 for ev in done.events {
                     adm.complete(ev.tenant, 1);
                     if ev.result.is_err() {
                         failed += 1;
                     }
-                    write_to(&conns, ev.tenant, &ev.to_json(), &mut lines_out);
+                    conns.write(ev.tenant, &ev.to_json());
                     touched.push(ev.tenant);
                 }
                 if let Some(stat) = done.stat {
                     let snap = adm.snapshot();
                     eprintln!(
                         "serve: pack {:>3}: {:>6} N={:<5} jobs={:<3} cause={:<8} sim {:.4}s \
-                         | depth={} open={} in_flight={}",
+                         | depth={} open={} in_flight={}{}",
                         stat.pack, stat.scenario.name(), stat.bucket_n, stat.jobs,
                         stat.cause.name(), stat.sim_time,
-                        snap.pending, snap.open_packs, snap.in_flight
+                        snap.pending, snap.open_packs, snap.in_flight,
+                        if stat.retries > 0 {
+                            format!(" retries={}", stat.retries)
+                        } else {
+                            String::new()
+                        }
                     );
                     packs.push(stat);
                 }
                 touched.sort_unstable();
                 touched.dedup();
                 for tenant in touched {
-                    closed += maybe_close(&adm, &mut conns, tenant);
+                    conns.maybe_close(&adm, tenant);
                 }
             }
             Ok(FrontMsg::AcceptDone { conns: n }) => {
                 total_conns = Some(n);
             }
         }
-        // Drained exit: the listener stopped, every connection closed out,
-        // and nothing is queued or in flight.
-        if total_conns == Some(closed)
-            && adm.pending() == 0
-            && adm.snapshot().in_flight == 0
-        {
+        let idle = adm.pending() == 0 && adm.snapshot().in_flight == 0;
+        // Graceful-drain exit: accepting stopped, every admitted job's
+        // outcome is enqueued — regardless of clients still holding their
+        // sockets open (shutdown_all flushes and closes them).
+        if draining && total_conns.is_some() && idle {
+            break;
+        }
+        // Drained exit (--max-conns): the listener stopped, every
+        // connection closed out, and nothing is queued or in flight.
+        if total_conns == Some(conns.closed) && idle {
             break;
         }
     }
+    sigterm::unroute();
+    // Drop the front receiver FIRST: any reader still blocked on a full
+    // channel fails its send, exits, and releases its writer sender —
+    // otherwise the writer joins below could deadlock.
+    drop(rx);
+    // Flush and close every remaining connection; join the writers so no
+    // enqueued outcome line is lost to process exit.
+    conns.shutdown_all();
     // Closing the run channel stops the solver; its FrontMsg sender drops
     // with it.
     drop(run_tx);
     let _ = solver_handle.join();
+    for _ in 0..queue_full.swap(0, Ordering::Relaxed) {
+        adm.record_queue_full();
+    }
     Ok(NetSummary {
-        conns: closed,
+        conns: conns.closed,
         jobs: jobs_in,
-        lines_out,
+        lines_out: conns.lines_out,
         failed,
+        slow_disconnects: conns.slow_disconnects,
+        drained: draining,
         packs,
         snapshot: adm.snapshot(),
     })
@@ -262,62 +448,66 @@ fn send_runs(run_tx: &mpsc::Sender<PackRun>, runs: Vec<PackRun>) {
     }
 }
 
-/// Write one JSONL line to a tenant's socket, counting it. Silently drops
-/// lines for vanished connections (a client that disconnected early still
-/// had its pack solved — co-packed tenants needed it).
-fn write_to(conns: &HashMap<u64, Conn>, tenant: u64, json: &Json, lines_out: &mut u64) {
-    let Some(conn) = conns.get(&tenant) else { return };
-    let mut line = json.render();
-    line.push('\n');
-    if let Ok(mut w) = conn.writer.lock() {
-        if (*w).write_all(line.as_bytes()).is_ok() {
-            *lines_out += 1;
-        }
+/// Unblock the accept loop after `stop` was raised: a throwaway loopback
+/// connection makes `listener.incoming()` yield so the flag is observed.
+fn nudge_accept(addr: Option<SocketAddr>) {
+    if let Some(a) = addr {
+        let _ = TcpStream::connect_timeout(&a, Duration::from_millis(250));
     }
 }
 
-/// Close out a tenant whose input ended and whose last outcome is written:
-/// half-close our write side (the client's read loop sees EOF) and drop
-/// the registration. Returns 1 when the connection closed.
-fn maybe_close(adm: &Admitter, conns: &mut HashMap<u64, Conn>, tenant: u64) -> u64 {
-    let done = conns
-        .get(&tenant)
-        .map(|c| c.eof && adm.tenant_load(tenant) == 0)
-        .unwrap_or(false);
-    if !done {
-        return 0;
-    }
-    if let Some(c) = conns.remove(&tenant) {
-        if let Ok(w) = c.writer.lock() {
-            let _ = w.shutdown(Shutdown::Write);
-        }
-    }
-    1
-}
-
-/// Accept connections until the listener errors fatally or `max_conns` is
-/// reached; one reader thread per connection. Tenant ids start at 1 (0 is
-/// the library/file-mode default tenant).
+/// Accept connections until the listener errors fatally, `max_conns` is
+/// reached, or a drain raises `stop`; one reader + one writer thread per
+/// connection. Tenant ids start at 1 (0 is the library/file-mode default
+/// tenant).
 fn accept_loop(
     listener: TcpListener,
     tx: SyncSender<FrontMsg>,
     queue_cap: usize,
     max_conns: Option<usize>,
+    stop: Arc<AtomicBool>,
+    queue_full: Arc<AtomicU64>,
 ) {
     let mut spawned = 0u64;
     for stream in listener.incoming() {
+        if stop.load(Ordering::Acquire) {
+            // Drain: the nudge (or a late client) connected only to get
+            // us here; close it unserved.
+            break;
+        }
         let Ok(stream) = stream else { continue };
-        let Ok(writer) = stream.try_clone() else { continue };
+        let (Ok(wstream), Ok(sock)) = (stream.try_clone(), stream.try_clone()) else {
+            continue;
+        };
         let tenant = spawned + 1;
-        let writer = Arc::new(Mutex::new(writer));
+        // Bounded per-connection outbound buffer: the front thread
+        // try_sends lines; the writer owns the socket's write side.
+        let (out, out_rx) = mpsc::sync_channel::<String>(WRITER_BUF);
+        let Ok(join) = std::thread::Builder::new()
+            .name(format!("oggm-write-{tenant}"))
+            .spawn(move || writer_loop(wstream, out_rx))
+        else {
+            continue;
+        };
+        // Registration goes through the same channel BEFORE the reader is
+        // spawned, so the front thread always knows the tenant's writer by
+        // the time its first job needs an outcome line routed.
+        if tx.send(FrontMsg::Conn { tenant, out: out.clone(), sock: Arc::new(sock), join }).is_err()
+        {
+            return;
+        }
         let tx2 = tx.clone();
+        let qf = queue_full.clone();
         let ok = std::thread::Builder::new()
             .name(format!("oggm-conn-{tenant}"))
-            .spawn(move || reader_loop(tenant, stream, writer, tx2, queue_cap))
+            .spawn(move || reader_loop(tenant, stream, out, tx2, queue_cap, qf))
             .is_ok();
-        if ok {
-            spawned += 1;
+        if !ok {
+            // Registered but reader-less: a synthetic EOF closes it out
+            // (zero load, so the front thread drops it immediately).
+            let _ = tx.send(FrontMsg::Eof { tenant });
         }
+        spawned += 1;
         if let Some(cap) = max_conns {
             if spawned >= cap as u64 {
                 break;
@@ -327,20 +517,34 @@ fn accept_loop(
     let _ = tx.send(FrontMsg::AcceptDone { conns: spawned });
 }
 
+/// Per-connection writer: the single owner of the socket's write side.
+/// Drains the bounded line channel in FIFO order; after a write error it
+/// keeps draining (so senders never block on a dead socket) and finally
+/// half-closes the write side — the client's read loop sees EOF exactly
+/// when the last enqueued line is out.
+fn writer_loop(mut stream: TcpStream, rx: Receiver<String>) {
+    let mut ok = true;
+    for line in rx {
+        if ok && stream.write_all(line.as_bytes()).is_err() {
+            ok = false;
+        }
+    }
+    let _ = stream.shutdown(Shutdown::Write);
+}
+
 /// Per-connection reader: parse request lines, materialize graphs, and
 /// forward jobs with `try_send` — a full front channel becomes an
-/// immediate backpressure reject on this socket, written right here so the
+/// immediate backpressure reject on this socket (counted in
+/// `queue_full`), written through the connection's writer channel so the
 /// overloaded front thread never sees the job at all.
 fn reader_loop(
     tenant: u64,
     stream: TcpStream,
-    writer: Arc<Mutex<TcpStream>>,
+    out: SyncSender<String>,
     tx: SyncSender<FrontMsg>,
     queue_cap: usize,
+    queue_full: Arc<AtomicU64>,
 ) {
-    if tx.send(FrontMsg::Conn { tenant, writer: writer.clone() }).is_err() {
-        return;
-    }
     let (mut jobs, mut lineno) = (0usize, 0usize);
     for line in BufReader::new(stream).lines() {
         lineno += 1;
@@ -353,6 +557,11 @@ fn reader_loop(
                     return;
                 }
             }
+            Ok(Some(proto::Request::Drain)) => {
+                if tx.send(FrontMsg::Drain { tenant }).is_err() {
+                    return;
+                }
+            }
             Ok(Some(proto::Request::Job(spec))) => {
                 jobs += 1;
                 let id = spec.id.clone();
@@ -360,11 +569,13 @@ fn reader_loop(
                     Ok(graph) => match tx.try_send(FrontMsg::Job { tenant, spec, graph }) {
                         Ok(()) => {}
                         Err(TrySendError::Full(_)) => {
+                            queue_full.fetch_add(1, Ordering::Relaxed);
                             let mut line = proto::busy_json(&id, queue_cap).render();
                             line.push('\n');
-                            if let Ok(mut w) = writer.lock() {
-                                let _ = (*w).write_all(line.as_bytes());
-                            }
+                            // Best effort: if even the writer buffer is
+                            // full, the slow-consumer policy is about to
+                            // disconnect this tenant anyway.
+                            let _ = out.try_send(line);
                         }
                         Err(TrySendError::Disconnected(_)) => return,
                     },
@@ -410,9 +621,9 @@ fn spawn_solver(
                     }
                 }
             }
-            Solver::Real { dir, cfg, params } => match Runtime::new(&dir) {
+            Solver::Real { dir, cfg, params, fault_spec } => match Runtime::new(&dir) {
                 Ok(rt) => {
-                    let mut exec = Executor::new(&rt, params, cfg);
+                    let mut exec = Executor::new(&rt, params, cfg).fault_plan(fault_spec);
                     for run in run_rx {
                         if tx.send(FrontMsg::Done(exec.run(run))).is_err() {
                             break;
@@ -448,5 +659,93 @@ fn fail_pack(run: PackRun, msg: &str) -> PackDone {
             result: Err(err.clone()),
         })
         .collect();
-    PackDone { events, stat: None }
+    PackDone { events, stat: None, retries: 0, faults: 0 }
+}
+
+/// SIGTERM → graceful drain, via the classic self-pipe trick: the handler
+/// (async-signal-safe: one `write(2)`) pokes a pipe; a watcher thread
+/// turns each poke into a [`FrontMsg::Drain`] for the most recently
+/// started server. Declared raw because the repo links no libc crate.
+#[cfg(unix)]
+mod sigterm {
+    use super::FrontMsg;
+    use std::sync::atomic::{AtomicI32, Ordering};
+    use std::sync::mpsc::SyncSender;
+    use std::sync::{Mutex, Once};
+
+    const SIGTERM: i32 = 15;
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+        fn pipe(fds: *mut i32) -> i32;
+        fn read(fd: i32, buf: *mut u8, count: usize) -> isize;
+        fn write(fd: i32, buf: *const u8, count: usize) -> isize;
+    }
+
+    /// Write end of the self-pipe (-1 until installed).
+    static PIPE_W: AtomicI32 = AtomicI32::new(-1);
+    static INSTALL: Once = Once::new();
+    /// The server currently receiving SIGTERM drains (last started wins;
+    /// cleared when its run ends).
+    static TARGET: Mutex<Option<SyncSender<FrontMsg>>> = Mutex::new(None);
+
+    /// Async-signal-safe SIGTERM handler: one byte into the pipe.
+    extern "C" fn on_sigterm(_sig: i32) {
+        let fd = PIPE_W.load(Ordering::Relaxed);
+        if fd >= 0 {
+            let b = [1u8];
+            unsafe {
+                let _ = write(fd, b.as_ptr(), 1);
+            }
+        }
+    }
+
+    /// Route SIGTERM to `tx` as a drain request; install the handler and
+    /// watcher thread once per process.
+    pub(super) fn route_to(tx: SyncSender<FrontMsg>) {
+        *TARGET.lock().unwrap() = Some(tx);
+        INSTALL.call_once(|| {
+            let mut fds = [-1i32; 2];
+            if unsafe { pipe(fds.as_mut_ptr()) } != 0 {
+                return;
+            }
+            let rd = fds[0];
+            let spawned = std::thread::Builder::new()
+                .name("oggm-sigterm".into())
+                .spawn(move || loop {
+                    let mut b = [0u8; 1];
+                    if unsafe { read(rd, b.as_mut_ptr(), 1) } <= 0 {
+                        return;
+                    }
+                    // tenant 0 never has a socket: the ack is dropped,
+                    // the drain proceeds.
+                    let target = TARGET.lock().unwrap().clone();
+                    if let Some(tx) = target {
+                        let _ = tx.send(FrontMsg::Drain { tenant: 0 });
+                    }
+                })
+                .is_ok();
+            if spawned {
+                PIPE_W.store(fds[1], Ordering::Relaxed);
+                unsafe {
+                    signal(SIGTERM, on_sigterm as usize);
+                }
+            }
+        });
+    }
+
+    /// Stop routing SIGTERM to a finished server (and drop its channel
+    /// sender, so the front channel can fully disconnect).
+    pub(super) fn unroute() {
+        *TARGET.lock().unwrap() = None;
+    }
+}
+
+/// Non-unix stub: no signal plumbing; `{"op":"drain"}` still works.
+#[cfg(not(unix))]
+mod sigterm {
+    use super::FrontMsg;
+    use std::sync::mpsc::SyncSender;
+
+    pub(super) fn route_to(_tx: SyncSender<FrontMsg>) {}
+    pub(super) fn unroute() {}
 }

@@ -21,7 +21,7 @@ mod pool;
 mod worker;
 
 pub use crate::coordinator::engine::Engine;
-pub use pool::RankPool;
+pub use pool::{RankPool, DEFAULT_MAX_RANK_RESTARTS};
 
 use crate::coordinator::bwd::{backward_set, GradOutput};
 use crate::coordinator::engine::EngineCfg;

@@ -12,14 +12,30 @@
 //! channel as `Arc`s, so publishing them is O(1) per rank, not O(N+E)
 //! (the fix for the old per-call engine's full-graph clones).
 //!
-//! Failure semantics: a worker that errors aborts the collective group
-//! (waking sibling ranks mid-collective), the pool surfaces one contextful
-//! error naming the originating rank, and the next `install` transparently
-//! resets the collective group so the pool stays usable — a failed rank
-//! becomes a per-job error at the service boundary, never a wedged
-//! process.
+//! Failure semantics (DESIGN.md §11): a worker that errors aborts the
+//! collective group (waking sibling ranks mid-collective), the pool
+//! surfaces one contextful error naming the originating rank, and the next
+//! `install` transparently resets the collective group so the pool stays
+//! usable — a failed rank becomes a per-job error at the service boundary,
+//! never a wedged process.
+//!
+//! A worker that *panics* additionally exits its thread (rank death). The
+//! pool's supervisor notices at the next `install` via
+//! `JoinHandle::is_finished` and spawns a **replacement rank**: fresh
+//! thread-local `Runtime`, fresh channels, a new collective group for the
+//! whole pool, and θ re-published to the replacement from the Arc-shared
+//! parameters — shard state re-ships with the install itself. Restart
+//! rounds are budgeted per pack (`max_restarts`, the `--max-rank-restarts`
+//! flag, default 2) with exponential backoff, and the pool's
+//! [`ExecStats`] report restart counts and total recovery time.
+//!
+//! Deterministic fault injection: `RankPool::new` reads `OGGM_FAULT_PLAN`
+//! (see [`crate::collective::fault`]) and `new_with` accepts an explicit
+//! plan, threading it into every worker (forward-step faults) and every
+//! communicator handle (collective-phase faults).
 
 use super::worker;
+use crate::collective::fault::FaultPlan;
 use crate::collective::Communicator;
 use crate::coordinator::bwd::GradOutput;
 use crate::coordinator::engine::{EngineCfg, StepTiming};
@@ -33,7 +49,7 @@ use std::path::PathBuf;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// One rank's shard replica shipped at install/rebuild.
 pub(crate) enum RankShard {
@@ -111,24 +127,57 @@ struct PoolCtl {
     /// warm pool re-publishes θ only when the content actually changed —
     /// the zero-θ-bytes warm-pack property).
     last_params: Option<Vec<f32>>,
+    /// The last published parameters as shipped — re-published to a
+    /// replacement rank, whose fresh runtime starts with no θ.
+    published: Option<Arc<Params>>,
     /// Set after any failed operation; the next install resets the
     /// collective group before proceeding.
     poisoned: bool,
+    /// Consecutive recovery rounds that replaced dead ranks without an
+    /// intervening successful install — the budget `max_restarts` caps.
+    streak: usize,
+    /// Total rank replacements over the pool's lifetime.
+    restarts_total: u64,
+    /// Total wall time spent in recovery (respawn + collective reset + θ
+    /// republish).
+    recovery: Duration,
 }
 
 /// A persistent pool of P rank workers (DESIGN.md §9). Single-threaded
 /// coordinator side; the workers own the concurrency.
 pub struct RankPool {
     p: usize,
-    workers: Vec<WorkerHandle>,
+    dir: PathBuf,
+    /// Scripted fault plan threaded into workers and communicator handles.
+    fault: Option<Arc<FaultPlan>>,
+    /// Max consecutive rank-replacement rounds per pack (DESIGN.md §11).
+    max_restarts: usize,
+    /// Interior mutability: the supervisor replaces dead handles in place
+    /// while the coordinator drives the pool through `&self`.
+    workers: RefCell<Vec<WorkerHandle>>,
     ctl: RefCell<PoolCtl>,
 }
+
+/// Default per-pack rank-replacement budget (`--max-rank-restarts`).
+pub const DEFAULT_MAX_RANK_RESTARTS: usize = 2;
 
 impl RankPool {
     /// Spawn P persistent rank workers over the artifact directory. Each
     /// worker constructs its own PJRT runtime; failure on any rank (e.g.
     /// the offline xla stub) fails construction with that rank's error.
+    /// Reads a fault-injection script from `OGGM_FAULT_PLAN` when set.
     pub fn new(dir: impl Into<PathBuf>, p: usize) -> Result<RankPool> {
+        RankPool::new_with(dir, p, DEFAULT_MAX_RANK_RESTARTS, FaultPlan::from_env()?)
+    }
+
+    /// `new` with an explicit restart budget and fault plan (the service
+    /// threads `--max-rank-restarts` / `--fault-plan` through here).
+    pub fn new_with(
+        dir: impl Into<PathBuf>,
+        p: usize,
+        max_restarts: usize,
+        fault: Option<Arc<FaultPlan>>,
+    ) -> Result<RankPool> {
         ensure!(p >= 1, "rank pool needs at least one rank");
         let dir = dir.into();
         // Runtime::new sets TF_CPP_MIN_LOG_LEVEL when unset; do that once
@@ -137,22 +186,25 @@ impl RankPool {
         if std::env::var_os("TF_CPP_MIN_LOG_LEVEL").is_none() {
             std::env::set_var("TF_CPP_MIN_LOG_LEVEL", "1");
         }
-        let comms = Communicator::create(p);
+        let comms = Communicator::create_with_faults(p, fault.clone());
         let mut workers = Vec::with_capacity(p);
         for (rank, comm) in comms.into_iter().enumerate() {
-            let (tx, worker_rx) = channel::<Req>();
-            let (worker_tx, rx) = channel::<Resp>();
-            let d = dir.clone();
-            let join = std::thread::Builder::new()
-                .name(format!("oggm-rank{rank}"))
-                .spawn(move || worker::worker_main(d, rank, comm, worker_rx, worker_tx))
-                .context("spawning rank worker")?;
-            workers.push(WorkerHandle { tx, rx, join: Some(join) });
+            workers.push(spawn_worker(&dir, rank, comm, fault.clone())?);
         }
         let pool = RankPool {
             p,
-            workers,
-            ctl: RefCell::new(PoolCtl { last_params: None, poisoned: false }),
+            dir,
+            fault,
+            max_restarts,
+            workers: RefCell::new(workers),
+            ctl: RefCell::new(PoolCtl {
+                last_params: None,
+                published: None,
+                poisoned: false,
+                streak: 0,
+                restarts_total: 0,
+                recovery: Duration::ZERO,
+            }),
         };
         // Startup handshake: every worker acknowledges its runtime.
         pool.collect_unit("start rank runtimes")?;
@@ -164,8 +216,14 @@ impl RankPool {
         self.p
     }
 
+    /// (total rank replacements, total recovery wall time) so far.
+    pub fn restart_stats(&self) -> (u64, Duration) {
+        let ctl = self.ctl.borrow();
+        (ctl.restarts_total, ctl.recovery)
+    }
+
     fn send_all<F: FnMut(usize) -> Req>(&self, mut f: F) -> Result<()> {
-        for (i, w) in self.workers.iter().enumerate() {
+        for (i, w) in self.workers.borrow().iter().enumerate() {
             if w.tx.send(f(i)).is_err() {
                 self.ctl.borrow_mut().poisoned = true;
                 bail!("rank {i} worker is gone");
@@ -180,7 +238,7 @@ impl RankPool {
     fn recv_all(&self, what: &str) -> Result<Vec<Resp>> {
         let mut out = Vec::with_capacity(self.p);
         let mut errs: Vec<(usize, String)> = Vec::new();
-        for (i, w) in self.workers.iter().enumerate() {
+        for (i, w) in self.workers.borrow().iter().enumerate() {
             match w.rx.recv() {
                 Ok(Resp::Err(e)) => errs.push((i, e)),
                 Ok(r) => out.push(r),
@@ -217,20 +275,102 @@ impl RankPool {
         Ok(xfer)
     }
 
-    /// Recover from an earlier failed operation: drain stale responses and
-    /// hand every worker a fresh collective group (an aborted group is
-    /// permanently failed by design).
+    /// Recover from an earlier failed operation: drain stale responses,
+    /// **replace dead ranks** (a panicked worker exits its thread; the
+    /// replacement gets a fresh runtime and θ re-published from the last
+    /// Arc-shared parameters), and hand every worker a fresh collective
+    /// group (an aborted group is permanently failed by design).
+    /// Replacement rounds are budgeted by `max_restarts` per pack with
+    /// exponential backoff; shard state re-ships with the install that
+    /// triggered this recovery.
     fn ensure_live(&self) -> Result<()> {
         if !self.ctl.borrow().poisoned {
             return Ok(());
         }
-        for w in &self.workers {
+        let t0 = Instant::now();
+        // Drain stale responses left by the failed operation.
+        for w in self.workers.borrow().iter() {
             while w.rx.try_recv().is_ok() {}
         }
-        let comms = Communicator::create(self.p);
-        self.send_all(|i| Req::NewComm(comms[i].clone()))?;
+        // Detect dead ranks: a panicked worker has exited its thread.
+        let dead: Vec<usize> = self
+            .workers
+            .borrow()
+            .iter()
+            .enumerate()
+            .filter(|(_, w)| w.join.as_ref().map_or(true, |j| j.is_finished()))
+            .map(|(i, _)| i)
+            .collect();
+        if !dead.is_empty() {
+            let streak = self.ctl.borrow().streak;
+            if streak >= self.max_restarts {
+                // Surface the exhaustion (the current pack fails), but
+                // grant the next pack a fresh budget instead of wedging
+                // the pool permanently.
+                self.ctl.borrow_mut().streak = 0;
+                bail!(
+                    "{} dead rank(s) after {streak} replacement round(s): per-pack restart \
+                     budget exhausted (max {}; raise --max-rank-restarts)",
+                    dead.len(),
+                    self.max_restarts
+                );
+            }
+            // Exponential backoff before touching the runtime again: a
+            // persistent environment fault should not spin the supervisor.
+            std::thread::sleep(Duration::from_millis(5u64 << streak.min(4)));
+        }
+        // Fresh collective group for the whole pool. Replacements receive
+        // their handle at spawn; survivors get theirs via NewComm — each
+        // rank acknowledges exactly once (spawn ack or NewComm ack).
+        let mut comms: Vec<Option<Communicator>> =
+            Communicator::create_with_faults(self.p, self.fault.clone())
+                .into_iter()
+                .map(Some)
+                .collect();
+        {
+            let mut ws = self.workers.borrow_mut();
+            for &i in &dead {
+                if let Some(j) = ws[i].join.take() {
+                    let _ = j.join(); // reap the dead thread
+                }
+                let comm = comms[i].take().expect("each rank's comm is taken once");
+                ws[i] = spawn_worker(&self.dir, i, comm, self.fault.clone())
+                    .context("respawning a replacement rank")?;
+            }
+        }
+        for (i, w) in self.workers.borrow().iter().enumerate() {
+            if let Some(c) = comms[i].take() {
+                if w.tx.send(Req::NewComm(c)).is_err() {
+                    bail!("rank {i} worker is gone");
+                }
+            }
+        }
         self.collect_unit("reset collectives")?;
-        self.ctl.borrow_mut().poisoned = false;
+        // Replacements restarted with an empty θ cache: re-publish the
+        // last parameters to them (O(1) per rank — they're Arc-shared).
+        if !dead.is_empty() {
+            if let Some(arc) = self.ctl.borrow().published.clone() {
+                let ws = self.workers.borrow();
+                for &i in &dead {
+                    if ws[i].tx.send(Req::SetParams(arc.clone())).is_err() {
+                        bail!("rank {i} worker is gone");
+                    }
+                }
+                for &i in &dead {
+                    match ws[i].rx.recv() {
+                        Ok(Resp::Unit { .. }) => {}
+                        Ok(Resp::Err(e)) => bail!("republish θ to replacement rank failed: {e}"),
+                        _ => bail!("rank {i}: unexpected response to θ republish"),
+                    }
+                }
+            }
+            let mut ctl = self.ctl.borrow_mut();
+            ctl.streak += 1;
+            ctl.restarts_total += dead.len() as u64;
+        }
+        let mut ctl = self.ctl.borrow_mut();
+        ctl.recovery += t0.elapsed();
+        ctl.poisoned = false;
         Ok(())
     }
 
@@ -244,7 +384,9 @@ impl RankPool {
         let arc = Arc::new(params.clone());
         self.send_all(|_| Req::SetParams(arc.clone()))?;
         let xfer = self.collect_unit("publish parameters")?;
-        self.ctl.borrow_mut().last_params = Some(params.flat.clone());
+        let mut ctl = self.ctl.borrow_mut();
+        ctl.last_params = Some(params.flat.clone());
+        ctl.published = Some(arc);
         Ok(xfer)
     }
 
@@ -264,6 +406,9 @@ impl RankPool {
         set.clear_dirty();
         self.send_shards(|shard| Req::Install { slot, shard, resident }, set)?;
         xfer += self.collect_unit("install pack")?;
+        // A successful install opens a new pack: the per-pack restart
+        // budget starts fresh.
+        self.ctl.borrow_mut().streak = 0;
         Ok(xfer)
     }
 
@@ -457,12 +602,16 @@ impl RankPool {
     }
 
     /// Summed runtime counters across all ranks (the pool-level
-    /// [`ExecStats`] the pack/queue metrics book).
+    /// [`ExecStats`] the pack/queue metrics book), plus the supervisor's
+    /// restart count and recovery time.
     pub fn stats(&self) -> Result<ExecStats> {
         let mut total = ExecStats::default();
         for s in self.rank_stats()? {
             total.add(&s);
         }
+        let ctl = self.ctl.borrow();
+        total.restarts = ctl.restarts_total;
+        total.recovery_time = ctl.recovery;
         Ok(total)
     }
 
@@ -470,13 +619,32 @@ impl RankPool {
     /// the abort-instead-of-deadlock path end to end).
     #[doc(hidden)]
     pub fn inject_failure(&self, rank: usize) -> Result<()> {
-        let w = self.workers.get(rank).ok_or_else(|| anyhow!("no rank {rank}"))?;
+        let ws = self.workers.borrow();
+        let w = ws.get(rank).ok_or_else(|| anyhow!("no rank {rank}"))?;
         w.tx.send(Req::InjectFailure).map_err(|_| anyhow!("rank {rank} worker is gone"))?;
         match w.rx.recv() {
             Ok(Resp::Unit { .. }) => Ok(()),
             _ => bail!("rank {rank}: unexpected response to inject_failure"),
         }
     }
+}
+
+/// Spawn one rank worker thread with fresh channels. Used at pool startup
+/// and by the supervisor when replacing a dead rank.
+fn spawn_worker(
+    dir: &PathBuf,
+    rank: usize,
+    comm: Communicator,
+    fault: Option<Arc<FaultPlan>>,
+) -> Result<WorkerHandle> {
+    let (tx, worker_rx) = channel::<Req>();
+    let (worker_tx, rx) = channel::<Resp>();
+    let d = dir.clone();
+    let join = std::thread::Builder::new()
+        .name(format!("oggm-rank{rank}"))
+        .spawn(move || worker::worker_main(d, rank, comm, fault, worker_rx, worker_tx))
+        .context("spawning rank worker")?;
+    Ok(WorkerHandle { tx, rx, join: Some(join) })
 }
 
 /// Merge one rank's measured attribution into the pool-level timing.
@@ -493,10 +661,11 @@ fn fold_rank_timing(timing: &mut StepTiming, rank: usize, t: &RankTiming) {
 
 impl Drop for RankPool {
     fn drop(&mut self) {
-        for w in &self.workers {
+        let ws = self.workers.get_mut();
+        for w in ws.iter() {
             let _ = w.tx.send(Req::Shutdown);
         }
-        for w in &mut self.workers {
+        for w in ws.iter_mut() {
             if let Some(j) = w.join.take() {
                 let _ = j.join();
             }

@@ -12,9 +12,20 @@
 //! Failure discipline: any error or panic while handling a request aborts
 //! the collective group before the error response is sent, so sibling
 //! ranks blocked mid-collective wake with a contextful error instead of
-//! deadlocking (the hang-on-failure fix of ISSUE 5).
+//! deadlocking (the hang-on-failure fix of ISSUE 5). An ordinary `Err` is
+//! recoverable — the worker stays alive and serves the next request — but
+//! a *panic* is treated as rank death: the thread sends its last error
+//! response and exits, and the pool's supervisor spawns a replacement rank
+//! (DESIGN.md §11).
+//!
+//! A [`FaultPlan`] (DESIGN.md §11) can be scripted into the worker: faults
+//! with no `op=` fire at this rank's 0-based forward-step counter
+//! (`kind=panic` kills the thread, `kind=err` fails the request,
+//! `kind=slow` stalls), and the same plan rides on the [`Communicator`]
+//! for collective-phase faults.
 
 use super::pool::{FwdReq, RankShard, RankTiming, Req, Resp, SyncDelta};
+use crate::collective::fault::{FaultKind, FaultPlan};
 use crate::collective::Communicator;
 use crate::coordinator::engine::StepTiming;
 use crate::coordinator::fwd::{
@@ -63,6 +74,12 @@ struct WorkerState {
     theta_bufs: Vec<Rc<xla::PjRtBuffer>>,
     params: Option<Arc<Params>>,
     fail_next: bool,
+    /// Scripted fault plan shared with the communicator handles; checked
+    /// at the forward-step injection site (DESIGN.md §11).
+    fault: Option<Arc<FaultPlan>>,
+    /// 0-based count of forward requests served — the `step` coordinate a
+    /// fault spec without `op=` addresses.
+    fwd_steps: usize,
 }
 
 fn pack_mut<'a, 'r>(
@@ -77,11 +94,15 @@ fn pack_mut<'a, 'r>(
 
 /// Worker thread entry: construct the thread-local runtime, acknowledge
 /// startup, then serve requests until shutdown. Every request gets exactly
-/// one response; failures abort the collective group first.
+/// one response; failures abort the collective group first. An ordinary
+/// error keeps the worker alive; a panic sends its error response and then
+/// exits the thread — rank death the pool supervisor detects and repairs
+/// by spawning a replacement rank (DESIGN.md §11).
 pub(crate) fn worker_main(
     dir: PathBuf,
     rank: usize,
     comm: Communicator,
+    fault: Option<Arc<FaultPlan>>,
     rx: Receiver<Req>,
     tx: Sender<Resp>,
 ) {
@@ -102,37 +123,45 @@ pub(crate) fn worker_main(
         theta_bufs: Vec::new(),
         params: None,
         fail_next: false,
+        fault,
+        fwd_steps: 0,
     };
     let mut packs: Vec<Option<Pack>> = Vec::new();
     while let Ok(req) = rx.recv() {
         if matches!(req, Req::Shutdown) {
             break;
         }
-        let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             handle(&rt, &mut st, &mut packs, req)
-        }))
-        .unwrap_or_else(|payload| {
-            // Preserve the panic message (e.g. a length-mismatch assert)
-            // so the surfaced error stays contextful, not just "panicked".
-            let msg = payload
-                .downcast_ref::<&str>()
-                .map(|s| s.to_string())
-                .or_else(|| payload.downcast_ref::<String>().cloned())
-                .unwrap_or_else(|| "unknown panic payload".into());
-            Err(anyhow!("worker panicked: {msg}"))
-        });
-        let resp = match out {
-            Ok(r) => r,
-            Err(e) => {
+        }));
+        let (resp, fatal) = match caught {
+            Ok(Ok(r)) => (r, false),
+            Ok(Err(e)) => {
                 let msg = format!("rank {rank}: {e:#}");
                 // Wake sibling ranks blocked in a collective before the
                 // coordinator even sees this error — no deadlock window.
                 st.comm.abort(msg.clone());
-                Resp::Err(msg)
+                (Resp::Err(msg), false)
+            }
+            Err(payload) => {
+                // Preserve the panic message (e.g. a length-mismatch
+                // assert) so the surfaced error stays contextful, not just
+                // "panicked".
+                let msg = payload
+                    .downcast_ref::<&str>()
+                    .map(|s| s.to_string())
+                    .or_else(|| payload.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "unknown panic payload".into());
+                let msg = format!("rank {rank}: worker panicked: {msg}");
+                st.comm.abort(msg.clone());
+                (Resp::Err(msg), true)
             }
         };
-        if tx.send(resp).is_err() {
-            break;
+        if tx.send(resp).is_err() || fatal {
+            // A panicked worker's runtime state is suspect: exit the
+            // thread so `join.is_finished()` reads true and the pool's
+            // supervisor replaces this rank with a fresh runtime.
+            return;
         }
     }
 }
@@ -234,6 +263,20 @@ fn handle<'r>(
             if st.fail_next {
                 st.fail_next = false;
                 bail!("injected failure (test hook)");
+            }
+            let step = st.fwd_steps;
+            st.fwd_steps += 1;
+            if let Some(plan) = &st.fault {
+                match plan.fire(st.rank, step, None) {
+                    None => {}
+                    Some(FaultKind::Slow(d)) => std::thread::sleep(d),
+                    Some(FaultKind::Err) => {
+                        bail!("injected fault (rank {}, forward step {step})", st.rank)
+                    }
+                    Some(FaultKind::Panic) => {
+                        panic!("injected fault (rank {}, forward step {step})", st.rank)
+                    }
+                }
             }
             let params =
                 st.params.clone().context("forward before parameters were published")?;

@@ -76,6 +76,13 @@ pub struct ExecStats {
     /// Keyed-cache hits: uploads skipped because the (key, generation)
     /// buffer was already device-resident.
     pub cache_hits: u64,
+    /// Rank workers replaced after death (rank-parallel pool supervision,
+    /// DESIGN.md §11). The runtime itself never sets this; the pool folds
+    /// it in when its stats are collected.
+    pub restarts: u64,
+    /// Time spent recovering the pool (respawn + collective reset + θ
+    /// republish). Pool-level, like `restarts`.
+    pub recovery_time: Duration,
 }
 
 impl ExecStats {
@@ -90,6 +97,8 @@ impl ExecStats {
         self.h2d_bytes += other.h2d_bytes;
         self.d2h_bytes += other.d2h_bytes;
         self.cache_hits += other.cache_hits;
+        self.restarts += other.restarts;
+        self.recovery_time += other.recovery_time;
     }
 
     /// Counter deltas accumulated since `earlier` (snapshot arithmetic for
@@ -105,6 +114,8 @@ impl ExecStats {
             h2d_bytes: self.h2d_bytes.saturating_sub(earlier.h2d_bytes),
             d2h_bytes: self.d2h_bytes.saturating_sub(earlier.d2h_bytes),
             cache_hits: self.cache_hits.saturating_sub(earlier.cache_hits),
+            restarts: self.restarts.saturating_sub(earlier.restarts),
+            recovery_time: self.recovery_time.saturating_sub(earlier.recovery_time),
         }
     }
 }

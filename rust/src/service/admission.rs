@@ -182,6 +182,15 @@ pub struct AdmissionSnapshot {
     pub max_wait_launches: u64,
     /// Launches fired by an explicit flush / end-of-stream.
     pub flush_launches: u64,
+    /// Jobs dropped reader-side because the bounded inbound queue was full
+    /// (TCP front door only; a subset of `rejected`).
+    pub queue_full_rejects: u64,
+    /// Packs that needed at least one full re-solve after a retryable
+    /// fault before succeeding or giving up (DESIGN.md §11).
+    pub retried_packs: u64,
+    /// Retryable solve faults absorbed across all packs (rank failures,
+    /// injected faults, collective aborts).
+    pub pack_faults: u64,
 }
 
 /// An open pack: jobs of one (scenario, bucket) waiting to launch.
@@ -234,6 +243,9 @@ pub struct Admitter {
     deadline_launches: u64,
     max_wait_launches: u64,
     flush_launches: u64,
+    queue_full_rejects: u64,
+    retried_packs: u64,
+    pack_faults: u64,
 }
 
 impl Admitter {
@@ -256,6 +268,9 @@ impl Admitter {
             deadline_launches: 0,
             max_wait_launches: 0,
             flush_launches: 0,
+            queue_full_rejects: 0,
+            retried_packs: 0,
+            pack_faults: 0,
         }
     }
 
@@ -448,6 +463,24 @@ impl Admitter {
         }
     }
 
+    /// Record one job dropped because a bounded inbound queue was full
+    /// (the TCP front door's reader-side reject, which never reaches
+    /// `submit`). Counts toward `rejected` like any backpressure refusal.
+    pub fn record_queue_full(&mut self) {
+        self.queue_full_rejects += 1;
+        self.rejected += 1;
+    }
+
+    /// Record one executed pack's fault-recovery tallies: `retries` full
+    /// re-solve attempts and `faults` retryable faults absorbed
+    /// (DESIGN.md §11). No-op for fault-free packs.
+    pub fn record_retries(&mut self, retries: u64, faults: u64) {
+        if retries > 0 {
+            self.retried_packs += 1;
+        }
+        self.pack_faults += faults;
+    }
+
     /// Jobs waiting in open packs right now.
     pub fn pending(&self) -> usize {
         self.open.values().map(|p| p.members.len()).sum()
@@ -485,6 +518,9 @@ impl Admitter {
             deadline_launches: self.deadline_launches,
             max_wait_launches: self.max_wait_launches,
             flush_launches: self.flush_launches,
+            queue_full_rejects: self.queue_full_rejects,
+            retried_packs: self.retried_packs,
+            pack_faults: self.pack_faults,
         }
     }
 
@@ -694,6 +730,24 @@ mod tests {
         assert_eq!(runs[0].members.len(), 2);
         assert_eq!(a.pending(), 1);
         assert!(a.flush_tenant(99).is_empty());
+    }
+
+    #[test]
+    fn fault_counters_accumulate_in_the_snapshot() {
+        let mut a = Admitter::new(manifest(), 1);
+        assert_eq!(a.snapshot().queue_full_rejects, 0);
+        a.record_queue_full();
+        a.record_queue_full();
+        let snap = a.snapshot();
+        assert_eq!(snap.queue_full_rejects, 2);
+        assert_eq!(snap.rejected, 2, "queue-full drops are backpressure rejects");
+
+        a.record_retries(0, 0); // fault-free pack: no-op
+        a.record_retries(2, 2); // pack that recovered after two faults
+        a.record_retries(1, 2); // pack that retried once, then failed again
+        let snap = a.snapshot();
+        assert_eq!(snap.retried_packs, 2);
+        assert_eq!(snap.pack_faults, 4);
     }
 
     #[test]

@@ -28,6 +28,11 @@
 //! * Streaming — finished packs push one [`JobEvent`] per job into a ready
 //!   queue drained by [`Service::poll`]; a pack-level solve failure becomes
 //!   contextful per-job error events, never a panic.
+//! * Fault tolerance (PR 7, DESIGN.md §11) — a pack that fails on a
+//!   *retryable* fault (rank death, collective abort, injected fault) is
+//!   re-solved whole, original ids and deadlines intact, up to `--retries`
+//!   times before any error event is emitted; retried solves are
+//!   bit-identical to fault-free runs because the engine is deterministic.
 //! * Warm caches — θ is published once per session; every pack after the
 //!   first skips the θ upload (`rust/tests/service.rs` pins it).
 //! * `batch::run_queue` stays a thin compatibility wrapper
@@ -47,6 +52,7 @@ pub use options::{LaunchPolicy, Options};
 
 use crate::batch::queue::{Job, JobOutcome, PackStat};
 use crate::batch::solve::{solve_pack_session, SessionState};
+use crate::collective::fault::FaultPlan;
 use crate::coordinator::engine::Engine;
 use crate::coordinator::fwd::ThetaCache;
 use crate::env::Scenario;
@@ -56,6 +62,7 @@ use crate::runtime::Runtime;
 use crate::util::json::Json;
 use anyhow::{Context, Result};
 use std::collections::VecDeque;
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Service-assigned job handle, monotonically numbered in admission order
@@ -132,6 +139,12 @@ pub struct PackDone {
     pub events: Vec<JobEvent>,
     /// Statistics for a successfully solved pack (None on failure/skip).
     pub stat: Option<PackStat>,
+    /// Full re-solve attempts this pack took after retryable faults
+    /// (0 on the fault-free path; DESIGN.md §11).
+    pub retries: usize,
+    /// Retryable faults absorbed while executing this pack (a final
+    /// retryable failure with no budget left still counts).
+    pub faults: usize,
 }
 
 /// The compute half of a service session: a warm θ cache plus the lazy
@@ -155,6 +168,11 @@ pub struct Executor<'r> {
     /// across packs: each rank re-uploads θ only when the session
     /// parameters change — i.e. never, after the first pack (DESIGN.md §9).
     pool: Option<RankPool>,
+    /// Unparsed `--fault-plan` spec for the session's rank pool; parsed
+    /// lazily at pool creation (so construction stays infallible — a bad
+    /// spec surfaces as per-job error events). `None` falls back to the
+    /// `OGGM_FAULT_PLAN` environment variable.
+    fault_spec: Option<String>,
 }
 
 impl<'r> Executor<'r> {
@@ -168,6 +186,7 @@ impl<'r> Executor<'r> {
             aborted: false,
             theta: ThetaCache::new(rt),
             pool: None,
+            fault_spec: None,
         }
     }
 
@@ -175,6 +194,13 @@ impl<'r> Executor<'r> {
     /// [`Service::fail_fast`].
     pub fn fail_fast(mut self, on: bool) -> Executor<'r> {
         self.abort_on_error = on;
+        self
+    }
+
+    /// Set the fault-injection plan spec (builder style; the `--fault-plan`
+    /// flag). `None` falls back to `OGGM_FAULT_PLAN`.
+    pub fn fault_plan(mut self, spec: Option<String>) -> Executor<'r> {
+        self.fault_spec = spec;
         self
     }
 
@@ -191,8 +217,19 @@ impl<'r> Executor<'r> {
         if self.cfg.engine.mode != Engine::RankParallel || self.pool.is_some() {
             return Ok(());
         }
-        let pool = RankPool::new(self.rt.manifest.dir.clone(), self.cfg.engine.p)
-            .context("starting the rank-parallel worker pool")?;
+        let plan = match &self.fault_spec {
+            Some(spec) => Some(Arc::new(
+                FaultPlan::parse(spec).context("parsing the --fault-plan spec")?,
+            )),
+            None => FaultPlan::from_env()?,
+        };
+        let pool = RankPool::new_with(
+            self.rt.manifest.dir.clone(),
+            self.cfg.engine.p,
+            self.cfg.max_rank_restarts,
+            plan,
+        )
+        .context("starting the rank-parallel worker pool")?;
         self.pool = Some(pool);
         Ok(())
     }
@@ -218,7 +255,7 @@ impl<'r> Executor<'r> {
                     result: Err("skipped: an earlier pack failed (fail-fast)".into()),
                 });
             }
-            return PackDone { events, stat: None };
+            return PackDone { events, stat: None, retries: 0, faults: 0 };
         }
         let mut meta = Vec::with_capacity(members.len());
         let mut graphs = Vec::with_capacity(members.len());
@@ -226,17 +263,48 @@ impl<'r> Executor<'r> {
             meta.push((m.job, m.id, m.graph.n, m.graph.m, m.tenant, m.submitted));
             graphs.push(m.graph);
         }
+        // Retry loop (DESIGN.md §11): a retryable fault — rank death, a
+        // collective abort, an injected fault — re-solves the whole pack
+        // with the original jobs, ids, and deadlines, up to `--retries`
+        // times, before any per-job error event is emitted. The solve
+        // engine is deterministic, so a retried solve is bit-identical to
+        // a fault-free run. Non-retryable errors (admission / shape /
+        // compile problems) fail on the first attempt.
+        let mut retries = 0usize;
+        let mut faults = 0usize;
         let res = match self.ensure_pool() {
             Err(e) => Err(e),
-            Ok(()) => solve_pack_session(
-                self.rt,
-                &self.cfg,
-                &self.params,
-                scenario,
-                graphs,
-                bucket,
-                SessionState { theta: Some(&self.theta), pool: self.pool.as_ref() },
-            ),
+            Ok(()) => loop {
+                // Clone the instances only while another attempt remains.
+                let attempt_graphs = if retries < self.cfg.retries {
+                    graphs.clone()
+                } else {
+                    std::mem::take(&mut graphs)
+                };
+                let attempt = solve_pack_session(
+                    self.rt,
+                    &self.cfg,
+                    &self.params,
+                    scenario,
+                    attempt_graphs,
+                    bucket,
+                    SessionState { theta: Some(&self.theta), pool: self.pool.as_ref() },
+                );
+                match attempt {
+                    Ok(r) => break Ok(r),
+                    Err(e) => {
+                        let retryable = retryable_fault(&format!("{e:#}"));
+                        if retryable {
+                            faults += 1;
+                            if retries < self.cfg.retries {
+                                retries += 1;
+                                continue;
+                            }
+                        }
+                        break Err(e);
+                    }
+                }
+            },
         };
         match res {
             Ok(res) => {
@@ -277,9 +345,10 @@ impl<'r> Executor<'r> {
                     sim_time: res.sim_total,
                     wall_time: res.wall_total,
                     comm_bytes: res.timing.comm_bytes,
+                    retries,
                     exec: res.exec,
                 };
-                PackDone { events, stat: Some(stat) }
+                PackDone { events, stat: Some(stat), retries, faults }
             }
             Err(e) => {
                 if self.abort_on_error {
@@ -296,10 +365,29 @@ impl<'r> Executor<'r> {
                         result: Err(msg.clone()),
                     });
                 }
-                PackDone { events, stat: None }
+                PackDone { events, stat: None, retries, faults }
             }
         }
     }
+}
+
+/// Whether a pack-level solve error is worth a full re-solve: rank and
+/// worker failures, collective aborts, and injected faults are transient —
+/// the pool replaces dead ranks and resets the collective group on the
+/// next install. Admission, shape, and compilation errors are not
+/// (retrying them would burn device time on a deterministic failure).
+fn retryable_fault(msg: &str) -> bool {
+    const MARKERS: &[&str] = &[
+        "injected fault",
+        "injected panic",
+        "aborted by rank",
+        "panicked",
+        "worker thread died",
+        "worker is gone",
+        "restart budget exhausted",
+        "replacement rank",
+    ];
+    MARKERS.iter().any(|m| msg.contains(m))
 }
 
 impl Drop for Executor<'_> {
@@ -332,6 +420,7 @@ impl<'r> Service<'r> {
         svc.adm.set_launch(opts.launch);
         svc.adm.set_max_wait(opts.max_wait);
         svc.adm.set_quota(opts.quota);
+        svc.exec.fault_spec = opts.fault_plan.clone();
         svc
     }
 
@@ -486,6 +575,7 @@ impl<'r> Service<'r> {
     fn run_packs(&mut self, runs: Vec<PackRun>) {
         for run in runs {
             let done = self.exec.run(run);
+            self.adm.record_retries(done.retries as u64, done.faults as u64);
             for ev in &done.events {
                 self.adm.complete(ev.tenant, 1);
             }
@@ -553,5 +643,25 @@ mod tests {
     fn job_id_is_the_admission_index() {
         assert_eq!(JobId(3).index(), 3);
         assert_eq!(format!("{}", JobId(3)), "#3");
+    }
+
+    #[test]
+    fn fault_classification_separates_transient_from_permanent() {
+        for msg in [
+            "rank-parallel forward failed: injected fault at all_reduce(deposit) (rank 1, phase 3)",
+            "install pack failed: collective aborted by rank 1: boom",
+            "rank 1: worker panicked: injected panic",
+            "rank 0: worker thread died",
+            "2 dead rank(s) after 2 replacement round(s): per-pack restart budget exhausted",
+        ] {
+            assert!(retryable_fault(msg), "should be retryable: {msg}");
+        }
+        for msg in [
+            "job 'a' (|V|=500) not admitted: no compiled bucket fits",
+            "loading stage q_scores_b4_n24: no such artifact",
+            "pack has 2 shards but the pool has 4 ranks",
+        ] {
+            assert!(!retryable_fault(msg), "should not be retryable: {msg}");
+        }
     }
 }

@@ -94,9 +94,20 @@ pub struct Options {
     /// with backpressure instead of buffered without limit.
     pub queue_cap: usize,
     /// Stop accepting after this many connections, then exit once they
-    /// drain (None = serve until killed). Smoke tests and benches use it
-    /// for deterministic shutdown.
+    /// drain (None = serve until killed — or until a `{"op":"drain"}`
+    /// request / SIGTERM triggers the graceful drain, DESIGN.md §11).
+    /// Smoke tests and benches use it for deterministic shutdown.
     pub max_conns: Option<usize>,
+    /// Full pack re-solve attempts after a retryable fault before per-job
+    /// errors are emitted (`--retries`, DESIGN.md §11).
+    pub retries: usize,
+    /// Per-pack rank-replacement budget for the rank-parallel pool
+    /// (`--max-rank-restarts`, DESIGN.md §11).
+    pub max_rank_restarts: usize,
+    /// Deterministic fault-injection script (`--fault-plan`, DESIGN.md
+    /// §11), e.g. `rank=1,step=3,kind=panic`; None = also honor the
+    /// `OGGM_FAULT_PLAN` environment variable where pools are created.
+    pub fault_plan: Option<String>,
 }
 
 impl Default for Options {
@@ -122,6 +133,9 @@ impl Default for Options {
             quota: None,
             queue_cap: 256,
             max_conns: None,
+            retries: 1,
+            max_rank_restarts: crate::parallel::DEFAULT_MAX_RANK_RESTARTS,
+            fault_plan: None,
         }
     }
 }
@@ -168,6 +182,9 @@ impl Options {
         o.quota = args.get("quota").map(|_| args.get_usize("quota", 64));
         o.queue_cap = args.get_usize("queue-cap", o.queue_cap);
         o.max_conns = args.get("max-conns").map(|_| args.get_usize("max-conns", 1));
+        o.retries = args.get_usize("retries", o.retries);
+        o.max_rank_restarts = args.get_usize("max-rank-restarts", o.max_rank_restarts);
+        o.fault_plan = args.get("fault-plan").map(|s| s.to_string());
         Ok(o)
     }
 
@@ -261,6 +278,26 @@ impl Options {
         self
     }
 
+    /// Set the pack retry budget (re-solve attempts after retryable
+    /// faults).
+    pub fn retries(mut self, n: usize) -> Options {
+        self.retries = n;
+        self
+    }
+
+    /// Set the per-pack rank-replacement budget.
+    pub fn max_rank_restarts(mut self, n: usize) -> Options {
+        self.max_rank_restarts = n;
+        self
+    }
+
+    /// Set a deterministic fault-injection script (see
+    /// [`crate::collective::fault`] for the grammar).
+    pub fn fault_plan(mut self, plan: impl Into<String>) -> Options {
+        self.fault_plan = Some(plan.into());
+        self
+    }
+
     /// The seed, or the calling subcommand's historical default (train 1,
     /// infer 2, solve 3, batch/serve 4 — distinct so their RNG streams
     /// never alias).
@@ -298,6 +335,8 @@ impl From<&Options> for BatchCfg {
             compact: o.compact,
             device_resident: o.device_resident,
             storage: o.storage,
+            retries: o.retries,
+            max_rank_restarts: o.max_rank_restarts,
         }
     }
 }
@@ -391,6 +430,26 @@ mod tests {
         assert_eq!(o.quota, None);
         assert_eq!(o.queue_cap, 256);
         assert_eq!(o.max_conns, None);
+    }
+
+    #[test]
+    fn fault_tolerance_knobs_parse_and_lower() {
+        let o = Options::from_args(&parse(
+            "--retries 3 --max-rank-restarts 5 --fault-plan rank=1,step=0,kind=panic",
+        ))
+        .unwrap();
+        assert_eq!(o.retries, 3);
+        assert_eq!(o.max_rank_restarts, 5);
+        assert_eq!(o.fault_plan.as_deref(), Some("rank=1,step=0,kind=panic"));
+        let b = BatchCfg::from(&o);
+        assert_eq!(b.retries, 3);
+        assert_eq!(b.max_rank_restarts, 5);
+        // Defaults: one retry, the pool's stock restart budget, no plan.
+        let o = Options::from_args(&parse("")).unwrap();
+        assert_eq!(o.retries, 1);
+        assert_eq!(o.max_rank_restarts, crate::parallel::DEFAULT_MAX_RANK_RESTARTS);
+        assert!(o.fault_plan.is_none());
+        assert_eq!(BatchCfg::from(&o).retries, 1);
     }
 
     #[test]

@@ -1,0 +1,141 @@
+//! Fault-tolerance invariants (ISSUE 7 acceptance):
+//!  - with a deterministic injected rank failure mid-pack
+//!    (`--fault-plan`), the session's rank pool replaces the dead rank
+//!    and the retried pack's solutions are **bit-identical** to a
+//!    fault-free run — dense and sparse, P in {2, 4};
+//!  - the retry is visible in the books: `PackStat::retries`, the pool's
+//!    restart counters, and the admission snapshot's `retried_packs` /
+//!    `pack_faults`;
+//!  - a non-fatal injected worker error (kind=err) retries the pack
+//!    without needing a rank replacement.
+//!
+//! Runtime-dependent tests skip when artifacts are not built (same
+//! convention as service.rs / parallel_equivalence.rs). Fault plans are
+//! passed through `Options::fault_plan` — never the environment — so
+//! concurrent tests cannot contaminate each other.
+
+#[path = "../benches/common.rs"]
+mod common;
+
+use common::mixed_jobs;
+use oggm::batch::{run_queue, BatchCfg, Job};
+use oggm::coordinator::engine::Engine;
+use oggm::coordinator::shard::Storage;
+use oggm::model::Params;
+use oggm::runtime::Runtime;
+use oggm::service::{Options, Service};
+use oggm::util::rng::Pcg32;
+
+fn setup() -> Option<Runtime> {
+    if !std::path::Path::new("artifacts/manifest.tsv").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(Runtime::new("artifacts").unwrap())
+}
+
+fn has_batch_shapes(rt: &Runtime, bucket: usize, p: usize, b: usize) -> bool {
+    let ok = rt.manifest.batch_sizes(bucket, bucket / p).last().copied().unwrap_or(0) >= b;
+    if !ok {
+        eprintln!("skipping: no compiled batch-{b} shapes at N={bucket}, P={p}");
+    }
+    ok
+}
+
+/// The shared scaffold: solve `jobs` fault-free with `run_queue`, then
+/// again through a `Service` with `plan` injected and retries enabled;
+/// assert every outcome is bit-identical and return the faulted service
+/// for counter assertions.
+fn assert_faulted_run_matches<'r>(
+    rt: &'r Runtime,
+    jobs: &[Job],
+    p: usize,
+    storage: Storage,
+    plan: &str,
+) -> Service<'r> {
+    let params = Params::init(32, &mut Pcg32::seeded(41));
+    let opts = Options::new().p(p).engine(Engine::RankParallel).storage(storage);
+    let reference = run_queue(rt, &BatchCfg::from(&opts), &params, jobs).unwrap();
+
+    let faulted = opts.retries(2).max_rank_restarts(2).fault_plan(plan);
+    let mut svc = Service::new(rt, params, &faulted);
+    for job in jobs.iter().cloned() {
+        svc.submit(job).unwrap();
+    }
+    let events = svc.drain();
+    assert_eq!(events.len(), jobs.len(), "P={p} {storage:?} [{plan}]: event count");
+    for ev in events {
+        let got = ev.result.unwrap_or_else(|e| {
+            panic!("P={p} {storage:?} [{plan}]: job failed despite retry budget: {e}")
+        });
+        let want = reference.outcomes.iter().find(|o| o.id == got.id).expect("unknown job id");
+        assert_eq!(
+            got.solution, want.solution,
+            "P={p} {storage:?} [{plan}] job {}: retried solution diverged from fault-free run",
+            got.id
+        );
+        assert_eq!(got.solution_size, want.solution_size, "job {}", got.id);
+        assert_eq!(got.objective, want.objective, "job {}", got.id);
+        assert_eq!(got.valid, want.valid, "job {}", got.id);
+        assert_eq!(got.evaluations, want.evaluations, "job {}", got.id);
+        assert_eq!(got.selections, want.selections, "job {}", got.id);
+    }
+    svc
+}
+
+#[test]
+fn injected_rank_panic_is_replaced_and_retried_bit_identical() {
+    let Some(rt) = setup() else { return };
+    let jobs = mixed_jobs(9, 0x5E);
+    for p in [2usize, 4] {
+        if !has_batch_shapes(&rt, 24, p, 4) {
+            continue;
+        }
+        for storage in [Storage::Dense, Storage::Sparse] {
+            if storage == Storage::Sparse
+                && [1usize, 2, 4].iter().any(|&b| rt.manifest.sparse_config(b, 24 / p, 32).is_err())
+            {
+                eprintln!("skipping sparse arm: sparse artifacts not compiled at N=24, P={p}");
+                continue;
+            }
+            // Rank 1 panics at its second forward step: mid-pack, after
+            // real work started. One-shot, so exactly one pack is hit.
+            let svc =
+                assert_faulted_run_matches(&rt, &jobs, p, storage, "rank=1,step=1,kind=panic");
+
+            let packs = svc.packs();
+            let retried: usize = packs.iter().map(|s| s.retries).sum();
+            assert!(retried >= 1, "P={p} {storage:?}: no pack recorded a retry");
+            let restarts: u64 = packs.iter().map(|s| s.exec.restarts).sum();
+            assert!(restarts >= 1, "P={p} {storage:?}: the dead rank was never replaced");
+            assert!(
+                packs.iter().any(|s| s.exec.recovery_time.as_nanos() > 0),
+                "P={p} {storage:?}: recovery time not recorded"
+            );
+            let snap = svc.admission();
+            assert!(snap.retried_packs >= 1, "P={p} {storage:?}: {snap:?}");
+            assert!(snap.pack_faults >= 1, "P={p} {storage:?}: {snap:?}");
+        }
+    }
+}
+
+#[test]
+fn injected_worker_error_retries_without_rank_replacement() {
+    let Some(rt) = setup() else { return };
+    let jobs = mixed_jobs(6, 0x2B);
+    let p = 2;
+    if !has_batch_shapes(&rt, 24, p, 4) {
+        return;
+    }
+    // kind=err aborts the collective round but the worker thread survives:
+    // the pack retries on the SAME ranks, no replacement spawned.
+    let svc = assert_faulted_run_matches(&rt, &jobs, p, Storage::Dense, "rank=1,step=0,kind=err");
+    let packs = svc.packs();
+    assert!(packs.iter().map(|s| s.retries).sum::<usize>() >= 1, "no pack recorded a retry");
+    assert_eq!(
+        packs.iter().map(|s| s.exec.restarts).sum::<u64>(),
+        0,
+        "a surviving worker must not be replaced"
+    );
+    assert!(svc.admission().pack_faults >= 1);
+}

@@ -74,7 +74,7 @@ fn echo_done(run: PackRun) -> PackDone {
             }),
         })
         .collect();
-    PackDone { events, stat: None }
+    PackDone { events, stat: None, retries: 0, faults: 0 }
 }
 
 #[test]
@@ -231,6 +231,87 @@ fn deadline_launches_with_no_client_traffic() {
     let summary = server.join().unwrap();
     assert_eq!(summary.snapshot.deadline_launches, 1);
     assert_eq!(summary.snapshot.launched, 1);
+}
+
+#[test]
+fn graceful_drain_under_live_traffic() {
+    let manifest = test_manifest("drain");
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let (started_tx, started_rx) = mpsc::channel::<usize>();
+    let (gate_tx, gate_rx) = mpsc::channel::<()>();
+    // NO max_conns: without the drain request this server would run
+    // forever — exiting at all is the property under test.
+    let opts = Options::new().quota(64);
+    let server = thread::spawn(move || {
+        serve_with(
+            listener,
+            manifest,
+            &opts,
+            Box::new(move |run: PackRun| {
+                started_tx.send(run.pack).unwrap();
+                gate_rx.recv().unwrap();
+                echo_done(run)
+            }),
+        )
+        .unwrap()
+    });
+
+    let mut sock = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(sock.try_clone().unwrap());
+    // Pack 0 fills (capacity 4) and launches into the gated solver; two
+    // more jobs sit pending in the open pack when the drain arrives.
+    for i in 0..4 {
+        writeln!(sock, "gen er n=20 seed={i} id=a{i}").unwrap();
+    }
+    sock.flush().unwrap();
+    assert_eq!(started_rx.recv().unwrap(), 0, "pack 0 did not launch");
+    writeln!(sock, "gen er n=20 seed=10 id=b0").unwrap();
+    writeln!(sock, "gen er n=20 seed=11 id=b1").unwrap();
+    writeln!(sock, "{{\"op\":\"drain\"}}").unwrap();
+    // A job arriving after the drain request must get a terminal error
+    // line, not silence (exactly one line per request, always).
+    writeln!(sock, "gen er n=20 seed=12 id=late").unwrap();
+    sock.flush().unwrap();
+
+    // The drain ack reports the work still owed: 2 pending (open pack,
+    // flushed by the drain), 4 in flight (gated pack 0).
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let ack = Json::parse(line.trim()).unwrap();
+    assert_eq!(ack.get("op").unwrap().as_str(), Some("drain"), "{line}");
+    assert_eq!(ack.get("draining").unwrap().as_bool(), Some(true), "{line}");
+    assert_eq!(ack.get("pending").unwrap().as_u64(), Some(2), "{line}");
+    assert_eq!(ack.get("in_flight").unwrap().as_u64(), Some(4), "{line}");
+
+    // Release both packs only now — every admitted job must still stream
+    // exactly one outcome before the server exits.
+    gate_tx.send(()).unwrap();
+    gate_tx.send(()).unwrap();
+
+    // The client never closes its side: the DRAIN ends the connection.
+    let mut ids = Vec::new();
+    for line in reader.lines() {
+        let line = line.unwrap();
+        let j = Json::parse(&line).unwrap();
+        let id = j.get("id").unwrap().as_str().unwrap().to_string();
+        if id == "late" {
+            let err = j.get("error").unwrap().as_str().unwrap();
+            assert!(err.contains("draining"), "{line}");
+        } else {
+            assert!(j.get("error").is_none(), "unexpected error line: {line}");
+        }
+        ids.push(id);
+    }
+    assert_eq!(ids, ["late", "a0", "a1", "a2", "a3", "b0", "b1"]);
+
+    let summary = server.join().unwrap();
+    assert!(summary.drained, "summary must record the drain exit");
+    assert_eq!(summary.jobs, 7);
+    assert_eq!(summary.failed, 1, "only the post-drain job fails");
+    assert_eq!(summary.snapshot.in_flight, 0);
+    assert_eq!(summary.snapshot.pending, 0);
+    assert_eq!(summary.snapshot.launched, 2, "the open pack flushed on drain");
 }
 
 #[test]

@@ -260,6 +260,49 @@ fn failing_rank_errors_without_deadlock() {
 }
 
 #[test]
+fn scripted_rank_panic_is_replaced_within_budget() {
+    // The ISSUE 7 supervision path end to end at the pool level: a
+    // FaultPlan kills rank 1 mid-forward (real rank death, not the
+    // cooperative inject_failure hook); the error is contextful, the next
+    // install spawns a replacement rank, restart counters tick, and the
+    // replaced pool reproduces the pre-fault scores exactly.
+    let Some(rt) = runtime() else { return };
+    let g = generators::erdos_renyi(20, 0.25, &mut Pcg32::seeded(85));
+    let params = Params::init(32, &mut Pcg32::seeded(86));
+    for p in [2usize, 4] {
+        let plan = oggm::collective::fault::FaultPlan::parse("rank=1,step=1,kind=panic").unwrap();
+        let pool = match RankPool::new_with("artifacts", p, 2, Some(std::sync::Arc::new(plan))) {
+            Ok(pool) => pool,
+            Err(e) => {
+                eprintln!("skipping: rank pool unavailable: {e:#}");
+                return;
+            }
+        };
+        let part = Partition::new(24, p);
+        let cfg = EngineCfg::new(p, 2);
+        let mut set = fresh_set(&rt, Storage::Dense, part, &g).unwrap();
+        pool.install(0, &params, &mut set, true).unwrap();
+        // Step 0 is clean; the scripted panic fires at step 1.
+        let ok = pool.forward(0, &cfg, &set, false, true).unwrap();
+        let err = pool.forward(0, &cfg, &set, false, true).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("injected") || msg.contains("rank 1") || msg.contains("panicked"),
+            "P={p}: uncontextful fault error: {msg}"
+        );
+        // The supervisor replaces the dead rank on the next install and
+        // the pool solves on — bit-identically.
+        let mut set2 = fresh_set(&rt, Storage::Dense, part, &g).unwrap();
+        pool.install(0, &params, &mut set2, true).unwrap();
+        let again = pool.forward(0, &cfg, &set2, false, true).unwrap();
+        assert_eq!(again.scores, ok.scores, "P={p}: replacement rank diverges");
+        let (restarts, recovery) = pool.restart_stats();
+        assert!(restarts >= 1, "P={p}: no restart recorded");
+        assert!(recovery.as_nanos() > 0, "P={p}: no recovery time recorded");
+    }
+}
+
+#[test]
 fn rank_training_matches_lockstep() {
     // End-to-end training: rank-parallel minibatch fwd/bwd + gradient
     // all-reduce must land on the lockstep parameters (fp tolerance, same

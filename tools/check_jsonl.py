@@ -14,6 +14,8 @@ Schema (README §serve): one JSON object per line.
   queue full).
 * Stats lines ({"op": "stats", "stats": {...}}) answer a client stats
   probe with numeric counters.
+* Drain acks ({"op": "drain", "draining": true, "pending": N,
+  "in_flight": M}) answer a graceful-drain request.
 
 Exits non-zero on any malformed line, schema violation, invalid solution
 flag, error line (unless --allow-errors: the TCP smoke without artifacts
@@ -89,7 +91,7 @@ def main():
         print(f"check_jsonl: {path} does not exist", file=sys.stderr)
         sys.exit(1)
 
-    outcomes = errors = rejects = stats_lines = 0
+    outcomes = errors = rejects = stats_lines = drain_lines = 0
     for lineno, raw in enumerate(path.read_text().splitlines(), start=1):
         if not raw.strip():
             fail(lineno, "blank line in JSONL stream")
@@ -102,6 +104,14 @@ def main():
         if obj.get("op") == "stats":
             check_stats(lineno, obj)
             stats_lines += 1
+            continue
+        if obj.get("op") == "drain":
+            if obj.get("draining") is not True:
+                fail(lineno, "drain ack missing 'draining': true")
+            for key in ("pending", "in_flight"):
+                if not isinstance(obj.get(key), (int, float)) or isinstance(obj.get(key), bool):
+                    fail(lineno, f"drain ack '{key}' is not numeric: {obj.get(key)!r}")
+            drain_lines += 1
             continue
         if not isinstance(obj.get("id"), str) or not obj["id"]:
             fail(lineno, "missing/empty 'id'")
@@ -166,6 +176,7 @@ def main():
     extra = f", {errors} error lines" if errors else ""
     extra += f", {rejects} rejects" if rejects else ""
     extra += f", {stats_lines} stats lines" if stats_lines else ""
+    extra += f", {drain_lines} drain acks" if drain_lines else ""
     print(f"check_jsonl: OK ({outcomes} outcomes{extra})")
 
 

@@ -1,20 +1,22 @@
 #!/usr/bin/env python3
 """Minimal TCP client for the `oggm serve --listen` smoke (CI).
 
-Usage: serve_client.py HOST:PORT [--jobs N] [--stats] [--out FILE]
+Usage: serve_client.py HOST:PORT [--jobs N] [--stats] [--drain] [--out FILE]
                        [--expect-errors] [--connect-timeout SECS]
 
 Connects (retrying while the server starts up), sends N newline-delimited
 job requests (the same grammar `oggm serve` reads from files), optionally
-a {"op": "stats"} probe, half-closes the write side, and reads the JSONL
-response stream to EOF. Validates that:
+a {"op": "stats"} probe and/or a {"op": "drain"} request, half-closes the
+write side (unless --drain: a graceful drain must end the connection with
+NO client-side close), and reads the JSONL response stream to EOF.
+Validates that:
 
 * exactly one response line arrives per job, ids matching what was sent;
 * responses are outcomes (or, with --expect-errors, error lines — the
   degraded no-artifacts mode where the solver runtime fails to start but
   the network front door still answers every job);
-* a stats line arrives iff --stats was sent;
-* the server closes the connection cleanly after EOF (clean shutdown).
+* a stats line arrives iff --stats was sent, a drain ack iff --drain;
+* the server closes the connection cleanly (clean shutdown / drain).
 
 Writes the raw stream to --out (default stdout) for deeper schema checks
 via check_jsonl.py. Exits non-zero on any violation.
@@ -34,7 +36,14 @@ def fail(msg):
 
 
 def parse_args(argv):
-    opts = {"jobs": 6, "stats": False, "out": None, "expect_errors": False, "timeout": 20.0}
+    opts = {
+        "jobs": 6,
+        "stats": False,
+        "drain": False,
+        "out": None,
+        "expect_errors": False,
+        "timeout": 20.0,
+    }
     positional = []
     i = 0
     while i < len(argv):
@@ -44,6 +53,9 @@ def parse_args(argv):
             i += 2
         elif a == "--stats":
             opts["stats"] = True
+            i += 1
+        elif a == "--drain":
+            opts["drain"] = True
             i += 1
         elif a == "--out":
             opts["out"] = argv[i + 1]
@@ -90,10 +102,15 @@ def main():
         )
     if opts["stats"]:
         lines.append('{"op": "stats"}\n')
+    if opts["drain"]:
+        lines.append('{"op": "drain"}\n')
     sock.sendall("".join(lines).encode())
-    # Half-close: end-of-stream flushes our open packs server-side and (with
-    # --max-conns 1) lets the server exit once everything drains.
-    sock.shutdown(socket.SHUT_WR)
+    if not opts["drain"]:
+        # Half-close: end-of-stream flushes our open packs server-side and
+        # (with --max-conns 1) lets the server exit once everything drains.
+        sock.shutdown(socket.SHUT_WR)
+    # With --drain the write side stays OPEN: the graceful drain itself
+    # must flush our packs, stream every outcome, and close the socket.
 
     raw = b""
     while True:
@@ -110,7 +127,7 @@ def main():
     else:
         sys.stdout.write(text)
 
-    got_ids, stats_lines, error_lines, outcome_lines = [], 0, 0, 0
+    got_ids, stats_lines, drain_lines, error_lines, outcome_lines = [], 0, 0, 0, 0
     for lineno, line in enumerate(text.splitlines(), start=1):
         try:
             obj = json.loads(line)
@@ -118,6 +135,11 @@ def main():
             fail(f"response line {lineno} is not JSON: {e}")
         if obj.get("op") == "stats":
             stats_lines += 1
+            continue
+        if obj.get("op") == "drain":
+            if obj.get("draining") is not True:
+                fail(f"drain ack line {lineno} missing 'draining': true: {line}")
+            drain_lines += 1
             continue
         if not isinstance(obj.get("id"), str):
             fail(f"response line {lineno} has no id: {line}")
@@ -131,13 +153,16 @@ def main():
         fail(f"sent ids {sent_ids}, got {sorted(got_ids)}")
     if stats_lines != (1 if opts["stats"] else 0):
         fail(f"expected {'one' if opts['stats'] else 'no'} stats line, got {stats_lines}")
+    if drain_lines != (1 if opts["drain"] else 0):
+        fail(f"expected {'one' if opts['drain'] else 'no'} drain ack, got {drain_lines}")
     if opts["expect_errors"]:
         if outcome_lines:
             fail(f"{outcome_lines} outcome lines where only errors were expected")
     elif error_lines:
         fail(f"{error_lines} jobs came back as errors")
     kind = "error lines (degraded mode)" if opts["expect_errors"] else "outcomes"
-    print(f"serve_client: OK — {len(got_ids)} {kind}, clean EOF", file=sys.stderr)
+    how = "drained" if opts["drain"] else "clean EOF"
+    print(f"serve_client: OK — {len(got_ids)} {kind}, {how}", file=sys.stderr)
 
 
 if __name__ == "__main__":
