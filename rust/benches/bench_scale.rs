@@ -1,0 +1,263 @@
+//! bench_scale: the paper-scale graph pipeline end to end — RMAT
+//! generation, streaming SNAP/MatrixMarket I/O round-trips, shard-by-shard
+//! streaming partitioning with DESIGN.md §7 resident-byte accounting, and
+//! classical solution quality at scale.
+//!
+//! Full mode builds a ~30M-edge RMAT graph (the paper's §6 large-instance
+//! regime). Fast/check mode (`OGGM_FAST=1` or `--check`) builds a
+//! ~1M-edge smoke whose MatrixMarket file (`scale_smoke.mtx`) is kept in
+//! the working directory as the CI eval-smoke input. The streaming-memory
+//! assertions run in both modes: partition views must stay O(E/P + NI)
+//! resident — never the dense 4·B·NI·N wall. Emits BENCH_scale.json
+//! (field reference in README.md).
+//!
+//! The engine section (dense-vs-sparse storage × lockstep-vs-rank-parallel
+//! execution on small packed graphs) needs compiled artifacts; without
+//! them it prints a notice and the bench still exits 0 (check mode OK).
+
+#[path = "common.rs"]
+mod common;
+
+use oggm::batch::{run_queue, BatchCfg, Job};
+use oggm::coordinator::engine::Engine;
+use oggm::coordinator::shard::Storage;
+use oggm::env::Scenario;
+use oggm::graph::{generators, io as gio, Graph, Partition};
+use oggm::solvers::{self, verify};
+use oggm::util::json::Json;
+use oggm::util::rng::Pcg32;
+use std::path::PathBuf;
+use std::time::Instant;
+
+/// CSR resident bytes of the loaded graph: row_ptr + col_idx.
+fn csr_bytes(g: &Graph) -> usize {
+    (g.n + 1) * std::mem::size_of::<usize>() + 2 * g.m * std::mem::size_of::<u32>()
+}
+
+fn main() {
+    let fast = common::fast_mode() || std::env::args().any(|a| a == "--check");
+    // Fast: 2^17 nodes, ~1M target edges. Full: 2^21 nodes, ~34M.
+    let (scale, ef) = if fast { (17u32, 8usize) } else { (21u32, 16usize) };
+    let mut rng = Pcg32::seeded(0x5CA1E);
+    let t = Instant::now();
+    let g = generators::rmat(scale, ef, &mut rng);
+    let gen_s = t.elapsed().as_secs_f64();
+    println!(
+        "bench_scale[{}]: rmat(scale={scale}, ef={ef}) -> |V|={} |E|={} in {gen_s:.2}s \
+         ({} B resident CSR)",
+        if fast { "fast" } else { "full" },
+        g.n,
+        g.m,
+        csr_bytes(&g)
+    );
+
+    let mut json = Json::obj()
+        .set("bench", "scale")
+        .set("mode", if fast { "fast" } else { "full" })
+        .set("scale", scale as usize)
+        .set("edge_factor", ef)
+        .set("nodes", g.n)
+        .set("edges", g.m)
+        .set("gen_s", gen_s)
+        .set("csr_bytes", csr_bytes(&g));
+
+    // --- Streaming I/O round-trips (SNAP edge list + MatrixMarket). ---
+    // The fast-mode .mtx stays in the working directory: CI's eval smoke
+    // reads it back through `oggm eval --graph scale_smoke.mtx`.
+    let mtx_path = if fast {
+        PathBuf::from("scale_smoke.mtx")
+    } else {
+        std::env::temp_dir().join("oggm_scale.mtx")
+    };
+    let t = Instant::now();
+    gio::write_mtx(&mtx_path, &g).expect("write mtx");
+    let mtx_write_s = t.elapsed().as_secs_f64();
+    let t = Instant::now();
+    let g2 = gio::read_mtx(&mtx_path).expect("read mtx");
+    let mtx_read_s = t.elapsed().as_secs_f64();
+    assert_eq!(g2, g, "MatrixMarket round-trip must be exact");
+    if !fast {
+        let _ = std::fs::remove_file(&mtx_path);
+    }
+
+    let el_path = std::env::temp_dir().join("oggm_scale.edges");
+    let t = Instant::now();
+    gio::write_edge_list(&el_path, &g).expect("write edge list");
+    let el_write_s = t.elapsed().as_secs_f64();
+    let t = Instant::now();
+    let g3 = gio::read_edge_list(&el_path).expect("read edge list");
+    let el_read_s = t.elapsed().as_secs_f64();
+    // Edge lists carry no isolated nodes and renumber by first appearance:
+    // the edge count survives exactly, the node count only shrinks.
+    assert_eq!(g3.m, g.m, "edge-list round-trip lost edges");
+    assert!(g3.n <= g.n);
+    let _ = std::fs::remove_file(&el_path);
+    println!(
+        "bench_scale: io mtx w {mtx_write_s:.2}s r {mtx_read_s:.2}s | \
+         edges w {el_write_s:.2}s r {el_read_s:.2}s"
+    );
+    json = json.set(
+        "io",
+        Json::obj()
+            .set("mtx_path", mtx_path.to_string_lossy().as_ref())
+            .set("mtx_write_s", mtx_write_s)
+            .set("mtx_read_s", mtx_read_s)
+            .set("edges_write_s", el_write_s)
+            .set("edges_read_s", el_read_s),
+    );
+
+    // --- Streaming partitioning: resident bytes per DESIGN.md §7. ---
+    // Shard views must account to exactly the CSR the loader built (plus
+    // one row_ptr sentinel per shard) — partitioning a 30M-edge graph
+    // never materializes a dense NI×N wall or a per-shard edge copy.
+    let mut part_rows: Vec<Json> = Vec::new();
+    for p in [1usize, 2, 4] {
+        let part = Partition::new(g.n, p);
+        let t = Instant::now();
+        let (mut rows, mut entries, mut resident) = (0usize, 0usize, 0usize);
+        for sv in part.shard_views(&g) {
+            rows += sv.rows;
+            entries += sv.entries();
+            resident += sv.resident_bytes();
+        }
+        let stream_s = t.elapsed().as_secs_f64();
+        assert_eq!(rows, g.n);
+        assert_eq!(entries, 2 * g.m);
+        assert_eq!(
+            resident,
+            csr_bytes(&g) + (p - 1) * std::mem::size_of::<usize>(),
+            "shard views must stay O(E/P + NI) resident"
+        );
+        let dense = 4 * part.ni() * part.n * p;
+        let reduction = dense as f64 / resident as f64;
+        assert!(
+            reduction > 100.0,
+            "streaming partition should beat dense storage by >100x at scale \
+             (got {reduction:.1}x)"
+        );
+        println!(
+            "bench_scale: P={p} streamed {entries} entries in {stream_s:.3}s, \
+             resident {resident} B vs dense {dense} B ({reduction:.0}x)"
+        );
+        part_rows.push(
+            Json::obj()
+                .set("p", p)
+                .set("resident_bytes", resident)
+                .set("dense_bytes", dense)
+                .set("reduction", reduction)
+                .set("stream_s", stream_s),
+        );
+    }
+    json = json.set("partition", Json::Arr(part_rows));
+
+    // --- Classical solution quality at scale (exact is out of reach; the
+    // maximal-matching half of the 2-approx is a true lower bound). ---
+    let t = Instant::now();
+    let greedy = solvers::greedy_mvc(&g);
+    let greedy_s = t.elapsed().as_secs_f64();
+    assert!(verify::is_vertex_cover(&g, &greedy), "greedy cover infeasible");
+    let greedy_size = greedy.iter().filter(|&&b| b).count();
+
+    let t = Instant::now();
+    let approx = solvers::two_approx_mvc(&g);
+    let approx_s = t.elapsed().as_secs_f64();
+    assert!(verify::is_vertex_cover(&g, &approx), "2-approx cover infeasible");
+    let approx_size = approx.iter().filter(|&&b| b).count();
+
+    let t = Instant::now();
+    let mis = solvers::greedy_mis(&g);
+    let mis_s = t.elapsed().as_secs_f64();
+    assert!(verify::is_independent_set(&g, &mis), "greedy MIS not independent");
+    let mis_size = mis.iter().filter(|&&b| b).count();
+
+    // |matching| = |2-approx|/2 ≤ OPT, so this bounds greedy's true ratio.
+    let lb = (approx_size / 2).max(1);
+    let greedy_ratio_ub = greedy_size as f64 / lb as f64;
+    assert!(
+        greedy_ratio_ub <= 3.0,
+        "greedy MVC ratio bound {greedy_ratio_ub:.2} blew past 3.0"
+    );
+    println!(
+        "bench_scale: greedy MVC {greedy_size} ({greedy_s:.2}s, ratio <= {greedy_ratio_ub:.2}), \
+         2-approx {approx_size} ({approx_s:.2}s), greedy MIS {mis_size} ({mis_s:.2}s)"
+    );
+    json = json.set(
+        "quality",
+        Json::obj()
+            .set("greedy_mvc", greedy_size)
+            .set("greedy_mvc_s", greedy_s)
+            .set("approx2_mvc", approx_size)
+            .set("approx2_mvc_s", approx_s)
+            .set("greedy_mis", mis_size)
+            .set("greedy_mis_s", mis_s)
+            .set("matching_lower_bound", lb)
+            .set("greedy_ratio_upper_bound", greedy_ratio_ub),
+    );
+
+    // --- Engine matrix on packed small graphs (artifact-gated): the same
+    // solutions must come out of dense/sparse storage under both engines.
+    let mut engine_rows: Vec<Json> = Vec::new();
+    if !oggm::runtime::manifest::default_dir().join("manifest.tsv").exists() {
+        println!("bench_scale: artifacts not built, skipping engine matrix (check mode OK)");
+    } else {
+        let rt = common::runtime();
+        let mut prng = Pcg32::seeded(0x5CA2E);
+        let params = common::init_params(&mut prng);
+        let jobs: Vec<Job> = (0..4)
+            .map(|i| Job {
+                id: format!("scale{i}"),
+                scenario: Scenario::Mvc,
+                graph: generators::erdos_renyi(20, 0.2, &mut prng),
+            })
+            .collect();
+        let mut reference: Option<Vec<Vec<usize>>> = None;
+        for (mode, storage) in [
+            (Engine::Lockstep, Storage::Dense),
+            (Engine::Lockstep, Storage::Sparse),
+            (Engine::RankParallel, Storage::Dense),
+            (Engine::RankParallel, Storage::Sparse),
+        ] {
+            let label = format!("{}/{:?}", mode.name(), storage);
+            let mut cfg = BatchCfg::new(1, 2);
+            cfg.engine.mode = mode;
+            cfg.storage = storage;
+            let t = Instant::now();
+            let report = match run_queue(&rt, &cfg, &params, &jobs) {
+                Ok(r) => r,
+                Err(e) => {
+                    println!("bench_scale: engine {label} skipped: {e:#}");
+                    continue;
+                }
+            };
+            let wall_s = t.elapsed().as_secs_f64();
+            let sols: Vec<Vec<usize>> =
+                report.outcomes.iter().map(|o| o.solution.clone()).collect();
+            for o in &report.outcomes {
+                assert!(o.valid, "engine {label}: job {} invalid", o.id);
+            }
+            match &reference {
+                None => reference = Some(sols),
+                Some(r) => assert_eq!(r, &sols, "engine {label} diverged"),
+            }
+            let rounds: usize = report.packs.iter().map(|p| p.rounds).sum();
+            let per_step_ms =
+                if rounds > 0 { report.wall_total * 1000.0 / rounds as f64 } else { 0.0 };
+            println!(
+                "bench_scale: engine {label}: {} jobs, wall {wall_s:.2}s, \
+                 per-step {per_step_ms:.2}ms",
+                report.outcomes.len()
+            );
+            engine_rows.push(
+                Json::obj()
+                    .set("engine", mode.name())
+                    .set("storage", format!("{storage:?}").to_lowercase())
+                    .set("wall_s", wall_s)
+                    .set("per_step_ms", per_step_ms),
+            );
+        }
+    }
+    json = json.set("engines", Json::Arr(engine_rows));
+
+    std::fs::write("BENCH_scale.json", json.render()).expect("write BENCH_scale.json");
+    println!("bench_scale: wrote BENCH_scale.json; OK");
+}

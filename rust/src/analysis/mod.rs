@@ -6,6 +6,9 @@
 
 use crate::collective::CostModel;
 
+/// Solution-quality evaluation harness (`oggm eval`).
+pub mod quality;
+
 /// Problem/config parameters for the analytical model.
 #[derive(Debug, Clone, Copy)]
 pub struct ModelConfig {

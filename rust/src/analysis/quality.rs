@@ -1,0 +1,688 @@
+//! Solution-quality evaluation harness (the paper's §6 quality study).
+//!
+//! Scores RL solutions — produced through the same `Service`/`ExecEngine`
+//! path as `oggm batch-solve` — against the classical baselines in
+//! `solvers/` (exact branch-and-bound, greedy, 2-approximation, local
+//! search). Every solution, RL or classical, is re-validated with the
+//! streaming checkers in [`crate::solvers::verify`]; the report carries
+//! approximation ratios against a per-instance reference (the exact
+//! optimum when proven, otherwise the best feasible objective seen),
+//! per-solver wall time, and the RL engine's per-step wall time. `oggm
+//! eval` is the CLI surface; the JSON schema is validated in CI by
+//! `tools/check_eval.py`.
+
+use crate::batch::{run_queue, BatchCfg, Job};
+use crate::env::Scenario;
+use crate::graph::Graph;
+use crate::model::Params;
+use crate::runtime::Runtime;
+use crate::service::Options;
+use crate::solvers::{self, verify};
+use crate::util::json::Json;
+use crate::util::rng::Pcg32;
+use anyhow::{bail, ensure, Result};
+use std::time::{Duration, Instant};
+
+/// A classical baseline solver the harness can score.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Baseline {
+    /// Exact branch-and-bound MVC (MIS via complement); skipped above
+    /// [`EvalCfg::exact_node_cap`] nodes.
+    Exact,
+    /// Greedy heuristic (max-degree MVC / min-degree MIS / sweep MaxCut).
+    Greedy,
+    /// Maximal-matching 2-approximation for MVC (MIS via complement).
+    Approx2,
+    /// Randomized 1-flip local search (MaxCut only).
+    LocalSearch,
+}
+
+impl Baseline {
+    /// Every baseline, in report order.
+    pub const ALL: [Baseline; 4] =
+        [Baseline::Exact, Baseline::Greedy, Baseline::Approx2, Baseline::LocalSearch];
+
+    /// Canonical lowercase name (the `solver` field of the report).
+    pub fn name(self) -> &'static str {
+        match self {
+            Baseline::Exact => "exact",
+            Baseline::Greedy => "greedy",
+            Baseline::Approx2 => "approx2",
+            Baseline::LocalSearch => "localsearch",
+        }
+    }
+
+    /// Parse one baseline name.
+    pub fn parse(s: &str) -> Result<Baseline> {
+        match s.to_ascii_lowercase().as_str() {
+            "exact" => Ok(Baseline::Exact),
+            "greedy" => Ok(Baseline::Greedy),
+            "approx2" => Ok(Baseline::Approx2),
+            "localsearch" | "local-search" => Ok(Baseline::LocalSearch),
+            other => bail!("unknown baseline '{other}' (exact|greedy|approx2|localsearch)"),
+        }
+    }
+
+    /// Parse a comma-separated baseline list; `"default"` (or empty) means
+    /// [`Baseline::defaults`] for the scenario. Inapplicable baselines are
+    /// rejected here rather than silently dropped.
+    pub fn parse_list(s: &str, scenario: Scenario) -> Result<Vec<Baseline>> {
+        if s.is_empty() || s == "default" {
+            return Ok(Baseline::defaults(scenario));
+        }
+        let mut out = Vec::new();
+        for tok in s.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+            let b = Baseline::parse(tok)?;
+            ensure!(
+                b.applicable(scenario),
+                "baseline '{}' is not applicable to scenario '{}'",
+                b.name(),
+                scenario.name()
+            );
+            if !out.contains(&b) {
+                out.push(b);
+            }
+        }
+        ensure!(!out.is_empty(), "empty --baselines list");
+        Ok(out)
+    }
+
+    /// The default baseline set per scenario (≥ 2 each, per EXPERIMENTS.md).
+    pub fn defaults(scenario: Scenario) -> Vec<Baseline> {
+        match scenario {
+            Scenario::Mvc | Scenario::Mis => {
+                vec![Baseline::Exact, Baseline::Greedy, Baseline::Approx2]
+            }
+            Scenario::MaxCut => vec![Baseline::Greedy, Baseline::LocalSearch],
+        }
+    }
+
+    /// Whether this baseline can solve `scenario` at all.
+    pub fn applicable(self, scenario: Scenario) -> bool {
+        match self {
+            Baseline::Exact | Baseline::Approx2 => {
+                matches!(scenario, Scenario::Mvc | Scenario::Mis)
+            }
+            Baseline::Greedy => true,
+            Baseline::LocalSearch => matches!(scenario, Scenario::MaxCut),
+        }
+    }
+}
+
+/// Harness configuration (see `oggm eval`).
+#[derive(Debug, Clone)]
+pub struct EvalCfg {
+    /// The problem every instance is solved as.
+    pub scenario: Scenario,
+    /// Baselines to score (inapplicable entries are skipped).
+    pub baselines: Vec<Baseline>,
+    /// Wall-clock cutoff for the exact solver (the paper used 0.5 h).
+    pub exact_budget: Duration,
+    /// Skip the exact solver above this many nodes (branch-and-bound is
+    /// exponential; the cap keeps large-graph runs bounded).
+    pub exact_node_cap: usize,
+    /// Seed for the randomized local-search baseline.
+    pub seed: u64,
+    /// Local-search sweep limit.
+    pub ls_rounds: usize,
+}
+
+impl EvalCfg {
+    /// Defaults: scenario's default baselines, 10 s exact budget,
+    /// 2000-node exact cap, seed 3, 200 local-search rounds.
+    pub fn new(scenario: Scenario) -> EvalCfg {
+        EvalCfg {
+            scenario,
+            baselines: Baseline::defaults(scenario),
+            exact_budget: Duration::from_secs(10),
+            exact_node_cap: 2000,
+            seed: 3,
+            ls_rounds: 200,
+        }
+    }
+}
+
+/// A named instance to evaluate.
+#[derive(Debug, Clone)]
+pub struct Instance {
+    /// Report name (file stem or generator spec).
+    pub name: String,
+    /// The graph.
+    pub graph: Graph,
+}
+
+/// One solver's scored solution on one instance.
+#[derive(Debug, Clone)]
+pub struct SolverScore {
+    /// Solver name (`rl` or a [`Baseline::name`]).
+    pub solver: String,
+    /// Scenario objective (|S| for MVC/MIS, cut weight for MaxCut).
+    pub objective: f64,
+    /// Selected-node count of the solution mask.
+    pub size: usize,
+    /// Verified by [`verify::feasible`] (never trusted from the solver).
+    pub feasible: bool,
+    /// True iff this is the exact solver and it proved optimality.
+    pub optimal: bool,
+    /// Approximation ratio vs the instance reference (≥ 1.0 unless the
+    /// reference itself is beaten, which indicates an infeasible
+    /// "solution" slipped through — check_eval.py flags both).
+    pub ratio: f64,
+    /// Wall time spent producing this solution, seconds. For RL this is
+    /// the pack wall time divided evenly over the pack's jobs.
+    pub wall_s: f64,
+    /// RL only: pack wall time per engine step, milliseconds.
+    pub per_step_ms: Option<f64>,
+    /// RL only: Q-model evaluations consumed.
+    pub evaluations: Option<usize>,
+}
+
+/// All scores for one instance plus its reference objective.
+#[derive(Debug, Clone)]
+pub struct InstanceReport {
+    /// Instance name.
+    pub name: String,
+    /// |V|.
+    pub nodes: usize,
+    /// |E|.
+    pub edges: usize,
+    /// Reference objective (ratio denominator/numerator per direction).
+    pub ref_objective: f64,
+    /// Which solver supplied the reference.
+    pub ref_solver: String,
+    /// True iff the reference is a proven optimum.
+    pub ref_optimal: bool,
+    /// Per-solver scores, RL first when present.
+    pub scores: Vec<SolverScore>,
+}
+
+/// The full evaluation report (`to_json` is the `oggm eval --out` schema).
+#[derive(Debug, Clone)]
+pub struct EvalReport {
+    /// The scenario every instance was solved as.
+    pub scenario: Scenario,
+    /// One entry per instance, input order.
+    pub instances: Vec<InstanceReport>,
+}
+
+/// Approximation ratio of `obj` against `reference`, oriented so 1.0 is
+/// optimal and larger is worse for both directions (MVC minimizes, MIS and
+/// MaxCut maximize). Degenerate zero objectives score 1.0 when the
+/// reference is also zero (empty graph), infinity otherwise.
+pub fn ratio(scenario: Scenario, obj: f64, reference: f64) -> f64 {
+    let (num, den) = match scenario {
+        Scenario::Mvc => (obj, reference),
+        Scenario::MaxCut | Scenario::Mis => (reference, obj),
+    };
+    if den > 0.0 {
+        num / den
+    } else if num > 0.0 {
+        f64::INFINITY
+    } else {
+        1.0
+    }
+}
+
+/// True iff objective `a` beats `b` in the scenario's direction.
+fn better(scenario: Scenario, a: f64, b: f64) -> bool {
+    match scenario {
+        Scenario::Mvc => a < b,
+        Scenario::MaxCut | Scenario::Mis => a > b,
+    }
+}
+
+fn mask_size(mask: &[bool]) -> usize {
+    mask.iter().filter(|&&b| b).count()
+}
+
+/// Run one classical baseline on `g`. Returns `None` when the baseline is
+/// inapplicable to the scenario or the exact solver is over the node cap.
+fn run_baseline(b: Baseline, cfg: &EvalCfg, g: &Graph, idx: usize) -> Option<SolverScore> {
+    let start = Instant::now();
+    let (mask, objective, optimal) = match (b, cfg.scenario) {
+        (Baseline::Exact, Scenario::Mvc) => {
+            if g.n > cfg.exact_node_cap {
+                return None;
+            }
+            let res = solvers::exact_mvc(g, cfg.exact_budget);
+            (res.cover, res.size as f64, res.optimal)
+        }
+        (Baseline::Exact, Scenario::Mis) => {
+            if g.n > cfg.exact_node_cap {
+                return None;
+            }
+            // Complement duality: S is a minimum vertex cover iff V \ S is
+            // a maximum independent set, so |MIS| = n - |MVC| and the
+            // optimality proof carries over.
+            let res = solvers::exact_mvc(g, cfg.exact_budget);
+            let set: Vec<bool> = res.cover.iter().map(|&c| !c).collect();
+            (set, (g.n - res.size) as f64, res.optimal)
+        }
+        (Baseline::Greedy, Scenario::Mvc) => {
+            let cover = solvers::greedy_mvc(g);
+            let size = mask_size(&cover) as f64;
+            (cover, size, false)
+        }
+        (Baseline::Greedy, Scenario::Mis) => {
+            let set = solvers::greedy_mis(g);
+            let size = mask_size(&set) as f64;
+            (set, size, false)
+        }
+        (Baseline::Greedy, Scenario::MaxCut) => {
+            let (side, val) = solvers::greedy_maxcut(g);
+            (side, val as f64, false)
+        }
+        (Baseline::Approx2, Scenario::Mvc) => {
+            let cover = solvers::two_approx_mvc(g);
+            let size = mask_size(&cover) as f64;
+            (cover, size, false)
+        }
+        (Baseline::Approx2, Scenario::Mis) => {
+            // The complement of any vertex cover is an independent set.
+            let set: Vec<bool> = solvers::two_approx_mvc(g).iter().map(|&c| !c).collect();
+            let size = mask_size(&set) as f64;
+            (set, size, false)
+        }
+        (Baseline::LocalSearch, Scenario::MaxCut) => {
+            let mut rng = Pcg32::new(cfg.seed, 100 + idx as u64);
+            let (side, val) = solvers::local_search_maxcut(g, &mut rng, cfg.ls_rounds);
+            (side, val as f64, false)
+        }
+        _ => return None,
+    };
+    let wall_s = start.elapsed().as_secs_f64();
+    Some(SolverScore {
+        solver: b.name().to_string(),
+        objective,
+        size: mask_size(&mask),
+        feasible: verify::feasible(cfg.scenario, g, &mask),
+        optimal,
+        ratio: 1.0,
+        wall_s,
+        per_step_ms: None,
+        evaluations: None,
+    })
+}
+
+/// Evaluate `instances`: solve each with RL through the `Service` path
+/// (when a runtime + trained params are supplied) and with the configured
+/// classical baselines, re-validate every solution, and score
+/// approximation ratios against the per-instance reference.
+pub fn evaluate(
+    rt: Option<&Runtime>,
+    params: Option<&Params>,
+    opts: &Options,
+    cfg: &EvalCfg,
+    instances: &[Instance],
+) -> Result<EvalReport> {
+    ensure!(!instances.is_empty(), "no instances to evaluate");
+
+    // RL pass first: all instances submitted as one queue so same-bucket
+    // graphs share packed forward passes (the engine's whole point).
+    let mut rl: Vec<Option<SolverScore>> = vec![None; instances.len()];
+    if let (Some(rt), Some(params)) = (rt, params) {
+        let jobs: Vec<Job> = instances
+            .iter()
+            .map(|inst| Job {
+                id: inst.name.clone(),
+                scenario: cfg.scenario,
+                graph: inst.graph.clone(),
+            })
+            .collect();
+        let report = run_queue(rt, &BatchCfg::from(opts), params, &jobs)?;
+        ensure!(
+            report.outcomes.len() == instances.len(),
+            "RL queue returned {} outcomes for {} instances",
+            report.outcomes.len(),
+            instances.len()
+        );
+        for out in &report.outcomes {
+            let idx = instances
+                .iter()
+                .position(|inst| inst.name == out.id)
+                .ok_or_else(|| anyhow::anyhow!("RL outcome for unknown job '{}'", out.id))?;
+            let g = &instances[idx].graph;
+            let mask = verify::ids_to_mask(g.n, &out.solution);
+            // Re-validate: in-range ids + the scenario's structural check.
+            let feasible = out.solution.iter().all(|&v| v < g.n)
+                && out.solution_size == mask_size(&mask)
+                && verify::feasible(cfg.scenario, g, &mask);
+            let pack = report.packs.iter().find(|p| p.pack == out.pack);
+            let per_step_ms = pack.and_then(|p| {
+                (p.rounds > 0).then(|| p.wall_time * 1000.0 / p.rounds as f64)
+            });
+            let wall_s = pack
+                .map(|p| p.wall_time / (p.jobs.max(1)) as f64)
+                .unwrap_or(0.0);
+            rl[idx] = Some(SolverScore {
+                solver: "rl".to_string(),
+                objective: out.objective,
+                size: out.solution_size,
+                feasible,
+                optimal: false,
+                ratio: 1.0,
+                wall_s,
+                per_step_ms,
+                evaluations: Some(out.evaluations),
+            });
+        }
+    }
+
+    let baselines: Vec<Baseline> = cfg
+        .baselines
+        .iter()
+        .copied()
+        .filter(|b| b.applicable(cfg.scenario))
+        .collect();
+
+    let mut reports = Vec::with_capacity(instances.len());
+    for (idx, inst) in instances.iter().enumerate() {
+        let g = &inst.graph;
+        let mut scores: Vec<SolverScore> = Vec::new();
+        if let Some(s) = rl[idx].take() {
+            scores.push(s);
+        }
+        for &b in &baselines {
+            if let Some(s) = run_baseline(b, cfg, g, idx) {
+                scores.push(s);
+            }
+        }
+        ensure!(
+            !scores.is_empty(),
+            "instance '{}': no solver produced a solution (exact over cap?)",
+            inst.name
+        );
+
+        // Reference: the proven optimum when the exact solver finished,
+        // otherwise the best *feasible* objective any solver achieved —
+        // so every feasible ratio is ≥ 1.0 by construction.
+        let proven = scores.iter().find(|s| s.optimal && s.feasible);
+        let (ref_objective, ref_solver, ref_optimal) = match proven {
+            Some(e) => (e.objective, e.solver.clone(), true),
+            None => {
+                let mut best: Option<&SolverScore> = None;
+                for s in scores.iter().filter(|s| s.feasible) {
+                    best = match best {
+                        Some(b) if !better(cfg.scenario, s.objective, b.objective) => Some(b),
+                        _ => Some(s),
+                    };
+                }
+                let best = match best {
+                    Some(b) => b,
+                    None => bail!(
+                        "instance '{}': every solver produced an infeasible solution",
+                        inst.name
+                    ),
+                };
+                (best.objective, best.solver.clone(), false)
+            }
+        };
+        for s in scores.iter_mut() {
+            s.ratio = ratio(cfg.scenario, s.objective, ref_objective);
+        }
+
+        reports.push(InstanceReport {
+            name: inst.name.clone(),
+            nodes: g.n,
+            edges: g.m,
+            ref_objective,
+            ref_solver,
+            ref_optimal,
+            scores,
+        });
+    }
+    Ok(EvalReport { scenario: cfg.scenario, instances: reports })
+}
+
+impl EvalReport {
+    /// Count of solver scores that failed feasibility validation.
+    pub fn infeasible_count(&self) -> usize {
+        self.instances
+            .iter()
+            .flat_map(|i| i.scores.iter())
+            .filter(|s| !s.feasible)
+            .count()
+    }
+
+    /// Worst (largest) ratio over every feasible score, 1.0 when empty.
+    pub fn worst_ratio(&self) -> f64 {
+        self.instances
+            .iter()
+            .flat_map(|i| i.scores.iter())
+            .filter(|s| s.feasible)
+            .fold(1.0, |acc, s| acc.max(s.ratio))
+    }
+
+    /// Mean ratio of one solver's feasible scores across instances.
+    pub fn mean_ratio(&self, solver: &str) -> Option<f64> {
+        let ratios: Vec<f64> = self
+            .instances
+            .iter()
+            .flat_map(|i| i.scores.iter())
+            .filter(|s| s.solver == solver && s.feasible)
+            .map(|s| s.ratio)
+            .collect();
+        if ratios.is_empty() {
+            None
+        } else {
+            Some(ratios.iter().sum::<f64>() / ratios.len() as f64)
+        }
+    }
+
+    /// Solver names in first-appearance order across the report.
+    pub fn solvers(&self) -> Vec<String> {
+        let mut out: Vec<String> = Vec::new();
+        for s in self.instances.iter().flat_map(|i| i.scores.iter()) {
+            if !out.iter().any(|n| n == &s.solver) {
+                out.push(s.solver.clone());
+            }
+        }
+        out
+    }
+
+    /// Render the `oggm eval` JSON report (schema checked by
+    /// `tools/check_eval.py`).
+    pub fn to_json(&self) -> Json {
+        let instances: Vec<Json> = self
+            .instances
+            .iter()
+            .map(|r| {
+                let scores: Vec<Json> = r
+                    .scores
+                    .iter()
+                    .map(|s| {
+                        let mut j = Json::obj()
+                            .set("solver", s.solver.as_str())
+                            .set("objective", s.objective)
+                            .set("size", s.size)
+                            .set("feasible", s.feasible)
+                            .set("optimal", s.optimal)
+                            .set("ratio", s.ratio)
+                            .set("wall_s", s.wall_s);
+                        if let Some(ms) = s.per_step_ms {
+                            j = j.set("per_step_ms", ms);
+                        }
+                        if let Some(e) = s.evaluations {
+                            j = j.set("evaluations", e);
+                        }
+                        j
+                    })
+                    .collect();
+                Json::obj()
+                    .set("name", r.name.as_str())
+                    .set("nodes", r.nodes)
+                    .set("edges", r.edges)
+                    .set(
+                        "reference",
+                        Json::obj()
+                            .set("solver", r.ref_solver.as_str())
+                            .set("objective", r.ref_objective)
+                            .set("optimal", r.ref_optimal),
+                    )
+                    .set("scores", Json::Arr(scores))
+            })
+            .collect();
+        let mut solvers_json = Json::obj();
+        for name in self.solvers() {
+            let infeasible = self
+                .instances
+                .iter()
+                .flat_map(|i| i.scores.iter())
+                .filter(|s| s.solver == name && !s.feasible)
+                .count();
+            let worst = self
+                .instances
+                .iter()
+                .flat_map(|i| i.scores.iter())
+                .filter(|s| s.solver == name && s.feasible)
+                .fold(f64::NAN, f64::max);
+            let mut entry = Json::obj().set("infeasible", infeasible);
+            if let Some(mean) = self.mean_ratio(&name) {
+                entry = entry.set("mean_ratio", mean);
+            }
+            if !worst.is_nan() {
+                entry = entry.set("worst_ratio", worst);
+            }
+            solvers_json = solvers_json.set(&name, entry);
+        }
+        let summary = Json::obj()
+            .set("instances", self.instances.len())
+            .set("worst_ratio", self.worst_ratio())
+            .set("infeasible", self.infeasible_count())
+            .set("solvers", solvers_json);
+        Json::obj()
+            .set("scenario", self.scenario.name())
+            .set("instances", Json::Arr(instances))
+            .set("summary", summary)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    fn opts() -> Options {
+        Options::default()
+    }
+
+    #[test]
+    fn baseline_parse_and_defaults() {
+        assert_eq!(Baseline::parse("Greedy").unwrap(), Baseline::Greedy);
+        assert!(Baseline::parse("cplex").is_err());
+        assert_eq!(
+            Baseline::parse_list("default", Scenario::MaxCut).unwrap(),
+            vec![Baseline::Greedy, Baseline::LocalSearch]
+        );
+        assert_eq!(
+            Baseline::parse_list("greedy, approx2,greedy", Scenario::Mvc).unwrap(),
+            vec![Baseline::Greedy, Baseline::Approx2]
+        );
+        // localsearch is MaxCut-only: rejected for MVC, not dropped.
+        assert!(Baseline::parse_list("localsearch", Scenario::Mvc).is_err());
+        for s in Scenario::ALL {
+            assert!(Baseline::defaults(s).len() >= 2);
+            assert!(Baseline::defaults(s).iter().all(|b| b.applicable(s)));
+        }
+    }
+
+    #[test]
+    fn ratio_orientation() {
+        // MVC minimizes: worse (larger) cover → ratio > 1.
+        assert_eq!(ratio(Scenario::Mvc, 12.0, 10.0), 1.2);
+        // MIS/MaxCut maximize: worse (smaller) objective → ratio > 1.
+        assert_eq!(ratio(Scenario::Mis, 10.0, 12.0), 1.2);
+        assert_eq!(ratio(Scenario::MaxCut, 0.0, 0.0), 1.0);
+        assert!(ratio(Scenario::MaxCut, 0.0, 3.0).is_infinite());
+    }
+
+    #[test]
+    fn evaluate_mvc_scores_against_exact() {
+        let mut rng = Pcg32::seeded(11);
+        let instances = vec![
+            Instance { name: "er0".into(), graph: generators::erdos_renyi(40, 0.15, &mut rng) },
+            Instance { name: "ba0".into(), graph: generators::barabasi_albert(40, 3, &mut rng) },
+        ];
+        let cfg = EvalCfg::new(Scenario::Mvc);
+        let report = evaluate(None, None, &opts(), &cfg, &instances).unwrap();
+        assert_eq!(report.instances.len(), 2);
+        for inst in &report.instances {
+            assert!(inst.ref_optimal, "exact should prove optimality at n=40");
+            assert_eq!(inst.ref_solver, "exact");
+            for s in &inst.scores {
+                assert!(s.feasible, "{} infeasible on {}", s.solver, inst.name);
+                assert!(s.ratio >= 1.0, "{} ratio {} < 1", s.solver, s.ratio);
+            }
+            // 2-approx guarantee holds against the proven optimum.
+            let approx = inst.scores.iter().find(|s| s.solver == "approx2").unwrap();
+            assert!(approx.ratio <= 2.0);
+        }
+        assert_eq!(report.infeasible_count(), 0);
+        assert!(report.worst_ratio() >= 1.0);
+        assert!(report.mean_ratio("greedy").unwrap() >= 1.0);
+        assert!(report.mean_ratio("rl").is_none());
+    }
+
+    #[test]
+    fn evaluate_mis_uses_complement_duality() {
+        let mut rng = Pcg32::seeded(12);
+        let g = generators::erdos_renyi(30, 0.2, &mut rng);
+        let cfg = EvalCfg::new(Scenario::Mis);
+        let instances = vec![Instance { name: "er".into(), graph: g.clone() }];
+        let report = evaluate(None, None, &opts(), &cfg, &instances).unwrap();
+        let inst = &report.instances[0];
+        let exact = inst.scores.iter().find(|s| s.solver == "exact").unwrap();
+        assert!(exact.optimal);
+        assert!(exact.feasible);
+        // |MIS| + |MVC| = n.
+        let mvc = solvers::exact_mvc(&g, Duration::from_secs(10));
+        assert_eq!(exact.objective as usize + mvc.size, g.n);
+    }
+
+    #[test]
+    fn evaluate_maxcut_reference_is_best_feasible() {
+        let mut rng = Pcg32::seeded(13);
+        let g = generators::erdos_renyi(30, 0.2, &mut rng);
+        let cfg = EvalCfg::new(Scenario::MaxCut);
+        let instances = vec![Instance { name: "er".into(), graph: g }];
+        let report = evaluate(None, None, &opts(), &cfg, &instances).unwrap();
+        let inst = &report.instances[0];
+        assert!(!inst.ref_optimal);
+        // The reference solver's own ratio is exactly 1.
+        let r = inst.scores.iter().find(|s| s.solver == inst.ref_solver).unwrap();
+        assert_eq!(r.ratio, 1.0);
+        assert!(inst.scores.iter().all(|s| s.ratio >= 1.0));
+    }
+
+    #[test]
+    fn exact_cap_skips_exact_but_keeps_heuristics() {
+        let mut rng = Pcg32::seeded(14);
+        let g = generators::erdos_renyi(60, 0.1, &mut rng);
+        let mut cfg = EvalCfg::new(Scenario::Mvc);
+        cfg.exact_node_cap = 10;
+        let instances = vec![Instance { name: "big".into(), graph: g }];
+        let report = evaluate(None, None, &opts(), &cfg, &instances).unwrap();
+        let inst = &report.instances[0];
+        assert!(inst.scores.iter().all(|s| s.solver != "exact"));
+        assert!(inst.scores.len() >= 2, "greedy + approx2 still scored");
+        assert!(!inst.ref_optimal);
+    }
+
+    #[test]
+    fn report_json_has_schema_fields() {
+        let mut rng = Pcg32::seeded(15);
+        let g = generators::erdos_renyi(25, 0.2, &mut rng);
+        let cfg = EvalCfg::new(Scenario::Mvc);
+        let instances = vec![Instance { name: "er".into(), graph: g }];
+        let report = evaluate(None, None, &opts(), &cfg, &instances).unwrap();
+        let rendered = report.to_json().render();
+        let parsed = Json::parse(&rendered).unwrap();
+        for key in ["scenario", "instances", "summary"] {
+            assert!(parsed.get(key).is_some(), "missing {key}");
+        }
+        let summary = parsed.get("summary").unwrap();
+        for key in ["instances", "worst_ratio", "infeasible", "solvers"] {
+            assert!(summary.get(key).is_some(), "missing summary.{key}");
+        }
+    }
+}

@@ -8,6 +8,7 @@
 use super::infer::{solve_scenario, InferCfg};
 use super::metrics;
 use super::train::{TrainCfg, Trainer};
+use crate::analysis::quality::{self, Baseline, EvalCfg, Instance};
 use crate::batch::{self, BatchCfg, Job};
 use crate::env::Scenario;
 use crate::graph::{generators, io as gio, stats, Graph, Partition};
@@ -28,19 +29,32 @@ fn load_runtime() -> Result<Runtime> {
     Runtime::new(manifest::default_dir())
 }
 
-/// Resolve a graph from CLI options: `--graph <file>` (edge list) or a
-/// generator spec `--gen er|ba|hk --n <nodes>`.
+/// Resolve a graph from CLI options: `--graph <file>` (SNAP edge list or
+/// MatrixMarket `.mtx`, dispatched on extension) or a generator spec
+/// `--gen er|ba|hk|rmat --n <nodes>` (`--scale`/`--ef` for rmat).
 fn resolve_graph(args: &Args, rng: &mut Pcg32) -> Result<Graph> {
     if let Some(path) = args.get("graph") {
-        return gio::read_edge_list(path);
+        return gio::read_graph(path);
     }
+    gen_graph(args, &args.get_or("gen", "er"), rng)
+}
+
+/// One synthetic graph from the shared generator knobs.
+fn gen_graph(args: &Args, kind: &str, rng: &mut Pcg32) -> Result<Graph> {
     let n = args.get_usize("n", 250);
-    match args.get_or("gen", "er").as_str() {
+    match kind {
         "er" => Ok(generators::erdos_renyi(n, args.get_f64("rho", generators::ER_RHO), rng)),
         "ba" => Ok(generators::barabasi_albert(n, args.get_usize("d", generators::BA_D), rng)),
-        "hk" => Ok(generators::holme_kim(n, args.get_usize("d", generators::BA_D),
-                                         args.get_f64("triad", 0.25), rng)),
-        other => bail!("unknown generator '{other}' (er|ba|hk)"),
+        "hk" => Ok(generators::holme_kim(
+            n,
+            args.get_usize("d", generators::BA_D),
+            args.get_f64("triad", 0.25),
+            rng,
+        )),
+        "rmat" => {
+            Ok(generators::rmat(args.get_usize("scale", 10) as u32, args.get_usize("ef", 8), rng))
+        }
+        other => bail!("unknown generator '{other}' (er|ba|hk|rmat)"),
     }
 }
 
@@ -488,5 +502,115 @@ pub fn cmd_solve(args: &Args) -> Result<()> {
         if exact.optimal { "optimal" } else { "cutoff hit" },
         exact.nodes_explored
     );
+    Ok(())
+}
+
+/// Instances for `oggm eval`: one real-format file (`--graph`, SNAP edge
+/// list or `.mtx`) or `--count` synthetic graphs from the generator knobs.
+fn eval_instances(args: &Args, rng: &mut Pcg32) -> Result<Vec<Instance>> {
+    if let Some(path) = args.get("graph") {
+        let name = std::path::Path::new(path)
+            .file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_else(|| path.to_string());
+        return Ok(vec![Instance { name, graph: gio::read_graph(path)? }]);
+    }
+    let count = args.get_usize("count", 4);
+    if count == 0 {
+        bail!("eval needs --graph <file> or --count >= 1 synthetic instances");
+    }
+    let kind = args.get_or("gen", "er");
+    let mut out = Vec::with_capacity(count);
+    for i in 0..count {
+        out.push(Instance { name: format!("{kind}{i}"), graph: gen_graph(args, &kind, rng)? });
+    }
+    Ok(out)
+}
+
+/// `oggm eval --graph web.mtx --scenario mvc --baselines exact,greedy,approx2
+/// --budget 30 --out report.json` — the solution-quality harness
+/// (EXPERIMENTS.md §Quality). Solves each instance with the RL engine
+/// through the batched `Service` path (same knobs as batch-solve:
+/// `--engine`, `--sparse`, `--p`, `--multi`, ...) and with the classical
+/// baselines, re-validates every solution with `solvers::verify`, and
+/// reports per-solver approximation ratios against the exact optimum when
+/// proven (else the best feasible objective) plus wall and per-step time.
+/// Instances: `--graph <file>` (SNAP edge list or MatrixMarket, dispatched
+/// on extension) or `--gen er|ba|hk|rmat --n/--scale/--ef --count k`.
+/// `--no-rl` scores baselines only; without artifacts RL is skipped with a
+/// notice (so `--check` CI smokes run baselines-only and still exit 0).
+/// `--budget` caps the exact solver's seconds, `--exact-cap` its node
+/// count. Any infeasible solution is a hard error.
+pub fn cmd_eval(args: &Args) -> Result<()> {
+    let opts = Options::from_args(args)?;
+    let scenario = opts.scenario.unwrap_or(Scenario::Mvc);
+    let mut cfg = EvalCfg::new(scenario);
+    cfg.baselines = Baseline::parse_list(&args.get_or("baselines", "default"), scenario)?;
+    cfg.exact_budget = Duration::from_secs_f64(args.get_f64("budget", 10.0));
+    cfg.exact_node_cap = args.get_usize("exact-cap", 2000);
+    cfg.seed = opts.seed_or(3);
+    cfg.ls_rounds = args.get_usize("ls-rounds", 200);
+
+    let mut rng = Pcg32::new(opts.seed_or(3), 81);
+    let instances = eval_instances(args, &mut rng)?;
+    println!(
+        "eval: {} {} instance(s), baselines [{}]",
+        instances.len(),
+        scenario.name(),
+        cfg.baselines.iter().map(|b| b.name()).collect::<Vec<_>>().join(",")
+    );
+
+    let want_rl = !args.has_flag("no-rl");
+    let have_artifacts = manifest::default_dir().join("manifest.tsv").exists();
+    let report = if want_rl && have_artifacts {
+        let rt = load_runtime()?;
+        let params = load_or_init_params(args, &mut rng)?;
+        quality::evaluate(Some(&rt), Some(&params), &opts, &cfg, &instances)?
+    } else {
+        if want_rl {
+            println!("eval: artifacts not built; scoring classical baselines only");
+        }
+        quality::evaluate(None, None, &opts, &cfg, &instances)?
+    };
+
+    for inst in &report.instances {
+        println!(
+            "instance {}: |V|={} |E|={}  reference {}={}{}",
+            inst.name,
+            inst.nodes,
+            inst.edges,
+            inst.ref_solver,
+            inst.ref_objective,
+            if inst.ref_optimal { " (optimal)" } else { "" }
+        );
+        for s in &inst.scores {
+            println!(
+                "  {:<12} objective {:<10} ratio {:.4}  {}  wall {:.3}s{}",
+                s.solver,
+                s.objective,
+                s.ratio,
+                if s.feasible { "feasible" } else { "INFEASIBLE" },
+                s.wall_s,
+                match s.per_step_ms {
+                    Some(ms) => format!("  per-step {ms:.2}ms"),
+                    None => String::new(),
+                }
+            );
+        }
+    }
+    println!(
+        "eval: worst ratio {:.4} over {} instance(s), {} infeasible",
+        report.worst_ratio(),
+        report.instances.len(),
+        report.infeasible_count()
+    );
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, report.to_json().render())
+            .with_context(|| format!("writing {out}"))?;
+        println!("wrote {out}");
+    }
+    if report.infeasible_count() > 0 {
+        bail!("{} solver scores failed feasibility validation", report.infeasible_count());
+    }
     Ok(())
 }

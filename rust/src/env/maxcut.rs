@@ -49,13 +49,10 @@ impl MaxCutEnv {
         self.cut_value
     }
 
-    /// Exact cut value from scratch (test oracle).
+    /// Exact cut value from scratch (test oracle). Delegates to the
+    /// canonical streaming checker in `solvers::verify`.
     pub fn compute_cut(graph: &Graph, in_cut: &[bool]) -> i64 {
-        graph
-            .edges()
-            .iter()
-            .filter(|&&(u, v)| in_cut[u as usize] != in_cut[v as usize])
-            .count() as i64
+        crate::solvers::verify::cut_value(graph, in_cut)
     }
 }
 

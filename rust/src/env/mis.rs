@@ -40,8 +40,9 @@ impl MisEnv {
     }
 
     /// Verify independence: no edge with both endpoints selected.
+    /// Delegates to the canonical streaming checker in `solvers::verify`.
     pub fn is_independent_set(graph: &Graph, sol: &[bool]) -> bool {
-        graph.edges().iter().all(|&(u, v)| !(sol[u as usize] && sol[v as usize]))
+        crate::solvers::verify::is_independent_set(graph, sol)
     }
 
     /// Verify maximality: every unselected node has a selected neighbor

@@ -38,8 +38,9 @@ impl MvcEnv {
     }
 
     /// Verify a full cover (every edge has a selected endpoint).
+    /// Delegates to the canonical streaming checker in `solvers::verify`.
     pub fn is_vertex_cover(graph: &Graph, sol: &[bool]) -> bool {
-        graph.edges().iter().all(|&(u, v)| sol[u as usize] || sol[v as usize])
+        crate::solvers::verify::is_vertex_cover(graph, sol)
     }
 }
 

@@ -1,6 +1,6 @@
 //! Compressed-sparse-row undirected graph.
 
-use anyhow::{bail, Result};
+use anyhow::{bail, ensure, Result};
 
 /// An undirected simple graph in CSR form. Each edge {u,v} appears in both
 /// adjacency lists; `m` counts undirected edges once.
@@ -176,6 +176,151 @@ impl Graph {
     }
 }
 
+/// Streaming two-pass CSR builder for paper-scale inputs (DESIGN.md §7).
+///
+/// `Graph::from_edges` materializes a `Vec<Vec<u32>>` adjacency — fine for
+/// bench-sized graphs, ruinous at 30M edges. The builder instead takes two
+/// identical passes of undirected-edge callbacks: `count` tallies endpoint
+/// degrees, `begin_fill` turns the tallies into row offsets, `fill` places
+/// the two directed entries of each edge at its endpoints' cursors, and
+/// `finish` sorts each row in place, drops duplicate edges, and produces
+/// the `Graph`. Peak memory is O(N + E) with no global edge sort and no
+/// per-node `Vec` — file loaders re-read the input for the second pass, so
+/// the edges themselves are never held in memory at once.
+#[derive(Debug)]
+pub struct CsrBuilder {
+    n: usize,
+    /// Count pass: per-node degree tally; fill pass: per-node write cursor.
+    cursor: Vec<usize>,
+    row_ptr: Vec<usize>,
+    col_idx: Vec<u32>,
+    filling: bool,
+}
+
+impl CsrBuilder {
+    /// Start a builder for `n` nodes in the count phase.
+    pub fn new(n: usize) -> CsrBuilder {
+        CsrBuilder {
+            n,
+            cursor: vec![0; n],
+            row_ptr: Vec::new(),
+            col_idx: Vec::new(),
+            filling: false,
+        }
+    }
+
+    /// Skip the count phase: adopt a precomputed per-node degree tally
+    /// (each undirected edge counted once at both endpoints) and go
+    /// straight to the fill phase. Used by loaders that tally degrees
+    /// while interning node ids on their first file pass.
+    pub fn from_degrees(degrees: Vec<usize>) -> CsrBuilder {
+        let mut b = CsrBuilder {
+            n: degrees.len(),
+            cursor: degrees,
+            row_ptr: Vec::new(),
+            col_idx: Vec::new(),
+            filling: false,
+        };
+        b.begin_fill();
+        b
+    }
+
+    /// Count-phase callback: tally the undirected edge {u, v} at both
+    /// endpoints. Self-loops and out-of-range endpoints are errors;
+    /// duplicate edges are accepted here and dropped in `finish`.
+    pub fn count(&mut self, u: u32, v: u32) -> Result<()> {
+        ensure!(!self.filling, "count() called after begin_fill()");
+        let (u, v) = (u as usize, v as usize);
+        if u >= self.n || v >= self.n {
+            bail!("edge ({u},{v}) out of range for n={}", self.n);
+        }
+        if u == v {
+            bail!("self-loop at node {u}");
+        }
+        self.cursor[u] += 1;
+        self.cursor[v] += 1;
+        Ok(())
+    }
+
+    /// End the count phase: prefix-sum the tallies into row offsets and
+    /// allocate the column array (the single O(E) allocation).
+    pub fn begin_fill(&mut self) {
+        assert!(!self.filling, "begin_fill() called twice");
+        let mut row_ptr = Vec::with_capacity(self.n + 1);
+        row_ptr.push(0usize);
+        let mut total = 0usize;
+        for d in self.cursor.iter_mut() {
+            let start = total;
+            total += *d;
+            *d = start; // cursor becomes the row's next write offset
+            row_ptr.push(total);
+        }
+        self.row_ptr = row_ptr;
+        self.col_idx = vec![0u32; total];
+        self.filling = true;
+    }
+
+    /// Fill-phase callback: place both directed entries of {u, v}. The
+    /// fill pass must replay exactly the edges given to the count pass
+    /// (any order); a divergent replay is detected and reported.
+    pub fn fill(&mut self, u: u32, v: u32) -> Result<()> {
+        ensure!(self.filling, "fill() called before begin_fill()");
+        let (ui, vi) = (u as usize, v as usize);
+        if ui >= self.n || vi >= self.n {
+            bail!("edge ({ui},{vi}) out of range for n={}", self.n);
+        }
+        if ui == vi {
+            bail!("self-loop at node {ui}");
+        }
+        if self.cursor[ui] == self.row_ptr[ui + 1] || self.cursor[vi] == self.row_ptr[vi + 1] {
+            bail!("fill pass diverged from count pass at edge ({ui},{vi})");
+        }
+        self.col_idx[self.cursor[ui]] = v;
+        self.cursor[ui] += 1;
+        self.col_idx[self.cursor[vi]] = u;
+        self.cursor[vi] += 1;
+        Ok(())
+    }
+
+    /// Finish: sort each row, drop duplicate edges (compacting in place),
+    /// and return the graph. Errors if the fill pass placed fewer edges
+    /// than the count pass promised.
+    pub fn finish(mut self) -> Result<Graph> {
+        ensure!(self.filling, "finish() called before begin_fill()");
+        for v in 0..self.n {
+            if self.cursor[v] != self.row_ptr[v + 1] {
+                bail!(
+                    "fill pass placed {} of {} counted entries at node {v}",
+                    self.cursor[v] - self.row_ptr[v],
+                    self.row_ptr[v + 1] - self.row_ptr[v]
+                );
+            }
+        }
+        // In-place per-row sort + dedup: the write head never passes the
+        // read head, so compaction reuses the column array.
+        let mut write = 0usize;
+        let mut new_ptr = vec![0usize; self.n + 1];
+        for v in 0..self.n {
+            let (s, e) = (self.row_ptr[v], self.row_ptr[v + 1]);
+            self.col_idx[s..e].sort_unstable();
+            let row_start = write;
+            for i in s..e {
+                let x = self.col_idx[i];
+                if write == row_start || self.col_idx[write - 1] != x {
+                    self.col_idx[write] = x;
+                    write += 1;
+                }
+            }
+            new_ptr[v + 1] = write;
+        }
+        self.col_idx.truncate(write);
+        if write % 2 != 0 {
+            bail!("asymmetric fill: odd directed-entry count {write}");
+        }
+        Ok(Graph { n: self.n, m: write / 2, row_ptr: new_ptr, col_idx: self.col_idx })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -272,5 +417,92 @@ mod tests {
     #[test]
     fn edge_probability_triangle() {
         assert!((triangle().edge_probability() - 1.0).abs() < 1e-12);
+    }
+
+    fn build_streamed(n: usize, edges: &[(u32, u32)]) -> Result<Graph> {
+        let mut b = CsrBuilder::new(n);
+        for &(u, v) in edges {
+            b.count(u, v)?;
+        }
+        b.begin_fill();
+        for &(u, v) in edges {
+            b.fill(u, v)?;
+        }
+        b.finish()
+    }
+
+    #[test]
+    fn builder_matches_from_edges() {
+        let edges = [(0, 1), (1, 2), (0, 2), (3, 1)];
+        let g = build_streamed(4, &edges).unwrap();
+        assert_eq!(g, Graph::from_edges(4, &edges).unwrap());
+    }
+
+    #[test]
+    fn builder_drops_duplicate_edges() {
+        // Duplicates in either orientation collapse to one edge.
+        let g = build_streamed(3, &[(0, 1), (1, 0), (0, 1), (1, 2)]).unwrap();
+        assert_eq!(g, Graph::from_edges(3, &[(0, 1), (1, 2)]).unwrap());
+    }
+
+    #[test]
+    fn builder_rejects_bad_input() {
+        assert!(CsrBuilder::new(2).count(0, 0).is_err());
+        assert!(CsrBuilder::new(2).count(0, 3).is_err());
+        let mut b = CsrBuilder::new(2);
+        b.begin_fill();
+        assert!(b.count(0, 1).is_err()); // count after begin_fill
+        assert!(b.fill(0, 1).is_err()); // fill of an uncounted edge
+    }
+
+    #[test]
+    fn builder_detects_divergent_fill_pass() {
+        let mut b = CsrBuilder::new(4);
+        b.count(0, 1).unwrap();
+        b.count(2, 3).unwrap();
+        b.begin_fill();
+        b.fill(0, 1).unwrap();
+        // Fill pass stops early: finish must notice nodes 2 and 3.
+        assert!(b.finish().is_err());
+    }
+
+    #[test]
+    fn builder_from_degrees_matches_count_phase() {
+        let edges = [(0u32, 1u32), (1, 2), (0, 2)];
+        let mut deg = vec![0usize; 3];
+        for &(u, v) in &edges {
+            deg[u as usize] += 1;
+            deg[v as usize] += 1;
+        }
+        let mut b = CsrBuilder::from_degrees(deg);
+        for &(u, v) in &edges {
+            b.fill(u, v).unwrap();
+        }
+        assert_eq!(b.finish().unwrap(), triangle());
+    }
+
+    #[test]
+    fn prop_builder_equals_from_edges() {
+        use crate::util::prop;
+        use crate::util::rng::Pcg32;
+        prop::check(
+            "csr-builder-equiv",
+            30,
+            |r| {
+                let n = 2 + r.gen_range(40);
+                let mut edges = Vec::new();
+                for u in 0..n as u32 {
+                    for v in (u + 1)..n as u32 {
+                        if r.next_f64() < 0.2 {
+                            edges.push((u, v));
+                        }
+                    }
+                }
+                (n, edges)
+            },
+            |(n, edges)| {
+                build_streamed(*n, edges).unwrap() == Graph::from_edges(*n, edges).unwrap()
+            },
+        );
     }
 }

@@ -5,7 +5,7 @@
 //! closure) generates the "social network" stand-ins for the Facebook
 //! university graphs of Table 1 (DESIGN.md §3 substitution).
 
-use super::csr::Graph;
+use super::csr::{CsrBuilder, Graph};
 use crate::util::rng::Pcg32;
 
 /// Erdős–Rényi G(n, rho): each pair independently connected with prob rho.
@@ -125,6 +125,55 @@ pub fn holme_kim(n: usize, d: usize, p_triad: f64, rng: &mut Pcg32) -> Graph {
     Graph::from_edges(n, &edges).unwrap()
 }
 
+/// R-MAT recursive-matrix generator (Chakrabarti et al. 2004) with the
+/// Graph500 quadrant probabilities a=0.57, b=0.19, c=0.19, d=0.05: the
+/// standard scale-free model for paper-scale synthetic graphs. Samples
+/// `edge_factor * 2^scale` endpoint pairs by recursive quadrant descent,
+/// then builds CSR through the streaming [`CsrBuilder`] — self-loops are
+/// dropped and duplicates deduplicated, so the final edge count is
+/// slightly below `edge_factor * 2^scale` (more so at high skew). Nodes
+/// never hit by an edge stay as isolated vertices of the 2^scale-node
+/// graph.
+pub fn rmat(scale: u32, edge_factor: usize, rng: &mut Pcg32) -> Graph {
+    assert!(scale >= 1 && scale < 32, "rmat scale must be in [1, 31]");
+    let n = 1usize << scale;
+    let target = n * edge_factor;
+    const A: f64 = 0.57;
+    const B: f64 = 0.19;
+    const C: f64 = 0.19;
+    let mut pairs: Vec<(u32, u32)> = Vec::with_capacity(target);
+    for _ in 0..target {
+        let (mut u, mut v) = (0u32, 0u32);
+        for _ in 0..scale {
+            let r = rng.next_f64();
+            let (bu, bv) = if r < A {
+                (0, 0)
+            } else if r < A + B {
+                (0, 1)
+            } else if r < A + B + C {
+                (1, 0)
+            } else {
+                (1, 1)
+            };
+            u = (u << 1) | bu;
+            v = (v << 1) | bv;
+        }
+        if u != v {
+            pairs.push((u, v));
+        }
+    }
+    // Two passes over the sampled pairs — no global sort, no Vec<Vec>.
+    let mut bld = CsrBuilder::new(n);
+    for &(u, v) in &pairs {
+        bld.count(u, v).expect("rmat endpoints are in range by construction");
+    }
+    bld.begin_fill();
+    for &(u, v) in &pairs {
+        bld.fill(u, v).expect("fill replays the count pass");
+    }
+    bld.finish().expect("rmat pairs are loop-free and symmetric")
+}
+
 /// The paper's generated-dataset defaults (§6.1).
 pub const ER_RHO: f64 = 0.15;
 /// Barabási–Albert attachment degree default (paper §6.1).
@@ -197,6 +246,30 @@ mod tests {
         let b1 = barabasi_albert(100, 3, &mut Pcg32::seeded(7));
         let b2 = barabasi_albert(100, 3, &mut Pcg32::seeded(7));
         assert_eq!(b1, b2);
+    }
+
+    #[test]
+    fn rmat_is_simple_and_skewed() {
+        let mut rng = Pcg32::seeded(21);
+        let g = rmat(10, 8, &mut rng);
+        assert_eq!(g.n, 1024);
+        // Dedup and loop-dropping shave a chunk of the 8192 sampled pairs
+        // (hub pairs repeat often at this small scale).
+        assert!(g.m > 3000 && g.m <= 8192, "m={}", g.m);
+        assert_eq!(g.row_ptr[g.n], 2 * g.m);
+        assert!((0..g.n).all(|v| g.neighbors(v).iter().all(|&u| (u as usize) != v)));
+        assert!((0..g.n).all(|v| g.neighbors(v).windows(2).all(|w| w[0] < w[1])));
+        // Quadrant skew concentrates degree mass far above the mean.
+        let dmax = (0..g.n).map(|v| g.degree(v)).max().unwrap();
+        let mean = 2.0 * g.m as f64 / g.n as f64;
+        assert!(dmax as f64 > 4.0 * mean, "dmax {dmax} vs mean {mean}");
+    }
+
+    #[test]
+    fn rmat_deterministic_per_seed() {
+        let g1 = rmat(8, 4, &mut Pcg32::seeded(9));
+        let g2 = rmat(8, 4, &mut Pcg32::seeded(9));
+        assert_eq!(g1, g2);
     }
 
     #[test]

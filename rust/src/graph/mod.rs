@@ -15,11 +15,11 @@ pub mod generators;
 pub mod partition;
 /// Block-diagonal packing + edge-list offsets (DESIGN.md §4/§7).
 pub mod pack;
-/// Edge-list file I/O (NetworkRepository/SNAP format).
+/// Graph file I/O (SNAP edge lists, MatrixMarket `.mtx`), streaming.
 pub mod io;
 /// Dataset statistics (Table 1 rows).
 pub mod stats;
 
-pub use csr::Graph;
+pub use csr::{CsrBuilder, Graph};
 pub use pack::PackLayout;
-pub use partition::Partition;
+pub use partition::{Partition, ShardView};

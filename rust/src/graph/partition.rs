@@ -1,6 +1,14 @@
 //! Row-block spatial partitioning (§4.1, Fig. 2): node rows are split into
 //! P contiguous blocks of NI = N/P rows; shard i owns rows
 //! [i*NI, (i+1)*NI). Graphs are padded to the bucket size N first.
+//!
+//! For paper-scale graphs the partition is *streamed*: `shard_views`
+//! yields one zero-copy [`ShardView`] at a time, borrowing each shard's
+//! row slice straight out of the host CSR, so a 30M-edge graph partitions
+//! shard-by-shard within the DESIGN.md §7 memory model instead of
+//! materializing P dense B·NI·N blocks.
+
+use super::csr::Graph;
 
 /// A spatial partition of a padded N-node graph over P shards.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -50,6 +58,70 @@ impl Partition {
     pub fn pad_to_bucket(n: usize, lcm: usize) -> usize {
         n.div_ceil(lcm) * lcm
     }
+
+    /// Stream zero-copy views of `g`'s shards, one per shard in order.
+    /// The partition may be padded past `g.n`: trailing views clamp to
+    /// the real node count (a shard wholly in padding views zero rows).
+    pub fn shard_views<'g>(&self, g: &'g Graph) -> impl Iterator<Item = ShardView<'g>> {
+        assert!(g.n <= self.n, "graph n={} exceeds padded N={}", g.n, self.n);
+        let part = *self;
+        (0..part.p).map(move |i| {
+            let row0 = part.row0(i);
+            let rows = part.ni().min(g.n.saturating_sub(row0));
+            ShardView { shard: i, row0, rows, graph: g }
+        })
+    }
+}
+
+/// A zero-copy CSR view of the rows one shard owns — the streaming
+/// partitioning path for paper-scale graphs (DESIGN.md §7). Dense
+/// partitioning materializes B·NI·N f32 cells per shard; a `ShardView`
+/// borrows the shard's row slice straight out of the host CSR, so
+/// walking all P shards keeps resident bytes at the CSR itself plus
+/// O(1) per view.
+#[derive(Debug, Clone, Copy)]
+pub struct ShardView<'g> {
+    /// Shard index in [0, P).
+    pub shard: usize,
+    /// First global row this shard owns.
+    pub row0: usize,
+    /// Rows actually viewed: min(NI, g.n - row0); padded tail rows past
+    /// the real node count hold no edges and are not viewed.
+    pub rows: usize,
+    graph: &'g Graph,
+}
+
+impl<'g> ShardView<'g> {
+    /// Neighbors of local row `r` (global column ids, sorted ascending).
+    pub fn neighbors(&self, r: usize) -> &'g [u32] {
+        assert!(r < self.rows, "local row {r} out of {} viewed rows", self.rows);
+        self.graph.neighbors(self.row0 + r)
+    }
+
+    /// Directed CSR entries resident in this shard (sum of row degrees).
+    pub fn entries(&self) -> usize {
+        self.graph.row_ptr[self.row0 + self.rows] - self.graph.row_ptr[self.row0]
+    }
+
+    /// Iterate the shard's directed edges as (local row, global column),
+    /// row-major with ascending columns — the canonical order
+    /// `Graph::shard_edges` produces with no removals, without
+    /// materializing its `Vec`.
+    pub fn iter_edges(&self) -> impl Iterator<Item = (u32, u32)> + 'g {
+        let me = *self;
+        (0..me.rows).flat_map(move |r| {
+            me.graph.neighbors(me.row0 + r).iter().map(move |&c| (r as u32, c))
+        })
+    }
+
+    /// Bytes of host CSR this view spans (row offsets + column indices) —
+    /// what a per-shard CSR copy would cost. The scale smoke asserts the
+    /// sum over all shards stays O(N + E), orders of magnitude under the
+    /// dense 4·B·NI·N model of DESIGN.md §7.
+    pub fn resident_bytes(&self) -> usize {
+        (self.rows + 1) * std::mem::size_of::<usize>()
+            + self.entries() * std::mem::size_of::<u32>()
+    }
 }
 
 #[cfg(test)]
@@ -92,6 +164,62 @@ mod tests {
     #[should_panic]
     fn rejects_nondivisible() {
         Partition::new(25, 4);
+    }
+
+    #[test]
+    fn shard_views_match_shard_edges() {
+        use crate::graph::generators;
+        use crate::util::rng::Pcg32;
+        let g = generators::erdos_renyi(30, 0.25, &mut Pcg32::seeded(3));
+        let n_pad = Partition::pad_to_bucket(g.n, 12);
+        for p in [1usize, 2, 3] {
+            let part = Partition::new(n_pad, p);
+            let alive = vec![false; g.n];
+            let mut total_rows = 0;
+            let mut total_entries = 0;
+            for view in part.shard_views(&g) {
+                assert_eq!(view.row0, part.row0(view.shard));
+                let streamed: Vec<(u32, u32)> = view.iter_edges().collect();
+                // Canonical order: identical to the compute path's shard
+                // edge enumeration with nothing removed.
+                assert_eq!(streamed, g.shard_edges(view.row0, view.rows, &alive));
+                assert_eq!(view.entries(), streamed.len());
+                total_rows += view.rows;
+                total_entries += view.entries();
+            }
+            assert_eq!(total_rows, g.n);
+            assert_eq!(total_entries, 2 * g.m, "every directed entry in exactly one shard");
+        }
+    }
+
+    #[test]
+    fn shard_views_clamp_to_padding() {
+        use crate::graph::generators;
+        use crate::util::rng::Pcg32;
+        let g = generators::erdos_renyi(10, 0.4, &mut Pcg32::seeded(4));
+        // Padded far past n: the last shards view zero rows.
+        let part = Partition::new(24, 4);
+        let views: Vec<_> = part.shard_views(&g).collect();
+        assert_eq!(views.len(), 4);
+        assert_eq!(views[0].rows, 6);
+        assert_eq!(views[1].rows, 4); // rows 6..10 of 10
+        assert_eq!(views[2].rows, 0);
+        assert_eq!(views[3].rows, 0);
+        assert_eq!(views[2].entries(), 0);
+    }
+
+    #[test]
+    fn shard_view_resident_bytes_are_o_of_csr() {
+        use crate::graph::generators;
+        use crate::util::rng::Pcg32;
+        let g = generators::barabasi_albert(120, 4, &mut Pcg32::seeded(5));
+        let part = Partition::new(Partition::pad_to_bucket(g.n, 12), 2);
+        let total: usize = part.shard_views(&g).map(|v| v.resident_bytes()).sum();
+        // Row offsets + column indices, never the dense 4*NI*N block.
+        let csr_bytes = (g.n + part.p) * std::mem::size_of::<usize>()
+            + 2 * g.m * std::mem::size_of::<u32>();
+        assert_eq!(total, csr_bytes);
+        assert!(total < 4 * part.ni() * part.n);
     }
 
     #[test]

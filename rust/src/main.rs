@@ -6,6 +6,8 @@
 //!   infer  [--opts]              distributed RL inference (Alg. 4, --scenario)
 //!   solve  [--opts]              classical baselines (exact / greedy / 2-approx)
 //!   batch-solve [--opts]         batched inference over a job manifest (§Batch)
+//!   eval   [--opts]              solution-quality harness: RL vs classical
+//!                                baselines, JSON report (--out, --check)
 //!   serve  [--opts]              persistent solver service: job lines in,
 //!                                JSONL outcomes streamed out (DESIGN.md §8);
 //!                                --listen ADDR serves the same protocol over
@@ -29,10 +31,11 @@ fn main() {
         "infer" => oggm::coordinator::cmd::cmd_infer(&args),
         "solve" => oggm::coordinator::cmd::cmd_solve(&args),
         "batch-solve" => oggm::coordinator::cmd::cmd_batch_solve(&args),
+        "eval" => oggm::coordinator::cmd::cmd_eval(&args),
         "serve" => oggm::coordinator::cmd::cmd_serve(&args),
         _ => {
             eprintln!(
-                "usage: oggm <info|train|infer|solve|batch-solve|serve> [--key value ...]\n\
+                "usage: oggm <info|train|infer|solve|batch-solve|eval|serve> [--key value ...]\n\
                  see README.md for options"
             );
             Ok(())

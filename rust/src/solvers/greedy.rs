@@ -1,6 +1,7 @@
-//! Max-degree greedy MVC heuristic: repeatedly take the node covering the
-//! most uncovered edges. The classic hand-crafted heuristic the RL agent is
-//! compared against (and the upper-bound seed for the exact solver).
+//! Greedy heuristics: max-degree greedy MVC (repeatedly take the node
+//! covering the most uncovered edges — the classic hand-crafted heuristic
+//! the RL agent is compared against, and the upper-bound seed for the
+//! exact solver) and min-degree greedy MIS.
 
 use crate::graph::Graph;
 
@@ -31,6 +32,42 @@ pub fn greedy_mvc(g: &Graph) -> Vec<bool> {
     chosen
 }
 
+/// Min-degree greedy MIS: repeatedly select a surviving node of minimum
+/// residual degree and remove its closed neighborhood. The standard
+/// greedy baseline for independent set; the result is maximal by
+/// construction.
+pub fn greedy_mis(g: &Graph) -> Vec<bool> {
+    use std::cmp::Reverse;
+    let mut in_set = vec![false; g.n];
+    let mut removed = vec![false; g.n];
+    let mut live_deg: Vec<usize> = (0..g.n).map(|v| g.degree(v)).collect();
+    // Min-heap of (residual degree, node) with lazy invalidation.
+    let mut heap: std::collections::BinaryHeap<Reverse<(usize, usize)>> =
+        (0..g.n).map(|v| Reverse((live_deg[v], v))).collect();
+    while let Some(Reverse((d, v))) = heap.pop() {
+        if removed[v] || d != live_deg[v] {
+            continue; // stale entry
+        }
+        in_set[v] = true;
+        removed[v] = true;
+        for &u in g.neighbors(v) {
+            let u = u as usize;
+            if removed[u] {
+                continue;
+            }
+            removed[u] = true;
+            for &w in g.neighbors(u) {
+                let w = w as usize;
+                if !removed[w] {
+                    live_deg[w] -= 1;
+                    heap.push(Reverse((live_deg[w], w)));
+                }
+            }
+        }
+    }
+    in_set
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -57,6 +94,34 @@ mod tests {
             30,
             |r| generators::erdos_renyi(5 + r.gen_range(80), 0.2, r),
             |g| MvcEnv::is_vertex_cover(g, &greedy_mvc(g)),
+        );
+    }
+
+    #[test]
+    fn mis_star_takes_leaves() {
+        let g = Graph::from_edges(5, &[(0, 1), (0, 2), (0, 3), (0, 4)]).unwrap();
+        let s = greedy_mis(&g);
+        assert_eq!(s, vec![false, true, true, true, true]);
+    }
+
+    #[test]
+    fn mis_empty_graph_takes_all() {
+        assert!(greedy_mis(&Graph::empty(4)).iter().all(|&b| b));
+    }
+
+    #[test]
+    fn prop_greedy_mis_is_maximal_independent() {
+        use crate::solvers::verify;
+        prop::check(
+            "greedy-mis-maximal",
+            30,
+            |r| generators::erdos_renyi(5 + r.gen_range(80), 0.2, r),
+            |g| {
+                let s = greedy_mis(g);
+                verify::is_independent_set(g, &s)
+                    && (0..g.n)
+                        .all(|v| s[v] || g.neighbors(v).iter().any(|&u| s[u as usize]))
+            },
         );
     }
 }

@@ -39,6 +39,32 @@ pub fn local_search_maxcut(g: &Graph, rng: &mut Pcg32, max_rounds: usize) -> (Ve
     (side, value)
 }
 
+/// Deterministic greedy MaxCut: sweep nodes once in id order, placing each
+/// on the side that cuts more of its edges to already-placed neighbors.
+/// Every edge is cut or not at its later endpoint's majority choice, so
+/// the result is a guaranteed (1/2)-approximation with no randomness —
+/// the reproducible second MaxCut baseline for the quality harness.
+pub fn greedy_maxcut(g: &Graph) -> (Vec<bool>, i64) {
+    let mut side = vec![false; g.n];
+    for v in 0..g.n {
+        let mut cut_if_true = 0i64;
+        let mut cut_if_false = 0i64;
+        for &u in g.neighbors(v) {
+            let u = u as usize;
+            if u < v {
+                if side[u] {
+                    cut_if_false += 1;
+                } else {
+                    cut_if_true += 1;
+                }
+            }
+        }
+        side[v] = cut_if_true >= cut_if_false;
+    }
+    let value = crate::solvers::verify::cut_value(g, &side);
+    (side, value)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -64,5 +90,26 @@ mod tests {
         let g = generators::erdos_renyi(60, 0.15, &mut rng);
         let (_, val) = local_search_maxcut(&g, &mut rng, 1000);
         assert!(val * 2 >= g.m as i64, "cut {val} vs m {}", g.m);
+    }
+
+    #[test]
+    fn greedy_cut_at_least_half_edges() {
+        use crate::util::prop;
+        prop::check(
+            "greedy-maxcut-half",
+            30,
+            |r| generators::erdos_renyi(6 + r.gen_range(60), 0.05 + r.next_f64() * 0.3, r),
+            |g| {
+                let (side, val) = greedy_maxcut(g);
+                val == crate::solvers::verify::cut_value(g, &side)
+                    && val * 2 >= g.m as i64
+            },
+        );
+    }
+
+    #[test]
+    fn greedy_cut_deterministic() {
+        let g = generators::erdos_renyi(40, 0.2, &mut Pcg32::seeded(8));
+        assert_eq!(greedy_maxcut(&g), greedy_maxcut(&g));
     }
 }

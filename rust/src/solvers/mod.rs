@@ -5,13 +5,16 @@
 
 /// Exact branch-and-bound MVC (CPLEX stand-in, DESIGN.md §3).
 pub mod exact;
-/// Greedy max-degree MVC heuristic.
+/// Greedy heuristics (max-degree MVC, min-degree MIS).
 pub mod greedy;
 /// Maximal-matching 2-approximation for MVC.
 pub mod approx2;
 /// Local-search refinement over a feasible cover.
 pub mod localsearch;
+/// Streaming feasibility checkers (cover / independence / cut value).
+pub mod verify;
 
 pub use approx2::two_approx_mvc;
 pub use exact::{exact_mvc, ExactResult};
-pub use greedy::greedy_mvc;
+pub use greedy::{greedy_mis, greedy_mvc};
+pub use localsearch::{greedy_maxcut, local_search_maxcut};

@@ -1,0 +1,135 @@
+//! First-class solution feasibility checkers (ISSUE 8 satellite): the
+//! canonical truth the quality harness, the equivalence tests, and the
+//! environment validators all share, so "bit-exact but infeasible" can
+//! never pass anywhere. All checkers stream the CSR directly — no
+//! `Graph::edges()` materialization — and stay allocation-free at 30M
+//! edges.
+
+use crate::env::Scenario;
+use crate::graph::Graph;
+
+/// Every edge has a selected endpoint. `sol[v]` marks selection and must
+/// cover all node ids (`sol.len() >= g.n`).
+pub fn is_vertex_cover(g: &Graph, sol: &[bool]) -> bool {
+    (0..g.n).all(|u| sol[u] || g.neighbors(u).iter().all(|&v| sol[v as usize]))
+}
+
+/// No edge has both endpoints selected.
+pub fn is_independent_set(g: &Graph, sol: &[bool]) -> bool {
+    (0..g.n).all(|u| !sol[u] || g.neighbors(u).iter().all(|&v| !sol[v as usize]))
+}
+
+/// Exact cut weight of a side assignment (each undirected edge counted
+/// once).
+pub fn cut_value(g: &Graph, side: &[bool]) -> i64 {
+    let mut cut = 0i64;
+    for u in 0..g.n {
+        for &v in g.neighbors(u) {
+            if (u as u32) < v && side[u] != side[v as usize] {
+                cut += 1;
+            }
+        }
+    }
+    cut
+}
+
+/// Scenario dispatch: is `sol` a feasible solution for `scenario` on `g`?
+/// A short mask is infeasible outright; any full-length side assignment
+/// is a feasible cut, so MaxCut only checks coverage.
+pub fn feasible(scenario: Scenario, g: &Graph, sol: &[bool]) -> bool {
+    if sol.len() < g.n {
+        return false;
+    }
+    match scenario {
+        Scenario::Mvc => is_vertex_cover(g, sol),
+        Scenario::Mis => is_independent_set(g, sol),
+        Scenario::MaxCut => true,
+    }
+}
+
+/// Expand a sorted node-id solution (the wire format of `JobOutcome` and
+/// the serve stream) into a selection mask over `n` nodes. Ids outside
+/// [0, n) are ignored — `feasible` on the result then reports exactly
+/// what the in-range selection achieves.
+pub fn ids_to_mask(n: usize, ids: &[usize]) -> Vec<bool> {
+    let mut mask = vec![false; n];
+    for &v in ids {
+        if v < n {
+            mask[v] = true;
+        }
+    }
+    mask
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::maxcut::MaxCutEnv;
+    use crate::env::mis::MisEnv;
+    use crate::env::mvc::MvcEnv;
+    use crate::graph::generators;
+    use crate::util::prop;
+
+    fn path4() -> Graph {
+        Graph::from_edges(4, &[(0, 1), (1, 2), (2, 3)]).unwrap()
+    }
+
+    #[test]
+    fn cover_checks() {
+        let g = path4();
+        assert!(is_vertex_cover(&g, &[false, true, true, false]));
+        assert!(is_vertex_cover(&g, &[true, true, true, true]));
+        assert!(!is_vertex_cover(&g, &[false, false, true, false])); // 0-1 uncovered
+        assert!(!is_vertex_cover(&g, &[true, false, false, true])); // 1-2 uncovered
+    }
+
+    #[test]
+    fn independence_checks() {
+        let g = path4();
+        assert!(is_independent_set(&g, &[true, false, true, false]));
+        assert!(is_independent_set(&g, &[false; 4]));
+        assert!(!is_independent_set(&g, &[true, true, false, false]));
+    }
+
+    #[test]
+    fn cut_checks() {
+        let g = Graph::from_edges(4, &[(0, 1), (1, 2), (2, 3), (0, 3)]).unwrap();
+        assert_eq!(cut_value(&g, &[true, false, true, false]), 4);
+        assert_eq!(cut_value(&g, &[false; 4]), 0);
+        assert_eq!(cut_value(&g, &[true, false, false, false]), 2);
+    }
+
+    #[test]
+    fn feasible_dispatch_and_short_masks() {
+        let g = path4();
+        assert!(feasible(Scenario::Mvc, &g, &[false, true, true, false]));
+        assert!(!feasible(Scenario::Mvc, &g, &[true, true])); // short mask
+        assert!(feasible(Scenario::Mis, &g, &[true, false, true, false]));
+        assert!(!feasible(Scenario::Mis, &g, &[true, true, false, false]));
+        assert!(feasible(Scenario::MaxCut, &g, &[true, false, false, false]));
+    }
+
+    #[test]
+    fn ids_round_trip_through_mask() {
+        let mask = ids_to_mask(5, &[1, 3, 99]);
+        assert_eq!(mask, vec![false, true, false, true, false]);
+    }
+
+    #[test]
+    fn prop_matches_env_checkers() {
+        prop::check(
+            "verify-matches-env",
+            25,
+            |r| {
+                let g = generators::erdos_renyi(6 + r.gen_range(40), 0.25, r);
+                let mask: Vec<bool> = (0..g.n).map(|_| r.next_f64() < 0.5).collect();
+                (g, mask)
+            },
+            |(g, mask)| {
+                is_vertex_cover(g, mask) == MvcEnv::is_vertex_cover(g, mask)
+                    && is_independent_set(g, mask) == MisEnv::is_independent_set(g, mask)
+                    && cut_value(g, mask) == MaxCutEnv::compute_cut(g, mask)
+            },
+        );
+    }
+}

@@ -20,6 +20,7 @@ use oggm::env::Scenario;
 use oggm::graph::{generators, Graph, PackLayout, Partition};
 use oggm::model::Params;
 use oggm::runtime::Runtime;
+use oggm::solvers::verify;
 use oggm::util::rng::Pcg32;
 
 fn setup() -> Option<Runtime> {
@@ -122,6 +123,13 @@ fn assert_batch_matches_sequential(scenario: Scenario, policy: SelectionPolicy) 
                 "{scenario} graph {i} used a different eval count at P={p}"
             );
             assert_eq!(b.objective, seq.objective);
+            // Independent feasibility check (solvers::verify, not the
+            // engine's own `valid` flag).
+            let mask = verify::ids_to_mask(g.n, &b.solution);
+            assert!(
+                verify::feasible(scenario, g, &mask),
+                "{scenario} graph {i}: engine solution fails verify at P={p}"
+            );
         }
     }
 }
@@ -230,6 +238,13 @@ fn queue_groups_and_returns_in_order() {
         assert_eq!(o.scenario, jobs[i].scenario);
         assert!(o.valid);
         assert_eq!(o.solution.len(), o.solution_size);
+        // Re-verify every streamed outcome with the canonical checkers.
+        let mask = verify::ids_to_mask(jobs[i].graph.n, &o.solution);
+        assert!(
+            verify::feasible(o.scenario, &jobs[i].graph, &mask),
+            "job {}: outcome fails verify",
+            o.id
+        );
     }
     // Two scenario groups → at least two packs.
     assert!(report.packs.len() >= 2);

@@ -19,6 +19,7 @@ use oggm::graph::{generators, Graph, Partition};
 use oggm::model::Params;
 use oggm::parallel::RankPool;
 use oggm::runtime::Runtime;
+use oggm::solvers::verify;
 use oggm::util::rng::Pcg32;
 
 fn runtime() -> Option<Runtime> {
@@ -124,6 +125,13 @@ fn rank_solutions_match_lockstep_all_scenarios() {
                     (got.objective - want.objective).abs() < 1e-4,
                     "P={p} {storage:?} {scenario}: objective diverges"
                 );
+                // Both engines' solutions must pass the canonical
+                // feasibility checkers, not just match each other.
+                let mask = verify::ids_to_mask(g.n, &got.solution);
+                assert!(
+                    verify::feasible(scenario, &g, &mask),
+                    "P={p} {storage:?} {scenario}: rank solution fails verify"
+                );
             }
         }
     }
@@ -171,10 +179,15 @@ fn rank_pack_with_repack_matches_lockstep() {
         };
         assert_eq!(got.rounds, want.rounds, "{storage:?}: round counts diverge");
         assert_eq!(got.repacks, want.repacks, "{storage:?}: repack counts diverge");
-        for (i, (g, w)) in got.per_graph.iter().zip(&want.per_graph).enumerate() {
-            assert_eq!(g.solution, w.solution, "{storage:?} graph {i}: solutions diverge");
-            assert!((g.objective - w.objective).abs() < 1e-4, "{storage:?} graph {i}");
-            assert!(g.valid, "{storage:?} graph {i}: invalid solution");
+        for (i, (res, w)) in got.per_graph.iter().zip(&want.per_graph).enumerate() {
+            assert_eq!(res.solution, w.solution, "{storage:?} graph {i}: solutions diverge");
+            assert!((res.objective - w.objective).abs() < 1e-4, "{storage:?} graph {i}");
+            assert!(res.valid, "{storage:?} graph {i}: invalid solution");
+            let mask = verify::ids_to_mask(graphs[i].n, &res.solution);
+            assert!(
+                verify::feasible(Scenario::Mvc, &graphs[i], &mask),
+                "{storage:?} graph {i}: rank pack solution fails verify"
+            );
         }
         // Rank-engine transfer accounting is populated from the workers.
         assert!(got.exec.executions > 0);

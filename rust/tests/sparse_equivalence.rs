@@ -22,6 +22,7 @@ use oggm::env::Scenario;
 use oggm::graph::{generators, Graph};
 use oggm::model::Params;
 use oggm::runtime::Runtime;
+use oggm::solvers::verify;
 use oggm::util::rng::Pcg32;
 
 fn setup() -> Option<Runtime> {
@@ -81,6 +82,13 @@ fn assert_sparse_matches_dense_sequential(scenario: Scenario, policy: SelectionP
             assert_eq!(got.objective, want.objective);
             assert_eq!(got.evaluations, want.evaluations);
             assert_eq!(got.selections, want.selections);
+            // Matching dense is not enough: both must be feasible per the
+            // canonical checkers.
+            let mask = verify::ids_to_mask(g.n, &got.solution);
+            assert!(
+                verify::feasible(scenario, g, &mask),
+                "{scenario} graph {i}: sparse solution fails verify at P={p}"
+            );
         }
     }
 }
@@ -133,6 +141,11 @@ fn sparse_batched_matches_dense_through_repacks() {
                 );
                 assert_eq!(x.objective, y.objective);
                 assert_eq!(x.evaluations, y.evaluations);
+                let mask = verify::ids_to_mask(graphs[i].n, &x.solution);
+                assert!(
+                    verify::feasible(scenario, &graphs[i], &mask),
+                    "{scenario} graph {i}: sparse pack solution fails verify at P={p}"
+                );
             }
             assert_eq!(got.pack_edges, want.pack_edges);
         }

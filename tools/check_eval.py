@@ -1,0 +1,164 @@
+#!/usr/bin/env python3
+"""Validate an `oggm eval` JSON quality report (CI smoke check).
+
+Usage: check_eval.py <report.json> [--max-ratio X] [--require-baselines N]
+                     [--allow-missing]
+
+Schema (README §eval / rust/src/analysis/quality.rs):
+
+* Top level: "scenario" (mvc|maxcut|mis), "instances" (non-empty list),
+  "summary" {"instances", "worst_ratio", "infeasible", "solvers"}.
+* Each instance: "name", "nodes", "edges", "reference" {"solver",
+  "objective", "optimal"}, "scores" (non-empty list).
+* Each score: "solver", "objective", "size", "feasible", "optimal",
+  "ratio", "wall_s"; RL scores add "per_step_ms"/"evaluations".
+
+Exits non-zero on any schema violation, any score with "feasible": false,
+any feasible ratio above --max-ratio (default 2.5), or fewer than
+--require-baselines distinct non-RL solvers (default 2). --allow-missing
+exits 0 when the report does not exist (eval skipped in check mode).
+"""
+
+import json
+import sys
+from pathlib import Path
+
+SCENARIOS = {"mvc", "maxcut", "mis"}
+SCORE_KEYS = {
+    "solver": str,
+    "objective": (int, float),
+    "size": (int, float),
+    "feasible": bool,
+    "optimal": bool,
+    "ratio": (int, float),
+    "wall_s": (int, float),
+}
+REFERENCE_KEYS = {
+    "solver": str,
+    "objective": (int, float),
+    "optimal": bool,
+}
+SUMMARY_KEYS = {
+    "instances": (int, float),
+    "worst_ratio": (int, float),
+    "infeasible": (int, float),
+    "solvers": dict,
+}
+
+
+def fail(where, msg):
+    print(f"check_eval: {where}: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def check_keys(where, obj, schema):
+    for key, ty in schema.items():
+        if key not in obj:
+            fail(where, f"missing '{key}'")
+        if not isinstance(obj[key], ty) or (ty is not bool and isinstance(obj[key], bool)):
+            fail(where, f"'{key}' has wrong type: {obj[key]!r}")
+
+
+def arg_value(flags, name, default):
+    for flag in flags:
+        if flag.startswith(f"{name}="):
+            return flag.split("=", 1)[1]
+    return default
+
+
+def main():
+    args = [a for a in sys.argv[1:] if not a.startswith("--")]
+    flags = {a for a in sys.argv[1:] if a.startswith("--")}
+    if len(args) != 1:
+        print(__doc__, file=sys.stderr)
+        sys.exit(2)
+    max_ratio = float(arg_value(flags, "--max-ratio", "2.5"))
+    require_baselines = int(arg_value(flags, "--require-baselines", "2"))
+    path = Path(args[0])
+    if not path.exists():
+        if "--allow-missing" in flags:
+            print(f"check_eval: {path} missing, allowed (eval skipped)")
+            sys.exit(0)
+        fail(str(path), "report does not exist")
+
+    try:
+        report = json.loads(path.read_text())
+    except json.JSONDecodeError as e:
+        fail(str(path), f"not valid JSON: {e}")
+    if not isinstance(report, dict):
+        fail(str(path), "report is not a JSON object")
+    if report.get("scenario") not in SCENARIOS:
+        fail("top level", f"unknown scenario {report.get('scenario')!r}")
+    instances = report.get("instances")
+    if not isinstance(instances, list) or not instances:
+        fail("top level", "'instances' must be a non-empty list")
+    summary = report.get("summary")
+    if not isinstance(summary, dict):
+        fail("top level", "'summary' must be an object")
+    check_keys("summary", summary, SUMMARY_KEYS)
+
+    baselines = set()
+    infeasible = 0
+    worst_ratio = 1.0
+    scores_seen = 0
+    for i, inst in enumerate(instances):
+        where = f"instance {i}"
+        if not isinstance(inst, dict):
+            fail(where, "not a JSON object")
+        if not isinstance(inst.get("name"), str) or not inst["name"]:
+            fail(where, "missing/empty 'name'")
+        where = f"instance {inst['name']}"
+        for key in ("nodes", "edges"):
+            if not isinstance(inst.get(key), (int, float)) or isinstance(inst.get(key), bool):
+                fail(where, f"'{key}' is not numeric")
+        ref = inst.get("reference")
+        if not isinstance(ref, dict):
+            fail(where, "'reference' must be an object")
+        check_keys(f"{where} reference", ref, REFERENCE_KEYS)
+        scores = inst.get("scores")
+        if not isinstance(scores, list) or not scores:
+            fail(where, "'scores' must be a non-empty list")
+        for score in scores:
+            if not isinstance(score, dict):
+                fail(where, "score is not a JSON object")
+            check_keys(f"{where} score", score, SCORE_KEYS)
+            scores_seen += 1
+            solver = score["solver"]
+            if solver != "rl":
+                baselines.add(solver)
+            if not score["feasible"]:
+                infeasible += 1
+                print(
+                    f"check_eval: {where}: solver {solver} INFEASIBLE "
+                    f"(objective {score['objective']})",
+                    file=sys.stderr,
+                )
+                continue
+            if score["ratio"] < 1.0:
+                fail(where, f"solver {solver} ratio {score['ratio']} below 1.0")
+            worst_ratio = max(worst_ratio, score["ratio"])
+            if score["ratio"] > max_ratio:
+                fail(
+                    where,
+                    f"solver {solver} ratio {score['ratio']:.4f} exceeds "
+                    f"--max-ratio {max_ratio}",
+                )
+
+    if infeasible:
+        fail("report", f"{infeasible} scores failed feasibility validation")
+    if int(summary["infeasible"]) != 0:
+        fail("summary", f"summary reports {summary['infeasible']} infeasible scores")
+    if len(baselines) < require_baselines:
+        fail(
+            "report",
+            f"only {len(baselines)} distinct baselines ({sorted(baselines)}), "
+            f"need {require_baselines}",
+        )
+    print(
+        f"check_eval: OK ({len(instances)} instances, {scores_seen} scores, "
+        f"baselines {sorted(baselines)}, worst ratio {worst_ratio:.4f})"
+    )
+
+
+if __name__ == "__main__":
+    main()
