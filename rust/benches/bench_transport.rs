@@ -1,0 +1,257 @@
+//! bench_transport: per-frame overhead of the two rank transports
+//! (DESIGN.md §12) — the in-process channel hop vs TCP-loopback socket
+//! framing — across payload sizes, plus (with artifacts) the per-step
+//! cost of a real rank-parallel forward over each. Emits
+//! BENCH_transport.json.
+//!
+//! Two sections compose:
+//!  - **Echo ladder (always runs, no artifacts needed):** one echo peer
+//!    per transport bounces frames back; the ladder walks payload sizes
+//!    from control-message (64 B) to θ-broadcast scale (1 MiB), timing
+//!    round-trips. The in-proc peer moves the payload over channels
+//!    without serializing (what `InProcLink` does); the TCP peer runs
+//!    the real `transport::frame` codec over a loopback socket.
+//!  - **Measured forward (artifacts present):** a P=2 pool over each
+//!    transport drives the same policy evaluation; per-step wall time
+//!    and the pool's tx/rx byte counters land in the JSON.
+//!
+//! Check mode: without artifacts the bench still emits the echo table
+//! and JSON, prints a notice for the skipped section, and exits 0.
+
+#[path = "common.rs"]
+mod common;
+
+use oggm::coordinator::metrics::Table;
+use oggm::transport::frame::{read_frame, write_frame, HEADER_LEN};
+use oggm::util::json::Json;
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc;
+use std::time::Instant;
+
+/// (payload bytes, round-trips) ladder; trimmed in fast mode.
+const SIZES: &[(usize, usize)] = &[(64, 4096), (4 << 10, 1024), (64 << 10, 256), (1 << 20, 32)];
+
+struct Row {
+    transport: &'static str,
+    payload: usize,
+    iters: usize,
+    us_per_rt: f64,
+    mb_s: f64,
+}
+
+fn ladder() -> Vec<(usize, usize)> {
+    if common::fast_mode() {
+        SIZES.iter().take(2).map(|&(s, it)| (s, it / 8)).collect()
+    } else {
+        SIZES.to_vec()
+    }
+}
+
+/// Echo over an in-process channel pair: the payload crosses two mpsc
+/// hops per round-trip and is never serialized, mirroring `InProcLink`.
+fn inproc_echo() -> Vec<Row> {
+    let (tx, peer_rx) = mpsc::channel::<Vec<u8>>();
+    let (peer_tx, rx) = mpsc::channel::<Vec<u8>>();
+    let peer = std::thread::spawn(move || {
+        while let Ok(v) = peer_rx.recv() {
+            if peer_tx.send(v).is_err() {
+                break;
+            }
+        }
+    });
+    let mut rows = Vec::new();
+    for (payload, iters) in ladder() {
+        let msg = vec![7u8; payload];
+        for _ in 0..8 {
+            tx.send(msg.clone()).unwrap();
+            rx.recv().unwrap();
+        }
+        let t = Instant::now();
+        for _ in 0..iters {
+            tx.send(msg.clone()).unwrap();
+            let back = rx.recv().unwrap();
+            assert_eq!(back.len(), payload);
+        }
+        let dt = t.elapsed().as_secs_f64();
+        rows.push(Row {
+            transport: "inproc",
+            payload,
+            iters,
+            us_per_rt: dt * 1e6 / iters as f64,
+            mb_s: (2 * payload * iters) as f64 / dt / 1e6,
+        });
+    }
+    drop(tx);
+    peer.join().unwrap();
+    rows
+}
+
+/// Echo over a loopback TCP socket with the real frame codec on both
+/// sides: each round-trip serializes, frames, and parses twice.
+fn tcp_echo() -> Vec<Row> {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+    let addr = listener.local_addr().unwrap();
+    let peer = std::thread::spawn(move || {
+        let (mut s, _) = listener.accept().expect("accept echo client");
+        s.set_nodelay(true).ok();
+        while let Ok(f) = read_frame(&mut s) {
+            if write_frame(&mut s, f.kind, f.rank, &f.payload).is_err() {
+                break;
+            }
+        }
+    });
+    let mut stream = TcpStream::connect(addr).expect("connect echo peer");
+    stream.set_nodelay(true).ok();
+    let mut rows = Vec::new();
+    for (payload, iters) in ladder() {
+        let msg = vec![7u8; payload];
+        for _ in 0..8 {
+            write_frame(&mut stream, 1, 0, &msg).unwrap();
+            read_frame(&mut stream).unwrap();
+        }
+        let t = Instant::now();
+        for _ in 0..iters {
+            write_frame(&mut stream, 1, 0, &msg).unwrap();
+            let back = read_frame(&mut stream).unwrap();
+            assert_eq!(back.payload.len(), payload);
+        }
+        let dt = t.elapsed().as_secs_f64();
+        rows.push(Row {
+            transport: "tcp",
+            payload,
+            iters,
+            us_per_rt: dt * 1e6 / iters as f64,
+            mb_s: (2 * (payload + HEADER_LEN) * iters) as f64 / dt / 1e6,
+        });
+    }
+    drop(stream);
+    peer.join().unwrap();
+    rows
+}
+
+/// Measured forward per transport (artifact-gated): returns JSON or a
+/// notice string for the skip path.
+fn measured_forward() -> Result<Json, String> {
+    use oggm::coordinator::engine::EngineCfg;
+    use oggm::coordinator::shard::{shards_for_graph, ShardSet};
+    use oggm::graph::{generators, Partition};
+    use oggm::parallel::{remote_worker, RankPool};
+    use oggm::util::rng::Pcg32;
+
+    std::env::set_var("OGGM_RANK_WAIT_SECS", "4");
+    let p = 2usize;
+    let mut rng = Pcg32::seeded(0x7721);
+    let g = generators::erdos_renyi(20, 0.25, &mut rng);
+    let params = common::init_params(&mut rng);
+    let part = Partition::new(24, p);
+    let cfg = EngineCfg::new(p, 2);
+    let steps = common::scaled(40, 5);
+    let fresh = || {
+        let removed = vec![false; g.n];
+        let sol = vec![false; g.n];
+        let cand: Vec<bool> = (0..g.n).map(|v| g.degree(v) > 0).collect();
+        ShardSet::Dense(shards_for_graph(part, &g, &removed, &sol, &cand))
+    };
+    let dir = oggm::runtime::manifest::default_dir();
+
+    let run = |pool: &RankPool| -> Result<(f64, Vec<f32>, u64, u64), String> {
+        let mut set = fresh();
+        pool.install(0, &params, &mut set, true).map_err(|e| format!("{e:#}"))?;
+        let mut scores = Vec::new();
+        let t = Instant::now();
+        for _ in 0..steps {
+            scores = pool.forward(0, &cfg, &set, false, true).map_err(|e| format!("{e:#}"))?.scores;
+        }
+        let ms = t.elapsed().as_secs_f64() * 1e3 / steps as f64;
+        let st = pool.stats().map_err(|e| format!("{e:#}"))?;
+        Ok((ms, scores, st.tx_bytes, st.rx_bytes))
+    };
+
+    let inproc = RankPool::new(&dir, p).map_err(|e| format!("rank pool unavailable: {e:#}"))?;
+    let (in_ms, in_scores, in_tx, in_rx) = run(&inproc)?;
+    drop(inproc);
+
+    let l = TcpListener::bind("127.0.0.1:0").map_err(|e| e.to_string())?;
+    let addr = l.local_addr().unwrap().to_string();
+    drop(l);
+    let workers: Vec<_> = (0..p)
+        .map(|rank| {
+            let addr = addr.clone();
+            let dir = dir.clone();
+            std::thread::spawn(move || {
+                if let Err(e) = remote_worker(dir, &addr, rank, Some(p), None) {
+                    eprintln!("bench_transport: worker {rank} exited with: {e:#}");
+                }
+            })
+        })
+        .collect();
+    let tcp = RankPool::new_tcp(&dir, p, 2, None, &format!("tcp:{addr}"))
+        .map_err(|e| format!("TCP rank group unavailable: {e:#}"))?;
+    let (tcp_ms, tcp_scores, tcp_tx, tcp_rx) = run(&tcp)?;
+    drop(tcp);
+    for w in workers {
+        let _ = w.join();
+    }
+    assert_eq!(tcp_scores, in_scores, "transports diverged — equivalence is broken");
+
+    println!(
+        "bench_transport: measured P={p} forward — inproc {in_ms:.3} ms/step, \
+         tcp {tcp_ms:.3} ms/step ({:.2}x); tcp traffic {tcp_tx} B out / {tcp_rx} B in",
+        tcp_ms / in_ms.max(1e-9)
+    );
+    Ok(Json::obj()
+        .set("p", p)
+        .set("steps", steps)
+        .set("inproc_ms_per_step", in_ms)
+        .set("tcp_ms_per_step", tcp_ms)
+        .set("inproc_tx_bytes", in_tx)
+        .set("inproc_rx_bytes", in_rx)
+        .set("tcp_tx_bytes", tcp_tx)
+        .set("tcp_rx_bytes", tcp_rx))
+}
+
+fn main() {
+    let mut rows = inproc_echo();
+    rows.extend(tcp_echo());
+
+    let mut t = Table::new(
+        "bench_transport: echo round-trip per transport (frame codec on TCP, zero-copy in-proc)",
+        &["payload_B", "iters", "us_per_rt", "MB_s"],
+    );
+    let mut json_rows: Vec<Json> = Vec::new();
+    for r in &rows {
+        t.row(
+            format!("{}/{}", r.transport, r.payload),
+            vec![r.payload as f64, r.iters as f64, r.us_per_rt, r.mb_s],
+        );
+        json_rows.push(
+            Json::obj()
+                .set("transport", r.transport)
+                .set("payload_bytes", r.payload)
+                .set("iters", r.iters)
+                .set("us_per_round_trip", r.us_per_rt)
+                .set("mb_per_s", r.mb_s),
+        );
+    }
+    common::emit(&t);
+    let small_in = rows.iter().find(|r| r.transport == "inproc").unwrap().us_per_rt;
+    let small_tcp = rows.iter().find(|r| r.transport == "tcp").unwrap().us_per_rt;
+    println!(
+        "bench_transport: 64 B round-trip — inproc {small_in:.1} us, tcp {small_tcp:.1} us \
+         ({:.1}x framing overhead)",
+        small_tcp / small_in.max(1e-9)
+    );
+
+    let mut json = Json::obj().set("bench", "transport").set("echo", json_rows);
+    if !oggm::runtime::manifest::default_dir().join("manifest.tsv").exists() {
+        println!("bench_transport: artifacts not built, skipping measured forward (check mode OK)");
+    } else {
+        match measured_forward() {
+            Ok(m) => json = json.set("measured", m),
+            Err(why) => println!("bench_transport: skipping measured forward: {why}"),
+        }
+    }
+
+    std::fs::write("BENCH_transport.json", json.render()).expect("write BENCH_transport.json");
+    println!("bench_transport: wrote BENCH_transport.json; OK");
+}

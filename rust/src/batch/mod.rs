@@ -23,7 +23,7 @@ pub mod spec;
 pub mod queue;
 
 pub use env::BatchEnv;
-pub use queue::{run_queue, Job, JobOutcome, PackStat, QueueReport};
+pub use queue::{run_queue, run_queue_with, Job, JobOutcome, PackStat, QueueReport};
 pub use solve::{
     solve_pack, solve_pack_in, solve_pack_session, BatchCfg, BatchGraphResult, BatchResult,
     SessionState,

@@ -175,13 +175,29 @@ pub fn run_queue(
     params: &Params,
     jobs: &[Job],
 ) -> Result<QueueReport> {
+    run_queue_with(rt, cfg, params, jobs, None)
+}
+
+/// [`run_queue`] with an explicit rank transport spec: `Some` routes the
+/// rank-parallel engine over TCP worker processes (`--ranks`, DESIGN.md
+/// §12) instead of in-process threads. Grouping, pack numbering, and
+/// solutions are identical either way — the transport is below the
+/// engine's determinism seam.
+pub fn run_queue_with(
+    rt: &Runtime,
+    cfg: &BatchCfg,
+    params: &Params,
+    jobs: &[Job],
+    ranks: Option<&str>,
+) -> Result<QueueReport> {
     let wall = Instant::now();
     // OnFlush pins the historical grouping; fail_fast pins the historical
     // error path (an early pack failure must not keep solving packs whose
     // outcomes this call is about to discard).
     let mut svc = Service::with_cfg(rt, params.clone(), *cfg)
         .launch_policy(LaunchPolicy::OnFlush)
-        .fail_fast(true);
+        .fail_fast(true)
+        .rank_transport(ranks.map(|s| s.to_string()));
     for job in jobs {
         // Admission errors (no compiled bucket fits) fail the whole queue,
         // as the one-shot grouping always did.

@@ -24,6 +24,8 @@
 //!   participant cannot cascade panics through the survivors either.
 
 use crate::collective::fault::{FaultKind, FaultPlan};
+use crate::transport::msg::CollOp;
+use crate::transport::tcp::{RemoteComm, RemoteIo};
 use std::cell::Cell;
 use std::fmt;
 use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
@@ -77,10 +79,22 @@ struct Shared {
     reduced: Vec<Mutex<Vec<f32>>>,
 }
 
+/// Where a handle's collectives actually run: the in-process shared
+/// deposit slots, or a TCP worker's hub-folded round trips through the
+/// coordinator (DESIGN.md §12). Both fold in rank order, so results
+/// are bitwise identical across backends.
+#[derive(Clone)]
+enum Backend {
+    /// Shared-memory deposit slots (all ranks in one process).
+    Local(Arc<Shared>),
+    /// Frames to the coordinator's collective hub (worker process).
+    Remote(Arc<RemoteComm>),
+}
+
 /// A P-way collective communicator. Clone one handle per participant.
 #[derive(Clone)]
 pub struct Communicator {
-    shared: Arc<Shared>,
+    backend: Backend,
     /// This handle's rank (0..P).
     pub rank: usize,
     /// Optional fault-injection script checked at every phase entry
@@ -133,7 +147,7 @@ impl Communicator {
         });
         (0..p)
             .map(|rank| Communicator {
-                shared: shared.clone(),
+                backend: Backend::Local(shared.clone()),
                 rank,
                 fault: fault.clone(),
                 phase_no: Cell::new(0),
@@ -141,26 +155,69 @@ impl Communicator {
             .collect()
     }
 
+    /// Create the handle a separate worker *process* uses: collectives
+    /// round-trip through the coordinator's hub over the rank transport
+    /// instead of shared memory (DESIGN.md §12).
+    pub(crate) fn remote(
+        rank: usize,
+        p: usize,
+        io: Arc<RemoteIo>,
+        fault: Option<Arc<FaultPlan>>,
+    ) -> Communicator {
+        Communicator {
+            backend: Backend::Remote(Arc::new(RemoteComm::new(io, rank, p))),
+            rank,
+            fault,
+            phase_no: Cell::new(0),
+        }
+    }
+
     /// Number of participating ranks P.
     pub fn p(&self) -> usize {
-        self.shared.p
+        match &self.backend {
+            Backend::Local(shared) => shared.p,
+            Backend::Remote(rc) => rc.p(),
+        }
     }
 
     /// (total bytes sent+received across ranks, number of collectives).
     pub fn traffic(&self) -> (u64, u64) {
-        let s = lock(&self.shared.ctl);
-        (s.bytes_total, s.ops_total)
+        match &self.backend {
+            Backend::Local(shared) => {
+                let s = lock(&shared.ctl);
+                (s.bytes_total, s.ops_total)
+            }
+            Backend::Remote(rc) => rc.traffic(),
+        }
     }
 
     /// Mark the group failed: wakes every waiter, and every in-flight or
     /// subsequent collective on any handle returns a [`CommError`] carrying
     /// this rank and reason. The first abort wins; later ones are no-ops.
+    /// On the remote backend the abort is also fanned to every peer
+    /// through the coordinator's hub.
     pub fn abort(&self, reason: impl Into<String>) {
-        let mut s = lock(&self.shared.ctl);
-        if s.aborted.is_none() {
-            s.aborted = Some((self.rank, reason.into()));
+        match &self.backend {
+            Backend::Local(shared) => {
+                let mut s = lock(&shared.ctl);
+                if s.aborted.is_none() {
+                    s.aborted = Some((self.rank, reason.into()));
+                }
+                shared.cv.notify_all();
+            }
+            Backend::Remote(rc) => rc.abort(&reason.into()),
         }
-        self.shared.cv.notify_all();
+    }
+
+    /// Make this handle's group fresh again after a failure. Remote
+    /// handles clear their sticky abort and zero their counters (the
+    /// coordinator resets its hub in the same breath); local handles are
+    /// a no-op — the pool replaces them wholesale via `Req::NewComm`.
+    pub(crate) fn reset(&self) {
+        if let Backend::Remote(rc) = &self.backend {
+            rc.reset();
+            self.phase_no.set(0);
+        }
     }
 
     /// Act out a scripted fault for this (rank, phase, op) coordinate, if
@@ -184,6 +241,8 @@ impl Communicator {
                 self.abort(msg.clone());
                 panic!("{msg}");
             }
+            // Transport kinds fire at the frame send site, never here.
+            Some(FaultKind::Drop | FaultKind::Delay(_)) => unreachable!(),
         }
     }
 
@@ -191,25 +250,31 @@ impl Communicator {
     /// group (last arriver advances the generation) or wait. Returns an
     /// error immediately if the group was aborted before or during the
     /// wait.
-    fn phase(&self, op: &'static str, bytes: u64, count_op: bool) -> CommResult<()> {
+    fn phase(
+        &self,
+        shared: &Shared,
+        op: &'static str,
+        bytes: u64,
+        count_op: bool,
+    ) -> CommResult<()> {
         self.maybe_inject(op);
-        let mut s = lock(&self.shared.ctl);
+        let mut s = lock(&shared.ctl);
         if let Some((rank, reason)) = &s.aborted {
             return Err(CommError { rank: *rank, reason: reason.clone(), op });
         }
         let gen = s.generation;
         s.bytes_total += bytes;
         s.arrived += 1;
-        if s.arrived == self.shared.p {
+        if s.arrived == shared.p {
             s.arrived = 0;
             s.generation += 1;
             if count_op {
                 s.ops_total += 1;
             }
-            self.shared.cv.notify_all();
+            shared.cv.notify_all();
         } else {
             while s.generation == gen && s.aborted.is_none() {
-                s = self.shared.cv.wait(s).unwrap_or_else(PoisonError::into_inner);
+                s = shared.cv.wait(s).unwrap_or_else(PoisonError::into_inner);
             }
             if let Some((rank, reason)) = &s.aborted {
                 return Err(CommError { rank: *rank, reason: reason.clone(), op });
@@ -218,9 +283,30 @@ impl Communicator {
         Ok(())
     }
 
+    /// One remote phase entry: run the fault script at the same
+    /// (rank, phase, op) coordinates the local backend uses, then
+    /// surface the sticky abort if the group already failed. Keeping
+    /// the phase grid identical across backends is what lets one
+    /// `FaultPlan` address either transport.
+    fn remote_guard(&self, rc: &RemoteComm, op: &'static str) -> CommResult<()> {
+        self.maybe_inject(op);
+        if let Some((rank, reason)) = rc.aborted() {
+            return Err(CommError { rank, reason, op });
+        }
+        Ok(())
+    }
+
     /// Barrier: returns once all P ranks have arrived (or errs on abort).
     pub fn barrier(&self) -> CommResult<()> {
-        self.phase("barrier", 0, false)
+        match &self.backend {
+            Backend::Local(shared) => self.phase(shared, "barrier", 0, false),
+            Backend::Remote(rc) => {
+                self.remote_guard(rc, "barrier")?;
+                rc.roundtrip(CollOp::Barrier, Vec::new())
+                    .map_err(|(rank, reason)| CommError { rank, reason, op: "barrier" })?;
+                Ok(())
+            }
+        }
     }
 
     /// All-reduce (sum) in place: after return, `buf` on every rank holds
@@ -231,21 +317,35 @@ impl Communicator {
     /// same left-fold the lockstep engine's host `add_assign` performs —
     /// while the other ranks reduce their chunks concurrently.
     pub fn all_reduce_sum(&self, buf: &mut [f32]) -> CommResult<()> {
-        let p = self.shared.p;
+        let shared = match &self.backend {
+            Backend::Local(shared) => shared,
+            Backend::Remote(rc) => {
+                self.remote_guard(rc, "all_reduce(deposit)")?;
+                let out = rc.roundtrip(CollOp::AllReduce, buf.to_vec()).map_err(
+                    |(rank, reason)| CommError { rank, reason, op: "all_reduce(deposit)" },
+                )?;
+                rc.add_traffic(4 * buf.len() as u64 * rc.p() as u64, true);
+                self.remote_guard(rc, "all_reduce(reduce)")?;
+                assert_eq!(out.len(), buf.len(), "all_reduce length mismatch across ranks");
+                buf.copy_from_slice(&out);
+                return self.remote_guard(rc, "all_reduce(consume)");
+            }
+        };
+        let p = shared.p;
         let len = buf.len();
         {
-            let mut slot = lock(&self.shared.slots[self.rank]);
+            let mut slot = lock(&shared.slots[self.rank]);
             slot.clear();
             slot.extend_from_slice(buf);
         }
-        self.phase("all_reduce(deposit)", 4 * len as u64, true)?;
+        self.phase(shared, "all_reduce(deposit)", 4 * len as u64, true)?;
         let (lo, hi) = chunk_range(len, p, self.rank);
         {
-            let mut out = lock(&self.shared.reduced[self.rank]);
+            let mut out = lock(&shared.reduced[self.rank]);
             out.clear();
             out.resize(hi - lo, 0.0);
             for r in 0..p {
-                let slot = lock(&self.shared.slots[r]);
+                let slot = lock(&shared.slots[r]);
                 assert_eq!(slot.len(), len, "all_reduce length mismatch across ranks");
                 if r == 0 {
                     out.copy_from_slice(&slot[lo..hi]);
@@ -256,51 +356,79 @@ impl Communicator {
                 }
             }
         }
-        self.phase("all_reduce(reduce)", 0, false)?;
+        self.phase(shared, "all_reduce(reduce)", 0, false)?;
         for r in 0..p {
             let (rlo, rhi) = chunk_range(len, p, r);
-            let red = lock(&self.shared.reduced[r]);
+            let red = lock(&shared.reduced[r]);
             buf[rlo..rhi].copy_from_slice(&red);
         }
         // Final barrier so no rank re-deposits before everyone copied out.
-        self.phase("all_reduce(consume)", 0, false)
+        self.phase(shared, "all_reduce(consume)", 0, false)
     }
 
     /// All-gather: each rank contributes `part`; returns the concatenation
     /// ordered by rank (Alg. 4 line 6).
     pub fn all_gather(&self, part: &[f32]) -> CommResult<Vec<f32>> {
+        let shared = match &self.backend {
+            Backend::Local(shared) => shared,
+            Backend::Remote(rc) => {
+                self.remote_guard(rc, "all_gather(deposit)")?;
+                let out = rc.roundtrip(CollOp::AllGather, part.to_vec()).map_err(
+                    |(rank, reason)| CommError { rank, reason, op: "all_gather(deposit)" },
+                )?;
+                rc.add_traffic(4 * out.len() as u64, true);
+                self.remote_guard(rc, "all_gather(consume)")?;
+                return Ok(out);
+            }
+        };
         {
-            let mut slot = lock(&self.shared.slots[self.rank]);
+            let mut slot = lock(&shared.slots[self.rank]);
             slot.clear();
             slot.extend_from_slice(part);
         }
-        self.phase("all_gather(deposit)", 4 * part.len() as u64, true)?;
+        self.phase(shared, "all_gather(deposit)", 4 * part.len() as u64, true)?;
         let mut out = Vec::new();
-        for r in 0..self.shared.p {
-            out.extend_from_slice(&lock(&self.shared.slots[r]));
+        for r in 0..shared.p {
+            out.extend_from_slice(&lock(&shared.slots[r]));
         }
         // Ensure all ranks consumed before slots are overwritten.
-        self.phase("all_gather(consume)", 0, false)?;
+        self.phase(shared, "all_gather(consume)", 0, false)?;
         Ok(out)
     }
 
     /// Broadcast from rank 0.
     pub fn broadcast(&self, buf: &mut Vec<f32>) -> CommResult<()> {
+        let shared = match &self.backend {
+            Backend::Local(shared) => shared,
+            Backend::Remote(rc) => {
+                self.remote_guard(rc, "broadcast(deposit)")?;
+                let payload = if self.rank == 0 { buf.clone() } else { Vec::new() };
+                let out = rc.roundtrip(CollOp::Broadcast, payload).map_err(
+                    |(rank, reason)| CommError { rank, reason, op: "broadcast(deposit)" },
+                )?;
+                rc.add_traffic(4 * out.len() as u64, true);
+                if self.rank != 0 {
+                    buf.clear();
+                    buf.extend_from_slice(&out);
+                }
+                return self.remote_guard(rc, "broadcast(consume)");
+            }
+        };
         let bytes = if self.rank == 0 {
-            let mut slot = lock(&self.shared.slots[0]);
+            let mut slot = lock(&shared.slots[0]);
             slot.clear();
             slot.extend_from_slice(buf);
             4 * buf.len() as u64
         } else {
             0
         };
-        self.phase("broadcast(deposit)", bytes, true)?;
+        self.phase(shared, "broadcast(deposit)", bytes, true)?;
         if self.rank != 0 {
-            let slot = lock(&self.shared.slots[0]);
+            let slot = lock(&shared.slots[0]);
             buf.clear();
             buf.extend_from_slice(&slot);
         }
-        self.phase("broadcast(consume)", 0, false)
+        self.phase(shared, "broadcast(consume)", 0, false)
     }
 }
 

@@ -16,12 +16,16 @@
 //! rank=1,step=3,kind=panic
 //! rank=0,kind=err,op=all_reduce(deposit)
 //! rank=1,step=0,kind=slow,ms=15
+//! rank=1,kind=drop,frame=2
+//! rank=0,kind=delay,ms=30
 //! ```
 //!
 //! - `rank` (required): which rank the fault targets.
 //! - `kind` (required): `panic` (thread dies → pool replaces the rank),
-//!   `err` (recoverable `Err` response), or `slow` (bounded sleep,
-//!   `ms=` duration, default 20ms).
+//!   `err` (recoverable `Err` response), `slow` (bounded sleep,
+//!   `ms=` duration, default 20ms), or the transport faults `drop` (a
+//!   coordinator→rank frame is discarded; the pack retries) and `delay`
+//!   (a frame is stalled `ms=` before sending).
 //! - `step` (optional): the 0-based occurrence counter at the injection
 //!   site — forward steps for worker faults, `phase()` calls on that
 //!   rank's handle for collective faults. Omitted = first opportunity.
@@ -29,6 +33,11 @@
 //!   `all_gather(deposit)`). Present = the fault fires inside
 //!   `Communicator::phase`; absent = it fires at the worker's forward
 //!   step. The two sites keep independent counters.
+//! - `frame` (optional, transport kinds only): the 0-based frame
+//!   counter on that rank's coordinator→worker link. Transport specs
+//!   fire at the send site ([`FaultPlan::fire_transport`]) and never
+//!   alias with the worker/collective sites; non-transport specs must
+//!   not set `frame=`.
 //!
 //! Every spec is **one-shot**: it fires at most once per plan instance
 //! (atomically), so a retried pack after recovery runs fault-free and can
@@ -51,6 +60,12 @@ pub enum FaultKind {
     /// Sleep for the given duration (simulates a straggler rank; no
     /// error, just latency attributed to that rank).
     Slow(Duration),
+    /// Discard one coordinator→rank transport frame (simulates a lost
+    /// message on the wire; the pool aborts the pack, which retries).
+    Drop,
+    /// Stall one coordinator→rank transport frame before sending
+    /// (simulates wire latency; no error).
+    Delay(Duration),
 }
 
 /// One scripted fault: where (rank, site, occurrence) and what
@@ -64,6 +79,9 @@ pub struct FaultSpec {
     pub step: Option<usize>,
     /// Collective phase-op name; None targets the worker forward step.
     pub op: Option<String>,
+    /// 0-based frame counter on the rank's transport link (transport
+    /// kinds only; None = first frame sent after the plan is armed).
+    pub frame: Option<u64>,
     /// What happens when the spec matches.
     pub kind: FaultKind,
     fired: AtomicBool,
@@ -92,6 +110,7 @@ impl FaultPlan {
         let mut rank = None;
         let mut step = None;
         let mut op = None;
+        let mut frame = None;
         let mut kind = None;
         let mut ms = 20u64;
         for field in entry.split(',').map(str::trim).filter(|f| !f.is_empty()) {
@@ -102,16 +121,23 @@ impl FaultPlan {
                 "rank" => rank = Some(v.trim().parse::<usize>().context("rank")?),
                 "step" => step = Some(v.trim().parse::<usize>().context("step")?),
                 "op" => op = Some(v.trim().to_string()),
+                "frame" => frame = Some(v.trim().parse::<u64>().context("frame")?),
                 "kind" => {
                     kind = Some(match v.trim() {
                         "panic" => FaultKind::Panic,
                         "err" => FaultKind::Err,
                         "slow" => FaultKind::Slow(Duration::ZERO), // ms applied below
-                        other => bail!("unknown kind '{other}' (known: panic, err, slow)"),
+                        "drop" => FaultKind::Drop,
+                        "delay" => FaultKind::Delay(Duration::ZERO), // ms applied below
+                        other => {
+                            bail!("unknown kind '{other}' (known: panic, err, slow, drop, delay)")
+                        }
                     })
                 }
                 "ms" => ms = v.trim().parse::<u64>().context("ms")?,
-                other => bail!("unknown field '{other}' (known: rank, step, op, kind, ms)"),
+                other => {
+                    bail!("unknown field '{other}' (known: rank, step, op, kind, ms, frame)")
+                }
             }
         }
         let rank = rank.context("missing rank=")?;
@@ -119,7 +145,17 @@ impl FaultPlan {
         if let FaultKind::Slow(_) = kind {
             kind = FaultKind::Slow(Duration::from_millis(ms));
         }
-        Ok(FaultSpec { rank, step, op, kind, fired: AtomicBool::new(false) })
+        if let FaultKind::Delay(_) = kind {
+            kind = FaultKind::Delay(Duration::from_millis(ms));
+        }
+        let transport = matches!(kind, FaultKind::Drop | FaultKind::Delay(_));
+        if transport && (op.is_some() || step.is_some()) {
+            bail!("transport kinds (drop, delay) address frames: use frame=, not op=/step=");
+        }
+        if !transport && frame.is_some() {
+            bail!("frame= only applies to transport kinds (drop, delay)");
+        }
+        Ok(FaultSpec { rank, step, op, frame, kind, fired: AtomicBool::new(false) })
     }
 
     /// Parse the `OGGM_FAULT_PLAN` environment variable, if set and
@@ -152,8 +188,13 @@ impl FaultPlan {
     /// forward-step site). Returns the [`FaultKind`] to act out, or None.
     /// A spec with `op` set only matches that phase name; a spec without
     /// `op` only matches the forward-step site — the two never alias.
+    /// Transport specs (`drop`/`delay`) never fire here; they belong to
+    /// [`FaultPlan::fire_transport`].
     pub fn fire(&self, rank: usize, step: usize, op: Option<&str>) -> Option<FaultKind> {
         for spec in &self.specs {
+            if matches!(spec.kind, FaultKind::Drop | FaultKind::Delay(_)) {
+                continue;
+            }
             if spec.rank != rank {
                 continue;
             }
@@ -162,6 +203,35 @@ impl FaultPlan {
             }
             if let Some(want) = spec.step {
                 if want != step {
+                    continue;
+                }
+            }
+            if spec
+                .fired
+                .compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire)
+                .is_ok()
+            {
+                return Some(spec.kind);
+            }
+        }
+        None
+    }
+
+    /// Check (and atomically consume) a *transport* fault at the frame
+    /// send site: `rank` is the addressed rank, `frame` the 0-based
+    /// count of frames sent to it on this link. Only `drop`/`delay`
+    /// specs match; a spec without `frame=` matches the first frame
+    /// sent after the plan is armed. One-shot like every spec.
+    pub fn fire_transport(&self, rank: usize, frame: u64) -> Option<FaultKind> {
+        for spec in &self.specs {
+            if !matches!(spec.kind, FaultKind::Drop | FaultKind::Delay(_)) {
+                continue;
+            }
+            if spec.rank != rank {
+                continue;
+            }
+            if let Some(want) = spec.frame {
+                if want != frame {
                     continue;
                 }
             }
@@ -231,14 +301,42 @@ mod tests {
     #[test]
     fn bad_plans_error_with_context() {
         for bad in [
-            "rank=1",                 // missing kind
-            "kind=panic",             // missing rank
-            "rank=x,kind=panic",      // bad rank
-            "rank=1,kind=explode",    // unknown kind
-            "rank=1,kind=err,who=me", // unknown field
-            "rank=1 kind=err",        // not key=value
+            "rank=1",                    // missing kind
+            "kind=panic",                // missing rank
+            "rank=x,kind=panic",         // bad rank
+            "rank=1,kind=explode",       // unknown kind
+            "rank=1,kind=err,who=me",    // unknown field
+            "rank=1 kind=err",           // not key=value
+            "rank=1,kind=drop,op=barrier", // transport kind with op=
+            "rank=1,kind=delay,step=2",  // transport kind with step=
+            "rank=1,kind=err,frame=0",   // frame= on a non-transport kind
         ] {
             assert!(FaultPlan::parse(bad).is_err(), "'{bad}' should fail to parse");
         }
+    }
+
+    #[test]
+    fn transport_faults_parse_and_fire_at_the_frame_site() {
+        let plan =
+            FaultPlan::parse("rank=1,kind=drop,frame=2; rank=0,kind=delay,ms=7").unwrap();
+        assert_eq!(plan.len(), 2);
+        // Frame-addressed drop: only rank 1, only frame 2, one shot.
+        assert_eq!(plan.fire_transport(1, 0), None);
+        assert_eq!(plan.fire_transport(1, 2), Some(FaultKind::Drop));
+        assert_eq!(plan.fire_transport(1, 2), None, "transport specs are one-shot");
+        // Frame omitted: first opportunity on that rank's link.
+        assert_eq!(plan.fire_transport(0, 5), Some(FaultKind::Delay(Duration::from_millis(7))));
+        assert_eq!(plan.fire_transport(0, 6), None);
+    }
+
+    #[test]
+    fn transport_and_execution_sites_never_alias() {
+        let plan = FaultPlan::parse("rank=0,kind=drop; rank=0,kind=err").unwrap();
+        // The drop spec is invisible to the worker/collective site …
+        assert_eq!(plan.fire(0, 0, None), Some(FaultKind::Err));
+        assert_eq!(plan.fire(0, 1, None), None);
+        // … and the err spec is invisible to the frame site.
+        assert_eq!(plan.fire_transport(0, 0), Some(FaultKind::Drop));
+        assert_eq!(plan.fire_transport(0, 1), None);
     }
 }

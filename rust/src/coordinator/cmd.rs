@@ -10,6 +10,7 @@ use super::metrics;
 use super::train::{TrainCfg, Trainer};
 use crate::analysis::quality::{self, Baseline, EvalCfg, Instance};
 use crate::batch::{self, BatchCfg, Job};
+use crate::collective::fault::FaultPlan;
 use crate::env::Scenario;
 use crate::graph::{generators, io as gio, stats, Graph, Partition};
 use crate::model::Params;
@@ -23,6 +24,7 @@ use anyhow::{bail, Context, Result};
 use std::io::{BufRead, Write};
 use std::net::TcpListener;
 use std::sync::mpsc::RecvTimeoutError;
+use std::sync::Arc;
 use std::time::Duration;
 
 fn load_runtime() -> Result<Runtime> {
@@ -160,8 +162,10 @@ pub fn cmd_infer(args: &Args) -> Result<()> {
 /// scenario; `--no-compact` disables early-exit pack compaction;
 /// `--sparse` switches the packs to CSR storage (DESIGN.md §7);
 /// `--engine rank-parallel` runs the packs on the persistent rank pool
-/// (DESIGN.md §9); `--check` exits 0 with a notice when artifacts are not
-/// built (CI smoke mode, both engines).
+/// (DESIGN.md §9); `--ranks tcp:<addr>,...` routes that pool over TCP
+/// worker processes launched with `oggm rank` (DESIGN.md §12); `--check`
+/// exits 0 with a notice when artifacts are not built (CI smoke mode,
+/// both engines).
 pub fn cmd_batch_solve(args: &Args) -> Result<()> {
     // Options are validated before the check-mode short-circuit (same
     // order as cmd_serve), so CI's artifact-less smoke still catches a
@@ -195,7 +199,7 @@ pub fn cmd_batch_solve(args: &Args) -> Result<()> {
 
     let cfg = BatchCfg::from(&opts);
     let params = load_or_init_params(args, &mut rng)?;
-    let report = batch::run_queue(&rt, &cfg, &params, &jobs)?;
+    let report = batch::run_queue_with(&rt, &cfg, &params, &jobs, opts.ranks.as_deref())?;
 
     for p in &report.packs {
         println!(
@@ -321,9 +325,10 @@ fn serve_write_ready(
 /// input lines arrive on a side thread and the loop sleeps exactly until
 /// the earliest due pack, so an idle stream still launches on time;
 /// `--engine rank-parallel` solves packs on a session-persistent rank pool
-/// (DESIGN.md §9); `--check` exits 0 with a notice when artifacts are not
-/// built (CI smoke mode). Human-readable progress goes to stderr so stdout
-/// stays pure JSONL.
+/// (DESIGN.md §9); `--ranks tcp:<addr>,...` routes that pool over `oggm
+/// rank` worker processes (DESIGN.md §12); `--check` exits 0 with a notice
+/// when artifacts are not built (CI smoke mode). Human-readable progress
+/// goes to stderr so stdout stays pure JSONL.
 ///
 /// `--listen ADDR` switches to the networked front door (DESIGN.md §10):
 /// a TCP listener speaking the same line grammar (or its JSON form), one
@@ -480,6 +485,42 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         rt.keyed_bytes() as f64 / 1024.0
     );
     eprintln!("serve: admission {}", metrics::admission_stats_json(&svc.admission()).render());
+    Ok(())
+}
+
+/// `oggm rank --connect 127.0.0.1:7701 --rank 1 [--world 2]` — a
+/// process-separated rank worker (DESIGN.md §12). Connects to a
+/// coordinator started with `--engine rank-parallel --ranks tcp:<addr>,...`
+/// (batch-solve or serve), handshakes rank id, world size, and the local
+/// artifact-manifest fingerprint — mismatched processes are rejected
+/// before any work — then serves the same request protocol the in-process
+/// worker threads speak until the coordinator closes the session.
+/// `--world` cross-checks the coordinator's P when given; `--fault-plan`
+/// (or `OGGM_FAULT_PLAN`) injects deterministic faults for drills. The
+/// connect retries for `OGGM_RANK_WAIT_SECS` (default 60), so workers may
+/// be launched before the coordinator listens.
+pub fn cmd_rank(args: &Args) -> Result<()> {
+    let addr = args.get("connect").context("oggm rank needs --connect <host:port>")?;
+    let rank = args
+        .get("rank")
+        .context("oggm rank needs --rank <R> (which rank this worker serves)")?
+        .parse::<usize>()
+        .context("--rank must be a non-negative integer")?;
+    let world = match args.get("world") {
+        Some(w) => {
+            Some(w.parse::<usize>().context("--world must be a positive integer")?)
+        }
+        None => None,
+    };
+    let fault = match args.get("fault-plan") {
+        Some(spec) => Some(Arc::new(
+            FaultPlan::parse(spec).context("parsing the --fault-plan spec")?,
+        )),
+        None => FaultPlan::from_env()?,
+    };
+    eprintln!("rank {rank}: connecting to coordinator at {addr}");
+    crate::parallel::remote_worker(manifest::default_dir(), addr, rank, world, fault)?;
+    eprintln!("rank {rank}: session closed by the coordinator; exiting");
     Ok(())
 }
 

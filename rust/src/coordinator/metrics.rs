@@ -21,6 +21,8 @@ pub fn exec_stats_json(st: &ExecStats) -> Json {
         .set("compile_time", st.compile_time.as_secs_f64())
         .set("restarts", st.restarts)
         .set("recovery_time", st.recovery_time.as_secs_f64())
+        .set("tx_bytes", st.tx_bytes)
+        .set("rx_bytes", st.rx_bytes)
 }
 
 /// Admission/backpressure counters as a JSON object — the shared shape for
@@ -187,6 +189,8 @@ mod tests {
         st.cache_hits = 3;
         st.restarts = 2;
         st.recovery_time = std::time::Duration::from_millis(250);
+        st.tx_bytes = 777;
+        st.rx_bytes = 333;
         let s = exec_stats_json(&st).render();
         assert!(s.contains("\"executions\":12"), "{s}");
         assert!(s.contains("\"h2d_bytes\":4096"), "{s}");
@@ -194,6 +198,8 @@ mod tests {
         assert!(s.contains("\"cache_hits\":3"), "{s}");
         assert!(s.contains("\"restarts\":2"), "{s}");
         assert!(s.contains("\"recovery_time\":0.25"), "{s}");
+        assert!(s.contains("\"tx_bytes\":777"), "{s}");
+        assert!(s.contains("\"rx_bytes\":333"), "{s}");
     }
 
     #[test]

@@ -111,6 +111,21 @@ impl ShardState {
         ShardState { part, shard, b, a, s, c, dirty_rows: Vec::new(), dirty_cols: Vec::new() }
     }
 
+    /// Reassemble a shard from its wire-decoded tensors (the rank
+    /// transport ships exactly these fields). Dirty tracking starts
+    /// clean: deltas are applied coordinator-side and shipped as
+    /// explicit `Sync` requests, never re-derived on the worker.
+    pub(crate) fn from_wire(
+        part: Partition,
+        shard: usize,
+        b: usize,
+        a: Vec<f32>,
+        s: Vec<f32>,
+        c: Vec<f32>,
+    ) -> ShardState {
+        ShardState { part, shard, b, a, s, c, dirty_rows: Vec::new(), dirty_cols: Vec::new() }
+    }
+
     /// Shard height NI = N / P.
     pub fn ni(&self) -> usize {
         self.part.ni()
@@ -411,6 +426,36 @@ impl SparseShard {
             c,
             deg,
             incidence,
+            dirty_tiles: Vec::new(),
+        }
+    }
+
+    /// Reassemble a shard from its wire-decoded tensors (the rank
+    /// transport ships exactly these fields). The incidence index is
+    /// left empty: it only accelerates coordinator-side `apply_remove`,
+    /// which workers never call — their live masks are updated through
+    /// explicit `Sync` deltas instead.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn from_wire(
+        part: Partition,
+        shard: usize,
+        b: usize,
+        chunk: usize,
+        tiles: Vec<EdgeTile>,
+        s: Vec<f32>,
+        c: Vec<f32>,
+        deg: Vec<f32>,
+    ) -> SparseShard {
+        SparseShard {
+            part,
+            shard,
+            b,
+            chunk,
+            tiles,
+            s,
+            c,
+            deg,
+            incidence: Vec::new(),
             dirty_tiles: Vec::new(),
         }
     }

@@ -32,6 +32,9 @@ pub mod coordinator;
 /// Rank-parallel execution engine: persistent worker ranks with per-rank
 /// device residency and real collectives (DESIGN.md §9).
 pub mod parallel;
+/// Pluggable rank transport: framed wire protocol, in-process and TCP
+/// links, process-separated workers (DESIGN.md §12).
+pub mod transport;
 /// Graph-level batched solve engine and its job-queue front-end.
 pub mod batch;
 /// Persistent solver service: incremental job admission, streaming

@@ -19,6 +19,10 @@
 //!                                --retries / --max-rank-restarts /
 //!                                --fault-plan tune fault tolerance
 //!                                (DESIGN.md §11)
+//!   rank   --connect ADDR --rank R [--world P]
+//!                                process-separated rank worker: joins a
+//!                                coordinator running --engine rank-parallel
+//!                                --ranks tcp:<addr>,... (DESIGN.md §12)
 
 use oggm::util::cli::Args;
 
@@ -33,9 +37,11 @@ fn main() {
         "batch-solve" => oggm::coordinator::cmd::cmd_batch_solve(&args),
         "eval" => oggm::coordinator::cmd::cmd_eval(&args),
         "serve" => oggm::coordinator::cmd::cmd_serve(&args),
+        "rank" => oggm::coordinator::cmd::cmd_rank(&args),
         _ => {
             eprintln!(
-                "usage: oggm <info|train|infer|solve|batch-solve|eval|serve> [--key value ...]\n\
+                "usage: oggm <info|train|infer|solve|batch-solve|eval|serve|rank> \
+                 [--key value ...]\n\
                  see README.md for options"
             );
             Ok(())

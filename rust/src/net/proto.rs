@@ -20,6 +20,7 @@
 
 use crate::batch::{parse_job_line, GraphSource, JobSpec};
 use crate::env::Scenario;
+use crate::runtime::ExecStats;
 use crate::service::AdmissionSnapshot;
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
@@ -155,11 +156,15 @@ pub fn busy_json(id: &str, queue_cap: usize) -> Json {
         .set("queue_cap", queue_cap)
 }
 
-/// The `{"op":"stats"}` response: current admission counters.
-pub fn stats_json(snap: &AdmissionSnapshot) -> Json {
+/// The `{"op":"stats"}` response: current admission counters plus the
+/// runtime/transport counters accumulated over finished packs (h2d/d2h
+/// bytes, restarts, and the per-rank transport `tx_bytes`/`rx_bytes` —
+/// DESIGN.md §12).
+pub fn stats_json(snap: &AdmissionSnapshot, exec: &ExecStats) -> Json {
     Json::obj()
         .set("op", "stats")
         .set("stats", crate::coordinator::metrics::admission_stats_json(snap))
+        .set("exec", crate::coordinator::metrics::exec_stats_json(exec))
 }
 
 /// The `{"op":"drain"}` acknowledgment: drain accepted, with the work
@@ -248,8 +253,11 @@ mod tests {
         assert!(s.contains("\"tenant_load\":8"), "{s}");
         let s = busy_json("j2", 256).render();
         assert!(s.contains("\"rejected\":true") && s.contains("\"queue_cap\":256"), "{s}");
-        let s = stats_json(&AdmissionSnapshot::default()).render();
+        let mut exec = ExecStats::default();
+        exec.tx_bytes = 96;
+        let s = stats_json(&AdmissionSnapshot::default(), &exec).render();
         assert!(s.contains("\"op\":\"stats\"") && s.contains("\"in_flight\":0"), "{s}");
+        assert!(s.contains("\"exec\":{") && s.contains("\"tx_bytes\":96"), "{s}");
         let s = error_json("j3", "boom").render();
         assert!(s.contains("\"error\":\"boom\"") && !s.contains("rejected"), "{s}");
         let s = drain_json(3, 2).render();

@@ -7,7 +7,7 @@ use crate::batch::BatchCfg;
 use crate::graph::Graph;
 use crate::model::Params;
 use crate::net::{driver, proto};
-use crate::runtime::{Manifest, Runtime};
+use crate::runtime::{ExecStats, Manifest, Runtime};
 use crate::service::{
     AdmitError, Admitter, AdmissionSnapshot, Executor, JobEvent, Options, PackDone, PackRun,
     SubmitMeta,
@@ -96,6 +96,10 @@ enum Solver {
         /// `--fault-plan` spec for the executor's rank pool (None falls
         /// back to `OGGM_FAULT_PLAN`).
         fault_spec: Option<String>,
+        /// `--ranks` transport spec: TCP listen addresses for
+        /// process-separated rank workers (None = in-process threads,
+        /// DESIGN.md §12).
+        ranks: Option<String>,
     },
     /// Tests/benches: an injected solve function (deterministic timing, no
     /// artifacts needed).
@@ -119,6 +123,7 @@ pub fn serve(
         cfg: BatchCfg::from(opts),
         params,
         fault_spec: opts.fault_plan.clone(),
+        ranks: opts.ranks.clone(),
     };
     run_server(listener, manifest, opts, solver)
 }
@@ -284,6 +289,9 @@ fn run_server(
     let (mut total_conns, mut jobs_in) = (None::<u64>, 0u64);
     let mut failed = 0u64;
     let mut draining = false;
+    // Runtime/transport counters summed over finished packs, surfaced by
+    // the `{"op":"stats"}` probe next to the admission snapshot.
+    let mut exec_total = ExecStats::default();
 
     loop {
         // Fold reader-side queue-full rejects into the admission books so
@@ -340,7 +348,7 @@ fn run_server(
                 conns.write(tenant, &proto::error_json(&id, &error));
             }
             Ok(FrontMsg::Stats { tenant }) => {
-                conns.write(tenant, &proto::stats_json(&adm.snapshot()));
+                conns.write(tenant, &proto::stats_json(&adm.snapshot(), &exec_total));
             }
             Ok(FrontMsg::Drain { tenant }) => {
                 let snap = adm.snapshot();
@@ -375,6 +383,7 @@ fn run_server(
                     touched.push(ev.tenant);
                 }
                 if let Some(stat) = done.stat {
+                    exec_total.add(&stat.exec);
                     let snap = adm.snapshot();
                     eprintln!(
                         "serve: pack {:>3}: {:>6} N={:<5} jobs={:<3} cause={:<8} sim {:.4}s \
@@ -621,9 +630,11 @@ fn spawn_solver(
                     }
                 }
             }
-            Solver::Real { dir, cfg, params, fault_spec } => match Runtime::new(&dir) {
+            Solver::Real { dir, cfg, params, fault_spec, ranks } => match Runtime::new(&dir) {
                 Ok(rt) => {
-                    let mut exec = Executor::new(&rt, params, cfg).fault_plan(fault_spec);
+                    let mut exec = Executor::new(&rt, params, cfg)
+                        .fault_plan(fault_spec)
+                        .rank_transport(ranks);
                     for run in run_rx {
                         if tx.send(FrontMsg::Done(exec.run(run))).is_err() {
                             break;

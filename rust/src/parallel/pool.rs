@@ -35,7 +35,7 @@
 //! communicator handle (collective-phase faults).
 
 use super::worker;
-use crate::collective::fault::FaultPlan;
+use crate::collective::fault::{FaultKind, FaultPlan};
 use crate::collective::Communicator;
 use crate::coordinator::bwd::GradOutput;
 use crate::coordinator::engine::{EngineCfg, StepTiming};
@@ -43,10 +43,13 @@ use crate::coordinator::fwd::FwdOutput;
 use crate::coordinator::shard::ShardSet;
 use crate::model::Params;
 use crate::runtime::ExecStats;
+use crate::transport::inproc::InProcLink;
+use crate::transport::tcp::{self, CollHub};
+use crate::transport::{RankLink, WorkerLink};
 use anyhow::{anyhow, bail, ensure, Context, Result};
 use std::cell::RefCell;
 use std::path::PathBuf;
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::channel;
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -79,6 +82,11 @@ pub(crate) struct FwdReq {
 pub(crate) enum Req {
     SetParams(Arc<Params>),
     NewComm(Communicator),
+    /// Make the worker's existing collective handle fresh again (the
+    /// remote-transport twin of `NewComm`: a communicator holding live
+    /// socket state can't be rebuilt coordinator-side, so it is reset
+    /// in place instead).
+    ResetComm,
     Install { slot: usize, shard: RankShard, resident: bool },
     Sync { slot: usize, delta: SyncDelta },
     Rebuild { slot: usize, shard: RankShard },
@@ -117,9 +125,40 @@ pub(crate) enum Resp {
 }
 
 struct WorkerHandle {
-    tx: Sender<Req>,
-    rx: Receiver<Resp>,
+    /// The coordinator's endpoint of this rank, over either transport.
+    link: RankLink,
+    /// In-process worker thread handle (None for remote processes).
     join: Option<JoinHandle<()>>,
+}
+
+impl WorkerHandle {
+    /// Whether this rank can no longer serve requests: an in-process
+    /// worker whose thread exited, or a TCP worker whose connection
+    /// closed.
+    fn is_dead(&self) -> bool {
+        match &self.link {
+            RankLink::InProc(_) => self.join.as_ref().map_or(true, |j| j.is_finished()),
+            RankLink::Tcp(l) => l.is_dead(),
+        }
+    }
+}
+
+/// The pool's handle on the collective group, per transport. A failed
+/// local group is replaced wholesale (fresh [`Communicator`]s shipped
+/// via `NewComm`); a failed TCP group is reset in place (the hub clears
+/// its sticky abort, each worker clears its own via `ResetComm`).
+enum GroupCtl {
+    Local(Vec<Communicator>),
+    Tcp(Arc<CollHub>),
+}
+
+/// Why a coordinator→worker send failed.
+enum SendFail {
+    /// The worker is gone (channel closed / connection dead).
+    Gone,
+    /// An injected transport fault discarded the frame; the group was
+    /// aborted and the pool poisoned. Carries the contextful message.
+    Dropped(String),
 }
 
 struct PoolCtl {
@@ -155,6 +194,12 @@ pub struct RankPool {
     /// Interior mutability: the supervisor replaces dead handles in place
     /// while the coordinator drives the pool through `&self`.
     workers: RefCell<Vec<WorkerHandle>>,
+    /// The current collective group (see [`GroupCtl`]); the supervisor
+    /// swaps/resets it during recovery.
+    group: RefCell<GroupCtl>,
+    /// Per-rank count of frames sent on each coordinator→worker link —
+    /// the `frame=` coordinate transport fault specs address.
+    frames: RefCell<Vec<u64>>,
     ctl: RefCell<PoolCtl>,
 }
 
@@ -187,6 +232,7 @@ impl RankPool {
             std::env::set_var("TF_CPP_MIN_LOG_LEVEL", "1");
         }
         let comms = Communicator::create_with_faults(p, fault.clone());
+        let group = GroupCtl::Local(comms.clone());
         let mut workers = Vec::with_capacity(p);
         for (rank, comm) in comms.into_iter().enumerate() {
             workers.push(spawn_worker(&dir, rank, comm, fault.clone())?);
@@ -197,6 +243,8 @@ impl RankPool {
             fault,
             max_restarts,
             workers: RefCell::new(workers),
+            group: RefCell::new(group),
+            frames: RefCell::new(vec![0; p]),
             ctl: RefCell::new(PoolCtl {
                 last_params: None,
                 published: None,
@@ -207,6 +255,51 @@ impl RankPool {
             }),
         };
         // Startup handshake: every worker acknowledges its runtime.
+        pool.collect_unit("start rank runtimes")?;
+        Ok(pool)
+    }
+
+    /// Build a pool whose P ranks are **separate OS processes** reached
+    /// over TCP (DESIGN.md §12): listen on the `--ranks` addresses,
+    /// admit exactly P `oggm rank` workers (handshake-validated against
+    /// this pool's world size and artifact fingerprint), and wait for
+    /// each worker's runtime-start acknowledgment — the same startup
+    /// handshake the threaded pool performs.
+    pub fn new_tcp(
+        dir: impl Into<PathBuf>,
+        p: usize,
+        max_restarts: usize,
+        fault: Option<Arc<FaultPlan>>,
+        spec: &str,
+    ) -> Result<RankPool> {
+        ensure!(p >= 1, "rank pool needs at least one rank");
+        let dir = dir.into();
+        let addrs = parse_rank_spec(spec, p)?;
+        let hub = CollHub::new(p);
+        let fingerprint = crate::transport::manifest_fingerprint(&dir);
+        let links = tcp::accept_ranks(&addrs, p, fingerprint, &hub)
+            .context("forming the TCP rank group")?;
+        let workers = links
+            .into_iter()
+            .map(|l| WorkerHandle { link: RankLink::Tcp(l), join: None })
+            .collect();
+        let pool = RankPool {
+            p,
+            dir,
+            fault,
+            max_restarts,
+            workers: RefCell::new(workers),
+            group: RefCell::new(GroupCtl::Tcp(hub)),
+            frames: RefCell::new(vec![0; p]),
+            ctl: RefCell::new(PoolCtl {
+                last_params: None,
+                published: None,
+                poisoned: false,
+                streak: 0,
+                restarts_total: 0,
+                recovery: Duration::ZERO,
+            }),
+        };
         pool.collect_unit("start rank runtimes")?;
         Ok(pool)
     }
@@ -222,11 +315,75 @@ impl RankPool {
         (ctl.restarts_total, ctl.recovery)
     }
 
+    /// Abort the current collective group with `rank` as the origin.
+    fn abort_group(&self, rank: usize, msg: &str) {
+        match &*self.group.borrow() {
+            GroupCtl::Local(comms) => {
+                if let Some(c) = comms.get(rank) {
+                    c.abort(msg);
+                }
+            }
+            GroupCtl::Tcp(hub) => hub.abort(rank, msg),
+        }
+    }
+
+    /// Send one request to rank `i`, running the transport fault script
+    /// at this link's frame counter first. An injected `drop` aborts the
+    /// group (so ranks already holding the request fail fast instead of
+    /// deadlocking on the missing peer), poisons the pool, and discards
+    /// the frame.
+    fn send_req(&self, i: usize, req: Req) -> Result<(), SendFail> {
+        if let Some(plan) = &self.fault {
+            let frame = {
+                let mut frames = self.frames.borrow_mut();
+                let f = frames[i];
+                frames[i] += 1;
+                f
+            };
+            match plan.fire_transport(i, frame) {
+                None => {}
+                Some(FaultKind::Delay(d)) => std::thread::sleep(d),
+                Some(FaultKind::Drop) => {
+                    let msg =
+                        format!("injected fault: transport frame {frame} to rank {i} dropped");
+                    self.abort_group(i, &msg);
+                    self.ctl.borrow_mut().poisoned = true;
+                    return Err(SendFail::Dropped(msg));
+                }
+                // fire_transport only yields transport kinds.
+                Some(_) => unreachable!(),
+            }
+        }
+        if self.workers.borrow()[i].link.send(req).is_err() {
+            return Err(SendFail::Gone);
+        }
+        Ok(())
+    }
+
+    /// After a dropped frame at rank `sent`, ranks `0..sent` already
+    /// hold the request and owe exactly one response each — the group
+    /// abort guarantees none blocks forever waiting for the missing
+    /// peers. Consume those responses so recovery starts from quiet
+    /// channels.
+    fn drain_owed(&self, sent: usize) {
+        let ws = self.workers.borrow();
+        for w in ws.iter().take(sent) {
+            let _ = w.link.recv();
+        }
+    }
+
     fn send_all<F: FnMut(usize) -> Req>(&self, mut f: F) -> Result<()> {
-        for (i, w) in self.workers.borrow().iter().enumerate() {
-            if w.tx.send(f(i)).is_err() {
-                self.ctl.borrow_mut().poisoned = true;
-                bail!("rank {i} worker is gone");
+        for i in 0..self.p {
+            match self.send_req(i, f(i)) {
+                Ok(()) => {}
+                Err(SendFail::Gone) => {
+                    self.ctl.borrow_mut().poisoned = true;
+                    bail!("{}", self.workers.borrow()[i].link.gone_msg(i));
+                }
+                Err(SendFail::Dropped(msg)) => {
+                    self.drain_owed(i);
+                    bail!("{msg}");
+                }
             }
         }
         Ok(())
@@ -239,10 +396,10 @@ impl RankPool {
         let mut out = Vec::with_capacity(self.p);
         let mut errs: Vec<(usize, String)> = Vec::new();
         for (i, w) in self.workers.borrow().iter().enumerate() {
-            match w.rx.recv() {
+            match w.link.recv() {
                 Ok(Resp::Err(e)) => errs.push((i, e)),
                 Ok(r) => out.push(r),
-                Err(_) => errs.push((i, format!("rank {i}: worker thread died"))),
+                Err(()) => errs.push((i, w.link.death_msg(i))),
             }
         }
         if !errs.is_empty() {
@@ -290,17 +447,48 @@ impl RankPool {
         let t0 = Instant::now();
         // Drain stale responses left by the failed operation.
         for w in self.workers.borrow().iter() {
-            while w.rx.try_recv().is_ok() {}
+            while w.link.try_recv().is_some() {}
         }
-        // Detect dead ranks: a panicked worker has exited its thread.
+        // Detect dead ranks: a panicked worker has exited its thread (or
+        // a remote worker's connection has closed).
         let dead: Vec<usize> = self
             .workers
             .borrow()
             .iter()
             .enumerate()
-            .filter(|(_, w)| w.join.as_ref().map_or(true, |j| j.is_finished()))
+            .filter(|(_, w)| w.is_dead())
             .map(|(i, _)| i)
             .collect();
+        if matches!(&*self.group.borrow(), GroupCtl::Tcp(_)) {
+            if !dead.is_empty() {
+                // A dead worker *process* is not respawnable from here:
+                // its runtime, θ cache, and socket live in another OS
+                // process an operator has to relaunch. Surface it
+                // non-retryably rather than spinning the retry budget.
+                self.ctl.borrow_mut().streak = 0;
+                let msgs: Vec<String> = {
+                    let ws = self.workers.borrow();
+                    dead.iter().map(|&i| ws[i].link.death_msg(i)).collect()
+                };
+                bail!(
+                    "{} (remote ranks cannot be respawned; restart the worker process \
+                     and reconnect)",
+                    msgs.join("; ")
+                );
+            }
+            // Every process is alive: make the group fresh in place —
+            // hub first (so no stale abort races the acks), then each
+            // worker clears its sticky abort and acknowledges.
+            if let GroupCtl::Tcp(hub) = &*self.group.borrow() {
+                hub.reset();
+            }
+            self.send_all(|_| Req::ResetComm)?;
+            self.collect_unit("reset collectives")?;
+            let mut ctl = self.ctl.borrow_mut();
+            ctl.recovery += t0.elapsed();
+            ctl.poisoned = false;
+            return Ok(());
+        }
         if !dead.is_empty() {
             let streak = self.ctl.borrow().streak;
             if streak >= self.max_restarts {
@@ -322,11 +510,9 @@ impl RankPool {
         // Fresh collective group for the whole pool. Replacements receive
         // their handle at spawn; survivors get theirs via NewComm — each
         // rank acknowledges exactly once (spawn ack or NewComm ack).
-        let mut comms: Vec<Option<Communicator>> =
-            Communicator::create_with_faults(self.p, self.fault.clone())
-                .into_iter()
-                .map(Some)
-                .collect();
+        let fresh = Communicator::create_with_faults(self.p, self.fault.clone());
+        *self.group.borrow_mut() = GroupCtl::Local(fresh.clone());
+        let mut comms: Vec<Option<Communicator>> = fresh.into_iter().map(Some).collect();
         {
             let mut ws = self.workers.borrow_mut();
             for &i in &dead {
@@ -340,7 +526,7 @@ impl RankPool {
         }
         for (i, w) in self.workers.borrow().iter().enumerate() {
             if let Some(c) = comms[i].take() {
-                if w.tx.send(Req::NewComm(c)).is_err() {
+                if w.link.send(Req::NewComm(c)).is_err() {
                     bail!("rank {i} worker is gone");
                 }
             }
@@ -352,12 +538,12 @@ impl RankPool {
             if let Some(arc) = self.ctl.borrow().published.clone() {
                 let ws = self.workers.borrow();
                 for &i in &dead {
-                    if ws[i].tx.send(Req::SetParams(arc.clone())).is_err() {
+                    if ws[i].link.send(Req::SetParams(arc.clone())).is_err() {
                         bail!("rank {i} worker is gone");
                     }
                 }
                 for &i in &dead {
-                    match ws[i].rx.recv() {
+                    match ws[i].link.recv() {
                         Ok(Resp::Unit { .. }) => {}
                         Ok(Resp::Err(e)) => bail!("republish θ to replacement rank failed: {e}"),
                         _ => bail!("rank {i}: unexpected response to θ republish"),
@@ -587,15 +773,22 @@ impl RankPool {
     }
 
     /// Per-rank runtime counter snapshots, in rank order (each rank's h2d
-    /// bytes, executions, cache hits — the warm-pool observables).
+    /// bytes, executions, cache hits — the warm-pool observables), with
+    /// that rank's transport link traffic folded into
+    /// `tx_bytes`/`rx_bytes` (coordinator-side perspective: tx =
+    /// requests shipped to the rank, rx = responses received from it).
     pub fn rank_stats(&self) -> Result<Vec<ExecStats>> {
         self.send_all(|_| Req::Stats)?;
         let resps = self.recv_all("rank stats")?;
         let mut out = Vec::with_capacity(self.p);
+        let ws = self.workers.borrow();
         for (i, r) in resps.into_iter().enumerate() {
-            let Resp::Stats(s) = r else {
+            let Resp::Stats(mut s) = r else {
                 bail!("rank {i}: unexpected response to stats");
             };
+            let (tx, rx) = ws[i].link.traffic();
+            s.tx_bytes += tx;
+            s.rx_bytes += rx;
             out.push(s);
         }
         Ok(out)
@@ -621,12 +814,31 @@ impl RankPool {
     pub fn inject_failure(&self, rank: usize) -> Result<()> {
         let ws = self.workers.borrow();
         let w = ws.get(rank).ok_or_else(|| anyhow!("no rank {rank}"))?;
-        w.tx.send(Req::InjectFailure).map_err(|_| anyhow!("rank {rank} worker is gone"))?;
-        match w.rx.recv() {
+        w.link.send(Req::InjectFailure).map_err(|_| anyhow!("{}", w.link.gone_msg(rank)))?;
+        match w.link.recv() {
             Ok(Resp::Unit { .. }) => Ok(()),
             _ => bail!("rank {rank}: unexpected response to inject_failure"),
         }
     }
+}
+
+/// Parse the `--ranks` coordinator spec: comma-separated listen
+/// addresses, each optionally prefixed `tcp:` (e.g.
+/// `tcp:127.0.0.1:7650,tcp:127.0.0.1:7651`). Fewer addresses than P is
+/// fine — multiple workers may dial the same listener.
+fn parse_rank_spec(spec: &str, p: usize) -> Result<Vec<String>> {
+    let mut addrs = Vec::new();
+    for part in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        let addr = part.strip_prefix("tcp:").unwrap_or(part);
+        ensure!(addr.contains(':'), "rank listen address '{addr}' is not host:port");
+        addrs.push(addr.to_string());
+    }
+    ensure!(
+        !addrs.is_empty() && addrs.len() <= p,
+        "--ranks lists {} address(es); expected 1..={p} for a P={p} group",
+        addrs.len()
+    );
+    Ok(addrs)
 }
 
 /// Spawn one rank worker thread with fresh channels. Used at pool startup
@@ -642,9 +854,12 @@ fn spawn_worker(
     let d = dir.clone();
     let join = std::thread::Builder::new()
         .name(format!("oggm-rank{rank}"))
-        .spawn(move || worker::worker_main(d, rank, comm, fault, worker_rx, worker_tx))
+        .spawn(move || {
+            let link = WorkerLink::Chan { rx: worker_rx, tx: worker_tx };
+            worker::worker_main(d, rank, comm, fault, link)
+        })
         .context("spawning rank worker")?;
-    Ok(WorkerHandle { tx, rx, join: Some(join) })
+    Ok(WorkerHandle { link: RankLink::InProc(InProcLink::new(tx, rx)), join: Some(join) })
 }
 
 /// Merge one rank's measured attribution into the pool-level timing.
@@ -663,7 +878,7 @@ impl Drop for RankPool {
     fn drop(&mut self) {
         let ws = self.workers.get_mut();
         for w in ws.iter() {
-            let _ = w.tx.send(Req::Shutdown);
+            let _ = w.link.send(Req::Shutdown);
         }
         for w in ws.iter_mut() {
             if let Some(j) = w.join.take() {

@@ -34,11 +34,12 @@ use crate::coordinator::fwd::{
 use crate::coordinator::shard::{ShardSet, ShardState, SparseShard};
 use crate::model::Params;
 use crate::runtime::{artifact_name, sparse_msg_name, sparse_pre_name, HostTensor, Input, Runtime};
+use crate::transport::tcp::connect_worker;
+use crate::transport::WorkerLink;
 use crate::util::add_assign;
 use anyhow::{anyhow, bail, ensure, Context, Result};
 use std::path::PathBuf;
 use std::rc::Rc;
-use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -103,16 +104,15 @@ pub(crate) fn worker_main(
     rank: usize,
     comm: Communicator,
     fault: Option<Arc<FaultPlan>>,
-    rx: Receiver<Req>,
-    tx: Sender<Resp>,
+    link: WorkerLink,
 ) {
     let rt = match Runtime::new(&dir) {
         Ok(rt) => {
-            let _ = tx.send(Resp::Unit { xfer: 0.0 });
+            let _ = link.send(Resp::Unit { xfer: 0.0 });
             rt
         }
         Err(e) => {
-            let _ = tx.send(Resp::Err(format!("rank {rank}: runtime start failed: {e:#}")));
+            let _ = link.send(Resp::Err(format!("rank {rank}: runtime start failed: {e:#}")));
             return;
         }
     };
@@ -127,7 +127,7 @@ pub(crate) fn worker_main(
         fwd_steps: 0,
     };
     let mut packs: Vec<Option<Pack>> = Vec::new();
-    while let Ok(req) = rx.recv() {
+    while let Some(req) = link.recv() {
         if matches!(req, Req::Shutdown) {
             break;
         }
@@ -157,13 +157,36 @@ pub(crate) fn worker_main(
                 (Resp::Err(msg), true)
             }
         };
-        if tx.send(resp).is_err() || fatal {
+        if !link.send(resp) || fatal {
             // A panicked worker's runtime state is suspect: exit the
             // thread so `join.is_finished()` reads true and the pool's
             // supervisor replaces this rank with a fresh runtime.
             return;
         }
     }
+}
+
+/// Run this process as one rank of a TCP-transport pool (the `oggm rank`
+/// subcommand, DESIGN.md §12): dial the coordinator at `addr`, handshake
+/// as `rank` (validated against the coordinator's world size and artifact
+/// manifest fingerprint — mismatched processes are rejected before any
+/// work), then serve the same request loop an in-process worker thread
+/// runs. Same payloads, same rank-order collective folds — results are
+/// bit-identical to the threaded engine. Returns when the coordinator
+/// shuts the pool down or the connection closes; a handshake rejection
+/// surfaces as a contextful error.
+pub fn remote_worker(
+    dir: impl Into<PathBuf>,
+    addr: &str,
+    rank: usize,
+    world: Option<usize>,
+    fault: Option<Arc<FaultPlan>>,
+) -> Result<()> {
+    let dir = dir.into();
+    let (io, p) = connect_worker(addr, rank, world, &dir)?;
+    let comm = Communicator::remote(rank, p, io.clone(), fault.clone());
+    worker_main(dir, rank, comm, fault, WorkerLink::Remote(io));
+    Ok(())
 }
 
 fn handle<'r>(
@@ -194,6 +217,10 @@ fn handle<'r>(
         }
         Req::NewComm(c) => {
             st.comm = c;
+            Ok(Resp::Unit { xfer: 0.0 })
+        }
+        Req::ResetComm => {
+            st.comm.reset();
             Ok(Resp::Unit { xfer: 0.0 })
         }
         Req::Install { slot, shard, resident } => {
@@ -276,6 +303,9 @@ fn handle<'r>(
                     Some(FaultKind::Panic) => {
                         panic!("injected fault (rank {}, forward step {step})", st.rank)
                     }
+                    // Transport kinds fire at the frame send site, never
+                    // at the forward-step site.
+                    Some(FaultKind::Drop | FaultKind::Delay(_)) => unreachable!(),
                 }
             }
             let params =

@@ -83,6 +83,14 @@ pub struct ExecStats {
     /// Time spent recovering the pool (respawn + collective reset + θ
     /// republish). Pool-level, like `restarts`.
     pub recovery_time: Duration,
+    /// Bytes sent coordinator→rank over the transport links (requests
+    /// and collective fan-out, at canonical wire size — the in-process
+    /// transport prices its messages without serializing, DESIGN.md
+    /// §12). Pool-level, like `restarts`.
+    pub tx_bytes: u64,
+    /// Bytes received rank→coordinator over the transport links
+    /// (responses and collective deposits). Pool-level.
+    pub rx_bytes: u64,
 }
 
 impl ExecStats {
@@ -99,6 +107,8 @@ impl ExecStats {
         self.cache_hits += other.cache_hits;
         self.restarts += other.restarts;
         self.recovery_time += other.recovery_time;
+        self.tx_bytes += other.tx_bytes;
+        self.rx_bytes += other.rx_bytes;
     }
 
     /// Counter deltas accumulated since `earlier` (snapshot arithmetic for
@@ -116,6 +126,8 @@ impl ExecStats {
             cache_hits: self.cache_hits.saturating_sub(earlier.cache_hits),
             restarts: self.restarts.saturating_sub(earlier.restarts),
             recovery_time: self.recovery_time.saturating_sub(earlier.recovery_time),
+            tx_bytes: self.tx_bytes.saturating_sub(earlier.tx_bytes),
+            rx_bytes: self.rx_bytes.saturating_sub(earlier.rx_bytes),
         }
     }
 }

@@ -173,6 +173,10 @@ pub struct Executor<'r> {
     /// spec surfaces as per-job error events). `None` falls back to the
     /// `OGGM_FAULT_PLAN` environment variable.
     fault_spec: Option<String>,
+    /// Unparsed `--ranks` transport spec (DESIGN.md §12): TCP listen
+    /// addresses for process-separated rank workers. `None` = the
+    /// in-process threaded pool.
+    ranks_spec: Option<String>,
 }
 
 impl<'r> Executor<'r> {
@@ -187,6 +191,7 @@ impl<'r> Executor<'r> {
             theta: ThetaCache::new(rt),
             pool: None,
             fault_spec: None,
+            ranks_spec: None,
         }
     }
 
@@ -201,6 +206,14 @@ impl<'r> Executor<'r> {
     /// flag). `None` falls back to `OGGM_FAULT_PLAN`.
     pub fn fault_plan(mut self, spec: Option<String>) -> Executor<'r> {
         self.fault_spec = spec;
+        self
+    }
+
+    /// Set the rank transport spec (builder style; the `--ranks` flag).
+    /// `Some` runs the rank-parallel engine over TCP worker processes
+    /// instead of in-process threads (DESIGN.md §12).
+    pub fn rank_transport(mut self, spec: Option<String>) -> Executor<'r> {
+        self.ranks_spec = spec;
         self
     }
 
@@ -223,13 +236,23 @@ impl<'r> Executor<'r> {
             )),
             None => FaultPlan::from_env()?,
         };
-        let pool = RankPool::new_with(
-            self.rt.manifest.dir.clone(),
-            self.cfg.engine.p,
-            self.cfg.max_rank_restarts,
-            plan,
-        )
-        .context("starting the rank-parallel worker pool")?;
+        let pool = match &self.ranks_spec {
+            Some(spec) => RankPool::new_tcp(
+                self.rt.manifest.dir.clone(),
+                self.cfg.engine.p,
+                self.cfg.max_rank_restarts,
+                plan,
+                spec,
+            )
+            .context("forming the TCP rank-parallel worker group")?,
+            None => RankPool::new_with(
+                self.rt.manifest.dir.clone(),
+                self.cfg.engine.p,
+                self.cfg.max_rank_restarts,
+                plan,
+            )
+            .context("starting the rank-parallel worker pool")?,
+        };
         self.pool = Some(pool);
         Ok(())
     }
@@ -421,6 +444,7 @@ impl<'r> Service<'r> {
         svc.adm.set_max_wait(opts.max_wait);
         svc.adm.set_quota(opts.quota);
         svc.exec.fault_spec = opts.fault_plan.clone();
+        svc.exec.ranks_spec = opts.ranks.clone();
         svc
     }
 
@@ -457,6 +481,13 @@ impl<'r> Service<'r> {
     /// (false) and serves every pack independently.
     pub fn fail_fast(mut self, on: bool) -> Service<'r> {
         self.exec.abort_on_error = on;
+        self
+    }
+
+    /// Route the rank-parallel engine over TCP worker processes (builder
+    /// style; see [`Executor::rank_transport`], DESIGN.md §12).
+    pub fn rank_transport(mut self, spec: Option<String>) -> Service<'r> {
+        self.exec.ranks_spec = spec;
         self
     }
 
@@ -653,6 +684,7 @@ mod tests {
             "rank 1: worker panicked: injected panic",
             "rank 0: worker thread died",
             "2 dead rank(s) after 2 replacement round(s): per-pack restart budget exhausted",
+            "install pack failed: injected fault: transport frame 2 to rank 1 dropped",
         ] {
             assert!(retryable_fault(msg), "should be retryable: {msg}");
         }
@@ -660,6 +692,7 @@ mod tests {
             "job 'a' (|V|=500) not admitted: no compiled bucket fits",
             "loading stage q_scores_b4_n24: no such artifact",
             "pack has 2 shards but the pool has 4 ranks",
+            "rank 1 worker process unreachable (connection closed)",
         ] {
             assert!(!retryable_fault(msg), "should not be retryable: {msg}");
         }

@@ -108,6 +108,11 @@ pub struct Options {
     /// §11), e.g. `rank=1,step=3,kind=panic`; None = also honor the
     /// `OGGM_FAULT_PLAN` environment variable where pools are created.
     pub fault_plan: Option<String>,
+    /// Rank transport spec for the rank-parallel engine (`--ranks`,
+    /// DESIGN.md §12): a comma-separated list of `tcp:<host:port>` listen
+    /// addresses the coordinator accepts `oggm rank` worker processes on.
+    /// None = the in-process threaded pool.
+    pub ranks: Option<String>,
 }
 
 impl Default for Options {
@@ -136,6 +141,7 @@ impl Default for Options {
             retries: 1,
             max_rank_restarts: crate::parallel::DEFAULT_MAX_RANK_RESTARTS,
             fault_plan: None,
+            ranks: None,
         }
     }
 }
@@ -185,6 +191,7 @@ impl Options {
         o.retries = args.get_usize("retries", o.retries);
         o.max_rank_restarts = args.get_usize("max-rank-restarts", o.max_rank_restarts);
         o.fault_plan = args.get("fault-plan").map(|s| s.to_string());
+        o.ranks = args.get("ranks").map(|s| s.to_string());
         Ok(o)
     }
 
@@ -295,6 +302,13 @@ impl Options {
     /// [`crate::collective::fault`] for the grammar).
     pub fn fault_plan(mut self, plan: impl Into<String>) -> Options {
         self.fault_plan = Some(plan.into());
+        self
+    }
+
+    /// Set the rank transport spec (TCP listen addresses for
+    /// process-separated rank workers, DESIGN.md §12).
+    pub fn ranks(mut self, spec: impl Into<String>) -> Options {
+        self.ranks = Some(spec.into());
         self
     }
 
@@ -450,6 +464,15 @@ mod tests {
         assert_eq!(o.max_rank_restarts, crate::parallel::DEFAULT_MAX_RANK_RESTARTS);
         assert!(o.fault_plan.is_none());
         assert_eq!(BatchCfg::from(&o).retries, 1);
+    }
+
+    #[test]
+    fn rank_transport_spec_parses() {
+        let o = Options::from_args(&parse("--ranks tcp:127.0.0.1:7701,tcp:127.0.0.1:7702"))
+            .unwrap();
+        assert_eq!(o.ranks.as_deref(), Some("tcp:127.0.0.1:7701,tcp:127.0.0.1:7702"));
+        let o = Options::from_args(&parse("")).unwrap();
+        assert!(o.ranks.is_none());
     }
 
     #[test]

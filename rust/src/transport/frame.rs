@@ -1,0 +1,156 @@
+//! Wire framing for rank transport messages (DESIGN.md §12).
+//!
+//! Every message between the coordinator and a rank worker — control
+//! requests, responses, and collective traffic — travels as one *frame*:
+//! a fixed 16-byte little-endian header followed by an opaque payload.
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic   b"OGTP"
+//! 4       2     version protocol version (this build speaks VERSION)
+//! 6       2     kind    message discriminant (transport::msg constants)
+//! 8       4     rank    sending/addressed rank id
+//! 12      4     len     payload length in bytes
+//! ```
+//!
+//! The header is deliberately version-first after the magic so that a
+//! peer speaking a different protocol revision is rejected with a
+//! message naming both versions before any payload is trusted. Payloads
+//! are capped at [`MAX_PAYLOAD`] so a corrupt length field cannot drive
+//! an unbounded allocation.
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Context, Result};
+
+/// Frame magic: the first four bytes of every frame.
+pub const MAGIC: [u8; 4] = *b"OGTP";
+/// Protocol version this build speaks. Bump on any wire-format change.
+pub const VERSION: u16 = 1;
+/// Fixed header length in bytes (magic + version + kind + rank + len).
+pub const HEADER_LEN: usize = 16;
+/// Maximum accepted payload length (2 GiB): a sanity cap against
+/// corrupt or malicious length fields, far above any real payload.
+pub const MAX_PAYLOAD: u32 = 2 << 30;
+
+/// One decoded frame: the header fields plus the raw payload bytes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Frame {
+    /// Message discriminant (see `transport::msg` kind constants).
+    pub kind: u16,
+    /// Sending (worker→coordinator) or addressed (coordinator→worker) rank.
+    pub rank: u32,
+    /// Opaque payload bytes; interpretation depends on `kind`.
+    pub payload: Vec<u8>,
+}
+
+/// Write one frame (header + payload) to `w`. Returns the total number
+/// of bytes written (`HEADER_LEN + payload.len()`), for traffic
+/// accounting.
+pub fn write_frame<W: Write>(w: &mut W, kind: u16, rank: u32, payload: &[u8]) -> Result<u64> {
+    if payload.len() as u64 > MAX_PAYLOAD as u64 {
+        bail!("frame payload of {} bytes exceeds the {} byte cap", payload.len(), MAX_PAYLOAD);
+    }
+    let mut hdr = [0u8; HEADER_LEN];
+    hdr[0..4].copy_from_slice(&MAGIC);
+    hdr[4..6].copy_from_slice(&VERSION.to_le_bytes());
+    hdr[6..8].copy_from_slice(&kind.to_le_bytes());
+    hdr[8..12].copy_from_slice(&rank.to_le_bytes());
+    hdr[12..16].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    w.write_all(&hdr).context("writing frame header")?;
+    w.write_all(payload).context("writing frame payload")?;
+    Ok((HEADER_LEN + payload.len()) as u64)
+}
+
+/// Read one frame from `r`, validating magic, protocol version, and the
+/// payload length cap. Errors are contextful: a mismatched version
+/// names both the peer's version and this build's.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame> {
+    let mut hdr = [0u8; HEADER_LEN];
+    r.read_exact(&mut hdr).context("truncated frame header")?;
+    if hdr[0..4] != MAGIC {
+        bail!(
+            "bad frame magic {:02x?} (expected \"OGTP\" — peer is not an oggm rank transport)",
+            &hdr[0..4]
+        );
+    }
+    let version = u16::from_le_bytes([hdr[4], hdr[5]]);
+    if version != VERSION {
+        bail!(
+            "transport protocol version mismatch: peer speaks v{version}, \
+             this build speaks v{VERSION}"
+        );
+    }
+    let kind = u16::from_le_bytes([hdr[6], hdr[7]]);
+    let rank = u32::from_le_bytes([hdr[8], hdr[9], hdr[10], hdr[11]]);
+    let len = u32::from_le_bytes([hdr[12], hdr[13], hdr[14], hdr[15]]);
+    if len > MAX_PAYLOAD {
+        bail!("frame payload length {len} exceeds the {MAX_PAYLOAD} byte cap");
+    }
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload)
+        .with_context(|| format!("truncated frame payload (wanted {len} bytes)"))?;
+    Ok(Frame { kind, rank, payload })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn frame_round_trips() {
+        let mut buf = Vec::new();
+        let n = write_frame(&mut buf, 7, 3, &[1, 2, 3, 4, 5]).unwrap();
+        assert_eq!(n, (HEADER_LEN + 5) as u64);
+        let f = read_frame(&mut Cursor::new(&buf)).unwrap();
+        assert_eq!(f, Frame { kind: 7, rank: 3, payload: vec![1, 2, 3, 4, 5] });
+    }
+
+    #[test]
+    fn empty_payload_round_trips() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, 1, 0, &[]).unwrap();
+        let f = read_frame(&mut Cursor::new(&buf)).unwrap();
+        assert_eq!((f.kind, f.rank, f.payload.len()), (1, 0, 0));
+    }
+
+    #[test]
+    fn bad_magic_is_rejected() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, 1, 0, &[9]).unwrap();
+        buf[0] = b'X';
+        let err = read_frame(&mut Cursor::new(&buf)).unwrap_err().to_string();
+        assert!(err.contains("bad frame magic"), "{err}");
+    }
+
+    #[test]
+    fn version_mismatch_names_both_versions() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, 1, 0, &[]).unwrap();
+        buf[4..6].copy_from_slice(&(VERSION + 1).to_le_bytes());
+        let err = read_frame(&mut Cursor::new(&buf)).unwrap_err().to_string();
+        assert!(err.contains(&format!("v{}", VERSION + 1)), "{err}");
+        assert!(err.contains(&format!("v{VERSION}")), "{err}");
+    }
+
+    #[test]
+    fn truncated_header_and_payload_are_contextful() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, 2, 1, &[1, 2, 3, 4]).unwrap();
+        let hdr_err =
+            read_frame(&mut Cursor::new(&buf[..HEADER_LEN - 3])).unwrap_err().to_string();
+        assert!(hdr_err.contains("truncated frame header"), "{hdr_err}");
+        let pay_err = read_frame(&mut Cursor::new(&buf[..HEADER_LEN + 2])).unwrap_err();
+        assert!(format!("{pay_err:#}").contains("truncated frame payload"), "{pay_err:#}");
+    }
+
+    #[test]
+    fn oversized_length_field_is_rejected() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, 2, 1, &[]).unwrap();
+        buf[12..16].copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = read_frame(&mut Cursor::new(&buf)).unwrap_err().to_string();
+        assert!(err.contains("exceeds"), "{err}");
+    }
+}

@@ -1,0 +1,64 @@
+//! In-process rank transport: the original threaded-pool channels,
+//! wrapped behind the transport seam.
+//!
+//! Messages stay as Rust values end to end — `Arc`-shared buffers
+//! (θ, one-hot targets) cross the "wire" zero-copy. To keep the
+//! per-rank traffic counters comparable with the TCP transport, each
+//! send/recv is *priced* via the canonical encoders
+//! ([`msg::req_wire_len`]/[`msg::resp_wire_len`]) without serializing:
+//! the counters report what the message *would* cost on a real wire.
+
+use std::cell::Cell;
+use std::sync::mpsc::{Receiver, Sender, TryRecvError};
+
+use crate::parallel::{Req, Resp};
+
+use super::msg;
+
+/// Coordinator-side endpoint of one in-process rank: the request
+/// sender and response receiver of the worker thread's channel pair,
+/// plus logical traffic counters.
+pub(crate) struct InProcLink {
+    tx: Sender<Req>,
+    rx: Receiver<Resp>,
+    tx_bytes: Cell<u64>,
+    rx_bytes: Cell<u64>,
+}
+
+impl InProcLink {
+    /// Wrap a freshly spawned worker's channel endpoints.
+    pub(crate) fn new(tx: Sender<Req>, rx: Receiver<Resp>) -> InProcLink {
+        InProcLink { tx, rx, tx_bytes: Cell::new(0), rx_bytes: Cell::new(0) }
+    }
+
+    /// Send one request. `Err(())` means the worker's receiving end is
+    /// gone (thread exited); callers map this to their own contextful
+    /// message so wording stays owned by the pool.
+    pub(crate) fn send(&self, req: Req) -> Result<(), ()> {
+        self.tx_bytes.set(self.tx_bytes.get() + msg::req_wire_len(&req));
+        self.tx.send(req).map_err(|_| ())
+    }
+
+    /// Blocking receive of one response; `Err(())` on a dead worker.
+    pub(crate) fn recv(&self) -> Result<Resp, ()> {
+        let resp = self.rx.recv().map_err(|_| ())?;
+        self.rx_bytes.set(self.rx_bytes.get() + msg::resp_wire_len(&resp));
+        Ok(resp)
+    }
+
+    /// Non-blocking receive used to drain stale responses.
+    pub(crate) fn try_recv(&self) -> Option<Resp> {
+        match self.rx.try_recv() {
+            Ok(resp) => {
+                self.rx_bytes.set(self.rx_bytes.get() + msg::resp_wire_len(&resp));
+                Some(resp)
+            }
+            Err(TryRecvError::Empty | TryRecvError::Disconnected) => None,
+        }
+    }
+
+    /// (tx_bytes, rx_bytes) priced at canonical wire size.
+    pub(crate) fn traffic(&self) -> (u64, u64) {
+        (self.tx_bytes.get(), self.rx_bytes.get())
+    }
+}

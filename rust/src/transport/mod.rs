@@ -1,0 +1,164 @@
+//! Pluggable rank transport: process-separated distributed execution
+//! behind one seam (DESIGN.md §12).
+//!
+//! The rank-parallel engine talks to its P workers through a *link*
+//! abstraction with two implementations carrying the same framed,
+//! versioned payloads:
+//!
+//! * [`inproc`] — the original threaded pool: Rust channels, messages
+//!   cross as values (zero-copy for `Arc`-shared buffers), counters
+//!   priced at canonical wire size so they stay comparable.
+//! * [`tcp`] — separate OS processes over sockets: length-prefixed
+//!   frames ([`frame`]), a handshake carrying rank id, world size, and
+//!   the artifact manifest fingerprint so mismatched processes fail
+//!   fast, and hub-folded collectives that are bitwise identical to
+//!   the in-process rank-order fold.
+//!
+//! Both serialize via [`msg`], so a solve over TCP workers produces
+//! bit-identical solutions and collective counts to the in-process
+//! engine — `rust/tests/transport_equivalence.rs` pins this.
+
+pub mod frame;
+pub(crate) mod inproc;
+pub(crate) mod msg;
+pub(crate) mod tcp;
+
+use std::path::Path;
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
+
+use crate::parallel::{Req, Resp};
+
+/// FNV-1a 64-bit fingerprint of the artifact manifest (`manifest.tsv`)
+/// under `dir`. Workers and the coordinator exchange this during the
+/// TCP handshake: a mismatch means the processes were pointed at
+/// different artifact sets and would silently diverge, so the
+/// handshake rejects them up front. A missing manifest hashes as the
+/// empty byte string (both sides degraded still match).
+pub fn manifest_fingerprint(dir: &Path) -> u64 {
+    let bytes = std::fs::read(dir.join("manifest.tsv")).unwrap_or_default();
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Coordinator-side endpoint of one rank, over either transport. The
+/// pool holds one per rank and never cares which kind it is beyond the
+/// wording of its failure messages.
+pub(crate) enum RankLink {
+    /// In-process worker thread (channel pair).
+    InProc(inproc::InProcLink),
+    /// Separate worker process (TCP connection).
+    Tcp(tcp::TcpLink),
+}
+
+impl RankLink {
+    /// Send one request; `Err(())` on a dead worker.
+    pub(crate) fn send(&self, req: Req) -> Result<(), ()> {
+        match self {
+            RankLink::InProc(l) => l.send(req),
+            RankLink::Tcp(l) => l.send(req),
+        }
+    }
+
+    /// Blocking receive of one response; `Err(())` on a dead worker.
+    pub(crate) fn recv(&self) -> Result<Resp, ()> {
+        match self {
+            RankLink::InProc(l) => l.recv(),
+            RankLink::Tcp(l) => l.recv(),
+        }
+    }
+
+    /// Non-blocking receive used to drain stale responses.
+    pub(crate) fn try_recv(&self) -> Option<Resp> {
+        match self {
+            RankLink::InProc(l) => l.try_recv(),
+            RankLink::Tcp(l) => l.try_recv(),
+        }
+    }
+
+    /// (tx_bytes, rx_bytes) for this rank's control+collective traffic.
+    pub(crate) fn traffic(&self) -> (u64, u64) {
+        match self {
+            RankLink::InProc(l) => l.traffic(),
+            RankLink::Tcp(l) => l.traffic(),
+        }
+    }
+
+    /// Failure wording for a send that found the worker gone. The
+    /// in-process phrasing is retryable in the Executor (the thread
+    /// can be respawned); the TCP phrasing deliberately is not — a
+    /// dead worker *process* needs an operator to relaunch it.
+    pub(crate) fn gone_msg(&self, rank: usize) -> String {
+        match self {
+            RankLink::InProc(_) => format!("rank {rank} worker is gone"),
+            RankLink::Tcp(_) => {
+                format!("rank {rank} worker process unreachable (connection closed)")
+            }
+        }
+    }
+
+    /// Failure wording for a receive that found the worker dead; same
+    /// retryable/non-retryable split as [`RankLink::gone_msg`].
+    pub(crate) fn death_msg(&self, rank: usize) -> String {
+        match self {
+            RankLink::InProc(_) => format!("rank {rank}: worker thread died"),
+            RankLink::Tcp(_) => format!("rank {rank}: worker process disconnected"),
+        }
+    }
+}
+
+/// Worker-side endpoint: where `worker_main` receives requests and
+/// sends responses, over either transport.
+pub(crate) enum WorkerLink {
+    /// In-process: the worker thread's end of the channel pair.
+    Chan {
+        /// Request receiver (coordinator → worker).
+        rx: Receiver<Req>,
+        /// Response sender (worker → coordinator).
+        tx: Sender<Resp>,
+    },
+    /// Separate process: the worker's TCP connection.
+    Remote(Arc<tcp::RemoteIo>),
+}
+
+impl WorkerLink {
+    /// Blocking receive of the next request; `None` when the
+    /// coordinator is gone and the worker should exit.
+    pub(crate) fn recv(&self) -> Option<Req> {
+        match self {
+            WorkerLink::Chan { rx, .. } => rx.recv().ok(),
+            WorkerLink::Remote(io) => io.recv_req(),
+        }
+    }
+
+    /// Send one response; `false` when the coordinator is unreachable.
+    pub(crate) fn send(&self, resp: Resp) -> bool {
+        match self {
+            WorkerLink::Chan { tx, .. } => tx.send(resp).is_ok(),
+            WorkerLink::Remote(io) => io.send_resp(resp),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fingerprint_is_stable_and_content_sensitive() {
+        let dir = std::env::temp_dir().join(format!("oggm_fp_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let missing = manifest_fingerprint(&dir);
+        assert_eq!(missing, manifest_fingerprint(&dir), "stable on missing manifest");
+        std::fs::write(dir.join("manifest.tsv"), b"# oggm artifact manifest\tk=32\n").unwrap();
+        let a = manifest_fingerprint(&dir);
+        assert_ne!(a, missing);
+        std::fs::write(dir.join("manifest.tsv"), b"# oggm artifact manifest\tk=64\n").unwrap();
+        assert_ne!(a, manifest_fingerprint(&dir));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,887 @@
+//! Payload (de)serialization for rank-transport frames.
+//!
+//! Every control-plane [`Req`]/[`Resp`] the in-process pool passes over
+//! channels has a canonical byte encoding here, so the TCP transport
+//! carries *exactly the same payloads* and results stay bitwise
+//! identical across transports. Scalars are little-endian; f32 buffers
+//! are written as a u32 element count followed by raw LE bytes (the
+//! `util::binio` idiom). The same encoders back the `InProc` logical
+//! byte counters via [`CountWriter`], so `tx_bytes`/`rx_bytes` are
+//! comparable between transports even though the in-process path never
+//! actually serializes.
+
+use std::io::Write;
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::shard::{EdgeTile, ShardState, SparseShard};
+use crate::graph::partition::Partition;
+use crate::model::params::Params;
+use crate::parallel::{FwdReq, RankShard, RankTiming, Req, Resp, SyncDelta};
+use crate::runtime::exec::ExecStats;
+
+use super::frame::HEADER_LEN;
+
+/// Frame kind: worker→coordinator handshake greeting.
+pub(crate) const KIND_HELLO: u16 = 1;
+/// Frame kind: coordinator→worker handshake acceptance.
+pub(crate) const KIND_WELCOME: u16 = 2;
+/// Frame kind: coordinator→worker handshake rejection (then close).
+pub(crate) const KIND_REJECT: u16 = 3;
+/// Frame kind: coordinator→worker control request ([`Req`]).
+pub(crate) const KIND_REQ: u16 = 4;
+/// Frame kind: worker→coordinator control response ([`Resp`]).
+pub(crate) const KIND_RESP: u16 = 5;
+/// Frame kind: worker→coordinator collective deposit.
+pub(crate) const KIND_COLL_DEPOSIT: u16 = 6;
+/// Frame kind: coordinator→worker collective result fan-out.
+pub(crate) const KIND_COLL_RESULT: u16 = 7;
+/// Frame kind: collective abort notice (either direction).
+pub(crate) const KIND_COLL_ABORT: u16 = 8;
+
+/// Collective operation discriminant carried in a deposit frame; the
+/// hub validates that all ranks of a generation deposit the same op.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum CollOp {
+    /// No payload; pure synchronization.
+    Barrier,
+    /// Elementwise sum; all ranks deposit equal-length buffers.
+    AllReduce,
+    /// Concatenation in rank order.
+    AllGather,
+    /// Rank 0's buffer copied to everyone.
+    Broadcast,
+}
+
+impl CollOp {
+    fn to_u8(self) -> u8 {
+        match self {
+            CollOp::Barrier => 0,
+            CollOp::AllReduce => 1,
+            CollOp::AllGather => 2,
+            CollOp::Broadcast => 3,
+        }
+    }
+
+    fn from_u8(v: u8) -> Result<CollOp> {
+        Ok(match v {
+            0 => CollOp::Barrier,
+            1 => CollOp::AllReduce,
+            2 => CollOp::AllGather,
+            3 => CollOp::Broadcast,
+            other => bail!("unknown collective op tag {other}"),
+        })
+    }
+
+    /// Human-readable name, used in abort/mismatch messages.
+    pub(crate) fn name(self) -> &'static str {
+        match self {
+            CollOp::Barrier => "barrier",
+            CollOp::AllReduce => "all_reduce",
+            CollOp::AllGather => "all_gather",
+            CollOp::Broadcast => "broadcast",
+        }
+    }
+}
+
+/// One decoded transport message: the union of everything that can
+/// travel in a frame after the header.
+#[derive(Debug)]
+pub(crate) enum WireMsg {
+    /// Worker greeting: its rank, expected world size (0 = any), and
+    /// the FNV-1a fingerprint of its artifact manifest.
+    Hello {
+        /// The connecting worker's rank id.
+        rank: u32,
+        /// World size the worker was launched for (0 = accept any).
+        world: u32,
+        /// `manifest_fingerprint` of the worker's artifact dir.
+        fingerprint: u64,
+    },
+    /// Coordinator acceptance carrying the authoritative world size.
+    Welcome {
+        /// World size P of the group the worker just joined.
+        p: u32,
+    },
+    /// Coordinator rejection; the connection closes after this.
+    Reject {
+        /// Why the worker was turned away (version, rank, fingerprint…).
+        reason: String,
+    },
+    /// A control-plane request (coordinator→worker).
+    Req(Req),
+    /// A control-plane response (worker→coordinator).
+    Resp(Resp),
+    /// A collective deposit (worker→coordinator hub).
+    CollDeposit {
+        /// Which collective this deposit belongs to.
+        op: CollOp,
+        /// The rank's contribution (possibly empty, e.g. barrier).
+        payload: Vec<f32>,
+    },
+    /// The folded collective result fanned out to every rank.
+    CollResult {
+        /// The reduced/gathered/broadcast buffer (empty for barrier).
+        payload: Vec<f32>,
+    },
+    /// A collective abort notice; sticky until the next fresh group.
+    CollAbort {
+        /// The rank that aborted (or was observed dead).
+        rank: u32,
+        /// Contextful reason, preserved verbatim across the wire.
+        reason: String,
+    },
+}
+
+impl WireMsg {
+    /// The frame kind this message travels under.
+    pub(crate) fn kind(&self) -> u16 {
+        match self {
+            WireMsg::Hello { .. } => KIND_HELLO,
+            WireMsg::Welcome { .. } => KIND_WELCOME,
+            WireMsg::Reject { .. } => KIND_REJECT,
+            WireMsg::Req(_) => KIND_REQ,
+            WireMsg::Resp(_) => KIND_RESP,
+            WireMsg::CollDeposit { .. } => KIND_COLL_DEPOSIT,
+            WireMsg::CollResult { .. } => KIND_COLL_RESULT,
+            WireMsg::CollAbort { .. } => KIND_COLL_ABORT,
+        }
+    }
+
+    /// Encode this message's payload (header excluded) into `w`.
+    pub(crate) fn encode<W: Write>(&self, w: &mut W) -> Result<()> {
+        match self {
+            WireMsg::Hello { rank, world, fingerprint } => {
+                put_u32(w, *rank)?;
+                put_u32(w, *world)?;
+                put_u64(w, *fingerprint)?;
+            }
+            WireMsg::Welcome { p } => put_u32(w, *p)?,
+            WireMsg::Reject { reason } => put_str(w, reason)?,
+            WireMsg::Req(r) => encode_req(r, w)?,
+            WireMsg::Resp(r) => encode_resp(r, w)?,
+            WireMsg::CollDeposit { op, payload } => {
+                put_u8(w, op.to_u8())?;
+                put_f32s(w, payload)?;
+            }
+            WireMsg::CollResult { payload } => put_f32s(w, payload)?,
+            WireMsg::CollAbort { rank, reason } => {
+                put_u32(w, *rank)?;
+                put_str(w, reason)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Decode a frame payload given its kind.
+    pub(crate) fn decode(kind: u16, payload: &[u8]) -> Result<WireMsg> {
+        let mut r = Reader::new(payload);
+        let msg = match kind {
+            KIND_HELLO => WireMsg::Hello {
+                rank: r.u32()?,
+                world: r.u32()?,
+                fingerprint: r.u64()?,
+            },
+            KIND_WELCOME => WireMsg::Welcome { p: r.u32()? },
+            KIND_REJECT => WireMsg::Reject { reason: r.str()? },
+            KIND_REQ => return Ok(WireMsg::Req(decode_req(payload)?)),
+            KIND_RESP => return Ok(WireMsg::Resp(decode_resp(payload)?)),
+            KIND_COLL_DEPOSIT => {
+                let op = CollOp::from_u8(r.u8()?)?;
+                WireMsg::CollDeposit { op, payload: r.f32s()? }
+            }
+            KIND_COLL_RESULT => WireMsg::CollResult { payload: r.f32s()? },
+            KIND_COLL_ABORT => WireMsg::CollAbort { rank: r.u32()?, reason: r.str()? },
+            other => bail!("unknown transport frame kind {other}"),
+        };
+        r.finish()?;
+        Ok(msg)
+    }
+}
+
+// ---------------------------------------------------------------- Req
+
+/// Encode a [`Req`] payload. [`Req::NewComm`] is encoded as the
+/// transport-neutral "reset collectives" tag — a remote worker cannot
+/// receive an in-process communicator, so both `NewComm` and
+/// `ResetComm` decode to [`Req::ResetComm`].
+pub(crate) fn encode_req<W: Write>(req: &Req, w: &mut W) -> Result<()> {
+    match req {
+        Req::SetParams(p) => {
+            put_u8(w, 0)?;
+            put_u32(w, p.k as u32)?;
+            put_f32s(w, &p.flat)?;
+        }
+        Req::NewComm(_) | Req::ResetComm => put_u8(w, 1)?,
+        Req::Install { slot, shard, resident } => {
+            put_u8(w, 2)?;
+            put_u32(w, *slot as u32)?;
+            put_u8(w, u8::from(*resident))?;
+            encode_shard(shard, w)?;
+        }
+        Req::Sync { slot, delta } => {
+            put_u8(w, 3)?;
+            put_u32(w, *slot as u32)?;
+            encode_delta(delta, w)?;
+        }
+        Req::Rebuild { slot, shard } => {
+            put_u8(w, 4)?;
+            put_u32(w, *slot as u32)?;
+            encode_shard(shard, w)?;
+        }
+        Req::Forward { slot, f } => {
+            put_u8(w, 5)?;
+            put_u32(w, *slot as u32)?;
+            put_u32(w, f.l as u32)?;
+            put_u8(w, u8::from(f.save))?;
+            put_u8(w, u8::from(f.skip_zero))?;
+            put_f32s(w, &f.s)?;
+            put_f32s(w, &f.c)?;
+            put_opt_f32s(w, f.deg.as_deref())?;
+        }
+        Req::Backward { slot, l, onehot, targets } => {
+            put_u8(w, 6)?;
+            put_u32(w, *slot as u32)?;
+            put_u32(w, *l as u32)?;
+            put_f32s(w, onehot)?;
+            put_f32s(w, targets)?;
+        }
+        Req::Uninstall { slot } => {
+            put_u8(w, 7)?;
+            put_u32(w, *slot as u32)?;
+        }
+        Req::Stats => put_u8(w, 8)?,
+        Req::InjectFailure => put_u8(w, 9)?,
+        Req::Shutdown => put_u8(w, 10)?,
+    }
+    Ok(())
+}
+
+/// Decode a [`Req`] payload (inverse of [`encode_req`]).
+pub(crate) fn decode_req(payload: &[u8]) -> Result<Req> {
+    let mut r = Reader::new(payload);
+    let req = match r.u8()? {
+        0 => {
+            let k = r.u32()? as usize;
+            let flat = r.f32s()?;
+            Req::SetParams(Arc::new(Params { k, flat }))
+        }
+        1 => Req::ResetComm,
+        2 => {
+            let slot = r.u32()? as usize;
+            let resident = r.u8()? != 0;
+            let shard = decode_shard(&mut r)?;
+            Req::Install { slot, shard, resident }
+        }
+        3 => {
+            let slot = r.u32()? as usize;
+            let delta = decode_delta(&mut r)?;
+            Req::Sync { slot, delta }
+        }
+        4 => {
+            let slot = r.u32()? as usize;
+            let shard = decode_shard(&mut r)?;
+            Req::Rebuild { slot, shard }
+        }
+        5 => {
+            let slot = r.u32()? as usize;
+            let l = r.u32()? as usize;
+            let save = r.u8()? != 0;
+            let skip_zero = r.u8()? != 0;
+            let s = r.f32s()?;
+            let c = r.f32s()?;
+            let deg = r.opt_f32s()?;
+            Req::Forward { slot, f: FwdReq { l, save, skip_zero, s, c, deg } }
+        }
+        6 => {
+            let slot = r.u32()? as usize;
+            let l = r.u32()? as usize;
+            let onehot = Arc::new(r.f32s()?);
+            let targets = Arc::new(r.f32s()?);
+            Req::Backward { slot, l, onehot, targets }
+        }
+        7 => Req::Uninstall { slot: r.u32()? as usize },
+        8 => Req::Stats,
+        9 => Req::InjectFailure,
+        10 => Req::Shutdown,
+        other => bail!("unknown request tag {other}"),
+    };
+    r.finish()?;
+    Ok(req)
+}
+
+fn encode_shard<W: Write>(shard: &RankShard, w: &mut W) -> Result<()> {
+    match shard {
+        RankShard::Dense(s) => {
+            put_u8(w, 0)?;
+            encode_part(s.part, w)?;
+            put_u32(w, s.shard as u32)?;
+            put_u32(w, s.b as u32)?;
+            put_f32s(w, &s.a)?;
+            put_f32s(w, &s.s)?;
+            put_f32s(w, &s.c)?;
+        }
+        RankShard::Sparse(s) => {
+            put_u8(w, 1)?;
+            encode_part(s.part, w)?;
+            put_u32(w, s.shard as u32)?;
+            put_u32(w, s.b as u32)?;
+            put_u32(w, s.chunk as u32)?;
+            put_u32(w, s.tiles.len() as u32)?;
+            for t in &s.tiles {
+                put_u32(w, t.sc as u32)?;
+                put_u32(w, t.dc as u32)?;
+                put_u32(w, t.cap as u32)?;
+                put_u32(w, t.len as u32)?;
+                put_f32s(w, &t.src)?;
+                put_f32s(w, &t.dst)?;
+                put_f32s(w, &t.w)?;
+            }
+            put_f32s(w, &s.s)?;
+            put_f32s(w, &s.c)?;
+            put_f32s(w, &s.deg)?;
+        }
+    }
+    Ok(())
+}
+
+fn decode_shard(r: &mut Reader<'_>) -> Result<RankShard> {
+    Ok(match r.u8()? {
+        0 => {
+            let part = decode_part(r)?;
+            let shard = r.u32()? as usize;
+            let b = r.u32()? as usize;
+            let a = r.f32s()?;
+            let s = r.f32s()?;
+            let c = r.f32s()?;
+            RankShard::Dense(ShardState::from_wire(part, shard, b, a, s, c))
+        }
+        1 => {
+            let part = decode_part(r)?;
+            let shard = r.u32()? as usize;
+            let b = r.u32()? as usize;
+            let chunk = r.u32()? as usize;
+            let n_tiles = r.u32()? as usize;
+            let mut tiles = Vec::with_capacity(n_tiles);
+            for _ in 0..n_tiles {
+                let (sc, dc) = (r.u32()? as usize, r.u32()? as usize);
+                let (cap, len) = (r.u32()? as usize, r.u32()? as usize);
+                let src = r.f32s()?;
+                let dst = r.f32s()?;
+                let w = r.f32s()?;
+                tiles.push(EdgeTile { sc, dc, cap, len, src, dst, w });
+            }
+            let s = r.f32s()?;
+            let c = r.f32s()?;
+            let deg = r.f32s()?;
+            RankShard::Sparse(SparseShard::from_wire(part, shard, b, chunk, tiles, s, c, deg))
+        }
+        other => bail!("unknown shard tag {other}"),
+    })
+}
+
+fn encode_part<W: Write>(part: Partition, w: &mut W) -> Result<()> {
+    put_u32(w, part.n as u32)?;
+    put_u32(w, part.p as u32)
+}
+
+fn decode_part(r: &mut Reader<'_>) -> Result<Partition> {
+    let n = r.u32()? as usize;
+    let p = r.u32()? as usize;
+    if p < 1 || n % p != 0 {
+        bail!("invalid partition on the wire: P={p} must divide padded N={n}");
+    }
+    Ok(Partition::new(n, p))
+}
+
+fn encode_delta<W: Write>(delta: &SyncDelta, w: &mut W) -> Result<()> {
+    match delta {
+        SyncDelta::Dense { rows, cols } => {
+            put_u8(w, 0)?;
+            put_u32_pairs(w, rows)?;
+            put_u32_pairs(w, cols)?;
+        }
+        SyncDelta::Sparse { tiles } => {
+            put_u8(w, 1)?;
+            put_u32(w, tiles.len() as u32)?;
+            for (idx, mask) in tiles {
+                put_u32(w, *idx)?;
+                put_f32s(w, mask)?;
+            }
+        }
+    }
+    Ok(())
+}
+
+fn decode_delta(r: &mut Reader<'_>) -> Result<SyncDelta> {
+    Ok(match r.u8()? {
+        0 => SyncDelta::Dense { rows: r.u32_pairs()?, cols: r.u32_pairs()? },
+        1 => {
+            let n = r.u32()? as usize;
+            let mut tiles = Vec::with_capacity(n);
+            for _ in 0..n {
+                let idx = r.u32()?;
+                tiles.push((idx, r.f32s()?));
+            }
+            SyncDelta::Sparse { tiles }
+        }
+        other => bail!("unknown sync delta tag {other}"),
+    })
+}
+
+// --------------------------------------------------------------- Resp
+
+/// Encode a [`Resp`] payload.
+pub(crate) fn encode_resp<W: Write>(resp: &Resp, w: &mut W) -> Result<()> {
+    match resp {
+        Resp::Unit { xfer } => {
+            put_u8(w, 0)?;
+            put_f64(w, *xfer)?;
+        }
+        Resp::Fwd { scores, timing } => {
+            put_u8(w, 1)?;
+            put_opt_f32s(w, scores.as_deref())?;
+            encode_timing(timing, w)?;
+        }
+        Resp::Bwd { loss, grads, timing } => {
+            put_u8(w, 2)?;
+            put_f32(w, *loss)?;
+            put_opt_f32s(w, grads.as_deref())?;
+            encode_timing(timing, w)?;
+        }
+        Resp::Stats(s) => {
+            put_u8(w, 3)?;
+            put_u64(w, s.executions)?;
+            put_u64(w, s.compile_time.as_nanos() as u64)?;
+            put_u64(w, s.exec_time.as_nanos() as u64)?;
+            put_u64(w, s.h2d_time.as_nanos() as u64)?;
+            put_u64(w, s.d2h_time.as_nanos() as u64)?;
+            put_u64(w, s.h2d_bytes)?;
+            put_u64(w, s.d2h_bytes)?;
+            put_u64(w, s.cache_hits)?;
+            put_u64(w, s.restarts)?;
+            put_u64(w, s.recovery_time.as_nanos() as u64)?;
+            put_u64(w, s.tx_bytes)?;
+            put_u64(w, s.rx_bytes)?;
+        }
+        Resp::Err(msg) => {
+            put_u8(w, 4)?;
+            put_str(w, msg)?;
+        }
+    }
+    Ok(())
+}
+
+/// Decode a [`Resp`] payload (inverse of [`encode_resp`]).
+pub(crate) fn decode_resp(payload: &[u8]) -> Result<Resp> {
+    let mut r = Reader::new(payload);
+    let resp = match r.u8()? {
+        0 => Resp::Unit { xfer: r.f64()? },
+        1 => Resp::Fwd { scores: r.opt_f32s()?, timing: decode_timing(&mut r)? },
+        2 => Resp::Bwd {
+            loss: r.f32()?,
+            grads: r.opt_f32s()?,
+            timing: decode_timing(&mut r)?,
+        },
+        3 => Resp::Stats(ExecStats {
+            executions: r.u64()?,
+            compile_time: Duration::from_nanos(r.u64()?),
+            exec_time: Duration::from_nanos(r.u64()?),
+            h2d_time: Duration::from_nanos(r.u64()?),
+            d2h_time: Duration::from_nanos(r.u64()?),
+            h2d_bytes: r.u64()?,
+            d2h_bytes: r.u64()?,
+            cache_hits: r.u64()?,
+            restarts: r.u64()?,
+            recovery_time: Duration::from_nanos(r.u64()?),
+            tx_bytes: r.u64()?,
+            rx_bytes: r.u64()?,
+        }),
+        4 => Resp::Err(r.str()?),
+        other => bail!("unknown response tag {other}"),
+    };
+    r.finish()?;
+    Ok(resp)
+}
+
+fn encode_timing<W: Write>(t: &RankTiming, w: &mut W) -> Result<()> {
+    put_f64(w, t.compute)?;
+    put_f64(w, t.host)?;
+    put_f64(w, t.comm)?;
+    put_f64(w, t.h2d)?;
+    put_u64(w, t.comm_bytes)?;
+    put_u64(w, t.collectives)
+}
+
+fn decode_timing(r: &mut Reader<'_>) -> Result<RankTiming> {
+    Ok(RankTiming {
+        compute: r.f64()?,
+        host: r.f64()?,
+        comm: r.f64()?,
+        h2d: r.f64()?,
+        comm_bytes: r.u64()?,
+        collectives: r.u64()?,
+    })
+}
+
+// ------------------------------------------------- wire-length probes
+
+/// An `io::Write` that counts bytes and discards them — used to price
+/// a message's wire size without serializing it (the `InProc` logical
+/// traffic counters).
+struct CountWriter(u64);
+
+impl Write for CountWriter {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        self.0 += buf.len() as u64;
+        Ok(buf.len())
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+/// The total frame size (header included) `req` would occupy on the
+/// wire. O(1) per buffer — only lengths are accumulated.
+pub(crate) fn req_wire_len(req: &Req) -> u64 {
+    let mut c = CountWriter(0);
+    // Counting cannot fail: CountWriter's Write impl is infallible.
+    let _ = encode_req(req, &mut c);
+    c.0 + HEADER_LEN as u64
+}
+
+/// The total frame size (header included) `resp` would occupy.
+pub(crate) fn resp_wire_len(resp: &Resp) -> u64 {
+    let mut c = CountWriter(0);
+    let _ = encode_resp(resp, &mut c);
+    c.0 + HEADER_LEN as u64
+}
+
+// ------------------------------------------------------- primitives
+
+fn put_u8<W: Write>(w: &mut W, v: u8) -> Result<()> {
+    w.write_all(&[v])?;
+    Ok(())
+}
+
+fn put_u32<W: Write>(w: &mut W, v: u32) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn put_u64<W: Write>(w: &mut W, v: u64) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn put_f32<W: Write>(w: &mut W, v: f32) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn put_f64<W: Write>(w: &mut W, v: f64) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn put_str<W: Write>(w: &mut W, s: &str) -> Result<()> {
+    put_u32(w, s.len() as u32)?;
+    w.write_all(s.as_bytes())?;
+    Ok(())
+}
+
+/// Length-prefixed f32 buffer as raw little-endian bytes (one bulk
+/// write; f32 has no invalid bit patterns so this is lossless).
+fn put_f32s<W: Write>(w: &mut W, v: &[f32]) -> Result<()> {
+    put_u32(w, v.len() as u32)?;
+    // SAFETY: f32 is 4 bytes with no padding; the slice's backing
+    // memory is valid for len*4 bytes for the duration of the call.
+    let bytes =
+        unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) };
+    w.write_all(bytes)?;
+    Ok(())
+}
+
+fn put_opt_f32s<W: Write>(w: &mut W, v: Option<&[f32]>) -> Result<()> {
+    match v {
+        None => put_u8(w, 0),
+        Some(v) => {
+            put_u8(w, 1)?;
+            put_f32s(w, v)
+        }
+    }
+}
+
+fn put_u32_pairs<W: Write>(w: &mut W, v: &[(u32, u32)]) -> Result<()> {
+    put_u32(w, v.len() as u32)?;
+    for &(a, b) in v {
+        put_u32(w, a)?;
+        put_u32(w, b)?;
+    }
+    Ok(())
+}
+
+/// A bounds-checked slice reader for decoding payloads.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.buf.len() - self.pos < n {
+            bail!(
+                "truncated payload: wanted {n} bytes at offset {}, have {}",
+                self.pos,
+                self.buf.len() - self.pos
+            );
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes(b.try_into().expect("8 bytes")))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        let b = self.take(4)?;
+        Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        let b = self.take(8)?;
+        Ok(f64::from_le_bytes(b.try_into().expect("8 bytes")))
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let len = self.u32()? as usize;
+        let bytes = self.take(len)?;
+        Ok(String::from_utf8_lossy(bytes).into_owned())
+    }
+
+    fn f32s(&mut self) -> Result<Vec<f32>> {
+        let len = self.u32()? as usize;
+        let bytes = self.take(len.checked_mul(4).unwrap_or(usize::MAX))?;
+        let mut out = vec![0f32; len];
+        // SAFETY: `out` owns len*4 writable bytes; `bytes` is exactly
+        // len*4 bytes; copy through u8 pointers sidesteps alignment.
+        unsafe {
+            std::ptr::copy_nonoverlapping(
+                bytes.as_ptr(),
+                out.as_mut_ptr() as *mut u8,
+                len * 4,
+            );
+        }
+        Ok(out)
+    }
+
+    fn opt_f32s(&mut self) -> Result<Option<Vec<f32>>> {
+        Ok(match self.u8()? {
+            0 => None,
+            _ => Some(self.f32s()?),
+        })
+    }
+
+    fn u32_pairs(&mut self) -> Result<Vec<(u32, u32)>> {
+        let len = self.u32()? as usize;
+        let mut out = Vec::with_capacity(len.min(1 << 20));
+        for _ in 0..len {
+            out.push((self.u32()?, self.u32()?));
+        }
+        Ok(out)
+    }
+
+    fn finish(&self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            bail!("trailing bytes in payload: {} of {} consumed", self.pos, self.buf.len());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round_trip_req(req: &Req) -> Req {
+        let mut buf = Vec::new();
+        encode_req(req, &mut buf).unwrap();
+        assert_eq!(buf.len() as u64 + HEADER_LEN as u64, req_wire_len(req));
+        decode_req(&buf).unwrap()
+    }
+
+    fn round_trip_resp(resp: &Resp) -> Resp {
+        let mut buf = Vec::new();
+        encode_resp(resp, &mut buf).unwrap();
+        assert_eq!(buf.len() as u64 + HEADER_LEN as u64, resp_wire_len(resp));
+        decode_resp(&buf).unwrap()
+    }
+
+    #[test]
+    fn set_params_round_trips_bitwise() {
+        let p = Params { k: 4, flat: vec![0.5, -1.25, f32::MIN_POSITIVE, 3.75] };
+        match round_trip_req(&Req::SetParams(Arc::new(p.clone()))) {
+            Req::SetParams(got) => {
+                assert_eq!(got.k, p.k);
+                let a: Vec<u32> = got.flat.iter().map(|v| v.to_bits()).collect();
+                let b: Vec<u32> = p.flat.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(a, b);
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn forward_round_trips() {
+        let req = Req::Forward {
+            slot: 2,
+            f: FwdReq {
+                l: 3,
+                save: true,
+                skip_zero: false,
+                s: vec![1.0, 0.0],
+                c: vec![0.0, 1.0],
+                deg: Some(vec![2.0, 0.0]),
+            },
+        };
+        match round_trip_req(&req) {
+            Req::Forward { slot, f } => {
+                assert_eq!(slot, 2);
+                assert_eq!((f.l, f.save, f.skip_zero), (3, true, false));
+                assert_eq!(f.s, vec![1.0, 0.0]);
+                assert_eq!(f.deg, Some(vec![2.0, 0.0]));
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn sync_deltas_round_trip() {
+        let dense = Req::Sync {
+            slot: 0,
+            delta: SyncDelta::Dense { rows: vec![(0, 3), (1, 7)], cols: vec![(0, 12)] },
+        };
+        match round_trip_req(&dense) {
+            Req::Sync { delta: SyncDelta::Dense { rows, cols }, .. } => {
+                assert_eq!(rows, vec![(0, 3), (1, 7)]);
+                assert_eq!(cols, vec![(0, 12)]);
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
+        let sparse = Req::Sync {
+            slot: 1,
+            delta: SyncDelta::Sparse { tiles: vec![(4, vec![1.0, 0.0, 1.0])] },
+        };
+        match round_trip_req(&sparse) {
+            Req::Sync { delta: SyncDelta::Sparse { tiles }, .. } => {
+                assert_eq!(tiles.len(), 1);
+                assert_eq!(tiles[0].0, 4);
+                assert_eq!(tiles[0].1, vec![1.0, 0.0, 1.0]);
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn new_comm_decodes_as_reset() {
+        // NewComm carries an in-process handle that cannot cross the
+        // wire; the canonical encoding is the reset tag.
+        match round_trip_req(&Req::ResetComm) {
+            Req::ResetComm => {}
+            other => panic!("wrong variant: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn responses_round_trip() {
+        match round_trip_resp(&Resp::Unit { xfer: 1.5 }) {
+            Resp::Unit { xfer } => assert_eq!(xfer, 1.5),
+            other => panic!("wrong variant: {other:?}"),
+        }
+        let timing = RankTiming {
+            compute: 0.25,
+            host: 0.5,
+            comm: 0.125,
+            h2d: 0.0,
+            comm_bytes: 640,
+            collectives: 7,
+        };
+        match round_trip_resp(&Resp::Fwd { scores: Some(vec![0.5, -0.5]), timing }) {
+            Resp::Fwd { scores, timing: t } => {
+                assert_eq!(scores, Some(vec![0.5, -0.5]));
+                assert_eq!((t.comm_bytes, t.collectives), (640, 7));
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
+        match round_trip_resp(&Resp::Err("boom".into())) {
+            Resp::Err(m) => assert_eq!(m, "boom"),
+            other => panic!("wrong variant: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn stats_round_trip_includes_traffic_counters() {
+        let mut s = ExecStats::default();
+        s.executions = 9;
+        s.exec_time = Duration::from_millis(12);
+        s.tx_bytes = 1024;
+        s.rx_bytes = 2048;
+        match round_trip_resp(&Resp::Stats(s)) {
+            Resp::Stats(got) => {
+                assert_eq!(got.executions, 9);
+                assert_eq!(got.exec_time, Duration::from_millis(12));
+                assert_eq!((got.tx_bytes, got.rx_bytes), (1024, 2048));
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn handshake_messages_round_trip() {
+        let msgs = [
+            WireMsg::Hello { rank: 1, world: 2, fingerprint: 0xdead_beef },
+            WireMsg::Welcome { p: 4 },
+            WireMsg::Reject { reason: "fingerprint mismatch".into() },
+            WireMsg::CollDeposit { op: CollOp::AllReduce, payload: vec![1.0, 2.0] },
+            WireMsg::CollResult { payload: vec![3.0] },
+            WireMsg::CollAbort { rank: 2, reason: "injected".into() },
+        ];
+        for msg in msgs {
+            let mut buf = Vec::new();
+            msg.encode(&mut buf).unwrap();
+            let got = WireMsg::decode(msg.kind(), &buf).unwrap();
+            assert_eq!(format!("{msg:?}"), format!("{got:?}"));
+        }
+    }
+
+    #[test]
+    fn truncated_and_trailing_payloads_are_rejected() {
+        let mut buf = Vec::new();
+        encode_req(&Req::Uninstall { slot: 3 }, &mut buf).unwrap();
+        let err = decode_req(&buf[..buf.len() - 1]).unwrap_err().to_string();
+        assert!(err.contains("truncated payload"), "{err}");
+        buf.push(0);
+        let err = decode_req(&buf).unwrap_err().to_string();
+        assert!(err.contains("trailing bytes"), "{err}");
+        let err = decode_req(&[250]).unwrap_err().to_string();
+        assert!(err.contains("unknown request tag"), "{err}");
+    }
+}

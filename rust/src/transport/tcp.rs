@@ -1,0 +1,770 @@
+//! TCP rank transport: process-separated workers over loopback or LAN.
+//!
+//! The coordinator listens on one address per rank; each `oggm rank`
+//! worker process dials in and handshakes (`Hello` → `Welcome` /
+//! `Reject`) carrying its rank id, expected world size, and artifact
+//! manifest fingerprint so mismatched processes fail fast with a
+//! contextful message instead of diverging mid-solve.
+//!
+//! Collectives are *hub-folded*: workers deposit payloads as
+//! [`msg::WireMsg::CollDeposit`] frames, and the coordinator-side
+//! [`CollHub`] folds them in rank order (bitwise identical to the
+//! in-process chunked fold, which is also a rank-order left fold) and
+//! fans the result back as `CollResult`. An abort from any rank (or a
+//! worker disconnect) is fanned to every peer as `CollAbort`, and is
+//! *sticky*: every later collective on that group fails with the same
+//! originating rank and reason until the pool resets the group.
+
+use std::collections::HashSet;
+use std::io::{BufReader, Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::parallel::{Req, Resp};
+
+use super::frame::{read_frame, write_frame, HEADER_LEN};
+use super::msg::{self, CollOp, WireMsg};
+
+/// Lock a mutex, tolerating poisoning: a panicking peer thread must not
+/// cascade into every other rank's transport path.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// How long to wait for rank workers to connect (or for a worker to
+/// reach its coordinator), in seconds. `OGGM_RANK_WAIT_SECS` overrides
+/// the 60 s default — CI smokes shorten it so failures surface fast.
+fn wait_secs() -> u64 {
+    std::env::var("OGGM_RANK_WAIT_SECS").ok().and_then(|s| s.parse().ok()).unwrap_or(60)
+}
+
+/// Coordinator-side write half of one worker connection: a mutex-held
+/// stream (the hub fans results from whichever reader thread completes
+/// a collective) plus the shared tx counter.
+#[derive(Clone)]
+struct RankWriter {
+    stream: Arc<Mutex<TcpStream>>,
+    tx_bytes: Arc<AtomicU64>,
+}
+
+impl RankWriter {
+    /// Encode and send one message addressed to `rank`.
+    fn send(&self, rank: u32, msg: &WireMsg) -> Result<()> {
+        let mut payload = Vec::new();
+        msg.encode(&mut payload)?;
+        let mut stream = lock(&self.stream);
+        let n = write_frame(&mut *stream, msg.kind(), rank, &payload)?;
+        self.tx_bytes.fetch_add(n, Ordering::Relaxed);
+        Ok(())
+    }
+}
+
+/// Mutable hub state: per-rank writers, deposit slots for the
+/// collective in flight, and the sticky abort record.
+struct HubInner {
+    writers: Vec<Option<RankWriter>>,
+    slots: Vec<Option<Vec<f32>>>,
+    op: Option<CollOp>,
+    arrived: usize,
+    aborted: Option<(usize, String)>,
+}
+
+/// Coordinator-side collective folding point for the TCP transport.
+///
+/// Plays the role the shared deposit slots play in the in-process
+/// [`crate::collective::Communicator`]: ranks deposit, the last arrival
+/// folds in rank order, and everyone receives the same result bytes.
+pub(crate) struct CollHub {
+    p: usize,
+    inner: Mutex<HubInner>,
+}
+
+impl CollHub {
+    /// New hub for a `p`-rank group with no connections registered yet.
+    pub(crate) fn new(p: usize) -> Arc<CollHub> {
+        Arc::new(CollHub {
+            p,
+            inner: Mutex::new(HubInner {
+                writers: (0..p).map(|_| None).collect(),
+                slots: (0..p).map(|_| None).collect(),
+                op: None,
+                arrived: 0,
+                aborted: None,
+            }),
+        })
+    }
+
+    /// Register the write half for `rank` (called once per admitted worker).
+    fn register(&self, rank: usize, writer: RankWriter) {
+        lock(&self.inner).writers[rank] = Some(writer);
+    }
+
+    /// Clear deposit state and the sticky abort: the group is fresh
+    /// again. The pool calls this after replacing collectives
+    /// (mirrors `Req::NewComm` on the in-process path).
+    pub(crate) fn reset(&self) {
+        let mut inner = lock(&self.inner);
+        for s in inner.slots.iter_mut() {
+            *s = None;
+        }
+        inner.op = None;
+        inner.arrived = 0;
+        inner.aborted = None;
+    }
+
+    /// Record a sticky abort (first abort wins) and fan `CollAbort` to
+    /// every connected worker so in-flight deposits fail immediately.
+    pub(crate) fn abort(&self, rank: usize, reason: &str) {
+        let mut inner = lock(&self.inner);
+        if inner.aborted.is_none() {
+            inner.aborted = Some((rank, reason.to_string()));
+        }
+        let (ar, ref areason) = *inner.aborted.as_ref().unwrap();
+        let msg = WireMsg::CollAbort { rank: ar as u32, reason: areason.clone() };
+        for w in inner.writers.iter().flatten() {
+            let _ = w.send(ar as u32, &msg);
+        }
+    }
+
+    /// One rank's deposit. When the last rank arrives the hub folds in
+    /// rank order and fans the result; protocol violations (op
+    /// mismatch, duplicate deposit, length mismatch) abort the group.
+    fn deposit(&self, rank: usize, op: CollOp, payload: Vec<f32>) {
+        enum Outcome {
+            Pending,
+            Fanout(Vec<f32>),
+            Abort(String),
+            Rejected(usize, String),
+        }
+        let outcome = {
+            let mut inner = lock(&self.inner);
+            if let Some((ar, reason)) = inner.aborted.clone() {
+                Outcome::Rejected(ar, reason)
+            } else if rank >= self.p {
+                Outcome::Abort(format!("collective deposit from unknown rank {rank}"))
+            } else if inner.op.is_some() && inner.op != Some(op) {
+                Outcome::Abort(format!(
+                    "collective op mismatch: rank {rank} deposited {} during {}",
+                    op.name(),
+                    inner.op.unwrap().name()
+                ))
+            } else if inner.slots[rank].is_some() {
+                Outcome::Abort(format!(
+                    "duplicate collective deposit from rank {rank} ({})",
+                    op.name()
+                ))
+            } else {
+                inner.op = Some(op);
+                inner.slots[rank] = Some(payload);
+                inner.arrived += 1;
+                if inner.arrived < self.p {
+                    Outcome::Pending
+                } else {
+                    match fold(op, &mut inner.slots) {
+                        Ok(result) => {
+                            inner.op = None;
+                            inner.arrived = 0;
+                            for s in inner.slots.iter_mut() {
+                                *s = None;
+                            }
+                            Outcome::Fanout(result)
+                        }
+                        Err(reason) => Outcome::Abort(reason),
+                    }
+                }
+            }
+        };
+        match outcome {
+            Outcome::Pending => {}
+            Outcome::Fanout(result) => {
+                let inner = lock(&self.inner);
+                let msg = WireMsg::CollResult { payload: result };
+                for (r, w) in inner.writers.iter().enumerate() {
+                    if let Some(w) = w {
+                        let _ = w.send(r as u32, &msg);
+                    }
+                }
+            }
+            Outcome::Abort(reason) => self.abort(rank, &reason),
+            Outcome::Rejected(ar, reason) => {
+                // Group already aborted: tell just this depositor.
+                let inner = lock(&self.inner);
+                if let Some(w) = inner.writers[rank.min(self.p - 1)].as_ref() {
+                    let _ =
+                        w.send(rank as u32, &WireMsg::CollAbort { rank: ar as u32, reason });
+                }
+            }
+        }
+    }
+}
+
+/// Fold all deposits for `op` in rank order. This must stay bitwise
+/// identical to the in-process fold in `collective/comm.rs`, which
+/// accumulates `rank 0 + rank 1 + …` per chunk — a whole-buffer
+/// left fold over ranks produces the same f32 result.
+fn fold(op: CollOp, slots: &mut [Option<Vec<f32>>]) -> std::result::Result<Vec<f32>, String> {
+    match op {
+        CollOp::Barrier => Ok(Vec::new()),
+        CollOp::AllReduce => {
+            let mut acc = slots[0].take().expect("rank 0 deposit present");
+            for (r, s) in slots.iter().enumerate().skip(1) {
+                let s = s.as_ref().expect("deposit present");
+                if s.len() != acc.len() {
+                    return Err(format!(
+                        "all_reduce length mismatch across ranks ({} vs {} at rank {r})",
+                        acc.len(),
+                        s.len()
+                    ));
+                }
+                for (a, b) in acc.iter_mut().zip(s) {
+                    *a += *b;
+                }
+            }
+            Ok(acc)
+        }
+        CollOp::AllGather => {
+            let mut out = Vec::new();
+            for s in slots.iter() {
+                out.extend_from_slice(s.as_ref().expect("deposit present"));
+            }
+            Ok(out)
+        }
+        CollOp::Broadcast => Ok(slots[0].take().expect("rank 0 deposit present")),
+    }
+}
+
+/// Coordinator-side endpoint of one TCP rank worker: the write half,
+/// a channel fed by the connection's reader thread, and liveness state.
+pub(crate) struct TcpLink {
+    rank: usize,
+    writer: RankWriter,
+    resp_rx: Receiver<Resp>,
+    dead: Arc<AtomicBool>,
+    rx_bytes: Arc<AtomicU64>,
+    reader: Option<JoinHandle<()>>,
+}
+
+impl TcpLink {
+    /// Send one request; `Err(())` on a dead or unwritable connection.
+    pub(crate) fn send(&self, req: Req) -> Result<(), ()> {
+        if self.dead.load(Ordering::Acquire) {
+            return Err(());
+        }
+        let msg = WireMsg::Req(req);
+        if self.writer.send(self.rank as u32, &msg).is_err() {
+            self.dead.store(true, Ordering::Release);
+            return Err(());
+        }
+        Ok(())
+    }
+
+    /// Blocking receive of one response; `Err(())` once the reader
+    /// thread has exited (connection closed or protocol error).
+    pub(crate) fn recv(&self) -> Result<Resp, ()> {
+        self.resp_rx.recv().map_err(|_| ())
+    }
+
+    /// Non-blocking receive used to drain stale responses.
+    pub(crate) fn try_recv(&self) -> Option<Resp> {
+        match self.resp_rx.try_recv() {
+            Ok(resp) => Some(resp),
+            Err(TryRecvError::Empty | TryRecvError::Disconnected) => None,
+        }
+    }
+
+    /// Whether the connection is known dead (write failed or reader exited).
+    pub(crate) fn is_dead(&self) -> bool {
+        self.dead.load(Ordering::Acquire)
+    }
+
+    /// (tx_bytes, rx_bytes) actually moved over this connection.
+    pub(crate) fn traffic(&self) -> (u64, u64) {
+        (self.writer.tx_bytes.load(Ordering::Relaxed), self.rx_bytes.load(Ordering::Relaxed))
+    }
+}
+
+impl Drop for TcpLink {
+    fn drop(&mut self) {
+        if let Ok(stream) = lock(&self.writer.stream).try_clone() {
+            let _ = stream.shutdown(Shutdown::Both);
+        }
+        if let Some(h) = self.reader.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Spawn the per-connection reader thread: routes `Resp` frames to the
+/// pool's channel and collective frames to the hub, and marks the link
+/// dead (aborting the group) when the stream closes.
+fn spawn_reader(
+    rank: usize,
+    stream: TcpStream,
+    resp_tx: Sender<Resp>,
+    dead: Arc<AtomicBool>,
+    rx_bytes: Arc<AtomicU64>,
+    hub: Arc<CollHub>,
+) -> Result<JoinHandle<()>> {
+    let handle = std::thread::Builder::new()
+        .name(format!("oggm-rank{rank}-rx"))
+        .spawn(move || {
+            let mut r = BufReader::new(stream);
+            loop {
+                let frame = match read_frame(&mut r) {
+                    Ok(f) => f,
+                    Err(_) => break,
+                };
+                rx_bytes
+                    .fetch_add((HEADER_LEN + frame.payload.len()) as u64, Ordering::Relaxed);
+                match WireMsg::decode(frame.kind, &frame.payload) {
+                    Ok(WireMsg::Resp(resp)) => {
+                        if resp_tx.send(resp).is_err() {
+                            break;
+                        }
+                    }
+                    Ok(WireMsg::CollDeposit { op, payload }) => hub.deposit(rank, op, payload),
+                    Ok(WireMsg::CollAbort { rank: ar, reason }) => {
+                        hub.abort(ar as usize, &reason)
+                    }
+                    Ok(_) => {} // stale handshake frames: ignore
+                    Err(_) => break,
+                }
+            }
+            dead.store(true, Ordering::Release);
+            hub.abort(rank, &format!("rank {rank} worker process disconnected"));
+        })
+        .with_context(|| format!("spawning reader thread for rank {rank}"))?;
+    Ok(handle)
+}
+
+/// Validate one inbound connection's `Hello` against the group shape
+/// and artifact fingerprint; on success reply `Welcome` and build the
+/// link, on failure reply `Reject{reason}` best-effort and bail.
+fn admit(
+    stream: TcpStream,
+    p: usize,
+    fingerprint: u64,
+    taken: &HashSet<usize>,
+    hub: &Arc<CollHub>,
+) -> Result<TcpLink> {
+    stream.set_nodelay(true).ok();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(5)))
+        .context("setting handshake read timeout")?;
+    let mut reader = stream.try_clone().context("cloning rank stream")?;
+    let reject = |stream: &TcpStream, reason: &str| {
+        let mut payload = Vec::new();
+        let msg = WireMsg::Reject { reason: reason.to_string() };
+        if msg.encode(&mut payload).is_ok() {
+            let _ = write_frame(&mut &*stream, msg.kind(), 0, &payload);
+        }
+    };
+    let frame = read_frame(&mut reader).context("reading rank handshake")?;
+    let (rank, world, fp) = match WireMsg::decode(frame.kind, &frame.payload) {
+        Ok(WireMsg::Hello { rank, world, fingerprint }) => {
+            (rank as usize, world as usize, fingerprint)
+        }
+        Ok(other) => {
+            let why = format!("expected Hello, got message kind {}", other.kind());
+            reject(&stream, &why);
+            bail!("rank handshake: {why}");
+        }
+        Err(e) => return Err(e.context("decoding rank handshake")),
+    };
+    let fail = |why: String| -> Result<TcpLink> {
+        reject(&stream, &why);
+        bail!("rank handshake: {why}");
+    };
+    if rank >= p {
+        return fail(format!("rank {rank} out of range for a P={p} group"));
+    }
+    if taken.contains(&rank) {
+        return fail(format!("duplicate connection for rank {rank}"));
+    }
+    if world != 0 && world != p {
+        return fail(format!(
+            "world size mismatch: worker launched for P={world}, coordinator runs P={p}"
+        ));
+    }
+    if fp != fingerprint {
+        return fail(format!(
+            "artifact manifest fingerprint mismatch (worker {fp:#018x}, coordinator \
+             {fingerprint:#018x}): workers must share the coordinator's artifact set"
+        ));
+    }
+    let writer = RankWriter {
+        stream: Arc::new(Mutex::new(stream.try_clone().context("cloning rank stream")?)),
+        tx_bytes: Arc::new(AtomicU64::new(0)),
+    };
+    writer
+        .send(rank as u32, &WireMsg::Welcome { p: p as u32 })
+        .with_context(|| format!("welcoming rank {rank}"))?;
+    stream.set_read_timeout(None).context("clearing handshake read timeout")?;
+    let (resp_tx, resp_rx) = std::sync::mpsc::channel();
+    let dead = Arc::new(AtomicBool::new(false));
+    let rx_bytes = Arc::new(AtomicU64::new(0));
+    hub.register(rank, writer.clone());
+    let reader = spawn_reader(
+        rank,
+        stream,
+        resp_tx,
+        Arc::clone(&dead),
+        Arc::clone(&rx_bytes),
+        Arc::clone(hub),
+    )?;
+    Ok(TcpLink { rank, writer, resp_rx, dead, rx_bytes, reader: Some(reader) })
+}
+
+/// Listen on the given addresses and admit exactly `p` rank workers,
+/// returning their links indexed by rank. Bails with a contextful
+/// message if the full group does not form within the wait window.
+pub(crate) fn accept_ranks(
+    addrs: &[String],
+    p: usize,
+    fingerprint: u64,
+    hub: &Arc<CollHub>,
+) -> Result<Vec<TcpLink>> {
+    let mut unique: Vec<&str> = Vec::new();
+    for a in addrs {
+        let a = a.trim();
+        if !a.is_empty() && !unique.contains(&a) {
+            unique.push(a);
+        }
+    }
+    if unique.is_empty() || unique.len() > p {
+        bail!(
+            "--ranks lists {} listen address(es); expected 1..={p} for a P={p} group",
+            unique.len()
+        );
+    }
+    let mut listeners = Vec::new();
+    for a in &unique {
+        let l = TcpListener::bind(a).with_context(|| format!("binding rank listener on {a}"))?;
+        l.set_nonblocking(true).context("setting rank listener nonblocking")?;
+        listeners.push(l);
+    }
+    let deadline = Instant::now() + Duration::from_secs(wait_secs());
+    let mut links: Vec<Option<TcpLink>> = (0..p).map(|_| None).collect();
+    let mut taken: HashSet<usize> = HashSet::new();
+    while taken.len() < p {
+        let mut accepted = false;
+        for l in &listeners {
+            match l.accept() {
+                Ok((stream, _)) => {
+                    stream.set_nonblocking(false).context("setting rank stream blocking")?;
+                    let link = admit(stream, p, fingerprint, &taken, hub)?;
+                    taken.insert(link.rank);
+                    links[link.rank] = Some(link);
+                    accepted = true;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {}
+                Err(e) => return Err(e).context("accepting rank connection"),
+            }
+        }
+        if taken.len() == p {
+            break;
+        }
+        if Instant::now() >= deadline {
+            bail!(
+                "timed out waiting for rank workers: {} of {p} connected \
+                 (launch `oggm rank --connect <addr> --rank R` workers)",
+                taken.len()
+            );
+        }
+        if !accepted {
+            std::thread::sleep(Duration::from_millis(25));
+        }
+    }
+    Ok(links.into_iter().map(|l| l.expect("all ranks admitted")).collect())
+}
+
+/// Worker-side connection state: the stream halves plus traffic
+/// counters and the sticky abort record shared between the request
+/// loop and the collective path.
+pub(crate) struct RemoteIo {
+    rank: u32,
+    reader: Mutex<BufReader<TcpStream>>,
+    writer: Mutex<TcpStream>,
+    tx_bytes: AtomicU64,
+    rx_bytes: AtomicU64,
+    aborted: Mutex<Option<(usize, String)>>,
+}
+
+impl RemoteIo {
+    /// Encode and send one message (frames carry this worker's rank).
+    pub(crate) fn send(&self, msg: &WireMsg) -> Result<()> {
+        let mut payload = Vec::new();
+        msg.encode(&mut payload)?;
+        let mut w = lock(&self.writer);
+        let n = write_frame(&mut *w, msg.kind(), self.rank, &payload)?;
+        self.tx_bytes.fetch_add(n, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Read and decode one message, counting rx bytes.
+    fn recv_msg(&self) -> Result<WireMsg> {
+        let mut r = lock(&self.reader);
+        let frame = read_frame(&mut *r)?;
+        self.rx_bytes
+            .fetch_add((HEADER_LEN + frame.payload.len()) as u64, Ordering::Relaxed);
+        WireMsg::decode(frame.kind, &frame.payload)
+    }
+
+    /// Blocking receive of the next control request. Collective aborts
+    /// arriving between requests are recorded sticky; stale collective
+    /// results are discarded. `None` means the coordinator is gone.
+    pub(crate) fn recv_req(&self) -> Option<Req> {
+        loop {
+            match self.recv_msg() {
+                Ok(WireMsg::Req(req)) => return Some(req),
+                Ok(WireMsg::CollAbort { rank, reason }) => {
+                    self.record_abort(rank as usize, &reason)
+                }
+                Ok(_) => {} // stale CollResult / handshake frames
+                Err(_) => return None,
+            }
+        }
+    }
+
+    /// Send one response; `false` means the coordinator is unreachable.
+    pub(crate) fn send_resp(&self, resp: Resp) -> bool {
+        self.send(&WireMsg::Resp(resp)).is_ok()
+    }
+
+    /// Record a sticky abort (first abort wins).
+    fn record_abort(&self, rank: usize, reason: &str) {
+        let mut a = lock(&self.aborted);
+        if a.is_none() {
+            *a = Some((rank, reason.to_string()));
+        }
+    }
+
+    /// The sticky abort record, if any.
+    fn aborted(&self) -> Option<(usize, String)> {
+        lock(&self.aborted).clone()
+    }
+
+    /// Clear the sticky abort (a fresh collective group was issued).
+    fn clear_abort(&self) {
+        *lock(&self.aborted) = None;
+    }
+
+    /// (tx_bytes, rx_bytes) moved over this worker's connection.
+    pub(crate) fn traffic(&self) -> (u64, u64) {
+        (self.tx_bytes.load(Ordering::Relaxed), self.rx_bytes.load(Ordering::Relaxed))
+    }
+}
+
+/// Worker-side collective backend: deposits go to the coordinator hub
+/// as frames, results come back on the same stream.
+pub(crate) struct RemoteComm {
+    io: Arc<RemoteIo>,
+    rank: usize,
+    p: usize,
+    bytes: AtomicU64,
+    ops: AtomicU64,
+}
+
+impl RemoteComm {
+    /// New remote collective backend for `rank` in a `p`-rank group.
+    pub(crate) fn new(io: Arc<RemoteIo>, rank: usize, p: usize) -> RemoteComm {
+        RemoteComm { io, rank, p, bytes: AtomicU64::new(0), ops: AtomicU64::new(0) }
+    }
+
+    /// World size.
+    pub(crate) fn p(&self) -> usize {
+        self.p
+    }
+
+    /// (logical collective bytes, collective op count) — same
+    /// accounting the in-process communicator reports.
+    pub(crate) fn traffic(&self) -> (u64, u64) {
+        (self.bytes.load(Ordering::Relaxed), self.ops.load(Ordering::Relaxed))
+    }
+
+    /// Add to the logical traffic counters.
+    pub(crate) fn add_traffic(&self, bytes: u64, count_op: bool) {
+        self.bytes.fetch_add(bytes, Ordering::Relaxed);
+        if count_op {
+            self.ops.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// The sticky abort record, if any.
+    pub(crate) fn aborted(&self) -> Option<(usize, String)> {
+        self.io.aborted()
+    }
+
+    /// Abort the group: record locally (first wins) and tell the hub
+    /// best-effort so peers fail fast too.
+    pub(crate) fn abort(&self, reason: &str) {
+        self.io.record_abort(self.rank, reason);
+        let _ = self.io.send(&WireMsg::CollAbort {
+            rank: self.rank as u32,
+            reason: reason.to_string(),
+        });
+    }
+
+    /// A fresh collective group: clear the sticky abort and zero the
+    /// counters (mirrors the in-process `NewComm` fresh-group state).
+    pub(crate) fn reset(&self) {
+        self.io.clear_abort();
+        self.bytes.store(0, Ordering::Relaxed);
+        self.ops.store(0, Ordering::Relaxed);
+    }
+
+    /// One deposit→result round trip through the hub. Returns the
+    /// folded payload, or the originating `(rank, reason)` on abort.
+    pub(crate) fn roundtrip(
+        &self,
+        op: CollOp,
+        payload: Vec<f32>,
+    ) -> std::result::Result<Vec<f32>, (usize, String)> {
+        if let Some(a) = self.aborted() {
+            return Err(a);
+        }
+        if let Err(e) = self.io.send(&WireMsg::CollDeposit { op, payload }) {
+            let reason = format!("rank {} lost its coordinator connection: {e}", self.rank);
+            self.io.record_abort(self.rank, &reason);
+            return Err((self.rank, reason));
+        }
+        loop {
+            match self.io.recv_msg() {
+                Ok(WireMsg::CollResult { payload }) => return Ok(payload),
+                Ok(WireMsg::CollAbort { rank, reason }) => {
+                    self.io.record_abort(rank as usize, &reason);
+                    return Err((rank as usize, reason));
+                }
+                Ok(WireMsg::Req(_)) => {
+                    let reason = format!(
+                        "protocol error: control request arrived mid-{} on rank {}",
+                        op.name(),
+                        self.rank
+                    );
+                    self.abort(&reason);
+                    return Err((self.rank, reason));
+                }
+                Ok(_) => {}
+                Err(e) => {
+                    let reason =
+                        format!("rank {} lost its coordinator connection: {e}", self.rank);
+                    self.io.record_abort(self.rank, &reason);
+                    return Err((self.rank, reason));
+                }
+            }
+        }
+    }
+}
+
+/// Dial the coordinator from a worker process and complete the
+/// handshake. Retries the connect until the wait window closes (the
+/// coordinator may not be listening yet), then bails. Returns the
+/// connection and the coordinator's world size.
+pub(crate) fn connect_worker(
+    addr: &str,
+    rank: usize,
+    world: Option<usize>,
+    dir: &Path,
+) -> Result<(Arc<RemoteIo>, usize)> {
+    let fingerprint = super::manifest_fingerprint(dir);
+    let deadline = Instant::now() + Duration::from_secs(wait_secs());
+    let stream = loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => break s,
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    return Err(e).with_context(|| {
+                        format!("connecting to coordinator at {addr} (rank {rank})")
+                    });
+                }
+                std::thread::sleep(Duration::from_millis(250));
+            }
+        }
+    };
+    stream.set_nodelay(true).ok();
+    let io = RemoteIo {
+        rank: rank as u32,
+        reader: Mutex::new(BufReader::new(stream.try_clone().context("cloning stream")?)),
+        writer: Mutex::new(stream.try_clone().context("cloning stream")?),
+        tx_bytes: AtomicU64::new(0),
+        rx_bytes: AtomicU64::new(0),
+        aborted: Mutex::new(None),
+    };
+    io.send(&WireMsg::Hello {
+        rank: rank as u32,
+        world: world.unwrap_or(0) as u32,
+        fingerprint,
+    })
+    .context("sending rank handshake")?;
+    stream
+        .set_read_timeout(Some(Duration::from_secs(10)))
+        .context("setting handshake read timeout")?;
+    let reply = io.recv_msg().context("reading coordinator handshake reply")?;
+    stream.set_read_timeout(None).context("clearing handshake read timeout")?;
+    match reply {
+        WireMsg::Welcome { p } => Ok((Arc::new(io), p as usize)),
+        WireMsg::Reject { reason } => bail!("coordinator rejected this worker: {reason}"),
+        other => bail!("unexpected handshake reply (message kind {})", other.kind()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hub_folds_all_reduce_in_rank_order() {
+        let mut slots = vec![
+            Some(vec![1.0f32, 2.0]),
+            Some(vec![10.0, 20.0]),
+            Some(vec![100.0, 200.0]),
+        ];
+        let out = fold(CollOp::AllReduce, &mut slots).unwrap();
+        assert_eq!(out, vec![111.0, 222.0]);
+    }
+
+    #[test]
+    fn hub_all_gather_concatenates_in_rank_order() {
+        let mut slots = vec![Some(vec![1.0f32]), Some(vec![2.0, 3.0])];
+        let out = fold(CollOp::AllGather, &mut slots).unwrap();
+        assert_eq!(out, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn hub_broadcast_takes_rank_zero() {
+        let mut slots = vec![Some(vec![7.0f32]), Some(Vec::new())];
+        let out = fold(CollOp::Broadcast, &mut slots).unwrap();
+        assert_eq!(out, vec![7.0]);
+    }
+
+    #[test]
+    fn hub_length_mismatch_is_contextful() {
+        let mut slots = vec![Some(vec![1.0f32, 2.0]), Some(vec![1.0])];
+        let err = fold(CollOp::AllReduce, &mut slots).unwrap_err();
+        assert!(err.contains("length mismatch"), "{err}");
+    }
+
+    #[test]
+    fn hub_abort_is_sticky_and_first_wins() {
+        let hub = CollHub::new(2);
+        hub.abort(1, "first");
+        hub.abort(0, "second");
+        let inner = lock(&hub.inner);
+        assert_eq!(inner.aborted.as_ref().unwrap(), &(1, "first".to_string()));
+    }
+
+    #[test]
+    fn hub_reset_clears_the_sticky_abort() {
+        let hub = CollHub::new(1);
+        hub.abort(0, "boom");
+        hub.reset();
+        assert!(lock(&hub.inner).aborted.is_none());
+    }
+}

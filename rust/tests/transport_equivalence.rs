@@ -1,0 +1,451 @@
+//! Rank-transport equivalence (ISSUE 9): the TCP transport must be
+//! bit-identical to the in-process transport — same solutions, same
+//! collective counts — and the frame codec must reject malformed,
+//! truncated, and version-mismatched input with contextful errors.
+//!
+//! The codec and handshake tests run everywhere; the solve-equivalence
+//! tests are artifact-gated like every execution test (without
+//! `artifacts/`, or with the offline xla stub, they return early).
+
+use oggm::batch::{solve_pack_session, BatchCfg, SessionState};
+use oggm::collective::fault::FaultPlan;
+use oggm::coordinator::engine::{Engine, EngineCfg};
+use oggm::coordinator::shard::{
+    shards_for_graph, sparse_shards_for_graph, ShardSet, Storage,
+};
+use oggm::env::Scenario;
+use oggm::graph::{generators, Graph, Partition};
+use oggm::model::Params;
+use oggm::parallel::{remote_worker, RankPool};
+use oggm::runtime::Runtime;
+use oggm::transport::frame::{self, HEADER_LEN, VERSION};
+use oggm::util::prop;
+use oggm::util::rng::Pcg32;
+use std::io::Cursor;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+// ---------------------------------------------------------------- codec --
+
+#[test]
+fn frame_codec_round_trips_random_frames() {
+    prop::check_msg(
+        "frame-round-trip",
+        200,
+        |r| {
+            let len = r.gen_range(2048);
+            let payload: Vec<u8> = (0..len).map(|_| r.gen_range(256) as u8).collect();
+            (r.gen_range(1 << 16) as u16, r.gen_range(64) as u32, payload)
+        },
+        |(kind, rank, payload)| {
+            let mut buf = Vec::new();
+            let n = frame::write_frame(&mut buf, *kind, *rank, payload)
+                .map_err(|e| format!("write: {e:#}"))?;
+            if n != (HEADER_LEN + payload.len()) as u64 {
+                return Err(format!("wrote {n} bytes, expected {}", HEADER_LEN + payload.len()));
+            }
+            let f = frame::read_frame(&mut Cursor::new(&buf))
+                .map_err(|e| format!("read: {e:#}"))?;
+            if f.kind != *kind || f.rank != *rank || f.payload != *payload {
+                return Err(format!("round-trip mismatch: {f:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn corrupt_magic_and_version_are_rejected_with_context() {
+    prop::check_msg(
+        "frame-corruption",
+        100,
+        |r| {
+            let len = r.gen_range(64);
+            let payload: Vec<u8> = (0..len).map(|_| r.gen_range(256) as u8).collect();
+            let mut buf = Vec::new();
+            frame::write_frame(&mut buf, 3, 1, &payload).unwrap();
+            // Corrupt one magic byte, or bump the version field.
+            let site = r.gen_range(5);
+            (buf, site)
+        },
+        |(buf, site)| {
+            let mut bad = buf.clone();
+            if *site < 4 {
+                bad[*site] ^= 0xFF;
+            } else {
+                let v = (VERSION + 1).to_le_bytes();
+                bad[4..6].copy_from_slice(&v);
+            }
+            let err = match frame::read_frame(&mut Cursor::new(&bad)) {
+                Ok(f) => return Err(format!("corrupt frame decoded: {f:?}")),
+                Err(e) => format!("{e:#}"),
+            };
+            let want = if *site < 4 { "bad frame magic" } else { "version mismatch" };
+            if !err.contains(want) {
+                return Err(format!("uncontextful error (wanted '{want}'): {err}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn truncated_frames_error_instead_of_blocking_or_panicking() {
+    prop::check_msg(
+        "frame-truncation",
+        100,
+        |r| {
+            let len = 1 + r.gen_range(256);
+            let payload: Vec<u8> = (0..len).map(|_| r.gen_range(256) as u8).collect();
+            let mut buf = Vec::new();
+            frame::write_frame(&mut buf, 2, 0, &payload).unwrap();
+            let cut = r.gen_range(buf.len()); // strictly shorter than the frame
+            (buf, cut)
+        },
+        |(buf, cut)| {
+            let err = match frame::read_frame(&mut Cursor::new(&buf[..*cut])) {
+                Ok(f) => return Err(format!("truncated frame decoded: {f:?}")),
+                Err(e) => format!("{e:#}"),
+            };
+            if !err.contains("truncated frame") {
+                return Err(format!("uncontextful truncation error: {err}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+// ------------------------------------------------------------ handshake --
+
+/// Shrink the rank-connect wait window once per process so handshake
+/// failures resolve in seconds instead of the 60 s production default.
+fn fast_rank_wait() {
+    static ONCE: std::sync::Once = std::sync::Once::new();
+    ONCE.call_once(|| std::env::set_var("OGGM_RANK_WAIT_SECS", "4"));
+}
+
+/// An ephemeral loopback address (bound once to reserve, then released).
+fn alloc_addr() -> String {
+    let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let a = l.local_addr().unwrap();
+    drop(l);
+    a.to_string()
+}
+
+/// Run one coordinator group-formation attempt on a fresh ephemeral
+/// address, returning its error text and the address it listened on.
+fn coord_attempt(dir: std::path::PathBuf) -> (JoinHandle<String>, String) {
+    let addr = alloc_addr();
+    let spec = format!("tcp:{addr}");
+    let h = std::thread::spawn(move || match RankPool::new_tcp(dir, 1, 2, None, &spec) {
+        Ok(_) => "unexpectedly formed a group from rejected workers".into(),
+        Err(e) => format!("{e:#}"),
+    });
+    (h, addr)
+}
+
+#[test]
+fn handshake_rejects_world_and_fingerprint_mismatches() {
+    fast_rank_wait();
+    // Two artifact directories with different manifest fingerprints: the
+    // coordinator's (empty — no manifest.tsv) and a worker's with one.
+    // A rejected worker fails the whole group formation (fail-fast: a
+    // misconfigured launch should not sit half-formed until timeout), so
+    // each mismatch gets its own coordinator attempt.
+    let base = std::env::temp_dir().join(format!("oggm_transport_{}", std::process::id()));
+    let dir_a = base.join("coord");
+    let dir_b = base.join("worker");
+    std::fs::create_dir_all(&dir_a).unwrap();
+    std::fs::create_dir_all(&dir_b).unwrap();
+    std::fs::write(dir_b.join("manifest.tsv"), "stage\tother\n").unwrap();
+
+    // Round 1: matching fingerprint, wrong world size. Both sides name
+    // both sizes.
+    let (coord, addr) = coord_attempt(dir_a.clone());
+    let err = remote_worker(dir_a.clone(), &addr, 0, Some(3), None).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("rejected"), "no rejection context: {msg}");
+    assert!(msg.contains("world size mismatch"), "world mismatch not named: {msg}");
+    assert!(msg.contains("P=3") && msg.contains("P=1"), "sizes not named: {msg}");
+    let msg = coord.join().unwrap();
+    assert!(msg.contains("world size mismatch"), "coordinator side silent: {msg}");
+
+    // Round 2: matching world size, different artifact manifest.
+    let (coord, addr) = coord_attempt(dir_a.clone());
+    let err = remote_worker(dir_b, &addr, 0, Some(1), None).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("rejected"), "no rejection context: {msg}");
+    assert!(msg.contains("fingerprint mismatch"), "fingerprint mismatch not named: {msg}");
+    let msg = coord.join().unwrap();
+    assert!(msg.contains("fingerprint mismatch"), "coordinator side silent: {msg}");
+
+    // Round 3: nobody dials in. The coordinator times out with a message
+    // telling the operator what to launch.
+    let (coord, _addr) = coord_attempt(dir_a);
+    let msg = coord.join().unwrap();
+    assert!(msg.contains("timed out waiting for rank workers"), "{msg}");
+    assert!(msg.contains("oggm rank"), "no launch hint: {msg}");
+    std::fs::remove_dir_all(&base).ok();
+}
+
+#[test]
+fn rank_spec_validation_names_the_problem() {
+    fast_rank_wait();
+    let err = RankPool::new_tcp(PathBuf::from("artifacts"), 2, 2, None, "tcp:nocolon")
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("is not host:port"), "{err:#}");
+    let err = RankPool::new_tcp(
+        PathBuf::from("artifacts"),
+        1,
+        2,
+        None,
+        "tcp:127.0.0.1:1,tcp:127.0.0.1:2",
+    )
+    .unwrap_err();
+    assert!(format!("{err:#}").contains("expected 1..=1"), "{err:#}");
+}
+
+// ------------------------------------------------------- solve equality --
+
+fn runtime() -> Option<Runtime> {
+    if !std::path::Path::new("artifacts/manifest.tsv").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(Runtime::new("artifacts").unwrap())
+}
+
+/// An in-process pool, or None when the environment cannot run one
+/// (offline xla stub).
+fn inproc_pool(p: usize) -> Option<RankPool> {
+    match RankPool::new("artifacts", p) {
+        Ok(pool) => Some(pool),
+        Err(e) => {
+            eprintln!("skipping: rank pool unavailable: {e:#}");
+            None
+        }
+    }
+}
+
+/// A TCP pool over `p` worker threads running the real `oggm rank` entry
+/// point against loopback, plus their join handles (joined after the
+/// pool drops and the workers see the coordinator disconnect).
+fn tcp_pool(
+    p: usize,
+    fault: Option<Arc<FaultPlan>>,
+) -> Option<(RankPool, Vec<JoinHandle<()>>)> {
+    fast_rank_wait();
+    let addr = alloc_addr();
+    let workers: Vec<JoinHandle<()>> = (0..p)
+        .map(|rank| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                if let Err(e) = remote_worker("artifacts", &addr, rank, Some(p), None) {
+                    eprintln!("worker {rank} exited with: {e:#}");
+                }
+            })
+        })
+        .collect();
+    match RankPool::new_tcp(PathBuf::from("artifacts"), p, 2, fault, &format!("tcp:{addr}")) {
+        Ok(pool) => Some((pool, workers)),
+        Err(e) => {
+            eprintln!("skipping: TCP rank group unavailable: {e:#}");
+            for w in workers {
+                let _ = w.join();
+            }
+            None
+        }
+    }
+}
+
+fn fresh_set(rt: &Runtime, storage: Storage, part: Partition, g: &Graph) -> Option<ShardSet> {
+    let removed = vec![false; g.n];
+    let sol = vec![false; g.n];
+    let cand: Vec<bool> = (0..g.n).map(|v| g.degree(v) > 0).collect();
+    match storage {
+        Storage::Dense => {
+            Some(ShardSet::Dense(shards_for_graph(part, g, &removed, &sol, &cand)))
+        }
+        Storage::Sparse => {
+            let Ok((chunk, caps)) = rt.manifest.sparse_config(1, part.ni(), 32) else {
+                eprintln!("skipping: sparse artifacts not compiled");
+                return None;
+            };
+            Some(ShardSet::Sparse(sparse_shards_for_graph(
+                part, g, &removed, &sol, &cand, chunk, &caps,
+            )))
+        }
+    }
+}
+
+#[test]
+fn tcp_solves_are_bit_identical_to_inproc() {
+    // The tentpole acceptance: the same packs through the in-process and
+    // TCP transports produce identical solutions (exact equality, not a
+    // tolerance — the hub's rank-order fold matches the in-proc chunked
+    // fold bitwise) and identical collective counts, dense and sparse,
+    // P ∈ {1, 2, 4}.
+    let Some(rt) = runtime() else { return };
+    let params = Params::init(32, &mut Pcg32::seeded(91));
+    let mut rng = Pcg32::seeded(92);
+    let graphs: Vec<Graph> = [8usize, 20, 10, 18, 12]
+        .iter()
+        .map(|&n| generators::erdos_renyi(n, 0.3, &mut rng))
+        .collect();
+    for p in [1usize, 2, 4] {
+        let Some(inproc) = inproc_pool(p) else { return };
+        let Some((tcp, workers)) = tcp_pool(p, None) else { return };
+        for storage in [Storage::Dense, Storage::Sparse] {
+            if storage == Storage::Sparse && rt.manifest.sparse_config(8, 24 / p, 32).is_err() {
+                eprintln!("skipping sparse at P={p}: artifacts not compiled");
+                continue;
+            }
+            let mut cfg = BatchCfg::new(p, 2);
+            cfg.storage = storage;
+            cfg.engine.mode = Engine::RankParallel;
+            let want = solve_pack_session(
+                &rt,
+                &cfg,
+                &params,
+                Scenario::Mvc,
+                graphs.clone(),
+                24,
+                SessionState { theta: None, pool: Some(&inproc) },
+            )
+            .unwrap();
+            let got = solve_pack_session(
+                &rt,
+                &cfg,
+                &params,
+                Scenario::Mvc,
+                graphs.clone(),
+                24,
+                SessionState { theta: None, pool: Some(&tcp) },
+            )
+            .unwrap();
+            assert_eq!(got.rounds, want.rounds, "P={p} {storage:?}: round counts diverge");
+            assert_eq!(
+                got.timing.collectives, want.timing.collectives,
+                "P={p} {storage:?}: collective counts diverge"
+            );
+            assert_eq!(
+                got.timing.comm_bytes, want.timing.comm_bytes,
+                "P={p} {storage:?}: collective bytes diverge"
+            );
+            for (i, (g1, w1)) in got.per_graph.iter().zip(&want.per_graph).enumerate() {
+                assert_eq!(
+                    g1.solution, w1.solution,
+                    "P={p} {storage:?} graph {i}: solutions diverge across transports"
+                );
+                assert_eq!(
+                    g1.objective, w1.objective,
+                    "P={p} {storage:?} graph {i}: objectives diverge across transports"
+                );
+            }
+        }
+        // Transport counters are live on both links: the TCP pool counts
+        // real socket bytes, the in-proc pool prices the same payloads.
+        let ts = tcp.stats().unwrap();
+        assert!(ts.tx_bytes > 0 && ts.rx_bytes > 0, "P={p}: TCP traffic not counted: {ts:?}");
+        let is = inproc.stats().unwrap();
+        assert!(is.tx_bytes > 0 && is.rx_bytes > 0, "P={p}: in-proc traffic not counted");
+        drop(tcp);
+        for w in workers {
+            let _ = w.join();
+        }
+    }
+}
+
+#[test]
+fn forward_scores_match_bitwise_across_transports() {
+    // One policy evaluation, compared at full precision: the collective
+    // fold order is pinned (rank-order left fold), so the scores must be
+    // equal bit for bit, not merely close.
+    let Some(rt) = runtime() else { return };
+    let g = generators::erdos_renyi(20, 0.25, &mut Pcg32::seeded(93));
+    let params = Params::init(32, &mut Pcg32::seeded(94));
+    for p in [2usize, 4] {
+        let Some(inproc) = inproc_pool(p) else { return };
+        let Some((tcp, workers)) = tcp_pool(p, None) else { return };
+        let part = Partition::new(24, p);
+        let cfg = EngineCfg::new(p, 2);
+        let mut set_a = fresh_set(&rt, Storage::Dense, part, &g).unwrap();
+        inproc.install(0, &params, &mut set_a, true).unwrap();
+        let want = inproc.forward(0, &cfg, &set_a, false, true).unwrap();
+        let mut set_b = fresh_set(&rt, Storage::Dense, part, &g).unwrap();
+        tcp.install(0, &params, &mut set_b, true).unwrap();
+        let got = tcp.forward(0, &cfg, &set_b, false, true).unwrap();
+        assert_eq!(got.scores, want.scores, "P={p}: TCP scores diverge bitwise");
+        assert_eq!(got.timing.collectives, want.timing.collectives, "P={p}");
+        drop(tcp);
+        for w in workers {
+            let _ = w.join();
+        }
+    }
+}
+
+#[test]
+fn dropped_frame_is_retryable_and_recovery_is_bit_identical() {
+    // Satellite drill: a scripted transport drop (rank 0's first frame)
+    // fails the install with a retryable "injected fault ... dropped"
+    // error; the next install resets the group over the live sockets and
+    // the solve lands on the clean pool's exact scores.
+    let Some(rt) = runtime() else { return };
+    let g = generators::erdos_renyi(20, 0.25, &mut Pcg32::seeded(95));
+    let params = Params::init(32, &mut Pcg32::seeded(96));
+    let p = 2usize;
+    let Some(clean) = inproc_pool(p) else { return };
+    let part = Partition::new(24, p);
+    let cfg = EngineCfg::new(p, 2);
+    let mut set = fresh_set(&rt, Storage::Dense, part, &g).unwrap();
+    clean.install(0, &params, &mut set, true).unwrap();
+    let want = clean.forward(0, &cfg, &set, false, true).unwrap();
+
+    let plan = Arc::new(FaultPlan::parse("rank=0,kind=drop").unwrap());
+    let Some((tcp, workers)) = tcp_pool(p, Some(plan)) else { return };
+    let mut set2 = fresh_set(&rt, Storage::Dense, part, &g).unwrap();
+    let err = tcp.install(0, &params, &mut set2, true).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("injected fault"), "not marked injected (retryable): {msg}");
+    assert!(msg.contains("dropped"), "drop site not named: {msg}");
+    // The one-shot fault is spent; the group resets on the next install.
+    let mut set3 = fresh_set(&rt, Storage::Dense, part, &g).unwrap();
+    tcp.install(0, &params, &mut set3, true).unwrap();
+    let got = tcp.forward(0, &cfg, &set3, false, true).unwrap();
+    assert_eq!(got.scores, want.scores, "post-retry TCP scores diverge");
+    drop(tcp);
+    for w in workers {
+        let _ = w.join();
+    }
+}
+
+#[test]
+fn delayed_frame_only_slows_the_step() {
+    // kind=delay is an observability fault: the step completes with the
+    // same result, later.
+    let Some(rt) = runtime() else { return };
+    let g = generators::erdos_renyi(20, 0.25, &mut Pcg32::seeded(97));
+    let params = Params::init(32, &mut Pcg32::seeded(98));
+    let p = 2usize;
+    let Some(clean) = inproc_pool(p) else { return };
+    let plan = Arc::new(FaultPlan::parse("rank=1,kind=delay,ms=60").unwrap());
+    let delayed = match RankPool::new_with("artifacts", p, 2, Some(plan)) {
+        Ok(pool) => pool,
+        Err(e) => {
+            eprintln!("skipping: rank pool unavailable: {e:#}");
+            return;
+        }
+    };
+    let part = Partition::new(24, p);
+    let cfg = EngineCfg::new(p, 2);
+    let mut set = fresh_set(&rt, Storage::Dense, part, &g).unwrap();
+    clean.install(0, &params, &mut set, true).unwrap();
+    let want = clean.forward(0, &cfg, &set, false, true).unwrap();
+    let started = std::time::Instant::now();
+    let mut set2 = fresh_set(&rt, Storage::Dense, part, &g).unwrap();
+    delayed.install(0, &params, &mut set2, true).unwrap();
+    let got = delayed.forward(0, &cfg, &set2, false, true).unwrap();
+    assert!(started.elapsed().as_millis() >= 60, "delay fault never slowed the step");
+    assert_eq!(got.scores, want.scores, "delay fault changed the result");
+}
