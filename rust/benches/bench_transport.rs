@@ -4,7 +4,7 @@
 //! cost of a real rank-parallel forward over each. Emits
 //! BENCH_transport.json.
 //!
-//! Two sections compose:
+//! Three sections compose:
 //!  - **Echo ladder (always runs, no artifacts needed):** one echo peer
 //!    per transport bounces frames back; the ladder walks payload sizes
 //!    from control-message (64 B) to θ-broadcast scale (1 MiB), timing
@@ -14,6 +14,9 @@
 //!  - **Measured forward (artifacts present):** a P=2 pool over each
 //!    transport drives the same policy evaluation; per-step wall time
 //!    and the pool's tx/rx byte counters land in the JSON.
+//!  - **Faulted recovery (artifacts present):** a scripted worker death
+//!    mid-solve plus a `--reconnect` redial, timing death detection and
+//!    the rejoin-and-retry path (DESIGN.md §12 liveness/rejoin).
 //!
 //! Check mode: without artifacts the bench still emits the echo table
 //! and JSON, prints a notice for the skipped section, and exits 0.
@@ -210,6 +213,102 @@ fn measured_forward() -> Result<Json, String> {
         .set("tcp_rx_bytes", tcp_rx))
 }
 
+/// Faulted-recovery drill (artifact-gated): a scripted worker death
+/// mid-solve (`kind=disconnect`, the kill -9 analogue), a `--reconnect`
+/// redial, and the recovered re-solve — recording how fast the liveness
+/// layer detected the death (detect_ms) and how long the rejoin-and-retry
+/// path took end to end (recovery_ms). Lands in BENCH_transport.json as
+/// the "faulted" object.
+fn faulted_recovery() -> Result<Json, String> {
+    use oggm::collective::fault::FaultPlan;
+    use oggm::coordinator::engine::EngineCfg;
+    use oggm::coordinator::shard::{shards_for_graph, ShardSet};
+    use oggm::graph::{generators, Partition};
+    use oggm::parallel::{remote_worker_with, RankPool};
+    use oggm::transport::TcpCfg;
+    use oggm::util::rng::Pcg32;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    std::env::set_var("OGGM_RANK_WAIT_SECS", "4");
+    let p = 2usize;
+    let mut rng = Pcg32::seeded(0x7722);
+    let g = generators::erdos_renyi(20, 0.25, &mut rng);
+    let params = common::init_params(&mut rng);
+    let part = Partition::new(24, p);
+    let cfg = EngineCfg::new(p, 2);
+    let fresh = || {
+        let removed = vec![false; g.n];
+        let sol = vec![false; g.n];
+        let cand: Vec<bool> = (0..g.n).map(|v| g.degree(v) > 0).collect();
+        ShardSet::Dense(shards_for_graph(part, &g, &removed, &sol, &cand))
+    };
+    let dir = oggm::runtime::manifest::default_dir();
+
+    let l = TcpListener::bind("127.0.0.1:0").map_err(|e| e.to_string())?;
+    let addr = l.local_addr().unwrap().to_string();
+    drop(l);
+    let workers: Vec<_> = (0..p)
+        .map(|rank| {
+            let addr = addr.clone();
+            let dir = dir.clone();
+            let fault = (rank == 1)
+                .then(|| Arc::new(FaultPlan::parse("rank=1,kind=disconnect,frame=2").unwrap()));
+            std::thread::spawn(move || {
+                if let Err(e) = remote_worker_with(dir, &addr, rank, Some(p), fault, "", 2) {
+                    eprintln!("bench_transport: faulted worker {rank} exited with: {e:#}");
+                }
+            })
+        })
+        .collect();
+    let tcp_cfg = TcpCfg {
+        timeout: Duration::from_secs(2),
+        rejoin_window: Duration::from_secs(10),
+        token: String::new(),
+    };
+    let pool = RankPool::new_tcp_with(&dir, p, 2, None, &format!("tcp:{addr}"), tcp_cfg)
+        .map_err(|e| format!("TCP rank group unavailable: {e:#}"))?;
+
+    // Drive into the scripted death, timing its detection.
+    let mut set = fresh();
+    let t = Instant::now();
+    let died = pool
+        .install(0, &params, &mut set, true)
+        .and_then(|_| pool.forward(0, &cfg, &set, false, true).map(|_| ()));
+    if died.is_ok() {
+        return Err("scripted worker death never fired".into());
+    }
+    let detect_ms = t.elapsed().as_secs_f64() * 1e3;
+
+    // Recovery: the next install holds the rejoin window open for the
+    // redialing worker, then the forward must land.
+    let t = Instant::now();
+    let mut set2 = fresh();
+    pool.install(0, &params, &mut set2, true)
+        .map_err(|e| format!("post-rejoin install failed: {e:#}"))?;
+    pool.forward(0, &cfg, &set2, false, true)
+        .map_err(|e| format!("post-rejoin forward failed: {e:#}"))?;
+    let recovery_ms = t.elapsed().as_secs_f64() * 1e3;
+    let st = pool.stats().map_err(|e| format!("{e:#}"))?;
+    drop(pool);
+    for w in workers {
+        let _ = w.join();
+    }
+
+    println!(
+        "bench_transport: faulted P={p} — death detected in {detect_ms:.1} ms, \
+         rejoin + re-solve in {recovery_ms:.1} ms ({} remote restart(s))",
+        st.remote_restarts
+    );
+    Ok(Json::obj()
+        .set("p", p)
+        .set("detect_ms", detect_ms)
+        .set("recovery_ms", recovery_ms)
+        .set("remote_restarts", st.remote_restarts)
+        .set("heartbeats_missed", st.heartbeats_missed)
+        .set("rejoin_ms", st.rejoin_time.as_secs_f64() * 1e3))
+}
+
 fn main() {
     let mut rows = inproc_echo();
     rows.extend(tcp_echo());
@@ -249,6 +348,10 @@ fn main() {
         match measured_forward() {
             Ok(m) => json = json.set("measured", m),
             Err(why) => println!("bench_transport: skipping measured forward: {why}"),
+        }
+        match faulted_recovery() {
+            Ok(f) => json = json.set("faulted", f),
+            Err(why) => println!("bench_transport: skipping faulted recovery: {why}"),
         }
     }
 

@@ -54,6 +54,14 @@ pub struct BatchCfg {
     /// Per-pack rank-replacement budget for the rank-parallel pool
     /// (`--max-rank-restarts`, DESIGN.md §11).
     pub max_rank_restarts: usize,
+    /// Remote-rank liveness deadline in seconds (`--rank-timeout`,
+    /// DESIGN.md §12): a TCP peer silent for this long — no frames and no
+    /// heartbeats — is declared dead. 0 disables liveness enforcement.
+    pub rank_timeout: f64,
+    /// Seconds the coordinator holds a vacated TCP rank slot open for a
+    /// replacement worker (`--rejoin-window`, DESIGN.md §12) before the
+    /// loss becomes a terminal error.
+    pub rejoin_window: f64,
 }
 
 impl BatchCfg {
@@ -68,6 +76,8 @@ impl BatchCfg {
             storage: Storage::Dense,
             retries: 1,
             max_rank_restarts: crate::parallel::DEFAULT_MAX_RANK_RESTARTS,
+            rank_timeout: 30.0,
+            rejoin_window: 30.0,
         }
     }
 }

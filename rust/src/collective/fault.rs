@@ -18,14 +18,19 @@
 //! rank=1,step=0,kind=slow,ms=15
 //! rank=1,kind=drop,frame=2
 //! rank=0,kind=delay,ms=30
+//! rank=1,kind=disconnect,frame=4
+//! rank=0,kind=stall
 //! ```
 //!
 //! - `rank` (required): which rank the fault targets.
 //! - `kind` (required): `panic` (thread dies → pool replaces the rank),
 //!   `err` (recoverable `Err` response), `slow` (bounded sleep,
-//!   `ms=` duration, default 20ms), or the transport faults `drop` (a
+//!   `ms=` duration, default 20ms), the transport faults `drop` (a
 //!   coordinator→rank frame is discarded; the pack retries) and `delay`
-//!   (a frame is stalled `ms=` before sending).
+//!   (a frame is stalled `ms=` before sending), or the worker-side
+//!   liveness faults `disconnect` (the worker closes its socket and
+//!   exits — a scripted `kill -9`) and `stall` (the worker stops
+//!   sending frames, heartbeats included — a scripted hang).
 //! - `step` (optional): the 0-based occurrence counter at the injection
 //!   site — forward steps for worker faults, `phase()` calls on that
 //!   rank's handle for collective faults. Omitted = first opportunity.
@@ -66,6 +71,15 @@ pub enum FaultKind {
     /// Stall one coordinator→rank transport frame before sending
     /// (simulates wire latency; no error).
     Delay(Duration),
+    /// Close the worker's coordinator socket and exit (simulates a
+    /// `kill -9`ed worker process; the coordinator's liveness layer
+    /// detects the dead link and opens the rejoin window). Worker-side,
+    /// fired at the received-request counter ([`FaultPlan::fire_liveness`]).
+    Disconnect,
+    /// The worker stops sending frames — responses *and* heartbeats —
+    /// while still reading (simulates a hung process; the coordinator's
+    /// `--rank-timeout` deadline fires). Worker-side like `disconnect`.
+    Stall,
 }
 
 /// One scripted fault: where (rank, site, occurrence) and what
@@ -80,7 +94,9 @@ pub struct FaultSpec {
     /// Collective phase-op name; None targets the worker forward step.
     pub op: Option<String>,
     /// 0-based frame counter on the rank's transport link (transport
-    /// kinds only; None = first frame sent after the plan is armed).
+    /// and liveness kinds only; None = first frame after the plan is
+    /// armed). `drop`/`delay` count coordinator→rank sends;
+    /// `disconnect`/`stall` count worker-side receives.
     pub frame: Option<u64>,
     /// What happens when the spec matches.
     pub kind: FaultKind,
@@ -129,8 +145,13 @@ impl FaultPlan {
                         "slow" => FaultKind::Slow(Duration::ZERO), // ms applied below
                         "drop" => FaultKind::Drop,
                         "delay" => FaultKind::Delay(Duration::ZERO), // ms applied below
+                        "disconnect" => FaultKind::Disconnect,
+                        "stall" => FaultKind::Stall,
                         other => {
-                            bail!("unknown kind '{other}' (known: panic, err, slow, drop, delay)")
+                            bail!(
+                                "unknown kind '{other}' (known: panic, err, slow, drop, \
+                                 delay, disconnect, stall)"
+                            )
                         }
                     })
                 }
@@ -148,12 +169,18 @@ impl FaultPlan {
         if let FaultKind::Delay(_) = kind {
             kind = FaultKind::Delay(Duration::from_millis(ms));
         }
-        let transport = matches!(kind, FaultKind::Drop | FaultKind::Delay(_));
+        let transport = matches!(
+            kind,
+            FaultKind::Drop | FaultKind::Delay(_) | FaultKind::Disconnect | FaultKind::Stall
+        );
         if transport && (op.is_some() || step.is_some()) {
-            bail!("transport kinds (drop, delay) address frames: use frame=, not op=/step=");
+            bail!(
+                "transport kinds (drop, delay, disconnect, stall) address frames: \
+                 use frame=, not op=/step="
+            );
         }
         if !transport && frame.is_some() {
-            bail!("frame= only applies to transport kinds (drop, delay)");
+            bail!("frame= only applies to transport kinds (drop, delay, disconnect, stall)");
         }
         Ok(FaultSpec { rank, step, op, frame, kind, fired: AtomicBool::new(false) })
     }
@@ -192,7 +219,13 @@ impl FaultPlan {
     /// [`FaultPlan::fire_transport`].
     pub fn fire(&self, rank: usize, step: usize, op: Option<&str>) -> Option<FaultKind> {
         for spec in &self.specs {
-            if matches!(spec.kind, FaultKind::Drop | FaultKind::Delay(_)) {
+            if matches!(
+                spec.kind,
+                FaultKind::Drop
+                    | FaultKind::Delay(_)
+                    | FaultKind::Disconnect
+                    | FaultKind::Stall
+            ) {
                 continue;
             }
             if spec.rank != rank {
@@ -225,6 +258,37 @@ impl FaultPlan {
     pub fn fire_transport(&self, rank: usize, frame: u64) -> Option<FaultKind> {
         for spec in &self.specs {
             if !matches!(spec.kind, FaultKind::Drop | FaultKind::Delay(_)) {
+                continue;
+            }
+            if spec.rank != rank {
+                continue;
+            }
+            if let Some(want) = spec.frame {
+                if want != frame {
+                    continue;
+                }
+            }
+            if spec
+                .fired
+                .compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire)
+                .is_ok()
+            {
+                return Some(spec.kind);
+            }
+        }
+        None
+    }
+
+    /// Check (and atomically consume) a *liveness* fault at the worker's
+    /// receive site: `rank` is this worker's rank, `frame` the 0-based
+    /// count of requests it has received over its coordinator link. Only
+    /// `disconnect`/`stall` specs match — the worker-side siblings of
+    /// the coordinator-side `drop`/`delay` — and like them a spec
+    /// without `frame=` matches the first opportunity. Never aliases
+    /// with [`FaultPlan::fire`] or [`FaultPlan::fire_transport`].
+    pub fn fire_liveness(&self, rank: usize, frame: u64) -> Option<FaultKind> {
+        for spec in &self.specs {
+            if !matches!(spec.kind, FaultKind::Disconnect | FaultKind::Stall) {
                 continue;
             }
             if spec.rank != rank {
@@ -310,6 +374,8 @@ mod tests {
             "rank=1,kind=drop,op=barrier", // transport kind with op=
             "rank=1,kind=delay,step=2",  // transport kind with step=
             "rank=1,kind=err,frame=0",   // frame= on a non-transport kind
+            "rank=1,kind=disconnect,step=1", // liveness kind with step=
+            "rank=0,kind=stall,op=barrier",  // liveness kind with op=
         ] {
             assert!(FaultPlan::parse(bad).is_err(), "'{bad}' should fail to parse");
         }
@@ -338,5 +404,32 @@ mod tests {
         // … and the err spec is invisible to the frame site.
         assert_eq!(plan.fire_transport(0, 0), Some(FaultKind::Drop));
         assert_eq!(plan.fire_transport(0, 1), None);
+    }
+
+    #[test]
+    fn liveness_faults_parse_and_fire_at_the_worker_receive_site() {
+        let plan =
+            FaultPlan::parse("rank=1,kind=disconnect,frame=3; rank=0,kind=stall").unwrap();
+        assert_eq!(plan.len(), 2);
+        // Frame-addressed disconnect: only rank 1, only frame 3, one shot.
+        assert_eq!(plan.fire_liveness(1, 0), None);
+        assert_eq!(plan.fire_liveness(1, 3), Some(FaultKind::Disconnect));
+        assert_eq!(plan.fire_liveness(1, 3), None, "liveness specs are one-shot");
+        // Frame omitted: first opportunity on that worker.
+        assert_eq!(plan.fire_liveness(0, 2), Some(FaultKind::Stall));
+        assert_eq!(plan.fire_liveness(0, 3), None);
+    }
+
+    #[test]
+    fn liveness_site_never_aliases_with_the_other_sites() {
+        let plan = FaultPlan::parse("rank=0,kind=disconnect; rank=0,kind=drop").unwrap();
+        // The disconnect spec is invisible to the coordinator frame-send
+        // site and the worker/collective site …
+        assert_eq!(plan.fire_transport(0, 0), Some(FaultKind::Drop));
+        assert_eq!(plan.fire_transport(0, 1), None);
+        assert_eq!(plan.fire(0, 0, None), None);
+        // … and only the liveness site consumes it.
+        assert_eq!(plan.fire_liveness(0, 0), Some(FaultKind::Disconnect));
+        assert_eq!(plan.fire_liveness(0, 1), None);
     }
 }

@@ -499,6 +499,12 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
 /// (or `OGGM_FAULT_PLAN`) injects deterministic faults for drills. The
 /// connect retries for `OGGM_RANK_WAIT_SECS` (default 60), so workers may
 /// be launched before the coordinator listens.
+///
+/// Recovery knobs (DESIGN.md §12): `--reconnect[=N]` redials a lost
+/// coordinator link up to N times (bare flag = 5) with exponential
+/// backoff, re-running the Hello/Welcome handshake to rejoin the same
+/// rank slot; `--token <secret>` (or `OGGM_TOKEN`) is the shared secret
+/// the coordinator's `--token` demands in that handshake.
 pub fn cmd_rank(args: &Args) -> Result<()> {
     let addr = args.get("connect").context("oggm rank needs --connect <host:port>")?;
     let rank = args
@@ -518,8 +524,30 @@ pub fn cmd_rank(args: &Args) -> Result<()> {
         )),
         None => FaultPlan::from_env()?,
     };
+    // `--reconnect 3` / `--reconnect=3` bounds the redial budget; the bare
+    // flag gets a stock budget of 5 (backoff 250ms..5s, see
+    // `reconnect_backoff`). Absent = exit on the first lost link.
+    let reconnect = if args.get("reconnect").is_some() {
+        args.get_usize("reconnect", 0)
+    } else if args.has_flag("reconnect") {
+        5
+    } else {
+        0
+    };
+    let token = match args.get("token") {
+        Some(t) => t.to_string(),
+        None => std::env::var("OGGM_TOKEN").unwrap_or_default(),
+    };
     eprintln!("rank {rank}: connecting to coordinator at {addr}");
-    crate::parallel::remote_worker(manifest::default_dir(), addr, rank, world, fault)?;
+    crate::parallel::remote_worker_with(
+        manifest::default_dir(),
+        addr,
+        rank,
+        world,
+        fault,
+        &token,
+        reconnect,
+    )?;
     eprintln!("rank {rank}: session closed by the coordinator; exiting");
     Ok(())
 }

@@ -23,6 +23,9 @@ pub fn exec_stats_json(st: &ExecStats) -> Json {
         .set("recovery_time", st.recovery_time.as_secs_f64())
         .set("tx_bytes", st.tx_bytes)
         .set("rx_bytes", st.rx_bytes)
+        .set("remote_restarts", st.remote_restarts)
+        .set("heartbeats_missed", st.heartbeats_missed)
+        .set("rejoin_time", st.rejoin_time.as_secs_f64())
 }
 
 /// Admission/backpressure counters as a JSON object — the shared shape for
@@ -191,6 +194,9 @@ mod tests {
         st.recovery_time = std::time::Duration::from_millis(250);
         st.tx_bytes = 777;
         st.rx_bytes = 333;
+        st.remote_restarts = 1;
+        st.heartbeats_missed = 4;
+        st.rejoin_time = std::time::Duration::from_millis(500);
         let s = exec_stats_json(&st).render();
         assert!(s.contains("\"executions\":12"), "{s}");
         assert!(s.contains("\"h2d_bytes\":4096"), "{s}");
@@ -200,6 +206,9 @@ mod tests {
         assert!(s.contains("\"recovery_time\":0.25"), "{s}");
         assert!(s.contains("\"tx_bytes\":777"), "{s}");
         assert!(s.contains("\"rx_bytes\":333"), "{s}");
+        assert!(s.contains("\"remote_restarts\":1"), "{s}");
+        assert!(s.contains("\"heartbeats_missed\":4"), "{s}");
+        assert!(s.contains("\"rejoin_time\":0.5"), "{s}");
     }
 
     #[test]

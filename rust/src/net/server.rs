@@ -100,6 +100,9 @@ enum Solver {
         /// process-separated rank workers (None = in-process threads,
         /// DESIGN.md §12).
         ranks: Option<String>,
+        /// `--token` shared secret for the rank Hello handshake (None
+        /// falls back to `OGGM_TOKEN`).
+        token: Option<String>,
     },
     /// Tests/benches: an injected solve function (deterministic timing, no
     /// artifacts needed).
@@ -124,6 +127,7 @@ pub fn serve(
         params,
         fault_spec: opts.fault_plan.clone(),
         ranks: opts.ranks.clone(),
+        token: opts.token.clone(),
     };
     run_server(listener, manifest, opts, solver)
 }
@@ -630,11 +634,13 @@ fn spawn_solver(
                     }
                 }
             }
-            Solver::Real { dir, cfg, params, fault_spec, ranks } => match Runtime::new(&dir) {
+            Solver::Real { dir, cfg, params, fault_spec, ranks, token } => {
+                match Runtime::new(&dir) {
                 Ok(rt) => {
                     let mut exec = Executor::new(&rt, params, cfg)
                         .fault_plan(fault_spec)
-                        .rank_transport(ranks);
+                        .rank_transport(ranks)
+                        .rank_token(token);
                     for run in run_rx {
                         if tx.send(FrontMsg::Done(exec.run(run))).is_err() {
                             break;
@@ -649,7 +655,7 @@ fn spawn_solver(
                         }
                     }
                 }
-            },
+            }},
         })
         .expect("spawning the solver thread")
 }

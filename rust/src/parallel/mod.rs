@@ -23,7 +23,7 @@ mod worker;
 pub use crate::coordinator::engine::Engine;
 pub use pool::{RankPool, DEFAULT_MAX_RANK_RESTARTS};
 pub(crate) use pool::{FwdReq, RankShard, RankTiming, Req, Resp, SyncDelta};
-pub use worker::remote_worker;
+pub use worker::{reconnect_backoff, remote_worker, remote_worker_with};
 
 use crate::coordinator::bwd::{backward_set, GradOutput};
 use crate::coordinator::engine::EngineCfg;

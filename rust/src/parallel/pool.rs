@@ -29,6 +29,15 @@
 //! flag, default 2) with exponential backoff, and the pool's
 //! [`ExecStats`] report restart counts and total recovery time.
 //!
+//! Remote (TCP) rank death gets the same treatment via **rejoin**
+//! (DESIGN.md §12): the group's listeners stay open, so when a worker
+//! process dies (detected by the `--rank-timeout` liveness deadline or a
+//! closed socket) the supervisor holds the `--rejoin-window` open for a
+//! relaunched `oggm rank --reconnect` worker to re-handshake into the
+//! vacated slot, then resets the group and re-publishes θ exactly as for
+//! a thread replacement — same budget, same backoff, and the retried
+//! pack's solutions stay bit-identical.
+//!
 //! Deterministic fault injection: `RankPool::new` reads `OGGM_FAULT_PLAN`
 //! (see [`crate::collective::fault`]) and `new_with` accepts an explicit
 //! plan, threading it into every worker (forward-step faults) and every
@@ -44,10 +53,11 @@ use crate::coordinator::shard::ShardSet;
 use crate::model::Params;
 use crate::runtime::ExecStats;
 use crate::transport::inproc::InProcLink;
-use crate::transport::tcp::{self, CollHub};
+use crate::transport::tcp::{TcpCfg, TcpGroup};
 use crate::transport::{RankLink, WorkerLink};
 use anyhow::{anyhow, bail, ensure, Context, Result};
 use std::cell::RefCell;
+use std::collections::HashSet;
 use std::path::PathBuf;
 use std::sync::mpsc::channel;
 use std::sync::Arc;
@@ -146,10 +156,12 @@ impl WorkerHandle {
 /// The pool's handle on the collective group, per transport. A failed
 /// local group is replaced wholesale (fresh [`Communicator`]s shipped
 /// via `NewComm`); a failed TCP group is reset in place (the hub clears
-/// its sticky abort, each worker clears its own via `ResetComm`).
+/// its sticky abort, each worker clears its own via `ResetComm`). The
+/// TCP arm keeps the whole [`TcpGroup`] — listeners included — so
+/// vacated rank slots can be re-admitted during recovery.
 enum GroupCtl {
     Local(Vec<Communicator>),
-    Tcp(Arc<CollHub>),
+    Tcp(TcpGroup),
 }
 
 /// Why a coordinator→worker send failed.
@@ -177,9 +189,16 @@ struct PoolCtl {
     streak: usize,
     /// Total rank replacements over the pool's lifetime.
     restarts_total: u64,
+    /// Replacements that were remote rejoins (a reconnecting worker
+    /// process re-admitted into its old TCP rank slot) — a subset of
+    /// `restarts_total`.
+    remote_restarts: u64,
     /// Total wall time spent in recovery (respawn + collective reset + θ
     /// republish).
     recovery: Duration,
+    /// Wall time spent holding the rejoin window open for replacement
+    /// workers — a subset of `recovery`.
+    rejoin: Duration,
 }
 
 /// A persistent pool of P rank workers (DESIGN.md §9). Single-threaded
@@ -251,7 +270,9 @@ impl RankPool {
                 poisoned: false,
                 streak: 0,
                 restarts_total: 0,
+                remote_restarts: 0,
                 recovery: Duration::ZERO,
+                rejoin: Duration::ZERO,
             }),
         };
         // Startup handshake: every worker acknowledges its runtime.
@@ -260,11 +281,8 @@ impl RankPool {
     }
 
     /// Build a pool whose P ranks are **separate OS processes** reached
-    /// over TCP (DESIGN.md §12): listen on the `--ranks` addresses,
-    /// admit exactly P `oggm rank` workers (handshake-validated against
-    /// this pool's world size and artifact fingerprint), and wait for
-    /// each worker's runtime-start acknowledgment — the same startup
-    /// handshake the threaded pool performs.
+    /// over TCP (DESIGN.md §12) with default liveness/rejoin knobs
+    /// ([`TcpCfg::default`]: 30 s timeout and rejoin window, no token).
     pub fn new_tcp(
         dir: impl Into<PathBuf>,
         p: usize,
@@ -272,12 +290,31 @@ impl RankPool {
         fault: Option<Arc<FaultPlan>>,
         spec: &str,
     ) -> Result<RankPool> {
+        RankPool::new_tcp_with(dir, p, max_restarts, fault, spec, TcpCfg::default())
+    }
+
+    /// [`RankPool::new_tcp`] with explicit liveness/rejoin/auth knobs:
+    /// listen on the `--ranks` addresses, admit exactly P `oggm rank`
+    /// workers (handshake-validated against this pool's world size,
+    /// artifact fingerprint, and shared token), and wait for each
+    /// worker's runtime-start acknowledgment — the same startup
+    /// handshake the threaded pool performs. The listeners stay open so
+    /// replacement workers can rejoin vacated rank slots during
+    /// recovery (DESIGN.md §12).
+    pub fn new_tcp_with(
+        dir: impl Into<PathBuf>,
+        p: usize,
+        max_restarts: usize,
+        fault: Option<Arc<FaultPlan>>,
+        spec: &str,
+        cfg: TcpCfg,
+    ) -> Result<RankPool> {
         ensure!(p >= 1, "rank pool needs at least one rank");
         let dir = dir.into();
         let addrs = parse_rank_spec(spec, p)?;
-        let hub = CollHub::new(p);
+        let hub = crate::transport::tcp::CollHub::new(p);
         let fingerprint = crate::transport::manifest_fingerprint(&dir);
-        let links = tcp::accept_ranks(&addrs, p, fingerprint, &hub)
+        let (group, links) = TcpGroup::form(&addrs, p, fingerprint, &hub, cfg)
             .context("forming the TCP rank group")?;
         let workers = links
             .into_iter()
@@ -289,7 +326,7 @@ impl RankPool {
             fault,
             max_restarts,
             workers: RefCell::new(workers),
-            group: RefCell::new(GroupCtl::Tcp(hub)),
+            group: RefCell::new(GroupCtl::Tcp(group)),
             frames: RefCell::new(vec![0; p]),
             ctl: RefCell::new(PoolCtl {
                 last_params: None,
@@ -297,7 +334,9 @@ impl RankPool {
                 poisoned: false,
                 streak: 0,
                 restarts_total: 0,
+                remote_restarts: 0,
                 recovery: Duration::ZERO,
+                rejoin: Duration::ZERO,
             }),
         };
         pool.collect_unit("start rank runtimes")?;
@@ -323,7 +362,7 @@ impl RankPool {
                     c.abort(msg);
                 }
             }
-            GroupCtl::Tcp(hub) => hub.abort(rank, msg),
+            GroupCtl::Tcp(g) => g.hub().abort(rank, msg),
         }
     }
 
@@ -460,30 +499,108 @@ impl RankPool {
             .map(|(i, _)| i)
             .collect();
         if matches!(&*self.group.borrow(), GroupCtl::Tcp(_)) {
+            let mut rejoin_elapsed = Duration::ZERO;
             if !dead.is_empty() {
-                // A dead worker *process* is not respawnable from here:
-                // its runtime, θ cache, and socket live in another OS
-                // process an operator has to relaunch. Surface it
-                // non-retryably rather than spinning the retry budget.
-                self.ctl.borrow_mut().streak = 0;
-                let msgs: Vec<String> = {
+                // A dead worker *process* cannot be respawned from here
+                // — its runtime, θ cache, and socket live in another OS
+                // process — but the group's listeners are still open:
+                // hold the rejoin window and let a relaunched
+                // (`--reconnect`) worker re-handshake into the vacated
+                // slot, under the same per-pack budget and backoff the
+                // threaded supervisor uses.
+                let streak = self.ctl.borrow().streak;
+                if streak >= self.max_restarts {
+                    self.ctl.borrow_mut().streak = 0;
+                    bail!(
+                        "{} dead remote rank(s) after {streak} replacement round(s): \
+                         per-pack restart budget exhausted (max {}; raise \
+                         --max-rank-restarts)",
+                        dead.len(),
+                        self.max_restarts
+                    );
+                }
+                std::thread::sleep(Duration::from_millis(5u64 << streak.min(4)));
+                let reasons: Vec<String> = {
                     let ws = self.workers.borrow();
                     dead.iter().map(|&i| ws[i].link.death_msg(i)).collect()
                 };
-                bail!(
-                    "{} (remote ranks cannot be respawned; restart the worker process \
-                     and reconnect)",
-                    msgs.join("; ")
+                eprintln!(
+                    "rank pool: lost remote rank(s) [{}]: {}; holding the rejoin window \
+                     open for replacements",
+                    dead.iter().map(|r| r.to_string()).collect::<Vec<_>>().join(", "),
+                    reasons.join("; ")
                 );
+                let t_rejoin = Instant::now();
+                let live: HashSet<usize> =
+                    (0..self.p).filter(|i| !dead.contains(i)).collect();
+                let links = {
+                    let group = self.group.borrow();
+                    let GroupCtl::Tcp(g) = &*group else { unreachable!() };
+                    // Window expiry is terminal and passes straight
+                    // through ("rejoin window expired: …").
+                    g.rejoin(&dead, &live)?
+                };
+                rejoin_elapsed = t_rejoin.elapsed();
+                {
+                    let mut ws = self.workers.borrow_mut();
+                    for link in links {
+                        let r = link.rank();
+                        // Dropping the old handle shuts the dead socket
+                        // and joins its reader thread.
+                        ws[r] = WorkerHandle { link: RankLink::Tcp(link), join: None };
+                    }
+                }
+                // Each rejoined worker acknowledges its runtime start
+                // (the same startup handshake formation performs).
+                {
+                    let ws = self.workers.borrow();
+                    for &i in &dead {
+                        match ws[i].link.recv() {
+                            Ok(Resp::Unit { .. }) => {}
+                            Ok(Resp::Err(e)) => {
+                                bail!("replacement rank {i} failed to start: {e}")
+                            }
+                            _ => bail!("rank {i}: unexpected response during rejoin startup"),
+                        }
+                    }
+                }
             }
-            // Every process is alive: make the group fresh in place —
-            // hub first (so no stale abort races the acks), then each
-            // worker clears its sticky abort and acknowledges.
-            if let GroupCtl::Tcp(hub) = &*self.group.borrow() {
-                hub.reset();
+            // Make the group fresh in place — hub first (so no stale
+            // abort races the acks), then each worker clears its sticky
+            // abort and acknowledges.
+            if let GroupCtl::Tcp(g) = &*self.group.borrow() {
+                g.hub().reset();
             }
             self.send_all(|_| Req::ResetComm)?;
             self.collect_unit("reset collectives")?;
+            if !dead.is_empty() {
+                // Rejoined workers restarted with an empty θ cache:
+                // re-publish the last parameters to them (Arc-shared,
+                // O(1) coordinator-side; shard state re-ships with the
+                // install that triggered this recovery).
+                if let Some(arc) = self.ctl.borrow().published.clone() {
+                    let ws = self.workers.borrow();
+                    for &i in &dead {
+                        if ws[i].link.send(Req::SetParams(arc.clone())).is_err() {
+                            bail!("{}", ws[i].link.gone_msg(i));
+                        }
+                    }
+                    for &i in &dead {
+                        match ws[i].link.recv() {
+                            Ok(Resp::Unit { .. }) => {}
+                            Ok(Resp::Err(e)) => {
+                                bail!("republish θ to replacement rank failed: {e}")
+                            }
+                            _ => bail!("rank {i}: unexpected response to θ republish"),
+                        }
+                    }
+                }
+                let mut ctl = self.ctl.borrow_mut();
+                ctl.streak += 1;
+                ctl.restarts_total += dead.len() as u64;
+                ctl.remote_restarts += dead.len() as u64;
+                ctl.rejoin += rejoin_elapsed;
+            }
             let mut ctl = self.ctl.borrow_mut();
             ctl.recovery += t0.elapsed();
             ctl.poisoned = false;
@@ -805,6 +922,11 @@ impl RankPool {
         let ctl = self.ctl.borrow();
         total.restarts = ctl.restarts_total;
         total.recovery_time = ctl.recovery;
+        total.remote_restarts = ctl.remote_restarts;
+        total.rejoin_time = ctl.rejoin;
+        if let GroupCtl::Tcp(g) = &*self.group.borrow() {
+            total.heartbeats_missed = g.hub().heartbeats_missed();
+        }
         Ok(total)
     }
 
@@ -856,7 +978,7 @@ fn spawn_worker(
         .name(format!("oggm-rank{rank}"))
         .spawn(move || {
             let link = WorkerLink::Chan { rx: worker_rx, tx: worker_tx };
-            worker::worker_main(d, rank, comm, fault, link)
+            let _ = worker::worker_main(d, rank, comm, fault, link);
         })
         .context("spawning rank worker")?;
     Ok(WorkerHandle { link: RankLink::InProc(InProcLink::new(tx, rx)), join: Some(join) })

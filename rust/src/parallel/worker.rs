@@ -38,10 +38,11 @@ use crate::transport::tcp::connect_worker;
 use crate::transport::WorkerLink;
 use crate::util::add_assign;
 use anyhow::{anyhow, bail, ensure, Context, Result};
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::rc::Rc;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Saved activations of this rank's last `save` forward (consumed by the
 /// following backward; the per-rank twin of `fwd::Activations` — they never
@@ -93,6 +94,20 @@ fn pack_mut<'a, 'r>(
         .ok_or_else(|| anyhow!("no pack installed in slot {slot}"))
 }
 
+/// How a worker request loop ended — the signal `--reconnect` keys off:
+/// only a lost link is worth redialing for.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum WorkerExit {
+    /// Clean `Shutdown` request from the coordinator.
+    Shutdown,
+    /// The link died: coordinator gone, socket closed, or an injected
+    /// `disconnect` fault. A `--reconnect` worker redials after this.
+    LinkLost,
+    /// Fatal local failure (runtime start failed, or a panic left the
+    /// worker's state suspect): reconnecting would not help.
+    Fatal,
+}
+
 /// Worker thread entry: construct the thread-local runtime, acknowledge
 /// startup, then serve requests until shutdown. Every request gets exactly
 /// one response; failures abort the collective group first. An ordinary
@@ -105,7 +120,7 @@ pub(crate) fn worker_main(
     comm: Communicator,
     fault: Option<Arc<FaultPlan>>,
     link: WorkerLink,
-) {
+) -> WorkerExit {
     let rt = match Runtime::new(&dir) {
         Ok(rt) => {
             let _ = link.send(Resp::Unit { xfer: 0.0 });
@@ -113,7 +128,7 @@ pub(crate) fn worker_main(
         }
         Err(e) => {
             let _ = link.send(Resp::Err(format!("rank {rank}: runtime start failed: {e:#}")));
-            return;
+            return WorkerExit::Fatal;
         }
     };
     let mut st = WorkerState {
@@ -129,7 +144,7 @@ pub(crate) fn worker_main(
     let mut packs: Vec<Option<Pack>> = Vec::new();
     while let Some(req) = link.recv() {
         if matches!(req, Req::Shutdown) {
-            break;
+            return WorkerExit::Shutdown;
         }
         let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             handle(&rt, &mut st, &mut packs, req)
@@ -157,13 +172,24 @@ pub(crate) fn worker_main(
                 (Resp::Err(msg), true)
             }
         };
-        if !link.send(resp) || fatal {
+        let sent = link.send(resp);
+        if !sent {
+            return WorkerExit::LinkLost;
+        }
+        if fatal {
             // A panicked worker's runtime state is suspect: exit the
             // thread so `join.is_finished()` reads true and the pool's
             // supervisor replaces this rank with a fresh runtime.
-            return;
+            return WorkerExit::Fatal;
         }
     }
+    WorkerExit::LinkLost
+}
+
+/// Backoff schedule for `--reconnect` redials: 250 ms doubling per
+/// attempt, capped at 5 s. Pure so the schedule is unit-testable.
+pub fn reconnect_backoff(attempt: usize) -> Duration {
+    Duration::from_millis((250u64 << attempt.min(5)).min(5_000))
 }
 
 /// Run this process as one rank of a TCP-transport pool (the `oggm rank`
@@ -174,7 +200,10 @@ pub(crate) fn worker_main(
 /// runs. Same payloads, same rank-order collective folds — results are
 /// bit-identical to the threaded engine. Returns when the coordinator
 /// shuts the pool down or the connection closes; a handshake rejection
-/// surfaces as a contextful error.
+/// surfaces as a contextful error. The handshake token comes from
+/// `OGGM_TOKEN` and the session is single-shot — `oggm rank` passes
+/// explicit credentials and a `--reconnect` budget via
+/// [`remote_worker_with`].
 pub fn remote_worker(
     dir: impl Into<PathBuf>,
     addr: &str,
@@ -182,11 +211,115 @@ pub fn remote_worker(
     world: Option<usize>,
     fault: Option<Arc<FaultPlan>>,
 ) -> Result<()> {
+    let token = std::env::var("OGGM_TOKEN").unwrap_or_default();
+    remote_worker_with(dir, addr, rank, world, fault, &token, 0)
+}
+
+/// [`remote_worker`] with explicit credentials and a redial budget.
+///
+/// `reconnect` is the number of *extra* sessions allowed after the link
+/// is lost: on a lost coordinator connection (crash, liveness abort,
+/// injected `disconnect`) the worker sleeps [`reconnect_backoff`] and
+/// redials, re-running the Hello/Welcome handshake so the coordinator's
+/// rejoin window can re-admit it into its old rank slot. A clean
+/// `Shutdown` from the coordinator, a handshake rejection, or a fatal
+/// local failure (runtime start, panic) ends the process instead —
+/// redialing could not help, and looping on a rejection would spam the
+/// coordinator forever.
+pub fn remote_worker_with(
+    dir: impl Into<PathBuf>,
+    addr: &str,
+    rank: usize,
+    world: Option<usize>,
+    fault: Option<Arc<FaultPlan>>,
+    token: &str,
+    reconnect: usize,
+) -> Result<()> {
     let dir = dir.into();
-    let (io, p) = connect_worker(addr, rank, world, &dir)?;
+    let mut attempt = 0usize;
+    loop {
+        match serve_session(&dir, addr, rank, world, fault.clone(), token) {
+            Ok(WorkerExit::Shutdown) => return Ok(()),
+            Ok(WorkerExit::Fatal) => {
+                bail!(
+                    "rank {rank}: worker exited after a fatal local failure \
+                     (see the error response sent to the coordinator)"
+                )
+            }
+            Ok(WorkerExit::LinkLost) => {
+                if attempt >= reconnect {
+                    bail!(
+                        "rank {rank}: lost the coordinator connection \
+                         (pass --reconnect to redial automatically)"
+                    );
+                }
+            }
+            Err(e) => {
+                // A rejection means credentials or group shape are
+                // wrong; redialing would just repeat it.
+                if attempt >= reconnect
+                    || format!("{e:#}").contains("coordinator rejected this worker")
+                {
+                    return Err(e);
+                }
+            }
+        }
+        let wait = reconnect_backoff(attempt);
+        attempt += 1;
+        eprintln!(
+            "rank {rank}: coordinator connection lost; reconnect attempt \
+             {attempt}/{reconnect} in {}ms",
+            wait.as_millis()
+        );
+        std::thread::sleep(wait);
+    }
+}
+
+/// One dial→handshake→serve session. `Err` is a connect/handshake
+/// failure (terminal: rejections mean credentials or shape are wrong);
+/// `Ok(exit)` reports how an established session ended.
+fn serve_session(
+    dir: &Path,
+    addr: &str,
+    rank: usize,
+    world: Option<usize>,
+    fault: Option<Arc<FaultPlan>>,
+    token: &str,
+) -> Result<WorkerExit> {
+    let (io, p) = connect_worker(addr, rank, world, dir, token, fault.clone())?;
+    // Prove liveness while the request loop is deep in device compute:
+    // a dedicated thread beats the coordinator's deadline even when a
+    // single step legitimately outlasts `--rank-timeout`.
+    let stop = Arc::new(AtomicBool::new(false));
+    let beats = if io.timeout() > Duration::ZERO {
+        let io = Arc::clone(&io);
+        let stop = Arc::clone(&stop);
+        let tick = (io.timeout() / 3).max(Duration::from_millis(10));
+        Some(std::thread::spawn(move || {
+            let mut last = Instant::now();
+            while !stop.load(Ordering::Acquire) {
+                if last.elapsed() >= tick {
+                    if io.heartbeat().is_err() {
+                        break;
+                    }
+                    last = Instant::now();
+                }
+                std::thread::sleep(tick.min(Duration::from_millis(50)));
+            }
+        }))
+    } else {
+        None
+    };
     let comm = Communicator::remote(rank, p, io.clone(), fault.clone());
-    worker_main(dir, rank, comm, fault, WorkerLink::Remote(io));
-    Ok(())
+    let exit = worker_main(dir.to_path_buf(), rank, comm, fault, WorkerLink::Remote(io.clone()));
+    stop.store(true, Ordering::Release);
+    if let Some(h) = beats {
+        let _ = h.join();
+    }
+    if exit == WorkerExit::LinkLost && io.disconnected_by_fault() {
+        eprintln!("rank {rank}: injected fault: worker socket disconnected");
+    }
+    Ok(exit)
 }
 
 fn handle<'r>(

@@ -91,6 +91,18 @@ pub struct ExecStats {
     /// Bytes received rank→coordinator over the transport links
     /// (responses and collective deposits). Pool-level.
     pub rx_bytes: u64,
+    /// Remote (TCP) rank slots re-filled by a rejoining worker process
+    /// (DESIGN.md §12 liveness/rejoin) — the transport-seam sibling of
+    /// `restarts`. Pool-level.
+    pub remote_restarts: u64,
+    /// Liveness deadlines missed: a rank link produced no frame (data or
+    /// heartbeat) within `--rank-timeout` and was declared dead.
+    /// Pool-level.
+    pub heartbeats_missed: u64,
+    /// Time spent inside the rejoin window waiting for replacement
+    /// workers to re-handshake (a subset of `recovery_time`).
+    /// Pool-level.
+    pub rejoin_time: Duration,
 }
 
 impl ExecStats {
@@ -109,6 +121,9 @@ impl ExecStats {
         self.recovery_time += other.recovery_time;
         self.tx_bytes += other.tx_bytes;
         self.rx_bytes += other.rx_bytes;
+        self.remote_restarts += other.remote_restarts;
+        self.heartbeats_missed += other.heartbeats_missed;
+        self.rejoin_time += other.rejoin_time;
     }
 
     /// Counter deltas accumulated since `earlier` (snapshot arithmetic for
@@ -128,6 +143,11 @@ impl ExecStats {
             recovery_time: self.recovery_time.saturating_sub(earlier.recovery_time),
             tx_bytes: self.tx_bytes.saturating_sub(earlier.tx_bytes),
             rx_bytes: self.rx_bytes.saturating_sub(earlier.rx_bytes),
+            remote_restarts: self.remote_restarts.saturating_sub(earlier.remote_restarts),
+            heartbeats_missed: self
+                .heartbeats_missed
+                .saturating_sub(earlier.heartbeats_missed),
+            rejoin_time: self.rejoin_time.saturating_sub(earlier.rejoin_time),
         }
     }
 }

@@ -177,6 +177,10 @@ pub struct Executor<'r> {
     /// addresses for process-separated rank workers. `None` = the
     /// in-process threaded pool.
     ranks_spec: Option<String>,
+    /// Shared secret TCP rank workers must present in their Hello
+    /// handshake (`--token`, DESIGN.md §12). `None` falls back to the
+    /// `OGGM_TOKEN` environment variable; empty = auth disabled.
+    token_spec: Option<String>,
 }
 
 impl<'r> Executor<'r> {
@@ -192,6 +196,7 @@ impl<'r> Executor<'r> {
             pool: None,
             fault_spec: None,
             ranks_spec: None,
+            token_spec: None,
         }
     }
 
@@ -217,6 +222,13 @@ impl<'r> Executor<'r> {
         self
     }
 
+    /// Set the shared rank-worker auth token (builder style; the `--token`
+    /// flag). `None` falls back to `OGGM_TOKEN`; empty disables auth.
+    pub fn rank_token(mut self, token: Option<String>) -> Executor<'r> {
+        self.token_spec = token;
+        self
+    }
+
     /// The parameters this executor serves.
     pub fn params(&self) -> &Params {
         &self.params
@@ -237,14 +249,29 @@ impl<'r> Executor<'r> {
             None => FaultPlan::from_env()?,
         };
         let pool = match &self.ranks_spec {
-            Some(spec) => RankPool::new_tcp(
-                self.rt.manifest.dir.clone(),
-                self.cfg.engine.p,
-                self.cfg.max_rank_restarts,
-                plan,
-                spec,
-            )
-            .context("forming the TCP rank-parallel worker group")?,
+            Some(spec) => {
+                let tcp = crate::transport::TcpCfg {
+                    timeout: std::time::Duration::from_secs_f64(
+                        self.cfg.rank_timeout.max(0.0),
+                    ),
+                    rejoin_window: std::time::Duration::from_secs_f64(
+                        self.cfg.rejoin_window.max(0.0),
+                    ),
+                    token: match &self.token_spec {
+                        Some(t) => t.clone(),
+                        None => std::env::var("OGGM_TOKEN").unwrap_or_default(),
+                    },
+                };
+                RankPool::new_tcp_with(
+                    self.rt.manifest.dir.clone(),
+                    self.cfg.engine.p,
+                    self.cfg.max_rank_restarts,
+                    plan,
+                    spec,
+                    tcp,
+                )
+                .context("forming the TCP rank-parallel worker group")?
+            }
             None => RankPool::new_with(
                 self.rt.manifest.dir.clone(),
                 self.cfg.engine.p,
@@ -395,11 +422,20 @@ impl<'r> Executor<'r> {
 }
 
 /// Whether a pack-level solve error is worth a full re-solve: rank and
-/// worker failures, collective aborts, and injected faults are transient —
-/// the pool replaces dead ranks and resets the collective group on the
-/// next install. Admission, shape, and compilation errors are not
-/// (retrying them would burn device time on a deterministic failure).
-fn retryable_fault(msg: &str) -> bool {
+/// worker failures (thread or remote process — the pool replaces dead
+/// threads and re-admits rejoining worker processes on the next
+/// install), collective aborts, and injected faults are transient.
+/// Admission, shape, and compilation errors are not (retrying them
+/// would burn device time on a deterministic failure), and neither is
+/// an expired rejoin window: the replacement never came, so another
+/// attempt would just wait out the window again.
+pub fn retryable_fault(msg: &str) -> bool {
+    // Terminal markers first: an expired rejoin window's context chain
+    // can also contain retryable phrasings (the liveness reason that
+    // vacated the slot), and the terminal classification must win.
+    if msg.contains("rejoin window expired") {
+        return false;
+    }
     const MARKERS: &[&str] = &[
         "injected fault",
         "injected panic",
@@ -407,6 +443,9 @@ fn retryable_fault(msg: &str) -> bool {
         "panicked",
         "worker thread died",
         "worker is gone",
+        "worker process disconnected",
+        "worker process unreachable",
+        "unreachable for",
         "restart budget exhausted",
         "replacement rank",
     ];
@@ -445,6 +484,7 @@ impl<'r> Service<'r> {
         svc.adm.set_quota(opts.quota);
         svc.exec.fault_spec = opts.fault_plan.clone();
         svc.exec.ranks_spec = opts.ranks.clone();
+        svc.exec.token_spec = opts.token.clone();
         svc
     }
 
@@ -488,6 +528,13 @@ impl<'r> Service<'r> {
     /// style; see [`Executor::rank_transport`], DESIGN.md §12).
     pub fn rank_transport(mut self, spec: Option<String>) -> Service<'r> {
         self.exec.ranks_spec = spec;
+        self
+    }
+
+    /// Set the shared rank-worker auth token (builder style; see
+    /// [`Executor::rank_token`], DESIGN.md §12).
+    pub fn rank_token(mut self, token: Option<String>) -> Service<'r> {
+        self.exec.token_spec = token;
         self
     }
 
@@ -685,6 +732,11 @@ mod tests {
             "rank 0: worker thread died",
             "2 dead rank(s) after 2 replacement round(s): per-pack restart budget exhausted",
             "install pack failed: injected fault: transport frame 2 to rank 1 dropped",
+            // TCP rank death is retryable since rejoin (DESIGN.md §12): a
+            // replacement worker re-fills the slot inside the window.
+            "rank 1 worker process unreachable (connection closed)",
+            "install pack failed: rank 2 worker process disconnected (broken pipe)",
+            "rank 1 unreachable for 3.2s (no frames or heartbeats within the 3.0s --rank-timeout)",
         ] {
             assert!(retryable_fault(msg), "should be retryable: {msg}");
         }
@@ -692,7 +744,11 @@ mod tests {
             "job 'a' (|V|=500) not admitted: no compiled bucket fits",
             "loading stage q_scores_b4_n24: no such artifact",
             "pack has 2 shards but the pool has 4 ranks",
-            "rank 1 worker process unreachable (connection closed)",
+            // Window expiry is terminal — and stays terminal even when its
+            // context chain carries a retryable "unreachable for" phrase
+            // (the expiry check is ordered first).
+            "rejoin window expired: rank(s) 1 still vacant after 30s",
+            "rejoin window expired: rank 1 unreachable for 31.0s",
         ] {
             assert!(!retryable_fault(msg), "should not be retryable: {msg}");
         }

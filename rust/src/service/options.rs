@@ -113,6 +113,18 @@ pub struct Options {
     /// addresses the coordinator accepts `oggm rank` worker processes on.
     /// None = the in-process threaded pool.
     pub ranks: Option<String>,
+    /// Remote-rank liveness deadline in seconds (`--rank-timeout`,
+    /// DESIGN.md §12): a TCP rank silent for this long — no frames and no
+    /// heartbeats — is declared dead. 0 disables enforcement.
+    pub rank_timeout: f64,
+    /// Seconds a vacated TCP rank slot stays open for a replacement worker
+    /// to rejoin (`--rejoin-window`, DESIGN.md §12) before the loss is
+    /// terminal.
+    pub rejoin_window: f64,
+    /// Shared secret required in the rank Hello handshake (`--token`,
+    /// DESIGN.md §12); None = also honor the `OGGM_TOKEN` environment
+    /// variable where TCP pools are created (empty = auth disabled).
+    pub token: Option<String>,
 }
 
 impl Default for Options {
@@ -142,6 +154,9 @@ impl Default for Options {
             max_rank_restarts: crate::parallel::DEFAULT_MAX_RANK_RESTARTS,
             fault_plan: None,
             ranks: None,
+            rank_timeout: 30.0,
+            rejoin_window: 30.0,
+            token: None,
         }
     }
 }
@@ -192,6 +207,9 @@ impl Options {
         o.max_rank_restarts = args.get_usize("max-rank-restarts", o.max_rank_restarts);
         o.fault_plan = args.get("fault-plan").map(|s| s.to_string());
         o.ranks = args.get("ranks").map(|s| s.to_string());
+        o.rank_timeout = args.get_f64("rank-timeout", o.rank_timeout);
+        o.rejoin_window = args.get_f64("rejoin-window", o.rejoin_window);
+        o.token = args.get("token").map(|s| s.to_string());
         Ok(o)
     }
 
@@ -312,6 +330,26 @@ impl Options {
         self
     }
 
+    /// Set the remote-rank liveness deadline in seconds (0 disables).
+    pub fn rank_timeout(mut self, secs: f64) -> Options {
+        self.rank_timeout = secs;
+        self
+    }
+
+    /// Set the rejoin window a vacated TCP rank slot stays open, in
+    /// seconds.
+    pub fn rejoin_window(mut self, secs: f64) -> Options {
+        self.rejoin_window = secs;
+        self
+    }
+
+    /// Set the shared secret rank workers must present in their Hello
+    /// handshake.
+    pub fn token(mut self, token: impl Into<String>) -> Options {
+        self.token = Some(token.into());
+        self
+    }
+
     /// The seed, or the calling subcommand's historical default (train 1,
     /// infer 2, solve 3, batch/serve 4 — distinct so their RNG streams
     /// never alias).
@@ -351,6 +389,8 @@ impl From<&Options> for BatchCfg {
             storage: o.storage,
             retries: o.retries,
             max_rank_restarts: o.max_rank_restarts,
+            rank_timeout: o.rank_timeout,
+            rejoin_window: o.rejoin_window,
         }
     }
 }
@@ -473,6 +513,27 @@ mod tests {
         assert_eq!(o.ranks.as_deref(), Some("tcp:127.0.0.1:7701,tcp:127.0.0.1:7702"));
         let o = Options::from_args(&parse("")).unwrap();
         assert!(o.ranks.is_none());
+    }
+
+    #[test]
+    fn liveness_knobs_parse_and_lower() {
+        let o = Options::from_args(&parse(
+            "--rank-timeout 2.5 --rejoin-window 7 --token hunter2",
+        ))
+        .unwrap();
+        assert_eq!(o.rank_timeout, 2.5);
+        assert_eq!(o.rejoin_window, 7.0);
+        assert_eq!(o.token.as_deref(), Some("hunter2"));
+        let b = BatchCfg::from(&o);
+        assert_eq!(b.rank_timeout, 2.5);
+        assert_eq!(b.rejoin_window, 7.0);
+        // Defaults: 30s liveness deadline and rejoin window, no token.
+        let o = Options::from_args(&parse("")).unwrap();
+        assert_eq!(o.rank_timeout, 30.0);
+        assert_eq!(o.rejoin_window, 30.0);
+        assert!(o.token.is_none());
+        assert_eq!(BatchCfg::from(&o).rank_timeout, 30.0);
+        assert_eq!(BatchCfg::new(1, 2).rejoin_window, 30.0);
     }
 
     #[test]

@@ -26,7 +26,9 @@ use anyhow::{bail, Context, Result};
 /// Frame magic: the first four bytes of every frame.
 pub const MAGIC: [u8; 4] = *b"OGTP";
 /// Protocol version this build speaks. Bump on any wire-format change.
-pub const VERSION: u16 = 1;
+/// v2: heartbeat frames, authentication token in `Hello`, liveness
+/// deadline in `Welcome`, recovery counters in the stats response.
+pub const VERSION: u16 = 2;
 /// Fixed header length in bytes (magic + version + kind + rank + len).
 pub const HEADER_LEN: usize = 16;
 /// Maximum accepted payload length (2 GiB): a sanity cap against
@@ -93,6 +95,97 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame> {
     Ok(Frame { kind, rank, payload })
 }
 
+/// Decode one frame from the head of `buf` without consuming the source
+/// stream: returns `Ok(Some((frame, consumed)))` when `buf` holds a
+/// complete frame, `Ok(None)` when more bytes are needed, and an error
+/// on bad magic / version mismatch / oversize — the same validations as
+/// [`read_frame`]. This is the incremental half of the codec: a socket
+/// read timeout may land mid-frame, so deadline-bounded readers
+/// accumulate bytes and decode from the buffer instead of `read_exact`
+/// (which would lose the partial header on a timeout tick).
+pub fn decode_frame(buf: &[u8]) -> Result<Option<(Frame, usize)>> {
+    if buf.len() < HEADER_LEN {
+        return Ok(None);
+    }
+    if buf[0..4] != MAGIC {
+        bail!(
+            "bad frame magic {:02x?} (expected \"OGTP\" — peer is not an oggm rank transport)",
+            &buf[0..4]
+        );
+    }
+    let version = u16::from_le_bytes([buf[4], buf[5]]);
+    if version != VERSION {
+        bail!(
+            "transport protocol version mismatch: peer speaks v{version}, \
+             this build speaks v{VERSION}"
+        );
+    }
+    let kind = u16::from_le_bytes([buf[6], buf[7]]);
+    let rank = u32::from_le_bytes([buf[8], buf[9], buf[10], buf[11]]);
+    let len = u32::from_le_bytes([buf[12], buf[13], buf[14], buf[15]]);
+    if len > MAX_PAYLOAD {
+        bail!("frame payload length {len} exceeds the {MAX_PAYLOAD} byte cap");
+    }
+    let total = HEADER_LEN + len as usize;
+    if buf.len() < total {
+        return Ok(None);
+    }
+    let payload = buf[HEADER_LEN..total].to_vec();
+    Ok(Some((Frame { kind, rank, payload }, total)))
+}
+
+/// An incremental frame reader over a byte stream with read timeouts.
+///
+/// `poll` returns `Ok(None)` when the underlying read times out (a
+/// liveness tick — the partial frame, if any, stays buffered), a frame
+/// when one completes, and an error on EOF or a malformed header. This
+/// is what lets every steady-state I/O site be deadline-bounded
+/// (DESIGN.md §12) without ever desyncing the length-prefixed stream.
+pub struct FrameReader<R: Read> {
+    src: R,
+    buf: Vec<u8>,
+    chunk: Box<[u8]>,
+}
+
+impl<R: Read> FrameReader<R> {
+    /// Wrap a readable stream (typically a `TcpStream` with a read
+    /// timeout installed).
+    pub fn new(src: R) -> FrameReader<R> {
+        FrameReader { src, buf: Vec::new(), chunk: vec![0u8; 64 * 1024].into_boxed_slice() }
+    }
+
+    /// Immutable access to the wrapped stream (e.g. to adjust timeouts).
+    pub fn get_ref(&self) -> &R {
+        &self.src
+    }
+
+    /// Try to produce the next frame. `Ok(None)` means the read timed
+    /// out before a frame completed — call again after the liveness
+    /// check. EOF is an error ("connection closed by peer"): with
+    /// heartbeats on every idle link, a silent close is indistinguishable
+    /// from death and is reported as such.
+    pub fn poll(&mut self) -> Result<Option<Frame>> {
+        loop {
+            if let Some((frame, consumed)) = decode_frame(&self.buf)? {
+                self.buf.drain(..consumed);
+                return Ok(Some(frame));
+            }
+            match self.src.read(&mut self.chunk) {
+                Ok(0) => bail!("connection closed by peer"),
+                Ok(n) => self.buf.extend_from_slice(&self.chunk[..n]),
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    return Ok(None);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e).context("reading frame bytes"),
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -152,5 +245,81 @@ mod tests {
         buf[12..16].copy_from_slice(&u32::MAX.to_le_bytes());
         let err = read_frame(&mut Cursor::new(&buf)).unwrap_err().to_string();
         assert!(err.contains("exceeds"), "{err}");
+    }
+
+    #[test]
+    fn decode_frame_is_incremental() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, 5, 2, &[7, 8, 9]).unwrap();
+        write_frame(&mut wire, 6, 0, &[]).unwrap();
+        // Feeding any strict prefix of the first frame yields None; the
+        // full prefix yields the frame plus its exact byte count.
+        for cut in 0..HEADER_LEN + 3 {
+            assert!(decode_frame(&wire[..cut]).unwrap().is_none(), "cut={cut}");
+        }
+        let (f, used) = decode_frame(&wire).unwrap().unwrap();
+        assert_eq!(f, Frame { kind: 5, rank: 2, payload: vec![7, 8, 9] });
+        assert_eq!(used, HEADER_LEN + 3);
+        let (f2, used2) = decode_frame(&wire[used..]).unwrap().unwrap();
+        assert_eq!((f2.kind, f2.rank, f2.payload.len(), used2), (6, 0, 0, HEADER_LEN));
+        // The buffered decoder validates the same header invariants.
+        let mut bad = wire.clone();
+        bad[0] = b'X';
+        assert!(decode_frame(&bad).unwrap_err().to_string().contains("bad frame magic"));
+    }
+
+    /// A reader that yields its script in dribs, with a timeout between.
+    struct Dribble {
+        data: Vec<u8>,
+        at: usize,
+        step: usize,
+        ticks: usize,
+    }
+
+    impl Read for Dribble {
+        fn read(&mut self, out: &mut [u8]) -> std::io::Result<usize> {
+            if self.at >= self.data.len() {
+                return Ok(0);
+            }
+            // Alternate: timeout, then a few bytes.
+            self.ticks += 1;
+            if self.ticks % 2 == 1 {
+                return Err(std::io::ErrorKind::WouldBlock.into());
+            }
+            let n = self.step.min(self.data.len() - self.at).min(out.len());
+            out[..n].copy_from_slice(&self.data[self.at..self.at + n]);
+            self.at += n;
+            Ok(n)
+        }
+    }
+
+    #[test]
+    fn frame_reader_survives_timeouts_mid_frame() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, 4, 1, &[1, 2, 3, 4, 5, 6, 7]).unwrap();
+        let total = wire.len();
+        let mut fr = FrameReader::new(Dribble { data: wire, at: 0, step: 3, ticks: 0 });
+        let mut frames = Vec::new();
+        let mut polls = 0;
+        while frames.is_empty() {
+            polls += 1;
+            assert!(polls < 64, "reader never completed the frame");
+            match fr.poll() {
+                Ok(Some(f)) => frames.push(f),
+                Ok(None) => {} // timeout tick: partial bytes stay buffered
+                Err(e) => panic!("unexpected error: {e:#}"),
+            }
+        }
+        assert_eq!(frames[0].payload, vec![1, 2, 3, 4, 5, 6, 7]);
+        assert!(polls > total / 3, "expected many timeout ticks, got {polls}");
+        // EOF after the frame is an error, not a hang.
+        let err = loop {
+            match fr.poll() {
+                Ok(Some(f)) => panic!("phantom frame {f:?}"),
+                Ok(None) => {}
+                Err(e) => break format!("{e:#}"),
+            }
+        };
+        assert!(err.contains("closed"), "{err}");
     }
 }

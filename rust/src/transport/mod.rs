@@ -23,6 +23,8 @@ pub(crate) mod inproc;
 pub(crate) mod msg;
 pub(crate) mod tcp;
 
+pub use tcp::TcpCfg;
+
 use std::path::Path;
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
@@ -88,25 +90,29 @@ impl RankLink {
         }
     }
 
-    /// Failure wording for a send that found the worker gone. The
-    /// in-process phrasing is retryable in the Executor (the thread
-    /// can be respawned); the TCP phrasing deliberately is not — a
-    /// dead worker *process* needs an operator to relaunch it.
+    /// Failure wording for a send that found the worker gone. Both
+    /// phrasings are retryable in the Executor: the in-process thread
+    /// can be respawned, and since the rejoin window a dead worker
+    /// *process* can be replaced by a reconnecting one. A TCP link that
+    /// recorded a death reason (liveness miss) reports that instead of
+    /// the generic wording.
     pub(crate) fn gone_msg(&self, rank: usize) -> String {
         match self {
             RankLink::InProc(_) => format!("rank {rank} worker is gone"),
-            RankLink::Tcp(_) => {
+            RankLink::Tcp(l) => l.death_reason().unwrap_or_else(|| {
                 format!("rank {rank} worker process unreachable (connection closed)")
-            }
+            }),
         }
     }
 
     /// Failure wording for a receive that found the worker dead; same
-    /// retryable/non-retryable split as [`RankLink::gone_msg`].
+    /// retryable split as [`RankLink::gone_msg`].
     pub(crate) fn death_msg(&self, rank: usize) -> String {
         match self {
             RankLink::InProc(_) => format!("rank {rank}: worker thread died"),
-            RankLink::Tcp(_) => format!("rank {rank}: worker process disconnected"),
+            RankLink::Tcp(l) => l
+                .death_reason()
+                .unwrap_or_else(|| format!("rank {rank}: worker process disconnected")),
         }
     }
 }

@@ -40,6 +40,10 @@ pub(crate) const KIND_COLL_DEPOSIT: u16 = 6;
 pub(crate) const KIND_COLL_RESULT: u16 = 7;
 /// Frame kind: collective abort notice (either direction).
 pub(crate) const KIND_COLL_ABORT: u16 = 8;
+/// Frame kind: liveness heartbeat (either direction, empty payload).
+/// Sent on otherwise-idle links so a peer that stops responding is
+/// distinguishable from a peer with nothing to say (DESIGN.md §12).
+pub(crate) const KIND_HEARTBEAT: u16 = 9;
 
 /// Collective operation discriminant carried in a deposit frame; the
 /// hub validates that all ranks of a generation deposit the same op.
@@ -90,8 +94,9 @@ impl CollOp {
 /// travel in a frame after the header.
 #[derive(Debug)]
 pub(crate) enum WireMsg {
-    /// Worker greeting: its rank, expected world size (0 = any), and
-    /// the FNV-1a fingerprint of its artifact manifest.
+    /// Worker greeting: its rank, expected world size (0 = any), the
+    /// FNV-1a fingerprint of its artifact manifest, and the shared
+    /// authentication token (empty = none presented).
     Hello {
         /// The connecting worker's rank id.
         rank: u32,
@@ -99,11 +104,17 @@ pub(crate) enum WireMsg {
         world: u32,
         /// `manifest_fingerprint` of the worker's artifact dir.
         fingerprint: u64,
+        /// Shared secret (`--token`/`OGGM_TOKEN`); compared in constant
+        /// time against the coordinator's. Empty when unauthenticated.
+        token: String,
     },
     /// Coordinator acceptance carrying the authoritative world size.
     Welcome {
         /// World size P of the group the worker just joined.
         p: u32,
+        /// The coordinator's `--rank-timeout` in milliseconds: the
+        /// liveness deadline both sides enforce (0 disables deadlines).
+        timeout_ms: u32,
     },
     /// Coordinator rejection; the connection closes after this.
     Reject {
@@ -133,6 +144,9 @@ pub(crate) enum WireMsg {
         /// Contextful reason, preserved verbatim across the wire.
         reason: String,
     },
+    /// A liveness heartbeat: no payload, refreshes the receiver's
+    /// last-inbound clock and is otherwise discarded.
+    Heartbeat,
 }
 
 impl WireMsg {
@@ -147,18 +161,23 @@ impl WireMsg {
             WireMsg::CollDeposit { .. } => KIND_COLL_DEPOSIT,
             WireMsg::CollResult { .. } => KIND_COLL_RESULT,
             WireMsg::CollAbort { .. } => KIND_COLL_ABORT,
+            WireMsg::Heartbeat => KIND_HEARTBEAT,
         }
     }
 
     /// Encode this message's payload (header excluded) into `w`.
     pub(crate) fn encode<W: Write>(&self, w: &mut W) -> Result<()> {
         match self {
-            WireMsg::Hello { rank, world, fingerprint } => {
+            WireMsg::Hello { rank, world, fingerprint, token } => {
                 put_u32(w, *rank)?;
                 put_u32(w, *world)?;
                 put_u64(w, *fingerprint)?;
+                put_str(w, token)?;
             }
-            WireMsg::Welcome { p } => put_u32(w, *p)?,
+            WireMsg::Welcome { p, timeout_ms } => {
+                put_u32(w, *p)?;
+                put_u32(w, *timeout_ms)?;
+            }
             WireMsg::Reject { reason } => put_str(w, reason)?,
             WireMsg::Req(r) => encode_req(r, w)?,
             WireMsg::Resp(r) => encode_resp(r, w)?,
@@ -171,6 +190,7 @@ impl WireMsg {
                 put_u32(w, *rank)?;
                 put_str(w, reason)?;
             }
+            WireMsg::Heartbeat => {}
         }
         Ok(())
     }
@@ -183,8 +203,9 @@ impl WireMsg {
                 rank: r.u32()?,
                 world: r.u32()?,
                 fingerprint: r.u64()?,
+                token: r.str()?,
             },
-            KIND_WELCOME => WireMsg::Welcome { p: r.u32()? },
+            KIND_WELCOME => WireMsg::Welcome { p: r.u32()?, timeout_ms: r.u32()? },
             KIND_REJECT => WireMsg::Reject { reason: r.str()? },
             KIND_REQ => return Ok(WireMsg::Req(decode_req(payload)?)),
             KIND_RESP => return Ok(WireMsg::Resp(decode_resp(payload)?)),
@@ -194,6 +215,7 @@ impl WireMsg {
             }
             KIND_COLL_RESULT => WireMsg::CollResult { payload: r.f32s()? },
             KIND_COLL_ABORT => WireMsg::CollAbort { rank: r.u32()?, reason: r.str()? },
+            KIND_HEARTBEAT => WireMsg::Heartbeat,
             other => bail!("unknown transport frame kind {other}"),
         };
         r.finish()?;
@@ -465,6 +487,9 @@ pub(crate) fn encode_resp<W: Write>(resp: &Resp, w: &mut W) -> Result<()> {
             put_u64(w, s.recovery_time.as_nanos() as u64)?;
             put_u64(w, s.tx_bytes)?;
             put_u64(w, s.rx_bytes)?;
+            put_u64(w, s.remote_restarts)?;
+            put_u64(w, s.heartbeats_missed)?;
+            put_u64(w, s.rejoin_time.as_nanos() as u64)?;
         }
         Resp::Err(msg) => {
             put_u8(w, 4)?;
@@ -498,6 +523,9 @@ pub(crate) fn decode_resp(payload: &[u8]) -> Result<Resp> {
             recovery_time: Duration::from_nanos(r.u64()?),
             tx_bytes: r.u64()?,
             rx_bytes: r.u64()?,
+            remote_restarts: r.u64()?,
+            heartbeats_missed: r.u64()?,
+            rejoin_time: Duration::from_nanos(r.u64()?),
         }),
         4 => Resp::Err(r.str()?),
         other => bail!("unknown response tag {other}"),
@@ -844,11 +872,16 @@ mod tests {
         s.exec_time = Duration::from_millis(12);
         s.tx_bytes = 1024;
         s.rx_bytes = 2048;
+        s.remote_restarts = 3;
+        s.heartbeats_missed = 2;
+        s.rejoin_time = Duration::from_millis(75);
         match round_trip_resp(&Resp::Stats(s)) {
             Resp::Stats(got) => {
                 assert_eq!(got.executions, 9);
                 assert_eq!(got.exec_time, Duration::from_millis(12));
                 assert_eq!((got.tx_bytes, got.rx_bytes), (1024, 2048));
+                assert_eq!((got.remote_restarts, got.heartbeats_missed), (3, 2));
+                assert_eq!(got.rejoin_time, Duration::from_millis(75));
             }
             other => panic!("wrong variant: {other:?}"),
         }
@@ -857,12 +890,19 @@ mod tests {
     #[test]
     fn handshake_messages_round_trip() {
         let msgs = [
-            WireMsg::Hello { rank: 1, world: 2, fingerprint: 0xdead_beef },
-            WireMsg::Welcome { p: 4 },
+            WireMsg::Hello {
+                rank: 1,
+                world: 2,
+                fingerprint: 0xdead_beef,
+                token: "sekrit".into(),
+            },
+            WireMsg::Hello { rank: 0, world: 0, fingerprint: 7, token: String::new() },
+            WireMsg::Welcome { p: 4, timeout_ms: 30_000 },
             WireMsg::Reject { reason: "fingerprint mismatch".into() },
             WireMsg::CollDeposit { op: CollOp::AllReduce, payload: vec![1.0, 2.0] },
             WireMsg::CollResult { payload: vec![3.0] },
             WireMsg::CollAbort { rank: 2, reason: "injected".into() },
+            WireMsg::Heartbeat,
         ];
         for msg in msgs {
             let mut buf = Vec::new();

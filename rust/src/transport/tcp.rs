@@ -14,9 +14,21 @@
 //! worker disconnect) is fanned to every peer as `CollAbort`, and is
 //! *sticky*: every later collective on that group fails with the same
 //! originating rank and reason until the pool resets the group.
+//!
+//! **Liveness and rejoin.** Every steady-state read is deadline-bounded
+//! (`--rank-timeout`, carried to workers in `Welcome`): both sides send
+//! [`msg::WireMsg::Heartbeat`] frames on otherwise-idle links at a
+//! third of the timeout, so a peer that produces no frame for a full
+//! timeout is declared dead with a contextful "unreachable for Xs"
+//! reason and the hub aborts the group exactly like
+//! `Communicator::abort`. The group's listeners stay open in a
+//! [`TcpGroup`] after formation, so a replacement worker can re-run the
+//! Hello/Welcome handshake for a vacated rank slot inside the pool's
+//! `--rejoin-window` ([`TcpGroup::rejoin`]) — the last piece that makes
+//! remote rank death retryable (DESIGN.md §12).
 
 use std::collections::HashSet;
-use std::io::{BufReader, Read, Write};
+use std::io::Write;
 use std::net::{Shutdown, TcpListener, TcpStream};
 use std::path::Path;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -27,10 +39,58 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
+use crate::collective::fault::{FaultKind, FaultPlan};
 use crate::parallel::{Req, Resp};
 
-use super::frame::{read_frame, write_frame, HEADER_LEN};
+use super::frame::{read_frame, write_frame, FrameReader, HEADER_LEN};
 use super::msg::{self, CollOp, WireMsg};
+
+/// Liveness/rejoin/authentication knobs for one TCP rank group, lowered
+/// from `--rank-timeout`, `--rejoin-window`, and `--token`/`OGGM_TOKEN`.
+#[derive(Debug, Clone)]
+pub struct TcpCfg {
+    /// Liveness deadline per link: a peer that produces no frame (data
+    /// or heartbeat) for this long is declared dead. `Duration::ZERO`
+    /// disables deadlines and heartbeats (reads block forever, the
+    /// pre-liveness behavior — useful only for debugging).
+    pub timeout: Duration,
+    /// How long `ensure_live` waits for replacement workers to
+    /// re-handshake vacated rank slots before failing terminally.
+    pub rejoin_window: Duration,
+    /// Shared handshake secret; empty = no authentication. Compared in
+    /// constant time against each worker's `Hello`.
+    pub token: String,
+}
+
+impl Default for TcpCfg {
+    fn default() -> TcpCfg {
+        TcpCfg {
+            timeout: Duration::from_secs(30),
+            rejoin_window: Duration::from_secs(30),
+            token: String::new(),
+        }
+    }
+}
+
+/// Heartbeat cadence for a given liveness deadline: a third of the
+/// timeout, floored so ~3 beats fit in any enforceable window.
+fn heartbeat_interval(timeout: Duration) -> Duration {
+    (timeout / 3).max(Duration::from_millis(10))
+}
+
+/// Constant-time token equality: every byte of the longer input is
+/// inspected regardless of where the first mismatch sits, so response
+/// timing leaks nothing about the coordinator's secret.
+fn token_matches(presented: &str, expected: &str) -> bool {
+    let (a, b) = (presented.as_bytes(), expected.as_bytes());
+    let mut diff = a.len() ^ b.len();
+    for i in 0..a.len().max(b.len()) {
+        let x = *a.get(i).unwrap_or(&0);
+        let y = *b.get(i).unwrap_or(&0);
+        diff |= (x ^ y) as usize;
+    }
+    diff == 0
+}
 
 /// Lock a mutex, tolerating poisoning: a panicking peer thread must not
 /// cascade into every other rank's transport path.
@@ -83,6 +143,9 @@ struct HubInner {
 /// folds in rank order, and everyone receives the same result bytes.
 pub(crate) struct CollHub {
     p: usize,
+    /// Liveness deadlines missed across the group's lifetime (survives
+    /// `reset`; folded into `ExecStats::heartbeats_missed`).
+    heartbeats_missed: AtomicU64,
     inner: Mutex<HubInner>,
 }
 
@@ -91,6 +154,7 @@ impl CollHub {
     pub(crate) fn new(p: usize) -> Arc<CollHub> {
         Arc::new(CollHub {
             p,
+            heartbeats_missed: AtomicU64::new(0),
             inner: Mutex::new(HubInner {
                 writers: (0..p).map(|_| None).collect(),
                 slots: (0..p).map(|_| None).collect(),
@@ -101,9 +165,20 @@ impl CollHub {
         })
     }
 
-    /// Register the write half for `rank` (called once per admitted worker).
+    /// Register the write half for `rank` (called once per admitted
+    /// worker; a rejoining replacement overwrites the dead writer).
     fn register(&self, rank: usize, writer: RankWriter) {
         lock(&self.inner).writers[rank] = Some(writer);
+    }
+
+    /// Count one missed liveness deadline (a rank declared unreachable).
+    fn note_missed_heartbeat(&self) {
+        self.heartbeats_missed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Liveness deadlines missed over the group's lifetime.
+    pub(crate) fn heartbeats_missed(&self) -> u64 {
+        self.heartbeats_missed.load(Ordering::Relaxed)
     }
 
     /// Clear deposit state and the sticky abort: the group is fresh
@@ -248,10 +323,19 @@ pub(crate) struct TcpLink {
     resp_rx: Receiver<Resp>,
     dead: Arc<AtomicBool>,
     rx_bytes: Arc<AtomicU64>,
+    /// Why the link died ("unreachable for Xs" / "disconnected"),
+    /// recorded by the reader thread before it flips `dead`.
+    reason: Arc<Mutex<Option<String>>>,
     reader: Option<JoinHandle<()>>,
 }
 
 impl TcpLink {
+    /// The rank this link serves (rejoin hands back links keyed by the
+    /// slot the replacement handshook for).
+    pub(crate) fn rank(&self) -> usize {
+        self.rank
+    }
+
     /// Send one request; `Err(())` on a dead or unwritable connection.
     pub(crate) fn send(&self, req: Req) -> Result<(), ()> {
         if self.dead.load(Ordering::Acquire) {
@@ -288,6 +372,14 @@ impl TcpLink {
     pub(crate) fn traffic(&self) -> (u64, u64) {
         (self.writer.tx_bytes.load(Ordering::Relaxed), self.rx_bytes.load(Ordering::Relaxed))
     }
+
+    /// Why the link died, once the reader thread has recorded it
+    /// ("rank R unreachable for Xs …" on a liveness miss, or the
+    /// disconnect reason). `None` while the link is healthy or when the
+    /// write side noticed first.
+    pub(crate) fn death_reason(&self) -> Option<String> {
+        lock(&self.reason).clone()
+    }
 }
 
 impl Drop for TcpLink {
@@ -302,57 +394,104 @@ impl Drop for TcpLink {
 }
 
 /// Spawn the per-connection reader thread: routes `Resp` frames to the
-/// pool's channel and collective frames to the hub, and marks the link
-/// dead (aborting the group) when the stream closes.
+/// pool's channel and collective frames to the hub, enforces the
+/// liveness deadline (ticking on read timeouts, sending heartbeats so
+/// the worker can prove the reverse direction), and marks the link dead
+/// — recording *why* in `reason` — before aborting the group.
 fn spawn_reader(
     rank: usize,
     stream: TcpStream,
     resp_tx: Sender<Resp>,
     dead: Arc<AtomicBool>,
     rx_bytes: Arc<AtomicU64>,
+    reason: Arc<Mutex<Option<String>>>,
     hub: Arc<CollHub>,
+    writer: RankWriter,
+    timeout: Duration,
 ) -> Result<JoinHandle<()>> {
     let handle = std::thread::Builder::new()
         .name(format!("oggm-rank{rank}-rx"))
         .spawn(move || {
-            let mut r = BufReader::new(stream);
-            loop {
-                let frame = match read_frame(&mut r) {
-                    Ok(f) => f,
-                    Err(_) => break,
-                };
-                rx_bytes
-                    .fetch_add((HEADER_LEN + frame.payload.len()) as u64, Ordering::Relaxed);
-                match WireMsg::decode(frame.kind, &frame.payload) {
-                    Ok(WireMsg::Resp(resp)) => {
-                        if resp_tx.send(resp).is_err() {
-                            break;
+            let enforce = timeout > Duration::ZERO;
+            let tick = heartbeat_interval(timeout);
+            // A short read timeout turns the blocking read into a
+            // liveness tick; FrameReader keeps partial bytes buffered
+            // across ticks so a timeout mid-frame never desyncs.
+            let _ = stream.set_read_timeout(if enforce { Some(tick) } else { None });
+            let mut frames = FrameReader::new(stream);
+            let mut last_in = Instant::now();
+            let mut last_beat = Instant::now();
+            let why: String = loop {
+                match frames.poll() {
+                    Ok(Some(frame)) => {
+                        last_in = Instant::now();
+                        rx_bytes.fetch_add(
+                            (HEADER_LEN + frame.payload.len()) as u64,
+                            Ordering::Relaxed,
+                        );
+                        match WireMsg::decode(frame.kind, &frame.payload) {
+                            Ok(WireMsg::Heartbeat) => {} // liveness only
+                            Ok(WireMsg::Resp(resp)) => {
+                                if resp_tx.send(resp).is_err() {
+                                    break format!("rank {rank} link closed by the pool");
+                                }
+                            }
+                            Ok(WireMsg::CollDeposit { op, payload }) => {
+                                hub.deposit(rank, op, payload)
+                            }
+                            Ok(WireMsg::CollAbort { rank: ar, reason }) => {
+                                hub.abort(ar as usize, &reason)
+                            }
+                            Ok(_) => {} // stale handshake frames: ignore
+                            Err(e) => {
+                                break format!("rank {rank} sent an undecodable frame: {e:#}")
+                            }
                         }
                     }
-                    Ok(WireMsg::CollDeposit { op, payload }) => hub.deposit(rank, op, payload),
-                    Ok(WireMsg::CollAbort { rank: ar, reason }) => {
-                        hub.abort(ar as usize, &reason)
+                    Ok(None) => {
+                        // Read timeout tick: enforce the deadline.
+                        let idle = last_in.elapsed();
+                        if enforce && idle >= timeout {
+                            hub.note_missed_heartbeat();
+                            break format!(
+                                "rank {rank} unreachable for {:.1}s (no frames or heartbeats \
+                                 within the {:.1}s --rank-timeout)",
+                                idle.as_secs_f64(),
+                                timeout.as_secs_f64()
+                            );
+                        }
                     }
-                    Ok(_) => {} // stale handshake frames: ignore
-                    Err(_) => break,
+                    Err(e) => break format!("rank {rank} worker process disconnected ({e:#})"),
                 }
-            }
+                // Prove our own liveness on idle links: the worker runs
+                // the mirror-image deadline against the coordinator.
+                if enforce && last_beat.elapsed() >= tick {
+                    let _ = writer.send(rank as u32, &WireMsg::Heartbeat);
+                    last_beat = Instant::now();
+                }
+            };
+            // Record the reason before flipping `dead` so anyone who
+            // observes the flag finds the context already in place.
+            *lock(&reason) = Some(why.clone());
             dead.store(true, Ordering::Release);
-            hub.abort(rank, &format!("rank {rank} worker process disconnected"));
+            hub.abort(rank, &why);
         })
         .with_context(|| format!("spawning reader thread for rank {rank}"))?;
     Ok(handle)
 }
 
-/// Validate one inbound connection's `Hello` against the group shape
-/// and artifact fingerprint; on success reply `Welcome` and build the
-/// link, on failure reply `Reject{reason}` best-effort and bail.
+/// Validate one inbound connection's `Hello` against the shared token,
+/// group shape, and artifact fingerprint; on success reply `Welcome`
+/// (carrying the liveness deadline) and build the link, on failure
+/// reply `Reject{reason}` best-effort and bail. The same path admits
+/// formation-time workers and rejoining replacements.
 fn admit(
     stream: TcpStream,
     p: usize,
     fingerprint: u64,
     taken: &HashSet<usize>,
     hub: &Arc<CollHub>,
+    cfg: &TcpCfg,
 ) -> Result<TcpLink> {
     stream.set_nodelay(true).ok();
     stream
@@ -367,9 +506,9 @@ fn admit(
         }
     };
     let frame = read_frame(&mut reader).context("reading rank handshake")?;
-    let (rank, world, fp) = match WireMsg::decode(frame.kind, &frame.payload) {
-        Ok(WireMsg::Hello { rank, world, fingerprint }) => {
-            (rank as usize, world as usize, fingerprint)
+    let (rank, world, fp, token) = match WireMsg::decode(frame.kind, &frame.payload) {
+        Ok(WireMsg::Hello { rank, world, fingerprint, token }) => {
+            (rank as usize, world as usize, fingerprint, token)
         }
         Ok(other) => {
             let why = format!("expected Hello, got message kind {}", other.kind());
@@ -382,6 +521,15 @@ fn admit(
         reject(&stream, &why);
         bail!("rank handshake: {why}");
     };
+    // Authentication first: an unauthenticated peer learns nothing
+    // about the group shape, and neither reason leaks either token.
+    if !token_matches(&token, &cfg.token) {
+        return fail(
+            "authentication token mismatch: pass the coordinator's --token \
+             (or OGGM_TOKEN) to `oggm rank`"
+                .to_string(),
+        );
+    }
     if rank >= p {
         return fail(format!("rank {rank} out of range for a P={p} group"));
     }
@@ -403,13 +551,21 @@ fn admit(
         stream: Arc::new(Mutex::new(stream.try_clone().context("cloning rank stream")?)),
         tx_bytes: Arc::new(AtomicU64::new(0)),
     };
+    let timeout_ms = cfg.timeout.as_millis().min(u32::MAX as u128) as u32;
     writer
-        .send(rank as u32, &WireMsg::Welcome { p: p as u32 })
+        .send(rank as u32, &WireMsg::Welcome { p: p as u32, timeout_ms })
         .with_context(|| format!("welcoming rank {rank}"))?;
-    stream.set_read_timeout(None).context("clearing handshake read timeout")?;
+    if cfg.timeout > Duration::ZERO {
+        // Deadline-bound the steady-state writes too: a peer that
+        // stops draining its socket cannot park us in `send` forever.
+        stream
+            .set_write_timeout(Some(cfg.timeout))
+            .context("setting rank write timeout")?;
+    }
     let (resp_tx, resp_rx) = std::sync::mpsc::channel();
     let dead = Arc::new(AtomicBool::new(false));
     let rx_bytes = Arc::new(AtomicU64::new(0));
+    let reason = Arc::new(Mutex::new(None));
     hub.register(rank, writer.clone());
     let reader = spawn_reader(
         rank,
@@ -417,89 +573,203 @@ fn admit(
         resp_tx,
         Arc::clone(&dead),
         Arc::clone(&rx_bytes),
+        Arc::clone(&reason),
         Arc::clone(hub),
+        writer.clone(),
+        cfg.timeout,
     )?;
-    Ok(TcpLink { rank, writer, resp_rx, dead, rx_bytes, reader: Some(reader) })
+    Ok(TcpLink { rank, writer, resp_rx, dead, rx_bytes, reason, reader: Some(reader) })
 }
 
-/// Listen on the given addresses and admit exactly `p` rank workers,
-/// returning their links indexed by rank. Bails with a contextful
-/// message if the full group does not form within the wait window.
-pub(crate) fn accept_ranks(
-    addrs: &[String],
+/// A formed TCP rank group's admission state: the live listeners (kept
+/// open after formation so replacement workers can rejoin), the hub,
+/// and everything needed to re-run the handshake for a vacated slot.
+pub(crate) struct TcpGroup {
+    listeners: Vec<TcpListener>,
+    hub: Arc<CollHub>,
     p: usize,
     fingerprint: u64,
-    hub: &Arc<CollHub>,
-) -> Result<Vec<TcpLink>> {
-    let mut unique: Vec<&str> = Vec::new();
-    for a in addrs {
-        let a = a.trim();
-        if !a.is_empty() && !unique.contains(&a) {
-            unique.push(a);
-        }
-    }
-    if unique.is_empty() || unique.len() > p {
-        bail!(
-            "--ranks lists {} listen address(es); expected 1..={p} for a P={p} group",
-            unique.len()
-        );
-    }
-    let mut listeners = Vec::new();
-    for a in &unique {
-        let l = TcpListener::bind(a).with_context(|| format!("binding rank listener on {a}"))?;
-        l.set_nonblocking(true).context("setting rank listener nonblocking")?;
-        listeners.push(l);
-    }
-    let deadline = Instant::now() + Duration::from_secs(wait_secs());
-    let mut links: Vec<Option<TcpLink>> = (0..p).map(|_| None).collect();
-    let mut taken: HashSet<usize> = HashSet::new();
-    while taken.len() < p {
-        let mut accepted = false;
-        for l in &listeners {
-            match l.accept() {
-                Ok((stream, _)) => {
-                    stream.set_nonblocking(false).context("setting rank stream blocking")?;
-                    let link = admit(stream, p, fingerprint, &taken, hub)?;
-                    taken.insert(link.rank);
-                    links[link.rank] = Some(link);
-                    accepted = true;
-                }
-                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {}
-                Err(e) => return Err(e).context("accepting rank connection"),
+    cfg: TcpCfg,
+}
+
+impl TcpGroup {
+    /// Listen on the given addresses and admit exactly `p` rank
+    /// workers, returning the group (listeners stay open for rejoin)
+    /// and the links indexed by rank. Bails with a contextful message
+    /// if the full group does not form within the wait window; any
+    /// handshake rejection during formation is fail-fast.
+    pub(crate) fn form(
+        addrs: &[String],
+        p: usize,
+        fingerprint: u64,
+        hub: &Arc<CollHub>,
+        cfg: TcpCfg,
+    ) -> Result<(TcpGroup, Vec<TcpLink>)> {
+        let mut unique: Vec<&str> = Vec::new();
+        for a in addrs {
+            let a = a.trim();
+            if !a.is_empty() && !unique.contains(&a) {
+                unique.push(a);
             }
         }
-        if taken.len() == p {
-            break;
-        }
-        if Instant::now() >= deadline {
+        if unique.is_empty() || unique.len() > p {
             bail!(
-                "timed out waiting for rank workers: {} of {p} connected \
-                 (launch `oggm rank --connect <addr> --rank R` workers)",
-                taken.len()
+                "--ranks lists {} listen address(es); expected 1..={p} for a P={p} group",
+                unique.len()
             );
         }
-        if !accepted {
-            std::thread::sleep(Duration::from_millis(25));
+        let mut listeners = Vec::new();
+        for a in &unique {
+            let l =
+                TcpListener::bind(a).with_context(|| format!("binding rank listener on {a}"))?;
+            l.set_nonblocking(true).context("setting rank listener nonblocking")?;
+            listeners.push(l);
         }
+        let deadline = Instant::now() + Duration::from_secs(wait_secs());
+        let mut links: Vec<Option<TcpLink>> = (0..p).map(|_| None).collect();
+        let mut taken: HashSet<usize> = HashSet::new();
+        while taken.len() < p {
+            let mut accepted = false;
+            for l in &listeners {
+                match l.accept() {
+                    Ok((stream, _)) => {
+                        stream
+                            .set_nonblocking(false)
+                            .context("setting rank stream blocking")?;
+                        let link = admit(stream, p, fingerprint, &taken, hub, &cfg)?;
+                        taken.insert(link.rank);
+                        links[link.rank] = Some(link);
+                        accepted = true;
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {}
+                    Err(e) => return Err(e).context("accepting rank connection"),
+                }
+            }
+            if taken.len() == p {
+                break;
+            }
+            if Instant::now() >= deadline {
+                bail!(
+                    "timed out waiting for rank workers: {} of {p} connected \
+                     (launch `oggm rank --connect <addr> --rank R` workers)",
+                    taken.len()
+                );
+            }
+            if !accepted {
+                std::thread::sleep(Duration::from_millis(25));
+            }
+        }
+        let group = TcpGroup { listeners, hub: Arc::clone(hub), p, fingerprint, cfg };
+        Ok((group, links.into_iter().map(|l| l.expect("all ranks admitted")).collect()))
     }
-    Ok(links.into_iter().map(|l| l.expect("all ranks admitted")).collect())
+
+    /// The group's liveness/rejoin/auth configuration.
+    pub(crate) fn cfg(&self) -> &TcpCfg {
+        &self.cfg
+    }
+
+    /// The group's collective hub.
+    pub(crate) fn hub(&self) -> &Arc<CollHub> {
+        &self.hub
+    }
+
+    /// Hold the rejoin window open for replacement workers to re-run
+    /// the handshake for the `vacant` rank slots. `live` are the ranks
+    /// still healthy — a dial-in claiming one of those is rejected as a
+    /// duplicate, exactly as at formation time. Unlike formation, a bad
+    /// handshake here is logged and skipped (a stray dialer must not
+    /// kill the recovery); only window expiry is terminal.
+    pub(crate) fn rejoin(&self, vacant: &[usize], live: &HashSet<usize>) -> Result<Vec<TcpLink>> {
+        let window = self.cfg.rejoin_window;
+        let deadline = Instant::now() + window;
+        let wanted: HashSet<usize> = vacant.iter().copied().collect();
+        let mut filled: HashSet<usize> = HashSet::new();
+        let mut links = Vec::new();
+        while filled.len() < wanted.len() {
+            let mut accepted = false;
+            for l in &self.listeners {
+                match l.accept() {
+                    Ok((stream, _)) => {
+                        let taken: HashSet<usize> =
+                            live.union(&filled).copied().collect();
+                        let admitted = stream
+                            .set_nonblocking(false)
+                            .context("setting rank stream blocking")
+                            .and_then(|_| {
+                                admit(stream, self.p, self.fingerprint, &taken, &self.hub, &self.cfg)
+                            });
+                        match admitted {
+                            Ok(link) => {
+                                filled.insert(link.rank);
+                                links.push(link);
+                                accepted = true;
+                            }
+                            Err(e) => {
+                                eprintln!("rank rejoin: rejected a connection: {e:#}")
+                            }
+                        }
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {}
+                    Err(e) => return Err(e).context("accepting rejoin connection"),
+                }
+            }
+            if filled.len() == wanted.len() {
+                break;
+            }
+            if Instant::now() >= deadline {
+                let mut missing: Vec<usize> =
+                    wanted.difference(&filled).copied().collect();
+                missing.sort_unstable();
+                let missing: Vec<String> = missing.iter().map(|r| r.to_string()).collect();
+                bail!(
+                    "rejoin window expired: rank(s) {} still vacant after {:.0}s \
+                     (relaunch `oggm rank --connect <addr> --rank R --reconnect`, \
+                     or raise --rejoin-window)",
+                    missing.join(", "),
+                    window.as_secs_f64()
+                );
+            }
+            if !accepted {
+                std::thread::sleep(Duration::from_millis(25));
+            }
+        }
+        Ok(links)
+    }
 }
 
 /// Worker-side connection state: the stream halves plus traffic
-/// counters and the sticky abort record shared between the request
-/// loop and the collective path.
+/// counters, the sticky abort record shared between the request loop
+/// and the collective path, the liveness deadline carried in
+/// `Welcome`, and the injected-fault hooks (`disconnect` / `stall`).
 pub(crate) struct RemoteIo {
     rank: u32,
-    reader: Mutex<BufReader<TcpStream>>,
+    reader: Mutex<FrameReader<TcpStream>>,
     writer: Mutex<TcpStream>,
     tx_bytes: AtomicU64,
     rx_bytes: AtomicU64,
     aborted: Mutex<Option<(usize, String)>>,
+    /// Liveness deadline from `Welcome{timeout_ms}`; zero = disabled.
+    timeout: Duration,
+    /// `kind=stall` fired: outbound frames (responses, deposits,
+    /// heartbeats) are silently swallowed while reads continue — the
+    /// worker looks alive at the socket level but proves nothing.
+    stalled: AtomicBool,
+    /// `kind=disconnect` fired: the socket was shut down on purpose, so
+    /// the exit must read as a fault, not a clean coordinator shutdown.
+    fault_disconnect: AtomicBool,
+    /// Worker-side fault plan for the liveness kinds; counted per
+    /// received control request (`frame=` in the plan grammar).
+    fault: Option<Arc<FaultPlan>>,
+    reqs_seen: AtomicU64,
 }
 
 impl RemoteIo {
     /// Encode and send one message (frames carry this worker's rank).
+    /// A stalled worker reports success without writing anything.
     pub(crate) fn send(&self, msg: &WireMsg) -> Result<()> {
+        if self.stalled.load(Ordering::Acquire) {
+            return Ok(());
+        }
         let mut payload = Vec::new();
         msg.encode(&mut payload)?;
         let mut w = lock(&self.writer);
@@ -508,26 +778,84 @@ impl RemoteIo {
         Ok(())
     }
 
-    /// Read and decode one message, counting rx bytes.
+    /// Prove liveness to the coordinator (called by the worker's
+    /// heartbeat thread so long device computations don't read as death).
+    pub(crate) fn heartbeat(&self) -> Result<()> {
+        self.send(&WireMsg::Heartbeat)
+    }
+
+    /// The liveness deadline the coordinator announced in `Welcome`
+    /// (zero = deadlines disabled).
+    pub(crate) fn timeout(&self) -> Duration {
+        self.timeout
+    }
+
+    /// Whether an injected `disconnect` fault closed this connection.
+    pub(crate) fn disconnected_by_fault(&self) -> bool {
+        self.fault_disconnect.load(Ordering::Acquire)
+    }
+
+    /// Read and decode one message, counting rx bytes. Deadline-bounded:
+    /// ticks on read timeouts and bails with a contextful "coordinator
+    /// unreachable" once nothing (not even a heartbeat) has arrived for
+    /// a full liveness window.
     fn recv_msg(&self) -> Result<WireMsg> {
         let mut r = lock(&self.reader);
-        let frame = read_frame(&mut *r)?;
-        self.rx_bytes
-            .fetch_add((HEADER_LEN + frame.payload.len()) as u64, Ordering::Relaxed);
-        WireMsg::decode(frame.kind, &frame.payload)
+        let start = Instant::now();
+        loop {
+            match r.poll()? {
+                Some(frame) => {
+                    self.rx_bytes.fetch_add(
+                        (HEADER_LEN + frame.payload.len()) as u64,
+                        Ordering::Relaxed,
+                    );
+                    return WireMsg::decode(frame.kind, &frame.payload);
+                }
+                None => {
+                    let idle = start.elapsed();
+                    if self.timeout > Duration::ZERO && idle >= self.timeout {
+                        bail!(
+                            "coordinator unreachable for {:.1}s (rank {} saw no frames or \
+                             heartbeats within the {:.1}s --rank-timeout)",
+                            idle.as_secs_f64(),
+                            self.rank,
+                            self.timeout.as_secs_f64()
+                        );
+                    }
+                }
+            }
+        }
     }
 
     /// Blocking receive of the next control request. Collective aborts
-    /// arriving between requests are recorded sticky; stale collective
-    /// results are discarded. `None` means the coordinator is gone.
+    /// arriving between requests are recorded sticky; heartbeats and
+    /// stale collective results are discarded. `None` means the
+    /// coordinator is gone (or an injected `disconnect` fired).
     pub(crate) fn recv_req(&self) -> Option<Req> {
         loop {
             match self.recv_msg() {
-                Ok(WireMsg::Req(req)) => return Some(req),
+                Ok(WireMsg::Req(req)) => {
+                    let n = self.reqs_seen.fetch_add(1, Ordering::Relaxed);
+                    match self.fault.as_ref().and_then(|f| f.fire_liveness(self.rank as usize, n))
+                    {
+                        Some(FaultKind::Disconnect) => {
+                            // Scripted kill -9: drop the socket without
+                            // a goodbye and report the link as gone.
+                            self.fault_disconnect.store(true, Ordering::Release);
+                            let _ = lock(&self.writer).shutdown(Shutdown::Both);
+                            return None;
+                        }
+                        Some(FaultKind::Stall) => {
+                            self.stalled.store(true, Ordering::Release);
+                        }
+                        _ => {}
+                    }
+                    return Some(req);
+                }
                 Ok(WireMsg::CollAbort { rank, reason }) => {
                     self.record_abort(rank as usize, &reason)
                 }
-                Ok(_) => {} // stale CollResult / handshake frames
+                Ok(_) => {} // heartbeats / stale CollResult / handshake frames
                 Err(_) => return None,
             }
         }
@@ -664,14 +992,18 @@ impl RemoteComm {
 }
 
 /// Dial the coordinator from a worker process and complete the
-/// handshake. Retries the connect until the wait window closes (the
-/// coordinator may not be listening yet), then bails. Returns the
-/// connection and the coordinator's world size.
+/// handshake (presenting `token` for authentication). Retries the
+/// connect until the wait window closes (the coordinator may not be
+/// listening yet), then bails. Returns the connection — already
+/// running the liveness deadline the coordinator announced in
+/// `Welcome` — and the coordinator's world size.
 pub(crate) fn connect_worker(
     addr: &str,
     rank: usize,
     world: Option<usize>,
     dir: &Path,
+    token: &str,
+    fault: Option<Arc<FaultPlan>>,
 ) -> Result<(Arc<RemoteIo>, usize)> {
     let fingerprint = super::manifest_fingerprint(dir);
     let deadline = Instant::now() + Duration::from_secs(wait_secs());
@@ -689,30 +1021,57 @@ pub(crate) fn connect_worker(
         }
     };
     stream.set_nodelay(true).ok();
-    let io = RemoteIo {
-        rank: rank as u32,
-        reader: Mutex::new(BufReader::new(stream.try_clone().context("cloning stream")?)),
-        writer: Mutex::new(stream.try_clone().context("cloning stream")?),
-        tx_bytes: AtomicU64::new(0),
-        rx_bytes: AtomicU64::new(0),
-        aborted: Mutex::new(None),
-    };
-    io.send(&WireMsg::Hello {
+    let hello = WireMsg::Hello {
         rank: rank as u32,
         world: world.unwrap_or(0) as u32,
         fingerprint,
-    })
-    .context("sending rank handshake")?;
+        token: token.to_string(),
+    };
+    let mut payload = Vec::new();
+    hello.encode(&mut payload)?;
+    let hello_bytes = write_frame(&mut &stream, hello.kind(), rank as u32, &payload)
+        .context("sending rank handshake")?;
     stream
         .set_read_timeout(Some(Duration::from_secs(10)))
         .context("setting handshake read timeout")?;
-    let reply = io.recv_msg().context("reading coordinator handshake reply")?;
-    stream.set_read_timeout(None).context("clearing handshake read timeout")?;
-    match reply {
-        WireMsg::Welcome { p } => Ok((Arc::new(io), p as usize)),
+    let frame = {
+        let mut r = stream.try_clone().context("cloning stream")?;
+        read_frame(&mut r).context("reading coordinator handshake reply")?
+    };
+    let reply_bytes = (HEADER_LEN + frame.payload.len()) as u64;
+    let (p, timeout) = match WireMsg::decode(frame.kind, &frame.payload)
+        .context("decoding coordinator handshake reply")?
+    {
+        WireMsg::Welcome { p, timeout_ms } => {
+            (p as usize, Duration::from_millis(timeout_ms as u64))
+        }
         WireMsg::Reject { reason } => bail!("coordinator rejected this worker: {reason}"),
         other => bail!("unexpected handshake reply (message kind {})", other.kind()),
+    };
+    if timeout > Duration::ZERO {
+        // Steady state: short read timeouts are liveness ticks for the
+        // worker's own deadline, and writes are deadline-bounded too.
+        stream
+            .set_read_timeout(Some(heartbeat_interval(timeout)))
+            .context("setting liveness read timeout")?;
+        stream.set_write_timeout(Some(timeout)).context("setting liveness write timeout")?;
+    } else {
+        stream.set_read_timeout(None).context("clearing handshake read timeout")?;
     }
+    let io = RemoteIo {
+        rank: rank as u32,
+        reader: Mutex::new(FrameReader::new(stream.try_clone().context("cloning stream")?)),
+        writer: Mutex::new(stream),
+        tx_bytes: AtomicU64::new(hello_bytes),
+        rx_bytes: AtomicU64::new(reply_bytes),
+        aborted: Mutex::new(None),
+        timeout,
+        stalled: AtomicBool::new(false),
+        fault_disconnect: AtomicBool::new(false),
+        fault,
+        reqs_seen: AtomicU64::new(0),
+    };
+    Ok((Arc::new(io), p))
 }
 
 #[cfg(test)]
@@ -766,5 +1125,34 @@ mod tests {
         hub.abort(0, "boom");
         hub.reset();
         assert!(lock(&hub.inner).aborted.is_none());
+    }
+
+    #[test]
+    fn hub_reset_keeps_the_missed_heartbeat_count() {
+        let hub = CollHub::new(1);
+        hub.note_missed_heartbeat();
+        hub.note_missed_heartbeat();
+        hub.reset();
+        assert_eq!(hub.heartbeats_missed(), 2);
+    }
+
+    #[test]
+    fn token_compare_covers_the_full_matrix() {
+        assert!(token_matches("", ""));
+        assert!(token_matches("sekrit", "sekrit"));
+        assert!(!token_matches("sekrit", ""));
+        assert!(!token_matches("", "sekrit"));
+        assert!(!token_matches("sekrit", "sekrat"));
+        assert!(!token_matches("sekrit", "sekrit2"));
+    }
+
+    #[test]
+    fn heartbeat_interval_is_a_third_with_a_floor() {
+        assert_eq!(heartbeat_interval(Duration::from_secs(30)), Duration::from_secs(10));
+        assert_eq!(
+            heartbeat_interval(Duration::from_millis(3)),
+            Duration::from_millis(10),
+            "tiny timeouts floor at 10ms so the tick loop cannot spin"
+        );
     }
 }
